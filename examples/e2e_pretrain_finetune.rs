@@ -1,0 +1,94 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): proves all three layers
+//! compose on a real small workload.
+//!
+//! 1. MLM-pretrains the `base` transformer from scratch on the synthetic
+//!    corpus for several hundred steps, logging the loss curve — every step
+//!    executes the Pallas-kernel-bearing HLO artifact from Rust via PJRT.
+//! 2. Runs the paper's two-stage Hadamard tuning on an SST-2-like task,
+//!    logging both stage loss curves.
+//! 3. Evaluates and reports score, parameter accounting, and engine stats.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pretrain_finetune
+//! ```
+
+use std::time::Instant;
+
+use hadapt::data::{generate, task_info};
+use hadapt::methods::Method;
+use hadapt::runtime::Engine;
+use hadapt::train::{pretrain, tune, PretrainOpts, TuneOpts};
+use hadapt::report::pct;
+use hadapt::Result;
+
+fn print_curve(name: &str, losses: &[f32], every: usize) {
+    println!("  {name} loss curve:");
+    for (i, l) in losses.iter().enumerate() {
+        if i % every == 0 || i + 1 == losses.len() {
+            println!("    step {i:>5}  loss {l:.4}");
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let t0 = Instant::now();
+    let engine = Engine::new("artifacts")?;
+    let model = "base";
+    let info = engine.manifest().model(model)?.clone();
+    println!(
+        "== e2e: {model} ({} layers, hidden {}, {} backbone params) ==\n",
+        info.layers, info.hidden, info.backbone_params()
+    );
+
+    // ---- 1) pre-train ----
+    println!("[1/3] MLM pre-training (from scratch, synthetic corpus)");
+    // base diverges above ~1e-3 (see EXPERIMENTS.md §E2E); 600 steps is
+    // enough to drop visibly below the 6.22 unigram floor on one core
+    let popts = PretrainOpts { steps: 600, lr: 1e-3, warmup: 50, seed: 42, log_every: 0 };
+    let pre = pretrain(&engine, model, &popts)?;
+    print_curve("mlm", &pre.losses, 50);
+    let first = pre.losses[0];
+    let last = pre.losses[pre.losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    println!("  mlm loss {first:.3} -> {last:.3} (uniform floor ~6.22, band floor ~4.1)\n");
+
+    // ---- 2) two-stage Hadamard tuning ----
+    println!("[2/3] two-stage Hadamard adapter tuning on sst2-like");
+    let train_ds = generate(task_info("sst2").unwrap(), 42, "train", 4096);
+    let dev_ds = generate(task_info("sst2").unwrap(), 42, "dev", 512);
+    let method = Method::hadamard();
+    let opts = TuneOpts {
+        stage1_steps: 120,
+        main_steps: 240,
+        verbose: false,
+        ..Default::default()
+    };
+    let result = tune(&engine, model, &pre.store, &train_ds, &dev_ds, &method, &opts)?;
+    print_curve("stage1 (classifier)", &result.stage1_losses, 30);
+    print_curve("stage2 (adapter+norm)", &result.main_losses, 60);
+
+    // ---- 3) report ----
+    println!("\n[3/3] results");
+    println!("  dev accuracy: {:.1}", result.score);
+    println!(
+        "  trainable in stage 2: {} scalars; adapter-only {} = {} of backbone",
+        result.trainable_scalars,
+        result.adapter_scalars,
+        pct(result.param_fraction)
+    );
+    let stats = engine.stats();
+    println!(
+        "  engine: {} artifact compiles ({:.1}s), {} executions ({:.1}s, {:.1} exec/s)",
+        stats.compiles,
+        stats.compile_secs,
+        stats.executions,
+        stats.execute_secs,
+        stats.executions as f64 / stats.execute_secs.max(1e-9)
+    );
+    println!("  total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // hard assertions: this binary doubles as a smoke gate
+    assert!(last < first - 0.15, "pre-training failed to learn");
+    assert!(result.score > 60.0, "adapter tuning failed to beat chance");
+    println!("\nE2E OK");
+    Ok(())
+}

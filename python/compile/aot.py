@@ -1,0 +1,187 @@
+"""AOT pipeline: lower every (model x entry-point) to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (DESIGN.md §1):
+  fwd_{size}                   : eval + Fig 1/2 probes
+  train_{cls|reg}_{group}_{size}: loss + grads for the gradient group
+  mlm_{size}                   : pre-training loss + backbone grads
+
+``manifest.json`` records batch geometry, per-model parameter inventory
+(canonical order, shapes, init kinds), and per-artifact input/output lists.
+The Rust side reads only the manifest + the .hlo.txt files.
+
+Usage: python -m compile.aot --out ../artifacts [--sizes tiny,base,large]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_args(cfg):
+    return [jax.ShapeDtypeStruct(s, F32) for _, s, _ in model.param_specs(cfg)]
+
+
+def _batch_args(kind):
+    b, l, c, v = configs.BATCH, configs.SEQ, 3, None
+    tok = jax.ShapeDtypeStruct((b, l), I32)
+    msk = jax.ShapeDtypeStruct((b, l), F32)
+    if kind == "fwd":
+        return [tok, tok, msk], ["tokens", "type_ids", "attn_mask"]
+    if kind == "cls":
+        return ([tok, tok, msk, jax.ShapeDtypeStruct((b, c), F32),
+                 jax.ShapeDtypeStruct((c,), F32)],
+                ["tokens", "type_ids", "attn_mask", "labels_onehot",
+                 "class_mask"])
+    if kind == "reg":
+        return ([tok, tok, msk, jax.ShapeDtypeStruct((b,), F32)],
+                ["tokens", "type_ids", "attn_mask", "labels"])
+    if kind == "mlm":
+        return ([tok, tok, msk, tok, msk],
+                ["tokens", "type_ids", "attn_mask", "mlm_labels",
+                 "loss_mask"])
+    raise ValueError(kind)
+
+
+def _lower(fn, cfg, batch_specs):
+    # keep_unused=True: the Rust runtime always feeds the full canonical
+    # parameter list; without it XLA prunes parameters the entry point does
+    # not touch (e.g. the MLM head in fwd) and the input arity drifts.
+    args = _param_args(cfg) + batch_specs
+    return jax.jit(fn, keep_unused=True).lower(*args)
+
+
+def build_manifest_entry(name, cfg, kind, loss, group, batch_names,
+                         outputs, fname):
+    return {
+        "file": fname,
+        "model": cfg.name,
+        "kind": kind,
+        "loss": loss,
+        "group": group,
+        "batch_inputs": batch_names,
+        "outputs": outputs,
+    }
+
+
+def _inputs_digest(paths):
+    h = hashlib.sha256()
+    for p in sorted(paths):
+        with open(p, "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,base,large")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    sizes = [s for s in args.sizes.split(",") if s]
+
+    # Skip relowering when nothing changed (make-artifacts is a no-op then).
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    srcs = [os.path.join(src_dir, f) for f in os.listdir(src_dir)
+            if f.endswith(".py")]
+    srcs += [os.path.join(src_dir, "kernels", f)
+             for f in os.listdir(os.path.join(src_dir, "kernels"))
+             if f.endswith(".py")]
+    digest = _inputs_digest(srcs) + "|" + ",".join(sorted(sizes))
+    stamp = os.path.join(args.out, ".aot_stamp")
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == digest:
+                print("artifacts up to date; skipping")
+                return
+
+    manifest = {
+        "version": 1,
+        "batch": configs.BATCH,
+        "seq_len": configs.SEQ,
+        "num_classes": 3,
+        "models": {},
+        "artifacts": {},
+    }
+
+    t_all = time.time()
+    for size in sizes:
+        cfg = configs.MODELS[size]
+        specs = model.param_specs(cfg)
+        manifest["models"][size] = {
+            "config": cfg.to_dict(),
+            "params": [{"name": n, "shape": list(s), "init": k}
+                       for n, s, k in specs],
+            "groups": {g: [n for n, _, _ in specs if pred(n)]
+                       for g, pred in configs.GROUPS.items()},
+            "mlm_group": [n for n, _, _ in specs if configs._is_backbone(n)],
+        }
+
+        jobs = [("fwd", None, None)]
+        jobs += [("train", lk, g) for lk in ("cls", "reg")
+                 for g in configs.GROUPS]
+        jobs.append(("mlm", None, None))
+
+        for kind, lk, group in jobs:
+            t0 = time.time()
+            if kind == "fwd":
+                fn = model.make_fwd_fn(cfg)
+                bspecs, bnames = _batch_args("fwd")
+                outputs = ["logits", "regression", "attn_norms", "attn_means"]
+                name = f"fwd_{size}"
+            elif kind == "mlm":
+                fn, gnames = model.make_mlm_fn(cfg)
+                bspecs, bnames = _batch_args("mlm")
+                outputs = ["loss"] + [f"grad:{n}" for n in gnames]
+                name = f"mlm_{size}"
+            else:
+                fn, gnames = model.make_train_fn(cfg, lk, group)
+                bspecs, bnames = _batch_args(lk)
+                outputs = ["loss"] + [f"grad:{n}" for n in gnames]
+                name = f"train_{lk}_{group}_{size}"
+
+            text = to_hlo_text(_lower(fn, cfg, bspecs))
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"][name] = build_manifest_entry(
+                name, cfg, kind, lk, group, bnames, outputs, fname)
+            print(f"  {name}: {len(text)/1e6:.2f} MB "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(digest)
+    print(f"AOT done: {len(manifest['artifacts'])} artifacts "
+          f"in {time.time()-t_all:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

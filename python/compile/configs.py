@@ -1,0 +1,111 @@
+"""Model-size configurations shared by the L2 model and the AOT pipeline.
+
+The Rust side never imports this — everything it needs is recorded in
+``artifacts/manifest.json`` by aot.py.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    ffn: int
+    vocab: int = 512
+    max_len: int = 32
+    type_vocab: int = 2
+    lora_rank: int = 4
+    lora_alpha: float = 8.0
+    houlsby_bottleneck: int = 16
+    num_classes: int = 3          # max across GLUE (MNLI); masked per task
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+# Batch geometry baked into the artifacts (shape-specialized AOT).
+BATCH = 16
+SEQ = 32
+
+# "PLM" family: tiny is for fast tests; base/large mirror the paper's
+# base/large model pairs (scaled down — see DESIGN.md §3 substitutions).
+MODELS = {
+    "tiny": ModelConfig("tiny", layers=2, hidden=64, heads=2, ffn=128),
+    "base": ModelConfig("base", layers=4, hidden=128, heads=4, ffn=512),
+    "large": ModelConfig("large", layers=8, hidden=192, heads=6, ffn=768),
+}
+
+# Gradient groups: artifact differentiates the loss w.r.t. exactly these
+# parameters (predicate over canonical parameter names). Finer selection
+# (module combos for Table 4, layer ranges for Table 5) is Rust-side masking.
+HEAD_PREFIXES = ("pooler.", "classifier.", "regressor.")
+
+
+def _is_head(n):
+    return n.startswith(HEAD_PREFIXES)
+
+
+def _is_peft(n):
+    return (".hadamard." in n or ".lora." in n
+            or ".houlsby." in n or ".ia3." in n)
+
+
+def _is_hadamard_group(n):
+    return (_is_head(n)
+            or ".hadamard." in n
+            or ".attention.output.LayerNorm." in n
+            or (".output.LayerNorm." in n and ".attention." not in n))
+
+
+def _is_bitfit(n):
+    # Backbone bias terms only (adapter-internal biases are not BitFit's).
+    return _is_head(n) or (n.endswith(".bias") and not _is_peft(n))
+
+
+def _is_lora(n):
+    return _is_head(n) or ".lora." in n
+
+
+def _is_houlsby(n):
+    return (_is_head(n) or ".houlsby." in n
+            or ".attention.output.LayerNorm." in n
+            or (".output.LayerNorm." in n and ".attention." not in n))
+
+
+def _is_ia3(n):
+    return _is_head(n) or ".ia3." in n
+
+
+def _is_backbone(n):
+    """Params updated during MLM pre-training: everything that is not a PEFT
+    adapter and not the task heads (adapters must stay identity; heads are
+    task-specific). The MLM head itself does train."""
+    return not _is_peft(n) and not _is_head(n)
+
+
+def _is_full(n):
+    """Full fine-tuning = vanilla PLM: every non-adapter parameter. PEFT
+    modules stay frozen at identity so the model is exactly the plain
+    transformer (paper's full-FT baseline has no adapters)."""
+    return not _is_peft(n)
+
+
+GROUPS = {
+    "head": _is_head,
+    "hadamard": _is_hadamard_group,
+    "bitfit": _is_bitfit,
+    "lora": _is_lora,
+    "houlsby": _is_houlsby,
+    "ia3": _is_ia3,
+    "full": _is_full,
+}

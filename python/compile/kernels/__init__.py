@@ -1,0 +1,14 @@
+"""L1: Pallas kernels for the Hadamard-adapter hot path.
+
+- ``hadamard``  — the paper's element-wise adapter (Eq. 5), custom-VJP
+- ``layernorm`` — fused LayerNorm (the un-frozen module), custom-VJP
+- ``attention`` — fused masked multi-head attention, custom-VJP
+- ``ref``       — pure-jnp oracles for all of the above
+"""
+
+from .hadamard import hadamard
+from .layernorm import layernorm
+from .attention import attention
+from . import ref
+
+__all__ = ["hadamard", "layernorm", "attention", "ref"]

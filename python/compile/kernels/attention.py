@@ -1,0 +1,90 @@
+"""Pallas fused multi-head attention kernel.
+
+One grid cell per (batch, head): the full L x D tile for q/k/v lives in VMEM
+(L = 32 here, so the L x L score tile is tiny), scores -> stable softmax ->
+weighted sum happen in a single pass. On TPU the two matmuls hit the MXU; the
+softmax runs on the VPU between them.
+
+Backward: custom-VJP that recomputes the probabilities in pure jnp
+(flash-attention-style recompute — nothing is stashed but q, k, v, mask) and
+applies the standard softmax-backward algebra. The forward Pallas kernel and
+the recompute share the same math, which pytest cross-checks against
+``ref.attention_ref`` and its ``jax.grad``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0]            # [L, D]
+    k = k_ref[0, 0]            # [L, D]
+    v = v_ref[0, 0]            # [L, D]
+    m = m_ref[0, 0]            # [1, L] additive
+    scores = jnp.dot(q, k.T) * scale + m        # [L, L]
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(probs, v)
+
+
+def _fwd_call(q, k, v, mask):
+    b, nh, l, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    qspec = pl.BlockSpec((1, 1, l, d), lambda i, j: (i, j, 0, 0))
+    mspec = pl.BlockSpec((1, 1, 1, l), lambda i, j: (i, 0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(b, nh),
+        in_specs=[qspec, qspec, qspec, mspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((b, nh, l, d), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v, mask)
+
+
+@jax.custom_vjp
+def attention(q, k, v, mask):
+    """Masked scaled-dot-product attention, [B, NH, L, D] -> [B, NH, L, D].
+
+    ``mask`` is additive with shape [B, 1, 1, L] (0 = keep, -1e9 = drop).
+    """
+    return _fwd_call(q, k, v, mask)
+
+
+def _attn_fwd(q, k, v, mask):
+    return _fwd_call(q, k, v, mask), (q, k, v, mask)
+
+
+def _attn_bwd(res, g):
+    q, k, v, mask = res
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    # Recompute probabilities (cheap at these tile sizes; avoids stashing L x L).
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale + mask
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", probs, g)
+    dprobs = jnp.einsum("bhqd,bhkd->bhqk", g, v)
+    # softmax backward: ds = p * (dp - sum_k p * dp)
+    dscores = probs * (dprobs - jnp.sum(probs * dprobs, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", dscores, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", dscores, q) * scale
+    dmask = jnp.sum(dscores, axis=(1, 2), keepdims=True)
+    return dq, dk, dv, dmask
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def attention_reference(q, k, v, mask):
+    """Re-export of the jnp oracle (used by model.py when use_pallas=False)."""
+    return ref.attention_ref(q, k, v, mask)

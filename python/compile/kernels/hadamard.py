@@ -1,0 +1,127 @@
+"""Pallas kernel for the Hadamard adapter (paper Eq. 5).
+
+Forward:  y[t, h] = w[h] * x[t, h] + b[h] (+ w2[h] x^2 + w3[h] x^3)
+Backward: dx = g * (w + 2 w2 x + 3 w3 x^2)
+          dw = sum_t g * x      db  = sum_t g
+          dw2 = sum_t g * x^2   dw3 = sum_t g * x^3
+
+Both directions are Pallas kernels gridded over row blocks; the backward
+kernel emits per-block partial reductions for the vector grads which are
+summed outside the kernel (a tree-reduce over num_blocks partials).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each grid step streams an
+(R x H) row block HBM->VMEM, applies the affine on the VPU in a single pass
+and streams back; H is a multiple of the 128-lane boundary for base/large.
+VMEM per step = 3 * R * H * 4B (x, y, partials) — a few tens of KiB.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and these kernels must lower into the HLO text artifact that
+the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _row_block(n_rows: int) -> int:
+    """Largest power-of-two row-block size <= 128 that divides n_rows."""
+    for r in (128, 64, 32, 16, 8, 4, 2):
+        if n_rows % r == 0:
+            return r
+    return 1
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, w2_ref, w3_ref, o_ref, *, order: int):
+    x = x_ref[...]
+    y = x * w_ref[...][None, :] + b_ref[...][None, :]
+    if order >= 2:
+        y = y + w2_ref[...][None, :] * (x * x)
+    if order >= 3:
+        y = y + w3_ref[...][None, :] * (x * x * x)
+    o_ref[...] = y
+
+
+def _bwd_kernel(
+    g_ref, x_ref, w_ref, w2_ref, w3_ref,
+    dx_ref, dw_ref, db_ref, dw2_ref, dw3_ref, *, order: int
+):
+    g = g_ref[...]
+    x = x_ref[...]
+    w = w_ref[...][None, :]
+    slope = w
+    if order >= 2:
+        slope = slope + 2.0 * w2_ref[...][None, :] * x
+    if order >= 3:
+        slope = slope + 3.0 * w3_ref[...][None, :] * (x * x)
+    dx_ref[...] = g * slope
+    # Per-block partial reductions for the vector grads.
+    dw_ref[...] = jnp.sum(g * x, axis=0, keepdims=True)
+    db_ref[...] = jnp.sum(g, axis=0, keepdims=True)
+    dw2_ref[...] = jnp.sum(g * x * x, axis=0, keepdims=True) if order >= 2 \
+        else jnp.zeros_like(dw_ref)
+    dw3_ref[...] = jnp.sum(g * x * x * x, axis=0, keepdims=True) if order >= 3 \
+        else jnp.zeros_like(dw_ref)
+
+
+def _fwd_call(x, w, b, w2, w3, order):
+    t, h = x.shape
+    r = _row_block(t)
+    grid = (t // r,)
+    vec = pl.BlockSpec((h,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, order=order),
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, h), lambda i: (i, 0)), vec, vec, vec, vec],
+        out_specs=pl.BlockSpec((r, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, b, w2, w3)
+
+
+def _bwd_call(g, x, w, w2, w3, order):
+    t, h = x.shape
+    r = _row_block(t)
+    nb = t // r
+    vec = pl.BlockSpec((h,), lambda i: (0,))
+    part = pl.BlockSpec((1, h), lambda i: (i, 0))
+    part_shape = jax.ShapeDtypeStruct((nb, h), x.dtype)
+    dx, dwp, dbp, dw2p, dw3p = pl.pallas_call(
+        functools.partial(_bwd_kernel, order=order),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((r, h), lambda i: (i, 0)),
+                  pl.BlockSpec((r, h), lambda i: (i, 0)), vec, vec, vec],
+        out_specs=[pl.BlockSpec((r, h), lambda i: (i, 0)), part, part, part, part],
+        out_shape=[jax.ShapeDtypeStruct((t, h), x.dtype),
+                   part_shape, part_shape, part_shape, part_shape],
+        interpret=INTERPRET,
+    )(g, x, w, w2, w3)
+    return dx, dwp.sum(0), dbp.sum(0), dw2p.sum(0), dw3p.sum(0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def hadamard(x, w, b, w2, w3, order=1):
+    """Hadamard adapter on a [T, H] activation block.
+
+    ``order`` is static: 1 = the paper's adapter (w, b); 2/3 add the
+    Sec. 2.2 quadratic/cubic fitting terms (w2, w3 still passed, ignored
+    below their order so a single parameter inventory serves all orders).
+    """
+    return _fwd_call(x, w, b, w2, w3, order)
+
+
+def _hadamard_fwd(x, w, b, w2, w3, order):
+    return _fwd_call(x, w, b, w2, w3, order), (x, w, w2, w3)
+
+
+def _hadamard_bwd(order, res, g):
+    x, w, w2, w3 = res
+    dx, dw, db, dw2, dw3 = _bwd_call(g, x, w, w2, w3, order)
+    return dx, dw, db, dw2, dw3
+
+
+hadamard.defvjp(_hadamard_fwd, _hadamard_bwd)

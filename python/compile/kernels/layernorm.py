@@ -1,0 +1,103 @@
+"""Pallas fused LayerNorm kernel (the module the tuning method un-freezes).
+
+Forward (per row): mu = mean(x), s = 1/sqrt(var(x)+eps),
+                   y = (x - mu) * s * scale + bias
+Backward:          xhat = (x - mu) * s
+                   dxhat = g * scale
+                   dx = s * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))
+                   dscale = sum_t g * xhat      dbias = sum_t g
+
+Both directions grid over (R x H) row blocks; every row's full H lives in one
+block so mean/var are single-pass in VMEM. The backward emits per-block
+partials for dscale/dbias, reduced outside.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+EPS = 1e-5
+
+
+def _row_block(n_rows: int) -> int:
+    for r in (128, 64, 32, 16, 8, 4, 2):
+        if n_rows % r == 0:
+            return r
+    return 1
+
+
+def _fwd_kernel(x_ref, scale_ref, bias_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    inv = 1.0 / jnp.sqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+    o_ref[...] = xc * inv * scale_ref[...][None, :] + bias_ref[...][None, :]
+
+
+def _bwd_kernel(g_ref, x_ref, scale_ref, dx_ref, dscale_ref, dbias_ref, *, eps: float):
+    g = g_ref[...]
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    inv = 1.0 / jnp.sqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + eps)
+    xhat = xc * inv
+    dxhat = g * scale_ref[...][None, :]
+    m1 = jnp.mean(dxhat, axis=-1, keepdims=True)
+    m2 = jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = inv * (dxhat - m1 - xhat * m2)
+    dscale_ref[...] = jnp.sum(g * xhat, axis=0, keepdims=True)
+    dbias_ref[...] = jnp.sum(g, axis=0, keepdims=True)
+
+
+def _fwd_call(x, scale, bias, eps):
+    t, h = x.shape
+    r = _row_block(t)
+    vec = pl.BlockSpec((h,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(t // r,),
+        in_specs=[pl.BlockSpec((r, h), lambda i: (i, 0)), vec, vec],
+        out_specs=pl.BlockSpec((r, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=INTERPRET,
+    )(x, scale, bias)
+
+
+def _bwd_call(g, x, scale, eps):
+    t, h = x.shape
+    r = _row_block(t)
+    nb = t // r
+    vec = pl.BlockSpec((h,), lambda i: (0,))
+    part = pl.BlockSpec((1, h), lambda i: (i, 0))
+    part_shape = jax.ShapeDtypeStruct((nb, h), x.dtype)
+    dx, dsp, dbp = pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((r, h), lambda i: (i, 0)),
+                  pl.BlockSpec((r, h), lambda i: (i, 0)), vec],
+        out_specs=[pl.BlockSpec((r, h), lambda i: (i, 0)), part, part],
+        out_shape=[jax.ShapeDtypeStruct((t, h), x.dtype), part_shape, part_shape],
+        interpret=INTERPRET,
+    )(g, x, scale)
+    return dx, dsp.sum(0), dbp.sum(0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x, scale, bias, eps=EPS):
+    """Fused LayerNorm over the last axis of a [T, H] block."""
+    return _fwd_call(x, scale, bias, eps)
+
+
+def _ln_fwd(x, scale, bias, eps):
+    return _fwd_call(x, scale, bias, eps), (x, scale)
+
+
+def _ln_bwd(eps, res, g):
+    x, scale = res
+    return _bwd_call(g, x, scale, eps)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here with
+an identical signature. pytest/hypothesis sweep shapes and dtypes and assert
+allclose between kernel and oracle, and check the kernels' custom VJPs against
+``jax.grad`` of these oracles.
+"""
+
+import jax.numpy as jnp
+
+
+def hadamard_ref(x, w, b, w2=None, w3=None):
+    """Hadamard adapter (paper Eq. 5), optionally with the Sec. 2.2
+    quadratic/cubic fitting terms.
+
+    y[t, h] = w[h] * x[t, h] + b[h] (+ w2[h] * x^2 + w3[h] * x^3)
+
+    x: [T, H]; w, b, w2, w3: [H].
+    """
+    y = x * w[None, :] + b[None, :]
+    if w2 is not None:
+        y = y + w2[None, :] * jnp.square(x)
+    if w3 is not None:
+        y = y + w3[None, :] * (x * x * x)
+    return y
+
+
+def layernorm_ref(x, scale, bias, eps=1e-5):
+    """Row-wise LayerNorm with affine output. x: [T, H]; scale, bias: [H]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(var + eps)
+    return (x - mean) * inv * scale[None, :] + bias[None, :]
+
+
+def attention_ref(q, k, v, mask):
+    """Scaled dot-product attention with additive mask.
+
+    q, k, v: [B, NH, L, D]; mask: [B, 1, 1, L] additive (0 keep, -1e9 drop).
+    Returns [B, NH, L, D].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = scores + mask
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def hadamard_layernorm_ref(x, w, b, scale, bias, eps=1e-5):
+    """Fused adapter + LayerNorm oracle (perf-path fusion)."""
+    return layernorm_ref(hadamard_ref(x, w, b), scale, bias, eps=eps)

@@ -1,0 +1,388 @@
+"""L2: the transformer encoder with every PEFT module coexisting.
+
+A BERT-family encoder in pure functional JAX. All PEFT modules — the paper's
+Hadamard adapter plus the Table-3 baselines (LoRA, Houlsby, IA3; BitFit and
+LN-tuning need no extra parameters) — live in one parameter inventory,
+**identity-initialized** so each is a no-op until its gradient group trains it
+(DESIGN.md §4.2). The hot paths call the L1 Pallas kernels
+(``kernels.hadamard`` / ``kernels.layernorm`` / ``kernels.attention``) so they
+lower into the same HLO artifact the Rust runtime executes.
+
+Canonical parameter order = the order produced by :func:`param_specs`.
+aot.py records it in the manifest; the Rust ParamStore mirrors it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import attention, hadamard, layernorm
+from .kernels import ref as kref
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# Parameter inventory
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: configs.ModelConfig):
+    """Ordered list of (name, shape, init) for every parameter.
+
+    ``init`` is one of ``normal`` (normal std 0.02), ``zeros``, ``ones`` —
+    the Rust side reproduces these kinds (exact values need not match across
+    languages; artifacts are pure functions of the parameters they are fed).
+    """
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    r, bn = cfg.lora_rank, cfg.houlsby_bottleneck
+    specs = [
+        ("embeddings.word_embeddings.weight", (v, h), "normal"),
+        ("embeddings.position_embeddings.weight", (cfg.max_len, h), "normal"),
+        ("embeddings.token_type_embeddings.weight", (cfg.type_vocab, h), "normal"),
+        ("embeddings.LayerNorm.weight", (h,), "ones"),
+        ("embeddings.LayerNorm.bias", (h,), "zeros"),
+    ]
+    for i in range(cfg.layers):
+        p = f"encoder.layer.{i}"
+        specs += [
+            (f"{p}.attention.self.query.weight", (h, h), "normal"),
+            (f"{p}.attention.self.query.bias", (h,), "zeros"),
+            (f"{p}.attention.self.key.weight", (h, h), "normal"),
+            (f"{p}.attention.self.key.bias", (h,), "zeros"),
+            (f"{p}.attention.self.value.weight", (h, h), "normal"),
+            (f"{p}.attention.self.value.bias", (h,), "zeros"),
+            # The paper's adapter: right after the concatenated self-attention
+            # output (Eq. 6-7). w2/w3 are the Sec. 2.2 fitting-order terms.
+            (f"{p}.hadamard.weight", (h,), "ones"),
+            (f"{p}.hadamard.bias", (h,), "zeros"),
+            (f"{p}.hadamard.w2", (h,), "zeros"),
+            (f"{p}.hadamard.w3", (h,), "zeros"),
+            (f"{p}.attention.output.dense.weight", (h, h), "normal"),
+            (f"{p}.attention.output.dense.bias", (h,), "zeros"),
+            (f"{p}.attention.output.LayerNorm.weight", (h,), "ones"),   # "A"
+            (f"{p}.attention.output.LayerNorm.bias", (h,), "zeros"),
+            # LoRA on Q and V (B zero-init => identity).
+            (f"{p}.lora.query.a", (h, r), "normal"),
+            (f"{p}.lora.query.b", (r, h), "zeros"),
+            (f"{p}.lora.value.a", (h, r), "normal"),
+            (f"{p}.lora.value.b", (r, h), "zeros"),
+            # IA3 rescaling vectors (ones => identity).
+            (f"{p}.ia3.l_k", (h,), "ones"),
+            (f"{p}.ia3.l_v", (h,), "ones"),
+            (f"{p}.ia3.l_ff", (f,), "ones"),
+            # Houlsby bottleneck adapters (up zero-init => identity).
+            (f"{p}.houlsby.attn.down.weight", (h, bn), "normal"),
+            (f"{p}.houlsby.attn.down.bias", (bn,), "zeros"),
+            (f"{p}.houlsby.attn.up.weight", (bn, h), "zeros"),
+            (f"{p}.houlsby.attn.up.bias", (h,), "zeros"),
+            (f"{p}.houlsby.ffn.down.weight", (h, bn), "normal"),
+            (f"{p}.houlsby.ffn.down.bias", (bn,), "zeros"),
+            (f"{p}.houlsby.ffn.up.weight", (bn, h), "zeros"),
+            (f"{p}.houlsby.ffn.up.bias", (h,), "zeros"),
+            (f"{p}.intermediate.dense.weight", (h, f), "normal"),
+            (f"{p}.intermediate.dense.bias", (f,), "zeros"),
+            (f"{p}.output.dense.weight", (f, h), "normal"),
+            (f"{p}.output.dense.bias", (h,), "zeros"),
+            (f"{p}.output.LayerNorm.weight", (h,), "ones"),             # "N"
+            (f"{p}.output.LayerNorm.bias", (h,), "zeros"),
+        ]
+    specs += [
+        ("pooler.dense.weight", (h, h), "normal"),
+        ("pooler.dense.bias", (h,), "zeros"),
+        ("classifier.weight", (h, cfg.num_classes), "normal"),
+        ("classifier.bias", (cfg.num_classes,), "zeros"),
+        ("regressor.weight", (h, 1), "normal"),
+        ("regressor.bias", (1,), "zeros"),
+        ("mlm.dense.weight", (h, h), "normal"),
+        ("mlm.dense.bias", (h,), "zeros"),
+        ("mlm.LayerNorm.weight", (h,), "ones"),
+        ("mlm.LayerNorm.bias", (h,), "zeros"),
+        ("mlm.decoder.bias", (v,), "zeros"),
+    ]
+    return specs
+
+
+def init_params(cfg: configs.ModelConfig, key):
+    """Seeded initialization (python-side — used by tests; Rust owns the real
+    checkpoint initialization with the same distribution kinds)."""
+    params = {}
+    for name, shape, kind in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if kind == "normal":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        elif kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=False)
+
+
+def _ln(x2d, scale, bias, use_pallas):
+    if use_pallas:
+        return layernorm(x2d, scale, bias)
+    return kref.layernorm_ref(x2d, scale, bias)
+
+
+def _spectral_norm(a, iters=8):
+    """Per-example 2-norm of [B, L, H] via power iteration on A^T A (the
+    Fig. 1 statistic: ||A||_2 = sqrt(lambda_max(A^T A)))."""
+    v = jnp.ones((a.shape[0], a.shape[2]), a.dtype) / jnp.sqrt(
+        jnp.asarray(a.shape[2], a.dtype))
+    nrm = jnp.ones((a.shape[0], 1), a.dtype)
+    for _ in range(iters):
+        u = jnp.einsum("blh,bh->bl", a, v)
+        u = u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-9)
+        v = jnp.einsum("blh,bl->bh", a, u)
+        nrm = jnp.linalg.norm(v, axis=-1, keepdims=True)
+        v = v / (nrm + 1e-9)
+    return nrm[:, 0]
+
+
+def forward(cfg, params, tokens, type_ids, attn_mask, *, order=3,
+            use_pallas=True, collect_probes=True):
+    """Encoder forward.
+
+    tokens, type_ids: i32 [B, L]; attn_mask: f32 [B, L] (1 keep / 0 pad).
+    Returns dict with ``logits`` [B, C], ``regression`` [B], ``hidden``
+    [B, L, H], ``pooled`` [B, H] and (if ``collect_probes``) the Fig. 1/2
+    probe stats ``attn_norms``/``attn_means`` [B, layers].
+    """
+    b, l = tokens.shape
+    h, nh, d = cfg.hidden, cfg.heads, cfg.head_dim
+    scale_lora = cfg.lora_alpha / cfg.lora_rank
+
+    emb = (params["embeddings.word_embeddings.weight"][tokens]
+           + params["embeddings.position_embeddings.weight"][None, :l]
+           + params["embeddings.token_type_embeddings.weight"][type_ids])
+    x = _ln(emb.reshape(b * l, h),
+            params["embeddings.LayerNorm.weight"],
+            params["embeddings.LayerNorm.bias"], use_pallas).reshape(b, l, h)
+
+    mask4 = (1.0 - attn_mask)[:, None, None, :] * NEG_INF
+    norms, means = [], []
+
+    for i in range(cfg.layers):
+        p = f"encoder.layer.{i}"
+        q = x @ params[f"{p}.attention.self.query.weight"] \
+            + params[f"{p}.attention.self.query.bias"]
+        q = q + (x @ params[f"{p}.lora.query.a"]) \
+            @ params[f"{p}.lora.query.b"] * scale_lora
+        k = x @ params[f"{p}.attention.self.key.weight"] \
+            + params[f"{p}.attention.self.key.bias"]
+        k = k * params[f"{p}.ia3.l_k"][None, None, :]
+        v = x @ params[f"{p}.attention.self.value.weight"] \
+            + params[f"{p}.attention.self.value.bias"]
+        v = v + (x @ params[f"{p}.lora.value.a"]) \
+            @ params[f"{p}.lora.value.b"] * scale_lora
+        v = v * params[f"{p}.ia3.l_v"][None, None, :]
+
+        def split(t):
+            return t.reshape(b, l, nh, d).transpose(0, 2, 1, 3)
+
+        if use_pallas:
+            att = attention(split(q), split(k), split(v), mask4)
+        else:
+            att = kref.attention_ref(split(q), split(k), split(v), mask4)
+        att = att.transpose(0, 2, 1, 3).reshape(b, l, h)   # Concat(A_1..A_T)
+
+        # ---- the Hadamard adapter (paper Eq. 7: A' = Adap(A)) ----
+        if use_pallas:
+            att_ad = hadamard(att.reshape(b * l, h),
+                              params[f"{p}.hadamard.weight"],
+                              params[f"{p}.hadamard.bias"],
+                              params[f"{p}.hadamard.w2"],
+                              params[f"{p}.hadamard.w3"],
+                              order).reshape(b, l, h)
+        else:
+            att_ad = kref.hadamard_ref(
+                att.reshape(b * l, h),
+                params[f"{p}.hadamard.weight"],
+                params[f"{p}.hadamard.bias"],
+                params[f"{p}.hadamard.w2"] if order >= 2 else None,
+                params[f"{p}.hadamard.w3"] if order >= 3 else None,
+            ).reshape(b, l, h)
+
+        if collect_probes:
+            norms.append(_spectral_norm(att))
+            means.append(jnp.mean(att_ad, axis=(1, 2)))
+
+        a_dense = att_ad @ params[f"{p}.attention.output.dense.weight"] \
+            + params[f"{p}.attention.output.dense.bias"]
+        ha = _gelu(a_dense @ params[f"{p}.houlsby.attn.down.weight"]
+                   + params[f"{p}.houlsby.attn.down.bias"])
+        a_dense = a_dense + ha @ params[f"{p}.houlsby.attn.up.weight"] \
+            + params[f"{p}.houlsby.attn.up.bias"]
+        x1 = _ln((a_dense + x).reshape(b * l, h),
+                 params[f"{p}.attention.output.LayerNorm.weight"],
+                 params[f"{p}.attention.output.LayerNorm.bias"],
+                 use_pallas).reshape(b, l, h)
+
+        inter = _gelu(x1 @ params[f"{p}.intermediate.dense.weight"]
+                      + params[f"{p}.intermediate.dense.bias"])
+        inter = inter * params[f"{p}.ia3.l_ff"][None, None, :]
+        ffn = inter @ params[f"{p}.output.dense.weight"] \
+            + params[f"{p}.output.dense.bias"]
+        hf = _gelu(ffn @ params[f"{p}.houlsby.ffn.down.weight"]
+                   + params[f"{p}.houlsby.ffn.down.bias"])
+        ffn = ffn + hf @ params[f"{p}.houlsby.ffn.up.weight"] \
+            + params[f"{p}.houlsby.ffn.up.bias"]
+        x = _ln((ffn + x1).reshape(b * l, h),
+                params[f"{p}.output.LayerNorm.weight"],
+                params[f"{p}.output.LayerNorm.bias"],
+                use_pallas).reshape(b, l, h)
+
+    # Masked mean pooling (instead of BERT's [CLS]-only): at our pre-training
+    # scale the [CLS] position carries little aggregate signal, while the
+    # paper's regime (probe lands at ~77% of full FT) requires sentence-level
+    # features to be linearly accessible. Documented in DESIGN.md §3.
+    denom = jnp.sum(attn_mask, axis=1, keepdims=True)
+    mean_h = jnp.sum(x * attn_mask[:, :, None], axis=1) / jnp.maximum(denom, 1.0)
+    pooled = jnp.tanh(mean_h @ params["pooler.dense.weight"]
+                      + params["pooler.dense.bias"])
+    logits = pooled @ params["classifier.weight"] + params["classifier.bias"]
+    regression = (pooled @ params["regressor.weight"]
+                  + params["regressor.bias"])[:, 0]
+
+    out = {"logits": logits, "regression": regression,
+           "hidden": x, "pooled": pooled}
+    if collect_probes:
+        out["attn_norms"] = jnp.stack(norms, axis=1)   # [B, layers]
+        out["attn_means"] = jnp.stack(means, axis=1)   # [B, layers]
+    return out
+
+
+def mlm_logits(cfg, params, hidden):
+    """Tied-decoder MLM head over the full sequence. hidden: [B, L, H]."""
+    m = _gelu(hidden @ params["mlm.dense.weight"] + params["mlm.dense.bias"])
+    b, l, h = m.shape
+    m = kref.layernorm_ref(m.reshape(b * l, h),
+                           params["mlm.LayerNorm.weight"],
+                           params["mlm.LayerNorm.bias"]).reshape(b, l, h)
+    return m @ params["embeddings.word_embeddings.weight"].T \
+        + params["mlm.decoder.bias"]
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def loss_cls(logits, labels_onehot, class_mask):
+    """Masked softmax CE: tasks with < num_classes labels mask the unused
+    logits to -inf (class_mask is f32 [C], 1 = active class)."""
+    masked = logits + (class_mask[None, :] - 1.0) * (-NEG_INF)
+    logp = jax.nn.log_softmax(masked, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+def loss_reg(regression, labels):
+    """MSE for STS-B-style graded similarity."""
+    return jnp.mean(jnp.square(regression - labels))
+
+
+def loss_mlm(logits, labels, loss_mask):
+    """Masked-position CE for pre-training. labels i32 [B, L]; loss_mask
+    f32 [B, L] (1 at masked positions)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Flat-argument entry points for AOT (canonical parameter order + batch)
+# --------------------------------------------------------------------------
+
+def _rebuild(cfg, flat):
+    names = [n for n, _, _ in param_specs(cfg)]
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+def make_fwd_fn(cfg, *, order=3, use_pallas=True):
+    """fn(*params, tokens, type_ids, attn_mask) ->
+    (logits, regression, attn_norms, attn_means)."""
+    n = len(param_specs(cfg))
+
+    def fn(*args):
+        params = _rebuild(cfg, args[:n])
+        tokens, type_ids, attn_mask = args[n:]
+        out = forward(cfg, params, tokens, type_ids, attn_mask,
+                      order=order, use_pallas=use_pallas, collect_probes=True)
+        return (out["logits"], out["regression"],
+                out["attn_norms"], out["attn_means"])
+
+    return fn
+
+
+def _split_by_group(params, predicate):
+    train = {k: v for k, v in params.items() if predicate(k)}
+    frozen = {k: v for k, v in params.items() if not predicate(k)}
+    return train, frozen
+
+
+def make_train_fn(cfg, loss_kind: str, group: str, *, order=3,
+                  use_pallas=True):
+    """fn(*params, *batch) -> (loss, grad_1, ..., grad_k) where the grads
+    cover exactly the parameters of ``group``, in canonical order.
+
+    batch for ``cls``: tokens, type_ids, attn_mask, labels_onehot, class_mask;
+    batch for ``reg``: tokens, type_ids, attn_mask, labels.
+    """
+    n = len(param_specs(cfg))
+    predicate = configs.GROUPS[group]
+    grad_names = [nm for nm, _, _ in param_specs(cfg) if predicate(nm)]
+
+    def fn(*args):
+        params = _rebuild(cfg, args[:n])
+        if loss_kind == "cls":
+            tokens, type_ids, attn_mask, labels_onehot, class_mask = args[n:]
+        else:
+            tokens, type_ids, attn_mask, labels = args[n:]
+        train, frozen = _split_by_group(params, predicate)
+
+        def loss_fn(train_params):
+            full = {**frozen, **train_params}
+            out = forward(cfg, full, tokens, type_ids, attn_mask,
+                          order=order, use_pallas=use_pallas,
+                          collect_probes=False)
+            if loss_kind == "cls":
+                return loss_cls(out["logits"], labels_onehot, class_mask)
+            return loss_reg(out["regression"], labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(train)
+        return (loss,) + tuple(grads[nm] for nm in grad_names)
+
+    return fn, grad_names
+
+
+def make_mlm_fn(cfg, *, use_pallas=True):
+    """fn(*params, tokens, type_ids, attn_mask, labels, loss_mask) ->
+    (loss, grads over the backbone group) — the pre-training step."""
+    n = len(param_specs(cfg))
+    predicate = configs._is_backbone
+    grad_names = [nm for nm, _, _ in param_specs(cfg) if predicate(nm)]
+
+    def fn(*args):
+        params = _rebuild(cfg, args[:n])
+        tokens, type_ids, attn_mask, labels, loss_mask = args[n:]
+        train, frozen = _split_by_group(params, predicate)
+
+        def loss_fn(train_params):
+            full = {**frozen, **train_params}
+            out = forward(cfg, full, tokens, type_ids, attn_mask,
+                          order=1, use_pallas=use_pallas,
+                          collect_probes=False)
+            return loss_mlm(mlm_logits(cfg, full, out["hidden"]),
+                            labels, loss_mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(train)
+        return (loss,) + tuple(grads[nm] for nm in grad_names)
+
+    return fn, grad_names

@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes; explicit tests pin the paper-relevant cases
+(identity init => no-op adapter) and check the custom VJPs against
+``jax.grad`` of the oracles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, hadamard, layernorm, ref
+
+jax.config.update("jax_enable_x64", False)
+
+ROWS = st.sampled_from([1, 2, 3, 4, 8, 16, 48, 64, 96, 128, 160])
+HID = st.sampled_from([1, 2, 7, 16, 32, 64, 128, 192])
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------- hadamard
+
+class TestHadamard:
+    @settings(max_examples=40, deadline=None)
+    @given(t=ROWS, h=HID, seed=SEED, order=st.sampled_from([1, 2, 3]))
+    def test_matches_ref(self, t, h, seed, order):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = _rand(ks[0], (t, h))
+        w, b = _rand(ks[1], (h,)), _rand(ks[2], (h,))
+        w2, w3 = _rand(ks[3], (h,), scale=0.1), _rand(ks[4], (h,), scale=0.01)
+        got = hadamard(x, w, b, w2, w3, order)
+        want = ref.hadamard_ref(x, w, b,
+                                w2 if order >= 2 else None,
+                                w3 if order >= 3 else None)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(t=st.sampled_from([4, 16, 64]), h=st.sampled_from([8, 32, 64]),
+           seed=SEED, order=st.sampled_from([1, 2, 3]))
+    def test_vjp_matches_ref_grad(self, t, h, seed, order):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = _rand(ks[0], (t, h))
+        w, b = _rand(ks[1], (h,)), _rand(ks[2], (h,))
+        w2, w3 = _rand(ks[3], (h,), scale=0.1), _rand(ks[4], (h,), scale=0.01)
+
+        def f(x, w, b, w2, w3):
+            return jnp.sum(jnp.sin(hadamard(x, w, b, w2, w3, order)))
+
+        def fr(x, w, b, w2, w3):
+            y = ref.hadamard_ref(x, w, b,
+                                 w2 if order >= 2 else None,
+                                 w3 if order >= 3 else None)
+            return jnp.sum(jnp.sin(y))
+
+        g = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, w, b, w2, w3)
+        gr = jax.grad(fr, argnums=(0, 1, 2, 3, 4))(x, w, b, w2, w3)
+        for a, e, nm in zip(g, gr, ["x", "w", "b", "w2", "w3"]):
+            np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"grad {nm}")
+
+    def test_identity_init_is_noop(self):
+        """Paper Sec 3.1: w=1, b=0 is 'equivalent to not adding any adapter'."""
+        x = _rand(jax.random.PRNGKey(0), (64, 128))
+        z = jnp.zeros((128,))
+        y = hadamard(x, jnp.ones((128,)), z, z, z, 3)
+        np.testing.assert_allclose(y, x, rtol=0, atol=0)
+
+    def test_token_sharing(self):
+        """All token positions share the same (w, b) — the defining property
+        that makes the adapter O(H) instead of O(L*H)."""
+        k = jax.random.PRNGKey(1)
+        row = _rand(k, (1, 32))
+        x = jnp.tile(row, (16, 1))
+        w, b = _rand(jax.random.PRNGKey(2), (32,)), _rand(jax.random.PRNGKey(3), (32,))
+        y = hadamard(x, w, b, jnp.zeros((32,)), jnp.zeros((32,)), 1)
+        np.testing.assert_allclose(y, jnp.tile(y[:1], (16, 1)), rtol=1e-6, atol=1e-6)
+
+    def test_bf16(self):
+        x = _rand(jax.random.PRNGKey(0), (32, 64), jnp.bfloat16)
+        w = _rand(jax.random.PRNGKey(1), (64,), jnp.bfloat16)
+        b = _rand(jax.random.PRNGKey(2), (64,), jnp.bfloat16)
+        z = jnp.zeros((64,), jnp.bfloat16)
+        got = hadamard(x, w, b, z, z, 1).astype(jnp.float32)
+        want = ref.hadamard_ref(x, w, b).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------- layernorm
+
+class TestLayerNorm:
+    @settings(max_examples=40, deadline=None)
+    @given(t=ROWS, h=st.sampled_from([2, 7, 16, 64, 128, 192]), seed=SEED)
+    def test_matches_ref(self, t, h, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(ks[0], (t, h), scale=3.0)
+        s = _rand(ks[1], (h,)) + 1.0
+        b = _rand(ks[2], (h,))
+        np.testing.assert_allclose(layernorm(x, s, b),
+                                   ref.layernorm_ref(x, s, b),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(t=st.sampled_from([4, 32, 64]), h=st.sampled_from([8, 64]), seed=SEED)
+    def test_vjp_matches_ref_grad(self, t, h, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(ks[0], (t, h), scale=2.0)
+        s = _rand(ks[1], (h,)) + 1.0
+        b = _rand(ks[2], (h,))
+        f = lambda *a: jnp.sum(jnp.tanh(layernorm(*a)))
+        fr = lambda *a: jnp.sum(jnp.tanh(ref.layernorm_ref(*a)))
+        g = jax.grad(f, argnums=(0, 1, 2))(x, s, b)
+        gr = jax.grad(fr, argnums=(0, 1, 2))(x, s, b)
+        for a, e, nm in zip(g, gr, ["x", "scale", "bias"]):
+            np.testing.assert_allclose(a, e, rtol=1e-3, atol=1e-4,
+                                       err_msg=f"grad {nm}")
+
+    def test_output_standardized(self):
+        x = _rand(jax.random.PRNGKey(5), (16, 128), scale=10.0)
+        y = layernorm(x, jnp.ones((128,)), jnp.zeros((128,)))
+        np.testing.assert_allclose(jnp.mean(y, axis=-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(jnp.std(y, axis=-1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------- attention
+
+class TestAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.sampled_from([1, 2, 4]), nh=st.sampled_from([1, 2, 4]),
+           l=st.sampled_from([4, 16, 32]), d=st.sampled_from([8, 16, 32]),
+           seed=SEED)
+    def test_matches_ref(self, b, nh, l, d, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q, k, v = (_rand(ks[i], (b, nh, l, d)) for i in range(3))
+        keep = jax.random.bernoulli(ks[3], 0.9, (b, 1, 1, l))
+        m = jnp.where(keep, 0.0, -1e9).astype(jnp.float32)
+        m = m.at[..., 0].set(0.0)   # never mask everything
+        np.testing.assert_allclose(attention(q, k, v, m),
+                                   ref.attention_ref(q, k, v, m),
+                                   rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=SEED)
+    def test_vjp_matches_ref_grad(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        shape = (2, 2, 16, 8)
+        q, k, v = (_rand(ks[i], shape) for i in range(3))
+        m = jnp.zeros((2, 1, 1, 16))
+        f = lambda *a: jnp.sum(attention(*a, m) ** 2)
+        fr = lambda *a: jnp.sum(ref.attention_ref(*a, m) ** 2)
+        g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+        for a, e, nm in zip(g, gr, ["q", "k", "v"]):
+            np.testing.assert_allclose(a, e, rtol=1e-3, atol=1e-4,
+                                       err_msg=f"grad {nm}")
+
+    def test_rows_sum_to_one_property(self):
+        """Softmax rows are convex combinations: output must lie within the
+        per-row min/max envelope of v."""
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q, k, v = (_rand(ks[i], (2, 2, 8, 4)) for i in range(3))
+        m = jnp.zeros((2, 1, 1, 8))
+        out = attention(q, k, v, m)
+        assert float(out.max()) <= float(v.max()) + 1e-5
+        assert float(out.min()) >= float(v.min()) - 1e-5
+
+    def test_fully_masked_key_gets_zero_weight(self):
+        ks = jax.random.split(jax.random.PRNGKey(8), 3)
+        q, k = _rand(ks[0], (1, 1, 4, 4)), _rand(ks[1], (1, 1, 4, 4))
+        v = jnp.ones((1, 1, 4, 4))
+        v = v.at[0, 0, 3].set(1e6)           # huge value at masked position
+        m = jnp.zeros((1, 1, 1, 4)).at[..., 3].set(-1e9)
+        out = attention(q, k, v, m)
+        assert float(jnp.abs(out).max()) < 10.0   # 1e6 never leaks through

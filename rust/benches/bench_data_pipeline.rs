@@ -1,0 +1,52 @@
+//! Data-substrate benchmarks: corpus generation, task generation for all
+//! eight synthetic-GLUE families, batching, and MLM masking throughput.
+//! The data pipeline must never be the training bottleneck (steps cost
+//! milliseconds; batches must cost microseconds).
+
+use hadapt::data::{generate, make_batch, mlm_batch, Corpus, BatchIter, TASKS};
+use hadapt::util::bench::{report_throughput, Bench};
+use hadapt::util::Rng;
+
+fn main() {
+    let b = Bench::new(2, 8);
+
+    // corpus sentences
+    let s = b.run("data/corpus_sentences_x1000", || {
+        let mut c = Corpus::new(1);
+        let mut n = 0;
+        for _ in 0..1000 {
+            n += c.sentence().tokens.len();
+        }
+        n
+    });
+    report_throughput("data/corpus (sentences)", 1000.0, &s);
+
+    // task generation
+    for info in TASKS {
+        let s = b.run(&format!("data/gen/{}_x256", info.name), || {
+            generate(info, 7, "bench", 256)
+        });
+        report_throughput(&format!("data/gen/{} (examples)", info.name), 256.0, &s);
+    }
+
+    // batching
+    let ds = generate(TASKS[2], 7, "bench", 1024); // mnli: pair task
+    let idx: Vec<usize> = (0..16).collect();
+    let s = b.run("data/make_batch_16x32", || make_batch(&ds, &idx, 16, 32));
+    report_throughput("data/make_batch (seqs)", 16.0, &s);
+
+    // full epoch iteration
+    let s = b.run("data/epoch_iter_1024", || {
+        let mut rng = Rng::new(3);
+        BatchIter::new(&ds, &mut rng, 16, 32).count()
+    });
+    report_throughput("data/epoch_iter (batches)", (1024 / 16) as f64, &s);
+
+    // MLM masking
+    let s = b.run("data/mlm_batch_16x32", || {
+        let mut c = Corpus::new(5);
+        let mut r = Rng::new(6);
+        mlm_batch(&mut c, &mut r, 16, 32)
+    });
+    report_throughput("data/mlm_batch (seqs)", 16.0, &s);
+}

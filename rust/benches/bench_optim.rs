@@ -1,0 +1,45 @@
+//! Optimizer benchmarks: AdamW update throughput across tensor sizes (the
+//! Hadamard method updates a handful of H-sized vectors; full FT updates
+//! megabytes — the host-side cost asymmetry behind the paper's efficiency
+//! claim), plus gradient clipping.
+
+use hadapt::optim::{clip_global_norm, AdamW};
+use hadapt::util::bench::{report_throughput, Bench};
+use hadapt::util::Rng;
+
+fn main() {
+    let b = Bench::new(3, 12);
+    let mut rng = Rng::new(9);
+
+    for n in [128usize, 4096, 65_536, 1 << 20] {
+        let mut opt = AdamW::new(0.01);
+        let mut param: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let grad: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let s = b.run(&format!("optim/adamw_update_n{n}"), || {
+            opt.next_step();
+            opt.update("x.weight", &mut param, &grad, 1e-3);
+        });
+        report_throughput(&format!("optim/adamw n={n} (Mscalars)"), n as f64 / 1e6, &s);
+    }
+
+    // hadamard-sized working set: 2 vectors of 128 per layer x 4 layers
+    let mut opt = AdamW::new(0.01);
+    let mut vecs: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 128]).collect();
+    let grads: Vec<Vec<f32>> = (0..8).map(|_| vec![0.01f32; 128]).collect();
+    let s = b.run("optim/hadamard_full_update(8x128)", || {
+        opt.next_step();
+        for (i, (p, g)) in vecs.iter_mut().zip(&grads).enumerate() {
+            opt.update(&format!("l{i}.hadamard.weight"), p, g, 1e-3);
+        }
+    });
+    report_throughput("optim/hadamard_full_update (vectors)", 8.0, &s);
+
+    // clipping
+    let mut grads: Vec<Vec<f32>> = (0..50).map(|_| {
+        (0..4096).map(|_| rng.normal()).collect()
+    }).collect();
+    let s = b.run("optim/clip_global_norm_50x4096", || {
+        clip_global_norm(&mut grads, 1.0)
+    });
+    report_throughput("optim/clip (Mscalars)", 50.0 * 4096.0 / 1e6, &s);
+}

@@ -1,0 +1,53 @@
+//! Table 1 systems axis: gradient-probe cost. The paper's analysis reads
+//! back *every* gradient (the `full` group); the tuning method only reads
+//! its own group. This bench measures both, quantifying why gradient-group
+//! specialization matters.
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::model::{FreezeMask, ParamStore};
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest};
+use hadapt::train::Session;
+use hadapt::util::bench::Bench;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("make artifacts first");
+    let b = Bench::default();
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+    let model = "base";
+    let info = engine.manifest().model(model).unwrap().clone();
+
+    let ds = generate(task_info("mrpc").unwrap(), 1, "train", batch);
+    let idx: Vec<usize> = (0..batch).collect();
+    let bt = make_batch(&ds, &idx, batch, seq);
+    let cm = class_mask(2);
+
+    for group in ["full", "hadamard", "head"] {
+        let store = ParamStore::init(&info, 7);
+        let mask = FreezeMask::from_names(&info, &info.group(group).unwrap().to_vec());
+        let mut session = Session::new(
+            &engine,
+            &Manifest::train_name("cls", group, model),
+            store,
+            mask,
+            LrSchedule::constant(1e-4),
+        )
+        .unwrap();
+        let n_grads = engine
+            .manifest()
+            .artifact(&Manifest::train_name("cls", group, model))
+            .unwrap()
+            .grad_params()
+            .len();
+        let s = b.run(&format!("table1/grad_probe/{group}"), || {
+            session.probe_gradients(&bt, &cm).unwrap()
+        });
+        println!(
+            "bench {:<44} grads_read={} mean_ms={:.2}",
+            format!("table1/probe_cost/{group}"),
+            n_grads,
+            s.mean_ms()
+        );
+    }
+}

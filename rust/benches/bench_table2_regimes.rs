@@ -1,0 +1,62 @@
+//! Table 2 systems axis: training-step latency and throughput for the three
+//! regimes the paper compares — classifier probe, Hadamard adapter tuning,
+//! full fine-tuning. The paper's efficiency claim translates here into
+//! step-cost ordering: head < hadamard << full (backward + update +
+//! re-upload all scale with the trainable set).
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::model::{FreezeMask, ParamStore};
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest};
+use hadapt::train::Session;
+use hadapt::util::bench::{report_throughput, Bench};
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("make artifacts first");
+    let b = Bench::default();
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+    let model = "base";
+    let info = engine.manifest().model(model).unwrap().clone();
+
+    let ds = generate(task_info("sst2").unwrap(), 1, "train", batch);
+    let idx: Vec<usize> = (0..batch).collect();
+    let bt = make_batch(&ds, &idx, batch, seq);
+    let cm = class_mask(2);
+
+    let mut results = Vec::new();
+    for (regime, group) in [
+        ("classifier", "head"),
+        ("hadamard", "hadamard"),
+        ("full", "full"),
+    ] {
+        let store = ParamStore::init(&info, 7);
+        let mask = FreezeMask::from_names(&info, &info.group(group).unwrap().to_vec());
+        let mut session = Session::new(
+            &engine,
+            &Manifest::train_name("cls", group, model),
+            store,
+            mask,
+            LrSchedule::constant(1e-3),
+        )
+        .unwrap();
+        let trainable = session.trainable_scalars();
+        let s = b.run(&format!("table2/step/{regime}"), || {
+            session.step_cls(&bt, &cm).unwrap()
+        });
+        report_throughput(&format!("table2/step/{regime} (seqs)"), batch as f64, &s);
+        println!(
+            "bench {:<44} trainable={trainable}",
+            format!("table2/params/{regime}")
+        );
+        results.push((regime, s.mean_ms(), trainable));
+    }
+    let full_ms = results[2].1;
+    for (regime, ms, _) in &results {
+        println!(
+            "bench {:<44} step_cost_vs_full={:.2}x",
+            format!("table2/relative/{regime}"),
+            ms / full_ms
+        );
+    }
+}

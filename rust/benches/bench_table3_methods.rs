@@ -1,0 +1,50 @@
+//! Table 3 systems axis: per-step latency + update-bytes for every PEFT
+//! method under the identical harness. The paper's parameter table becomes
+//! a bytes-moved table: what each method re-uploads to the device per step.
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::methods::Method;
+use hadapt::model::ParamStore;
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest};
+use hadapt::train::Session;
+use hadapt::util::bench::Bench;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("make artifacts first");
+    let b = Bench::default();
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+    let model = "base";
+    let info = engine.manifest().model(model).unwrap().clone();
+
+    let ds = generate(task_info("sst2").unwrap(), 1, "train", batch);
+    let idx: Vec<usize> = (0..batch).collect();
+    let bt = make_batch(&ds, &idx, batch, seq);
+    let cm = class_mask(2);
+
+    for name in ["hadamard", "bitfit", "lora", "houlsby", "ia3", "lntuning"] {
+        let method = Method::by_name(name).unwrap();
+        let store = ParamStore::init(&info, 7);
+        let mask = method.main_mask(&info).unwrap();
+        let mut session = Session::new(
+            &engine,
+            &Manifest::train_name("cls", method.group, model),
+            store,
+            mask,
+            LrSchedule::constant(1e-3),
+        )
+        .unwrap();
+        let trainable = session.trainable_scalars();
+        let s = b.run(&format!("table3/step/{name}"), || {
+            session.step_cls(&bt, &cm).unwrap()
+        });
+        println!(
+            "bench {:<44} trainable={} update_bytes/step={} mean_ms={:.2}",
+            format!("table3/cost/{name}"),
+            trainable,
+            trainable * 4,
+            s.mean_ms()
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 4 systems axis: module-combo ablations share one gradient-group
+//! artifact; the freeze mask decides what updates. This bench verifies the
+//! design claim that masking is free — step cost is flat across combos
+//! while update bytes scale with the unfrozen set.
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::methods::Method;
+use hadapt::model::ParamStore;
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest};
+use hadapt::train::Session;
+use hadapt::util::bench::Bench;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("make artifacts first");
+    let b = Bench::default();
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+    let model = "base";
+    let info = engine.manifest().model(model).unwrap().clone();
+
+    let ds = generate(task_info("sst2").unwrap(), 1, "train", batch);
+    let idx: Vec<usize> = (0..batch).collect();
+    let bt = make_batch(&ds, &idx, batch, seq);
+    let cm = class_mask(2);
+
+    let mut times = Vec::new();
+    for combo in ["W", "B", "N", "B+N", "W+B", "W+B+N", "W+B+N+A"] {
+        let method = Method::hadamard_ablation(combo);
+        let store = ParamStore::init(&info, 7);
+        let mask = method.main_mask(&info).unwrap();
+        let mut session = Session::new(
+            &engine,
+            &Manifest::train_name("cls", method.group, model),
+            store,
+            mask,
+            LrSchedule::constant(1e-3),
+        )
+        .unwrap();
+        let trainable = session.trainable_scalars();
+        let s = b.run(&format!("table4/step/{combo}"), || {
+            session.step_cls(&bt, &cm).unwrap()
+        });
+        println!(
+            "bench {:<44} trainable={trainable}",
+            format!("table4/params/{combo}")
+        );
+        times.push(s.mean_ms());
+    }
+    let spread = times.iter().cloned().fold(f64::MIN, f64::max)
+        / times.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "bench {:<44} max/min_step_time={spread:.2}x (masking is ~free)",
+        "table4/flatness"
+    );
+}

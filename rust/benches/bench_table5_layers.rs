@@ -1,0 +1,56 @@
+//! Table 5 / Fig 4 systems axis: step latency + update bytes vs the number
+//! of unfrozen adapter layers. Update cost scales linearly with k while the
+//! executed graph stays constant — the systems counterpart of the paper's
+//! "redundant layers" finding (0.022% params at half depth).
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::methods::Method;
+use hadapt::model::ParamStore;
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest};
+use hadapt::train::Session;
+use hadapt::util::bench::Bench;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("make artifacts first");
+    let b = Bench::default();
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+
+    for model in ["base", "large"] {
+        let Ok(info) = engine.manifest().model(model) else { continue };
+        let info = info.clone();
+        let ds = generate(task_info("qnli").unwrap(), 1, "train", batch);
+        let idx: Vec<usize> = (0..batch).collect();
+        let bt = make_batch(&ds, &idx, batch, seq);
+        let cm = class_mask(2);
+
+        for k in 1..=info.layers {
+            if k != 1 && k != info.layers && k != info.layers / 2 {
+                continue;
+            }
+            let method = Method::hadamard_last_k(k);
+            let store = ParamStore::init(&info, 7);
+            let mask = method.main_mask(&info).unwrap();
+            let mut session = Session::new(
+                &engine,
+                &Manifest::train_name("cls", method.group, model),
+                store,
+                mask,
+                LrSchedule::constant(1e-3),
+            )
+            .unwrap();
+            let trainable = session.trainable_scalars();
+            let s = b.run(&format!("table5/step/{model}@k{k}"), || {
+                session.step_cls(&bt, &cm).unwrap()
+            });
+            println!(
+                "bench {:<44} trainable={} update_bytes={} mean_ms={:.2}",
+                format!("table5/cost/{model}@k{k}"),
+                trainable,
+                trainable * 4,
+                s.mean_ms()
+            );
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Table 1: gradient and unit-gradient ranking of parameter modules in the
+//! first and last training epoch.
+//!
+//! The paper sums |grad| per named parameter over an epoch, ranks the top
+//! five, and separately ranks "unit gradients" (|grad| / #params) — the
+//! analysis that motivates training the classifier + normalization modules.
+
+use std::collections::HashMap;
+
+/// Accumulated gradient statistics over an epoch.
+#[derive(Debug, Clone, Default)]
+pub struct GradAccum {
+    /// name -> (sum |grad|, numel)
+    totals: HashMap<String, (f64, usize)>,
+}
+
+impl GradAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one batch's per-parameter L1 norms.
+    pub fn add(&mut self, norms: &[(String, f64)], numels: &HashMap<String, usize>) {
+        for (name, l1) in norms {
+            let e = self
+                .totals
+                .entry(name.clone())
+                .or_insert((0.0, *numels.get(name).unwrap_or(&1)));
+            e.0 += l1;
+        }
+    }
+
+    /// Top-k by raw gradient mass.
+    pub fn top_by_gradient(&self, k: usize) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .totals
+            .iter()
+            .map(|(n, (g, _))| (n.clone(), *g))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.truncate(k);
+        v
+    }
+
+    /// Top-k by unit gradient (gradient mass / parameter count).
+    pub fn top_by_unit_gradient(&self, k: usize) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .totals
+            .iter()
+            .map(|(n, (g, c))| (n.clone(), *g / (*c).max(1) as f64))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.truncate(k);
+        v
+    }
+
+    /// Fraction of total gradient mass captured by names matching `pred`
+    /// (used to verify the paper's claim that classifier/embedding/
+    /// intermediate dominate raw gradients).
+    pub fn mass_fraction(&self, pred: impl Fn(&str) -> bool) -> f64 {
+        let total: f64 = self.totals.values().map(|(g, _)| g).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let hit: f64 = self
+            .totals
+            .iter()
+            .filter(|(n, _)| pred(n))
+            .map(|(_, (g, _))| g)
+            .sum();
+        hit / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numels() -> HashMap<String, usize> {
+        [
+            ("big.weight".to_string(), 10_000usize),
+            ("small.bias".to_string(), 10usize),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    #[test]
+    fn rankings_differ_between_gradient_and_unit() {
+        let mut acc = GradAccum::new();
+        acc.add(
+            &[
+                ("big.weight".to_string(), 100.0),
+                ("small.bias".to_string(), 50.0),
+            ],
+            &numels(),
+        );
+        // raw: big wins
+        assert_eq!(acc.top_by_gradient(1)[0].0, "big.weight");
+        // unit: small wins (50/10 >> 100/10000)
+        assert_eq!(acc.top_by_unit_gradient(1)[0].0, "small.bias");
+    }
+
+    #[test]
+    fn accumulates_over_batches() {
+        let mut acc = GradAccum::new();
+        for _ in 0..3 {
+            acc.add(&[("big.weight".to_string(), 1.0)], &numels());
+        }
+        assert!((acc.top_by_gradient(1)[0].1 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mass_fraction_partition() {
+        let mut acc = GradAccum::new();
+        acc.add(
+            &[
+                ("big.weight".to_string(), 75.0),
+                ("small.bias".to_string(), 25.0),
+            ],
+            &numels(),
+        );
+        let f = acc.mass_fraction(|n| n.contains("big"));
+        assert!((f - 0.75).abs() < 1e-12);
+        let g = acc.mass_fraction(|n| n.contains("small"));
+        assert!((f + g - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,107 @@
+//! Analysis module: the paper's empirical studies (Sec. 2) and exploratory
+//! analysis (Sec. 5), computed from evaluation probes, gradient probes, and
+//! trained adapter vectors.
+
+pub mod gradients;
+pub mod similarity;
+
+use crate::report::BoxStats;
+
+/// Fig. 1: per-layer distribution of the self-attention output 2-norms
+/// before/after fine-tuning, plus the relative change Δ (paper Eq. 2).
+#[derive(Debug, Clone)]
+pub struct NormShift {
+    pub layer: usize,
+    pub before: BoxStats,
+    pub after: BoxStats,
+    /// Δ = (||A_a|| - ||A_b||) / ||A_b||, distribution over examples.
+    pub delta: BoxStats,
+}
+
+/// Compute Fig. 1 statistics from per-layer norm samples.
+/// `before[l]` / `after[l]` are per-example spectral norms at layer `l`
+/// (paired: same examples, pre- and post-fine-tuning parameters).
+pub fn norm_shift(before: &[Vec<f32>], after: &[Vec<f32>]) -> Vec<NormShift> {
+    assert_eq!(before.len(), after.len());
+    before
+        .iter()
+        .zip(after)
+        .enumerate()
+        .map(|(layer, (b, a))| {
+            assert_eq!(b.len(), a.len());
+            let delta: Vec<f32> = b
+                .iter()
+                .zip(a)
+                .map(|(&x, &y)| if x.abs() > 1e-9 { (y - x) / x } else { 0.0 })
+                .collect();
+            NormShift {
+                layer,
+                before: BoxStats::from(b),
+                after: BoxStats::from(a),
+                delta: BoxStats::from(&delta),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 2: characteristic values (mean adapter output per example, averaged
+/// over hidden and sequence — paper Eq. 3-4) per layer for one setting.
+#[derive(Debug, Clone)]
+pub struct Characteristic {
+    pub layer: usize,
+    pub dist: BoxStats,
+}
+
+pub fn characteristics(means: &[Vec<f32>]) -> Vec<Characteristic> {
+    means
+        .iter()
+        .enumerate()
+        .map(|(layer, m)| Characteristic { layer, dist: BoxStats::from(m) })
+        .collect()
+}
+
+/// Cosine similarity between two vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_shift_signs() {
+        let before = vec![vec![1.0f32, 2.0, 4.0]];
+        let after = vec![vec![2.0f32, 4.0, 8.0]];
+        let s = norm_shift(&before, &after);
+        assert_eq!(s.len(), 1);
+        assert!((s[0].delta.mean - 1.0).abs() < 1e-9); // doubled everywhere
+        assert!(s[0].after.median > s[0].before.median);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 2.0], &[-1.0, -2.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn characteristics_shape() {
+        let c = characteristics(&[vec![0.0, 1.0], vec![2.0, 4.0]]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[1].dist.mean, 3.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Fig. 5: exploratory analysis of trained Hadamard adapters across tasks —
+//! per-layer weight/bias distributions and cross-task cosine-similarity
+//! heatmaps (the paper's evidence that adapter weights are reusable across
+//! tasks while biases carry the task identity).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+use crate::report::BoxStats;
+
+use super::cosine;
+
+/// Extracted adapter vectors from a tuned store.
+#[derive(Debug, Clone)]
+pub struct AdapterVectors {
+    pub task: String,
+    /// per-layer hadamard.weight.
+    pub weights: Vec<Vec<f32>>,
+    /// per-layer hadamard.bias.
+    pub biases: Vec<Vec<f32>>,
+    /// per-layer output LayerNorm weight / bias (the Fig 5 b-panels).
+    pub norm_weights: Vec<Vec<f32>>,
+    pub norm_biases: Vec<Vec<f32>>,
+}
+
+/// Pull the adapter + norm vectors for all layers out of a tuned store.
+pub fn extract(task: &str, store: &ParamStore, layers: usize) -> Result<AdapterVectors> {
+    let grab = |pat: &str| -> Result<Vec<Vec<f32>>> {
+        (0..layers)
+            .map(|l| {
+                let name = format!("encoder.layer.{l}.{pat}");
+                Ok(store.get(&name)?.data.clone())
+            })
+            .collect()
+    };
+    Ok(AdapterVectors {
+        task: task.to_string(),
+        weights: grab("hadamard.weight")?,
+        biases: grab("hadamard.bias")?,
+        norm_weights: grab("output.LayerNorm.weight")?,
+        norm_biases: grab("output.LayerNorm.bias")?,
+    })
+}
+
+/// Per-layer distribution of a vector family pooled across tasks
+/// (Fig 5 a1/a2/b1..b4: one box per layer over all tasks' values).
+pub fn layer_distributions(
+    all: &[AdapterVectors],
+    select: impl Fn(&AdapterVectors) -> &Vec<Vec<f32>>,
+) -> Vec<BoxStats> {
+    assert!(!all.is_empty());
+    let layers = select(&all[0]).len();
+    (0..layers)
+        .map(|l| {
+            let pooled: Vec<f32> = all
+                .iter()
+                .flat_map(|av| select(av)[l].iter().copied())
+                .collect();
+            BoxStats::from(&pooled)
+        })
+        .collect()
+}
+
+/// Cross-task cosine-similarity matrix at one layer (or averaged).
+#[derive(Debug, Clone)]
+pub struct SimMatrix {
+    pub tasks: Vec<String>,
+    /// row-major [n x n].
+    pub values: Vec<f64>,
+}
+
+impl SimMatrix {
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.values[i * self.tasks.len() + j]
+    }
+
+    /// Mean of off-diagonal entries (the paper's headline: ~1.0 for
+    /// weights, much lower for biases).
+    pub fn off_diagonal_mean(&self) -> f64 {
+        let n = self.tasks.len();
+        if n < 2 {
+            return 1.0;
+        }
+        let mut sum = 0.0;
+        let mut count = 0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    sum += self.get(i, j);
+                    count += 1;
+                }
+            }
+        }
+        sum / count as f64
+    }
+}
+
+/// Similarity of one vector family at one layer across tasks.
+pub fn similarity_at_layer(
+    all: &[AdapterVectors],
+    layer: usize,
+    select: impl Fn(&AdapterVectors) -> &Vec<Vec<f32>>,
+) -> SimMatrix {
+    let n = all.len();
+    let mut values = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            values[i * n + j] = cosine(&select(&all[i])[layer], &select(&all[j])[layer]);
+        }
+    }
+    SimMatrix {
+        tasks: all.iter().map(|a| a.task.clone()).collect(),
+        values,
+    }
+}
+
+/// Layer-averaged similarity matrix.
+pub fn similarity_avg(
+    all: &[AdapterVectors],
+    select: impl Fn(&AdapterVectors) -> &Vec<Vec<f32>> + Copy,
+) -> SimMatrix {
+    let layers = select(&all[0]).len();
+    let n = all.len();
+    let mut acc = vec![0.0; n * n];
+    for l in 0..layers {
+        let m = similarity_at_layer(all, l, select);
+        for (a, v) in acc.iter_mut().zip(&m.values) {
+            *a += v / layers as f64;
+        }
+    }
+    SimMatrix {
+        tasks: all.iter().map(|a| a.task.clone()).collect(),
+        values: acc,
+    }
+}
+
+/// Deviation-from-identity summaries (how far w strays from 1, b from 0) —
+/// used by the Fig 5 "vary around 1.0 / 0.0" observation.
+pub fn identity_deviation(av: &AdapterVectors) -> HashMap<&'static str, f64> {
+    let dev = |vs: &Vec<Vec<f32>>, center: f32| -> f64 {
+        let all: Vec<f32> = vs.iter().flatten().map(|&x| x - center).collect();
+        (all.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / all.len() as f64).sqrt()
+    };
+    let mut m = HashMap::new();
+    m.insert("weight_rms_dev_from_1", dev(&av.weights, 1.0));
+    m.insert("bias_rms_dev_from_0", dev(&av.biases, 0.0));
+    m.insert("norm_weight_rms_dev_from_1", dev(&av.norm_weights, 1.0));
+    m.insert("norm_bias_rms_dev_from_0", dev(&av.norm_biases, 0.0));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn av(task: &str, w: Vec<f32>, b: Vec<f32>) -> AdapterVectors {
+        AdapterVectors {
+            task: task.into(),
+            weights: vec![w.clone(), w],
+            biases: vec![b.clone(), b],
+            norm_weights: vec![vec![1.0; 4]; 2],
+            norm_biases: vec![vec![0.0; 4]; 2],
+        }
+    }
+
+    #[test]
+    fn identical_weights_give_unit_similarity() {
+        let a = av("t1", vec![1.0, 1.1, 0.9, 1.0], vec![0.1, 0.0, -0.1, 0.0]);
+        let b = av("t2", vec![1.0, 1.1, 0.9, 1.0], vec![-0.1, 0.2, 0.1, 0.0]);
+        let m = similarity_at_layer(&[a.clone(), b.clone()], 0, |x| &x.weights);
+        assert!((m.get(0, 1) - 1.0).abs() < 1e-9);
+        let mb = similarity_at_layer(&[a, b], 0, |x| &x.biases);
+        assert!(mb.get(0, 1) < 0.9); // biases diverge
+    }
+
+    #[test]
+    fn off_diagonal_mean_ignores_diagonal() {
+        let a = av("t1", vec![1.0, 0.0], vec![1.0, 0.0]);
+        let b = av("t2", vec![0.0, 1.0], vec![0.0, 1.0]);
+        let m = similarity_at_layer(&[a, b], 0, |x| &x.weights);
+        assert!((m.off_diagonal_mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_distributions_pool_tasks() {
+        let a = av("t1", vec![1.0; 4], vec![0.0; 4]);
+        let b = av("t2", vec![2.0; 4], vec![0.0; 4]);
+        let d = layer_distributions(&[a, b], |x| &x.weights);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].min, 1.0);
+        assert_eq!(d[0].max, 2.0);
+        assert_eq!(d[0].mean, 1.5);
+    }
+
+    #[test]
+    fn identity_deviation_zero_at_init() {
+        let a = av("t", vec![1.0; 4], vec![0.0; 4]);
+        let d = identity_deviation(&a);
+        assert_eq!(d["weight_rms_dev_from_1"], 0.0);
+        assert_eq!(d["bias_rms_dev_from_0"], 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Configuration system: workspace paths + experiment budgets, loadable
+//! from a JSON file with CLI `key=value` overrides.
+//!
+//! All experiment drivers consume a `Config`, so one `--quick` flag or one
+//! `hadapt.json` swaps the whole suite between smoke-scale and full-scale.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::train::{PretrainOpts, TuneOpts};
+use crate::util::json::{self, Json};
+
+/// Global workspace configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub checkpoints_dir: PathBuf,
+    pub results_dir: PathBuf,
+    /// models to sweep in experiments ("base", "large").
+    pub models: Vec<String>,
+    /// master seed.
+    pub seed: u64,
+    /// pre-training steps per backbone.
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f32,
+    /// two-stage budgets.
+    pub stage1_steps: usize,
+    pub main_steps: usize,
+    /// quick mode: tiny budgets for smoke-testing the whole suite.
+    pub quick: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: "artifacts".into(),
+            checkpoints_dir: "checkpoints".into(),
+            results_dir: "results".into(),
+            models: vec!["base".into()],
+            seed: 1234,
+            pretrain_steps: 1500,
+            pretrain_lr: 1e-3,
+            stage1_steps: 120,
+            main_steps: 140,
+            quick: false,
+        }
+    }
+}
+
+impl Config {
+    /// Load from JSON file if it exists, else defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let mut cfg = Config::default();
+        if path.as_ref().exists() {
+            let text = std::fs::read_to_string(path)?;
+            cfg.apply_json(&json::parse(&text)?)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.opt("artifacts_dir") {
+            self.artifacts_dir = v.as_str()?.into();
+        }
+        if let Some(v) = j.opt("checkpoints_dir") {
+            self.checkpoints_dir = v.as_str()?.into();
+        }
+        if let Some(v) = j.opt("results_dir") {
+            self.results_dir = v.as_str()?.into();
+        }
+        if let Some(v) = j.opt("models") {
+            self.models = v.str_vec()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            self.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("pretrain_steps") {
+            self.pretrain_steps = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("pretrain_lr") {
+            self.pretrain_lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.opt("stage1_steps") {
+            self.stage1_steps = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("main_steps") {
+            self.main_steps = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("quick") {
+            self.quick = v.as_bool()?;
+        }
+        Ok(())
+    }
+
+    /// Apply a CLI `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "checkpoints_dir" => self.checkpoints_dir = value.into(),
+            "results_dir" => self.results_dir = value.into(),
+            "models" => {
+                self.models = value.split(',').map(String::from).collect()
+            }
+            "seed" => self.seed = value.parse()?,
+            "pretrain_steps" => self.pretrain_steps = value.parse()?,
+            "pretrain_lr" => self.pretrain_lr = value.parse()?,
+            "stage1_steps" => self.stage1_steps = value.parse()?,
+            "main_steps" => self.main_steps = value.parse()?,
+            "quick" => self.quick = value.parse()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Effective pre-training options.
+    pub fn pretrain_opts(&self) -> PretrainOpts {
+        PretrainOpts {
+            steps: if self.quick { 60 } else { self.pretrain_steps },
+            lr: self.pretrain_lr,
+            warmup: 50,
+            seed: self.seed,
+            log_every: 100,
+        }
+    }
+
+    /// Effective tuning options.
+    pub fn tune_opts(&self) -> TuneOpts {
+        let mut t = TuneOpts {
+            stage1_steps: self.stage1_steps,
+            main_steps: self.main_steps,
+            ..Default::default()
+        };
+        if self.quick {
+            t.stage1_steps = 20;
+            t.main_steps = 40;
+        }
+        t.train.seed = self.seed;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.models, vec!["base"]);
+        assert!(!c.quick);
+        assert_eq!(c.tune_opts().main_steps, 140);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::default();
+        c.set("seed", "9").unwrap();
+        c.set("models", "tiny,base").unwrap();
+        c.set("quick", "true").unwrap();
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.models, vec!["tiny", "base"]);
+        assert_eq!(c.tune_opts().main_steps, 40);
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Config::default();
+        let j = json::parse(r#"{"seed": 5, "main_steps": 77, "models": ["base"]}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.seed, 5);
+        assert_eq!(c.main_steps, 77);
+        assert_eq!(c.models, vec!["base"]);
+    }
+}

@@ -1,0 +1,347 @@
+//! Coordinator: the experiment orchestration layer.
+//!
+//! An experiment is a set of (model, task, method) runs. The coordinator
+//! owns the engine + pre-trained backbones, schedules the runs, persists
+//! every completed run to a JSON cache under `results/runs/`, and resumes
+//! by skipping cached runs — re-running a table after an interruption only
+//! costs the missing cells.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::data::{generate, task_info, Dataset};
+use crate::methods::Method;
+use crate::model::ParamStore;
+use crate::runtime::Engine;
+use crate::train::{load_or_pretrain, tune, TuneOpts, TuneResult};
+use crate::util::json::Json;
+
+/// One scheduled run.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub task: String,
+    pub method: String,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    /// Stable cache id.
+    pub fn id(&self, opts: &TuneOpts) -> String {
+        format!(
+            "{}_{}_{}_s{}_t{}x{}",
+            self.model,
+            self.task,
+            self.method.replace(['[', ']', '+', '^', '@'], "-"),
+            self.seed,
+            opts.stage1_steps,
+            opts.main_steps
+        )
+    }
+}
+
+/// A completed run's persisted summary.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub spec: RunSpec,
+    pub score: f64,
+    pub trainable_scalars: usize,
+    pub adapter_scalars: usize,
+    pub param_fraction: f64,
+    pub wall_secs: f64,
+    pub stage1_final_loss: Option<f64>,
+    pub main_final_loss: Option<f64>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", Json::str(&self.spec.model))
+            .set("task", Json::str(&self.spec.task))
+            .set("method", Json::str(&self.spec.method))
+            .set("seed", Json::num(self.spec.seed as f64))
+            .set("score", Json::num(self.score))
+            .set("trainable_scalars", Json::num(self.trainable_scalars as f64))
+            .set("adapter_scalars", Json::num(self.adapter_scalars as f64))
+            .set("param_fraction", Json::num(self.param_fraction))
+            .set("wall_secs", Json::num(self.wall_secs));
+        if let Some(l) = self.stage1_final_loss {
+            j.set("stage1_final_loss", Json::num(l));
+        }
+        if let Some(l) = self.main_final_loss {
+            j.set("main_final_loss", Json::num(l));
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        Ok(RunRecord {
+            spec: RunSpec {
+                model: j.get("model")?.as_str()?.into(),
+                task: j.get("task")?.as_str()?.into(),
+                method: j.get("method")?.as_str()?.into(),
+                seed: j.get("seed")?.as_f64()? as u64,
+            },
+            score: j.get("score")?.as_f64()?,
+            trainable_scalars: j.get("trainable_scalars")?.as_usize()?,
+            adapter_scalars: j.get("adapter_scalars")?.as_usize()?,
+            param_fraction: j.get("param_fraction")?.as_f64()?,
+            wall_secs: j.get("wall_secs")?.as_f64()?,
+            stage1_final_loss: j
+                .opt("stage1_final_loss")
+                .and_then(|v| v.as_f64().ok()),
+            main_final_loss: j.opt("main_final_loss").and_then(|v| v.as_f64().ok()),
+        })
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub engine: Engine,
+    pub config: Config,
+    backbones: HashMap<(String, u64), ParamStore>,
+    datasets: HashMap<(String, String), Dataset>,
+}
+
+impl Coordinator {
+    pub fn new(config: Config) -> Result<Self> {
+        let engine = Engine::new(&config.artifacts_dir)?;
+        Ok(Coordinator {
+            engine,
+            config,
+            backbones: HashMap::new(),
+            datasets: HashMap::new(),
+        })
+    }
+
+    fn runs_dir(&self) -> PathBuf {
+        self.config.results_dir.join("runs")
+    }
+
+    /// Pre-trained backbone for a model (cached in memory + on disk).
+    pub fn backbone(&mut self, model: &str) -> Result<&ParamStore> {
+        let key = (model.to_string(), self.config.seed);
+        if !self.backbones.contains_key(&key) {
+            let opts = self.config.pretrain_opts();
+            let store = load_or_pretrain(
+                &self.engine,
+                model,
+                &self.config.checkpoints_dir,
+                &opts,
+            )?;
+            self.backbones.insert(key.clone(), store);
+        }
+        Ok(&self.backbones[&key])
+    }
+
+    /// Dataset split (cached).
+    pub fn dataset(&mut self, task: &str, split: &str) -> Result<&Dataset> {
+        let key = (task.to_string(), split.to_string());
+        if !self.datasets.contains_key(&key) {
+            let info = task_info(task)
+                .with_context(|| format!("unknown task '{task}'"))?;
+            let size = if split == "train" {
+                if self.config.quick { 256 } else { info.train_size }
+            } else if self.config.quick {
+                128
+            } else {
+                info.dev_size
+            };
+            let ds = generate(info, self.config.seed, split, size);
+            self.datasets.insert(key.clone(), ds);
+        }
+        Ok(&self.datasets[&key])
+    }
+
+    /// Fetch an already-cached backbone without triggering pre-training.
+    pub fn backbones_get(&self, model: &str) -> Option<&ParamStore> {
+        self.backbones.get(&(model.to_string(), self.config.seed))
+    }
+
+    /// Fetch an already-cached dataset split.
+    pub fn datasets_get(&self, task: &str, split: &str) -> Option<&Dataset> {
+        self.datasets.get(&(task.to_string(), split.to_string()))
+    }
+
+    /// Run (or fetch from cache) one (model, task, method) cell.
+    pub fn run(&mut self, spec: &RunSpec) -> Result<RunRecord> {
+        let opts = {
+            let mut t = self.config.tune_opts();
+            t.train.seed = spec.seed;
+            t
+        };
+        let id = spec.id(&opts);
+        let cache_path = self.runs_dir().join(format!("{id}.json"));
+        if cache_path.exists() {
+            let j = crate::util::json::parse(&std::fs::read_to_string(&cache_path)?)?;
+            return RunRecord::from_json(&j);
+        }
+        let (rec, result) = self.run_uncached(spec, &opts)?;
+        std::fs::create_dir_all(self.runs_dir())?;
+        result.store.save(self.runs_dir().join(format!("{id}.ckpt")))?;
+        std::fs::write(&cache_path, rec.to_json().render_pretty())?;
+        Ok(rec)
+    }
+
+    /// Like [`Coordinator::run`], but also returns the tuned parameter
+    /// store (loaded from the run cache when available) — what the
+    /// analysis drivers (Fig 1/2/5) need.
+    pub fn run_with_store(&mut self, spec: &RunSpec) -> Result<(RunRecord, ParamStore)> {
+        let opts = {
+            let mut t = self.config.tune_opts();
+            t.train.seed = spec.seed;
+            t
+        };
+        let id = spec.id(&opts);
+        let ckpt_path = self.runs_dir().join(format!("{id}.ckpt"));
+        let rec = self.run(spec)?;
+        if ckpt_path.exists() {
+            let store = ParamStore::load(&ckpt_path)?;
+            store.check_against(self.engine.manifest().model(&spec.model)?)?;
+            return Ok((rec, store));
+        }
+        // cache predates store persistence: re-run once to materialize it
+        let (rec, result) = self.run_uncached(spec, &opts)?;
+        result.store.save(&ckpt_path)?;
+        Ok((rec, result.store))
+    }
+
+    /// Run without the cache, returning the full TuneResult (analysis
+    /// drivers need the tuned store).
+    pub fn run_uncached(
+        &mut self,
+        spec: &RunSpec,
+        opts: &TuneOpts,
+    ) -> Result<(RunRecord, TuneResult)> {
+        let method = Method::by_name(&spec.method)?;
+        self.backbone(&spec.model)?;
+        self.dataset(&spec.task, "train")?;
+        self.dataset(&spec.task, "dev")?;
+        let backbone = &self.backbones[&(spec.model.clone(), self.config.seed)];
+        let train_ds = &self.datasets[&(spec.task.clone(), "train".to_string())];
+        let dev_ds = &self.datasets[&(spec.task.clone(), "dev".to_string())];
+
+        let t0 = Instant::now();
+        let result = tune(
+            &self.engine,
+            &spec.model,
+            backbone,
+            train_ds,
+            dev_ds,
+            &method,
+            opts,
+        )?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  run {}/{}/{}: score {:.1} ({:.1}s, {} trainable)",
+            spec.model, spec.task, spec.method, result.score, wall,
+            result.trainable_scalars
+        );
+        let rec = RunRecord {
+            spec: spec.clone(),
+            score: result.score,
+            trainable_scalars: result.trainable_scalars,
+            adapter_scalars: result.adapter_scalars,
+            param_fraction: result.param_fraction,
+            wall_secs: wall,
+            stage1_final_loss: result.stage1_losses.last().map(|&x| x as f64),
+            main_final_loss: result.main_losses.last().map(|&x| x as f64),
+        };
+        Ok((rec, result))
+    }
+
+    /// Run a whole grid, returning records keyed (model, task, method).
+    pub fn run_grid(
+        &mut self,
+        models: &[String],
+        tasks: &[&str],
+        methods: &[&str],
+    ) -> Result<Vec<RunRecord>> {
+        let mut out = Vec::new();
+        let total = models.len() * tasks.len() * methods.len();
+        let mut done = 0;
+        for model in models {
+            for task in tasks {
+                for method in methods {
+                    done += 1;
+                    println!("[{done}/{total}] {model}/{task}/{method}");
+                    out.push(self.run(&RunSpec {
+                        model: model.clone(),
+                        task: task.to_string(),
+                        method: method.to_string(),
+                        seed: self.config.seed,
+                    })?);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Index run records for table assembly.
+pub fn index_records<'a>(
+    recs: &'a [RunRecord],
+) -> HashMap<(String, String, String), &'a RunRecord> {
+    recs.iter()
+        .map(|r| {
+            (
+                (
+                    r.spec.model.clone(),
+                    r.spec.task.clone(),
+                    r.spec.method.clone(),
+                ),
+                r,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_roundtrip() {
+        let rec = RunRecord {
+            spec: RunSpec {
+                model: "base".into(),
+                task: "sst2".into(),
+                method: "hadamard".into(),
+                seed: 7,
+            },
+            score: 91.25,
+            trainable_scalars: 1234,
+            adapter_scalars: 1000,
+            param_fraction: 0.00033,
+            wall_secs: 12.5,
+            stage1_final_loss: Some(0.4),
+            main_final_loss: Some(0.2),
+        };
+        let j = rec.to_json();
+        let back = RunRecord::from_json(&j).unwrap();
+        assert_eq!(back.spec.model, "base");
+        assert_eq!(back.score, 91.25);
+        assert_eq!(back.adapter_scalars, 1000);
+        assert_eq!(back.stage1_final_loss, Some(0.4));
+    }
+
+    #[test]
+    fn run_id_stable_and_distinct() {
+        let opts = TuneOpts::default();
+        let a = RunSpec {
+            model: "base".into(),
+            task: "sst2".into(),
+            method: "hadamard".into(),
+            seed: 1,
+        };
+        let b = RunSpec { method: "hadamard:B+N".into(), ..a.clone() };
+        assert_eq!(a.id(&opts), a.id(&opts));
+        assert_ne!(a.id(&opts), b.id(&opts));
+        // ids are filesystem-safe
+        assert!(!b.id(&opts).contains('+'));
+    }
+}

@@ -1,0 +1,235 @@
+//! Batcher: examples -> the fixed-shape host tensors the artifacts take.
+//!
+//! Encoding follows BERT: `[CLS] a [SEP]` or `[CLS] a [SEP] b [SEP]`,
+//! truncated pair-proportionally to `seq_len`, token_type 0/1 per segment,
+//! attention mask 1 on real tokens. Classification labels are one-hot over
+//! the global 3-class head with a per-task class mask (see the L2 masked CE).
+
+use crate::util::Rng;
+
+use super::tasks::{Dataset, Example, Label};
+use super::vocab;
+
+/// A classification/regression batch in host form.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub size: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    /// one-hot [B, 3] for classification tasks.
+    pub labels_onehot: Vec<f32>,
+    /// f32 [B] for regression tasks.
+    pub labels_f32: Vec<f32>,
+    /// integer labels (for metrics).
+    pub labels: Vec<usize>,
+    /// number of real (non-repeated) examples in the batch.
+    pub real: usize,
+}
+
+/// Encode one example into row `b` of the batch buffers.
+fn encode(
+    e: &Example,
+    seq: usize,
+    tokens: &mut [i32],
+    type_ids: &mut [i32],
+    attn: &mut [f32],
+) {
+    let b_len = e.seq_b.as_ref().map_or(0, |b| b.len());
+    // budget: CLS + a + SEP (+ b + SEP)
+    let specials = if b_len > 0 { 3 } else { 2 };
+    let avail = seq - specials;
+    let (a_keep, b_keep) = if b_len == 0 {
+        (e.seq_a.len().min(avail), 0)
+    } else {
+        // proportional truncation
+        let total = e.seq_a.len() + b_len;
+        if total <= avail {
+            (e.seq_a.len(), b_len)
+        } else {
+            let a_k = (avail * e.seq_a.len() / total).max(1);
+            (a_k, avail - a_k)
+        }
+    };
+    let mut pos = 0;
+    tokens[pos] = vocab::CLS;
+    type_ids[pos] = 0;
+    pos += 1;
+    for &t in &e.seq_a[..a_keep] {
+        tokens[pos] = t;
+        type_ids[pos] = 0;
+        pos += 1;
+    }
+    tokens[pos] = vocab::SEP;
+    type_ids[pos] = 0;
+    pos += 1;
+    if let Some(bseq) = &e.seq_b {
+        for &t in &bseq[..b_keep] {
+            tokens[pos] = t;
+            type_ids[pos] = 1;
+            pos += 1;
+        }
+        tokens[pos] = vocab::SEP;
+        type_ids[pos] = 1;
+        pos += 1;
+    }
+    for p in 0..pos {
+        attn[p] = 1.0;
+    }
+    for p in pos..seq {
+        tokens[p] = vocab::PAD;
+        type_ids[p] = 0;
+        attn[p] = 0.0;
+    }
+}
+
+/// Build a batch from `examples[idx]` for the given indices; if fewer than
+/// `batch` indices are given, the last example is repeated (its rows count
+/// toward padding, not metrics — `real` records the cutoff).
+pub fn make_batch(ds: &Dataset, idx: &[usize], batch: usize, seq: usize) -> Batch {
+    assert!(!idx.is_empty());
+    let mut out = Batch {
+        size: batch,
+        seq,
+        tokens: vec![0; batch * seq],
+        type_ids: vec![0; batch * seq],
+        attn_mask: vec![0.0; batch * seq],
+        labels_onehot: vec![0.0; batch * 3],
+        labels_f32: vec![0.0; batch],
+        labels: vec![0; batch],
+        real: idx.len().min(batch),
+    };
+    for b in 0..batch {
+        let e = &ds.examples[idx[b.min(idx.len() - 1)]];
+        encode(
+            e,
+            seq,
+            &mut out.tokens[b * seq..(b + 1) * seq],
+            &mut out.type_ids[b * seq..(b + 1) * seq],
+            &mut out.attn_mask[b * seq..(b + 1) * seq],
+        );
+        match e.label {
+            Label::Class(c) => {
+                out.labels_onehot[b * 3 + c] = 1.0;
+                out.labels[b] = c;
+            }
+            Label::Score(s) => {
+                out.labels_f32[b] = s;
+                // regression tasks keep onehot zero
+            }
+        }
+    }
+    out
+}
+
+/// Class mask for a task ([1,1,0] for 2-class, [1,1,1] for 3-class).
+pub fn class_mask(classes: usize) -> Vec<f32> {
+    (0..3).map(|c| if c < classes { 1.0 } else { 0.0 }).collect()
+}
+
+/// Epoch iterator: shuffled full batches over a dataset.
+pub struct BatchIter<'a> {
+    ds: &'a Dataset,
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    seq: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(ds: &'a Dataset, rng: &mut Rng, batch: usize, seq: usize) -> Self {
+        let mut order: Vec<usize> = (0..ds.examples.len()).collect();
+        rng.shuffle(&mut order);
+        BatchIter { ds, order, cursor: 0, batch, seq }
+    }
+
+    /// Sequential (unshuffled) iteration for evaluation.
+    pub fn sequential(ds: &'a Dataset, batch: usize, seq: usize) -> Self {
+        let order: Vec<usize> = (0..ds.examples.len()).collect();
+        BatchIter { ds, order, cursor: 0, batch, seq }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.cursor >= self.order.len() {
+            return None;
+        }
+        let end = (self.cursor + self.batch).min(self.order.len());
+        let idx = &self.order[self.cursor..end];
+        self.cursor = end;
+        Some(make_batch(self.ds, idx, self.batch, self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{generate, task_info};
+
+    #[test]
+    fn single_sentence_layout() {
+        let ds = generate(task_info("sst2").unwrap(), 1, "train", 8);
+        let b = make_batch(&ds, &[0, 1, 2, 3], 4, 32);
+        assert_eq!(b.tokens[0], vocab::CLS);
+        let row = &b.tokens[0..32];
+        assert!(row.contains(&vocab::SEP));
+        // single sentence => all type ids 0
+        assert!(b.type_ids[0..32].iter().all(|&t| t == 0));
+        // attention mask matches non-pad prefix
+        for p in 0..32 {
+            let is_real = row[p] != vocab::PAD;
+            assert_eq!(b.attn_mask[p] > 0.5, is_real, "pos {p}");
+        }
+    }
+
+    #[test]
+    fn pair_layout_has_segment_one() {
+        let ds = generate(task_info("mnli").unwrap(), 1, "train", 8);
+        let b = make_batch(&ds, &[0], 1, 32);
+        assert!(b.type_ids[0..32].iter().any(|&t| t == 1));
+        // after the 2nd segment only PAD with type 0 mask 0
+        let seps: Vec<usize> =
+            (0..32).filter(|&p| b.tokens[p] == vocab::SEP).collect();
+        assert!(seps.len() >= 2);
+    }
+
+    #[test]
+    fn truncation_never_overflows() {
+        let ds = generate(task_info("qqp").unwrap(), 2, "train", 64);
+        for i in 0..64 {
+            let b = make_batch(&ds, &[i], 1, 16);
+            assert_eq!(b.tokens.len(), 16);
+            assert_eq!(b.attn_mask.iter().filter(|&&m| m > 0.0).count()
+                       <= 16, true);
+        }
+    }
+
+    #[test]
+    fn onehot_and_class_mask() {
+        let ds = generate(task_info("mnli").unwrap(), 3, "train", 8);
+        let b = make_batch(&ds, &[0, 1, 2, 3], 4, 32);
+        for row in 0..4 {
+            let one: f32 = b.labels_onehot[row * 3..row * 3 + 3].iter().sum();
+            assert_eq!(one, 1.0);
+        }
+        assert_eq!(class_mask(2), vec![1.0, 1.0, 0.0]);
+        assert_eq!(class_mask(3), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn batch_iter_covers_dataset() {
+        let ds = generate(task_info("rte").unwrap(), 4, "train", 50);
+        let mut rng = crate::util::Rng::new(1);
+        let n: usize = BatchIter::new(&ds, &mut rng, 16, 32)
+            .map(|b| b.real)
+            .sum();
+        assert_eq!(n, 50);
+        // last batch padded by repetition but real < batch
+        let last = BatchIter::new(&ds, &mut rng, 16, 32).last().unwrap();
+        assert_eq!(last.real, 50 % 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: synthetic language corpus, the eight-task synthetic GLUE
+//! suite, and batching into artifact-shaped tensors.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tasks;
+pub mod vocab;
+
+pub use batcher::{class_mask, make_batch, Batch, BatchIter};
+pub use corpus::{mlm_batch, Corpus, MlmBatch, Sentence};
+pub use tasks::{generate, task_info, Dataset, Example, Label, Metric, TaskInfo, TASKS};

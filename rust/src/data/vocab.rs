@@ -1,0 +1,141 @@
+//! Vocabulary layout for the synthetic language.
+//!
+//! The corpus generator and all eight task generators share this layout;
+//! the MLM pre-training therefore teaches the backbone exactly the
+//! co-occurrence structure the downstream tasks query — the same regime the
+//! paper gets from GLUE-on-top-of-BERT-pretraining (DESIGN.md §3).
+
+/// Special tokens.
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+pub const UNK: i32 = 4;
+/// Question marker (QNLI/QQP-style "questions").
+pub const QMARK: i32 = 5;
+/// Negation/contradiction marker (MNLI/RTE contradictions).
+pub const NEG_MARKER: i32 = 6;
+
+/// First content token id.
+pub const CONTENT_START: i32 = 8;
+/// Vocabulary size (must match `configs.ModelConfig.vocab` on the JAX side).
+pub const VOCAB: i32 = 512;
+/// Number of latent topics in the synthetic language.
+pub const TOPICS: usize = 8;
+
+/// Tokens per topic band.
+pub const BAND: i32 = (VOCAB - CONTENT_START) / TOPICS as i32;
+
+/// Sentiment lexicon: the first `SENT_K` tokens of band 0 are "positive",
+/// the first `SENT_K` of band 1 are "negative".
+pub const SENT_K: i32 = 12;
+
+/// Topic band start for topic `t`.
+pub fn band_start(t: usize) -> i32 {
+    CONTENT_START + (t as i32) * BAND
+}
+
+/// Which topic a content token belongs to (None for specials).
+pub fn topic_of(tok: i32) -> Option<usize> {
+    if tok < CONTENT_START || tok >= VOCAB {
+        return None;
+    }
+    Some(((tok - CONTENT_START) / BAND) as usize).filter(|&t| t < TOPICS)
+}
+
+/// "Synonym" of a token: its band-neighbour (used by paraphrase tasks).
+pub fn synonym(tok: i32) -> i32 {
+    match topic_of(tok) {
+        Some(t) => {
+            let s = band_start(t);
+            s + ((tok - s) ^ 1).min(BAND - 1)
+        }
+        None => tok,
+    }
+}
+
+/// "Antonym" of a token: mirrored within its band (used by contradiction).
+pub fn antonym(tok: i32) -> i32 {
+    match topic_of(tok) {
+        Some(t) => {
+            let s = band_start(t);
+            s + (BAND - 1 - (tok - s))
+        }
+        None => tok,
+    }
+}
+
+/// Positive-sentiment lexicon.
+pub fn positive_tokens() -> impl Iterator<Item = i32> {
+    (0..SENT_K).map(|i| band_start(0) + i)
+}
+
+/// Negative-sentiment lexicon.
+pub fn negative_tokens() -> impl Iterator<Item = i32> {
+    (0..SENT_K).map(|i| band_start(1) + i)
+}
+
+pub fn is_positive(tok: i32) -> bool {
+    tok >= band_start(0) && tok < band_start(0) + SENT_K
+}
+
+pub fn is_negative(tok: i32) -> bool {
+    tok >= band_start(1) && tok < band_start(1) + SENT_K
+}
+
+/// The QNLI "answer token" for a question token: fixed offset mapping into
+/// the last topic band (a learnable but non-trivial association).
+pub fn answer_token(question_tok: i32) -> i32 {
+    let base = band_start(TOPICS - 1);
+    base + (question_tok - CONTENT_START) % BAND
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_partition_content_range() {
+        assert_eq!(BAND * TOPICS as i32 + CONTENT_START, VOCAB);
+        for t in 0..TOPICS {
+            let s = band_start(t);
+            assert_eq!(topic_of(s), Some(t));
+            assert_eq!(topic_of(s + BAND - 1), Some(t));
+        }
+        assert_eq!(topic_of(PAD), None);
+        assert_eq!(topic_of(VOCAB), None);
+    }
+
+    #[test]
+    fn synonym_stays_in_band() {
+        for t in 0..TOPICS {
+            for i in 0..BAND {
+                let tok = band_start(t) + i;
+                assert_eq!(topic_of(synonym(tok)), Some(t));
+            }
+        }
+    }
+
+    #[test]
+    fn antonym_is_involution() {
+        for tok in CONTENT_START..VOCAB {
+            assert_eq!(antonym(antonym(tok)), tok);
+        }
+    }
+
+    #[test]
+    fn sentiment_lexicons_disjoint() {
+        let pos: Vec<i32> = positive_tokens().collect();
+        let neg: Vec<i32> = negative_tokens().collect();
+        assert!(pos.iter().all(|t| !neg.contains(t)));
+        assert!(pos.iter().all(|&t| is_positive(t) && !is_negative(t)));
+        assert!(neg.iter().all(|&t| is_negative(t) && !is_positive(t)));
+    }
+
+    #[test]
+    fn answer_token_in_last_band() {
+        for q in CONTENT_START..VOCAB {
+            assert_eq!(topic_of(answer_token(q)), Some(TOPICS - 1));
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Fig 1: distribution of self-attention output 2-norms per layer, before
+//! and after full fine-tuning, plus the relative change Δ (paper Sec. 2.1).
+//!
+//! Expected shape: norms grow after fine-tuning, with the change
+//! concentrated in the middle/late layers and peaking at the last layer —
+//! the observation that motivates injecting the adapter right after the
+//! self-attention outputs.
+
+use anyhow::Result;
+
+use crate::analysis::norm_shift;
+use crate::coordinator::{Coordinator, RunSpec};
+use crate::report::{BoxStats, Table};
+use crate::train::evaluate;
+
+use super::TASK_ORDER;
+
+pub fn run(coord: &mut Coordinator) -> Result<()> {
+    let model = coord
+        .config
+        .models
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "base".into());
+    let info = coord.engine.manifest().model(&model)?.clone();
+    let layers = info.layers;
+
+    // pooled per-layer samples across all tasks
+    let mut before: Vec<Vec<f32>> = vec![Vec::new(); layers];
+    let mut after: Vec<Vec<f32>> = vec![Vec::new(); layers];
+
+    for task in TASK_ORDER {
+        coord.backbone(&model)?;
+        coord.dataset(task, "dev")?;
+        // "before": the pre-trained backbone
+        {
+            let backbone = coord.backbones_get(&model).unwrap();
+            let dev = coord.datasets_get(task, "dev").unwrap();
+            let pre = evaluate(&coord.engine, &model, backbone, dev)?;
+            for l in 0..layers {
+                before[l].extend(&pre.attn_norms[l]);
+            }
+        }
+        // "after": full fine-tuning on the task (cached run + stored ckpt)
+        let spec = RunSpec {
+            model: model.clone(),
+            task: task.to_string(),
+            method: "full".into(),
+            seed: coord.config.seed,
+        };
+        let (_, store) = coord.run_with_store(&spec)?;
+        let dev = coord.datasets_get(task, "dev").unwrap();
+        let post = evaluate(&coord.engine, &model, &store, dev)?;
+        for l in 0..layers {
+            after[l].extend(&post.attn_norms[l]);
+        }
+    }
+
+    let shifts = norm_shift(&before, &after);
+    let mut t = Table::new(
+        &format!("Fig 1: ||self-attention output||_2 per layer, before/after full FT ({model}, all tasks pooled)"),
+        &["layer", "before median", "before IQR", "after median", "after IQR",
+          "delta mean", "delta median"],
+    );
+    for s in &shifts {
+        let iqr = |b: &BoxStats| format!("[{:.1}, {:.1}]", b.q1, b.q3);
+        t.row(vec![
+            s.layer.to_string(),
+            format!("{:.1}", s.before.median),
+            iqr(&s.before),
+            format!("{:.1}", s.after.median),
+            iqr(&s.after),
+            format!("{:+.3}", s.delta.mean),
+            format!("{:+.3}", s.delta.median),
+        ]);
+    }
+    println!("{}", t.render());
+    t.save(&coord.config.results_dir, "fig1")?;
+
+    // paper's qualitative check: late layers shift more than early ones
+    let half = layers / 2;
+    let early: f64 = shifts[..half].iter().map(|s| s.delta.mean).sum::<f64>()
+        / half.max(1) as f64;
+    let late: f64 = shifts[half..].iter().map(|s| s.delta.mean).sum::<f64>()
+        / (layers - half).max(1) as f64;
+    println!(
+        "delta mean early layers {early:+.3} vs late layers {late:+.3} \
+         (paper: changes grow with depth, peak at last layer)"
+    );
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Fig 5: exploratory analysis of the learned adapters across tasks
+//! (paper Sec. 5) — per-layer weight/bias distributions, norm-module
+//! distributions under adapter tuning vs full FT, and cross-task cosine
+//! similarity heatmaps.
+//!
+//! Expected shape: weights hover near 1.0 and are ~identical across tasks
+//! (cosine ≈ 1); biases hover near 0.0 and differ strongly across tasks —
+//! the basis for the shared-adapter proposal.
+
+use anyhow::Result;
+
+use crate::analysis::similarity::{
+    extract, identity_deviation, layer_distributions, similarity_at_layer,
+    similarity_avg, AdapterVectors,
+};
+use crate::coordinator::{Coordinator, RunSpec};
+use crate::report::{BoxStats, Table};
+
+use super::TASK_ORDER;
+
+pub fn run(coord: &mut Coordinator) -> Result<()> {
+    // Paper uses RoBERTa-large here; we use the largest configured model.
+    let model = coord
+        .config
+        .models
+        .last()
+        .cloned()
+        .unwrap_or_else(|| "large".into());
+    let info = coord.engine.manifest().model(&model)?.clone();
+    let layers = info.layers;
+
+    let tasks: Vec<&str> = if coord.config.quick {
+        vec!["sst2", "rte", "mrpc", "qnli"]
+    } else {
+        TASK_ORDER.to_vec()
+    };
+
+    let mut adapters: Vec<AdapterVectors> = Vec::new();
+    let mut ft_norm_vectors: Vec<AdapterVectors> = Vec::new();
+    for task in &tasks {
+        let spec = RunSpec {
+            model: model.clone(),
+            task: task.to_string(),
+            method: "hadamard".into(),
+            seed: coord.config.seed,
+        };
+        let (_, store) = coord.run_with_store(&spec)?;
+        adapters.push(extract(task, &store, layers)?);
+
+        let spec_ft = RunSpec { method: "full".into(), ..spec };
+        let (_, store_ft) = coord.run_with_store(&spec_ft)?;
+        ft_norm_vectors.push(extract(task, &store_ft, layers)?);
+    }
+
+    // (a1)(a2): adapter weight/bias distributions per layer
+    let mut t = Table::new(
+        &format!("Fig 5 (a): Hadamard adapter vector distributions per layer ({model}, all tasks pooled)"),
+        &["layer", "family", "min", "q1", "median", "q3", "max", "mean"],
+    );
+    let push_fam = |t: &mut Table, label: &str, dists: &[BoxStats]| {
+        for (l, d) in dists.iter().enumerate() {
+            let mut cells = vec![l.to_string(), label.to_string()];
+            cells.extend(d.cells());
+            t.row(cells);
+        }
+    };
+    push_fam(&mut t, "adapter.weight",
+             &layer_distributions(&adapters, |a| &a.weights));
+    push_fam(&mut t, "adapter.bias",
+             &layer_distributions(&adapters, |a| &a.biases));
+    // (b1..b4): norm modules under adapter tuning vs full FT
+    push_fam(&mut t, "norm.weight (adapter-tuned)",
+             &layer_distributions(&adapters, |a| &a.norm_weights));
+    push_fam(&mut t, "norm.weight (full-FT)",
+             &layer_distributions(&ft_norm_vectors, |a| &a.norm_weights));
+    push_fam(&mut t, "norm.bias (adapter-tuned)",
+             &layer_distributions(&adapters, |a| &a.norm_biases));
+    push_fam(&mut t, "norm.bias (full-FT)",
+             &layer_distributions(&ft_norm_vectors, |a| &a.norm_biases));
+    println!("{}", t.render());
+    t.save(&coord.config.results_dir, "fig5_distributions")?;
+
+    // (c1)(c2): cross-task cosine similarity (first, middle, average)
+    let mut sims = Table::new(
+        "Fig 5 (c): cross-task cosine similarity of adapter vectors",
+        &["family", "layer", "task_i", "task_j", "cosine"],
+    );
+    let mut record = |label: &str, layer_label: &str, m: &crate::analysis::similarity::SimMatrix| {
+        for (i, ti) in m.tasks.iter().enumerate() {
+            for (j, tj) in m.tasks.iter().enumerate() {
+                if i < j {
+                    sims.row(vec![
+                        label.to_string(),
+                        layer_label.to_string(),
+                        ti.clone(),
+                        tj.clone(),
+                        format!("{:.3}", m.get(i, j)),
+                    ]);
+                }
+            }
+        }
+    };
+    let mid = layers / 2;
+    let w_first = similarity_at_layer(&adapters, 0, |a| &a.weights);
+    let w_mid = similarity_at_layer(&adapters, mid, |a| &a.weights);
+    let w_avg = similarity_avg(&adapters, |a| &a.weights);
+    let b_first = similarity_at_layer(&adapters, 0, |a| &a.biases);
+    let b_mid = similarity_at_layer(&adapters, mid, |a| &a.biases);
+    let b_avg = similarity_avg(&adapters, |a| &a.biases);
+    record("weight", "first", &w_first);
+    record("weight", "middle", &w_mid);
+    record("weight", "avg", &w_avg);
+    record("bias", "first", &b_first);
+    record("bias", "middle", &b_mid);
+    record("bias", "avg", &b_avg);
+    println!("{}", sims.render());
+    sims.save(&coord.config.results_dir, "fig5_similarity")?;
+
+    println!(
+        "weight cosine (off-diag avg) {:.3} vs bias cosine {:.3} \
+         (paper: weights ~1.0 reusable across tasks; biases diverge, <=0.3)",
+        w_avg.off_diagonal_mean(),
+        b_avg.off_diagonal_mean()
+    );
+    for a in &adapters {
+        let d = identity_deviation(a);
+        println!(
+            "  {}: weight rms-dev-from-1 {:.4}, bias rms-dev-from-0 {:.4}",
+            a.task, d["weight_rms_dev_from_1"], d["bias_rms_dev_from_0"]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation
+//! (DESIGN.md §2 experiment index). Each driver pulls runs through the
+//! coordinator (cached/resumable) and writes `results/<id>.{md,csv}`.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Coordinator;
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 8] = [
+    "table1", "table2", "table3", "table4", "table5", "fig1", "fig2", "fig5",
+];
+
+/// Dispatch an experiment by id ("all" runs the full suite).
+pub fn run(coord: &mut Coordinator, id: &str) -> Result<()> {
+    match id {
+        "table1" => table1::run(coord),
+        "table2" => table2::run(coord),
+        "table3" => table3::run(coord),
+        "table4" => table4::run(coord),
+        "table5" | "fig4" => table5::run(coord),
+        "fig1" => fig1::run(coord),
+        "fig2" => fig2::run(coord),
+        "fig5" => fig5::run(coord),
+        "all" => {
+            for id in ALL {
+                println!("=== experiment {id} ===");
+                run(coord, id)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (have {ALL:?} or 'all')"),
+    }
+}
+
+/// The paper's Table 2/3 task column order.
+pub const TASK_ORDER: [&str; 8] =
+    ["mrpc", "cola", "mnli", "qnli", "qqp", "rte", "sst2", "stsb"];
+
+/// Table 5's task subset (paper drops MRPC and SST-2 there).
+pub const TABLE5_TASKS: [&str; 4] = ["cola", "qnli", "rte", "stsb"];

@@ -1,0 +1,76 @@
+//! Table 4: module ablation — unfreeze any subset of {W, B, N, A} in the
+//! two-stage pipeline (base model, all tasks). The paper's findings to
+//! reproduce: B and N contribute most individually, B+N is the best pair,
+//! and the full method (W+B+N, "Ours") wins overall, with A adding little
+//! or hurting.
+
+use anyhow::Result;
+
+use crate::coordinator::{index_records, Coordinator};
+use crate::report::Table;
+
+/// Task subset for the ablation grid (time-bounded; the paper uses all 8).
+pub const TASKS: [&str; 2] = ["mrpc", "sst2"];
+
+/// The paper's row order (Table 4), "Ours" = W+B+N via the plain
+/// "hadamard" method name.
+pub const COMBOS: [&str; 12] = [
+    "hadamard:W",
+    "hadamard:B",
+    "hadamard:N",
+    "hadamard:A",
+    "hadamard:W+A",
+    "hadamard:W+N",
+    "hadamard:B+A",
+    "hadamard:B+N",
+    "hadamard:W+B",
+    "hadamard:W+B+N+A",
+    "hadamard:W+B+A",
+    "hadamard",
+];
+
+pub fn run(coord: &mut Coordinator) -> Result<()> {
+    // Paper runs Table 4 on BERT-base; we use our smallest experiment model.
+    let model = coord
+        .config
+        .models
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "base".into());
+    let recs = coord.run_grid(&[model.clone()], &TASKS, &COMBOS)?;
+    let idx = index_records(&recs);
+
+    let mut header = vec!["Module"];
+    header.extend(TASKS);
+    header.push("Average");
+    let mut t = Table::new(
+        &format!("Table 4: module ablation on {model} (W=adapter weight, B=adapter bias, N=norm, A=att-norm; Ours=W+B+N)"),
+        &header,
+    );
+
+    let mut best: (String, f64) = (String::new(), f64::MIN);
+    for combo in COMBOS {
+        let label = if combo == "hadamard" {
+            "W+B+N (Ours)".to_string()
+        } else {
+            combo.trim_start_matches("hadamard:").to_string()
+        };
+        let mut cells = vec![label.clone()];
+        let mut sum = 0.0;
+        for task in TASKS {
+            let r = idx[&(model.clone(), task.to_string(), combo.to_string())];
+            cells.push(format!("{:.1}", r.score));
+            sum += r.score;
+        }
+        let avg = sum / TASKS.len() as f64;
+        if avg > best.1 {
+            best = (label, avg);
+        }
+        cells.push(format!("{avg:.1}"));
+        t.row(cells);
+    }
+    println!("{}", t.render());
+    println!("best combo: {} ({:.1}) — paper expects the full method to win", best.0, best.1);
+    t.save(&coord.config.results_dir, "table4")?;
+    Ok(())
+}

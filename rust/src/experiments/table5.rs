@@ -1,0 +1,97 @@
+//! Table 5 / Fig 4: effect of the number of unfrozen Hadamard-adapter
+//! layers. The paper unfreezes the last k layers (k = 4..12 for base,
+//! 4..24 for large) and finds monotone improvement that saturates past
+//! half the depth — the basis for the 0.022% "redundant layers" claim.
+//!
+//! Our depths are scaled (base = 4 encoder layers ~ paper's 12; large = 8
+//! ~ paper's 24); k sweeps the same fractions of depth.
+
+use anyhow::Result;
+
+use crate::coordinator::{index_records, Coordinator};
+use crate::methods::Method;
+use crate::report::{pct, Table};
+
+use super::TABLE5_TASKS;
+
+/// k values per model depth (fractions 1/4, 1/2, 3/4, 1 of the depth).
+pub fn layer_sweep(depth: usize) -> Vec<usize> {
+    // shallow models sweep every quarter; deeper ones skip 3/4 to bound the
+    // run-grid (the paper's saturation shows up by half depth already)
+    let fracs: &[usize] = if depth <= 4 {
+        &[depth / 4, depth / 2, 3 * depth / 4, depth]
+    } else {
+        &[depth / 4, depth / 2, depth]
+    };
+    let mut ks: Vec<usize> = fracs.iter().map(|&k| k.max(1)).collect();
+    ks.dedup();
+    ks
+}
+
+pub fn run(coord: &mut Coordinator) -> Result<()> {
+    let models = coord.config.models.clone();
+    let mut t = Table::new(
+        "Table 5 / Fig 4: unfreezing the last k adapter layers",
+        &["PLM", "task", "k", "k/depth", "score", "adapter params %"],
+    );
+    let mut fig4 = Table::new(
+        "Fig 4 series: average score vs unfrozen fraction",
+        &["PLM", "k", "fraction", "avg score"],
+    );
+
+    for model in &models {
+        let info = coord.engine.manifest().model(model)?.clone();
+        let depth = info.layers;
+        let ks = layer_sweep(depth);
+        let methods: Vec<String> =
+            ks.iter().map(|k| format!("hadamard@{k}L")).collect();
+        let method_refs: Vec<&str> = methods.iter().map(|s| s.as_str()).collect();
+        let recs = coord.run_grid(
+            std::slice::from_ref(model),
+            &TABLE5_TASKS,
+            &method_refs,
+        )?;
+        let idx = index_records(&recs);
+
+        for (&k, mname) in ks.iter().zip(&methods) {
+            let m = Method::by_name(mname)?;
+            let frac_params = m.param_fraction(&info)?;
+            let mut sum = 0.0;
+            for task in TABLE5_TASKS {
+                let r = idx[&(model.clone(), task.to_string(), mname.clone())];
+                t.row(vec![
+                    model.clone(),
+                    task.to_string(),
+                    k.to_string(),
+                    format!("{:.2}", k as f64 / depth as f64),
+                    format!("{:.1}", r.score),
+                    pct(frac_params),
+                ]);
+                sum += r.score;
+            }
+            fig4.row(vec![
+                model.clone(),
+                k.to_string(),
+                format!("{:.2}", k as f64 / depth as f64),
+                format!("{:.1}", sum / TABLE5_TASKS.len() as f64),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("{}", fig4.render());
+    t.save(&coord.config.results_dir, "table5")?;
+    fig4.save(&coord.config.results_dir, "fig4")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_fractions() {
+        assert_eq!(layer_sweep(4), vec![1, 2, 3, 4]);
+        assert_eq!(layer_sweep(8), vec![2, 4, 8]);
+        assert_eq!(layer_sweep(2), vec![1, 2]);
+    }
+}

@@ -1,0 +1,27 @@
+//! # hadapt
+//!
+//! Reproduction of *Hadamard Adapter: An Extreme Parameter-Efficient Adapter
+//! Tuning Method for Pre-trained Language Models* (CIKM 2023) as a
+//! three-layer Rust + JAX + Pallas framework.
+//!
+//! Layer 1 (Pallas kernels) and Layer 2 (the JAX transformer with every PEFT
+//! module identity-initialized) are AOT-lowered to HLO text at build time
+//! (`make artifacts`); this crate is Layer 3: the PJRT runtime, the synthetic
+//! GLUE data substrate, the PEFT method registry, the two-stage tuning
+//! coordinator, and the experiment harness that regenerates every table and
+//! figure of the paper's evaluation. Python never runs on the training path.
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod methods;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod report;
+pub mod runtime;
+pub mod train;
+
+pub mod util;
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,219 @@
+//! `hadapt` — the L3 coordinator CLI.
+//!
+//! ```text
+//! hadapt info                         # manifest + parameter accounting
+//! hadapt pretrain --model base        # MLM pre-train a backbone
+//! hadapt train --model base --task sst2 --method hadamard
+//! hadapt eval --model base --task sst2 --ckpt path.ckpt
+//! hadapt experiment table2            # regenerate a paper table/figure
+//! hadapt experiment all               # the whole evaluation section
+//! ```
+//!
+//! Global flags: `--set key=value` (config overrides), `--quick`,
+//! `--config path.json`.
+
+use anyhow::{bail, Context, Result};
+
+use hadapt::config::Config;
+use hadapt::coordinator::{Coordinator, RunSpec};
+use hadapt::methods::Method;
+use hadapt::model::ParamStore;
+use hadapt::report::pct;
+use hadapt::runtime::Engine;
+use hadapt::train::{evaluate, load_or_pretrain};
+
+struct Cli {
+    command: String,
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+fn parse_args() -> Result<Cli> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        bail!(
+            "usage: hadapt <info|pretrain|train|eval|experiment> [args] \
+             [--model M] [--task T] [--method X] [--quick] [--set k=v]"
+        );
+    }
+    let command = args[0].clone();
+    let mut positional = Vec::new();
+    let mut flags = Vec::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if name == "quick" {
+                flags.push(("quick".into(), "true".into()));
+            } else {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .with_context(|| format!("flag --{name} needs a value"))?;
+                flags.push((name.to_string(), v.clone()));
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(Cli { command, positional, flags })
+}
+
+impl Cli {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn build_config(cli: &Cli) -> Result<Config> {
+    let path = cli.flag("config").unwrap_or("hadapt.json");
+    let mut cfg = Config::load(path)?;
+    for (k, v) in &cli.flags {
+        match k.as_str() {
+            "config" | "model" | "task" | "method" | "ckpt" | "out" => {}
+            "set" => {
+                let (kk, vv) = v
+                    .split_once('=')
+                    .with_context(|| format!("--set wants k=v, got '{v}'"))?;
+                cfg.set(kk, vv)?;
+            }
+            other => cfg.set(other, v)?,
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let m = engine.manifest();
+    println!("artifacts: {} (batch={}, seq={})",
+             m.artifacts.len(), m.batch, m.seq_len);
+    let mut names: Vec<&String> = m.models.keys().collect();
+    names.sort();
+    for name in names {
+        let info = m.model(name)?;
+        println!(
+            "model {name}: layers={} hidden={} heads={} ffn={} | {} tensors, \
+             {} backbone scalars",
+            info.layers, info.hidden, info.heads, info.ffn,
+            info.params.len(), info.backbone_params()
+        );
+        for method in ["hadamard", "bitfit", "lora", "houlsby", "ia3", "lntuning"] {
+            let meth = Method::by_name(method)?;
+            println!(
+                "  {method:<10} adapter params {:>8}  ({})",
+                meth.adapter_params(info)?,
+                pct(meth.param_fraction(info)?)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(cfg: &Config, cli: &Cli) -> Result<()> {
+    let model = cli.flag("model").unwrap_or("base");
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let store = load_or_pretrain(
+        &engine,
+        model,
+        &cfg.checkpoints_dir,
+        &cfg.pretrain_opts(),
+    )?;
+    println!(
+        "backbone '{model}' ready ({} scalars) -> {}",
+        store.total_scalars(),
+        hadapt::train::checkpoint_path(&cfg.checkpoints_dir, model, cfg.seed)
+            .display()
+    );
+    Ok(())
+}
+
+fn cmd_train(cfg: Config, cli: &Cli) -> Result<()> {
+    let model = cli.flag("model").unwrap_or("base").to_string();
+    let task = cli.flag("task").unwrap_or("sst2").to_string();
+    let method = cli.flag("method").unwrap_or("hadamard").to_string();
+    let mut coord = Coordinator::new(cfg)?;
+    let seed = coord.config.seed;
+    let rec = coord.run(&RunSpec {
+        model: model.clone(),
+        task: task.clone(),
+        method: method.clone(),
+        seed,
+    })?;
+    println!(
+        "score {:.1} | trainable {} | adapter {} ({}) | {:.1}s",
+        rec.score,
+        rec.trainable_scalars,
+        rec.adapter_scalars,
+        pct(rec.param_fraction),
+        rec.wall_secs
+    );
+    if let Some(out) = cli.flag("out") {
+        // re-run uncached to materialize the tuned checkpoint
+        let opts = coord.config.tune_opts();
+        let spec = RunSpec { model, task, method, seed };
+        let (_, result) = coord.run_uncached(&spec, &opts)?;
+        result.store.save(out)?;
+        println!("tuned checkpoint -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(cfg: Config, cli: &Cli) -> Result<()> {
+    let model = cli.flag("model").unwrap_or("base").to_string();
+    let task = cli.flag("task").unwrap_or("sst2").to_string();
+    let mut coord = Coordinator::new(cfg)?;
+    let store = match cli.flag("ckpt") {
+        Some(path) => {
+            let s = ParamStore::load(path)?;
+            s.check_against(coord.engine.manifest().model(&model)?)?;
+            s
+        }
+        None => {
+            coord.backbone(&model)?;
+            coord.backbones_get(&model).unwrap().clone()
+        }
+    };
+    coord.dataset(&task, "dev")?;
+    let ds = coord.datasets_get(&task, "dev").unwrap().clone();
+    let r = evaluate(&coord.engine, &model, &store, &ds)?;
+    println!(
+        "{model}/{task}: score {:.2} over {} examples",
+        r.score, r.examples
+    );
+    Ok(())
+}
+
+fn cmd_experiment(cfg: Config, cli: &Cli) -> Result<()> {
+    let id = cli
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut coord = Coordinator::new(cfg)?;
+    hadapt::experiments::run(&mut coord, id)?;
+    let stats = coord.engine.stats();
+    println!(
+        "engine: {} compiles ({:.1}s), {} executions ({:.1}s)",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let cli = parse_args()?;
+    let cfg = build_config(&cli)?;
+    match cli.command.as_str() {
+        "info" => cmd_info(&cfg),
+        "pretrain" => cmd_pretrain(&cfg, &cli),
+        "train" => cmd_train(cfg, &cli),
+        "eval" => cmd_eval(cfg, &cli),
+        "experiment" => cmd_experiment(cfg, &cli),
+        other => bail!("unknown command '{other}'"),
+    }
+}

@@ -1,0 +1,157 @@
+//! Evaluation metrics (paper Sec. 4.1): accuracy, Matthews correlation
+//! (CoLA), Pearson correlation (STS-B), plus F1 for completeness.
+
+use crate::data::Metric;
+
+/// Accuracy over (pred, gold) pairs.
+pub fn accuracy(preds: &[usize], golds: &[usize]) -> f64 {
+    assert_eq!(preds.len(), golds.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hit = preds.iter().zip(golds).filter(|(p, g)| p == g).count();
+    hit as f64 / preds.len() as f64
+}
+
+/// Binary Matthews correlation coefficient (phi coefficient).
+pub fn matthews(preds: &[usize], golds: &[usize]) -> f64 {
+    assert_eq!(preds.len(), golds.len());
+    let (mut tp, mut tn, mut fp, mut r#fn) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in preds.iter().zip(golds) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => r#fn += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + r#fn) * (tn + fp) * (tn + r#fn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * r#fn) / denom
+    }
+}
+
+/// Pearson correlation between two real vectors.
+pub fn pearson(xs: &[f32], ys: &[f32]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let my = ys.iter().map(|&y| y as f64).sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        let dx = x as f64 - mx;
+        let dy = y as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Binary F1 (positive class = 1).
+pub fn f1(preds: &[usize], golds: &[usize]) -> f64 {
+    let (mut tp, mut fp, mut r#fn) = (0f64, 0f64, 0f64);
+    for (&p, &g) in preds.iter().zip(golds) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => r#fn += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + r#fn);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Compute a task's headline metric. Classification tasks pass integer
+/// preds/golds; regression passes raw scores. Values are scaled to the
+/// paper's 0-100 convention.
+pub fn task_score(
+    metric: Metric,
+    preds: &[usize],
+    golds: &[usize],
+    pred_scores: &[f32],
+    gold_scores: &[f32],
+) -> f64 {
+    100.0
+        * match metric {
+            Metric::Accuracy => accuracy(preds, golds),
+            Metric::Matthews => matthews(preds, golds),
+            Metric::Pearson => pearson(pred_scores, gold_scores),
+        }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let g = [0, 1, 0, 1, 1, 0];
+        assert!((matthews(&g, &g) - 1.0).abs() < 1e-9);
+        let inv: Vec<usize> = g.iter().map(|&x| 1 - x).collect();
+        assert!((matthews(&inv, &g) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_constant_pred_is_zero() {
+        assert_eq!(matthews(&[1, 1, 1, 1], &[0, 1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn matthews_matches_phi_formula() {
+        // hand-computed example: tp=3 tn=2 fp=1 fn=2
+        let preds = [1, 1, 1, 1, 0, 0, 0, 0];
+        let golds = [1, 1, 1, 0, 1, 1, 0, 0];
+        let phi = (3.0 * 2.0 - 1.0 * 2.0)
+            / ((3.0f64 + 1.0) * (3.0 + 2.0) * (2.0 + 1.0) * (2.0 + 2.0)).sqrt();
+        assert!((matthews(&preds, &golds) - phi).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_linear_relationship() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y: Vec<f32> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-9);
+        let yneg: Vec<f32> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn f1_basic() {
+        // tp=1 fp=1 fn=1 => p=r=0.5 => f1=0.5
+        assert!((f1(&[1, 1, 0], &[1, 0, 1]) - 0.5).abs() < 1e-9);
+        assert_eq!(f1(&[0, 0], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn task_score_scaling() {
+        let s = task_score(Metric::Accuracy, &[1, 1], &[1, 0], &[], &[]);
+        assert_eq!(s, 50.0);
+    }
+}

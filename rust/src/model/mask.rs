@@ -1,0 +1,329 @@
+//! Freeze-mask algebra: which parameters actually update.
+//!
+//! A gradient-group artifact computes grads for its whole group; the mask
+//! selects the subset that the optimizer applies. This is what implements
+//! the paper's ablations: module combos W/B/N/A (Table 4) and layer-range
+//! unfreezing (Table 5 / Fig 4). Masking a gradient to zero is exactly
+//! equivalent to differentiating the subset (losses are sums; discarded
+//! grads touch nothing).
+
+use std::collections::HashSet;
+
+use crate::runtime::ModelInfo;
+
+/// Module selectors within the hadamard gradient group (paper Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Module {
+    /// Hadamard adapter weight vectors (`W`).
+    HadamardWeight,
+    /// Hadamard adapter bias vectors (`B`).
+    HadamardBias,
+    /// Output LayerNorm — right after the intermediate/FFN outputs (`N`).
+    Norm,
+    /// Attention-output LayerNorm (`A`).
+    AttNorm,
+    /// Sec. 2.2 fitting-study quadratic coefficients.
+    HadamardW2,
+    /// Sec. 2.2 fitting-study cubic coefficients.
+    HadamardW3,
+}
+
+impl Module {
+    pub fn matches(&self, name: &str) -> bool {
+        match self {
+            Module::HadamardWeight => name.ends_with(".hadamard.weight"),
+            Module::HadamardBias => name.ends_with(".hadamard.bias"),
+            Module::HadamardW2 => name.ends_with(".hadamard.w2"),
+            Module::HadamardW3 => name.ends_with(".hadamard.w3"),
+            Module::AttNorm => name.contains(".attention.output.LayerNorm."),
+            Module::Norm => {
+                name.contains(".output.LayerNorm.")
+                    && !name.contains(".attention.")
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Module::HadamardWeight => "W",
+            Module::HadamardBias => "B",
+            Module::Norm => "N",
+            Module::AttNorm => "A",
+            Module::HadamardW2 => "W2",
+            Module::HadamardW3 => "W3",
+        }
+    }
+}
+
+/// Parse a Table-4-style combo label like "W+B+N" into modules.
+pub fn parse_modules(combo: &str) -> Vec<Module> {
+    combo
+        .split('+')
+        .filter_map(|tok| match tok.trim() {
+            "W" => Some(Module::HadamardWeight),
+            "B" => Some(Module::HadamardBias),
+            "N" => Some(Module::Norm),
+            "A" => Some(Module::AttNorm),
+            "W2" => Some(Module::HadamardW2),
+            "W3" => Some(Module::HadamardW3),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Which encoder layers train (Table 5: unfreeze the *last* k layers —
+/// consistent with Fig. 1's finding that late layers change most).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerRange {
+    All,
+    /// Unfreeze the top (last) `k` layers; earlier adapter layers stay
+    /// identity.
+    LastK(usize),
+}
+
+impl LayerRange {
+    fn allows(&self, layer: Option<usize>, total: usize) -> bool {
+        match (self, layer) {
+            (LayerRange::All, _) => true,
+            // Non-layer params (heads, embeddings LN) always allowed.
+            (LayerRange::LastK(_), None) => true,
+            (LayerRange::LastK(k), Some(l)) => l + k >= total,
+        }
+    }
+}
+
+/// Extract the encoder layer index from a canonical parameter name.
+pub fn layer_of(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix("encoder.layer.")?;
+    let end = rest.find('.')?;
+    rest[..end].parse().ok()
+}
+
+/// A freeze mask over a model's canonical parameter list.
+#[derive(Debug, Clone)]
+pub struct FreezeMask {
+    /// trainable[i] == true => parameter i updates.
+    pub trainable: Vec<bool>,
+}
+
+impl FreezeMask {
+    /// Nothing trains.
+    pub fn frozen(info: &ModelInfo) -> Self {
+        FreezeMask { trainable: vec![false; info.params.len()] }
+    }
+
+    /// Everything in `names` trains.
+    pub fn from_names(info: &ModelInfo, names: &[String]) -> Self {
+        let set: HashSet<&str> = names.iter().map(|s| s.as_str()).collect();
+        FreezeMask {
+            trainable: info
+                .params
+                .iter()
+                .map(|p| set.contains(p.name.as_str()))
+                .collect(),
+        }
+    }
+
+    /// The paper's stage-2 mask: selected modules (within the hadamard
+    /// group) + optionally the head, restricted to a layer range.
+    pub fn stage2(
+        info: &ModelInfo,
+        modules: &[Module],
+        layers: LayerRange,
+        include_head: bool,
+    ) -> Self {
+        let trainable = info
+            .params
+            .iter()
+            .map(|p| {
+                let n = p.name.as_str();
+                if n.starts_with("pooler.")
+                    || n.starts_with("classifier.")
+                    || n.starts_with("regressor.")
+                {
+                    return include_head;
+                }
+                let in_module = modules.iter().any(|m| m.matches(n));
+                in_module && layers.allows(layer_of(n), info.layers)
+            })
+            .collect();
+        FreezeMask { trainable }
+    }
+
+    /// Restrict an existing mask to a layer range (keeps non-layer params).
+    pub fn restrict_layers(&self, info: &ModelInfo, layers: LayerRange) -> Self {
+        FreezeMask {
+            trainable: self
+                .trainable
+                .iter()
+                .zip(&info.params)
+                .map(|(&t, p)| t && layers.allows(layer_of(&p.name), info.layers))
+                .collect(),
+        }
+    }
+
+    pub fn is_trainable(&self, idx: usize) -> bool {
+        self.trainable[idx]
+    }
+
+    /// Count trainable scalars (the paper's parameter accounting).
+    pub fn trainable_scalars(&self, info: &ModelInfo) -> usize {
+        self.trainable
+            .iter()
+            .zip(&info.params)
+            .filter(|(&t, _)| t)
+            .map(|(_, p)| p.numel())
+            .sum()
+    }
+
+    /// Trainable fraction vs the vanilla backbone (the paper's "% params").
+    pub fn trainable_fraction(&self, info: &ModelInfo) -> f64 {
+        self.trainable_scalars(info) as f64 / info.backbone_params() as f64
+    }
+
+    pub fn union(&self, other: &FreezeMask) -> FreezeMask {
+        FreezeMask {
+            trainable: self
+                .trainable
+                .iter()
+                .zip(&other.trainable)
+                .map(|(&a, &b)| a || b)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{InitKind, ParamSpec};
+    use std::collections::HashMap;
+
+    fn info2() -> ModelInfo {
+        let names = [
+            "embeddings.word_embeddings.weight",
+            "encoder.layer.0.hadamard.weight",
+            "encoder.layer.0.hadamard.bias",
+            "encoder.layer.0.attention.output.LayerNorm.weight",
+            "encoder.layer.0.output.LayerNorm.weight",
+            "encoder.layer.1.hadamard.weight",
+            "encoder.layer.1.hadamard.bias",
+            "encoder.layer.1.attention.output.LayerNorm.weight",
+            "encoder.layer.1.output.LayerNorm.weight",
+            "pooler.dense.weight",
+            "classifier.weight",
+        ];
+        let params: Vec<ParamSpec> = names
+            .iter()
+            .map(|n| ParamSpec {
+                name: n.to_string(),
+                shape: vec![2],
+                init: InitKind::Zeros,
+            })
+            .collect();
+        let index = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), i))
+            .collect();
+        let mut groups = HashMap::new();
+        groups.insert(
+            "full".to_string(),
+            vec!["embeddings.word_embeddings.weight".to_string()],
+        );
+        ModelInfo {
+            name: "m".into(),
+            layers: 2,
+            hidden: 2,
+            heads: 1,
+            ffn: 4,
+            vocab: 8,
+            max_len: 4,
+            params,
+            index,
+            groups,
+            mlm_group: vec![],
+        }
+    }
+
+    #[test]
+    fn module_matching() {
+        assert!(Module::HadamardWeight.matches("encoder.layer.3.hadamard.weight"));
+        assert!(!Module::HadamardWeight.matches("encoder.layer.3.hadamard.bias"));
+        assert!(Module::AttNorm.matches("encoder.layer.0.attention.output.LayerNorm.bias"));
+        assert!(Module::Norm.matches("encoder.layer.0.output.LayerNorm.bias"));
+        assert!(!Module::Norm.matches("encoder.layer.0.attention.output.LayerNorm.bias"));
+    }
+
+    #[test]
+    fn parse_combo() {
+        let m = parse_modules("W+B+N+A");
+        assert_eq!(m.len(), 4);
+        assert_eq!(parse_modules("B+N"),
+                   vec![Module::HadamardBias, Module::Norm]);
+    }
+
+    #[test]
+    fn layer_of_parses() {
+        assert_eq!(layer_of("encoder.layer.17.hadamard.weight"), Some(17));
+        assert_eq!(layer_of("pooler.dense.weight"), None);
+    }
+
+    #[test]
+    fn stage2_mask_modules() {
+        let info = info2();
+        let m = FreezeMask::stage2(
+            &info,
+            &[Module::HadamardBias, Module::Norm],
+            LayerRange::All,
+            true,
+        );
+        let on: Vec<&str> = info
+            .params
+            .iter()
+            .zip(&m.trainable)
+            .filter(|(_, &t)| t)
+            .map(|(p, _)| p.name.as_str())
+            .collect();
+        assert_eq!(
+            on,
+            vec![
+                "encoder.layer.0.hadamard.bias",
+                "encoder.layer.0.output.LayerNorm.weight",
+                "encoder.layer.1.hadamard.bias",
+                "encoder.layer.1.output.LayerNorm.weight",
+                "pooler.dense.weight",
+                "classifier.weight",
+            ]
+        );
+    }
+
+    #[test]
+    fn stage2_mask_last_k_layers() {
+        let info = info2();
+        let m = FreezeMask::stage2(
+            &info,
+            &[Module::HadamardWeight],
+            LayerRange::LastK(1),
+            false,
+        );
+        let on: Vec<&str> = info
+            .params
+            .iter()
+            .zip(&m.trainable)
+            .filter(|(_, &t)| t)
+            .map(|(p, _)| p.name.as_str())
+            .collect();
+        assert_eq!(on, vec!["encoder.layer.1.hadamard.weight"]);
+    }
+
+    #[test]
+    fn union_and_counts() {
+        let info = info2();
+        let a = FreezeMask::stage2(&info, &[Module::HadamardWeight], LayerRange::All, false);
+        let b = FreezeMask::stage2(&info, &[Module::HadamardBias], LayerRange::All, false);
+        let u = a.union(&b);
+        assert_eq!(u.trainable_scalars(&info), 4 * 2);
+        assert!(u.trainable_fraction(&info) > 0.0);
+    }
+}

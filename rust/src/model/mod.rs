@@ -1,0 +1,7 @@
+//! Model layer: host parameter store, freeze-mask algebra, checkpoints.
+
+pub mod mask;
+pub mod store;
+
+pub use mask::{layer_of, parse_modules, FreezeMask, LayerRange, Module};
+pub use store::ParamStore;

@@ -1,0 +1,290 @@
+//! ParamStore: the host-side source of truth for model parameters.
+//!
+//! Parameters live in canonical manifest order as named f32 tensors. The
+//! store owns initialization (same distribution kinds as the Python side:
+//! normal(0, 0.02), zeros, ones — identity-initialized adapters), checkpoint
+//! save/load, and conversion to the literal/buffer lists the artifacts take.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{InitKind, ModelInfo, Tensor};
+use crate::util::Rng;
+
+/// Magic + version for the checkpoint container.
+const MAGIC: &[u8; 8] = b"HADAPT01";
+
+/// Host-resident parameters for one model instance.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub model: String,
+    /// tensors in canonical (manifest) order.
+    pub tensors: Vec<Tensor>,
+    /// canonical names (mirrors ModelInfo.params).
+    pub names: Vec<String>,
+}
+
+impl ParamStore {
+    /// Initialize from the manifest inventory with the given seed.
+    /// `w=1, b=0` adapters make every PEFT module an exact no-op (paper
+    /// Sec. 3.1: "the initial value is equivalent to not adding any
+    /// adapter").
+    pub fn init(info: &ModelInfo, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut tensors = Vec::with_capacity(info.params.len());
+        let mut names = Vec::with_capacity(info.params.len());
+        for spec in &info.params {
+            let mut t = Tensor::zeros(spec.shape.clone());
+            match spec.init {
+                InitKind::Normal => {
+                    let mut stream = rng.fork(crate::util::fnv1a(&spec.name));
+                    stream.fill_normal(&mut t.data, 0.02);
+                }
+                InitKind::Ones => t.data.fill(1.0),
+                InitKind::Zeros => {}
+            }
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        ParamStore { model: info.name.clone(), tensors, names }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn total_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow::anyhow!("no parameter '{name}'"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        Ok(&self.tensors[self.index_of(name)?])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = self.index_of(name)?;
+        Ok(&mut self.tensors[i])
+    }
+
+    /// Copy the named tensors from another store (the two-stage pipeline's
+    /// "reload the trained classifier" step).
+    pub fn copy_from(&mut self, other: &ParamStore, names: &[String]) -> Result<()> {
+        for n in names {
+            let src = other.get(n)?.clone();
+            let dst = self.get_mut(n)?;
+            if dst.shape != src.shape {
+                bail!("shape mismatch for '{n}'");
+            }
+            *dst = src;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ checkpoint
+
+    /// Save to a simple binary container: magic, model name, tensor count,
+    /// then per tensor (name, rank, dims, f32 data). No compression — these
+    /// are small at our scale and load speed matters for experiments.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(self.total_scalars() * 4 + 4096);
+        buf.extend_from_slice(MAGIC);
+        write_str(&mut buf, &self.model);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            write_str(&mut buf, name);
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            buf.extend_from_slice(bytes);
+        }
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.as_ref().with_extension("tmp");
+        std::fs::File::create(&tmp)?.write_all(&buf)?;
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?
+            .read_to_end(&mut bytes)?;
+        let mut pos = 0usize;
+        let magic = take(&bytes, &mut pos, 8)?;
+        if magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let model = read_str(&bytes, &mut pos)?;
+        let count = u32::from_le_bytes(take(&bytes, &mut pos, 4)?.try_into()?) as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = read_str(&bytes, &mut pos)?;
+            let rank = u32::from_le_bytes(take(&bytes, &mut pos, 4)?.try_into()?) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u64::from_le_bytes(take(&bytes, &mut pos, 8)?.try_into()?) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let raw = take(&bytes, &mut pos, n * 4)?;
+            let mut data = vec![0f32; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    data.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+            names.push(name);
+            tensors.push(Tensor::new(shape, data)?);
+        }
+        Ok(ParamStore { model, tensors, names })
+    }
+
+    /// Validate that this store matches a manifest inventory (names, order,
+    /// shapes) — run after every checkpoint load.
+    pub fn check_against(&self, info: &ModelInfo) -> Result<()> {
+        if self.names.len() != info.params.len() {
+            bail!(
+                "checkpoint has {} tensors, manifest wants {}",
+                self.names.len(),
+                info.params.len()
+            );
+        }
+        for (i, spec) in info.params.iter().enumerate() {
+            if self.names[i] != spec.name {
+                bail!("tensor {i}: name '{}' != manifest '{}'", self.names[i], spec.name);
+            }
+            if self.tensors[i].shape != spec.shape {
+                bail!("tensor '{}': shape {:?} != manifest {:?}",
+                      spec.name, self.tensors[i].shape, spec.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    let len = u32::from_le_bytes(take(bytes, pos, 4)?.try_into()?) as usize;
+    Ok(String::from_utf8(take(bytes, pos, len)?.to_vec())?)
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > bytes.len() {
+        bail!("truncated checkpoint");
+    }
+    let s = &bytes[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+    use std::collections::HashMap;
+
+    fn mini_info() -> ModelInfo {
+        let params = vec![
+            ParamSpec { name: "w".into(), shape: vec![4, 4], init: InitKind::Normal },
+            ParamSpec { name: "hadamard.weight".into(), shape: vec![4], init: InitKind::Ones },
+            ParamSpec { name: "hadamard.bias".into(), shape: vec![4], init: InitKind::Zeros },
+        ];
+        let index = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), i))
+            .collect();
+        let mut groups = HashMap::new();
+        groups.insert("full".to_string(), vec!["w".to_string()]);
+        ModelInfo {
+            name: "mini".into(),
+            layers: 1,
+            hidden: 4,
+            heads: 1,
+            ffn: 8,
+            vocab: 16,
+            max_len: 8,
+            params,
+            index,
+            groups,
+            mlm_group: vec!["w".to_string()],
+        }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let s = ParamStore::init(&mini_info(), 1);
+        assert_eq!(s.get("hadamard.weight").unwrap().data, vec![1.0; 4]);
+        assert_eq!(s.get("hadamard.bias").unwrap().data, vec![0.0; 4]);
+        let w = s.get("w").unwrap();
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        assert!(w.data.iter().all(|&x| x.abs() < 0.2)); // std 0.02
+    }
+
+    #[test]
+    fn init_deterministic_per_name() {
+        let a = ParamStore::init(&mini_info(), 7);
+        let b = ParamStore::init(&mini_info(), 7);
+        assert_eq!(a.get("w").unwrap(), b.get("w").unwrap());
+        let c = ParamStore::init(&mini_info(), 8);
+        assert_ne!(a.get("w").unwrap(), c.get("w").unwrap());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let s = ParamStore::init(&mini_info(), 3);
+        let dir = std::env::temp_dir().join("hadapt_test_ckpt");
+        let path = dir.join("mini.ckpt");
+        s.save(&path).unwrap();
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.model, "mini");
+        assert_eq!(back.names, s.names);
+        for (a, b) in back.tensors.iter().zip(&s.tensors) {
+            assert_eq!(a, b);
+        }
+        back.check_against(&mini_info()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn copy_from_selected() {
+        let info = mini_info();
+        let mut a = ParamStore::init(&info, 1);
+        let b = ParamStore::init(&info, 2);
+        a.copy_from(&b, &["w".to_string()]).unwrap();
+        assert_eq!(a.get("w").unwrap(), b.get("w").unwrap());
+        assert_eq!(a.get("hadamard.weight").unwrap().data, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn check_against_catches_mismatch() {
+        let mut s = ParamStore::init(&mini_info(), 1);
+        s.names[0] = "wrong".into();
+        assert!(s.check_against(&mini_info()).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! AdamW with decoupled weight decay (the paper's optimizer settings:
+//! beta1=0.9, beta2=0.999, weight decay 0.01).
+
+use std::collections::HashMap;
+
+/// AdamW state for a set of named tensors.
+#[derive(Debug)]
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    step: u64,
+    /// name -> (m, v); allocated on first update of each tensor.
+    moments: HashMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
+impl AdamW {
+    pub fn new(weight_decay: f32) -> Self {
+        AdamW {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            step: 0,
+            moments: HashMap::new(),
+        }
+    }
+
+    /// Paper defaults (Sec. 4.1).
+    pub fn paper_defaults() -> Self {
+        Self::new(0.01)
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Bytes of optimizer state currently held (perf accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.moments
+            .values()
+            .map(|(m, v)| (m.len() + v.len()) * 4)
+            .sum()
+    }
+
+    /// Advance the shared step counter (call once per batch, before
+    /// `update` calls for that batch).
+    pub fn next_step(&mut self) {
+        self.step += 1;
+    }
+
+    /// Apply one AdamW update to a tensor.
+    /// Decay is decoupled and not applied to 1-D tensors (biases, norms,
+    /// adapter vectors) — standard BERT practice.
+    pub fn update(&mut self, name: &str, param: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(param.len(), grad.len());
+        let (m, v) = self
+            .moments
+            .entry(name.to_string())
+            .or_insert_with(|| (vec![0.0; param.len()], vec![0.0; param.len()]));
+        let t = self.step.max(1) as i32;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        let decay = if name.ends_with(".weight") && !name.contains("LayerNorm")
+            && !name.contains("hadamard")
+        {
+            self.weight_decay
+        } else {
+            0.0
+        };
+        for i in 0..param.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = m[i] / bc1;
+            let vh = v[i] / bc2;
+            param[i] -= lr * (mh / (vh.sqrt() + self.eps) + decay * param[i]);
+        }
+    }
+
+    /// Drop all moments (used when switching stages).
+    pub fn reset(&mut self) {
+        self.step = 0;
+        self.moments.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(x) = (x - 3)^2 => grad = 2(x - 3)
+        let mut opt = AdamW::new(0.0);
+        let mut x = vec![0.0f32];
+        for _ in 0..800 {
+            opt.next_step();
+            let g = vec![2.0 * (x[0] - 3.0)];
+            opt.update("x.bias", &mut x, &g, 0.05);
+        }
+        assert!((x[0] - 3.0).abs() < 0.05, "x={}", x[0]);
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // After one step with unit gradient, update ≈ lr regardless of betas.
+        let mut opt = AdamW::new(0.0);
+        let mut x = vec![1.0f32];
+        opt.next_step();
+        opt.update("x.bias", &mut x, &[1.0], 0.1);
+        assert!((x[0] - 0.9).abs() < 1e-4, "x={}", x[0]);
+    }
+
+    #[test]
+    fn decay_applies_only_to_2d_weights() {
+        let mut opt = AdamW::new(0.1);
+        let mut w = vec![1.0f32];
+        let mut b = vec![1.0f32];
+        let mut ln = vec![1.0f32];
+        let mut had = vec![1.0f32];
+        opt.next_step();
+        opt.update("enc.dense.weight", &mut w, &[0.0], 0.1);
+        opt.update("enc.dense.bias", &mut b, &[0.0], 0.1);
+        opt.update("enc.LayerNorm.weight", &mut ln, &[0.0], 0.1);
+        opt.update("enc.hadamard.weight", &mut had, &[0.0], 0.1);
+        assert!(w[0] < 1.0);
+        assert_eq!(b[0], 1.0);
+        assert_eq!(ln[0], 1.0);
+        assert_eq!(had[0], 1.0);
+    }
+
+    #[test]
+    fn state_allocated_lazily() {
+        let mut opt = AdamW::new(0.0);
+        assert_eq!(opt.state_bytes(), 0);
+        let mut x = vec![0.0f32; 10];
+        opt.next_step();
+        opt.update("a.bias", &mut x, &vec![1.0; 10], 0.1);
+        assert_eq!(opt.state_bytes(), 10 * 2 * 4);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut opt = AdamW::new(0.0);
+        let mut x = vec![0.0f32; 4];
+        opt.next_step();
+        opt.update("a.bias", &mut x, &[1.0; 4], 0.1);
+        opt.reset();
+        assert_eq!(opt.state_bytes(), 0);
+        assert_eq!(opt.step_count(), 0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Optimizer layer: masked AdamW + learning-rate schedules + clipping.
+//!
+//! Gradients come back from the HLO artifacts; the optimizer runs on the
+//! host over exactly the *trainable* tensors (the freeze mask). Moments are
+//! allocated lazily per trainable tensor, so the Hadamard method's optimizer
+//! state is as tiny as its parameter set — the systems half of the paper's
+//! efficiency claim.
+
+pub mod adamw;
+pub mod schedule;
+
+pub use adamw::AdamW;
+pub use schedule::{LrSchedule, Schedule};
+
+/// Global-norm gradient clipping. Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f32) -> f32 {
+    let sq: f32 = grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|x| x * x)
+        .sum();
+    let norm = sq.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_scales_to_max() {
+        let mut g = vec![vec![3.0, 0.0], vec![0.0, 4.0]];
+        let norm = clip_global_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let new_sq: f32 = g.iter().flatten().map(|x| x * x).sum();
+        assert!((new_sq.sqrt() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_noop_below_max() {
+        let mut g = vec![vec![0.3, 0.4]];
+        clip_global_norm(&mut g, 1.0);
+        assert_eq!(g[0], vec![0.3, 0.4]);
+    }
+}

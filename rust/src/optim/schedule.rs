@@ -1,0 +1,80 @@
+//! Learning-rate schedules (linear warmup + linear decay, constant).
+
+/// Schedule kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup for `warmup` steps then linear decay to zero at
+    /// `total` steps (BERT fine-tuning standard).
+    LinearWarmupDecay { warmup: u64, total: u64 },
+}
+
+/// A schedule bound to a base learning rate.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub kind: Schedule,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, kind: Schedule::Constant }
+    }
+
+    pub fn warmup_decay(base: f32, warmup: u64, total: u64) -> Self {
+        LrSchedule {
+            base,
+            kind: Schedule::LinearWarmupDecay { warmup, total },
+        }
+    }
+
+    pub fn at(&self, step: u64) -> f32 {
+        match self.kind {
+            Schedule::Constant => self.base,
+            Schedule::LinearWarmupDecay { warmup, total } => {
+                if warmup > 0 && step < warmup {
+                    self.base * (step as f32 + 1.0) / warmup as f32
+                } else if step >= total {
+                    0.0
+                } else {
+                    let rest = (total - warmup).max(1) as f32;
+                    self.base * (total - step) as f32 / rest
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.01);
+        assert_eq!(s.at(0), 0.01);
+        assert_eq!(s.at(10_000), 0.01);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = LrSchedule::warmup_decay(1.0, 10, 110);
+        assert!(s.at(0) < 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!(s.at(10) <= 1.0);
+        assert!(s.at(60) < s.at(10));
+        assert_eq!(s.at(110), 0.0);
+        assert_eq!(s.at(200), 0.0);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::warmup_decay(3e-3, 20, 200);
+        let mut prev = f32::MAX;
+        for step in 20..200 {
+            let lr = s.at(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+}

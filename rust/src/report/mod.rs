@@ -1,0 +1,198 @@
+//! Reporting substrate: markdown tables, CSV, and text box-plot summaries
+//! (the figures are emitted as five-number summaries + CSV series since the
+//! harness is terminal-only).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple column-aligned markdown table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, &width) in cells.iter().zip(w) {
+                let _ = write!(s, " {c:<width$} |");
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &w));
+        let mut sep = String::from("|");
+        for &width in &w {
+            let _ = write!(sep, "{:-<1$}|", "", width + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &w));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write both .md and .csv under `dir/name.{md,csv}`.
+    pub fn save(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        std::fs::write(dir.as_ref().join(format!("{name}.md")), self.render())?;
+        std::fs::write(dir.as_ref().join(format!("{name}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Five-number summary of a sample (box-plot rendering for the figures).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl BoxStats {
+    pub fn from(values: &[f32]) -> BoxStats {
+        assert!(!values.is_empty());
+        let mut v: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = p * (v.len() - 1) as f64;
+            let lo = idx.floor() as usize;
+            let hi = idx.ceil() as usize;
+            if lo == hi {
+                v[lo]
+            } else {
+                v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+            }
+        };
+        BoxStats {
+            min: v[0],
+            q1: q(0.25),
+            median: q(0.5),
+            q3: q(0.75),
+            max: v[v.len() - 1],
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+        }
+    }
+
+    pub fn cells(&self) -> Vec<String> {
+        vec![
+            format!("{:.3}", self.min),
+            format!("{:.3}", self.q1),
+            format!("{:.3}", self.median),
+            format!("{:.3}", self.q3),
+            format!("{:.3}", self.max),
+            format!("{:.3}", self.mean),
+        ]
+    }
+
+    pub const HEADER: [&'static str; 6] = ["min", "q1", "median", "q3", "max", "mean"];
+}
+
+/// Format a parameter count as the paper does ("0.033%").
+pub fn pct(frac: f64) -> String {
+    format!("{:.3}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["task", "score"]);
+        t.row(vec!["mrpc".into(), "90.2".into()]);
+        t.row(vec!["cola-long-name".into(), "58.4".into()]);
+        let md = t.render();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| mrpc"));
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn boxstats_quartiles() {
+        let s = BoxStats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.q3, 4.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn pct_formats_like_paper() {
+        assert_eq!(pct(0.00033), "0.033%");
+    }
+}

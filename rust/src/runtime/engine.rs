@@ -1,0 +1,131 @@
+//! The PJRT engine: loads HLO-text artifacts, compiles them on the CPU
+//! client, caches executables, and runs them.
+//!
+//! HLO *text* is the interchange format (see DESIGN.md §4.1):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. One compiled executable per artifact,
+//! compiled on first use and cached for the life of the engine.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// Compile + execution statistics (exposed for the perf harness).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// The runtime engine. Single-threaded by construction (the PJRT wrapper
+/// types are not `Send`); the coordinator owns exactly one.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory produced by
+    /// `make artifacts`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Fetch (compiling on first use) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.artifact(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file.to_str().unwrap(),
+        )
+        .with_context(|| format!("loading HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += dt;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (used by the CLI `info`/warmup paths).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Run an artifact on host literals; unwraps the 1-tuple output into the
+    /// per-output literal list.
+    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Run an artifact on device buffers (the hot path: frozen parameters
+    /// stay resident on device; see `train::TrainSession`).
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute_b::<&PjRtBuffer>(inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+}

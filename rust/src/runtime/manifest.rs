@@ -1,0 +1,307 @@
+//! The AOT manifest: the single contract between the Python compile path and
+//! the Rust runtime.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.json` recording batch
+//! geometry, each model's parameter inventory (canonical order, shapes, init
+//! kinds, gradient-group membership) and each artifact's input/output lists.
+//! Nothing else couples the layers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Parameter initialization kind (mirrors `model.param_specs` in Python).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    Normal,
+    Zeros,
+    Ones,
+}
+
+/// One model parameter: canonical name, shape, init kind.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model-level metadata (one per size: tiny/base/large).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_len: usize,
+    pub params: Vec<ParamSpec>,
+    /// name -> index in `params` (canonical order).
+    pub index: HashMap<String, usize>,
+    /// gradient group -> member parameter names (canonical order).
+    pub groups: HashMap<String, Vec<String>>,
+    /// parameters trained during MLM pre-training.
+    pub mlm_group: Vec<String>,
+}
+
+impl ModelInfo {
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown parameter '{name}'"))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Total scalars in the vanilla PLM (the paper's denominator for
+    /// "0.033% of full fine-tuning"): the `full` group.
+    pub fn backbone_params(&self) -> usize {
+        let full = &self.groups["full"];
+        full.iter()
+            .map(|n| self.params[self.index[n]].numel())
+            .sum()
+    }
+
+    pub fn group(&self, name: &str) -> Result<&[String]> {
+        self.groups
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("unknown gradient group '{name}'"))
+    }
+}
+
+/// Artifact kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Forward,
+    Train,
+    Mlm,
+}
+
+/// One HLO artifact: file, model, entry-point metadata and I/O lists.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub kind: ArtifactKind,
+    /// "cls" | "reg" for train artifacts.
+    pub loss: Option<String>,
+    /// gradient group for train artifacts.
+    pub group: Option<String>,
+    /// batch tensor names appended after the parameters, in order.
+    pub batch_inputs: Vec<String>,
+    /// output names: "loss"/"logits"/... and "grad:<param>" entries.
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactInfo {
+    /// Names of parameters receiving gradients, in output order.
+    pub fn grad_params(&self) -> Vec<&str> {
+        self.outputs
+            .iter()
+            .filter_map(|o| o.strip_prefix("grad:"))
+            .collect()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    pub models: HashMap<String, ModelInfo>,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&root, dir)
+    }
+
+    pub fn from_json(root: &Json, dir: PathBuf) -> Result<Self> {
+        let mut models = HashMap::new();
+        for (name, m) in root.get("models")?.as_obj()?.iter() {
+            let cfg = m.get("config")?;
+            let mut params = Vec::new();
+            let mut index = HashMap::new();
+            for p in m.get("params")?.as_arr()? {
+                let pname = p.get("name")?.as_str()?.to_string();
+                let shape = p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                let init = match p.get("init")?.as_str()? {
+                    "normal" => InitKind::Normal,
+                    "zeros" => InitKind::Zeros,
+                    "ones" => InitKind::Ones,
+                    other => bail!("unknown init kind '{other}'"),
+                };
+                index.insert(pname.clone(), params.len());
+                params.push(ParamSpec { name: pname, shape, init });
+            }
+            let mut groups = HashMap::new();
+            for (g, list) in m.get("groups")?.as_obj()?.iter() {
+                groups.insert(g.clone(), list.str_vec()?);
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    layers: cfg.get("layers")?.as_usize()?,
+                    hidden: cfg.get("hidden")?.as_usize()?,
+                    heads: cfg.get("heads")?.as_usize()?,
+                    ffn: cfg.get("ffn")?.as_usize()?,
+                    vocab: cfg.get("vocab")?.as_usize()?,
+                    max_len: cfg.get("max_len")?.as_usize()?,
+                    params,
+                    index,
+                    groups,
+                    mlm_group: m.get("mlm_group")?.str_vec()?,
+                },
+            );
+        }
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in root.get("artifacts")?.as_obj()?.iter() {
+            let kind = match a.get("kind")?.as_str()? {
+                "fwd" => ArtifactKind::Forward,
+                "train" => ArtifactKind::Train,
+                "mlm" => ArtifactKind::Mlm,
+                other => bail!("unknown artifact kind '{other}'"),
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(a.get("file")?.as_str()?),
+                    model: a.get("model")?.as_str()?.to_string(),
+                    kind,
+                    loss: match a.get("loss")? {
+                        Json::Str(s) => Some(s.clone()),
+                        _ => None,
+                    },
+                    group: match a.get("group")? {
+                        Json::Str(s) => Some(s.clone()),
+                        _ => None,
+                    },
+                    batch_inputs: a.get("batch_inputs")?.str_vec()?,
+                    outputs: a.get("outputs")?.str_vec()?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            batch: root.get("batch")?.as_usize()?,
+            seq_len: root.get("seq_len")?.as_usize()?,
+            num_classes: root.get("num_classes")?.as_usize()?,
+            models,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Conventional artifact names.
+    pub fn fwd_name(model: &str) -> String {
+        format!("fwd_{model}")
+    }
+
+    pub fn train_name(loss: &str, group: &str, model: &str) -> String {
+        format!("train_{loss}_{group}_{model}")
+    }
+
+    pub fn mlm_name(model: &str) -> String {
+        format!("mlm_{model}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> &'static str {
+        r#"{
+          "version": 1, "batch": 2, "seq_len": 4, "num_classes": 3,
+          "models": {
+            "t": {
+              "config": {"layers": 1, "hidden": 8, "heads": 2, "ffn": 16,
+                          "vocab": 32, "max_len": 4, "head_dim": 4},
+              "params": [
+                {"name": "a.weight", "shape": [8, 8], "init": "normal"},
+                {"name": "a.bias", "shape": [8], "init": "zeros"},
+                {"name": "n.weight", "shape": [8], "init": "ones"}
+              ],
+              "groups": {"full": ["a.weight", "a.bias", "n.weight"],
+                          "head": ["a.bias"]},
+              "mlm_group": ["a.weight"]
+            }
+          },
+          "artifacts": {
+            "train_cls_head_t": {
+              "file": "train_cls_head_t.hlo.txt", "model": "t",
+              "kind": "train", "loss": "cls", "group": "head",
+              "batch_inputs": ["tokens", "type_ids"],
+              "outputs": ["loss", "grad:a.bias"]
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let root = json::parse(mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(&root, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.batch, 2);
+        let model = m.model("t").unwrap();
+        assert_eq!(model.params.len(), 3);
+        assert_eq!(model.total_params(), 64 + 8 + 8);
+        assert_eq!(model.param_index("n.weight").unwrap(), 2);
+        let a = m.artifact("train_cls_head_t").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Train);
+        assert_eq!(a.grad_params(), vec!["a.bias"]);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(Manifest::fwd_name("base"), "fwd_base");
+        assert_eq!(Manifest::train_name("cls", "hadamard", "large"),
+                   "train_cls_hadamard_large");
+        assert_eq!(Manifest::mlm_name("tiny"), "mlm_tiny");
+    }
+}

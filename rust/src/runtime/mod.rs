@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, tensors.
+//!
+//! The Rust side of the AOT bridge. `Engine` loads `artifacts/*.hlo.txt`
+//! (lowered once by `python -m compile.aot`), compiles each on the PJRT CPU
+//! client, and executes them from the coordinator hot path. Python never
+//! runs at this point.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
+pub use tensor::{IntTensor, Tensor};

@@ -1,0 +1,150 @@
+//! Host-side tensors and conversions to/from PJRT literals/buffers.
+//!
+//! Everything on the Rust hot path is f32 or i32; the `Tensor` type is a
+//! minimal dense array (shape + contiguous Vec) with just the operations the
+//! coordinator needs (the heavy math lives in the HLO artifacts).
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient};
+
+/// Dense f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![1.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// L2 norm (used by grad-clip and the analysis module).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Convert to an XLA literal (zero intermediate copies beyond the one
+    /// XLA makes internally).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    /// Upload directly host -> device.
+    pub fn to_buffer(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer::<f32>(&self.data, &self.shape, None)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+}
+
+/// Dense i32 tensor (token ids, labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(IntTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        IntTensor { shape, data: vec![0; n] }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn to_buffer(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer::<i32>(&self.data, &self.shape, None)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::zeros(vec![4, 4]).numel(), 16);
+        assert_eq!(Tensor::ones(vec![3]).data, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn norm() {
+        let t = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn int_literal() {
+        let t = IntTensor::new(vec![3], vec![7, -1, 2]).unwrap();
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -1, 2]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Evaluation: run the forward artifact over a dev split and score the
+//! task's headline metric. Also returns the Fig. 1/2 probe statistics
+//! (per-layer attention-output norms and adapter-output means).
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::data::{class_mask, BatchIter, Dataset, Label};
+use crate::metrics::task_score;
+use crate::model::ParamStore;
+use crate::runtime::{Engine, IntTensor, Manifest, Tensor};
+
+/// Aggregated evaluation output.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// headline metric on the paper's 0-100 scale.
+    pub score: f64,
+    pub preds: Vec<usize>,
+    pub golds: Vec<usize>,
+    pub pred_scores: Vec<f32>,
+    pub gold_scores: Vec<f32>,
+    /// per-layer attention-output spectral norms, all examples ([layer][i]).
+    pub attn_norms: Vec<Vec<f32>>,
+    /// per-layer adapter-output means (the Fig. 2 characteristic values).
+    pub attn_means: Vec<Vec<f32>>,
+    pub examples: usize,
+}
+
+/// Evaluate `store` on a dataset with the model's forward artifact.
+pub fn evaluate(
+    engine: &Engine,
+    model: &str,
+    store: &ParamStore,
+    ds: &Dataset,
+) -> Result<EvalResult> {
+    let m = engine.manifest().model(model)?;
+    let layers = m.layers;
+    let artifact = Manifest::fwd_name(model);
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+    let cmask = class_mask(ds.info.classes);
+
+    // params uploaded once for the whole eval
+    let param_bufs: Vec<PjRtBuffer> = store
+        .tensors
+        .iter()
+        .map(|t| engine.upload(t))
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut out = EvalResult {
+        score: 0.0,
+        preds: Vec::new(),
+        golds: Vec::new(),
+        pred_scores: Vec::new(),
+        gold_scores: Vec::new(),
+        attn_norms: vec![Vec::new(); layers],
+        attn_means: vec![Vec::new(); layers],
+        examples: 0,
+    };
+
+    let client = engine.client();
+    for b in BatchIter::sequential(ds, batch, seq) {
+        let batch_bufs = vec![
+            IntTensor::new(vec![batch, seq], b.tokens.clone())?.to_buffer(client)?,
+            IntTensor::new(vec![batch, seq], b.type_ids.clone())?.to_buffer(client)?,
+            Tensor::new(vec![batch, seq], b.attn_mask.clone())?.to_buffer(client)?,
+        ];
+        let mut inputs: Vec<&PjRtBuffer> = Vec::new();
+        inputs.extend(param_bufs.iter());
+        inputs.extend(batch_bufs.iter());
+        let outs = engine.run_buffers(&artifact, &inputs)?;
+        let logits = outs[0].to_vec::<f32>()?; // [B, 3]
+        let regression = outs[1].to_vec::<f32>()?; // [B]
+        let norms = outs[2].to_vec::<f32>()?; // [B, layers]
+        let means = outs[3].to_vec::<f32>()?; // [B, layers]
+
+        for i in 0..b.real {
+            let e = &ds.examples[out.examples + i];
+            match e.label {
+                Label::Class(c) => {
+                    let row = &logits[i * 3..i * 3 + 3];
+                    let mut best = 0;
+                    let mut bestv = f32::MIN;
+                    for (c2, (&l, &m2)) in row.iter().zip(cmask.iter()).enumerate() {
+                        if m2 > 0.5 && l > bestv {
+                            bestv = l;
+                            best = c2;
+                        }
+                    }
+                    out.preds.push(best);
+                    out.golds.push(c);
+                }
+                Label::Score(s) => {
+                    out.pred_scores.push(regression[i]);
+                    out.gold_scores.push(s);
+                }
+            }
+            for l in 0..layers {
+                out.attn_norms[l].push(norms[i * layers + l]);
+                out.attn_means[l].push(means[i * layers + l]);
+            }
+        }
+        out.examples += b.real;
+    }
+
+    out.score = task_score(
+        ds.info.metric,
+        &out.preds,
+        &out.golds,
+        &out.pred_scores,
+        &out.gold_scores,
+    );
+    Ok(out)
+}

@@ -1,0 +1,12 @@
+//! Training layer: sessions (device-resident hot path), the two-stage
+//! tuning pipeline, MLM pre-training, and evaluation.
+
+pub mod eval;
+pub mod pretrain;
+pub mod session;
+pub mod tune;
+
+pub use eval::{evaluate, EvalResult};
+pub use pretrain::{checkpoint_path, load_or_pretrain, pretrain, PretrainOpts, PretrainResult};
+pub use session::{Session, TrainOpts};
+pub use tune::{tune, TuneOpts, TuneResult};

@@ -1,0 +1,96 @@
+//! MLM pre-training: manufactures the "pre-trained language model" that the
+//! paper downloads from HuggingFace (DESIGN.md §3 substitution). Trains the
+//! backbone (adapters frozen at identity, task heads untouched) on the
+//! synthetic corpus and writes a checkpoint the downstream experiments
+//! reload.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::data::{mlm_batch, Corpus};
+use crate::model::{FreezeMask, ParamStore};
+use crate::optim::LrSchedule;
+use crate::runtime::{Engine, Manifest};
+use crate::util::Rng;
+
+use super::session::Session;
+
+/// Pre-training configuration.
+#[derive(Debug, Clone)]
+pub struct PretrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: u64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainOpts {
+    fn default() -> Self {
+        PretrainOpts { steps: 600, lr: 1e-3, warmup: 50, seed: 1234, log_every: 50 }
+    }
+}
+
+/// Result: final store + loss curve.
+pub struct PretrainResult {
+    pub store: ParamStore,
+    pub losses: Vec<f32>,
+}
+
+/// Run MLM pre-training for `model`, returning the trained store.
+pub fn pretrain(
+    engine: &Engine,
+    model: &str,
+    opts: &PretrainOpts,
+) -> Result<PretrainResult> {
+    let info = engine.manifest().model(model)?;
+    let store = ParamStore::init(info, opts.seed);
+    let mask = FreezeMask::from_names(info, &info.mlm_group.clone());
+    let sched = LrSchedule::warmup_decay(opts.lr, opts.warmup, opts.steps as u64);
+    let artifact = Manifest::mlm_name(model);
+    let mut session = Session::new(engine, &artifact, store, mask, sched)?;
+
+    let b = engine.manifest().batch;
+    let s = engine.manifest().seq_len;
+    let mut corpus = Corpus::new(opts.seed ^ 0xC0FFEE);
+    let mut rng = Rng::new(opts.seed ^ 0xBEEF);
+
+    for step in 0..opts.steps {
+        let batch = mlm_batch(&mut corpus, &mut rng, b, s);
+        let loss = session.step_mlm(&batch, b, s)?;
+        if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
+            println!("  mlm[{model}] step {step:>5}  loss {loss:.4}");
+        }
+    }
+    let losses = session.losses.clone();
+    Ok(PretrainResult { store: session.into_store(), losses })
+}
+
+/// Conventional checkpoint path for a pre-trained backbone.
+pub fn checkpoint_path(dir: impl AsRef<Path>, model: &str, seed: u64) -> PathBuf {
+    dir.as_ref().join(format!("{model}_s{seed}.ckpt"))
+}
+
+/// Load a cached backbone, or pre-train and cache it. This is what every
+/// experiment driver calls — the "download the PLM" step of the paper.
+pub fn load_or_pretrain(
+    engine: &Engine,
+    model: &str,
+    dir: impl AsRef<Path>,
+    opts: &PretrainOpts,
+) -> Result<ParamStore> {
+    let path = checkpoint_path(&dir, model, opts.seed);
+    if path.exists() {
+        let store = ParamStore::load(&path)?;
+        store.check_against(engine.manifest().model(model)?)?;
+        return Ok(store);
+    }
+    println!("pre-training backbone '{model}' ({} steps)...", opts.steps);
+    let result = pretrain(engine, model, opts)?;
+    let first = result.losses.first().copied().unwrap_or(0.0);
+    let last = result.losses.last().copied().unwrap_or(0.0);
+    println!("  mlm[{model}] loss {first:.3} -> {last:.3}");
+    result.store.save(&path)?;
+    Ok(result.store)
+}

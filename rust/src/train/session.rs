@@ -1,0 +1,237 @@
+//! TrainSession: the training hot path.
+//!
+//! Owns the device-resident copy of the parameters. On each step it uploads
+//! only the batch tensors (params are already on device), executes the
+//! gradient-group artifact, applies masked AdamW on the host, and re-uploads
+//! only the tensors that changed — for the Hadamard method that is ~0.03%
+//! of the parameter bytes, which is what keeps its step cost near the pure
+//! forward cost (EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::data::{Batch, MlmBatch};
+use crate::model::{FreezeMask, ParamStore};
+use crate::optim::{AdamW, LrSchedule};
+use crate::runtime::{ArtifactKind, Engine, IntTensor, Tensor};
+
+/// Options shared by all training loops.
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub batch: usize,
+    pub grad_clip: f32,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts { batch: 16, grad_clip: 1.0, log_every: 50, seed: 0 }
+    }
+}
+
+/// A live training session against one artifact.
+pub struct Session<'e> {
+    engine: &'e Engine,
+    pub artifact: String,
+    store: ParamStore,
+    pub mask: FreezeMask,
+    pub opt: AdamW,
+    pub sched: LrSchedule,
+    /// device-resident parameters, canonical order.
+    bufs: Vec<PjRtBuffer>,
+    /// (output index offset by 1 for loss, param index, trainable).
+    grad_map: Vec<(usize, usize, bool)>,
+    pub losses: Vec<f32>,
+}
+
+impl<'e> Session<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        artifact: &str,
+        store: ParamStore,
+        mask: FreezeMask,
+        sched: LrSchedule,
+    ) -> Result<Self> {
+        let info = engine.manifest().artifact(artifact)?.clone();
+        let model = engine.manifest().model(&info.model)?;
+        store
+            .check_against(model)
+            .context("store/manifest mismatch")?;
+        if mask.trainable.len() != store.len() {
+            bail!("mask length mismatch");
+        }
+        // map grad outputs -> param indices
+        let mut grad_map = Vec::new();
+        for (gi, gname) in info.grad_params().iter().enumerate() {
+            let pi = model.param_index(gname)?;
+            grad_map.push((gi + 1, pi, mask.is_trainable(pi)));
+        }
+        // Every trainable param must receive a gradient from this artifact.
+        for (pi, &t) in mask.trainable.iter().enumerate() {
+            if t && !grad_map.iter().any(|&(_, p, _)| p == pi) {
+                bail!(
+                    "trainable parameter '{}' gets no gradient from artifact '{artifact}'",
+                    store.names[pi]
+                );
+            }
+        }
+        let bufs = store
+            .tensors
+            .iter()
+            .map(|t| engine.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Session {
+            engine,
+            artifact: artifact.to_string(),
+            store,
+            mask,
+            opt: AdamW::paper_defaults(),
+            sched,
+            bufs,
+            grad_map,
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn store(&self) -> &ParamStore {
+        &self.store
+    }
+
+    pub fn into_store(self) -> ParamStore {
+        self.store
+    }
+
+    /// Number of trainable scalars (perf + paper accounting).
+    pub fn trainable_scalars(&self) -> usize {
+        self.store
+            .tensors
+            .iter()
+            .zip(&self.mask.trainable)
+            .filter(|(_, &t)| t)
+            .map(|(t, _)| t.numel())
+            .sum()
+    }
+
+    /// Execute one step given pre-built batch buffers, then update + resync.
+    fn step_inner(&mut self, batch_bufs: Vec<PjRtBuffer>) -> Result<f32> {
+        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.bufs.len() + batch_bufs.len());
+        inputs.extend(self.bufs.iter());
+        inputs.extend(batch_bufs.iter());
+        let outs = self.engine.run_buffers(&self.artifact, &inputs)?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+
+        // gather trainable grads
+        let mut grads: Vec<(usize, Vec<f32>)> = Vec::new();
+        for &(oi, pi, trainable) in &self.grad_map {
+            if trainable {
+                grads.push((pi, outs[oi].to_vec::<f32>()?));
+            }
+        }
+        // global-norm clip
+        let clip = 1.0f32;
+        let sq: f32 = grads
+            .iter()
+            .flat_map(|(_, g)| g.iter())
+            .map(|x| x * x)
+            .sum();
+        let norm = sq.sqrt();
+        let scale = if norm > clip && norm > 0.0 { clip / norm } else { 1.0 };
+
+        self.opt.next_step();
+        let lr = self.sched.at(self.opt.step_count() - 1);
+        for (pi, mut g) in grads {
+            if scale != 1.0 {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            let name = self.store.names[pi].clone();
+            self.opt
+                .update(&name, &mut self.store.tensors[pi].data, &g, lr);
+            // re-upload only what changed
+            self.bufs[pi] = self.engine.upload(&self.store.tensors[pi])?;
+        }
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// One classification step.
+    pub fn step_cls(&mut self, batch: &Batch, class_mask: &[f32]) -> Result<f32> {
+        let kind = self.engine.manifest().artifact(&self.artifact)?.kind;
+        if kind != ArtifactKind::Train {
+            bail!("artifact '{}' is not a train artifact", self.artifact);
+        }
+        let client = self.engine.client();
+        let b = batch.size;
+        let s = batch.seq;
+        let bufs = vec![
+            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
+            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, 3], batch.labels_onehot.clone())?.to_buffer(client)?,
+            Tensor::new(vec![3], class_mask.to_vec())?.to_buffer(client)?,
+        ];
+        self.step_inner(bufs)
+    }
+
+    /// One regression step (STS-B).
+    pub fn step_reg(&mut self, batch: &Batch) -> Result<f32> {
+        let client = self.engine.client();
+        let b = batch.size;
+        let s = batch.seq;
+        let bufs = vec![
+            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
+            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b], batch.labels_f32.clone())?.to_buffer(client)?,
+        ];
+        self.step_inner(bufs)
+    }
+
+    /// One MLM pre-training step.
+    pub fn step_mlm(&mut self, batch: &MlmBatch, b: usize, s: usize) -> Result<f32> {
+        let client = self.engine.client();
+        let bufs = vec![
+            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
+            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
+            IntTensor::new(vec![b, s], batch.labels.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, s], batch.loss_mask.clone())?.to_buffer(client)?,
+        ];
+        self.step_inner(bufs)
+    }
+
+    /// Raw gradient read-back for the analysis module (Table 1): executes
+    /// one step *without* updating, returning (loss, per-grad-param L1
+    /// norms in artifact output order).
+    pub fn probe_gradients(
+        &mut self,
+        batch: &Batch,
+        class_mask: &[f32],
+    ) -> Result<(f32, Vec<(String, f64)>)> {
+        let client = self.engine.client();
+        let b = batch.size;
+        let s = batch.seq;
+        let batch_bufs = vec![
+            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
+            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
+            Tensor::new(vec![b, 3], batch.labels_onehot.clone())?.to_buffer(client)?,
+            Tensor::new(vec![3], class_mask.to_vec())?.to_buffer(client)?,
+        ];
+        let mut inputs: Vec<&PjRtBuffer> = Vec::new();
+        inputs.extend(self.bufs.iter());
+        inputs.extend(batch_bufs.iter());
+        let outs = self.engine.run_buffers(&self.artifact, &inputs)?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let mut norms = Vec::new();
+        let info = self.engine.manifest().artifact(&self.artifact)?.clone();
+        for (gi, gname) in info.grad_params().iter().enumerate() {
+            let g = outs[gi + 1].to_vec::<f32>()?;
+            let l1: f64 = g.iter().map(|x| x.abs() as f64).sum();
+            norms.push((gname.to_string(), l1));
+        }
+        Ok((loss, norms))
+    }
+}

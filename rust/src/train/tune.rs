@@ -1,0 +1,181 @@
+//! The paper's adapter tuning pipeline (Sec. 3.2).
+//!
+//! Stage 1: unfreeze and train only the pooling + classifier modules.
+//! Stage 2: reload them, inject the (already-present, identity-initialized)
+//! Hadamard adapter, and fine-tune only the adapter + normalization modules.
+//! Single-stage methods (full FT, BitFit, LoRA, ...) skip stage 1.
+
+use anyhow::Result;
+
+use crate::data::{class_mask, BatchIter, Dataset};
+use crate::methods::{Method, Pipeline};
+use crate::model::{FreezeMask, ParamStore};
+use crate::optim::LrSchedule;
+use crate::runtime::{Engine, Manifest};
+use crate::util::Rng;
+
+use super::eval::{evaluate, EvalResult};
+use super::session::{Session, TrainOpts};
+
+/// Step budgets for the two stages.
+#[derive(Debug, Clone)]
+pub struct TuneOpts {
+    pub stage1_steps: usize,
+    pub main_steps: usize,
+    pub warmup_frac: f32,
+    pub train: TrainOpts,
+    /// Override the method's default LRs (used by sweeps).
+    pub lr_stage1: Option<f32>,
+    pub lr_main: Option<f32>,
+    pub verbose: bool,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts {
+            stage1_steps: 120,
+            main_steps: 360,
+            warmup_frac: 0.1,
+            train: TrainOpts::default(),
+            lr_stage1: None,
+            lr_main: None,
+            verbose: false,
+        }
+    }
+}
+
+impl TuneOpts {
+    /// Fast settings for tests and smoke runs.
+    pub fn quick() -> Self {
+        TuneOpts { stage1_steps: 20, main_steps: 40, ..Default::default() }
+    }
+}
+
+/// Outcome of one (model, task, method) tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub score: f64,
+    pub eval: EvalResult,
+    pub stage1_losses: Vec<f32>,
+    pub main_losses: Vec<f32>,
+    /// trainable scalars in the main stage (paper accounting, incl. head
+    /// when the method trains it jointly).
+    pub trainable_scalars: usize,
+    /// adapter-only scalars (paper's headline %, excludes the task head).
+    pub adapter_scalars: usize,
+    pub param_fraction: f64,
+    /// final store (for the analysis module / adapter extraction).
+    pub store: ParamStore,
+}
+
+fn loss_kind(ds: &Dataset) -> &'static str {
+    if ds.info.regression {
+        "reg"
+    } else {
+        "cls"
+    }
+}
+
+/// Run `steps` training steps of `session` over `train` batches.
+fn run_steps(
+    session: &mut Session,
+    ds: &Dataset,
+    steps: usize,
+    batch: usize,
+    seq: usize,
+    seed: u64,
+    verbose: bool,
+) -> Result<()> {
+    let cmask = class_mask(ds.info.classes);
+    let reg = ds.info.regression;
+    let mut rng = Rng::new(seed);
+    let mut done = 0;
+    'outer: loop {
+        let mut it = BatchIter::new(ds, &mut rng, batch, seq);
+        while let Some(b) = it.next() {
+            let loss = if reg {
+                session.step_reg(&b)?
+            } else {
+                session.step_cls(&b, &cmask)?
+            };
+            done += 1;
+            if verbose && done % 50 == 0 {
+                println!("    step {done:>5}  loss {loss:.4}");
+            }
+            if done >= steps {
+                break 'outer;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Tune a pre-trained backbone on a task with a method; returns the scored
+/// result. `backbone` is the MLM checkpoint (never mutated).
+pub fn tune(
+    engine: &Engine,
+    model: &str,
+    backbone: &ParamStore,
+    train_ds: &Dataset,
+    dev_ds: &Dataset,
+    method: &Method,
+    opts: &TuneOpts,
+) -> Result<TuneResult> {
+    let info = engine.manifest().model(model)?;
+    let batch = engine.manifest().batch;
+    let seq = engine.manifest().seq_len;
+    let lk = loss_kind(train_ds);
+    let seed = opts.train.seed ^ crate::util::fnv1a(&format!(
+        "{model}/{}/{}", train_ds.info.name, method.name
+    ));
+
+    let mut store = backbone.clone();
+    let mut stage1_losses = Vec::new();
+
+    // ---- stage 1: train the classifier module (paper Fig. 3a) ----
+    if method.pipeline == Pipeline::TwoStage && opts.stage1_steps > 0 {
+        let head_names = info.group("head")?.to_vec();
+        let mask = FreezeMask::from_names(info, &head_names);
+        let lr = opts.lr_stage1.unwrap_or(method.lr_stage1);
+        let sched = LrSchedule::warmup_decay(
+            lr,
+            (opts.stage1_steps as f32 * opts.warmup_frac) as u64,
+            opts.stage1_steps as u64,
+        );
+        let artifact = Manifest::train_name(lk, "head", model);
+        let mut s1 = Session::new(engine, &artifact, store, mask, sched)?;
+        run_steps(&mut s1, train_ds, opts.stage1_steps, batch, seq, seed ^ 1,
+                  opts.verbose)?;
+        stage1_losses = s1.losses.clone();
+        store = s1.into_store();
+    }
+
+    // ---- main stage: the method's mask (paper Fig. 3b) ----
+    let mask = method.main_mask(info)?;
+    let lr = opts.lr_main.unwrap_or(method.lr_main);
+    let sched = LrSchedule::warmup_decay(
+        lr,
+        (opts.main_steps as f32 * opts.warmup_frac) as u64,
+        opts.main_steps as u64,
+    );
+    let artifact = Manifest::train_name(lk, method.group, model);
+    let mut s2 = Session::new(engine, &artifact, store, mask, sched)?;
+    let trainable_scalars = s2.trainable_scalars();
+    run_steps(&mut s2, train_ds, opts.main_steps, batch, seq, seed ^ 2,
+              opts.verbose)?;
+    let main_losses = s2.losses.clone();
+    let store = s2.into_store();
+
+    // ---- evaluate ----
+    let eval = evaluate(engine, model, &store, dev_ds)?;
+    Ok(TuneResult {
+        score: eval.score,
+        eval: eval.clone(),
+        stage1_losses,
+        main_losses,
+        trainable_scalars,
+        adapter_scalars: method.adapter_params(info)?,
+        param_fraction: method.param_fraction(info)?,
+        store,
+    })
+}

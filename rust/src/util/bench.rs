@@ -1,0 +1,108 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets in `rust/benches/` are plain binaries
+//! (`harness = false`) built on this module: warmup, timed iterations,
+//! mean / p50 / p95 / throughput reporting, and a stable one-line-per-bench
+//! output format that `bench_output.txt` captures.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Sample {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<4} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} min={:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        );
+    }
+
+    /// Mean wall time in milliseconds (for derived throughput lines).
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Benchmark runner with fixed warmup + measurement iteration counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    /// Quick config for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Bench { warmup: 1, iters: 5 }
+    }
+
+    /// Run `f` repeatedly and report. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let s = Sample {
+            name: name.to_string(),
+            iters: self.iters,
+            mean: total / self.iters as u32,
+            p50: times[times.len() / 2],
+            p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            min: times[0],
+        };
+        s.print();
+        s
+    }
+}
+
+/// Print a derived throughput line in the shared bench format.
+pub fn report_throughput(name: &str, items: f64, sample: &Sample) {
+    let per_sec = items / sample.mean.as_secs_f64();
+    println!("bench {name:<44} throughput={per_sec:>12.1}/s");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench::new(1, 4);
+        let s = b.run("noop", || 1 + 1);
+        assert_eq!(s.iters, 4);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let b = Bench::new(0, 3);
+        let s = b.run("sleep1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(s.mean >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,31 @@
+//! Shared substrates built in-tree because the offline environment carries
+//! no third-party crates beyond `xla`/`anyhow`: JSON, deterministic RNG, and
+//! a mini benchmark harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Simple stable hash (FNV-1a) for cache keys and run ids.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_stable_and_distinct() {
+        assert_eq!(fnv1a("abc"), fnv1a("abc"));
+        assert_ne!(fnv1a("abc"), fnv1a("abd"));
+    }
+}

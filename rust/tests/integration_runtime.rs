@@ -1,0 +1,191 @@
+//! Integration: the Rust runtime against real AOT artifacts (tiny model).
+//!
+//! These tests need `make artifacts` to have run; they are the proof that
+//! the three layers compose: Pallas kernels -> JAX model -> HLO text ->
+//! PJRT execution from Rust.
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::model::{FreezeMask, ParamStore};
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest};
+use hadapt::train::{evaluate, Session};
+
+fn engine() -> Engine {
+    Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let e = engine();
+    let m = e.manifest();
+    assert_eq!(m.batch, 16);
+    assert_eq!(m.seq_len, 32);
+    let tiny = m.model("tiny").unwrap();
+    assert!(tiny.total_params() > 0);
+    // every artifact's grad params exist in its model
+    for a in m.artifacts.values() {
+        let model = m.model(&a.model).unwrap();
+        for g in a.grad_params() {
+            assert!(model.param_index(g).is_ok(), "{g} in {}", a.name);
+        }
+    }
+    // groups cover what they claim
+    let full = tiny.group("full").unwrap();
+    assert!(full.iter().all(|n| !n.contains(".hadamard.")));
+    let had = tiny.group("hadamard").unwrap();
+    assert!(had.iter().any(|n| n.ends_with(".hadamard.weight")));
+}
+
+#[test]
+fn forward_artifact_runs_and_probes_shape() {
+    let e = engine();
+    let info = e.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 42);
+    let ds = generate(task_info("sst2").unwrap(), 7, "dev", 48);
+    let r = evaluate(&e, "tiny", &store, &ds).unwrap();
+    assert_eq!(r.examples, 48);
+    assert_eq!(r.preds.len(), 48);
+    assert_eq!(r.attn_norms.len(), info.layers);
+    assert_eq!(r.attn_norms[0].len(), 48);
+    // untrained model should be near chance but must produce a valid score
+    assert!(r.score >= 0.0 && r.score <= 100.0);
+    // attention norms are positive
+    assert!(r.attn_norms[0].iter().all(|&x| x > 0.0));
+}
+
+#[test]
+fn identity_adapters_do_not_change_logits() {
+    // Perturbing LoRA-A (B=0) and Houlsby-down (up=0) must leave the
+    // forward output bit-identical; perturbing hadamard.bias must change it.
+    let e = engine();
+    let info = e.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 42);
+    let ds = generate(task_info("rte").unwrap(), 3, "dev", 16);
+    let base = evaluate(&e, "tiny", &store, &ds).unwrap();
+
+    let mut s2 = store.clone();
+    for t in s2.get_mut("encoder.layer.0.lora.query.a").unwrap().data.iter_mut() {
+        *t += 1.0;
+    }
+    for t in s2
+        .get_mut("encoder.layer.0.houlsby.attn.down.weight")
+        .unwrap()
+        .data
+        .iter_mut()
+    {
+        *t += 1.0;
+    }
+    let same = evaluate(&e, "tiny", &s2, &ds).unwrap();
+    assert_eq!(base.preds, same.preds);
+    assert_eq!(base.attn_means, same.attn_means);
+
+    let mut s3 = store.clone();
+    for t in s3.get_mut("encoder.layer.0.hadamard.bias").unwrap().data.iter_mut() {
+        *t += 0.5;
+    }
+    let diff = evaluate(&e, "tiny", &s3, &ds).unwrap();
+    assert_ne!(base.attn_means, diff.attn_means);
+}
+
+#[test]
+fn train_step_decreases_loss_and_respects_mask() {
+    let e = engine();
+    let info = e.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 1);
+    let frozen_snapshot = store.clone();
+
+    let ds = generate(task_info("sst2").unwrap(), 5, "train", 64);
+    let cm = class_mask(2);
+    let mask = FreezeMask::from_names(
+        &info,
+        &info.group("hadamard").unwrap().to_vec(),
+    );
+    let artifact = Manifest::train_name("cls", "hadamard", "tiny");
+    let mut session = Session::new(
+        &e,
+        &artifact,
+        store,
+        mask,
+        LrSchedule::constant(5e-3),
+    )
+    .unwrap();
+
+    let idx: Vec<usize> = (0..16).collect();
+    let b = make_batch(&ds, &idx, 16, 32);
+    let first = session.step_cls(&b, &cm).unwrap();
+    let mut last = first;
+    for _ in 0..15 {
+        last = session.step_cls(&b, &cm).unwrap();
+    }
+    assert!(
+        last < first,
+        "loss should decrease on a fixed batch: {first} -> {last}"
+    );
+
+    let tuned = session.into_store();
+    // frozen params identical
+    for (name, (a, b)) in tuned
+        .names
+        .iter()
+        .zip(tuned.tensors.iter().zip(&frozen_snapshot.tensors))
+    {
+        let in_group = info.group("hadamard").unwrap().contains(name);
+        if !in_group {
+            assert_eq!(a, b, "frozen param '{name}' changed");
+        }
+    }
+    // hadamard params moved
+    let moved = tuned
+        .get("encoder.layer.0.hadamard.bias")
+        .unwrap()
+        .data
+        .iter()
+        .any(|&x| x != 0.0);
+    assert!(moved, "hadamard bias never updated");
+}
+
+#[test]
+fn regression_artifact_runs() {
+    let e = engine();
+    let info = e.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 2);
+    let ds = generate(task_info("stsb").unwrap(), 9, "train", 32);
+    let mask = FreezeMask::from_names(&info, &info.group("head").unwrap().to_vec());
+    let artifact = Manifest::train_name("reg", "head", "tiny");
+    let mut session =
+        Session::new(&e, &artifact, store, mask, LrSchedule::constant(3e-3)).unwrap();
+    let idx: Vec<usize> = (0..16).collect();
+    let b = make_batch(&ds, &idx, 16, 32);
+    let first = session.step_reg(&b).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = session.step_reg(&b).unwrap();
+    }
+    assert!(last < first, "reg loss: {first} -> {last}");
+}
+
+#[test]
+fn mlm_pretraining_reduces_loss() {
+    let e = engine();
+    let opts = hadapt::train::PretrainOpts {
+        steps: 80,
+        lr: 5e-3,
+        warmup: 10,
+        seed: 77,
+        log_every: 0,
+    };
+    let r = hadapt::train::pretrain(&e, "tiny", &opts).unwrap();
+    let first = r.losses[0];
+    // average the tail to smooth batch noise
+    let tail: f32 =
+        r.losses[60..].iter().sum::<f32>() / (r.losses.len() - 60) as f32;
+    // ln(512) ~ 6.24 at init. 80 steps is far from convergence (the full
+    // pre-training runs 600-1500 steps); the meaningful bound here is the
+    // marginal-unigram floor ~6.22 — dropping below it requires using
+    // context, which proves gradients flow through the whole stack
+    // (Pallas custom VJPs included).
+    assert!(first > 5.0, "first {first}");
+    assert!(tail < 6.21, "mlm loss {first} -> tail {tail} (unigram floor not crossed)");
+    assert!(tail < first - 0.02, "mlm loss {first} -> tail {tail}");
+}

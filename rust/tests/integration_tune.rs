@@ -1,0 +1,131 @@
+//! Integration: the full two-stage tuning pipeline on the tiny model,
+//! exercising coordinator, methods, masks, sessions and eval end-to-end.
+//! Requires `make artifacts`.
+
+use hadapt::config::Config;
+use hadapt::coordinator::{Coordinator, RunSpec};
+use hadapt::methods::Method;
+use hadapt::runtime::Engine;
+use hadapt::train::{tune, PretrainOpts, TuneOpts};
+
+fn test_config(tag: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    cfg.checkpoints_dir =
+        std::env::temp_dir().join(format!("hadapt_it_{tag}_ckpt"));
+    cfg.results_dir = std::env::temp_dir().join(format!("hadapt_it_{tag}_res"));
+    cfg.models = vec!["tiny".into()];
+    cfg.quick = true;
+    cfg.pretrain_steps = 80;
+    cfg.pretrain_lr = 5e-3;
+    cfg
+}
+
+#[test]
+fn two_stage_hadamard_beats_frozen_backbone() {
+    let cfg = test_config("two_stage");
+    let _ = std::fs::remove_dir_all(&cfg.checkpoints_dir);
+    let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    let mut coord = Coordinator::new(cfg).unwrap();
+
+    let spec = RunSpec {
+        model: "tiny".into(),
+        task: "sst2".into(),
+        method: "hadamard".into(),
+        seed: coord.config.seed,
+    };
+    let rec = coord.run(&spec).unwrap();
+    // quick budgets: just verify the pipeline trains and scores validly
+    assert!(rec.score >= 0.0 && rec.score <= 100.0);
+    assert!(rec.trainable_scalars > 0);
+    // the paper's efficiency claim holds structurally even at tiny scale:
+    // adapter params are a small fraction of the backbone
+    assert!(
+        rec.param_fraction < 0.05,
+        "adapter fraction {}",
+        rec.param_fraction
+    );
+    // second call hits the cache (same id)
+    let rec2 = coord.run(&spec).unwrap();
+    assert_eq!(rec.score, rec2.score);
+}
+
+#[test]
+fn methods_have_ordered_param_budgets() {
+    let engine =
+        Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+    let info = engine.manifest().model("tiny").unwrap();
+    let frac = |m: Method| m.param_fraction(info).unwrap();
+    let hadamard = frac(Method::hadamard());
+    let bitfit = frac(Method::bitfit());
+    let houlsby = frac(Method::houlsby());
+    let full = 1.0;
+    // paper Table 3 ordering: hadamard < bitfit-ish < houlsby << full.
+    assert!(hadamard < houlsby, "hadamard {hadamard} houlsby {houlsby}");
+    assert!(hadamard < full);
+    assert!(bitfit < houlsby);
+    // headline magnitude: hadamard trains < 2% even on the tiny model
+    // (0.033% at BERT scale; fraction grows as models shrink)
+    assert!(hadamard < 0.02, "hadamard fraction {hadamard}");
+}
+
+#[test]
+fn layer_ablation_trains_fewer_params() {
+    let engine =
+        Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+    let info = engine.manifest().model("tiny").unwrap();
+    let k1 = Method::by_name("hadamard@1L").unwrap();
+    let full = Method::hadamard();
+    let a = k1.adapter_params(info).unwrap();
+    let b = full.adapter_params(info).unwrap();
+    assert!(a < b, "{a} !< {b}");
+    // exactly layers-proportional for the adapter+norm vectors
+    assert_eq!(a * info.layers, b);
+}
+
+#[test]
+fn single_stage_baselines_run() {
+    let cfg = test_config("baselines");
+    let _ = std::fs::remove_dir_all(&cfg.checkpoints_dir);
+    let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    let mut coord = Coordinator::new(cfg).unwrap();
+    for method in ["bitfit", "lora", "ia3"] {
+        let rec = coord
+            .run(&RunSpec {
+                model: "tiny".into(),
+                task: "rte".into(),
+                method: method.into(),
+                seed: coord.config.seed,
+            })
+            .unwrap();
+        assert!(rec.score >= 0.0 && rec.score <= 100.0, "{method}");
+    }
+}
+
+#[test]
+fn tune_directly_with_quick_opts() {
+    let engine =
+        Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+    let opts = PretrainOpts { steps: 40, lr: 5e-3, warmup: 5, seed: 3, log_every: 0 };
+    let backbone = hadapt::train::pretrain(&engine, "tiny", &opts).unwrap().store;
+    let train_ds = hadapt::data::generate(
+        hadapt::data::task_info("stsb").unwrap(), 3, "train", 128);
+    let dev_ds = hadapt::data::generate(
+        hadapt::data::task_info("stsb").unwrap(), 3, "dev", 64);
+    let r = tune(
+        &engine,
+        "tiny",
+        &backbone,
+        &train_ds,
+        &dev_ds,
+        &Method::hadamard(),
+        &TuneOpts::quick(),
+    )
+    .unwrap();
+    // regression path end-to-end: Pearson in [-100, 100], losses recorded
+    assert!(r.score.abs() <= 100.0);
+    assert_eq!(r.stage1_losses.len(), 20);
+    assert_eq!(r.main_losses.len(), 40);
+    // stage-2 must not have trained the head (paper: reload + freeze)
+    assert!(r.trainable_scalars < backbone.total_scalars() / 10);
+}

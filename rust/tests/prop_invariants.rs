@@ -1,0 +1,308 @@
+//! Property-based tests over coordinator invariants (hand-rolled generator
+//! loop — proptest is unavailable offline; `util::Rng` drives randomized
+//! cases with printed seeds so failures are reproducible).
+
+use std::collections::HashMap;
+
+use hadapt::data::{generate, make_batch, Label, TASKS};
+use hadapt::metrics::{accuracy, f1, matthews, pearson};
+use hadapt::model::{layer_of, parse_modules, FreezeMask, LayerRange, Module};
+use hadapt::optim::{clip_global_norm, AdamW, LrSchedule};
+use hadapt::runtime::{InitKind, ModelInfo, ParamSpec};
+use hadapt::util::{json, Json, Rng};
+
+const CASES: usize = 60;
+
+fn rand_model(rng: &mut Rng) -> ModelInfo {
+    let layers = rng.range(1, 6);
+    let hidden = [16, 32, 64][rng.below(3)];
+    let mut params = Vec::new();
+    params.push(ParamSpec {
+        name: "embeddings.word_embeddings.weight".into(),
+        shape: vec![rng.range(16, 64), hidden],
+        init: InitKind::Normal,
+    });
+    for l in 0..layers {
+        for (suffix, shape, init) in [
+            ("attention.self.query.weight", vec![hidden, hidden], InitKind::Normal),
+            ("hadamard.weight", vec![hidden], InitKind::Ones),
+            ("hadamard.bias", vec![hidden], InitKind::Zeros),
+            ("attention.output.LayerNorm.weight", vec![hidden], InitKind::Ones),
+            ("output.LayerNorm.weight", vec![hidden], InitKind::Ones),
+            ("output.LayerNorm.bias", vec![hidden], InitKind::Zeros),
+        ] {
+            params.push(ParamSpec {
+                name: format!("encoder.layer.{l}.{suffix}"),
+                shape,
+                init,
+            });
+        }
+    }
+    params.push(ParamSpec {
+        name: "classifier.weight".into(),
+        shape: vec![hidden, 3],
+        init: InitKind::Normal,
+    });
+    let index = params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.name.clone(), i))
+        .collect();
+    let mut groups = HashMap::new();
+    groups.insert(
+        "full".to_string(),
+        params
+            .iter()
+            .filter(|p| !p.name.contains(".hadamard."))
+            .map(|p| p.name.clone())
+            .collect::<Vec<_>>(),
+    );
+    ModelInfo {
+        name: "prop".into(),
+        layers,
+        hidden,
+        heads: 2,
+        ffn: hidden * 2,
+        vocab: 64,
+        max_len: 16,
+        params,
+        index,
+        groups,
+        mlm_group: vec![],
+    }
+}
+
+#[test]
+fn prop_mask_union_is_monotone_and_counts_add_up() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let info = rand_model(&mut rng);
+        let a = FreezeMask::stage2(&info, &[Module::HadamardWeight], LayerRange::All, false);
+        let b = FreezeMask::stage2(&info, &[Module::HadamardBias], LayerRange::All, false);
+        let u = a.union(&b);
+        for i in 0..info.params.len() {
+            assert_eq!(
+                u.trainable[i],
+                a.trainable[i] || b.trainable[i],
+                "case {case} param {i}"
+            );
+        }
+        // W and B are disjoint, so counts add exactly
+        assert_eq!(
+            u.trainable_scalars(&info),
+            a.trainable_scalars(&info) + b.trainable_scalars(&info),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_layer_restriction_never_adds_params() {
+    let mut rng = Rng::new(0xB0B);
+    for case in 0..CASES {
+        let info = rand_model(&mut rng);
+        let all = FreezeMask::stage2(
+            &info,
+            &[Module::HadamardWeight, Module::HadamardBias, Module::Norm],
+            LayerRange::All,
+            true,
+        );
+        let mut prev = 0usize;
+        for k in 1..=info.layers {
+            let m = all.restrict_layers(&info, LayerRange::LastK(k));
+            let n = m.trainable_scalars(&info);
+            assert!(n >= prev, "case {case}: k={k} shrank {prev}->{n}");
+            assert!(n <= all.trainable_scalars(&info));
+            for (i, p) in info.params.iter().enumerate() {
+                if m.trainable[i] {
+                    assert!(all.trainable[i]);
+                    if let Some(l) = layer_of(&p.name) {
+                        assert!(l + k >= info.layers, "case {case} layer {l} k {k}");
+                    }
+                }
+            }
+            prev = n;
+        }
+        // full restriction == original
+        let m = all.restrict_layers(&info, LayerRange::LastK(info.layers));
+        assert_eq!(m.trainable_scalars(&info), all.trainable_scalars(&info));
+    }
+}
+
+#[test]
+fn prop_parse_modules_roundtrip() {
+    let mut rng = Rng::new(0xC0DE);
+    let all = [
+        Module::HadamardWeight,
+        Module::HadamardBias,
+        Module::Norm,
+        Module::AttNorm,
+    ];
+    for _ in 0..CASES {
+        let k = rng.range(1, 5);
+        let picked = rng.choose_distinct(4, k);
+        let combo: Vec<&str> = picked.iter().map(|&i| all[i].label()).collect();
+        let text = combo.join("+");
+        let parsed = parse_modules(&text);
+        assert_eq!(parsed.len(), picked.len(), "{text}");
+        for &i in &picked {
+            assert!(parsed.contains(&all[i]), "{text}");
+        }
+    }
+}
+
+#[test]
+fn prop_adamw_untouched_params_never_move() {
+    // simulate a masked optimizer pass: untouched tensors stay identical
+    let mut rng = Rng::new(0xDEAD);
+    for _ in 0..CASES {
+        let n = rng.range(1, 40);
+        let mut opt = AdamW::new(0.01);
+        let frozen: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let snapshot = frozen.clone();
+        let mut trained = frozen.clone();
+        for _ in 0..5 {
+            opt.next_step();
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() + 0.1).collect();
+            opt.update("t.weight", &mut trained, &g, 0.01);
+            // frozen: simply not updated
+        }
+        assert_eq!(frozen, snapshot);
+        assert_ne!(trained, snapshot);
+    }
+}
+
+#[test]
+fn prop_clip_never_increases_norm() {
+    let mut rng = Rng::new(0xFEED);
+    for _ in 0..CASES {
+        let tensors = rng.range(1, 5);
+        let mut grads: Vec<Vec<f32>> = (0..tensors)
+            .map(|_| {
+                let n = rng.range(1, 30);
+                (0..n).map(|_| rng.normal() * 10.0).collect()
+            })
+            .collect();
+        let max = 0.5 + rng.next_f32() * 3.0;
+        let before: f32 = grads.iter().flatten().map(|x| x * x).sum::<f32>().sqrt();
+        let reported = clip_global_norm(&mut grads, max);
+        let after: f32 = grads.iter().flatten().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((reported - before).abs() < before.max(1.0) * 1e-4);
+        assert!(after <= max * 1.001 || after <= before);
+        if before <= max {
+            assert!((after - before).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_bounded_and_nonnegative() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..CASES {
+        let base = rng.next_f32() * 0.01 + 1e-5;
+        let warmup = rng.range(0, 50) as u64;
+        let total = warmup + rng.range(1, 200) as u64;
+        let s = LrSchedule::warmup_decay(base, warmup, total);
+        for step in 0..total + 20 {
+            let lr = s.at(step);
+            assert!(lr >= 0.0, "negative lr");
+            assert!(lr <= base * 1.0001, "lr {lr} > base {base}");
+        }
+    }
+}
+
+#[test]
+fn prop_metrics_bounded() {
+    let mut rng = Rng::new(0xACC);
+    for _ in 0..CASES {
+        let n = rng.range(2, 60);
+        let preds: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+        let golds: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+        let acc = accuracy(&preds, &golds);
+        assert!((0.0..=1.0).contains(&acc));
+        let mcc = matthews(&preds, &golds);
+        assert!((-1.0..=1.0).contains(&mcc));
+        let f = f1(&preds, &golds);
+        assert!((0.0..=1.0).contains(&f));
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let ys: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let p = pearson(&xs, &ys);
+        assert!((-1.0001..=1.0001).contains(&p));
+        // perfect prediction maxes every metric
+        assert_eq!(accuracy(&golds, &golds), 1.0);
+        assert!((pearson(&xs, &xs) - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn prop_batcher_rows_well_formed_for_all_tasks() {
+    let mut rng = Rng::new(0xBA7C4);
+    for info in TASKS {
+        let ds = generate(info, 99, "train", 40);
+        for _ in 0..10 {
+            let k = rng.range(1, 17);
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(40)).collect();
+            let b = make_batch(&ds, &idx, 16, 32);
+            assert_eq!(b.tokens.len(), 16 * 32);
+            for row in 0..16 {
+                let r = &b.tokens[row * 32..(row + 1) * 32];
+                assert_eq!(r[0], 1, "CLS first");
+                // mask is a prefix: once 0, stays 0
+                let m = &b.attn_mask[row * 32..(row + 1) * 32];
+                let mut seen_pad = false;
+                for (p, &v) in m.iter().enumerate() {
+                    if v == 0.0 {
+                        seen_pad = true;
+                    } else {
+                        assert!(!seen_pad, "mask not a prefix at {p}");
+                    }
+                }
+                // type ids only 0/1
+                assert!(b.type_ids[row * 32..(row + 1) * 32]
+                    .iter()
+                    .all(|&t| t == 0 || t == 1));
+            }
+            // labels consistent with dataset
+            for (bi, &i) in idx.iter().enumerate().take(b.real) {
+                match ds.examples[i].label {
+                    Label::Class(c) => assert_eq!(b.labels[bi], c),
+                    Label::Score(s) => assert_eq!(b.labels_f32[bi], s),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(0x75AF);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.next_u64() % 100_000) as f64 / 8.0),
+            3 => {
+                let n = rng.range(0, 8);
+                Json::Str((0..n).map(|_| {
+                    char::from_u32(rng.range(32, 0x250) as u32).unwrap_or('x')
+                }).collect())
+            }
+            4 => Json::Arr((0..rng.range(0, 4)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.range(0, 4) {
+                    o.set(&format!("k{i}"), gen(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+    for case in 0..CASES {
+        let v = gen(&mut rng, 0);
+        let text = v.render_pretty();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+        let compact = v.render();
+        assert_eq!(json::parse(&compact).unwrap(), v, "case {case} compact");
+    }
+}
