@@ -12,7 +12,7 @@ use hadapt::train::Session;
 use hadapt::util::bench::Bench;
 
 fn main() {
-    let engine = Engine::new("artifacts").expect("make artifacts first");
+    let engine = Engine::new("artifacts").expect("engine");
     let b = Bench::default();
     let batch = engine.manifest().batch;
     let seq = engine.manifest().seq_len;

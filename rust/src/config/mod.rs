@@ -8,12 +8,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
+use crate::runtime::Engine;
 use crate::train::{PretrainOpts, TuneOpts};
 use crate::util::json::{self, Json};
 
 /// Global workspace configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// artifact executor: "native" (pure Rust, default) or "xla" (PJRT,
+    /// requires `--features xla` and `make artifacts`).
+    pub backend: String,
     pub artifacts_dir: PathBuf,
     pub checkpoints_dir: PathBuf,
     pub results_dir: PathBuf,
@@ -34,6 +38,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
+            backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             checkpoints_dir: "checkpoints".into(),
             results_dir: "results".into(),
@@ -60,6 +65,9 @@ impl Config {
     }
 
     pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.opt("backend") {
+            self.backend = v.as_str()?.into();
+        }
         if let Some(v) = j.opt("artifacts_dir") {
             self.artifacts_dir = v.as_str()?.into();
         }
@@ -96,6 +104,7 @@ impl Config {
     /// Apply a CLI `key=value` override.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
+            "backend" => self.backend = value.into(),
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "checkpoints_dir" => self.checkpoints_dir = value.into(),
             "results_dir" => self.results_dir = value.into(),
@@ -111,6 +120,24 @@ impl Config {
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
+    }
+
+    /// Build the engine this config selects (`backend` + `artifacts_dir`).
+    /// The single constructor every entry point (CLI commands, the
+    /// coordinator) goes through, so `--set backend=...` behaves the same
+    /// everywhere.
+    pub fn engine(&self) -> Result<Engine> {
+        match self.backend.as_str() {
+            "native" => Engine::new(&self.artifacts_dir),
+            #[cfg(feature = "xla")]
+            "xla" => Engine::xla(&self.artifacts_dir),
+            #[cfg(not(feature = "xla"))]
+            "xla" => bail!(
+                "backend 'xla' requires building with `--features xla` \
+                 (and `make artifacts`)"
+            ),
+            other => bail!("unknown backend '{other}' (have: native, xla)"),
+        }
     }
 
     /// Effective pre-training options.
@@ -150,6 +177,33 @@ mod tests {
         assert_eq!(c.models, vec!["base"]);
         assert!(!c.quick);
         assert_eq!(c.tune_opts().main_steps, 140);
+    }
+
+    #[test]
+    fn backend_defaults_native_and_overrides() {
+        let c = Config::default();
+        assert_eq!(c.backend, "native");
+        let mut c = Config::default();
+        c.set("backend", "xla").unwrap();
+        assert_eq!(c.backend, "xla");
+        let mut c = Config::default();
+        c.apply_json(&json::parse(r#"{"backend": "native"}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.backend, "native");
+    }
+
+    #[test]
+    fn engine_selection_respects_backend() {
+        let mut c = Config::default();
+        assert!(c.engine().is_ok(), "native engine must build");
+        c.set("backend", "bogus").unwrap();
+        assert!(c.engine().is_err(), "unknown backend must be rejected");
+        #[cfg(not(feature = "xla"))]
+        {
+            c.set("backend", "xla").unwrap();
+            let err = c.engine().unwrap_err().to_string();
+            assert!(err.contains("--features xla"), "{err}");
+        }
     }
 
     #[test]

@@ -109,7 +109,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(config: Config) -> Result<Self> {
-        let engine = Engine::new(&config.artifacts_dir)?;
+        let engine = config.engine()?;
         Ok(Coordinator {
             engine,
             config,

@@ -1,15 +1,30 @@
 //! # hadapt
 //!
 //! Reproduction of *Hadamard Adapter: An Extreme Parameter-Efficient Adapter
-//! Tuning Method for Pre-trained Language Models* (CIKM 2023) as a
-//! three-layer Rust + JAX + Pallas framework.
-//!
-//! Layer 1 (Pallas kernels) and Layer 2 (the JAX transformer with every PEFT
-//! module identity-initialized) are AOT-lowered to HLO text at build time
-//! (`make artifacts`); this crate is Layer 3: the PJRT runtime, the synthetic
+//! Tuning Method for Pre-trained Language Models* (CIKM 2023): the synthetic
 //! GLUE data substrate, the PEFT method registry, the two-stage tuning
 //! coordinator, and the experiment harness that regenerates every table and
-//! figure of the paper's evaluation. Python never runs on the training path.
+//! figure of the paper's evaluation — all driven through a backend-agnostic
+//! [`runtime::Engine`].
+//!
+//! ## Two backends, one harness
+//!
+//! * **Native** (default): [`runtime::NativeBackend`] evaluates the
+//!   transformer forward pass and per-group backward passes in pure Rust,
+//!   mirroring the JAX oracles in `python/compile/kernels/ref.py`
+//!   (hadamard, layernorm, masked attention; gradients validated against
+//!   `jax.grad`). [`runtime::Manifest::builtin`] supplies the model
+//!   inventory, so `cargo build && cargo test` — and the full experiment
+//!   suite — run hermetically: no Python, no artifacts, no network.
+//! * **XLA** (`--features xla`): the original PJRT path. Layer 1 (Pallas
+//!   kernels) and Layer 2 (the JAX transformer with every PEFT module
+//!   identity-initialized) are AOT-lowered to HLO text by `make artifacts`;
+//!   `runtime::XlaBackend` compiles and executes them. The in-tree
+//!   `vendor/xla` crate is an offline stub — swap in the published `xla`
+//!   crate to actually run this path (select it with `backend=xla` in the
+//!   config).
+//!
+//! Python never runs on the training path in either mode.
 pub mod analysis;
 pub mod config;
 pub mod coordinator;

@@ -19,7 +19,6 @@ use hadapt::coordinator::{Coordinator, RunSpec};
 use hadapt::methods::Method;
 use hadapt::model::ParamStore;
 use hadapt::report::pct;
-use hadapt::runtime::Engine;
 use hadapt::train::{evaluate, load_or_pretrain};
 
 struct Cli {
@@ -89,8 +88,9 @@ fn build_config(cli: &Cli) -> Result<Config> {
 }
 
 fn cmd_info(cfg: &Config) -> Result<()> {
-    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let engine = cfg.engine()?;
     let m = engine.manifest();
+    println!("backend: {}", engine.backend_name());
     println!("artifacts: {} (batch={}, seq={})",
              m.artifacts.len(), m.batch, m.seq_len);
     let mut names: Vec<&String> = m.models.keys().collect();
@@ -117,7 +117,7 @@ fn cmd_info(cfg: &Config) -> Result<()> {
 
 fn cmd_pretrain(cfg: &Config, cli: &Cli) -> Result<()> {
     let model = cli.flag("model").unwrap_or("base");
-    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let engine = cfg.engine()?;
     let store = load_or_pretrain(
         &engine,
         model,

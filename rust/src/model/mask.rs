@@ -239,6 +239,7 @@ mod tests {
             ffn: 4,
             vocab: 8,
             max_len: 4,
+            lora_alpha: 8.0,
             params,
             index,
             groups,

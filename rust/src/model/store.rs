@@ -229,6 +229,7 @@ mod tests {
             ffn: 8,
             vocab: 16,
             max_len: 8,
+            lora_alpha: 8.0,
             params,
             index,
             groups,

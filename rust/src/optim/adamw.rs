@@ -136,7 +136,7 @@ mod tests {
         assert_eq!(opt.state_bytes(), 0);
         let mut x = vec![0.0f32; 10];
         opt.next_step();
-        opt.update("a.bias", &mut x, &vec![1.0; 10], 0.1);
+        opt.update("a.bias", &mut x, &[1.0; 10], 0.1);
         assert_eq!(opt.state_bytes(), 10 * 2 * 4);
     }
 

@@ -1,0 +1,95 @@
+//! The `Backend` abstraction: how an [`crate::runtime::Engine`] evaluates
+//! artifacts.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::NativeBackend`] — pure-Rust, dependency-free
+//!   executor that evaluates the transformer forward pass and the
+//!   per-group backward passes directly on host tensors (the default).
+//! * `XlaBackend` (behind the `xla` cargo feature) — the PJRT path that
+//!   compiles and runs the AOT-lowered HLO artifacts from `make artifacts`.
+//!
+//! A [`DeviceTensor`] is a backend-owned tensor handle: plain host memory
+//! for the native backend, a `PjRtBuffer` for XLA. The training hot path
+//! uploads parameters once and re-uploads only what the optimizer touched,
+//! so the handle type is what keeps that contract backend-agnostic.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+use super::tensor::{IntTensor, Tensor};
+
+/// A backend-resident tensor handle.
+#[derive(Debug)]
+pub enum DeviceTensor {
+    /// Host-resident f32 tensor (native backend).
+    F32(Tensor),
+    /// Host-resident i32 tensor (native backend).
+    I32(IntTensor),
+    /// Device-resident PJRT buffer (xla backend).
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+impl DeviceTensor {
+    /// View as f32 data (host variants only).
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            DeviceTensor::F32(t) => Ok(&t.data),
+            _ => bail!("device tensor is not host-resident f32"),
+        }
+    }
+
+    /// View as i32 data (host variants only).
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            DeviceTensor::I32(t) => Ok(&t.data),
+            _ => bail!("device tensor is not host-resident i32"),
+        }
+    }
+
+    /// Shape (host variants only).
+    pub fn shape(&self) -> Result<&[usize]> {
+        match self {
+            DeviceTensor::F32(t) => Ok(&t.shape),
+            DeviceTensor::I32(t) => Ok(&t.shape),
+            #[cfg(feature = "xla")]
+            DeviceTensor::Pjrt(_) => bail!("PJRT buffer shape is device-side"),
+        }
+    }
+}
+
+/// An artifact executor. Implementations receive the parsed manifest entry
+/// for the artifact plus the full input list (parameters in canonical
+/// order, then the batch tensors named by `ArtifactInfo::batch_inputs`) and
+/// return the artifact's outputs as host tensors, in manifest output order.
+pub trait Backend {
+    /// Short backend id for logs/reports ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Move a host f32 tensor into backend-resident form.
+    fn upload(&self, t: &Tensor) -> Result<DeviceTensor>;
+
+    /// Move a host i32 tensor into backend-resident form.
+    fn upload_int(&self, t: &IntTensor) -> Result<DeviceTensor>;
+
+    /// Execute one artifact.
+    fn execute(
+        &self,
+        manifest: &Manifest,
+        artifact: &ArtifactInfo,
+        inputs: &[&DeviceTensor],
+    ) -> Result<Vec<Tensor>>;
+
+    /// Prepare an artifact ahead of first use (compile for XLA; a no-op
+    /// validation for native).
+    fn warmup(&self, _manifest: &Manifest, _artifact: &ArtifactInfo) -> Result<()> {
+        Ok(())
+    }
+
+    /// (compiles, compile_seconds) accumulated so far — nonzero only for
+    /// compiling backends.
+    fn compile_stats(&self) -> (usize, f64) {
+        (0, 0.0)
+    }
+}

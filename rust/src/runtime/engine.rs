@@ -1,22 +1,22 @@
-//! The PJRT engine: loads HLO-text artifacts, compiles them on the CPU
-//! client, caches executables, and runs them.
+//! The engine: a manifest plus a [`Backend`] that executes artifacts.
 //!
-//! HLO *text* is the interchange format (see DESIGN.md §4.1):
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute`. One compiled executable per artifact,
-//! compiled on first use and cached for the life of the engine.
+//! The default build uses [`NativeBackend`] — a pure-Rust executor needing
+//! no artifacts directory, no Python and no network (the manifest falls
+//! back to the builtin inventory when `manifest.json` is absent). With the
+//! `xla` cargo feature, [`Engine::xla`] runs the original PJRT path over
+//! AOT-lowered HLO text instead. All call sites (sessions, eval,
+//! coordinator, experiments) are backend-agnostic through this type.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use anyhow::Result;
 
+use super::backend::{Backend, DeviceTensor};
 use super::manifest::Manifest;
-use super::tensor::Tensor;
+use super::native::NativeBackend;
+use super::tensor::{IntTensor, Tensor};
 
 /// Compile + execution statistics (exposed for the perf harness).
 #[derive(Debug, Default, Clone)]
@@ -30,102 +30,105 @@ pub struct EngineStats {
 /// The runtime engine. Single-threaded by construction (the PJRT wrapper
 /// types are not `Send`); the coordinator owns exactly one.
 pub struct Engine {
-    client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
     stats: RefCell<EngineStats>,
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifacts directory produced by
-    /// `make artifacts`.
+    /// Native engine over the builtin model inventory — zero external
+    /// dependencies; what tests and offline runs use.
+    pub fn native() -> Result<Self> {
+        Ok(Engine::with_backend(
+            Manifest::builtin("artifacts"),
+            Box::new(NativeBackend::new()),
+        ))
+    }
+
+    /// Native engine over an artifacts directory: uses its `manifest.json`
+    /// when present (so run geometry matches AOT artifacts), else the
+    /// builtin inventory.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let manifest = Manifest::load(&artifacts_dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
-        })
+        let manifest = Manifest::load_or_builtin(artifacts_dir)?;
+        Ok(Engine::with_backend(manifest, Box::new(NativeBackend::new())))
+    }
+
+    /// PJRT engine over an artifacts directory produced by `make artifacts`.
+    #[cfg(feature = "xla")]
+    pub fn xla(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let backend = super::xla_backend::XlaBackend::new()?;
+        Ok(Engine::with_backend(manifest, Box::new(backend)))
+    }
+
+    /// Assemble an engine from parts (custom backends, tests).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Self {
+        Engine { manifest, backend, stats: RefCell::new(EngineStats::default()) }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
+    /// Short backend id ("native" / "xla").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        let mut s = self.stats.borrow().clone();
+        let (compiles, compile_secs) = self.backend.compile_stats();
+        s.compiles = compiles;
+        s.compile_secs = compile_secs;
+        s
     }
 
-    /// Fetch (compiling on first use) the executable for an artifact.
-    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
+    /// Prepare an artifact ahead of first use (compiles on XLA).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        let info = self.manifest.artifact(name)?;
+        self.backend.warmup(&self.manifest, info)
+    }
+
+    /// Move a host f32 tensor into backend-resident form.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceTensor> {
+        self.backend.upload(t)
+    }
+
+    /// Move a host i32 tensor into backend-resident form.
+    pub fn upload_int(&self, t: &IntTensor) -> Result<DeviceTensor> {
+        self.backend.upload_int(t)
+    }
+
+    /// Execute an artifact: parameters in canonical order, then batch
+    /// tensors. Returns host tensors in manifest output order.
+    pub fn run(&self, name: &str, inputs: &[&DeviceTensor]) -> Result<Vec<Tensor>> {
         let info = self.manifest.artifact(name)?;
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            info.file.to_str().unwrap(),
-        )
-        .with_context(|| format!("loading HLO text {:?}", info.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact '{name}'"))?,
-        );
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut s = self.stats.borrow_mut();
-            s.compiles += 1;
-            s.compile_secs += dt;
-        }
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile an artifact (used by the CLI `info`/warmup paths).
-    pub fn warmup(&self, name: &str) -> Result<()> {
-        self.executable(name).map(|_| ())
-    }
-
-    /// Run an artifact on host literals; unwraps the 1-tuple output into the
-    /// per-output literal list.
-    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        let exe = self.executable(name)?;
-        let t0 = Instant::now();
-        let result = exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
+        let outs = self.backend.execute(&self.manifest, info, inputs)?;
         let mut s = self.stats.borrow_mut();
         s.executions += 1;
         s.execute_secs += t0.elapsed().as_secs_f64();
         Ok(outs)
     }
+}
 
-    /// Run an artifact on device buffers (the hot path: frozen parameters
-    /// stay resident on device; see `train::TrainSession`).
-    pub fn run_buffers(
-        &self,
-        name: &str,
-        inputs: &[&PjRtBuffer],
-    ) -> Result<Vec<Literal>> {
-        let exe = self.executable(name)?;
-        let t0 = Instant::now();
-        let result = exe.execute_b::<&PjRtBuffer>(inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.execute_secs += t0.elapsed().as_secs_f64();
-        Ok(outs)
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_builds_and_counts_stats() {
+        let e = Engine::native().unwrap();
+        assert_eq!(e.backend_name(), "native");
+        assert!(e.manifest().model("tiny").is_ok());
+        assert_eq!(e.stats().executions, 0);
+        e.warmup("fwd_tiny").unwrap();
+        assert!(e.warmup("fwd_nope").is_err());
     }
 
-    /// Upload a host tensor to the device.
-    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
-        t.to_buffer(&self.client)
+    #[test]
+    fn new_falls_back_to_builtin_manifest() {
+        let e = Engine::new("/definitely/not/a/dir").unwrap();
+        assert!(e.manifest().artifact("train_cls_hadamard_tiny").is_ok());
     }
 }

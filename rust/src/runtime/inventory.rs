@@ -1,0 +1,378 @@
+//! Builtin model/artifact inventory for the native backend.
+//!
+//! Mirrors `python/compile/configs.py` + `model.param_specs` exactly: the
+//! same three model sizes, the same canonical parameter order, the same
+//! gradient-group predicates, and the same artifact naming scheme the AOT
+//! pipeline records in `manifest.json`. This is what lets the whole
+//! experiment harness run with no Python, no artifacts directory and no
+//! network: `Manifest::builtin()` is byte-equivalent in structure to a
+//! parsed `manifest.json` (the `file` paths simply point at artifacts that
+//! need not exist for the native backend).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::manifest::{
+    ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec,
+};
+
+/// Batch geometry baked into the artifacts (`configs.BATCH` / `configs.SEQ`).
+pub const BATCH: usize = 16;
+pub const SEQ: usize = 32;
+pub const NUM_CLASSES: usize = 3;
+
+/// One model-size configuration (`configs.ModelConfig`).
+struct SizeCfg {
+    name: &'static str,
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    ffn: usize,
+}
+
+const VOCAB: usize = 512;
+const MAX_LEN: usize = 32;
+const TYPE_VOCAB: usize = 2;
+const LORA_RANK: usize = 4;
+const LORA_ALPHA: f32 = 8.0;
+const HOULSBY_BOTTLENECK: usize = 16;
+
+const SIZES: [SizeCfg; 3] = [
+    SizeCfg { name: "tiny", layers: 2, hidden: 64, heads: 2, ffn: 128 },
+    SizeCfg { name: "base", layers: 4, hidden: 128, heads: 4, ffn: 512 },
+    SizeCfg { name: "large", layers: 8, hidden: 192, heads: 6, ffn: 768 },
+];
+
+// ------------------------------------------------------- group predicates
+
+fn is_head(n: &str) -> bool {
+    n.starts_with("pooler.") || n.starts_with("classifier.") || n.starts_with("regressor.")
+}
+
+fn is_peft(n: &str) -> bool {
+    n.contains(".hadamard.")
+        || n.contains(".lora.")
+        || n.contains(".houlsby.")
+        || n.contains(".ia3.")
+}
+
+fn is_hadamard_group(n: &str) -> bool {
+    is_head(n)
+        || n.contains(".hadamard.")
+        || n.contains(".attention.output.LayerNorm.")
+        || (n.contains(".output.LayerNorm.") && !n.contains(".attention."))
+}
+
+fn is_bitfit(n: &str) -> bool {
+    // Backbone bias terms only (adapter-internal biases are not BitFit's).
+    is_head(n) || (n.ends_with(".bias") && !is_peft(n))
+}
+
+fn is_lora(n: &str) -> bool {
+    is_head(n) || n.contains(".lora.")
+}
+
+fn is_houlsby(n: &str) -> bool {
+    is_head(n)
+        || n.contains(".houlsby.")
+        || n.contains(".attention.output.LayerNorm.")
+        || (n.contains(".output.LayerNorm.") && !n.contains(".attention."))
+}
+
+fn is_ia3(n: &str) -> bool {
+    is_head(n) || n.contains(".ia3.")
+}
+
+fn is_backbone(n: &str) -> bool {
+    !is_peft(n) && !is_head(n)
+}
+
+fn is_full(n: &str) -> bool {
+    !is_peft(n)
+}
+
+/// Gradient groups in the AOT pipeline's iteration order.
+const GROUPS: [(&str, fn(&str) -> bool); 7] = [
+    ("head", is_head),
+    ("hadamard", is_hadamard_group),
+    ("bitfit", is_bitfit),
+    ("lora", is_lora),
+    ("houlsby", is_houlsby),
+    ("ia3", is_ia3),
+    ("full", is_full),
+];
+
+// ------------------------------------------------------------ param specs
+
+fn push(v: &mut Vec<ParamSpec>, name: String, shape: Vec<usize>, init: InitKind) {
+    v.push(ParamSpec { name, shape, init });
+}
+
+/// Canonical parameter inventory, mirroring `model.param_specs`.
+fn param_specs(c: &SizeCfg) -> Vec<ParamSpec> {
+    use InitKind::{Normal, Ones, Zeros};
+    let (h, f, v) = (c.hidden, c.ffn, VOCAB);
+    let (r, bn) = (LORA_RANK, HOULSBY_BOTTLENECK);
+    let mut s = Vec::new();
+    push(&mut s, "embeddings.word_embeddings.weight".into(), vec![v, h], Normal);
+    push(&mut s, "embeddings.position_embeddings.weight".into(), vec![MAX_LEN, h], Normal);
+    push(&mut s, "embeddings.token_type_embeddings.weight".into(), vec![TYPE_VOCAB, h], Normal);
+    push(&mut s, "embeddings.LayerNorm.weight".into(), vec![h], Ones);
+    push(&mut s, "embeddings.LayerNorm.bias".into(), vec![h], Zeros);
+    for i in 0..c.layers {
+        let p = format!("encoder.layer.{i}");
+        push(&mut s, format!("{p}.attention.self.query.weight"), vec![h, h], Normal);
+        push(&mut s, format!("{p}.attention.self.query.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.attention.self.key.weight"), vec![h, h], Normal);
+        push(&mut s, format!("{p}.attention.self.key.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.attention.self.value.weight"), vec![h, h], Normal);
+        push(&mut s, format!("{p}.attention.self.value.bias"), vec![h], Zeros);
+        // The paper's adapter right after the concatenated self-attention
+        // output (Eq. 6-7); w2/w3 are the Sec. 2.2 fitting-order terms.
+        push(&mut s, format!("{p}.hadamard.weight"), vec![h], Ones);
+        push(&mut s, format!("{p}.hadamard.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.hadamard.w2"), vec![h], Zeros);
+        push(&mut s, format!("{p}.hadamard.w3"), vec![h], Zeros);
+        push(&mut s, format!("{p}.attention.output.dense.weight"), vec![h, h], Normal);
+        push(&mut s, format!("{p}.attention.output.dense.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.attention.output.LayerNorm.weight"), vec![h], Ones);
+        push(&mut s, format!("{p}.attention.output.LayerNorm.bias"), vec![h], Zeros);
+        // LoRA on Q and V (B zero-init => identity).
+        push(&mut s, format!("{p}.lora.query.a"), vec![h, r], Normal);
+        push(&mut s, format!("{p}.lora.query.b"), vec![r, h], Zeros);
+        push(&mut s, format!("{p}.lora.value.a"), vec![h, r], Normal);
+        push(&mut s, format!("{p}.lora.value.b"), vec![r, h], Zeros);
+        // IA3 rescaling vectors (ones => identity).
+        push(&mut s, format!("{p}.ia3.l_k"), vec![h], Ones);
+        push(&mut s, format!("{p}.ia3.l_v"), vec![h], Ones);
+        push(&mut s, format!("{p}.ia3.l_ff"), vec![f], Ones);
+        // Houlsby bottleneck adapters (up zero-init => identity).
+        push(&mut s, format!("{p}.houlsby.attn.down.weight"), vec![h, bn], Normal);
+        push(&mut s, format!("{p}.houlsby.attn.down.bias"), vec![bn], Zeros);
+        push(&mut s, format!("{p}.houlsby.attn.up.weight"), vec![bn, h], Zeros);
+        push(&mut s, format!("{p}.houlsby.attn.up.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.houlsby.ffn.down.weight"), vec![h, bn], Normal);
+        push(&mut s, format!("{p}.houlsby.ffn.down.bias"), vec![bn], Zeros);
+        push(&mut s, format!("{p}.houlsby.ffn.up.weight"), vec![bn, h], Zeros);
+        push(&mut s, format!("{p}.houlsby.ffn.up.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.intermediate.dense.weight"), vec![h, f], Normal);
+        push(&mut s, format!("{p}.intermediate.dense.bias"), vec![f], Zeros);
+        push(&mut s, format!("{p}.output.dense.weight"), vec![f, h], Normal);
+        push(&mut s, format!("{p}.output.dense.bias"), vec![h], Zeros);
+        push(&mut s, format!("{p}.output.LayerNorm.weight"), vec![h], Ones);
+        push(&mut s, format!("{p}.output.LayerNorm.bias"), vec![h], Zeros);
+    }
+    push(&mut s, "pooler.dense.weight".into(), vec![h, h], Normal);
+    push(&mut s, "pooler.dense.bias".into(), vec![h], Zeros);
+    push(&mut s, "classifier.weight".into(), vec![h, NUM_CLASSES], Normal);
+    push(&mut s, "classifier.bias".into(), vec![NUM_CLASSES], Zeros);
+    push(&mut s, "regressor.weight".into(), vec![h, 1], Normal);
+    push(&mut s, "regressor.bias".into(), vec![1], Zeros);
+    push(&mut s, "mlm.dense.weight".into(), vec![h, h], Normal);
+    push(&mut s, "mlm.dense.bias".into(), vec![h], Zeros);
+    push(&mut s, "mlm.LayerNorm.weight".into(), vec![h], Ones);
+    push(&mut s, "mlm.LayerNorm.bias".into(), vec![h], Zeros);
+    push(&mut s, "mlm.decoder.bias".into(), vec![v], Zeros);
+    s
+}
+
+fn build_model(c: &SizeCfg) -> ModelInfo {
+    let params = param_specs(c);
+    let index: HashMap<String, usize> = params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.name.clone(), i))
+        .collect();
+    let mut groups = HashMap::new();
+    for (gname, pred) in GROUPS {
+        groups.insert(
+            gname.to_string(),
+            params.iter().filter(|p| pred(&p.name)).map(|p| p.name.clone()).collect(),
+        );
+    }
+    let mlm_group = params
+        .iter()
+        .filter(|p| is_backbone(&p.name))
+        .map(|p| p.name.clone())
+        .collect();
+    ModelInfo {
+        name: c.name.to_string(),
+        layers: c.layers,
+        hidden: c.hidden,
+        heads: c.heads,
+        ffn: c.ffn,
+        vocab: VOCAB,
+        max_len: MAX_LEN,
+        lora_alpha: LORA_ALPHA,
+        params,
+        index,
+        groups,
+        mlm_group,
+    }
+}
+
+fn grad_outputs(members: &[String]) -> Vec<String> {
+    let mut out = vec!["loss".to_string()];
+    out.extend(members.iter().map(|n| format!("grad:{n}")));
+    out
+}
+
+fn strings(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+impl Manifest {
+    /// The builtin inventory (all three model sizes, every artifact the AOT
+    /// pipeline would emit). `dir` is only used to form nominal artifact
+    /// file paths; the native backend never reads them.
+    pub fn builtin(dir: impl AsRef<Path>) -> Manifest {
+        let dir: PathBuf = dir.as_ref().to_path_buf();
+        let mut models = HashMap::new();
+        let mut artifacts = HashMap::new();
+        for cfg in &SIZES {
+            let info = build_model(cfg);
+            let size = cfg.name;
+
+            let fwd = Manifest::fwd_name(size);
+            artifacts.insert(
+                fwd.clone(),
+                ArtifactInfo {
+                    name: fwd.clone(),
+                    file: dir.join(format!("{fwd}.hlo.txt")),
+                    model: size.to_string(),
+                    kind: ArtifactKind::Forward,
+                    loss: None,
+                    group: None,
+                    batch_inputs: strings(&["tokens", "type_ids", "attn_mask"]),
+                    outputs: strings(&["logits", "regression", "attn_norms", "attn_means"]),
+                },
+            );
+
+            for lk in ["cls", "reg"] {
+                for (gname, _) in GROUPS {
+                    let name = Manifest::train_name(lk, gname, size);
+                    let batch_inputs = if lk == "cls" {
+                        strings(&["tokens", "type_ids", "attn_mask", "labels_onehot", "class_mask"])
+                    } else {
+                        strings(&["tokens", "type_ids", "attn_mask", "labels"])
+                    };
+                    artifacts.insert(
+                        name.clone(),
+                        ArtifactInfo {
+                            name: name.clone(),
+                            file: dir.join(format!("{name}.hlo.txt")),
+                            model: size.to_string(),
+                            kind: ArtifactKind::Train,
+                            loss: Some(lk.to_string()),
+                            group: Some(gname.to_string()),
+                            batch_inputs,
+                            outputs: grad_outputs(&info.groups[gname]),
+                        },
+                    );
+                }
+            }
+
+            let mlm = Manifest::mlm_name(size);
+            artifacts.insert(
+                mlm.clone(),
+                ArtifactInfo {
+                    name: mlm.clone(),
+                    file: dir.join(format!("{mlm}.hlo.txt")),
+                    model: size.to_string(),
+                    kind: ArtifactKind::Mlm,
+                    loss: None,
+                    group: None,
+                    batch_inputs: strings(&[
+                        "tokens", "type_ids", "attn_mask", "mlm_labels", "loss_mask",
+                    ]),
+                    outputs: grad_outputs(&info.mlm_group),
+                },
+            );
+
+            models.insert(size.to_string(), info);
+        }
+        Manifest {
+            batch: BATCH,
+            seq_len: SEQ,
+            num_classes: NUM_CLASSES,
+            models,
+            artifacts,
+            dir,
+        }
+    }
+
+    /// Load `manifest.json` from `dir` when present (an AOT artifacts
+    /// directory), else fall back to the builtin inventory. The native
+    /// backend works with either; the XLA backend requires the real thing.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Manifest, anyhow::Error> {
+        if dir.as_ref().join("manifest.json").exists() {
+            Manifest::load(&dir)
+        } else {
+            Ok(Manifest::builtin(dir))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_models_and_artifacts_consistent() {
+        let m = Manifest::builtin("artifacts");
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.seq_len, 32);
+        assert_eq!(m.models.len(), 3);
+        // 1 fwd + 2 losses x 7 groups + 1 mlm = 16 per model
+        assert_eq!(m.artifacts.len(), 3 * 16);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.layers, 2);
+        assert_eq!(tiny.hidden, 64);
+        // every artifact's grad params exist in its model
+        for a in m.artifacts.values() {
+            let info = m.model(&a.model).unwrap();
+            for g in a.grad_params() {
+                assert!(info.param_index(g).is_ok(), "{g} missing in {}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn group_predicates_match_python_semantics() {
+        let m = Manifest::builtin("artifacts");
+        let tiny = m.model("tiny").unwrap();
+        let full = tiny.group("full").unwrap();
+        assert!(full.iter().all(|n| !n.contains(".hadamard.")));
+        assert!(full.iter().any(|n| n.starts_with("classifier.")));
+        let had = tiny.group("hadamard").unwrap();
+        assert!(had.iter().any(|n| n.ends_with(".hadamard.weight")));
+        assert!(had.iter().any(|n| n.contains(".attention.output.LayerNorm.")));
+        // embeddings LN is NOT in the hadamard group
+        assert!(!had.iter().any(|n| n.starts_with("embeddings.")));
+        let bitfit = tiny.group("bitfit").unwrap();
+        assert!(bitfit.iter().all(|n| n.ends_with(".bias") || is_head(n)));
+        assert!(!bitfit.iter().any(|n| n.contains(".houlsby.")));
+        // mlm group: no PEFT, no task heads, but includes the MLM head
+        assert!(tiny.mlm_group.iter().all(|n| !is_peft(n) && !is_head(n)));
+        assert!(tiny.mlm_group.iter().any(|n| n.starts_with("mlm.")));
+    }
+
+    #[test]
+    fn canonical_order_stable() {
+        let m = Manifest::builtin("artifacts");
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.params[0].name, "embeddings.word_embeddings.weight");
+        assert_eq!(tiny.params[5].name, "encoder.layer.0.attention.self.query.weight");
+        let last = tiny.params.last().unwrap();
+        assert_eq!(last.name, "mlm.decoder.bias");
+        assert_eq!(last.shape, vec![512]);
+        // tiny parameter count: 5 embeddings + 35/layer x 2 + 11 head/mlm
+        assert_eq!(tiny.params.len(), 5 + 35 * 2 + 11);
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let m = Manifest::load_or_builtin("/nonexistent/dir").unwrap();
+        assert!(m.model("base").is_ok());
+    }
+}

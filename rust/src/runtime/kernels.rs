@@ -1,0 +1,666 @@
+//! Pure-Rust compute kernels for the native backend.
+//!
+//! Each kernel mirrors its oracle in `python/compile/kernels/ref.py`
+//! (hadamard adapter, row-wise LayerNorm, masked scaled-dot-product
+//! attention) plus the backward passes the gradient groups need. The
+//! golden-fixture tests in `rust/tests/native_kernels.rs` pin forward and
+//! VJP outputs against values generated once from the JAX oracles.
+//!
+//! Layout conventions: activations are dense row-major f32, `[T, H]` for
+//! token-major matrices and `[B, NH, L, D]` for per-head attention blocks.
+
+/// Error function via Abramowitz & Stegun 7.1.26 (max abs error 1.5e-7,
+/// well inside the 1e-5 kernel-parity budget). Computed in f64.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736
+                + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-ax * ax).exp())
+}
+
+/// Exact (erf-based) GELU, matching `jax.nn.gelu(x, approximate=False)`.
+pub fn gelu(x: f32) -> f32 {
+    let x = x as f64;
+    (0.5 * x * (1.0 + erf(x * std::f64::consts::FRAC_1_SQRT_2))) as f32
+}
+
+/// d/dx of exact GELU: Phi(x) + x * phi(x).
+pub fn dgelu(x: f32) -> f32 {
+    let x = x as f64;
+    let phi = (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    let cdf = 0.5 * (1.0 + erf(x * std::f64::consts::FRAC_1_SQRT_2));
+    (cdf + x * phi) as f32
+}
+
+/// Apply `gelu` elementwise into a new buffer.
+pub fn gelu_vec(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| gelu(v)).collect()
+}
+
+// ------------------------------------------------------------------ matmul
+
+/// `c = a @ b` for `a: [m, k]`, `b: [k, n]` (row-major, ikj loop order).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `out += a^T @ b` for `a: [k, m]`, `b: [k, n]`, `out: [m, n]` — the
+/// parameter-gradient shape (`dW = x^T @ dy`).
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `c = a @ b^T` for `a: [m, k]`, `b: [n, k]` — the input-gradient shape
+/// (`dx = dy @ W^T`). Both rows are contiguous, so this is a dot-product
+/// loop.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Add a `[n]` bias to each row of `x: [rows, n]`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_exact_mut(n) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `out += column sums of x: [rows, n]` — the bias-gradient shape.
+pub fn col_sum_acc(x: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    for row in x.chunks_exact(n) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// `out += column sums of a ⊙ b` for `a, b: [rows, n]` — the gradient shape
+/// of a broadcast elementwise scale (LayerNorm gain, IA3 vectors, Hadamard
+/// weight).
+pub fn mul_col_sum_acc(a: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    for (arow, brow) in a.chunks_exact(n).zip(b.chunks_exact(n)) {
+        for j in 0..n {
+            out[j] += arow[j] * brow[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------- hadamard
+
+/// Hadamard adapter forward (paper Eq. 5, ref: `hadamard_ref`):
+/// `y[t, h] = w[h] * x[t, h] + b[h] (+ w2[h] x^2 + w3[h] x^3)`.
+pub fn hadamard_fwd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    w2: Option<&[f32]>,
+    w3: Option<&[f32]>,
+) -> Vec<f32> {
+    let h = w.len();
+    let mut y = vec![0.0f32; x.len()];
+    for (t, row) in x.chunks_exact(h).enumerate() {
+        let yrow = &mut y[t * h..(t + 1) * h];
+        for j in 0..h {
+            let xv = row[j];
+            let mut v = w[j] * xv + b[j];
+            if let Some(w2) = w2 {
+                v += w2[j] * xv * xv;
+            }
+            if let Some(w3) = w3 {
+                v += w3[j] * xv * xv * xv;
+            }
+            yrow[j] = v;
+        }
+    }
+    y
+}
+
+/// Gradients of the Hadamard adapter.
+pub struct HadamardGrads {
+    pub dx: Vec<f32>,
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+    /// present iff `w2` participated in the forward.
+    pub dw2: Option<Vec<f32>>,
+    pub dw3: Option<Vec<f32>>,
+}
+
+/// VJP of [`hadamard_fwd`] at `(x, w, b, w2, w3)` for upstream `dy`.
+pub fn hadamard_vjp(
+    x: &[f32],
+    w: &[f32],
+    w2: Option<&[f32]>,
+    w3: Option<&[f32]>,
+    dy: &[f32],
+) -> HadamardGrads {
+    let h = w.len();
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; h];
+    let mut db = vec![0.0f32; h];
+    let mut dw2 = w2.map(|_| vec![0.0f32; h]);
+    let mut dw3 = w3.map(|_| vec![0.0f32; h]);
+    for (t, (row, dyrow)) in x.chunks_exact(h).zip(dy.chunks_exact(h)).enumerate() {
+        for j in 0..h {
+            let xv = row[j];
+            let g = dyrow[j];
+            dw[j] += g * xv;
+            db[j] += g;
+            let mut deriv = w[j];
+            if let Some(w2) = w2 {
+                deriv += 2.0 * w2[j] * xv;
+                dw2.as_mut().unwrap()[j] += g * xv * xv;
+            }
+            if let Some(w3) = w3 {
+                deriv += 3.0 * w3[j] * xv * xv;
+                dw3.as_mut().unwrap()[j] += g * xv * xv * xv;
+            }
+            dx[t * h + j] = g * deriv;
+        }
+    }
+    HadamardGrads { dx, dw, db, dw2, dw3 }
+}
+
+// --------------------------------------------------------------- layernorm
+
+/// Per-row cache for the LayerNorm backward.
+pub struct LnCache {
+    /// normalized activations `(x - mu) * inv`, `[T, H]`.
+    pub xhat: Vec<f32>,
+    /// `1 / sqrt(var + eps)` per row, `[T]`.
+    pub inv: Vec<f32>,
+}
+
+pub const LN_EPS: f64 = 1e-5;
+
+/// Row-wise LayerNorm with affine output (ref: `layernorm_ref`).
+/// `x: [T, H]`, `g, b: [H]`.
+pub fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32]) -> (Vec<f32>, LnCache) {
+    let h = g.len();
+    let rows = x.len() / h;
+    let mut y = vec![0.0f32; x.len()];
+    let mut xhat = vec![0.0f32; x.len()];
+    let mut inv = vec![0.0f32; rows];
+    for t in 0..rows {
+        let row = &x[t * h..(t + 1) * h];
+        let mut mean = 0.0f64;
+        for &v in row {
+            mean += v as f64;
+        }
+        mean /= h as f64;
+        let mut var = 0.0f64;
+        for &v in row {
+            let d = v as f64 - mean;
+            var += d * d;
+        }
+        var /= h as f64;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        inv[t] = iv as f32;
+        for j in 0..h {
+            let xh = ((row[j] as f64 - mean) * iv) as f32;
+            xhat[t * h + j] = xh;
+            y[t * h + j] = xh * g[j] + b[j];
+        }
+    }
+    (y, LnCache { xhat, inv })
+}
+
+/// VJP of [`layernorm_fwd`]: returns `(dx, dg, db)`; `dg`/`db` are
+/// *accumulated into* the provided buffers so layer loops can reuse slots.
+pub fn layernorm_vjp(
+    dy: &[f32],
+    g: &[f32],
+    cache: &LnCache,
+    dg: Option<&mut [f32]>,
+    db: Option<&mut [f32]>,
+) -> Vec<f32> {
+    let h = g.len();
+    let rows = dy.len() / h;
+    let mut dx = vec![0.0f32; dy.len()];
+    if let Some(dg) = dg {
+        for t in 0..rows {
+            for j in 0..h {
+                dg[j] += dy[t * h + j] * cache.xhat[t * h + j];
+            }
+        }
+    }
+    if let Some(db) = db {
+        col_sum_acc(dy, db);
+    }
+    for t in 0..rows {
+        let dyrow = &dy[t * h..(t + 1) * h];
+        let xhrow = &cache.xhat[t * h..(t + 1) * h];
+        let mut m1 = 0.0f64;
+        let mut m2 = 0.0f64;
+        for j in 0..h {
+            let dxh = (dyrow[j] * g[j]) as f64;
+            m1 += dxh;
+            m2 += dxh * xhrow[j] as f64;
+        }
+        m1 /= h as f64;
+        m2 /= h as f64;
+        let iv = cache.inv[t] as f64;
+        for j in 0..h {
+            let dxh = (dyrow[j] * g[j]) as f64;
+            dx[t * h + j] = (iv * (dxh - m1 - xhrow[j] as f64 * m2)) as f32;
+        }
+    }
+    dx
+}
+
+// --------------------------------------------------------------- attention
+
+/// Numerically-stable softmax over the last axis of `[rows, n]`, in place.
+pub fn softmax_rows(x: &mut [f32], n: usize) {
+    for row in x.chunks_exact_mut(n) {
+        let mut max = f32::MIN;
+        for &v in row.iter() {
+            if v > max {
+                max = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Masked scaled-dot-product attention forward (ref: `attention_ref`).
+///
+/// `q, k, v: [B, NH, L, D]`; `mask_add: [B, L]` additive (0 keep, -1e9
+/// drop). Returns `(out [B, NH, L, D], probs [B, NH, L, L])`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask_add: &[f32],
+    b: usize,
+    nh: usize,
+    l: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; b * nh * l * d];
+    let mut probs = vec![0.0f32; b * nh * l * l];
+    for bi in 0..b {
+        let mrow = &mask_add[bi * l..(bi + 1) * l];
+        for hi in 0..nh {
+            let base = (bi * nh + hi) * l * d;
+            let qs = &q[base..base + l * d];
+            let ks = &k[base..base + l * d];
+            let vs = &v[base..base + l * d];
+            let pbase = (bi * nh + hi) * l * l;
+            let scores = &mut probs[pbase..pbase + l * l];
+            for i in 0..l {
+                for j in 0..l {
+                    let mut acc = 0.0f32;
+                    for p in 0..d {
+                        acc += qs[i * d + p] * ks[j * d + p];
+                    }
+                    scores[i * l + j] = acc * scale + mrow[j];
+                }
+            }
+            softmax_rows(scores, l);
+            for i in 0..l {
+                let orow = &mut out[base + i * d..base + (i + 1) * d];
+                for j in 0..l {
+                    let pv = scores[i * l + j];
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vs[j * d..(j + 1) * d];
+                    for p in 0..d {
+                        orow[p] += pv * vrow[p];
+                    }
+                }
+            }
+        }
+    }
+    (out, probs)
+}
+
+/// VJP of [`attention_fwd`]: given upstream `dout [B, NH, L, D]` and the
+/// forward's `probs`, returns `(dq, dk, dv)` (mask gets no gradient).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_vjp(
+    dout: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    b: usize,
+    nh: usize,
+    l: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut dq = vec![0.0f32; q.len()];
+    let mut dk = vec![0.0f32; k.len()];
+    let mut dv = vec![0.0f32; v.len()];
+    let mut dprobs = vec![0.0f32; l * l];
+    let mut dscores = vec![0.0f32; l * l];
+    for bi in 0..b {
+        for hi in 0..nh {
+            let base = (bi * nh + hi) * l * d;
+            let pbase = (bi * nh + hi) * l * l;
+            let pr = &probs[pbase..pbase + l * l];
+            let dat = &dout[base..base + l * d];
+            let vs = &v[base..base + l * d];
+            // dprobs = dout @ v^T ; dv = probs^T @ dout
+            for i in 0..l {
+                for j in 0..l {
+                    let mut acc = 0.0f32;
+                    for p in 0..d {
+                        acc += dat[i * d + p] * vs[j * d + p];
+                    }
+                    dprobs[i * l + j] = acc;
+                }
+            }
+            {
+                let dvs = &mut dv[base..base + l * d];
+                for j in 0..l {
+                    for i in 0..l {
+                        let pv = pr[i * l + j];
+                        if pv == 0.0 {
+                            continue;
+                        }
+                        for p in 0..d {
+                            dvs[j * d + p] += pv * dat[i * d + p];
+                        }
+                    }
+                }
+            }
+            // softmax backward: ds = p * (dp - sum_j dp * p)
+            for i in 0..l {
+                let mut dot = 0.0f32;
+                for j in 0..l {
+                    dot += dprobs[i * l + j] * pr[i * l + j];
+                }
+                for j in 0..l {
+                    dscores[i * l + j] = pr[i * l + j] * (dprobs[i * l + j] - dot);
+                }
+            }
+            // dq = ds @ k * scale ; dk = ds^T @ q * scale
+            let qs = &q[base..base + l * d];
+            let ks = &k[base..base + l * d];
+            {
+                let dqs = &mut dq[base..base + l * d];
+                let dks = &mut dk[base..base + l * d];
+                for i in 0..l {
+                    for j in 0..l {
+                        let sv = dscores[i * l + j] * scale;
+                        if sv == 0.0 {
+                            continue;
+                        }
+                        for p in 0..d {
+                            dqs[i * d + p] += sv * ks[j * d + p];
+                            dks[j * d + p] += sv * qs[i * d + p];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+// ------------------------------------------------------------------ probes
+
+/// Per-example spectral norm of `a: [B, L, H]` via 8-step power iteration
+/// on `A^T A` — mirrors `_spectral_norm` in `python/compile/model.py`
+/// (the Fig. 1 statistic).
+pub fn spectral_norm(a: &[f32], b: usize, l: usize, h: usize) -> Vec<f32> {
+    let iters = 8;
+    let mut out = vec![1.0f32; b];
+    for bi in 0..b {
+        let ab = &a[bi * l * h..(bi + 1) * l * h];
+        let mut v = vec![1.0f32 / (h as f32).sqrt(); h];
+        let mut u = vec![0.0f32; l];
+        let mut nrm = 1.0f32;
+        for _ in 0..iters {
+            for (i, uv) in u.iter_mut().enumerate() {
+                let row = &ab[i * h..(i + 1) * h];
+                let mut acc = 0.0f32;
+                for j in 0..h {
+                    acc += row[j] * v[j];
+                }
+                *uv = acc;
+            }
+            let un: f32 = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+            for uv in u.iter_mut() {
+                *uv /= un + 1e-9;
+            }
+            for vv in v.iter_mut() {
+                *vv = 0.0;
+            }
+            for i in 0..l {
+                let row = &ab[i * h..(i + 1) * h];
+                let uv = u[i];
+                for j in 0..h {
+                    v[j] += row[j] * uv;
+                }
+            }
+            nrm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            for vv in v.iter_mut() {
+                *vv /= nrm + 1e-9;
+            }
+        }
+        out[bi] = nrm;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_points() {
+        assert!((erf(0.0)).abs() < 1e-12);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 2e-7);
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 2e-7);
+        assert!((erf(3.0) - 0.9999779095030014).abs() < 2e-7);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        // gelu(0)=0, gelu is odd-ish: gelu(x) + gelu(-x) = x - x = ... check
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841345).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158655).abs() < 1e-5);
+        // derivative at 0 is 0.5
+        assert!((dgelu(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [2,3] x [3,2]
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58., 64., 139., 154.]);
+        // a^T @ a : [3,3], diag = col norms
+        let mut out = vec![0.0; 9];
+        matmul_tn_acc(&a, &a, &mut out, 2, 3, 3);
+        assert_eq!(out[0], 17.0); // 1*1 + 4*4
+        // a @ a^T : [2,2]
+        let c = matmul_nt(&a, &a, 2, 3, 2);
+        assert_eq!(c, vec![14., 32., 32., 77.]);
+    }
+
+    #[test]
+    fn hadamard_identity_is_noop() {
+        let x = vec![0.5, -1.25, 3.0, 0.0, 2.5, -0.125];
+        let w = vec![1.0, 1.0, 1.0];
+        let b = vec![0.0, 0.0, 0.0];
+        let z = vec![0.0, 0.0, 0.0];
+        let y = hadamard_fwd(&x, &w, &b, Some(&z), Some(&z));
+        assert_eq!(y, x, "identity-init adapter must be bit-exact no-op");
+    }
+
+    #[test]
+    fn hadamard_grads_finite_difference() {
+        let x = vec![0.3, -0.7, 1.1, 0.9, -0.2, 0.4];
+        let w = vec![1.2, 0.8, -0.5];
+        let b = vec![0.1, -0.1, 0.2];
+        let w2 = vec![0.05, -0.02, 0.03];
+        let w3 = vec![0.01, 0.02, -0.01];
+        let dy = vec![1.0; 6];
+        let g = hadamard_vjp(&x, &w, Some(&w2), Some(&w3), &dy);
+        let f = |x: &[f32]| -> f32 {
+            hadamard_fwd(x, &w, &b, Some(&w2), Some(&w3)).iter().sum()
+        };
+        let eps = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((num - g.dx[i]).abs() < 1e-2, "dx[{i}] {num} vs {}", g.dx[i]);
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_normalized() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, -2.0, 0.0, 2.0, 4.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let (y, cache) = layernorm_fwd(&x, &g, &b);
+        for row in y.chunks_exact(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-6);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+        assert_eq!(cache.inv.len(), 2);
+    }
+
+    #[test]
+    fn layernorm_vjp_finite_difference() {
+        let x = vec![0.5, -1.0, 2.0, 0.25, 1.5, -0.5, 0.0, 1.0];
+        let g = vec![1.1, 0.9, 1.2, 0.8];
+        let b = vec![0.1, 0.0, -0.1, 0.2];
+        let (_, cache) = layernorm_fwd(&x, &g, &b);
+        let dy = vec![0.3, -0.2, 0.5, 0.1, -0.4, 0.2, 0.6, -0.1];
+        let dx = layernorm_vjp(&dy, &g, &cache, None, None);
+        let f = |x: &[f32]| -> f32 {
+            let (y, _) = layernorm_fwd(x, &g, &b);
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            xp[i] += eps;
+            let mut xm = x.to_vec();
+            xm[i] -= eps;
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((num - dx[i]).abs() < 2e-2, "dx[{i}] {num} vs {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_respect_mask() {
+        let mut x = vec![1.0, 2.0, -1e9, 0.5];
+        softmax_rows(&mut x, 4);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[2] < 1e-12);
+    }
+
+    #[test]
+    fn attention_uniform_when_qk_zero() {
+        let (b, nh, l, d) = (1, 1, 3, 2);
+        let q = vec![0.0; l * d];
+        let k = vec![0.0; l * d];
+        let v: Vec<f32> = (0..l * d).map(|i| i as f32).collect();
+        let mask = vec![0.0; l];
+        let (out, probs) = attention_fwd(&q, &k, &v, &mask, b, nh, l, d);
+        for p in &probs {
+            assert!((p - 1.0 / 3.0).abs() < 1e-6);
+        }
+        // out rows are the mean of v rows
+        for i in 0..l {
+            assert!((out[i * d] - 2.0).abs() < 1e-5);
+            assert!((out[i * d + 1] - 3.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spectral_norm_of_known_matrix() {
+        // rank-1 matrix: norm = |u| * |v|
+        let l = 3;
+        let h = 4;
+        let u = [1.0f32, 2.0, 2.0];
+        let v = [0.5f32, 0.5, 0.5, 0.5];
+        let mut a = vec![0.0f32; l * h];
+        for i in 0..l {
+            for j in 0..h {
+                a[i * h + j] = u[i] * v[j];
+            }
+        }
+        let un: f32 = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let vn: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let got = spectral_norm(&a, 1, l, h);
+        assert!((got[0] - un * vn).abs() < 1e-4, "{} vs {}", got[0], un * vn);
+    }
+}

@@ -45,6 +45,8 @@ pub struct ModelInfo {
     pub ffn: usize,
     pub vocab: usize,
     pub max_len: usize,
+    /// LoRA scaling numerator (alpha; scale = alpha / rank).
+    pub lora_alpha: f32,
     pub params: Vec<ParamSpec>,
     /// name -> index in `params` (canonical order).
     pub index: HashMap<String, usize>,
@@ -176,6 +178,10 @@ impl Manifest {
                     ffn: cfg.get("ffn")?.as_usize()?,
                     vocab: cfg.get("vocab")?.as_usize()?,
                     max_len: cfg.get("max_len")?.as_usize()?,
+                    lora_alpha: cfg
+                        .opt("lora_alpha")
+                        .and_then(|v| v.as_f64().ok())
+                        .unwrap_or(8.0) as f32,
                     params,
                     index,
                     groups,

@@ -1,14 +1,30 @@
-//! Runtime layer: PJRT client wrapper, artifact manifest, tensors.
+//! Runtime layer: backends, artifact manifest, tensors, compute kernels.
 //!
-//! The Rust side of the AOT bridge. `Engine` loads `artifacts/*.hlo.txt`
-//! (lowered once by `python -m compile.aot`), compiles each on the PJRT CPU
-//! client, and executes them from the coordinator hot path. Python never
-//! runs at this point.
+//! An [`Engine`] pairs a [`Manifest`] (model inventory + artifact I/O
+//! contracts) with a [`Backend`] that executes artifacts:
+//!
+//! * [`NativeBackend`] (default) — pure-Rust forward/backward evaluation of
+//!   the transformer and every gradient group, mirroring the JAX reference
+//!   semantics in `python/compile/kernels/ref.py`. No artifacts directory,
+//!   Python or network required; `Manifest::builtin()` supplies the model
+//!   inventory.
+//! * `XlaBackend` (`--features xla`) — the PJRT path over HLO-text
+//!   artifacts lowered once by `python -m compile.aot`.
 
+pub mod backend;
 pub mod engine;
+pub mod inventory;
+pub mod kernels;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
+#[cfg(feature = "xla")]
+pub mod xla_backend;
 
+pub use backend::{Backend, DeviceTensor};
 pub use engine::{Engine, EngineStats};
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
+pub use native::NativeBackend;
 pub use tensor::{IntTensor, Tensor};
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;

@@ -1,0 +1,118 @@
+//! `XlaBackend`: the PJRT execution path (behind the `xla` cargo feature).
+//!
+//! HLO *text* is the interchange format (see DESIGN.md §4.1):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. One compiled executable per artifact,
+//! compiled on first use and cached for the life of the backend.
+//!
+//! Note: the in-tree `vendor/xla` crate is a stub that errors at runtime;
+//! swap it for the published `xla` crate to actually run this path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::backend::{Backend, DeviceTensor};
+use super::manifest::{ArtifactInfo, Manifest};
+use super::tensor::{IntTensor, Tensor};
+
+/// PJRT CPU backend with a per-artifact executable cache.
+pub struct XlaBackend {
+    client: PjRtClient,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    compiles: RefCell<(usize, f64)>,
+}
+
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaBackend {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new((0, 0.0)),
+        })
+    }
+
+    /// Fetch (compiling on first use) the executable for an artifact.
+    fn executable(&self, info: &ArtifactInfo) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&info.name) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let path = info
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", info.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{}'", info.name))?,
+        );
+        {
+            let mut c = self.compiles.borrow_mut();
+            c.0 += 1;
+            c.1 += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<DeviceTensor> {
+        Ok(DeviceTensor::Pjrt(t.to_buffer(&self.client)?))
+    }
+
+    fn upload_int(&self, t: &IntTensor) -> Result<DeviceTensor> {
+        Ok(DeviceTensor::Pjrt(t.to_buffer(&self.client)?))
+    }
+
+    fn warmup(&self, _manifest: &Manifest, info: &ArtifactInfo) -> Result<()> {
+        self.executable(info).map(|_| ())
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        *self.compiles.borrow()
+    }
+
+    fn execute(
+        &self,
+        _manifest: &Manifest,
+        info: &ArtifactInfo,
+        inputs: &[&DeviceTensor],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self.executable(info)?;
+        // Stage any host-resident tensors onto the device; device-resident
+        // buffers (the session hot path) pass through untouched.
+        let mut staged: Vec<Option<PjRtBuffer>> = Vec::with_capacity(inputs.len());
+        for dt in inputs {
+            match dt {
+                DeviceTensor::F32(t) => staged.push(Some(t.to_buffer(&self.client)?)),
+                DeviceTensor::I32(t) => staged.push(Some(t.to_buffer(&self.client)?)),
+                DeviceTensor::Pjrt(_) => staged.push(None),
+            }
+        }
+        let mut refs: Vec<&PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (dt, st) in inputs.iter().zip(&staged) {
+            match (dt, st) {
+                (DeviceTensor::Pjrt(b), _) => refs.push(b),
+                (_, Some(b)) => refs.push(b),
+                _ => bail!("input staging failed"),
+            }
+        }
+        let result = exe.execute_b::<&PjRtBuffer>(&refs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+}

@@ -3,12 +3,11 @@
 //! (per-layer attention-output norms and adapter-output means).
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
 use crate::data::{class_mask, BatchIter, Dataset, Label};
 use crate::metrics::task_score;
 use crate::model::ParamStore;
-use crate::runtime::{Engine, IntTensor, Manifest, Tensor};
+use crate::runtime::{DeviceTensor, Engine, IntTensor, Manifest, Tensor};
 
 /// Aggregated evaluation output.
 #[derive(Debug, Clone)]
@@ -41,7 +40,7 @@ pub fn evaluate(
     let cmask = class_mask(ds.info.classes);
 
     // params uploaded once for the whole eval
-    let param_bufs: Vec<PjRtBuffer> = store
+    let param_bufs: Vec<DeviceTensor> = store
         .tensors
         .iter()
         .map(|t| engine.upload(t))
@@ -58,21 +57,20 @@ pub fn evaluate(
         examples: 0,
     };
 
-    let client = engine.client();
     for b in BatchIter::sequential(ds, batch, seq) {
         let batch_bufs = vec![
-            IntTensor::new(vec![batch, seq], b.tokens.clone())?.to_buffer(client)?,
-            IntTensor::new(vec![batch, seq], b.type_ids.clone())?.to_buffer(client)?,
-            Tensor::new(vec![batch, seq], b.attn_mask.clone())?.to_buffer(client)?,
+            engine.upload_int(&IntTensor::new(vec![batch, seq], b.tokens.clone())?)?,
+            engine.upload_int(&IntTensor::new(vec![batch, seq], b.type_ids.clone())?)?,
+            engine.upload(&Tensor::new(vec![batch, seq], b.attn_mask.clone())?)?,
         ];
-        let mut inputs: Vec<&PjRtBuffer> = Vec::new();
+        let mut inputs: Vec<&DeviceTensor> = Vec::new();
         inputs.extend(param_bufs.iter());
         inputs.extend(batch_bufs.iter());
-        let outs = engine.run_buffers(&artifact, &inputs)?;
-        let logits = outs[0].to_vec::<f32>()?; // [B, 3]
-        let regression = outs[1].to_vec::<f32>()?; // [B]
-        let norms = outs[2].to_vec::<f32>()?; // [B, layers]
-        let means = outs[3].to_vec::<f32>()?; // [B, layers]
+        let outs = engine.run(&artifact, &inputs)?;
+        let logits = &outs[0].data; // [B, 3]
+        let regression = &outs[1].data; // [B]
+        let norms = &outs[2].data; // [B, layers]
+        let means = &outs[3].data; // [B, layers]
 
         for i in 0..b.real {
             let e = &ds.examples[out.examples + i];

@@ -1,19 +1,20 @@
 //! TrainSession: the training hot path.
 //!
-//! Owns the device-resident copy of the parameters. On each step it uploads
-//! only the batch tensors (params are already on device), executes the
-//! gradient-group artifact, applies masked AdamW on the host, and re-uploads
-//! only the tensors that changed — for the Hadamard method that is ~0.03%
-//! of the parameter bytes, which is what keeps its step cost near the pure
-//! forward cost (EXPERIMENTS.md §Perf).
+//! Owns the backend-resident copy of the parameters. On each step it
+//! uploads only the batch tensors (params are already resident), executes
+//! the gradient-group artifact, applies masked AdamW on the host, and
+//! re-uploads only the tensors that changed — for the Hadamard method that
+//! is ~0.03% of the parameter bytes, which is what keeps its step cost
+//! near the pure forward cost (EXPERIMENTS.md §Perf). The same contract
+//! holds for both backends: device buffers for XLA, host tensors for the
+//! native executor (where the re-upload is a cheap clone).
 
 use anyhow::{bail, Context, Result};
-use xla::PjRtBuffer;
 
 use crate::data::{Batch, MlmBatch};
 use crate::model::{FreezeMask, ParamStore};
 use crate::optim::{AdamW, LrSchedule};
-use crate::runtime::{ArtifactKind, Engine, IntTensor, Tensor};
+use crate::runtime::{ArtifactKind, DeviceTensor, Engine, IntTensor, Tensor};
 
 /// Options shared by all training loops.
 #[derive(Debug, Clone)]
@@ -38,8 +39,12 @@ pub struct Session<'e> {
     pub mask: FreezeMask,
     pub opt: AdamW,
     pub sched: LrSchedule,
-    /// device-resident parameters, canonical order.
-    bufs: Vec<PjRtBuffer>,
+    /// Global-norm gradient clip applied each step; `<= 0` disables.
+    /// Defaults to [`TrainOpts::default`]'s 1.0; training pipelines wire
+    /// their `TrainOpts::grad_clip` through here.
+    pub grad_clip: f32,
+    /// backend-resident parameters, canonical order.
+    bufs: Vec<DeviceTensor>,
     /// (output index offset by 1 for loss, param index, trainable).
     grad_map: Vec<(usize, usize, bool)>,
     pub losses: Vec<f32>,
@@ -88,6 +93,7 @@ impl<'e> Session<'e> {
             mask,
             opt: AdamW::paper_defaults(),
             sched,
+            grad_clip: TrainOpts::default().grad_clip,
             bufs,
             grad_map,
             losses: Vec::new(),
@@ -113,30 +119,37 @@ impl<'e> Session<'e> {
             .sum()
     }
 
-    /// Execute one step given pre-built batch buffers, then update + resync.
-    fn step_inner(&mut self, batch_bufs: Vec<PjRtBuffer>) -> Result<f32> {
-        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.bufs.len() + batch_bufs.len());
+    /// Execute one step given pre-built batch tensors, then update + resync.
+    fn step_inner(&mut self, batch_bufs: Vec<DeviceTensor>) -> Result<f32> {
+        let mut inputs: Vec<&DeviceTensor> =
+            Vec::with_capacity(self.bufs.len() + batch_bufs.len());
         inputs.extend(self.bufs.iter());
         inputs.extend(batch_bufs.iter());
-        let outs = self.engine.run_buffers(&self.artifact, &inputs)?;
-        let loss = outs[0].to_vec::<f32>()?[0];
+        let mut outs = self.engine.run(&self.artifact, &inputs)?;
+        drop(inputs);
+        let loss = outs[0].data[0];
 
-        // gather trainable grads
+        // gather trainable grads (moved out of the dead output list — no
+        // copies on the hot path even for backbone-sized groups)
         let mut grads: Vec<(usize, Vec<f32>)> = Vec::new();
         for &(oi, pi, trainable) in &self.grad_map {
             if trainable {
-                grads.push((pi, outs[oi].to_vec::<f32>()?));
+                grads.push((pi, std::mem::take(&mut outs[oi].data)));
             }
         }
         // global-norm clip
-        let clip = 1.0f32;
-        let sq: f32 = grads
-            .iter()
-            .flat_map(|(_, g)| g.iter())
-            .map(|x| x * x)
-            .sum();
-        let norm = sq.sqrt();
-        let scale = if norm > clip && norm > 0.0 { clip / norm } else { 1.0 };
+        let clip = self.grad_clip;
+        let scale = if clip > 0.0 {
+            let sq: f32 = grads
+                .iter()
+                .flat_map(|(_, g)| g.iter())
+                .map(|x| x * x)
+                .sum();
+            let norm = sq.sqrt();
+            if norm > clip && norm > 0.0 { clip / norm } else { 1.0 }
+        } else {
+            1.0
+        };
 
         self.opt.next_step();
         let lr = self.sched.at(self.opt.step_count() - 1);
@@ -162,42 +175,53 @@ impl<'e> Session<'e> {
         if kind != ArtifactKind::Train {
             bail!("artifact '{}' is not a train artifact", self.artifact);
         }
-        let client = self.engine.client();
         let b = batch.size;
         let s = batch.seq;
         let bufs = vec![
-            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
-            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, 3], batch.labels_onehot.clone())?.to_buffer(client)?,
-            Tensor::new(vec![3], class_mask.to_vec())?.to_buffer(client)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, 3], batch.labels_onehot.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![3], class_mask.to_vec())?)?,
         ];
         self.step_inner(bufs)
     }
 
     /// One regression step (STS-B).
     pub fn step_reg(&mut self, batch: &Batch) -> Result<f32> {
-        let client = self.engine.client();
         let b = batch.size;
         let s = batch.seq;
         let bufs = vec![
-            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
-            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b], batch.labels_f32.clone())?.to_buffer(client)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b], batch.labels_f32.clone())?)?,
         ];
         self.step_inner(bufs)
     }
 
     /// One MLM pre-training step.
     pub fn step_mlm(&mut self, batch: &MlmBatch, b: usize, s: usize) -> Result<f32> {
-        let client = self.engine.client();
         let bufs = vec![
-            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
-            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
-            IntTensor::new(vec![b, s], batch.labels.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, s], batch.loss_mask.clone())?.to_buffer(client)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.labels.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, s], batch.loss_mask.clone())?)?,
         ];
         self.step_inner(bufs)
     }
@@ -210,26 +234,29 @@ impl<'e> Session<'e> {
         batch: &Batch,
         class_mask: &[f32],
     ) -> Result<(f32, Vec<(String, f64)>)> {
-        let client = self.engine.client();
         let b = batch.size;
         let s = batch.seq;
         let batch_bufs = vec![
-            IntTensor::new(vec![b, s], batch.tokens.clone())?.to_buffer(client)?,
-            IntTensor::new(vec![b, s], batch.type_ids.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, s], batch.attn_mask.clone())?.to_buffer(client)?,
-            Tensor::new(vec![b, 3], batch.labels_onehot.clone())?.to_buffer(client)?,
-            Tensor::new(vec![3], class_mask.to_vec())?.to_buffer(client)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+            self.engine
+                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![b, 3], batch.labels_onehot.clone())?)?,
+            self.engine
+                .upload(&Tensor::new(vec![3], class_mask.to_vec())?)?,
         ];
-        let mut inputs: Vec<&PjRtBuffer> = Vec::new();
+        let mut inputs: Vec<&DeviceTensor> = Vec::new();
         inputs.extend(self.bufs.iter());
         inputs.extend(batch_bufs.iter());
-        let outs = self.engine.run_buffers(&self.artifact, &inputs)?;
-        let loss = outs[0].to_vec::<f32>()?[0];
+        let outs = self.engine.run(&self.artifact, &inputs)?;
+        let loss = outs[0].data[0];
         let mut norms = Vec::new();
         let info = self.engine.manifest().artifact(&self.artifact)?.clone();
         for (gi, gname) in info.grad_params().iter().enumerate() {
-            let g = outs[gi + 1].to_vec::<f32>()?;
-            let l1: f64 = g.iter().map(|x| x.abs() as f64).sum();
+            let l1: f64 = outs[gi + 1].data.iter().map(|x| x.abs() as f64).sum();
             norms.push((gname.to_string(), l1));
         }
         Ok((loss, norms))

@@ -144,6 +144,7 @@ pub fn tune(
         );
         let artifact = Manifest::train_name(lk, "head", model);
         let mut s1 = Session::new(engine, &artifact, store, mask, sched)?;
+        s1.grad_clip = opts.train.grad_clip;
         run_steps(&mut s1, train_ds, opts.stage1_steps, batch, seq, seed ^ 1,
                   opts.verbose)?;
         stage1_losses = s1.losses.clone();
@@ -160,6 +161,7 @@ pub fn tune(
     );
     let artifact = Manifest::train_name(lk, method.group, model);
     let mut s2 = Session::new(engine, &artifact, store, mask, sched)?;
+    s2.grad_clip = opts.train.grad_clip;
     let trainable_scalars = s2.trainable_scalars();
     run_steps(&mut s2, train_ds, opts.main_steps, batch, seq, seed ^ 2,
               opts.verbose)?;

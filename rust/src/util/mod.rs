@@ -1,6 +1,6 @@
 //! Shared substrates built in-tree because the offline environment carries
-//! no third-party crates beyond `xla`/`anyhow`: JSON, deterministic RNG, and
-//! a mini benchmark harness.
+//! no third-party crates (even `anyhow` is a vendored shim): JSON,
+//! deterministic RNG, and a mini benchmark harness.
 
 pub mod bench;
 pub mod json;

@@ -1,8 +1,9 @@
-//! Integration: the Rust runtime against real AOT artifacts (tiny model).
+//! Integration: the Rust runtime on the native backend (tiny model).
 //!
-//! These tests need `make artifacts` to have run; they are the proof that
-//! the three layers compose: Pallas kernels -> JAX model -> HLO text ->
-//! PJRT execution from Rust.
+//! Hermetic: the builtin manifest supplies the model inventory and the
+//! `NativeBackend` evaluates every artifact in pure Rust — no Python, no
+//! `make artifacts`, no network. (With `--features xla` the same suite
+//! semantics hold on the PJRT path via `Engine::xla`.)
 
 use hadapt::data::{class_mask, generate, make_batch, task_info};
 use hadapt::model::{FreezeMask, ParamStore};
@@ -11,8 +12,7 @@ use hadapt::runtime::{Engine, Manifest};
 use hadapt::train::{evaluate, Session};
 
 fn engine() -> Engine {
-    Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first")
+    Engine::native().expect("native engine")
 }
 
 #[test]

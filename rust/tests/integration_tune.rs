@@ -1,6 +1,6 @@
 //! Integration: the full two-stage tuning pipeline on the tiny model,
-//! exercising coordinator, methods, masks, sessions and eval end-to-end.
-//! Requires `make artifacts`.
+//! exercising coordinator, methods, masks, sessions and eval end-to-end —
+//! hermetically, on the native backend (no `make artifacts` needed).
 
 use hadapt::config::Config;
 use hadapt::coordinator::{Coordinator, RunSpec};
@@ -53,7 +53,7 @@ fn two_stage_hadamard_beats_frozen_backbone() {
 #[test]
 fn methods_have_ordered_param_budgets() {
     let engine =
-        Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        Engine::native().unwrap();
     let info = engine.manifest().model("tiny").unwrap();
     let frac = |m: Method| m.param_fraction(info).unwrap();
     let hadamard = frac(Method::hadamard());
@@ -72,7 +72,7 @@ fn methods_have_ordered_param_budgets() {
 #[test]
 fn layer_ablation_trains_fewer_params() {
     let engine =
-        Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        Engine::native().unwrap();
     let info = engine.manifest().model("tiny").unwrap();
     let k1 = Method::by_name("hadamard@1L").unwrap();
     let full = Method::hadamard();
@@ -105,7 +105,7 @@ fn single_stage_baselines_run() {
 #[test]
 fn tune_directly_with_quick_opts() {
     let engine =
-        Engine::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        Engine::native().unwrap();
     let opts = PretrainOpts { steps: 40, lr: 5e-3, warmup: 5, seed: 3, log_every: 0 };
     let backbone = hadapt::train::pretrain(&engine, "tiny", &opts).unwrap().store;
     let train_ds = hadapt::data::generate(

@@ -1,0 +1,188 @@
+//! Golden-fixture parity tests for the native kernels.
+//!
+//! `tests/fixtures/native_kernels.json` is generated once from the JAX
+//! oracles in `python/compile/kernels/ref.py` (forward + VJP values; see
+//! `python/tools/gen_golden_fixtures.py`) and checked in, so this suite
+//! pins the native hadamard / layernorm / attention kernels — and the
+//! Hadamard-group backward — against the L1 ground truth with no Python
+//! at test time.
+
+use hadapt::runtime::kernels as k;
+use hadapt::util::json::{self, Json};
+
+struct Arr {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+fn load() -> Json {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/native_kernels.json"
+    );
+    let text = std::fs::read_to_string(path).expect("fixture file");
+    json::parse(&text).expect("fixture json")
+}
+
+fn arr(j: &Json, key: &str) -> Arr {
+    let a = j.get(key).unwrap();
+    let shape: Vec<usize> = a
+        .get("shape")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let data: Vec<f32> = a
+        .get("data")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    Arr { shape, data }
+}
+
+const TOL: f32 = 1e-5;
+
+fn assert_close(got: &[f32], want: &Arr, what: &str) {
+    assert_eq!(got.len(), want.data.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(&want.data).enumerate() {
+        assert!(
+            (g - w).abs() <= TOL * (1.0 + w.abs()),
+            "{what}[{i}]: got {g}, oracle {w}"
+        );
+    }
+}
+
+// ----------------------------------------------------------------- hadamard
+
+#[test]
+fn hadamard_forward_matches_oracle() {
+    let f = load();
+    let h = f.get("hadamard").unwrap();
+    let (x, w, b) = (arr(h, "x"), arr(h, "w"), arr(h, "b"));
+    let (w2, w3) = (arr(h, "w2"), arr(h, "w3"));
+    let y1 = k::hadamard_fwd(&x.data, &w.data, &b.data, None, None);
+    assert_close(&y1, &arr(h, "y1"), "hadamard y1");
+    let y3 = k::hadamard_fwd(&x.data, &w.data, &b.data, Some(&w2.data), Some(&w3.data));
+    assert_close(&y3, &arr(h, "y3"), "hadamard y3");
+}
+
+#[test]
+fn hadamard_backward_matches_oracle() {
+    let f = load();
+    let h = f.get("hadamard").unwrap();
+    let (x, w) = (arr(h, "x"), arr(h, "w"));
+    let (w2, w3) = (arr(h, "w2"), arr(h, "w3"));
+    let dy = arr(h, "dy");
+    let g = k::hadamard_vjp(&x.data, &w.data, Some(&w2.data), Some(&w3.data), &dy.data);
+    assert_close(&g.dx, &arr(h, "dx"), "hadamard dx");
+    assert_close(&g.dw, &arr(h, "dw"), "hadamard dw");
+    assert_close(&g.db, &arr(h, "db"), "hadamard db");
+    assert_close(g.dw2.as_ref().unwrap(), &arr(h, "dw2"), "hadamard dw2");
+    assert_close(g.dw3.as_ref().unwrap(), &arr(h, "dw3"), "hadamard dw3");
+}
+
+#[test]
+fn hadamard_identity_init_is_bit_exact_noop() {
+    // Paper Sec. 3.1: w=1, b=0 (w2=w3=0) is "equivalent to not adding any
+    // adapter" — the native kernel honors that bit-exactly.
+    let f = load();
+    let h = f.get("hadamard").unwrap();
+    let x = arr(h, "x");
+    let hdim = x.shape[1];
+    let ones = vec![1.0f32; hdim];
+    let zeros = vec![0.0f32; hdim];
+    let y = k::hadamard_fwd(&x.data, &ones, &zeros, Some(&zeros), Some(&zeros));
+    assert_eq!(y, x.data, "identity-init adapter changed the activations");
+}
+
+// ---------------------------------------------------------------- layernorm
+
+#[test]
+fn layernorm_forward_matches_oracle() {
+    let f = load();
+    let ln = f.get("layernorm").unwrap();
+    let (x, g, b) = (arr(ln, "x"), arr(ln, "g"), arr(ln, "b"));
+    let (y, _) = k::layernorm_fwd(&x.data, &g.data, &b.data);
+    assert_close(&y, &arr(ln, "y"), "layernorm y");
+}
+
+#[test]
+fn layernorm_backward_matches_oracle() {
+    let f = load();
+    let ln = f.get("layernorm").unwrap();
+    let (x, g, b) = (arr(ln, "x"), arr(ln, "g"), arr(ln, "b"));
+    let dy = arr(ln, "dy");
+    let (_, cache) = k::layernorm_fwd(&x.data, &g.data, &b.data);
+    let hdim = g.data.len();
+    let mut dg = vec![0.0f32; hdim];
+    let mut db = vec![0.0f32; hdim];
+    let dx = k::layernorm_vjp(&dy.data, &g.data, &cache, Some(&mut dg), Some(&mut db));
+    assert_close(&dx, &arr(ln, "dx"), "layernorm dx");
+    assert_close(&dg, &arr(ln, "dg"), "layernorm dg");
+    assert_close(&db, &arr(ln, "db"), "layernorm db");
+}
+
+// ---------------------------------------------------------------- attention
+
+#[test]
+fn attention_forward_matches_oracle() {
+    let f = load();
+    let at = f.get("attention").unwrap();
+    let (q, kk, v) = (arr(at, "q"), arr(at, "k"), arr(at, "v"));
+    let mask = arr(at, "mask_add");
+    let (b, nh, l, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+    let (out, probs) = k::attention_fwd(&q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
+    assert_close(&out, &arr(at, "out"), "attention out");
+    // probs rows are simplex points
+    for row in probs.chunks_exact(l) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}
+
+#[test]
+fn attention_backward_matches_oracle() {
+    let f = load();
+    let at = f.get("attention").unwrap();
+    let (q, kk, v) = (arr(at, "q"), arr(at, "k"), arr(at, "v"));
+    let mask = arr(at, "mask_add");
+    let dy = arr(at, "dy");
+    let (b, nh, l, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+    let (_, probs) = k::attention_fwd(&q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
+    let (dq, dk, dv) =
+        k::attention_vjp(&dy.data, &q.data, &kk.data, &v.data, &probs, b, nh, l, d);
+    assert_close(&dq, &arr(at, "dq"), "attention dq");
+    assert_close(&dk, &arr(at, "dk"), "attention dk");
+    assert_close(&dv, &arr(at, "dv"), "attention dv");
+}
+
+// ------------------------------------------------- masked positions get ~0
+
+#[test]
+fn attention_masked_keys_get_zero_probability() {
+    let f = load();
+    let at = f.get("attention").unwrap();
+    let (q, kk, v) = (arr(at, "q"), arr(at, "k"), arr(at, "v"));
+    let mask = arr(at, "mask_add");
+    let (b, nh, l, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+    let (_, probs) = k::attention_fwd(&q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
+    for bi in 0..b {
+        for hi in 0..nh {
+            for i in 0..l {
+                for j in 0..l {
+                    if mask.data[bi * l + j] < -1e8 {
+                        let p = probs[((bi * nh + hi) * l + i) * l + j];
+                        assert!(p < 1e-12, "masked key {bi}/{hi}/{i}/{j} got {p}");
+                    }
+                }
+            }
+        }
+    }
+}

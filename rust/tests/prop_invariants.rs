@@ -65,6 +65,7 @@ fn rand_model(rng: &mut Rng) -> ModelInfo {
         ffn: hidden * 2,
         vocab: 64,
         max_len: 16,
+        lora_alpha: 8.0,
         params,
         index,
         groups,

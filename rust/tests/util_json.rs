@@ -1,0 +1,186 @@
+//! Dedicated test suite for `util::json` — the persistence layer under the
+//! run cache, the result tables and the AOT manifest. Property-style
+//! round-trip coverage (hand-rolled generator loop; `util::Rng` drives
+//! randomized cases with stable seeds so failures are reproducible) plus
+//! targeted escape/ordering/error cases.
+
+use hadapt::util::json::{self, Json};
+use hadapt::util::Rng;
+
+const CASES: usize = 120;
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+    match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => {
+            // mix of integers, negatives and fractions
+            let base = (rng.next_u64() % 2_000_000) as f64 - 1_000_000.0;
+            Json::Num(base / [1.0, 2.0, 8.0, 1000.0][rng.below(4)])
+        }
+        3 => {
+            let n = rng.range(0, 12);
+            Json::Str(
+                (0..n)
+                    .map(|_| match rng.below(6) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => '\t',
+                        4 => char::from_u32(rng.range(0x20, 0x2500) as u32).unwrap_or('x'),
+                        _ => char::from_u32(rng.range(1, 0x20) as u32).unwrap_or('\u{1}'),
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.range(0, 5)).map(|_| gen_value(rng, depth + 1)).collect()),
+        _ => {
+            let mut o = Json::obj();
+            let n = rng.range(0, 5);
+            for i in 0..n {
+                o.set(&format!("key_{i}"), gen_value(rng, depth + 1));
+            }
+            o
+        }
+    }
+}
+
+#[test]
+fn prop_parse_write_parse_is_identity() {
+    let mut rng = Rng::new(0x1A50_2024);
+    for case in 0..CASES {
+        let v = gen_value(&mut rng, 0);
+        let compact = v.render();
+        let back = json::parse(&compact)
+            .unwrap_or_else(|e| panic!("case {case} compact: {e}\n{compact}"));
+        assert_eq!(back, v, "case {case} compact");
+        let pretty = v.render_pretty();
+        let back = json::parse(&pretty)
+            .unwrap_or_else(|e| panic!("case {case} pretty: {e}\n{pretty}"));
+        assert_eq!(back, v, "case {case} pretty");
+        // write is deterministic: render(parse(render(v))) == render(v)
+        assert_eq!(back.render(), compact, "case {case} stability");
+    }
+}
+
+#[test]
+fn prop_key_order_preserved_through_roundtrip() {
+    let mut rng = Rng::new(0xBEEF_CAFE);
+    for case in 0..CASES {
+        let n = rng.range(1, 10);
+        let mut o = Json::obj();
+        let mut names: Vec<String> = Vec::new();
+        for _ in 0..n {
+            // shuffled, non-sorted key names
+            let name = format!("k{}", rng.next_u64() % 10_000);
+            if !names.contains(&name) {
+                o.set(&name, Json::num(rng.below(100) as f64));
+                names.push(name);
+            }
+        }
+        let back = json::parse(&o.render()).unwrap();
+        let keys: Vec<String> = back
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(kk, _)| kk.clone())
+            .collect();
+        assert_eq!(keys, names, "case {case}: insertion order lost");
+        // duplicate set() overwrites in place, keeping position
+        if let Some(first) = names.first() {
+            let mut o2 = back.clone();
+            o2.set(first, Json::str("overwritten"));
+            let keys2: Vec<String> = o2
+                .as_obj()
+                .unwrap()
+                .iter()
+                .map(|(kk, _)| kk.clone())
+                .collect();
+            assert_eq!(keys2, names, "case {case}: overwrite moved key");
+        }
+    }
+}
+
+#[test]
+fn escape_handling_exhaustive() {
+    let nasty = "quote\" back\\slash new\nline tab\t cr\r ctrl\u{1} unicode é漢 done";
+    let v = Json::str(nasty);
+    let text = v.render();
+    // the rendered form is ASCII-safe for control chars
+    assert!(text.contains("\\\""));
+    assert!(text.contains("\\\\"));
+    assert!(text.contains("\\n"));
+    assert!(text.contains("\\t"));
+    assert!(text.contains("\\r"));
+    assert!(text.contains("\\u0001"));
+    let back = json::parse(&text).unwrap();
+    assert_eq!(back.as_str().unwrap(), nasty);
+    // \u escapes parse too (incl. surrogate-free BMP chars)
+    assert_eq!(json::parse(r#""é""#).unwrap().as_str().unwrap(), "é");
+    assert_eq!(json::parse(r#""\/""#).unwrap().as_str().unwrap(), "/");
+    assert_eq!(json::parse(r#""\b\f""#).unwrap().as_str().unwrap(), "\u{8}\u{c}");
+}
+
+#[test]
+fn number_fidelity() {
+    // integers survive exactly up to 2^53-ish; render stays integral
+    for n in ["0", "7", "-13", "123456789", "9007199254740991"] {
+        let v = json::parse(n).unwrap();
+        assert_eq!(v.render(), n, "integer {n}");
+    }
+    let v = json::parse("-1.5e3").unwrap();
+    assert_eq!(v.as_f64().unwrap(), -1500.0);
+    let v = json::parse("0.125").unwrap();
+    assert_eq!(v.as_f64().unwrap(), 0.125);
+    // round-trips through render
+    let text = v.render();
+    assert_eq!(json::parse(&text).unwrap().as_f64().unwrap(), 0.125);
+}
+
+#[test]
+fn malformed_inputs_error_not_panic() {
+    for bad in [
+        "",
+        "{",
+        "}",
+        "[1,]",
+        "{\"a\" 1}",
+        "{\"a\": }",
+        "{a: 1}",
+        "[1 2]",
+        "12 34",
+        "tru",
+        "nul",
+        "\"unterminated",
+        "\"bad \\x escape\"",
+        "\"bad \\u12 escape\"",
+        "{\"a\": 1,}",
+        "[,]",
+        "+-3",
+        "--1",
+        "1.2.3",
+    ] {
+        assert!(json::parse(bad).is_err(), "accepted malformed input: {bad:?}");
+    }
+}
+
+#[test]
+fn typed_accessor_errors() {
+    let v = json::parse(r#"{"s": "x", "n": 3, "b": true, "a": [1]}"#).unwrap();
+    assert!(v.get("s").unwrap().as_str().is_ok());
+    assert!(v.get("s").unwrap().as_f64().is_err());
+    assert!(v.get("n").unwrap().as_usize().is_ok());
+    assert!(v.get("n").unwrap().as_bool().is_err());
+    assert!(v.get("b").unwrap().as_bool().is_ok());
+    assert!(v.get("a").unwrap().as_arr().is_ok());
+    assert!(v.get("a").unwrap().as_obj().is_err());
+    assert!(v.get("missing").is_err());
+    assert!(v.opt("missing").is_none());
+    assert!(Json::Null.get("x").is_err());
+    // str_vec rejects mixed arrays
+    assert!(json::parse(r#"["a", 1]"#).unwrap().str_vec().is_err());
+    assert_eq!(
+        json::parse(r#"["a", "b"]"#).unwrap().str_vec().unwrap(),
+        vec!["a".to_string(), "b".to_string()]
+    );
+}

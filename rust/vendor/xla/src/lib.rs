@@ -1,0 +1,161 @@
+//! API-compatible stub of the published `xla` crate (0.1.6 surface subset).
+//!
+//! The offline build environment cannot fetch the real crate, but the
+//! workspace keeps its PJRT code paths compiling behind the `xla` cargo
+//! feature so they do not rot. Every operation returns
+//! [`Error::Unavailable`] at runtime. To run the real PJRT backend, replace
+//! this directory with the published `xla` crate (same package name) and
+//! rebuild with `--features xla`.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversions.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub is in use: no PJRT runtime is linked into this build.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real `xla` crate \
+                 (replace rust/vendor/xla and rebuild with --features xla)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element dtypes the workspace uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host literal (stub).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+}
+
+/// Array shape (stub).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Device buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client (stub).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let e = HloModuleProto::from_text_file("x").unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
