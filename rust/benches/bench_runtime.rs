@@ -1,33 +1,65 @@
-//! Runtime microbenchmarks: artifact warmup, forward execution latency per
-//! model size, train-step latency, and parameter-upload overhead — on the
-//! native backend (`Engine::new` always builds it; to benchmark the PJRT
-//! path instead, build with `--features xla` and swap the constructor below
-//! for `Engine::xla("artifacts")` against a real artifacts directory).
+//! Runtime microbenchmarks: the PR 1 scalar kernels vs the blocked kernels
+//! vs blocked+parallel, at every model size — forward latency, the
+//! hadamard train step (the paper's hot path), warmup and upload overhead,
+//! plus GEMM microbenchmarks at tiny/base/large shapes.
+//!
+//! Results are also recorded to `BENCH_kernels.json` at the repo root so
+//! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
+//! smoke run (CI uses this; only the tiny model, few iterations).
+//!
+//! To benchmark the PJRT path instead, build with `--features xla` and
+//! swap the engine constructors for `Engine::xla("artifacts")` against a
+//! real artifacts directory.
 
 use hadapt::data::{class_mask, generate, make_batch, task_info};
 use hadapt::model::{FreezeMask, ParamStore};
 use hadapt::optim::LrSchedule;
-use hadapt::runtime::{DeviceTensor, Engine, IntTensor, Manifest, Tensor};
+use hadapt::runtime::kernels::{self as k, scalar};
+use hadapt::runtime::{
+    DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool, Tensor,
+};
 use hadapt::train::Session;
 use hadapt::util::bench::{report_throughput, Bench};
+use hadapt::util::json::Json;
+use hadapt::util::Rng;
+
+fn engine_with(pool: Pool) -> Engine {
+    Engine::with_backend(
+        Manifest::builtin("artifacts"),
+        Box::new(NativeBackend::with_pool(pool)),
+    )
+}
+
+fn ms(j: &mut Json, key: &str, v: f64) {
+    j.set(key, Json::num((v * 1000.0).round() / 1000.0));
+}
 
 fn main() {
-    let engine = Engine::new("artifacts").expect("engine");
-    println!("backend: {}", engine.backend_name());
-    let b = Bench::default();
-    let batch = engine.manifest().batch;
-    let seq = engine.manifest().seq_len;
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bench::new(1, 3) } else { Bench::default() };
+    let models: &[&str] = if quick { &["tiny"] } else { &["tiny", "base", "large"] };
+    let threads = Pool::auto().threads();
+    println!("backend: native — scalar (PR 1) vs blocked vs parallel ({threads} threads)");
 
-    for model in ["tiny", "base", "large"] {
-        if engine.manifest().model(model).is_err() {
-            continue;
-        }
-        let info = engine.manifest().model(model).unwrap().clone();
+    // engine per kernel mode; identical manifest + weights, only kernels differ
+    let modes: [(&str, Engine); 3] = [
+        ("scalar", engine_with(Pool::scalar_reference())),
+        ("blocked", engine_with(Pool::serial())),
+        ("parallel", engine_with(Pool::auto())),
+    ];
+    let batch = modes[0].1.manifest().batch;
+    let seq = modes[0].1.manifest().seq_len;
+
+    let mut fwd_json = Json::obj();
+    let mut step_json = Json::obj();
+
+    for model in models {
+        let info = modes[0].1.manifest().model(model).unwrap().clone();
         let store = ParamStore::init(&info, 7);
 
         // warmup (compile on XLA; manifest validation natively)
         let t0 = std::time::Instant::now();
-        engine.warmup(&Manifest::fwd_name(model)).unwrap();
+        modes[2].1.warmup(&Manifest::fwd_name(model)).unwrap();
         println!(
             "bench {:<44} once={:>10.3?}",
             format!("warmup/fwd_{model}"),
@@ -38,8 +70,9 @@ fn main() {
         let idx: Vec<usize> = (0..batch).collect();
         let bt = make_batch(&ds, &idx, batch, seq);
 
-        // forward with parameters re-uploaded on every call (cold path)
-        let s_cold = b.run(&format!("fwd_exec_upload/{model}"), || {
+        // resident-parameter forward (the Session/eval hot path) per mode
+        let mut mode_ms = Vec::new();
+        for (tag, engine) in &modes {
             let param_bufs: Vec<DeviceTensor> = store
                 .tensors
                 .iter()
@@ -54,61 +87,66 @@ fn main() {
             let msk = engine
                 .upload(&Tensor::new(vec![batch, seq], bt.attn_mask.clone()).unwrap())
                 .unwrap();
-            let mut refs: Vec<&DeviceTensor> = param_bufs.iter().collect();
-            refs.push(&tok);
-            refs.push(&typ);
-            refs.push(&msk);
-            engine.run(&Manifest::fwd_name(model), &refs).unwrap()
-        });
-        report_throughput(&format!("fwd_exec_upload/{model} (seqs)"), batch as f64, &s_cold);
-
-        // resident parameters (the Session/eval hot path): uploaded once,
-        // only the batch staged per call — the §Perf L3 optimization.
-        let param_bufs: Vec<DeviceTensor> = store
-            .tensors
-            .iter()
-            .map(|t| engine.upload(t).unwrap())
-            .collect();
-        let tok = engine
-            .upload_int(&IntTensor::new(vec![batch, seq], bt.tokens.clone()).unwrap())
-            .unwrap();
-        let typ = engine
-            .upload_int(&IntTensor::new(vec![batch, seq], bt.type_ids.clone()).unwrap())
-            .unwrap();
-        let msk = engine
-            .upload(&Tensor::new(vec![batch, seq], bt.attn_mask.clone()).unwrap())
-            .unwrap();
-        let s_hot = b.run(&format!("fwd_exec_resident/{model}"), || {
-            let mut refs: Vec<&DeviceTensor> = param_bufs.iter().collect();
-            refs.push(&tok);
-            refs.push(&typ);
-            refs.push(&msk);
-            engine.run(&Manifest::fwd_name(model), &refs).unwrap()
-        });
-        report_throughput(&format!("fwd_exec_resident/{model} (seqs)"), batch as f64, &s_hot);
+            let s = b.run(&format!("fwd_exec/{model}/{tag}"), || {
+                let mut refs: Vec<&DeviceTensor> = param_bufs.iter().collect();
+                refs.push(&tok);
+                refs.push(&typ);
+                refs.push(&msk);
+                engine.run(&Manifest::fwd_name(model), &refs).unwrap()
+            });
+            report_throughput(&format!("fwd_exec/{model}/{tag} (seqs)"), batch as f64, &s);
+            mode_ms.push(s.mean_ms());
+        }
+        let (sc, bl, pa) = (mode_ms[0], mode_ms[1], mode_ms[2]);
         println!(
-            "bench {:<44} upload_vs_resident_speedup={:.2}x",
-            format!("fwd_exec/{model}"),
-            s_cold.mean_ms() / s_hot.mean_ms()
+            "bench {:<44} blocked={:.2}x parallel={:.2}x (vs PR 1 scalar)",
+            format!("fwd_speedup/{model}"),
+            sc / bl,
+            sc / pa
         );
+        let mut mj = Json::obj();
+        ms(&mut mj, "scalar_ms", sc);
+        ms(&mut mj, "blocked_ms", bl);
+        ms(&mut mj, "parallel_ms", pa);
+        ms(&mut mj, "speedup_blocked", sc / bl);
+        ms(&mut mj, "speedup_parallel", sc / pa);
+        fwd_json.set(model, mj);
 
-        // train step (hadamard group, the paper's hot path)
+        // train step (hadamard group, the paper's hot path): scalar vs parallel
         let mask = FreezeMask::from_names(&info, &info.group("hadamard").unwrap().to_vec());
-        let mut session = Session::new(
-            &engine,
-            &Manifest::train_name("cls", "hadamard", model),
-            store.clone(),
-            mask,
-            LrSchedule::constant(1e-3),
-        )
-        .unwrap();
         let cm = class_mask(2);
-        let s = b.run(&format!("train_step/hadamard/{model}"), || {
-            session.step_cls(&bt, &cm).unwrap()
-        });
-        report_throughput(&format!("train_step/hadamard/{model} (seqs)"), batch as f64, &s);
+        let mut step_ms = Vec::new();
+        for (tag, engine) in [("scalar", &modes[0].1), ("parallel", &modes[2].1)] {
+            let mut session = Session::new(
+                engine,
+                &Manifest::train_name("cls", "hadamard", model),
+                store.clone(),
+                mask.clone(),
+                LrSchedule::constant(1e-3),
+            )
+            .unwrap();
+            let s = b.run(&format!("train_step/hadamard/{model}/{tag}"), || {
+                session.step_cls(&bt, &cm).unwrap()
+            });
+            report_throughput(
+                &format!("train_step/hadamard/{model}/{tag} (seqs)"),
+                batch as f64,
+                &s,
+            );
+            step_ms.push(s.mean_ms());
+        }
+        println!(
+            "bench {:<44} parallel={:.2}x (vs PR 1 scalar)",
+            format!("train_step_speedup/{model}"),
+            step_ms[0] / step_ms[1]
+        );
+        let mut sj = Json::obj();
+        ms(&mut sj, "scalar_ms", step_ms[0]);
+        ms(&mut sj, "parallel_ms", step_ms[1]);
+        ms(&mut sj, "speedup_parallel", step_ms[0] / step_ms[1]);
+        step_json.set(model, sj);
 
-        // upload overhead (largest tensor)
+        // upload overhead (largest tensor) on the parallel engine
         let biggest = store
             .tensors
             .iter()
@@ -117,8 +155,65 @@ fn main() {
             .clone();
         let bytes = biggest.numel() * 4;
         let s = b.run(&format!("upload/{model}/largest_tensor"), || {
-            engine.upload(&biggest).unwrap()
+            modes[2].1.upload(&biggest).unwrap()
         });
         report_throughput(&format!("upload/{model} (MB)"), bytes as f64 / 1e6, &s);
+    }
+
+    // GEMM microbenchmarks at forward-pass shapes: [T, H] x [H, F]
+    let mut mm_json = Json::obj();
+    let shapes: &[(&str, usize, usize, usize)] = if quick {
+        &[("tiny_t512_h64_f128", 512, 64, 128)]
+    } else {
+        &[
+            ("tiny_t512_h64_f128", 512, 64, 128),
+            ("base_t512_h128_f512", 512, 128, 512),
+            ("large_t512_h192_f768", 512, 192, 768),
+        ]
+    };
+    let mut rng = Rng::new(99);
+    for &(tag, m, kk, n) in shapes {
+        let a: Vec<f32> = (0..m * kk).map(|_| rng.normal()).collect();
+        let bb: Vec<f32> = (0..kk * n).map(|_| rng.normal()).collect();
+        let s_sc = b.run(&format!("matmul/{tag}/scalar"), || scalar::matmul(&a, &bb, m, kk, n));
+        let p1 = Pool::serial();
+        let s_bl = b.run(&format!("matmul/{tag}/blocked"), || k::matmul(&p1, &a, &bb, m, kk, n));
+        let pn = Pool::auto();
+        let s_pa = b.run(&format!("matmul/{tag}/parallel"), || k::matmul(&pn, &a, &bb, m, kk, n));
+        println!(
+            "bench {:<44} blocked={:.2}x parallel={:.2}x (vs PR 1 scalar)",
+            format!("matmul_speedup/{tag}"),
+            s_sc.mean_ms() / s_bl.mean_ms(),
+            s_sc.mean_ms() / s_pa.mean_ms()
+        );
+        let mut mj = Json::obj();
+        ms(&mut mj, "scalar_ms", s_sc.mean_ms());
+        ms(&mut mj, "blocked_ms", s_bl.mean_ms());
+        ms(&mut mj, "parallel_ms", s_pa.mean_ms());
+        ms(&mut mj, "speedup_blocked", s_sc.mean_ms() / s_bl.mean_ms());
+        ms(&mut mj, "speedup_parallel", s_sc.mean_ms() / s_pa.mean_ms());
+        mm_json.set(tag, mj);
+    }
+
+    // record the comparison next to the repo root for the perf trajectory
+    let mut out = Json::obj();
+    out.set(
+        "note",
+        Json::str(
+            "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
+             vs blocked vs blocked+parallel (native backend)",
+        ),
+    );
+    out.set("threads", Json::num(threads as f64));
+    out.set("quick", Json::Bool(quick));
+    out.set("batch", Json::num(batch as f64));
+    out.set("seq_len", Json::num(seq as f64));
+    out.set("forward", fwd_json);
+    out.set("train_step", step_json);
+    out.set("matmul", mm_json);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    match std::fs::write(path, out.render_pretty()) {
+        Ok(()) => println!("bench results recorded to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -23,6 +23,9 @@ pub struct Config {
     pub results_dir: PathBuf,
     /// models to sweep in experiments ("base", "large").
     pub models: Vec<String>,
+    /// native-kernel worker threads: 0 = auto-detect (one per core),
+    /// 1 = single-threaded (bit-reproducible across machines).
+    pub threads: usize,
     /// master seed.
     pub seed: u64,
     /// pre-training steps per backbone.
@@ -43,6 +46,7 @@ impl Default for Config {
             checkpoints_dir: "checkpoints".into(),
             results_dir: "results".into(),
             models: vec!["base".into()],
+            threads: 0,
             seed: 1234,
             pretrain_steps: 1500,
             pretrain_lr: 1e-3,
@@ -80,6 +84,9 @@ impl Config {
         if let Some(v) = j.opt("models") {
             self.models = v.str_vec()?;
         }
+        if let Some(v) = j.opt("threads") {
+            self.threads = v.as_usize()?;
+        }
         if let Some(v) = j.opt("seed") {
             self.seed = v.as_f64()? as u64;
         }
@@ -111,6 +118,7 @@ impl Config {
             "models" => {
                 self.models = value.split(',').map(String::from).collect()
             }
+            "threads" => self.threads = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "pretrain_steps" => self.pretrain_steps = value.parse()?,
             "pretrain_lr" => self.pretrain_lr = value.parse()?,
@@ -128,7 +136,7 @@ impl Config {
     /// everywhere.
     pub fn engine(&self) -> Result<Engine> {
         match self.backend.as_str() {
-            "native" => Engine::new(&self.artifacts_dir),
+            "native" => Engine::new_with_threads(&self.artifacts_dir, self.threads),
             #[cfg(feature = "xla")]
             "xla" => Engine::xla(&self.artifacts_dir),
             #[cfg(not(feature = "xla"))]
@@ -176,7 +184,19 @@ mod tests {
         let c = Config::default();
         assert_eq!(c.models, vec!["base"]);
         assert!(!c.quick);
+        assert_eq!(c.threads, 0, "kernel workers default to auto");
         assert_eq!(c.tune_opts().main_steps, 140);
+    }
+
+    #[test]
+    fn threads_key_parses_and_builds() {
+        let mut c = Config::default();
+        c.set("threads", "2").unwrap();
+        assert_eq!(c.threads, 2);
+        assert!(c.engine().is_ok(), "threaded native engine must build");
+        let mut c = Config::default();
+        c.apply_json(&json::parse(r#"{"threads": 1}"#).unwrap()).unwrap();
+        assert_eq!(c.threads, 1);
     }
 
     #[test]

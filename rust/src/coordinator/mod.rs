@@ -30,13 +30,25 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
-    /// Stable cache id.
+    /// Stable cache id, injective in the method string.
+    ///
+    /// The readable slug flattens punctuation to `-`, which is not
+    /// injective (`had+ln` and `had^ln` used to collide on the same
+    /// `results/runs/` file and silently resume the wrong run), so a
+    /// stable FNV-1a hash of the *raw* method string disambiguates the
+    /// file name while keeping it filesystem-safe and human-scannable.
     pub fn id(&self, opts: &TuneOpts) -> String {
+        let slug: String = self
+            .method
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+            .collect();
         format!(
-            "{}_{}_{}_s{}_t{}x{}",
+            "{}_{}_{}-{:016x}_s{}_t{}x{}",
             self.model,
             self.task,
-            self.method.replace(['[', ']', '+', '^', '@'], "-"),
+            slug,
+            crate::util::fnv1a(&self.method),
             self.seed,
             opts.stage1_steps,
             opts.main_steps
@@ -343,5 +355,36 @@ mod tests {
         assert_ne!(a.id(&opts), b.id(&opts));
         // ids are filesystem-safe
         assert!(!b.id(&opts).contains('+'));
+        assert!(!b.id(&opts).contains(':'));
+    }
+
+    #[test]
+    fn run_id_does_not_collide_on_flattened_punctuation() {
+        // regression: '[',']','+','^','@' all flattened to '-', so methods
+        // that differ only in punctuation shared one cache file
+        let opts = TuneOpts::default();
+        let base = RunSpec {
+            model: "base".into(),
+            task: "sst2".into(),
+            method: String::new(),
+            seed: 1,
+        };
+        let methods = [
+            "had+ln", "had^ln", "had@ln", "had[ln]", "had-ln", "had_ln", "had.ln",
+        ];
+        let mut ids = std::collections::HashSet::new();
+        for m in methods {
+            let spec = RunSpec { method: m.into(), ..base.clone() };
+            let id = spec.id(&opts);
+            assert!(
+                ids.insert(id.clone()),
+                "method '{m}' collided on cache id {id}"
+            );
+            // filesystem-safe: alphanumerics, '-', '_', 'x' separators only
+            assert!(
+                id.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+                "unsafe char in id {id}"
+            );
+        }
     }
 }

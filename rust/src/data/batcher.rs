@@ -29,6 +29,13 @@ pub struct Batch {
 }
 
 /// Encode one example into row `b` of the batch buffers.
+///
+/// The sentence budget is `seq` minus the special tokens, *saturating*: a
+/// degenerate `seq_len` (smaller than `[CLS] ... [SEP] ... [SEP]`) clamps
+/// instead of underflowing `usize` (which used to panic), and the layout
+/// is truncated to `seq` so even `seq_len < 3` never writes out of
+/// bounds. Under proportional pair truncation every present segment keeps
+/// at least one token whenever the budget allows.
 fn encode(
     e: &Example,
     seq: usize,
@@ -39,7 +46,7 @@ fn encode(
     let b_len = e.seq_b.as_ref().map_or(0, |b| b.len());
     // budget: CLS + a + SEP (+ b + SEP)
     let specials = if b_len > 0 { 3 } else { 2 };
-    let avail = seq - specials;
+    let avail = seq.saturating_sub(specials);
     let (a_keep, b_keep) = if b_len == 0 {
         (e.seq_a.len().min(avail), 0)
     } else {
@@ -47,37 +54,37 @@ fn encode(
         let total = e.seq_a.len() + b_len;
         if total <= avail {
             (e.seq_a.len(), b_len)
+        } else if avail == 0 {
+            (0, 0)
         } else {
-            let a_k = (avail * e.seq_a.len() / total).max(1);
+            // keep a's share, but leave b at least one token when
+            // avail >= 2 (the old `.max(1)` could drive `avail - a_k`
+            // below zero and underflow)
+            let a_k = (avail * e.seq_a.len() / total)
+                .clamp(1, (avail - 1).max(1))
+                .min(e.seq_a.len());
             (a_k, avail - a_k)
         }
     };
-    let mut pos = 0;
-    tokens[pos] = vocab::CLS;
-    type_ids[pos] = 0;
-    pos += 1;
+    let mut enc: Vec<(i32, i32)> = Vec::with_capacity(a_keep + b_keep + specials);
+    enc.push((vocab::CLS, 0));
     for &t in &e.seq_a[..a_keep] {
-        tokens[pos] = t;
-        type_ids[pos] = 0;
-        pos += 1;
+        enc.push((t, 0));
     }
-    tokens[pos] = vocab::SEP;
-    type_ids[pos] = 0;
-    pos += 1;
+    enc.push((vocab::SEP, 0));
     if let Some(bseq) = &e.seq_b {
         for &t in &bseq[..b_keep] {
-            tokens[pos] = t;
-            type_ids[pos] = 1;
-            pos += 1;
+            enc.push((t, 1));
         }
-        tokens[pos] = vocab::SEP;
-        type_ids[pos] = 1;
-        pos += 1;
+        enc.push((vocab::SEP, 1));
     }
-    for p in 0..pos {
+    enc.truncate(seq);
+    for (p, &(tok, ty)) in enc.iter().enumerate() {
+        tokens[p] = tok;
+        type_ids[p] = ty;
         attn[p] = 1.0;
     }
-    for p in pos..seq {
+    for p in enc.len()..seq {
         tokens[p] = vocab::PAD;
         type_ids[p] = 0;
         attn[p] = 0.0;
@@ -205,6 +212,55 @@ mod tests {
             assert_eq!(b.tokens.len(), 16);
             assert_eq!(b.attn_mask.iter().filter(|&&m| m > 0.0).count()
                        <= 16, true);
+        }
+    }
+
+    #[test]
+    fn degenerate_seq_len_never_panics() {
+        // regression: seq < specials used to underflow `seq - specials`
+        // (panic in debug, wrap in release), and the pair branch could hit
+        // `avail - a_k` underflow when avail <= 1.
+        for task in ["sst2", "mnli", "qqp"] {
+            let ds = generate(task_info(task).unwrap(), 5, "train", 8);
+            for seq in 0..6 {
+                for i in 0..8 {
+                    let b = make_batch(&ds, &[i], 1, seq);
+                    assert_eq!(b.tokens.len(), seq, "{task} seq={seq}");
+                    // row never writes past seq and mask stays a 0/1 prefix
+                    let real = b.attn_mask.iter().filter(|&&m| m > 0.0).count();
+                    assert!(real <= seq, "{task} seq={seq}");
+                    if seq > 0 {
+                        assert_eq!(b.tokens[0], vocab::CLS, "{task} seq={seq}");
+                    }
+                    for p in real..seq {
+                        assert_eq!(b.tokens[p], vocab::PAD, "{task} seq={seq} p={p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_truncation_keeps_both_segments_when_budget_allows() {
+        // with avail = seq - 3 >= 2, both sentences must keep >= 1 token
+        let ds = generate(task_info("mnli").unwrap(), 7, "train", 16);
+        for seq in 5..12 {
+            for i in 0..16 {
+                let b = make_batch(&ds, &[i], 1, seq);
+                let row = &b.tokens[..seq];
+                let types = &b.type_ids[..seq];
+                let n_a = (0..seq)
+                    .filter(|&p| {
+                        types[p] == 0 && row[p] != vocab::CLS && row[p] != vocab::SEP
+                            && b.attn_mask[p] > 0.0
+                    })
+                    .count();
+                let n_b = (0..seq)
+                    .filter(|&p| types[p] == 1 && row[p] != vocab::SEP)
+                    .count();
+                assert!(n_a >= 1, "seq={seq} row {i}: segment a emptied");
+                assert!(n_b >= 1, "seq={seq} row {i}: segment b emptied");
+            }
         }
     }
 

@@ -13,9 +13,12 @@
 //!   transformer forward pass and per-group backward passes in pure Rust,
 //!   mirroring the JAX oracles in `python/compile/kernels/ref.py`
 //!   (hadamard, layernorm, masked attention; gradients validated against
-//!   `jax.grad`). [`runtime::Manifest::builtin`] supplies the model
-//!   inventory, so `cargo build && cargo test` — and the full experiment
-//!   suite — run hermetically: no Python, no artifacts, no network.
+//!   `jax.grad`). The kernels are cache-blocked, register-tiled and
+//!   sharded over a std-only worker pool ([`runtime::Pool`], the
+//!   `threads` config key). [`runtime::Manifest::builtin`] supplies the
+//!   model inventory, so `cargo build && cargo test` — and the full
+//!   experiment suite — run hermetically: no Python, no artifacts, no
+//!   network.
 //! * **XLA** (`--features xla`): the original PJRT path. Layer 1 (Pallas
 //!   kernels) and Layer 2 (the JAX transformer with every PEFT module
 //!   identity-initialized) are AOT-lowered to HLO text by `make artifacts`;

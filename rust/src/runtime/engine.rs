@@ -27,8 +27,10 @@ pub struct EngineStats {
     pub execute_secs: f64,
 }
 
-/// The runtime engine. Single-threaded by construction (the PJRT wrapper
-/// types are not `Send`); the coordinator owns exactly one.
+/// The runtime engine. The engine itself runs one artifact at a time (the
+/// PJRT wrapper types are not `Send`); the native backend's blocked
+/// kernels fan out internally over the configured worker pool (the
+/// `threads` config key).
 pub struct Engine {
     manifest: Manifest,
     backend: Box<dyn Backend>,
@@ -47,10 +49,19 @@ impl Engine {
 
     /// Native engine over an artifacts directory: uses its `manifest.json`
     /// when present (so run geometry matches AOT artifacts), else the
-    /// builtin inventory.
+    /// builtin inventory. Kernel workers auto-size to the machine.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Engine::new_with_threads(artifacts_dir, 0)
+    }
+
+    /// Like [`Engine::new`] with an explicit kernel worker count (`0` =
+    /// auto-detect; `1` = fully deterministic single-threaded kernels).
+    pub fn new_with_threads(artifacts_dir: impl AsRef<Path>, threads: usize) -> Result<Self> {
         let manifest = Manifest::load_or_builtin(artifacts_dir)?;
-        Ok(Engine::with_backend(manifest, Box::new(NativeBackend::new())))
+        Ok(Engine::with_backend(
+            manifest,
+            Box::new(NativeBackend::with_threads(threads)),
+        ))
     }
 
     /// PJRT engine over an artifacts directory produced by `make artifacts`.
@@ -130,5 +141,12 @@ mod tests {
     fn new_falls_back_to_builtin_manifest() {
         let e = Engine::new("/definitely/not/a/dir").unwrap();
         assert!(e.manifest().artifact("train_cls_hadamard_tiny").is_ok());
+    }
+
+    #[test]
+    fn new_with_threads_builds_native() {
+        let e = Engine::new_with_threads("/definitely/not/a/dir", 2).unwrap();
+        assert_eq!(e.backend_name(), "native");
+        e.warmup("fwd_tiny").unwrap();
     }
 }

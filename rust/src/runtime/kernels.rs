@@ -8,9 +8,39 @@
 //!
 //! Layout conventions: activations are dense row-major f32, `[T, H]` for
 //! token-major matrices and `[B, NH, L, D]` for per-head attention blocks.
+//!
+//! # Kernel architecture (PR 2)
+//!
+//! The hot kernels are cache-blocked and register-tiled, and fan out over
+//! a [`Pool`] (the `threads` config key):
+//!
+//! * **GEMM family** (`matmul` NN, `matmul_nt` NT, `matmul_tn_acc` TN):
+//!   `MR = 4` output rows in flight share each streamed row of `b`
+//!   (4x less memory traffic), the NN/TN inner loop is a contiguous axpy
+//!   LLVM autovectorizes, NT/attention dot products keep `LANES = 8`
+//!   partial sums so the float reduction can stay in SIMD registers, and
+//!   NN panels the `k` dimension at `KC` to keep `b` L2-resident at large
+//!   shapes. Work is sharded over output rows.
+//! * **Attention** fwd/VJP shard over the `B x NH` blocks; score rows use
+//!   the lane-parallel dot.
+//! * **LayerNorm / GELU / Hadamard VJP** shard over token rows. GELU runs
+//!   an all-f32 erf (`erf_f32`, ~1e-6 abs error — well inside the 1e-5
+//!   parity budget) whose range-reduced `exp` autovectorizes, unlike the
+//!   f64 `exp` calls of the reference path.
+//!
+//! Unlike the PR 1 scalar loops, the blocked kernels have **no zero-skip
+//! short-circuits**: `0.0 * NaN` must stay NaN exactly as in the JAX
+//! oracle, so divergence surfaces instead of being masked (see the
+//! `nan_propagates_*` tests). The original scalar kernels are retained
+//! verbatim in [`scalar`] as the parity/bench reference; parameter-
+//! gradient reductions accumulate fixed-order partials, so results are
+//! deterministic for a given thread count.
+
+use super::pool::Pool;
 
 /// Error function via Abramowitz & Stegun 7.1.26 (max abs error 1.5e-7,
-/// well inside the 1e-5 kernel-parity budget). Computed in f64.
+/// well inside the 1e-5 kernel-parity budget). Computed in f64 — the
+/// reference the fast path is tested against.
 pub fn erf(x: f64) -> f64 {
     let sign = if x < 0.0 { -1.0 } else { 1.0 };
     let ax = x.abs();
@@ -36,74 +66,297 @@ pub fn dgelu(x: f32) -> f32 {
     (cdf + x * phi) as f32
 }
 
-/// Apply `gelu` elementwise into a new buffer.
-pub fn gelu_vec(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| gelu(v)).collect()
+// ------------------------------------------------------------- fast f32 math
+
+/// `e^x` for `x <= 0` (callers clamp their argument into normal-exponent
+/// range): round-to-nearest power-of-two split plus a degree-6 polynomial
+/// on the reduced argument, ~3e-7 relative error. Branch-free, so the
+/// elementwise GELU loops autovectorize — a libm `exp` call cannot.
+#[inline(always)]
+fn exp_neg(x: f32) -> f32 {
+    let t = x * std::f32::consts::LOG2_E;
+    let nf = t.round();
+    let r = x - nf * std::f32::consts::LN_2;
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (1.0 / 6.0
+                    + r * (1.0 / 24.0 + r * (1.0 / 120.0 + r * (1.0 / 720.0))))));
+    let n = nf as i32;
+    p * f32::from_bits(((n + 127) as u32) << 23)
+}
+
+/// erf via A&S 7.1.26 entirely in f32 (+[`exp_neg`]); ~1e-6 absolute
+/// error vs the f64 [`erf`] (pinned by `fast_erf_matches_f64`).
+#[inline(always)]
+pub fn erf_f32(x: f32) -> f32 {
+    let ax = x.abs().min(6.0);
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736
+                + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let r = 1.0 - poly * exp_neg(-ax * ax);
+    if x < 0.0 {
+        -r
+    } else {
+        r
+    }
+}
+
+/// Fast exact-GELU (erf form) used by the blocked elementwise kernels;
+/// matches the f64 [`gelu`] to ~5e-6 absolute.
+#[inline(always)]
+pub fn gelu_f32(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf_f32(x * std::f32::consts::FRAC_1_SQRT_2))
+}
+
+/// Fast GELU derivative; matches the f64 [`dgelu`] to ~5e-6 absolute.
+#[inline(always)]
+pub fn dgelu_f32(x: f32) -> f32 {
+    const FRAC_1_SQRT_2PI: f32 = 0.398_942_28;
+    let xc = x.clamp(-9.0, 9.0);
+    let phi = exp_neg(-0.5 * xc * xc) * FRAC_1_SQRT_2PI;
+    let cdf = 0.5 * (1.0 + erf_f32(x * std::f32::consts::FRAC_1_SQRT_2));
+    cdf + x * phi
+}
+
+/// Apply GELU elementwise into a new buffer, sharded over `pool`.
+pub fn gelu_vec(pool: &Pool, x: &[f32]) -> Vec<f32> {
+    if pool.is_scalar() {
+        return x.iter().map(|&v| gelu(v)).collect();
+    }
+    let mut y = vec![0.0f32; x.len()];
+    pool.for_rows(&mut y, 1, EW_GRAIN, |i0, yc| {
+        let xs = &x[i0..i0 + yc.len()];
+        for (o, &v) in yc.iter_mut().zip(xs) {
+            *o = gelu_f32(v);
+        }
+    });
+    y
+}
+
+/// `dy ⊙ gelu'(u)` elementwise (the GELU VJP), sharded over `pool`.
+pub fn dgelu_mul(pool: &Pool, dy: &[f32], u: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), u.len());
+    if pool.is_scalar() {
+        return dy.iter().zip(u).map(|(g, &x)| g * dgelu(x)).collect();
+    }
+    let mut y = vec![0.0f32; dy.len()];
+    pool.for_rows(&mut y, 1, EW_GRAIN, |i0, yc| {
+        let n = yc.len();
+        let (ds, us) = (&dy[i0..i0 + n], &u[i0..i0 + n]);
+        for j in 0..n {
+            yc[j] = ds[j] * dgelu_f32(us[j]);
+        }
+    });
+    y
 }
 
 // ------------------------------------------------------------------ matmul
 
-/// `c = a @ b` for `a: [m, k]`, `b: [k, n]` (row-major, ikj loop order).
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+/// Register-tile height: output rows sharing one streamed `b` row.
+const MR: usize = 4;
+/// k-panel width: keeps the active slab of `b` cache-resident while an
+/// `MR`-row tile accumulates.
+const KC: usize = 256;
+/// Manual SIMD width for dot-product reductions (`chunks_exact` lanes).
+const LANES: usize = 8;
+/// Minimum output rows per shard for the GEMM family.
+const MM_GRAIN: usize = 16;
+/// Minimum elements per shard for elementwise kernels.
+const EW_GRAIN: usize = 4096;
+/// Minimum token rows per shard for LayerNorm / Hadamard kernels.
+const LN_GRAIN: usize = 32;
+
+/// `c += av * b` over one contiguous row (LLVM autovectorizes this).
+#[inline(always)]
+fn axpy(c: &mut [f32], av: f32, b: &[f32]) {
+    for (cv, &bv) in c.iter_mut().zip(b) {
+        *cv += av * bv;
+    }
+}
+
+/// Four output rows share one streamed pass over `b` — the register tile
+/// at the heart of the NN/TN kernels.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn axpy4(
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    a0: f32,
+    a1: f32,
+    a2: f32,
+    a3: f32,
+    b: &[f32],
+) {
+    let n = b.len();
+    let (c0, c1, c2, c3) = (&mut c0[..n], &mut c1[..n], &mut c2[..n], &mut c3[..n]);
+    for j in 0..n {
+        let bv = b[j];
+        c0[j] += a0 * bv;
+        c1[j] += a1 * bv;
+        c2[j] += a2 * bv;
+        c3[j] += a3 * bv;
+    }
+}
+
+/// Lane-parallel dot product: `LANES` partial sums keep the reduction in
+/// SIMD registers (a sequential f32 sum cannot be autovectorized).
+#[inline(always)]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let mut acc = 0.0f32;
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        acc += x * y;
+    }
+    let mut lanes = [0.0f32; LANES];
+    for (xs, ys) in ac.zip(bc) {
+        for j in 0..LANES {
+            lanes[j] += xs[j] * ys[j];
         }
     }
+    for &l in lanes.iter() {
+        acc += l;
+    }
+    acc
+}
+
+/// `c = a @ b` for `a: [m, k]`, `b: [k, n]` (row-major), cache-blocked and
+/// sharded over output rows. Per-row accumulation order matches the
+/// scalar reference, so NN results are bit-identical to [`scalar::matmul`]
+/// on finite inputs — and NaN/Inf propagate (no zero-skip).
+pub fn matmul(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    if pool.is_scalar() {
+        return scalar::matmul(a, b, m, k, n);
+    }
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    pool.for_rows(&mut c, n, MM_GRAIN, |i0, cc| nn_block(a, b, i0, cc, k, n));
     c
 }
 
+/// One contiguous row block (`i0..`) of the NN product.
+fn nn_block(a: &[f32], b: &[f32], i0: usize, c: &mut [f32], k: usize, n: usize) {
+    let rows = c.len() / n;
+    let mut pc = 0usize;
+    while pc < k {
+        let kb = KC.min(k - pc);
+        let mut r = 0usize;
+        while r + MR <= rows {
+            let i = i0 + r;
+            let (tile, _) = c[r * n..].split_at_mut(MR * n);
+            let (c0, rest) = tile.split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3) = rest.split_at_mut(n);
+            for p in pc..pc + kb {
+                let brow = &b[p * n..p * n + n];
+                axpy4(
+                    c0,
+                    c1,
+                    c2,
+                    c3,
+                    a[i * k + p],
+                    a[(i + 1) * k + p],
+                    a[(i + 2) * k + p],
+                    a[(i + 3) * k + p],
+                    brow,
+                );
+            }
+            r += MR;
+        }
+        while r < rows {
+            let i = i0 + r;
+            let crow = &mut c[r * n..(r + 1) * n];
+            for p in pc..pc + kb {
+                axpy(crow, a[i * k + p], &b[p * n..p * n + n]);
+            }
+            r += 1;
+        }
+        pc += kb;
+    }
+}
+
 /// `out += a^T @ b` for `a: [k, m]`, `b: [k, n]`, `out: [m, n]` — the
-/// parameter-gradient shape (`dW = x^T @ dy`).
-pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+/// parameter-gradient shape (`dW = x^T @ dy`). Sharded over `out` rows;
+/// `a[p*m + i..+MR]` is contiguous, so the register tile loads cheaply.
+pub fn matmul_tn_acc(
+    pool: &Pool,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
+    if pool.is_scalar() {
+        scalar::matmul_tn_acc(a, b, out, k, m, n);
+        return;
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    pool.for_rows(out, n, MM_GRAIN, |i0, oc| tn_block(a, b, i0, oc, k, m, n));
+}
+
+/// One contiguous row block (`i0..`) of the TN accumulation.
+fn tn_block(a: &[f32], b: &[f32], i0: usize, out: &mut [f32], k: usize, m: usize, n: usize) {
+    let rows = out.len() / n;
+    let mut r = 0usize;
+    while r + MR <= rows {
+        let i = i0 + r;
+        let (tile, _) = out[r * n..].split_at_mut(MR * n);
+        let (o0, rest) = tile.split_at_mut(n);
+        let (o1, rest) = rest.split_at_mut(n);
+        let (o2, o3) = rest.split_at_mut(n);
+        for p in 0..k {
+            let av = &a[p * m + i..p * m + i + MR];
+            let brow = &b[p * n..p * n + n];
+            axpy4(o0, o1, o2, o3, av[0], av[1], av[2], av[3], brow);
         }
+        r += MR;
+    }
+    while r < rows {
+        let i = i0 + r;
+        let orow = &mut out[r * n..(r + 1) * n];
+        for p in 0..k {
+            axpy(orow, a[p * m + i], &b[p * n..p * n + n]);
+        }
+        r += 1;
     }
 }
 
 /// `c = a @ b^T` for `a: [m, k]`, `b: [n, k]` — the input-gradient shape
-/// (`dx = dy @ W^T`). Both rows are contiguous, so this is a dot-product
-/// loop.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// (`dx = dy @ W^T`). Both operand rows are contiguous, so each output
+/// element is a lane-parallel [`dot`]; sharded over output rows.
+pub fn matmul_nt(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            c[i * n + j] = acc;
-        }
+    if pool.is_scalar() {
+        return scalar::matmul_nt(a, b, m, k, n);
     }
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    pool.for_rows(&mut c, n, MM_GRAIN, |i0, cc| {
+        for (r, crow) in cc.chunks_exact_mut(n).enumerate() {
+            let arow = &a[(i0 + r) * k..(i0 + r) * k + k];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = dot(arow, &b[j * k..j * k + k]);
+            }
+        }
+    });
     c
 }
 
@@ -180,7 +433,10 @@ pub struct HadamardGrads {
 }
 
 /// VJP of [`hadamard_fwd`] at `(x, w, b, w2, w3)` for upstream `dy`.
+/// Sharded over token rows; each shard returns fixed-order partial `dw`
+/// reductions that are combined in chunk order.
 pub fn hadamard_vjp(
+    pool: &Pool,
     x: &[f32],
     w: &[f32],
     w2: Option<&[f32]>,
@@ -189,26 +445,54 @@ pub fn hadamard_vjp(
 ) -> HadamardGrads {
     let h = w.len();
     let mut dx = vec![0.0f32; x.len()];
+    let partials = pool.map_rows(&mut dx, h, LN_GRAIN, |t0, dxc| {
+        let mut dw = vec![0.0f32; h];
+        let mut db = vec![0.0f32; h];
+        let mut dw2 = w2.map(|_| vec![0.0f32; h]);
+        let mut dw3 = w3.map(|_| vec![0.0f32; h]);
+        let rows = dxc.len() / h;
+        for r in 0..rows {
+            let t = t0 + r;
+            let row = &x[t * h..(t + 1) * h];
+            let dyrow = &dy[t * h..(t + 1) * h];
+            let dxrow = &mut dxc[r * h..(r + 1) * h];
+            for j in 0..h {
+                let xv = row[j];
+                let g = dyrow[j];
+                dw[j] += g * xv;
+                db[j] += g;
+                let mut deriv = w[j];
+                if let Some(w2) = w2 {
+                    deriv += 2.0 * w2[j] * xv;
+                    dw2.as_mut().unwrap()[j] += g * xv * xv;
+                }
+                if let Some(w3) = w3 {
+                    deriv += 3.0 * w3[j] * xv * xv;
+                    dw3.as_mut().unwrap()[j] += g * xv * xv * xv;
+                }
+                dxrow[j] = g * deriv;
+            }
+        }
+        (dw, db, dw2, dw3)
+    });
     let mut dw = vec![0.0f32; h];
     let mut db = vec![0.0f32; h];
     let mut dw2 = w2.map(|_| vec![0.0f32; h]);
     let mut dw3 = w3.map(|_| vec![0.0f32; h]);
-    for (t, (row, dyrow)) in x.chunks_exact(h).zip(dy.chunks_exact(h)).enumerate() {
+    for (pw, pb, pw2, pw3) in partials {
         for j in 0..h {
-            let xv = row[j];
-            let g = dyrow[j];
-            dw[j] += g * xv;
-            db[j] += g;
-            let mut deriv = w[j];
-            if let Some(w2) = w2 {
-                deriv += 2.0 * w2[j] * xv;
-                dw2.as_mut().unwrap()[j] += g * xv * xv;
+            dw[j] += pw[j];
+            db[j] += pb[j];
+        }
+        if let (Some(d), Some(p)) = (dw2.as_mut(), pw2.as_ref()) {
+            for j in 0..h {
+                d[j] += p[j];
             }
-            if let Some(w3) = w3 {
-                deriv += 3.0 * w3[j] * xv * xv;
-                dw3.as_mut().unwrap()[j] += g * xv * xv * xv;
+        }
+        if let (Some(d), Some(p)) = (dw3.as_mut(), pw3.as_ref()) {
+            for j in 0..h {
+                d[j] += p[j];
             }
-            dx[t * h + j] = g * deriv;
         }
     }
     HadamardGrads { dx, dw, db, dw2, dw3 }
@@ -227,40 +511,48 @@ pub struct LnCache {
 pub const LN_EPS: f64 = 1e-5;
 
 /// Row-wise LayerNorm with affine output (ref: `layernorm_ref`).
-/// `x: [T, H]`, `g, b: [H]`.
-pub fn layernorm_fwd(x: &[f32], g: &[f32], b: &[f32]) -> (Vec<f32>, LnCache) {
+/// `x: [T, H]`, `g, b: [H]`; rows sharded over `pool` (row math is
+/// independent, so results are identical for any thread count).
+pub fn layernorm_fwd(pool: &Pool, x: &[f32], g: &[f32], b: &[f32]) -> (Vec<f32>, LnCache) {
     let h = g.len();
     let rows = x.len() / h;
     let mut y = vec![0.0f32; x.len()];
     let mut xhat = vec![0.0f32; x.len()];
     let mut inv = vec![0.0f32; rows];
-    for t in 0..rows {
-        let row = &x[t * h..(t + 1) * h];
-        let mut mean = 0.0f64;
-        for &v in row {
-            mean += v as f64;
+    pool.for_rows3(&mut y, h, &mut xhat, h, &mut inv, 1, LN_GRAIN, |t0, yc, xhc, invc| {
+        for r in 0..invc.len() {
+            let row = &x[(t0 + r) * h..(t0 + r + 1) * h];
+            let mut mean = 0.0f64;
+            for &v in row {
+                mean += v as f64;
+            }
+            mean /= h as f64;
+            let mut var = 0.0f64;
+            for &v in row {
+                let d = v as f64 - mean;
+                var += d * d;
+            }
+            var /= h as f64;
+            let iv = 1.0 / (var + LN_EPS).sqrt();
+            invc[r] = iv as f32;
+            let yrow = &mut yc[r * h..(r + 1) * h];
+            let xhrow = &mut xhc[r * h..(r + 1) * h];
+            for j in 0..h {
+                let xh = ((row[j] as f64 - mean) * iv) as f32;
+                xhrow[j] = xh;
+                yrow[j] = xh * g[j] + b[j];
+            }
         }
-        mean /= h as f64;
-        let mut var = 0.0f64;
-        for &v in row {
-            let d = v as f64 - mean;
-            var += d * d;
-        }
-        var /= h as f64;
-        let iv = 1.0 / (var + LN_EPS).sqrt();
-        inv[t] = iv as f32;
-        for j in 0..h {
-            let xh = ((row[j] as f64 - mean) * iv) as f32;
-            xhat[t * h + j] = xh;
-            y[t * h + j] = xh * g[j] + b[j];
-        }
-    }
+    });
     (y, LnCache { xhat, inv })
 }
 
-/// VJP of [`layernorm_fwd`]: returns `(dx, dg, db)`; `dg`/`db` are
-/// *accumulated into* the provided buffers so layer loops can reuse slots.
+/// VJP of [`layernorm_fwd`]: returns `dx`; `dg`/`db` are *accumulated
+/// into* the provided buffers so layer loops can reuse slots. The `dx`
+/// rows shard over `pool`; the parameter reductions stay serial so they
+/// are independent of the worker count.
 pub fn layernorm_vjp(
+    pool: &Pool,
     dy: &[f32],
     g: &[f32],
     cache: &LnCache,
@@ -269,7 +561,6 @@ pub fn layernorm_vjp(
 ) -> Vec<f32> {
     let h = g.len();
     let rows = dy.len() / h;
-    let mut dx = vec![0.0f32; dy.len()];
     if let Some(dg) = dg {
         for t in 0..rows {
             for j in 0..h {
@@ -280,24 +571,29 @@ pub fn layernorm_vjp(
     if let Some(db) = db {
         col_sum_acc(dy, db);
     }
-    for t in 0..rows {
-        let dyrow = &dy[t * h..(t + 1) * h];
-        let xhrow = &cache.xhat[t * h..(t + 1) * h];
-        let mut m1 = 0.0f64;
-        let mut m2 = 0.0f64;
-        for j in 0..h {
-            let dxh = (dyrow[j] * g[j]) as f64;
-            m1 += dxh;
-            m2 += dxh * xhrow[j] as f64;
+    let mut dx = vec![0.0f32; dy.len()];
+    pool.for_rows(&mut dx, h, LN_GRAIN, |t0, dxc| {
+        for r in 0..dxc.len() / h {
+            let t = t0 + r;
+            let dyrow = &dy[t * h..(t + 1) * h];
+            let xhrow = &cache.xhat[t * h..(t + 1) * h];
+            let mut m1 = 0.0f64;
+            let mut m2 = 0.0f64;
+            for j in 0..h {
+                let dxh = (dyrow[j] * g[j]) as f64;
+                m1 += dxh;
+                m2 += dxh * xhrow[j] as f64;
+            }
+            m1 /= h as f64;
+            m2 /= h as f64;
+            let iv = cache.inv[t] as f64;
+            let dxrow = &mut dxc[r * h..(r + 1) * h];
+            for j in 0..h {
+                let dxh = (dyrow[j] * g[j]) as f64;
+                dxrow[j] = (iv * (dxh - m1 - xhrow[j] as f64 * m2)) as f32;
+            }
         }
-        m1 /= h as f64;
-        m2 /= h as f64;
-        let iv = cache.inv[t] as f64;
-        for j in 0..h {
-            let dxh = (dyrow[j] * g[j]) as f64;
-            dx[t * h + j] = (iv * (dxh - m1 - xhrow[j] as f64 * m2)) as f32;
-        }
-    }
+    });
     dx
 }
 
@@ -326,9 +622,12 @@ pub fn softmax_rows(x: &mut [f32], n: usize) {
 /// Masked scaled-dot-product attention forward (ref: `attention_ref`).
 ///
 /// `q, k, v: [B, NH, L, D]`; `mask_add: [B, L]` additive (0 keep, -1e9
-/// drop). Returns `(out [B, NH, L, D], probs [B, NH, L, L])`.
+/// drop). Returns `(out [B, NH, L, D], probs [B, NH, L, L])`. Sharded
+/// over the `B x NH` blocks; no zero-skip on the prob-weighted sum so a
+/// NaN in a masked value row still surfaces (JAX parity).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_fwd(
+    pool: &Pool,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -338,50 +637,53 @@ pub fn attention_fwd(
     l: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    if pool.is_scalar() {
+        return scalar::attention_fwd(q, k, v, mask_add, b, nh, l, d);
+    }
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = vec![0.0f32; b * nh * l * d];
     let mut probs = vec![0.0f32; b * nh * l * l];
-    for bi in 0..b {
-        let mrow = &mask_add[bi * l..(bi + 1) * l];
-        for hi in 0..nh {
-            let base = (bi * nh + hi) * l * d;
+    if b * nh == 0 || l == 0 || d == 0 {
+        return (out, probs);
+    }
+    pool.for_rows2(&mut out, l * d, &mut probs, l * l, 1, |bh0, outc, probsc| {
+        let items = probsc.len() / (l * l);
+        for idx in 0..items {
+            let bh = bh0 + idx;
+            let bi = bh / nh;
+            let mrow = &mask_add[bi * l..(bi + 1) * l];
+            let base = bh * l * d;
             let qs = &q[base..base + l * d];
             let ks = &k[base..base + l * d];
             let vs = &v[base..base + l * d];
-            let pbase = (bi * nh + hi) * l * l;
-            let scores = &mut probs[pbase..pbase + l * l];
+            let scores = &mut probsc[idx * l * l..(idx + 1) * l * l];
             for i in 0..l {
+                let qrow = &qs[i * d..(i + 1) * d];
+                let srow = &mut scores[i * l..(i + 1) * l];
                 for j in 0..l {
-                    let mut acc = 0.0f32;
-                    for p in 0..d {
-                        acc += qs[i * d + p] * ks[j * d + p];
-                    }
-                    scores[i * l + j] = acc * scale + mrow[j];
+                    srow[j] = dot(qrow, &ks[j * d..(j + 1) * d]) * scale + mrow[j];
                 }
             }
             softmax_rows(scores, l);
+            let pr = &probsc[idx * l * l..(idx + 1) * l * l];
+            let ob = &mut outc[idx * l * d..(idx + 1) * l * d];
             for i in 0..l {
-                let orow = &mut out[base + i * d..base + (i + 1) * d];
+                let orow = &mut ob[i * d..(i + 1) * d];
                 for j in 0..l {
-                    let pv = scores[i * l + j];
-                    if pv == 0.0 {
-                        continue;
-                    }
-                    let vrow = &vs[j * d..(j + 1) * d];
-                    for p in 0..d {
-                        orow[p] += pv * vrow[p];
-                    }
+                    axpy(orow, pr[i * l + j], &vs[j * d..(j + 1) * d]);
                 }
             }
         }
-    }
+    });
     (out, probs)
 }
 
 /// VJP of [`attention_fwd`]: given upstream `dout [B, NH, L, D]` and the
 /// forward's `probs`, returns `(dq, dk, dv)` (mask gets no gradient).
+/// Sharded over the `B x NH` blocks with per-shard scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_vjp(
+    pool: &Pool,
     dout: &[f32],
     q: &[f32],
     k: &[f32],
@@ -392,74 +694,82 @@ pub fn attention_vjp(
     l: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    if pool.is_scalar() {
+        return scalar::attention_vjp(dout, q, k, v, probs, b, nh, l, d);
+    }
     let scale = 1.0 / (d as f32).sqrt();
     let mut dq = vec![0.0f32; q.len()];
     let mut dk = vec![0.0f32; k.len()];
     let mut dv = vec![0.0f32; v.len()];
-    let mut dprobs = vec![0.0f32; l * l];
-    let mut dscores = vec![0.0f32; l * l];
-    for bi in 0..b {
-        for hi in 0..nh {
-            let base = (bi * nh + hi) * l * d;
-            let pbase = (bi * nh + hi) * l * l;
-            let pr = &probs[pbase..pbase + l * l];
-            let dat = &dout[base..base + l * d];
-            let vs = &v[base..base + l * d];
-            // dprobs = dout @ v^T ; dv = probs^T @ dout
-            for i in 0..l {
-                for j in 0..l {
-                    let mut acc = 0.0f32;
-                    for p in 0..d {
-                        acc += dat[i * d + p] * vs[j * d + p];
-                    }
-                    dprobs[i * l + j] = acc;
-                }
-            }
-            {
-                let dvs = &mut dv[base..base + l * d];
-                for j in 0..l {
-                    for i in 0..l {
-                        let pv = pr[i * l + j];
-                        if pv == 0.0 {
-                            continue;
-                        }
-                        for p in 0..d {
-                            dvs[j * d + p] += pv * dat[i * d + p];
-                        }
-                    }
-                }
-            }
-            // softmax backward: ds = p * (dp - sum_j dp * p)
-            for i in 0..l {
-                let mut dot = 0.0f32;
-                for j in 0..l {
-                    dot += dprobs[i * l + j] * pr[i * l + j];
-                }
-                for j in 0..l {
-                    dscores[i * l + j] = pr[i * l + j] * (dprobs[i * l + j] - dot);
-                }
-            }
-            // dq = ds @ k * scale ; dk = ds^T @ q * scale
-            let qs = &q[base..base + l * d];
-            let ks = &k[base..base + l * d];
-            {
-                let dqs = &mut dq[base..base + l * d];
-                let dks = &mut dk[base..base + l * d];
-                for i in 0..l {
-                    for j in 0..l {
-                        let sv = dscores[i * l + j] * scale;
-                        if sv == 0.0 {
-                            continue;
-                        }
-                        for p in 0..d {
-                            dqs[i * d + p] += sv * ks[j * d + p];
-                            dks[j * d + p] += sv * qs[i * d + p];
-                        }
-                    }
-                }
-            }
-        }
+    if b * nh == 0 || l == 0 || d == 0 {
+        return (dq, dk, dv);
     }
+    pool.for_rows3(
+        &mut dq,
+        l * d,
+        &mut dk,
+        l * d,
+        &mut dv,
+        l * d,
+        1,
+        |bh0, dqc, dkc, dvc| {
+            let items = dqc.len() / (l * d);
+            let mut dprobs = vec![0.0f32; l * l];
+            let mut dscores = vec![0.0f32; l * l];
+            for idx in 0..items {
+                let bh = bh0 + idx;
+                let base = bh * l * d;
+                let pbase = bh * l * l;
+                let pr = &probs[pbase..pbase + l * l];
+                let dat = &dout[base..base + l * d];
+                let vs = &v[base..base + l * d];
+                // dprobs = dout @ v^T ; dv = probs^T @ dout
+                for i in 0..l {
+                    let drow = &dat[i * d..(i + 1) * d];
+                    for j in 0..l {
+                        dprobs[i * l + j] = dot(drow, &vs[j * d..(j + 1) * d]);
+                    }
+                }
+                {
+                    let dvs = &mut dvc[idx * l * d..(idx + 1) * l * d];
+                    for i in 0..l {
+                        let drow = &dat[i * d..(i + 1) * d];
+                        for j in 0..l {
+                            let dvrow = &mut dvs[j * d..(j + 1) * d];
+                            axpy(dvrow, pr[i * l + j], drow);
+                        }
+                    }
+                }
+                // softmax backward: ds = p * (dp - sum_j dp * p)
+                for i in 0..l {
+                    let prow = &pr[i * l..(i + 1) * l];
+                    let dprow = &dprobs[i * l..(i + 1) * l];
+                    let dp_dot = dot(dprow, prow);
+                    let dsrow = &mut dscores[i * l..(i + 1) * l];
+                    for j in 0..l {
+                        dsrow[j] = prow[j] * (dprow[j] - dp_dot);
+                    }
+                }
+                // dq = ds @ k * scale ; dk = ds^T @ q * scale
+                let qs = &q[base..base + l * d];
+                let ks = &k[base..base + l * d];
+                let dqs = &mut dqc[idx * l * d..(idx + 1) * l * d];
+                let dks = &mut dkc[idx * l * d..(idx + 1) * l * d];
+                for i in 0..l {
+                    let dqrow = &mut dqs[i * d..(i + 1) * d];
+                    for j in 0..l {
+                        axpy(dqrow, dscores[i * l + j] * scale, &ks[j * d..(j + 1) * d]);
+                    }
+                }
+                for j in 0..l {
+                    let dkrow = &mut dks[j * d..(j + 1) * d];
+                    for i in 0..l {
+                        axpy(dkrow, dscores[i * l + j] * scale, &qs[i * d..(i + 1) * d]);
+                    }
+                }
+            }
+        },
+    );
     (dq, dk, dv)
 }
 
@@ -509,9 +819,236 @@ pub fn spectral_norm(a: &[f32], b: usize, l: usize, h: usize) -> Vec<f32> {
     out
 }
 
+// ------------------------------------------------------- scalar reference
+
+/// The PR 1 scalar kernels, retained verbatim as the parity oracle for
+/// `tests/kernel_parity.rs` and the baseline `bench_runtime` measures the
+/// blocked kernels against (`Pool::scalar_reference()` routes the whole
+/// backend here).
+///
+/// Note these keep the historical `== 0.0` skips, which *mask* NaN/Inf
+/// propagation — the bug the blocked kernels fix. Do not use them on
+/// non-finite inputs.
+pub mod scalar {
+    use super::softmax_rows;
+
+    /// `c = a @ b` (row-major, ikj loop order).
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// `out += a^T @ b` (the parameter-gradient shape).
+    pub fn matmul_tn_acc(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        for p in 0..k {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+
+    /// `c = a @ b^T` (the input-gradient shape).
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    /// Scalar masked attention forward.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_fwd(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        mask_add: &[f32],
+        b: usize,
+        nh: usize,
+        l: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = vec![0.0f32; b * nh * l * d];
+        let mut probs = vec![0.0f32; b * nh * l * l];
+        for bi in 0..b {
+            let mrow = &mask_add[bi * l..(bi + 1) * l];
+            for hi in 0..nh {
+                let base = (bi * nh + hi) * l * d;
+                let qs = &q[base..base + l * d];
+                let ks = &k[base..base + l * d];
+                let vs = &v[base..base + l * d];
+                let pbase = (bi * nh + hi) * l * l;
+                let scores = &mut probs[pbase..pbase + l * l];
+                for i in 0..l {
+                    for j in 0..l {
+                        let mut acc = 0.0f32;
+                        for p in 0..d {
+                            acc += qs[i * d + p] * ks[j * d + p];
+                        }
+                        scores[i * l + j] = acc * scale + mrow[j];
+                    }
+                }
+                softmax_rows(scores, l);
+                for i in 0..l {
+                    let orow = &mut out[base + i * d..base + (i + 1) * d];
+                    for j in 0..l {
+                        let pv = scores[i * l + j];
+                        if pv == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vs[j * d..(j + 1) * d];
+                        for p in 0..d {
+                            orow[p] += pv * vrow[p];
+                        }
+                    }
+                }
+            }
+        }
+        (out, probs)
+    }
+
+    /// Scalar attention VJP.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_vjp(
+        dout: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        probs: &[f32],
+        b: usize,
+        nh: usize,
+        l: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut dq = vec![0.0f32; q.len()];
+        let mut dk = vec![0.0f32; k.len()];
+        let mut dv = vec![0.0f32; v.len()];
+        let mut dprobs = vec![0.0f32; l * l];
+        let mut dscores = vec![0.0f32; l * l];
+        for bi in 0..b {
+            for hi in 0..nh {
+                let base = (bi * nh + hi) * l * d;
+                let pbase = (bi * nh + hi) * l * l;
+                let pr = &probs[pbase..pbase + l * l];
+                let dat = &dout[base..base + l * d];
+                let vs = &v[base..base + l * d];
+                for i in 0..l {
+                    for j in 0..l {
+                        let mut acc = 0.0f32;
+                        for p in 0..d {
+                            acc += dat[i * d + p] * vs[j * d + p];
+                        }
+                        dprobs[i * l + j] = acc;
+                    }
+                }
+                {
+                    let dvs = &mut dv[base..base + l * d];
+                    for j in 0..l {
+                        for i in 0..l {
+                            let pv = pr[i * l + j];
+                            if pv == 0.0 {
+                                continue;
+                            }
+                            for p in 0..d {
+                                dvs[j * d + p] += pv * dat[i * d + p];
+                            }
+                        }
+                    }
+                }
+                for i in 0..l {
+                    let mut dp_dot = 0.0f32;
+                    for j in 0..l {
+                        dp_dot += dprobs[i * l + j] * pr[i * l + j];
+                    }
+                    for j in 0..l {
+                        dscores[i * l + j] = pr[i * l + j] * (dprobs[i * l + j] - dp_dot);
+                    }
+                }
+                let qs = &q[base..base + l * d];
+                let ks = &k[base..base + l * d];
+                {
+                    let dqs = &mut dq[base..base + l * d];
+                    let dks = &mut dk[base..base + l * d];
+                    for i in 0..l {
+                        for j in 0..l {
+                            let sv = dscores[i * l + j] * scale;
+                            if sv == 0.0 {
+                                continue;
+                            }
+                            for p in 0..d {
+                                dqs[i * d + p] += sv * ks[j * d + p];
+                                dks[j * d + p] += sv * qs[i * d + p];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (dq, dk, dv)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
+
+    fn pool() -> Pool {
+        Pool::serial()
+    }
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-5 * (1.0 + w.abs()),
+                "{what}[{i}]: got {g}, want {w}"
+            );
+        }
+    }
 
     #[test]
     fn erf_reference_points() {
@@ -523,7 +1060,6 @@ mod tests {
 
     #[test]
     fn gelu_known_values() {
-        // gelu(0)=0, gelu is odd-ish: gelu(x) + gelu(-x) = x - x = ... check
         assert_eq!(gelu(0.0), 0.0);
         assert!((gelu(1.0) - 0.841345).abs() < 1e-5);
         assert!((gelu(-1.0) + 0.158655).abs() < 1e-5);
@@ -532,19 +1068,172 @@ mod tests {
     }
 
     #[test]
+    fn fast_erf_matches_f64() {
+        let mut x = -9.0f32;
+        while x <= 9.0 {
+            let fast = erf_f32(x);
+            let slow = erf(x as f64) as f32;
+            assert!((fast - slow).abs() <= 2e-6, "erf_f32({x}) = {fast} vs {slow}");
+            x += 0.0037;
+        }
+    }
+
+    #[test]
+    fn fast_gelu_matches_f64() {
+        let mut x = -9.0f32;
+        while x <= 9.0 {
+            let fg = gelu_f32(x);
+            let sg = gelu(x);
+            assert!((fg - sg).abs() <= 1e-5, "gelu_f32({x}) = {fg} vs {sg}");
+            let fd = dgelu_f32(x);
+            let sd = dgelu(x);
+            assert!((fd - sd).abs() <= 1e-5, "dgelu_f32({x}) = {fd} vs {sd}");
+            x += 0.0037;
+        }
+        assert_eq!(gelu_f32(0.0), 0.0);
+    }
+
+    #[test]
+    fn gelu_vec_parallel_matches_reference() {
+        let mut rng = Rng::new(11);
+        let x = randv(&mut rng, 10_000);
+        let want: Vec<f32> = x.iter().map(|&v| gelu(v)).collect();
+        for p in [Pool::serial(), Pool::with_threads(4), Pool::scalar_reference()] {
+            let got = gelu_vec(&p, &x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-5, "{g} vs {w}");
+            }
+        }
+        let dy = randv(&mut rng, 10_000);
+        let want: Vec<f32> = dy.iter().zip(&x).map(|(g, &v)| g * dgelu(v)).collect();
+        let got = dgelu_mul(&Pool::with_threads(3), &dy, &x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
     fn matmul_small() {
+        let p = pool();
         // [2,3] x [3,2]
         let a = [1., 2., 3., 4., 5., 6.];
         let b = [7., 8., 9., 10., 11., 12.];
-        let c = matmul(&a, &b, 2, 3, 2);
+        let c = matmul(&p, &a, &b, 2, 3, 2);
         assert_eq!(c, vec![58., 64., 139., 154.]);
         // a^T @ a : [3,3], diag = col norms
         let mut out = vec![0.0; 9];
-        matmul_tn_acc(&a, &a, &mut out, 2, 3, 3);
+        matmul_tn_acc(&p, &a, &a, &mut out, 2, 3, 3);
         assert_eq!(out[0], 17.0); // 1*1 + 4*4
         // a @ a^T : [2,2]
-        let c = matmul_nt(&a, &a, 2, 3, 2);
+        let c = matmul_nt(&p, &a, &a, 2, 3, 2);
         assert_eq!(c, vec![14., 32., 32., 77.]);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_scalar_on_odd_shapes() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (5, 7, 9), (6, 4, 8), (17, 33, 13)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let want = scalar::matmul(&a, &b, m, k, n);
+            for threads in [1, 4] {
+                let p = Pool::with_threads(threads);
+                assert_close(&matmul(&p, &a, &b, m, k, n), &want, "nn");
+            }
+            let bt = randv(&mut rng, n * k);
+            let want = scalar::matmul_nt(&a, &bt, m, k, n);
+            assert_close(&matmul_nt(&Pool::with_threads(4), &a, &bt, m, k, n), &want, "nt");
+            let at = randv(&mut rng, k * m);
+            let bb = randv(&mut rng, k * n);
+            let mut want = vec![0.5f32; m * n];
+            scalar::matmul_tn_acc(&at, &bb, &mut want, k, m, n);
+            let mut got = vec![0.5f32; m * n];
+            matmul_tn_acc(&Pool::with_threads(4), &at, &bb, &mut got, k, m, n);
+            assert_close(&got, &want, "tn");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_is_deterministic_per_row() {
+        // per-row accumulation order is thread-count independent for NN
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (23, 31, 19);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let c1 = matmul(&Pool::serial(), &a, &b, m, k, n);
+        let c4 = matmul(&Pool::with_threads(4), &a, &b, m, k, n);
+        assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn scalar_dispatch_routes_to_reference() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (4, 6, 5);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let via_pool = matmul(&Pool::scalar_reference(), &a, &b, m, k, n);
+        assert_eq!(via_pool, scalar::matmul(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn nan_propagates_through_blocked_matmuls() {
+        let p = Pool::serial();
+        // a is all zeros: the PR 1 skip would silently drop the NaN column
+        let a = vec![0.0f32; 2 * 3];
+        let mut b = vec![1.0f32; 3 * 2];
+        b[0] = f32::NAN;
+        let c = matmul(&p, &a, &b, 2, 3, 2);
+        assert!(c[0].is_nan(), "0 * NaN must stay NaN (JAX semantics)");
+        let c = matmul_nt(&p, &a, &b, 2, 3, 2);
+        assert!(c[0].is_nan());
+        let mut out = vec![0.0f32; 2 * 2];
+        // a^T @ b with a: [3, 2] zero, b: [3, 2] NaN in row 0
+        matmul_tn_acc(&p, &a, &b, &mut out, 3, 2, 2);
+        assert!(out[0].is_nan());
+        // the retained scalar reference documents the masked behavior
+        let c = scalar::matmul(&a, &b, 2, 3, 2);
+        assert!(!c[0].is_nan(), "scalar reference keeps the historical skip");
+    }
+
+    #[test]
+    fn nan_propagates_through_attention_values() {
+        let p = Pool::serial();
+        let (b, nh, l, d) = (1, 1, 3, 2);
+        let q = vec![0.0f32; l * d];
+        let k = vec![0.0f32; l * d];
+        let mut v = vec![1.0f32; l * d];
+        // NaN sits in the *masked* value row: its prob underflows to
+        // exactly 0.0, and 0.0 * NaN must still poison the output.
+        v[(l - 1) * d] = f32::NAN;
+        let mut mask = vec![0.0f32; l];
+        mask[l - 1] = -1e9;
+        let (out, probs) = attention_fwd(&p, &q, &k, &v, &mask, b, nh, l, d);
+        assert_eq!(probs[l - 1], 0.0, "masked prob must underflow to zero");
+        assert!(out[0].is_nan(), "masked NaN value must surface in out");
+    }
+
+    #[test]
+    fn attention_parallel_matches_scalar() {
+        let mut rng = Rng::new(21);
+        let (b, nh, l, d) = (2, 3, 5, 4);
+        let q = randv(&mut rng, b * nh * l * d);
+        let k = randv(&mut rng, b * nh * l * d);
+        let v = randv(&mut rng, b * nh * l * d);
+        let mut mask = vec![0.0f32; b * l];
+        mask[l - 1] = -1e9;
+        let (wo, wp) = scalar::attention_fwd(&q, &k, &v, &mask, b, nh, l, d);
+        for threads in [1, 4] {
+            let p = Pool::with_threads(threads);
+            let (o, pr) = attention_fwd(&p, &q, &k, &v, &mask, b, nh, l, d);
+            assert_close(&o, &wo, "att out");
+            assert_close(&pr, &wp, "att probs");
+            let dy = randv(&mut rng, b * nh * l * d);
+            let (dq, dk, dv) = attention_vjp(&p, &dy, &q, &k, &v, &wp, b, nh, l, d);
+            let (sq, sk, sv) = scalar::attention_vjp(&dy, &q, &k, &v, &wp, b, nh, l, d);
+            assert_close(&dq, &sq, "att dq");
+            assert_close(&dk, &sk, "att dk");
+            assert_close(&dv, &sv, "att dv");
+        }
     }
 
     #[test]
@@ -559,13 +1248,14 @@ mod tests {
 
     #[test]
     fn hadamard_grads_finite_difference() {
+        let p = pool();
         let x = vec![0.3, -0.7, 1.1, 0.9, -0.2, 0.4];
         let w = vec![1.2, 0.8, -0.5];
         let b = vec![0.1, -0.1, 0.2];
         let w2 = vec![0.05, -0.02, 0.03];
         let w3 = vec![0.01, 0.02, -0.01];
         let dy = vec![1.0; 6];
-        let g = hadamard_vjp(&x, &w, Some(&w2), Some(&w3), &dy);
+        let g = hadamard_vjp(&p, &x, &w, Some(&w2), Some(&w3), &dy);
         let f = |x: &[f32]| -> f32 {
             hadamard_fwd(x, &w, &b, Some(&w2), Some(&w3)).iter().sum()
         };
@@ -581,11 +1271,29 @@ mod tests {
     }
 
     #[test]
+    fn hadamard_vjp_threads_agree() {
+        let mut rng = Rng::new(31);
+        let (t, h) = (37, 5);
+        let x = randv(&mut rng, t * h);
+        let w = randv(&mut rng, h);
+        let w2 = randv(&mut rng, h);
+        let dy = randv(&mut rng, t * h);
+        let a = hadamard_vjp(&Pool::serial(), &x, &w, Some(&w2), None, &dy);
+        let b = hadamard_vjp(&Pool::with_threads(4), &x, &w, Some(&w2), None, &dy);
+        assert_eq!(a.dx, b.dx, "dx rows are order-independent");
+        assert_close(&a.dw, &b.dw, "dw");
+        assert_close(&a.db, &b.db, "db");
+        assert_close(a.dw2.as_ref().unwrap(), b.dw2.as_ref().unwrap(), "dw2");
+        assert!(a.dw3.is_none() && b.dw3.is_none());
+    }
+
+    #[test]
     fn layernorm_rows_normalized() {
+        let p = pool();
         let x = vec![1.0, 2.0, 3.0, 4.0, -2.0, 0.0, 2.0, 4.0];
         let g = vec![1.0; 4];
         let b = vec![0.0; 4];
-        let (y, cache) = layernorm_fwd(&x, &g, &b);
+        let (y, cache) = layernorm_fwd(&p, &x, &g, &b);
         for row in y.chunks_exact(4) {
             let mean: f32 = row.iter().sum::<f32>() / 4.0;
             let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
@@ -597,14 +1305,15 @@ mod tests {
 
     #[test]
     fn layernorm_vjp_finite_difference() {
+        let p = pool();
         let x = vec![0.5, -1.0, 2.0, 0.25, 1.5, -0.5, 0.0, 1.0];
         let g = vec![1.1, 0.9, 1.2, 0.8];
         let b = vec![0.1, 0.0, -0.1, 0.2];
-        let (_, cache) = layernorm_fwd(&x, &g, &b);
+        let (_, cache) = layernorm_fwd(&p, &x, &g, &b);
         let dy = vec![0.3, -0.2, 0.5, 0.1, -0.4, 0.2, 0.6, -0.1];
-        let dx = layernorm_vjp(&dy, &g, &cache, None, None);
+        let dx = layernorm_vjp(&p, &dy, &g, &cache, None, None);
         let f = |x: &[f32]| -> f32 {
-            let (y, _) = layernorm_fwd(x, &g, &b);
+            let (y, _) = layernorm_fwd(&pool(), x, &g, &b);
             y.iter().zip(&dy).map(|(a, b)| a * b).sum()
         };
         let eps = 1e-2;
@@ -619,6 +1328,24 @@ mod tests {
     }
 
     #[test]
+    fn layernorm_threads_agree() {
+        let mut rng = Rng::new(41);
+        let (t, h) = (67, 6);
+        let x = randv(&mut rng, t * h);
+        let g = randv(&mut rng, h);
+        let b = randv(&mut rng, h);
+        let (y1, c1) = layernorm_fwd(&Pool::serial(), &x, &g, &b);
+        let (y4, c4) = layernorm_fwd(&Pool::with_threads(4), &x, &g, &b);
+        assert_eq!(y1, y4);
+        assert_eq!(c1.xhat, c4.xhat);
+        assert_eq!(c1.inv, c4.inv);
+        let dy = randv(&mut rng, t * h);
+        let dx1 = layernorm_vjp(&Pool::serial(), &dy, &g, &c1, None, None);
+        let dx4 = layernorm_vjp(&Pool::with_threads(4), &dy, &g, &c4, None, None);
+        assert_eq!(dx1, dx4);
+    }
+
+    #[test]
     fn softmax_rows_sum_to_one_and_respect_mask() {
         let mut x = vec![1.0, 2.0, -1e9, 0.5];
         softmax_rows(&mut x, 4);
@@ -629,14 +1356,15 @@ mod tests {
 
     #[test]
     fn attention_uniform_when_qk_zero() {
+        let p = pool();
         let (b, nh, l, d) = (1, 1, 3, 2);
         let q = vec![0.0; l * d];
         let k = vec![0.0; l * d];
         let v: Vec<f32> = (0..l * d).map(|i| i as f32).collect();
         let mask = vec![0.0; l];
-        let (out, probs) = attention_fwd(&q, &k, &v, &mask, b, nh, l, d);
-        for p in &probs {
-            assert!((p - 1.0 / 3.0).abs() < 1e-6);
+        let (out, probs) = attention_fwd(&p, &q, &k, &v, &mask, b, nh, l, d);
+        for pv in &probs {
+            assert!((pv - 1.0 / 3.0).abs() < 1e-6);
         }
         // out rows are the mean of v rows
         for i in 0..l {

@@ -17,6 +17,7 @@ pub mod inventory;
 pub mod kernels;
 pub mod manifest;
 pub mod native;
+pub mod pool;
 pub mod tensor;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
@@ -25,6 +26,7 @@ pub use backend::{Backend, DeviceTensor};
 pub use engine::{Engine, EngineStats};
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
+pub use pool::Pool;
 pub use tensor::{IntTensor, Tensor};
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;

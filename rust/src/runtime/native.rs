@@ -20,18 +20,38 @@ use anyhow::{anyhow, bail, Result};
 use super::backend::{Backend, DeviceTensor};
 use super::kernels as k;
 use super::manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo};
+use super::pool::Pool;
 use super::tensor::{IntTensor, Tensor};
 
 const NEG_INF: f32 = -1e9;
 
-/// The native (pure-Rust, CPU) backend. Stateless: all model state lives
-/// in the uploaded parameter tensors, all structure in the manifest.
+/// The native (pure-Rust, CPU) backend. All model state lives in the
+/// uploaded parameter tensors and all structure in the manifest; the only
+/// backend state is the kernel worker [`Pool`] (the `threads` config key).
 #[derive(Debug, Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    pool: Pool,
+}
 
 impl NativeBackend {
+    /// Auto-sized pool: one kernel worker per available core.
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend { pool: Pool::auto() }
+    }
+
+    /// Fixed kernel worker count (`0` = auto-detect).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { pool: Pool::with_threads(threads) }
+    }
+
+    /// Explicit pool — benches use `Pool::scalar_reference()` to run the
+    /// retained PR 1 scalar kernels as a baseline.
+    pub fn with_pool(pool: Pool) -> NativeBackend {
+        NativeBackend { pool }
+    }
+
+    pub fn pool(&self) -> &Pool {
+        &self.pool
     }
 }
 
@@ -88,9 +108,9 @@ impl Backend for NativeBackend {
         let pp = Params { model, data: params };
         let batch = &inputs[n..];
         match artifact.kind {
-            ArtifactKind::Forward => run_forward(model, &pp, batch),
-            ArtifactKind::Train => run_train(model, &pp, batch, artifact),
-            ArtifactKind::Mlm => run_mlm(model, &pp, batch, artifact),
+            ArtifactKind::Forward => run_forward(&self.pool, model, &pp, batch),
+            ArtifactKind::Train => run_train(&self.pool, model, &pp, batch, artifact),
+            ArtifactKind::Mlm => run_mlm(&self.pool, model, &pp, batch, artifact),
         }
     }
 }
@@ -222,7 +242,9 @@ impl GradSink {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn grad_matmul_tn(
+    pool: &Pool,
     sink: &mut GradSink,
     idx: usize,
     a: &[f32],
@@ -232,7 +254,7 @@ fn grad_matmul_tn(
     n: usize,
 ) {
     if let Some(buf) = sink.buf(idx, m * n) {
-        k::matmul_tn_acc(a, b, buf, kdim, m, n);
+        k::matmul_tn_acc(pool, a, b, buf, kdim, m, n);
     }
 }
 
@@ -270,11 +292,6 @@ fn mul_rows(x: &[f32], v: &[f32]) -> Vec<f32> {
         }
     }
     y
-}
-
-/// `dy ⊙ gelu'(u)` elementwise.
-fn dgelu_mul(dy: &[f32], u: &[f32]) -> Vec<f32> {
-    dy.iter().zip(u).map(|(g, &x)| g * k::dgelu(x)).collect()
 }
 
 /// `[B, L, NH, D]` (flat `[T, H]`) -> `[B, NH, L, D]`.
@@ -353,7 +370,9 @@ struct Fwd {
     means: Vec<Vec<f32>>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn forward(
+    pool: &Pool,
     dims: &Dims,
     pp: &Params,
     tokens: &[i32],
@@ -389,6 +408,7 @@ fn forward(
         }
     }
     let (x0, emb_ln) = k::layernorm_fwd(
+        pool,
         &emb,
         pp.get("embeddings.LayerNorm.weight")?,
         pp.get("embeddings.LayerNorm.bias")?,
@@ -407,23 +427,24 @@ fn forward(
     for i in 0..dims.layers {
         let x_in = x;
         // Q/K/V with LoRA (Q, V) and IA3 (K, V)
-        let xa_q = k::matmul(&x_in, pp.lp(i, "lora.query.a")?, t, h, dims.r);
-        let mut q = k::matmul(&x_in, pp.lp(i, "attention.self.query.weight")?, t, h, h);
+        let xa_q = k::matmul(pool, &x_in, pp.lp(i, "lora.query.a")?, t, h, dims.r);
+        let mut q = k::matmul(pool, &x_in, pp.lp(i, "attention.self.query.weight")?, t, h, h);
         k::add_bias(&mut q, pp.lp(i, "attention.self.query.bias")?);
         {
-            let lb = k::matmul(&xa_q, pp.lp(i, "lora.query.b")?, t, dims.r, h);
+            let lb = k::matmul(pool, &xa_q, pp.lp(i, "lora.query.b")?, t, dims.r, h);
             for (qv, lv) in q.iter_mut().zip(&lb) {
                 *qv += lv * s_lora;
             }
         }
-        let mut klin = k::matmul(&x_in, pp.lp(i, "attention.self.key.weight")?, t, h, h);
+        let mut klin = k::matmul(pool, &x_in, pp.lp(i, "attention.self.key.weight")?, t, h, h);
         k::add_bias(&mut klin, pp.lp(i, "attention.self.key.bias")?);
         let kk = mul_rows(&klin, pp.lp(i, "ia3.l_k")?);
-        let xa_v = k::matmul(&x_in, pp.lp(i, "lora.value.a")?, t, h, dims.r);
-        let mut vpre = k::matmul(&x_in, pp.lp(i, "attention.self.value.weight")?, t, h, h);
+        let xa_v = k::matmul(pool, &x_in, pp.lp(i, "lora.value.a")?, t, h, dims.r);
+        let mut vpre =
+            k::matmul(pool, &x_in, pp.lp(i, "attention.self.value.weight")?, t, h, h);
         k::add_bias(&mut vpre, pp.lp(i, "attention.self.value.bias")?);
         {
-            let lb = k::matmul(&xa_v, pp.lp(i, "lora.value.b")?, t, dims.r, h);
+            let lb = k::matmul(pool, &xa_v, pp.lp(i, "lora.value.b")?, t, dims.r, h);
             for (vv, lv) in vpre.iter_mut().zip(&lb) {
                 *vv += lv * s_lora;
             }
@@ -434,7 +455,7 @@ fn forward(
         let qh = split_heads(&q, b, l, nh, d);
         let kh = split_heads(&kk, b, l, nh, d);
         let vh = split_heads(&vv, b, l, nh, d);
-        let (atth, probs) = k::attention_fwd(&qh, &kh, &vh, &mask_add, b, nh, l, d);
+        let (atth, probs) = k::attention_fwd(pool, &qh, &kh, &vh, &mask_add, b, nh, l, d);
         let att = merge_heads(&atth, b, l, nh, d);
 
         // ---- the Hadamard adapter (paper Eq. 7: A' = Adap(A)) ----
@@ -459,42 +480,46 @@ fn forward(
         }
 
         // attention output dense + Houlsby attn adapter + residual LN
-        let mut a_dense = k::matmul(&att_ad, pp.lp(i, "attention.output.dense.weight")?, t, h, h);
+        let mut a_dense =
+            k::matmul(pool, &att_ad, pp.lp(i, "attention.output.dense.weight")?, t, h, h);
         k::add_bias(&mut a_dense, pp.lp(i, "attention.output.dense.bias")?);
-        let mut u2 = k::matmul(&a_dense, pp.lp(i, "houlsby.attn.down.weight")?, t, h, dims.bn);
+        let mut u2 =
+            k::matmul(pool, &a_dense, pp.lp(i, "houlsby.attn.down.weight")?, t, h, dims.bn);
         k::add_bias(&mut u2, pp.lp(i, "houlsby.attn.down.bias")?);
-        let ha = k::gelu_vec(&u2);
+        let ha = k::gelu_vec(pool, &u2);
         let mut a2 = a_dense.clone();
         {
-            let up = k::matmul(&ha, pp.lp(i, "houlsby.attn.up.weight")?, t, dims.bn, h);
+            let up = k::matmul(pool, &ha, pp.lp(i, "houlsby.attn.up.weight")?, t, dims.bn, h);
             add_assign(&mut a2, &up);
             k::add_bias(&mut a2, pp.lp(i, "houlsby.attn.up.bias")?);
         }
         add_assign(&mut a2, &x_in);
         let (x1, ln1) = k::layernorm_fwd(
+            pool,
             &a2,
             pp.lp(i, "attention.output.LayerNorm.weight")?,
             pp.lp(i, "attention.output.LayerNorm.bias")?,
         );
 
         // FFN with IA3 + Houlsby ffn adapter + residual LN
-        let mut u1 = k::matmul(&x1, pp.lp(i, "intermediate.dense.weight")?, t, h, f);
+        let mut u1 = k::matmul(pool, &x1, pp.lp(i, "intermediate.dense.weight")?, t, h, f);
         k::add_bias(&mut u1, pp.lp(i, "intermediate.dense.bias")?);
-        let ginter = k::gelu_vec(&u1);
+        let ginter = k::gelu_vec(pool, &u1);
         let inter = mul_rows(&ginter, pp.lp(i, "ia3.l_ff")?);
-        let mut ffn = k::matmul(&inter, pp.lp(i, "output.dense.weight")?, t, f, h);
+        let mut ffn = k::matmul(pool, &inter, pp.lp(i, "output.dense.weight")?, t, f, h);
         k::add_bias(&mut ffn, pp.lp(i, "output.dense.bias")?);
-        let mut u4 = k::matmul(&ffn, pp.lp(i, "houlsby.ffn.down.weight")?, t, h, dims.bn);
+        let mut u4 = k::matmul(pool, &ffn, pp.lp(i, "houlsby.ffn.down.weight")?, t, h, dims.bn);
         k::add_bias(&mut u4, pp.lp(i, "houlsby.ffn.down.bias")?);
-        let hf = k::gelu_vec(&u4);
+        let hf = k::gelu_vec(pool, &u4);
         let mut f2 = ffn.clone();
         {
-            let up = k::matmul(&hf, pp.lp(i, "houlsby.ffn.up.weight")?, t, dims.bn, h);
+            let up = k::matmul(pool, &hf, pp.lp(i, "houlsby.ffn.up.weight")?, t, dims.bn, h);
             add_assign(&mut f2, &up);
             k::add_bias(&mut f2, pp.lp(i, "houlsby.ffn.up.bias")?);
         }
         add_assign(&mut f2, &x1);
         let (x_out, ln2) = k::layernorm_fwd(
+            pool,
             &f2,
             pp.lp(i, "output.LayerNorm.weight")?,
             pp.lp(i, "output.LayerNorm.bias")?,
@@ -553,12 +578,12 @@ fn forward(
             mean_h[bi * h + j] /= denom[bi];
         }
     }
-    let mut zp = k::matmul(&mean_h, pp.get("pooler.dense.weight")?, b, h, h);
+    let mut zp = k::matmul(pool, &mean_h, pp.get("pooler.dense.weight")?, b, h, h);
     k::add_bias(&mut zp, pp.get("pooler.dense.bias")?);
     let pooled: Vec<f32> = zp.iter().map(|v| v.tanh()).collect();
-    let mut logits = k::matmul(&pooled, pp.get("classifier.weight")?, b, h, dims.c);
+    let mut logits = k::matmul(pool, &pooled, pp.get("classifier.weight")?, b, h, dims.c);
     k::add_bias(&mut logits, pp.get("classifier.bias")?);
-    let mut regression = k::matmul(&pooled, pp.get("regressor.weight")?, b, h, 1);
+    let mut regression = k::matmul(pool, &pooled, pp.get("regressor.weight")?, b, h, 1);
     k::add_bias(&mut regression, pp.get("regressor.bias")?);
 
     Ok(Fwd {
@@ -582,6 +607,7 @@ fn forward(
 /// path). Accumulates exactly the gradients `sink` wants.
 #[allow(clippy::too_many_arguments)]
 fn backward(
+    pool: &Pool,
     dims: &Dims,
     pp: &Params,
     fw: &Fwd,
@@ -598,22 +624,22 @@ fn backward(
     let s_lora = dims.s_lora;
 
     // ---- heads: classifier / regressor -> pooler -> masked mean ----
-    grad_matmul_tn(sink, pp.idx("classifier.weight")?, &fw.pooled, dlogits, b, h, dims.c);
+    grad_matmul_tn(pool, sink, pp.idx("classifier.weight")?, &fw.pooled, dlogits, b, h, dims.c);
     grad_col_sum(sink, pp.idx("classifier.bias")?, dlogits, dims.c);
-    grad_matmul_tn(sink, pp.idx("regressor.weight")?, &fw.pooled, dreg, b, h, 1);
+    grad_matmul_tn(pool, sink, pp.idx("regressor.weight")?, &fw.pooled, dreg, b, h, 1);
     grad_col_sum(sink, pp.idx("regressor.bias")?, dreg, 1);
-    let mut dpooled = k::matmul_nt(dlogits, pp.get("classifier.weight")?, b, dims.c, h);
+    let mut dpooled = k::matmul_nt(pool, dlogits, pp.get("classifier.weight")?, b, dims.c, h);
     {
-        let dp2 = k::matmul_nt(dreg, pp.get("regressor.weight")?, b, 1, h);
+        let dp2 = k::matmul_nt(pool, dreg, pp.get("regressor.weight")?, b, 1, h);
         add_assign(&mut dpooled, &dp2);
     }
     let mut dz = vec![0.0f32; b * h];
     for i in 0..b * h {
         dz[i] = dpooled[i] * (1.0 - fw.pooled[i] * fw.pooled[i]);
     }
-    grad_matmul_tn(sink, pp.idx("pooler.dense.weight")?, &fw.mean_h, &dz, b, h, h);
+    grad_matmul_tn(pool, sink, pp.idx("pooler.dense.weight")?, &fw.mean_h, &dz, b, h, h);
     grad_col_sum(sink, pp.idx("pooler.dense.bias")?, &dz, h);
-    let dmean = k::matmul_nt(&dz, pp.get("pooler.dense.weight")?, b, h, h);
+    let dmean = k::matmul_nt(pool, &dz, pp.get("pooler.dense.weight")?, b, h, h);
     let mut dx = vec![0.0f32; t * h];
     for bi in 0..b {
         for li in 0..l {
@@ -639,34 +665,54 @@ fn backward(
         // x_out = LN(f2 + x1)
         grad_mul_col_sum(sink, pp.lidx(i, "output.LayerNorm.weight")?, &dx, &c.ln2.xhat, h);
         grad_col_sum(sink, pp.lidx(i, "output.LayerNorm.bias")?, &dx, h);
-        let dres = k::layernorm_vjp(&dx, pp.lp(i, "output.LayerNorm.weight")?, &c.ln2, None, None);
+        let dres =
+            k::layernorm_vjp(pool, &dx, pp.lp(i, "output.LayerNorm.weight")?, &c.ln2, None, None);
         let mut dx1 = dres.clone();
         let df2 = dres;
 
         // f2 = ffn + gelu(ffn·Wfd + bfd)·Wfu + bfu   (Houlsby ffn adapter)
         let mut dffn = df2.clone();
-        grad_matmul_tn(sink, pp.lidx(i, "houlsby.ffn.up.weight")?, &c.hf, &df2, t, dims.bn, h);
+        grad_matmul_tn(
+            pool,
+            sink,
+            pp.lidx(i, "houlsby.ffn.up.weight")?,
+            &c.hf,
+            &df2,
+            t,
+            dims.bn,
+            h,
+        );
         grad_col_sum(sink, pp.lidx(i, "houlsby.ffn.up.bias")?, &df2, h);
-        let dhf = k::matmul_nt(&df2, pp.lp(i, "houlsby.ffn.up.weight")?, t, h, dims.bn);
-        let du4 = dgelu_mul(&dhf, &c.u4);
-        grad_matmul_tn(sink, pp.lidx(i, "houlsby.ffn.down.weight")?, &c.ffn, &du4, t, h, dims.bn);
+        let dhf = k::matmul_nt(pool, &df2, pp.lp(i, "houlsby.ffn.up.weight")?, t, h, dims.bn);
+        let du4 = k::dgelu_mul(pool, &dhf, &c.u4);
+        grad_matmul_tn(
+            pool,
+            sink,
+            pp.lidx(i, "houlsby.ffn.down.weight")?,
+            &c.ffn,
+            &du4,
+            t,
+            h,
+            dims.bn,
+        );
         grad_col_sum(sink, pp.lidx(i, "houlsby.ffn.down.bias")?, &du4, dims.bn);
         {
-            let tmp = k::matmul_nt(&du4, pp.lp(i, "houlsby.ffn.down.weight")?, t, dims.bn, h);
+            let tmp =
+                k::matmul_nt(pool, &du4, pp.lp(i, "houlsby.ffn.down.weight")?, t, dims.bn, h);
             add_assign(&mut dffn, &tmp);
         }
 
         // ffn = inter·Wo2 + bo2 ; inter = gelu(u1) ⊙ l_ff
-        grad_matmul_tn(sink, pp.lidx(i, "output.dense.weight")?, &c.inter, &dffn, t, f, h);
+        grad_matmul_tn(pool, sink, pp.lidx(i, "output.dense.weight")?, &c.inter, &dffn, t, f, h);
         grad_col_sum(sink, pp.lidx(i, "output.dense.bias")?, &dffn, h);
-        let dinter = k::matmul_nt(&dffn, pp.lp(i, "output.dense.weight")?, t, h, f);
+        let dinter = k::matmul_nt(pool, &dffn, pp.lp(i, "output.dense.weight")?, t, h, f);
         grad_mul_col_sum(sink, pp.lidx(i, "ia3.l_ff")?, &dinter, &c.ginter, f);
         let dgint = mul_rows(&dinter, pp.lp(i, "ia3.l_ff")?);
-        let du1 = dgelu_mul(&dgint, &c.u1);
-        grad_matmul_tn(sink, pp.lidx(i, "intermediate.dense.weight")?, &c.x1, &du1, t, h, f);
+        let du1 = k::dgelu_mul(pool, &dgint, &c.u1);
+        grad_matmul_tn(pool, sink, pp.lidx(i, "intermediate.dense.weight")?, &c.x1, &du1, t, h, f);
         grad_col_sum(sink, pp.lidx(i, "intermediate.dense.bias")?, &du1, f);
         {
-            let tmp = k::matmul_nt(&du1, pp.lp(i, "intermediate.dense.weight")?, t, f, h);
+            let tmp = k::matmul_nt(pool, &du1, pp.lp(i, "intermediate.dense.weight")?, t, f, h);
             add_assign(&mut dx1, &tmp);
         }
 
@@ -680,6 +726,7 @@ fn backward(
         );
         grad_col_sum(sink, pp.lidx(i, "attention.output.LayerNorm.bias")?, &dx1, h);
         let dres1 = k::layernorm_vjp(
+            pool,
             &dx1,
             pp.lp(i, "attention.output.LayerNorm.weight")?,
             &c.ln1,
@@ -691,11 +738,21 @@ fn backward(
 
         // a2 = a_dense + gelu(a_dense·Whd + bhd)·Whu + bhu
         let mut da_dense = da2.clone();
-        grad_matmul_tn(sink, pp.lidx(i, "houlsby.attn.up.weight")?, &c.ha, &da2, t, dims.bn, h);
-        grad_col_sum(sink, pp.lidx(i, "houlsby.attn.up.bias")?, &da2, h);
-        let dha = k::matmul_nt(&da2, pp.lp(i, "houlsby.attn.up.weight")?, t, h, dims.bn);
-        let du2 = dgelu_mul(&dha, &c.u2);
         grad_matmul_tn(
+            pool,
+            sink,
+            pp.lidx(i, "houlsby.attn.up.weight")?,
+            &c.ha,
+            &da2,
+            t,
+            dims.bn,
+            h,
+        );
+        grad_col_sum(sink, pp.lidx(i, "houlsby.attn.up.bias")?, &da2, h);
+        let dha = k::matmul_nt(pool, &da2, pp.lp(i, "houlsby.attn.up.weight")?, t, h, dims.bn);
+        let du2 = k::dgelu_mul(pool, &dha, &c.u2);
+        grad_matmul_tn(
+            pool,
             sink,
             pp.lidx(i, "houlsby.attn.down.weight")?,
             &c.a_dense,
@@ -706,12 +763,14 @@ fn backward(
         );
         grad_col_sum(sink, pp.lidx(i, "houlsby.attn.down.bias")?, &du2, dims.bn);
         {
-            let tmp = k::matmul_nt(&du2, pp.lp(i, "houlsby.attn.down.weight")?, t, dims.bn, h);
+            let tmp =
+                k::matmul_nt(pool, &du2, pp.lp(i, "houlsby.attn.down.weight")?, t, dims.bn, h);
             add_assign(&mut da_dense, &tmp);
         }
 
         // a_dense = att_ad·Wo + bo
         grad_matmul_tn(
+            pool,
             sink,
             pp.lidx(i, "attention.output.dense.weight")?,
             &c.att_ad,
@@ -721,12 +780,13 @@ fn backward(
             h,
         );
         grad_col_sum(sink, pp.lidx(i, "attention.output.dense.bias")?, &da_dense, h);
-        let datt_ad = k::matmul_nt(&da_dense, pp.lp(i, "attention.output.dense.weight")?, t, h, h);
+        let datt_ad =
+            k::matmul_nt(pool, &da_dense, pp.lp(i, "attention.output.dense.weight")?, t, h, h);
 
         // Hadamard adapter backward (paper Eq. 5 gradients)
         let w2 = if order >= 2 { Some(pp.lp(i, "hadamard.w2")?) } else { None };
         let w3 = if order >= 3 { Some(pp.lp(i, "hadamard.w3")?) } else { None };
-        let hg = k::hadamard_vjp(&c.att, pp.lp(i, "hadamard.weight")?, w2, w3, &datt_ad);
+        let hg = k::hadamard_vjp(pool, &c.att, pp.lp(i, "hadamard.weight")?, w2, w3, &datt_ad);
         sink.add(pp.lidx(i, "hadamard.weight")?, &hg.dw);
         sink.add(pp.lidx(i, "hadamard.bias")?, &hg.db);
         if let Some(dw2) = &hg.dw2 {
@@ -741,7 +801,7 @@ fn backward(
         let qh = split_heads(&c.q, b, l, nh, d);
         let kh = split_heads(&c.k, b, l, nh, d);
         let vh = split_heads(&c.v, b, l, nh, d);
-        let (dqh, dkh, dvh) = k::attention_vjp(&datth, &qh, &kh, &vh, &c.probs, b, nh, l, d);
+        let (dqh, dkh, dvh) = k::attention_vjp(pool, &datth, &qh, &kh, &vh, &c.probs, b, nh, l, d);
         let dq = merge_heads(&dqh, b, l, nh, d);
         let dk = merge_heads(&dkh, b, l, nh, d);
         let dv = merge_heads(&dvh, b, l, nh, d);
@@ -750,6 +810,7 @@ fn backward(
         grad_mul_col_sum(sink, pp.lidx(i, "ia3.l_v")?, &dv, &c.vpre, h);
         let dvpre = mul_rows(&dv, pp.lp(i, "ia3.l_v")?);
         grad_matmul_tn(
+            pool,
             sink,
             pp.lidx(i, "attention.self.value.weight")?,
             &c.x_in,
@@ -762,51 +823,70 @@ fn backward(
         let lvb_idx = pp.lidx(i, "lora.value.b")?;
         if sink.wants(lvb_idx) {
             let mut tmp = vec![0.0f32; dims.r * h];
-            k::matmul_tn_acc(&c.xa_v, &dvpre, &mut tmp, t, dims.r, h);
+            k::matmul_tn_acc(pool, &c.xa_v, &dvpre, &mut tmp, t, dims.r, h);
             scale_assign(&mut tmp, s_lora);
             sink.add(lvb_idx, &tmp);
         }
-        let mut dxa_v = k::matmul_nt(&dvpre, pp.lp(i, "lora.value.b")?, t, h, dims.r);
+        let mut dxa_v = k::matmul_nt(pool, &dvpre, pp.lp(i, "lora.value.b")?, t, h, dims.r);
         scale_assign(&mut dxa_v, s_lora);
-        grad_matmul_tn(sink, pp.lidx(i, "lora.value.a")?, &c.x_in, &dxa_v, t, h, dims.r);
+        grad_matmul_tn(pool, sink, pp.lidx(i, "lora.value.a")?, &c.x_in, &dxa_v, t, h, dims.r);
         {
-            let tmp = k::matmul_nt(&dvpre, pp.lp(i, "attention.self.value.weight")?, t, h, h);
+            let tmp =
+                k::matmul_nt(pool, &dvpre, pp.lp(i, "attention.self.value.weight")?, t, h, h);
             add_assign(&mut dx_in, &tmp);
         }
         {
-            let tmp = k::matmul_nt(&dxa_v, pp.lp(i, "lora.value.a")?, t, dims.r, h);
+            let tmp = k::matmul_nt(pool, &dxa_v, pp.lp(i, "lora.value.a")?, t, dims.r, h);
             add_assign(&mut dx_in, &tmp);
         }
 
         // k = (x·Wk + bk) ⊙ l_k
         grad_mul_col_sum(sink, pp.lidx(i, "ia3.l_k")?, &dk, &c.klin, h);
         let dklin = mul_rows(&dk, pp.lp(i, "ia3.l_k")?);
-        grad_matmul_tn(sink, pp.lidx(i, "attention.self.key.weight")?, &c.x_in, &dklin, t, h, h);
+        grad_matmul_tn(
+            pool,
+            sink,
+            pp.lidx(i, "attention.self.key.weight")?,
+            &c.x_in,
+            &dklin,
+            t,
+            h,
+            h,
+        );
         grad_col_sum(sink, pp.lidx(i, "attention.self.key.bias")?, &dklin, h);
         {
-            let tmp = k::matmul_nt(&dklin, pp.lp(i, "attention.self.key.weight")?, t, h, h);
+            let tmp = k::matmul_nt(pool, &dklin, pp.lp(i, "attention.self.key.weight")?, t, h, h);
             add_assign(&mut dx_in, &tmp);
         }
 
         // q = x·Wq + bq + (x·Aq)·Bq·s
-        grad_matmul_tn(sink, pp.lidx(i, "attention.self.query.weight")?, &c.x_in, &dq, t, h, h);
+        grad_matmul_tn(
+            pool,
+            sink,
+            pp.lidx(i, "attention.self.query.weight")?,
+            &c.x_in,
+            &dq,
+            t,
+            h,
+            h,
+        );
         grad_col_sum(sink, pp.lidx(i, "attention.self.query.bias")?, &dq, h);
         let lqb_idx = pp.lidx(i, "lora.query.b")?;
         if sink.wants(lqb_idx) {
             let mut tmp = vec![0.0f32; dims.r * h];
-            k::matmul_tn_acc(&c.xa_q, &dq, &mut tmp, t, dims.r, h);
+            k::matmul_tn_acc(pool, &c.xa_q, &dq, &mut tmp, t, dims.r, h);
             scale_assign(&mut tmp, s_lora);
             sink.add(lqb_idx, &tmp);
         }
-        let mut dxa_q = k::matmul_nt(&dq, pp.lp(i, "lora.query.b")?, t, h, dims.r);
+        let mut dxa_q = k::matmul_nt(pool, &dq, pp.lp(i, "lora.query.b")?, t, h, dims.r);
         scale_assign(&mut dxa_q, s_lora);
-        grad_matmul_tn(sink, pp.lidx(i, "lora.query.a")?, &c.x_in, &dxa_q, t, h, dims.r);
+        grad_matmul_tn(pool, sink, pp.lidx(i, "lora.query.a")?, &c.x_in, &dxa_q, t, h, dims.r);
         {
-            let tmp = k::matmul_nt(&dq, pp.lp(i, "attention.self.query.weight")?, t, h, h);
+            let tmp = k::matmul_nt(pool, &dq, pp.lp(i, "attention.self.query.weight")?, t, h, h);
             add_assign(&mut dx_in, &tmp);
         }
         {
-            let tmp = k::matmul_nt(&dxa_q, pp.lp(i, "lora.query.a")?, t, dims.r, h);
+            let tmp = k::matmul_nt(pool, &dxa_q, pp.lp(i, "lora.query.a")?, t, dims.r, h);
             add_assign(&mut dx_in, &tmp);
         }
 
@@ -816,8 +896,14 @@ fn backward(
     // ---- embeddings ----
     grad_mul_col_sum(sink, pp.idx("embeddings.LayerNorm.weight")?, &dx, &fw.emb_ln.xhat, h);
     grad_col_sum(sink, pp.idx("embeddings.LayerNorm.bias")?, &dx, h);
-    let demb =
-        k::layernorm_vjp(&dx, pp.get("embeddings.LayerNorm.weight")?, &fw.emb_ln, None, None);
+    let demb = k::layernorm_vjp(
+        pool,
+        &dx,
+        pp.get("embeddings.LayerNorm.weight")?,
+        &fw.emb_ln,
+        None,
+        None,
+    );
     let we_idx = pp.idx("embeddings.word_embeddings.weight")?;
     if let Some(buf) = sink.buf(we_idx, dims.v * h) {
         for ti in 0..t {
@@ -1003,13 +1089,18 @@ fn emit(
     Ok(out)
 }
 
-fn run_forward(model: &ModelInfo, pp: &Params, batch: &[&DeviceTensor]) -> Result<Vec<Tensor>> {
+fn run_forward(
+    pool: &Pool,
+    model: &ModelInfo,
+    pp: &Params,
+    batch: &[&DeviceTensor],
+) -> Result<Vec<Tensor>> {
     let tokens = batch_i32(batch, 0, "tokens")?;
     let type_ids = batch_i32(batch, 1, "type_ids")?;
     let attn_mask = batch_f32(batch, 2, "attn_mask")?;
     let dims = Dims::derive(model, batch[0].shape()?)?;
     check_batch_lens(&dims, tokens, type_ids, attn_mask)?;
-    let fw = forward(&dims, pp, tokens, type_ids, attn_mask, 3, true)?;
+    let fw = forward(pool, &dims, pp, tokens, type_ids, attn_mask, 3, true)?;
     let (b, layers) = (dims.b, dims.layers);
     let mut norms = vec![0.0f32; b * layers];
     let mut means = vec![0.0f32; b * layers];
@@ -1028,6 +1119,7 @@ fn run_forward(model: &ModelInfo, pp: &Params, batch: &[&DeviceTensor]) -> Resul
 }
 
 fn run_train(
+    pool: &Pool,
     model: &ModelInfo,
     pp: &Params,
     batch: &[&DeviceTensor],
@@ -1048,7 +1140,7 @@ fn run_train(
     let dims = Dims::derive(model, batch[0].shape()?)?;
     check_batch_lens(&dims, tokens, type_ids, attn_mask)?;
 
-    let fw = forward(&dims, pp, tokens, type_ids, attn_mask, 3, false)?;
+    let fw = forward(pool, &dims, pp, tokens, type_ids, attn_mask, 3, false)?;
     let (loss, dlogits, dreg) = match loss_kind {
         "cls" => {
             let onehot = batch_f32(batch, 3, "labels_onehot")?;
@@ -1072,12 +1164,13 @@ fn run_train(
 
     let mut sink = GradSink::new(model, &members)?;
     backward(
-        &dims, pp, &fw, tokens, type_ids, attn_mask, &dlogits, &dreg, None, 3, &mut sink,
+        pool, &dims, pp, &fw, tokens, type_ids, attn_mask, &dlogits, &dreg, None, 3, &mut sink,
     )?;
     emit(model, loss, &members, sink)
 }
 
 fn run_mlm(
+    pool: &Pool,
     model: &ModelInfo,
     pp: &Params,
     batch: &[&DeviceTensor],
@@ -1095,17 +1188,21 @@ fn run_mlm(
     }
 
     // Pre-training runs the order-1 adapter (see `model.make_mlm_fn`).
-    let fw = forward(&dims, pp, tokens, type_ids, attn_mask, 1, false)?;
+    let fw = forward(pool, &dims, pp, tokens, type_ids, attn_mask, 1, false)?;
 
     // MLM head: gelu dense -> LN -> tied decoder.
     let (t, h, v) = (dims.t, dims.h, dims.v);
-    let mut u3 = k::matmul(&fw.x_final, pp.get("mlm.dense.weight")?, t, h, h);
+    let mut u3 = k::matmul(pool, &fw.x_final, pp.get("mlm.dense.weight")?, t, h, h);
     k::add_bias(&mut u3, pp.get("mlm.dense.bias")?);
-    let m = k::gelu_vec(&u3);
-    let (mnorm, mlm_ln) =
-        k::layernorm_fwd(&m, pp.get("mlm.LayerNorm.weight")?, pp.get("mlm.LayerNorm.bias")?);
+    let m = k::gelu_vec(pool, &u3);
+    let (mnorm, mlm_ln) = k::layernorm_fwd(
+        pool,
+        &m,
+        pp.get("mlm.LayerNorm.weight")?,
+        pp.get("mlm.LayerNorm.bias")?,
+    );
     let we = pp.get("embeddings.word_embeddings.weight")?;
-    let mut logits = k::matmul_nt(&mnorm, we, t, h, v);
+    let mut logits = k::matmul_nt(pool, &mnorm, we, t, h, v);
     k::add_bias(&mut logits, pp.get("mlm.decoder.bias")?);
 
     let (loss, dlog) = loss_mlm(&logits, labels, loss_mask, t, v)?;
@@ -1114,6 +1211,7 @@ fn run_mlm(
     let mut sink = GradSink::new(model, &members)?;
     // tied decoder: logits = mnorm @ WE^T + b_dec
     grad_matmul_tn(
+        pool,
         &mut sink,
         pp.idx("embeddings.word_embeddings.weight")?,
         &dlog,
@@ -1123,18 +1221,19 @@ fn run_mlm(
         h,
     );
     grad_col_sum(&mut sink, pp.idx("mlm.decoder.bias")?, &dlog, v);
-    let dmnorm = k::matmul(&dlog, we, t, v, h);
+    let dmnorm = k::matmul(pool, &dlog, we, t, v, h);
     grad_mul_col_sum(&mut sink, pp.idx("mlm.LayerNorm.weight")?, &dmnorm, &mlm_ln.xhat, h);
     grad_col_sum(&mut sink, pp.idx("mlm.LayerNorm.bias")?, &dmnorm, h);
-    let dm = k::layernorm_vjp(&dmnorm, pp.get("mlm.LayerNorm.weight")?, &mlm_ln, None, None);
-    let du3 = dgelu_mul(&dm, &u3);
-    grad_matmul_tn(&mut sink, pp.idx("mlm.dense.weight")?, &fw.x_final, &du3, t, h, h);
+    let dm = k::layernorm_vjp(pool, &dmnorm, pp.get("mlm.LayerNorm.weight")?, &mlm_ln, None, None);
+    let du3 = k::dgelu_mul(pool, &dm, &u3);
+    grad_matmul_tn(pool, &mut sink, pp.idx("mlm.dense.weight")?, &fw.x_final, &du3, t, h, h);
     grad_col_sum(&mut sink, pp.idx("mlm.dense.bias")?, &du3, h);
-    let dx_extra = k::matmul_nt(&du3, pp.get("mlm.dense.weight")?, t, h, h);
+    let dx_extra = k::matmul_nt(pool, &du3, pp.get("mlm.dense.weight")?, t, h, h);
 
     let zero_logits = vec![0.0f32; dims.b * dims.c];
     let zero_reg = vec![0.0f32; dims.b];
     backward(
+        pool,
         &dims,
         pp,
         &fw,

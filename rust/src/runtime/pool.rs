@@ -1,0 +1,327 @@
+//! `runtime::pool`: a tiny std-only fork-join helper for the native
+//! kernels.
+//!
+//! The kernels in [`super::kernels`] are data-parallel over output rows
+//! (matmul), batch×head blocks (attention) or elements (GELU). A [`Pool`]
+//! carries the configured worker count (the `threads` config key; `0`
+//! auto-detects one worker per core) and provides safe scoped fork-join
+//! over disjoint row-chunks of the output buffers — `std::thread::scope`
+//! plus `chunks_mut`, no unsafe, no dependencies, and no persistent
+//! worker threads to keep `Engine` trivially droppable.
+//!
+//! Work below `grain` rows stays on the calling thread, so tiny kernels
+//! (LoRA rank-4 GEMMs, head projections) never pay a spawn. The chunk
+//! partition is a pure function of `(rows, threads)`, so results are
+//! deterministic for a fixed thread count; across *different* thread
+//! counts only the order of float reductions (e.g. the Hadamard VJP's
+//! `dw` partials) can differ, at ~1e-7 relative. Set `threads=1` for
+//! bit-reproducibility across machines.
+
+use std::thread;
+
+/// Worker configuration handed to every parallel kernel.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+    scalar: bool,
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::auto()
+    }
+}
+
+impl Pool {
+    /// One worker per available core.
+    pub fn auto() -> Pool {
+        Pool::with_threads(0)
+    }
+
+    /// Fixed worker count; `0` auto-detects (`available_parallelism`).
+    pub fn with_threads(threads: usize) -> Pool {
+        let t = if threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Pool { threads: t.max(1), scalar: false }
+    }
+
+    /// Single-threaded blocked kernels (no fan-out, fully deterministic).
+    pub fn serial() -> Pool {
+        Pool::with_threads(1)
+    }
+
+    /// Dispatch to the retained PR-1 scalar kernels, single-threaded — the
+    /// baseline `cargo bench --bench bench_runtime` compares against.
+    pub fn scalar_reference() -> Pool {
+        Pool { threads: 1, scalar: true }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when kernels should route to `kernels::scalar`.
+    pub fn is_scalar(&self) -> bool {
+        self.scalar
+    }
+
+    /// Shard count for `items` work items with at least `grain` each.
+    fn shards(&self, items: usize, grain: usize) -> usize {
+        if items == 0 || self.threads <= 1 {
+            return 1;
+        }
+        let g = grain.max(1);
+        let cap = (items + g - 1) / g;
+        self.threads.min(cap)
+    }
+
+    /// Run `f(first_row, chunk)` over disjoint row-chunks of `out`
+    /// (`cols` floats per row). The final chunk runs on the caller, so a
+    /// 2-shard split costs exactly one spawn.
+    pub fn for_rows<F>(&self, out: &mut [f32], cols: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let rows = if cols == 0 { 0 } else { out.len() / cols };
+        let shards = self.shards(rows, grain);
+        if shards <= 1 {
+            f(0, out);
+            return;
+        }
+        let chunk = (rows + shards - 1) / shards;
+        let fref = &f;
+        thread::scope(move |s| {
+            let chunks: Vec<&mut [f32]> = out.chunks_mut(chunk * cols).collect();
+            let nch = chunks.len();
+            for (idx, ch) in chunks.into_iter().enumerate() {
+                let row0 = idx * chunk;
+                if idx + 1 == nch {
+                    fref(row0, ch);
+                } else {
+                    s.spawn(move || fref(row0, ch));
+                }
+            }
+        });
+    }
+
+    /// Like [`Pool::for_rows`], but each shard also returns a value
+    /// (partial reductions); results come back in chunk order.
+    pub fn map_rows<T, F>(&self, out: &mut [f32], cols: usize, grain: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut [f32]) -> T + Sync,
+    {
+        let rows = if cols == 0 { 0 } else { out.len() / cols };
+        let shards = self.shards(rows, grain);
+        if shards <= 1 {
+            return vec![f(0, out)];
+        }
+        let chunk = (rows + shards - 1) / shards;
+        let fref = &f;
+        thread::scope(move |s| {
+            let chunks: Vec<&mut [f32]> = out.chunks_mut(chunk * cols).collect();
+            let nch = chunks.len();
+            let mut handles = Vec::with_capacity(nch);
+            let mut last = None;
+            for (idx, ch) in chunks.into_iter().enumerate() {
+                let row0 = idx * chunk;
+                if idx + 1 == nch {
+                    last = Some(fref(row0, ch));
+                } else {
+                    handles.push(s.spawn(move || fref(row0, ch)));
+                }
+            }
+            let mut partials: Vec<T> = handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect();
+            if let Some(v) = last {
+                partials.push(v);
+            }
+            partials
+        })
+    }
+
+    /// Two parallel output buffers with per-item widths `acols` / `bcols`
+    /// (attention: `out [L, D]` + `probs [L, L]` per batch×head block).
+    /// Both widths must be non-zero.
+    pub fn for_rows2<F>(
+        &self,
+        a: &mut [f32],
+        acols: usize,
+        b: &mut [f32],
+        bcols: usize,
+        grain: usize,
+        f: F,
+    ) where
+        F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+    {
+        let items = if acols == 0 { 0 } else { a.len() / acols };
+        debug_assert_eq!(items * bcols, b.len());
+        let shards = self.shards(items, grain);
+        if shards <= 1 {
+            f(0, a, b);
+            return;
+        }
+        let chunk = (items + shards - 1) / shards;
+        let fref = &f;
+        thread::scope(move |s| {
+            let ca: Vec<&mut [f32]> = a.chunks_mut(chunk * acols).collect();
+            let cb: Vec<&mut [f32]> = b.chunks_mut(chunk * bcols).collect();
+            let nch = ca.len();
+            debug_assert_eq!(nch, cb.len());
+            for (idx, (ha, hb)) in ca.into_iter().zip(cb).enumerate() {
+                let i0 = idx * chunk;
+                if idx + 1 == nch {
+                    fref(i0, ha, hb);
+                } else {
+                    s.spawn(move || fref(i0, ha, hb));
+                }
+            }
+        });
+    }
+
+    /// Three parallel output buffers (LayerNorm `y`/`xhat`/`inv`, attention
+    /// VJP `dq`/`dk`/`dv`). All widths must be non-zero.
+    #[allow(clippy::too_many_arguments)]
+    pub fn for_rows3<F>(
+        &self,
+        a: &mut [f32],
+        acols: usize,
+        b: &mut [f32],
+        bcols: usize,
+        c: &mut [f32],
+        ccols: usize,
+        grain: usize,
+        f: F,
+    ) where
+        F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+    {
+        let items = if acols == 0 { 0 } else { a.len() / acols };
+        debug_assert_eq!(items * bcols, b.len());
+        debug_assert_eq!(items * ccols, c.len());
+        let shards = self.shards(items, grain);
+        if shards <= 1 {
+            f(0, a, b, c);
+            return;
+        }
+        let chunk = (items + shards - 1) / shards;
+        let fref = &f;
+        thread::scope(move |s| {
+            let ca: Vec<&mut [f32]> = a.chunks_mut(chunk * acols).collect();
+            let cb: Vec<&mut [f32]> = b.chunks_mut(chunk * bcols).collect();
+            let cc: Vec<&mut [f32]> = c.chunks_mut(chunk * ccols).collect();
+            let nch = ca.len();
+            debug_assert_eq!(nch, cb.len());
+            debug_assert_eq!(nch, cc.len());
+            for (idx, ((ha, hb), hc)) in ca.into_iter().zip(cb).zip(cc).enumerate() {
+                let i0 = idx * chunk;
+                if idx + 1 == nch {
+                    fref(i0, ha, hb, hc);
+                } else {
+                    s.spawn(move || fref(i0, ha, hb, hc));
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_threads_resolves_auto() {
+        assert!(Pool::auto().threads() >= 1);
+        assert_eq!(Pool::with_threads(3).threads(), 3);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(Pool::scalar_reference().is_scalar());
+        assert!(!Pool::with_threads(4).is_scalar());
+    }
+
+    #[test]
+    fn for_rows_covers_every_row_once() {
+        for threads in [1, 2, 3, 7] {
+            let pool = Pool::with_threads(threads);
+            let cols = 3;
+            let mut out = vec![0.0f32; 25 * cols];
+            pool.for_rows(&mut out, cols, 1, |row0, chunk| {
+                for (r, row) in chunk.chunks_exact_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + r) as f32 + 1.0;
+                    }
+                }
+            });
+            for (r, row) in out.chunks_exact(cols).enumerate() {
+                for &v in row {
+                    assert_eq!(v, r as f32 + 1.0, "threads={threads} row={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_rows_respects_grain() {
+        // 4 rows at grain 8 must stay on the caller (single chunk at 0)
+        let pool = Pool::with_threads(8);
+        let mut out = vec![0.0f32; 4];
+        let starts = pool.map_rows(&mut out, 1, 8, |row0, chunk| (row0, chunk.len()));
+        assert_eq!(starts, vec![(0, 4)]);
+    }
+
+    #[test]
+    fn map_rows_partials_in_chunk_order() {
+        let pool = Pool::with_threads(4);
+        let mut out = vec![0.0f32; 100];
+        let parts = pool.map_rows(&mut out, 1, 1, |row0, chunk| (row0, chunk.len()));
+        // chunks tile [0, 100) in order and cover it exactly
+        let mut expect = 0usize;
+        let mut total = 0usize;
+        for (row0, len) in parts {
+            assert_eq!(row0, expect);
+            expect += len;
+            total += len;
+        }
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn for_rows2_and_3_split_consistently() {
+        let pool = Pool::with_threads(3);
+        let items = 10;
+        let (wa, wb, wc) = (2, 5, 1);
+        let mut a = vec![0.0f32; items * wa];
+        let mut b = vec![0.0f32; items * wb];
+        let mut c = vec![0.0f32; items * wc];
+        pool.for_rows2(&mut a, wa, &mut b, wb, 1, |i0, ca, cb| {
+            assert_eq!(ca.len() / wa, cb.len() / wb);
+            for v in ca.iter_mut() {
+                *v = i0 as f32;
+            }
+            for v in cb.iter_mut() {
+                *v = 1.0;
+            }
+        });
+        assert!(b.iter().all(|&v| v == 1.0));
+        pool.for_rows3(&mut a, wa, &mut b, wb, &mut c, wc, 1, |_, ca, cb, cc| {
+            assert_eq!(ca.len() / wa, cc.len() / wc);
+            assert_eq!(cb.len() / wb, cc.len() / wc);
+            for v in cc.iter_mut() {
+                *v = 2.0;
+            }
+        });
+        assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn empty_output_is_fine() {
+        let pool = Pool::with_threads(4);
+        let mut out: Vec<f32> = Vec::new();
+        pool.for_rows(&mut out, 4, 1, |_, chunk| assert!(chunk.is_empty()));
+        let parts = pool.map_rows(&mut out, 4, 1, |_, chunk| chunk.len());
+        assert_eq!(parts, vec![0]);
+    }
+}

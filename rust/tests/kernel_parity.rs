@@ -1,0 +1,257 @@
+//! Property-style parity suite: the blocked/parallel kernels against the
+//! retained PR 1 scalar reference (`runtime::kernels::scalar`) across odd
+//! shapes — non-multiples of the register tile, single rows/columns, and
+//! `threads = 1` vs `N` — plus NaN-propagation regressions. Hand-rolled
+//! generator loop over `util::Rng` (proptest is unavailable offline);
+//! seeds are fixed so failures reproduce.
+
+use hadapt::runtime::kernels::{self as k, scalar};
+use hadapt::runtime::Pool;
+use hadapt::util::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= TOL * (1.0 + w.abs()),
+            "{what}[{i}]: got {g}, reference {w}"
+        );
+    }
+}
+
+/// Shape set chosen to cross every code path: rows below/at/above the
+/// MR=4 tile, dot lengths below/at/above the 8-lane width, and sizes
+/// around the shard grain.
+const DIMS: [usize; 7] = [1, 2, 3, 4, 5, 8, 17];
+
+fn pools() -> [Pool; 2] {
+    [Pool::serial(), Pool::with_threads(4)]
+}
+
+#[test]
+fn matmul_nn_parity_across_odd_shapes() {
+    let mut rng = Rng::new(0x90_01);
+    for &m in &DIMS {
+        for &kk in &DIMS {
+            for &n in &DIMS {
+                let a = randv(&mut rng, m * kk);
+                let b = randv(&mut rng, kk * n);
+                let want = scalar::matmul(&a, &b, m, kk, n);
+                for pool in pools() {
+                    let got = k::matmul(&pool, &a, &b, m, kk, n);
+                    assert_close(&got, &want, &format!("nn {m}x{kk}x{n}"));
+                }
+            }
+        }
+    }
+    // a large non-multiple-of-everything shape
+    let (m, kk, n) = (33, 65, 129);
+    let a = randv(&mut rng, m * kk);
+    let b = randv(&mut rng, kk * n);
+    let want = scalar::matmul(&a, &b, m, kk, n);
+    for pool in pools() {
+        assert_close(&k::matmul(&pool, &a, &b, m, kk, n), &want, "nn 33x65x129");
+    }
+}
+
+#[test]
+fn matmul_nt_parity_across_odd_shapes() {
+    let mut rng = Rng::new(0x90_02);
+    for &m in &DIMS {
+        for &kk in &DIMS {
+            for &n in &DIMS {
+                let a = randv(&mut rng, m * kk);
+                let b = randv(&mut rng, n * kk);
+                let want = scalar::matmul_nt(&a, &b, m, kk, n);
+                for pool in pools() {
+                    let got = k::matmul_nt(&pool, &a, &b, m, kk, n);
+                    assert_close(&got, &want, &format!("nt {m}x{kk}x{n}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_tn_acc_parity_and_accumulation() {
+    let mut rng = Rng::new(0x90_03);
+    for &m in &DIMS {
+        for &kk in &DIMS {
+            for &n in &DIMS {
+                let a = randv(&mut rng, kk * m);
+                let b = randv(&mut rng, kk * n);
+                // non-zero initial accumulator: += semantics must hold
+                let init = randv(&mut rng, m * n);
+                let mut want = init.clone();
+                scalar::matmul_tn_acc(&a, &b, &mut want, kk, m, n);
+                for pool in pools() {
+                    let mut got = init.clone();
+                    k::matmul_tn_acc(&pool, &a, &b, &mut got, kk, m, n);
+                    assert_close(&got, &want, &format!("tn {kk}x{m}x{n}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn attention_parity_odd_shapes_and_masks() {
+    let mut rng = Rng::new(0x90_04);
+    for &(b, nh, l, d) in &[(1, 1, 1, 1), (1, 2, 3, 5), (2, 3, 7, 4), (3, 1, 9, 8), (1, 1, 17, 3)]
+    {
+        let q = randv(&mut rng, b * nh * l * d);
+        let kk = randv(&mut rng, b * nh * l * d);
+        let v = randv(&mut rng, b * nh * l * d);
+        // random partial masks; position 0 always kept
+        let mut mask = vec![0.0f32; b * l];
+        for bi in 0..b {
+            for j in 1..l {
+                if rng.chance(0.3) {
+                    mask[bi * l + j] = -1e9;
+                }
+            }
+        }
+        let (wo, wp) = scalar::attention_fwd(&q, &kk, &v, &mask, b, nh, l, d);
+        let dy = randv(&mut rng, b * nh * l * d);
+        let (sdq, sdk, sdv) = scalar::attention_vjp(&dy, &q, &kk, &v, &wp, b, nh, l, d);
+        for pool in pools() {
+            let tag = format!("att {b}/{nh}/{l}/{d} t{}", pool.threads());
+            let (o, p) = k::attention_fwd(&pool, &q, &kk, &v, &mask, b, nh, l, d);
+            assert_close(&o, &wo, &format!("{tag} out"));
+            assert_close(&p, &wp, &format!("{tag} probs"));
+            // same probs into both VJPs isolates the backward comparison
+            let (dq, dk, dv) = k::attention_vjp(&pool, &dy, &q, &kk, &v, &wp, b, nh, l, d);
+            assert_close(&dq, &sdq, &format!("{tag} dq"));
+            assert_close(&dk, &sdk, &format!("{tag} dk"));
+            assert_close(&dv, &sdv, &format!("{tag} dv"));
+        }
+    }
+}
+
+#[test]
+fn layernorm_and_hadamard_threads_agree_on_odd_row_counts() {
+    let mut rng = Rng::new(0x90_05);
+    for &(t, h) in &[(1, 4), (3, 7), (33, 5), (65, 9)] {
+        let x = randv(&mut rng, t * h);
+        let g = randv(&mut rng, h);
+        let bias = randv(&mut rng, h);
+        let (y1, c1) = k::layernorm_fwd(&Pool::serial(), &x, &g, &bias);
+        let (y4, c4) = k::layernorm_fwd(&Pool::with_threads(4), &x, &g, &bias);
+        assert_eq!(y1, y4, "ln fwd rows are order-independent ({t}x{h})");
+        assert_eq!(c1.xhat, c4.xhat);
+        assert_eq!(c1.inv, c4.inv);
+        let dy = randv(&mut rng, t * h);
+        let dx1 = k::layernorm_vjp(&Pool::serial(), &dy, &g, &c1, None, None);
+        let dx4 = k::layernorm_vjp(&Pool::with_threads(4), &dy, &g, &c4, None, None);
+        assert_eq!(dx1, dx4, "ln vjp dx ({t}x{h})");
+
+        let w = randv(&mut rng, h);
+        let w2 = randv(&mut rng, h);
+        let w3 = randv(&mut rng, h);
+        let a = k::hadamard_vjp(&Pool::serial(), &x, &w, Some(&w2), Some(&w3), &dy);
+        let b = k::hadamard_vjp(&Pool::with_threads(4), &x, &w, Some(&w2), Some(&w3), &dy);
+        assert_eq!(a.dx, b.dx, "hadamard dx ({t}x{h})");
+        assert_close(&a.dw, &b.dw, "hadamard dw");
+        assert_close(&a.db, &b.db, "hadamard db");
+        assert_close(a.dw2.as_ref().unwrap(), b.dw2.as_ref().unwrap(), "hadamard dw2");
+        assert_close(a.dw3.as_ref().unwrap(), b.dw3.as_ref().unwrap(), "hadamard dw3");
+    }
+}
+
+#[test]
+fn gelu_vec_parity_with_f64_reference() {
+    let mut rng = Rng::new(0x90_06);
+    let x = randv(&mut rng, 9001); // odd length: exercises the tail shard
+    let want: Vec<f32> = x.iter().map(|&v| k::gelu(v)).collect();
+    for pool in pools() {
+        let got = k::gelu_vec(&pool, &x);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-5, "gelu[{i}]: {g} vs {w}");
+        }
+    }
+    let dy = randv(&mut rng, 9001);
+    let want: Vec<f32> = dy.iter().zip(&x).map(|(g, &v)| g * k::dgelu(v)).collect();
+    for pool in pools() {
+        let got = k::dgelu_mul(&pool, &dy, &x);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-4, "dgelu_mul[{i}]: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn rows_equal_one_and_single_thread_match_many_threads() {
+    // m = 1 exercises the no-tile remainder path end to end
+    let mut rng = Rng::new(0x90_07);
+    let (kk, n) = (130, 67);
+    let a = randv(&mut rng, kk);
+    let b = randv(&mut rng, kk * n);
+    let want = scalar::matmul(&a, &b, 1, kk, n);
+    for threads in [1, 2, 8] {
+        let pool = Pool::with_threads(threads);
+        assert_close(&k::matmul(&pool, &a, &b, 1, kk, n), &want, "nn m=1");
+    }
+}
+
+// ------------------------------------------------------- NaN regressions
+
+#[test]
+fn nan_propagates_where_scalar_reference_masked_it() {
+    // The PR 1 `av == 0.0` skip silently dropped NaN columns (0 * NaN is
+    // NaN in the JAX oracle). The blocked kernels must surface it.
+    let p = Pool::serial();
+    let m = 3;
+    let kk = 4;
+    let n = 2;
+    let a = vec![0.0f32; m * kk];
+    let mut b = vec![1.0f32; kk * n];
+    b[0] = f32::NAN;
+    let c = k::matmul(&p, &a, &b, m, kk, n);
+    assert!(c.iter().any(|v| v.is_nan()), "blocked NN must propagate NaN");
+    let c = scalar::matmul(&a, &b, m, kk, n);
+    assert!(
+        c.iter().all(|v| !v.is_nan()),
+        "scalar reference documents the old masking behavior"
+    );
+
+    let bt = {
+        let mut bt = vec![1.0f32; n * kk];
+        bt[kk] = f32::NAN; // row 1 of b^T
+        bt
+    };
+    let c = k::matmul_nt(&p, &a, &bt, m, kk, n);
+    assert!(c[1].is_nan(), "blocked NT must propagate NaN");
+
+    let mut out = vec![0.0f32; m * n];
+    let at = vec![0.0f32; kk * m];
+    let mut bb = vec![1.0f32; kk * n];
+    bb[1] = f32::NAN; // column 1 of b, row 0
+    k::matmul_tn_acc(&p, &at, &bb, &mut out, kk, m, n);
+    assert!(out[1].is_nan(), "blocked TN must propagate NaN");
+}
+
+#[test]
+fn nan_in_masked_attention_value_row_surfaces() {
+    let p = Pool::with_threads(2);
+    let (b, nh, l, d) = (1, 2, 4, 3);
+    let q = vec![0.0f32; b * nh * l * d];
+    let kk = vec![0.0f32; b * nh * l * d];
+    let mut v = vec![1.0f32; b * nh * l * d];
+    // poison the *masked* value row of head 0
+    v[(l - 1) * d] = f32::NAN;
+    let mut mask = vec![0.0f32; b * l];
+    mask[l - 1] = -1e9;
+    let (out, probs) = k::attention_fwd(&p, &q, &kk, &v, &mask, b, nh, l, d);
+    assert_eq!(probs[l - 1], 0.0, "masked prob must underflow to exactly 0");
+    assert!(
+        out[0].is_nan(),
+        "0.0 * NaN must poison attention output (JAX parity), got {}",
+        out[0]
+    );
+}

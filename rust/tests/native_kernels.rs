@@ -8,7 +8,14 @@
 //! at test time.
 
 use hadapt::runtime::kernels as k;
+use hadapt::runtime::Pool;
 use hadapt::util::json::{self, Json};
+
+/// Fixed 2-worker pool: exercises the sharded kernel paths against the
+/// JAX oracles deterministically on any machine.
+fn pool() -> Pool {
+    Pool::with_threads(2)
+}
 
 struct Arr {
     shape: Vec<usize>,
@@ -79,7 +86,7 @@ fn hadamard_backward_matches_oracle() {
     let (x, w) = (arr(h, "x"), arr(h, "w"));
     let (w2, w3) = (arr(h, "w2"), arr(h, "w3"));
     let dy = arr(h, "dy");
-    let g = k::hadamard_vjp(&x.data, &w.data, Some(&w2.data), Some(&w3.data), &dy.data);
+    let g = k::hadamard_vjp(&pool(), &x.data, &w.data, Some(&w2.data), Some(&w3.data), &dy.data);
     assert_close(&g.dx, &arr(h, "dx"), "hadamard dx");
     assert_close(&g.dw, &arr(h, "dw"), "hadamard dw");
     assert_close(&g.db, &arr(h, "db"), "hadamard db");
@@ -108,7 +115,7 @@ fn layernorm_forward_matches_oracle() {
     let f = load();
     let ln = f.get("layernorm").unwrap();
     let (x, g, b) = (arr(ln, "x"), arr(ln, "g"), arr(ln, "b"));
-    let (y, _) = k::layernorm_fwd(&x.data, &g.data, &b.data);
+    let (y, _) = k::layernorm_fwd(&pool(), &x.data, &g.data, &b.data);
     assert_close(&y, &arr(ln, "y"), "layernorm y");
 }
 
@@ -118,11 +125,11 @@ fn layernorm_backward_matches_oracle() {
     let ln = f.get("layernorm").unwrap();
     let (x, g, b) = (arr(ln, "x"), arr(ln, "g"), arr(ln, "b"));
     let dy = arr(ln, "dy");
-    let (_, cache) = k::layernorm_fwd(&x.data, &g.data, &b.data);
+    let (_, cache) = k::layernorm_fwd(&pool(), &x.data, &g.data, &b.data);
     let hdim = g.data.len();
     let mut dg = vec![0.0f32; hdim];
     let mut db = vec![0.0f32; hdim];
-    let dx = k::layernorm_vjp(&dy.data, &g.data, &cache, Some(&mut dg), Some(&mut db));
+    let dx = k::layernorm_vjp(&pool(), &dy.data, &g.data, &cache, Some(&mut dg), Some(&mut db));
     assert_close(&dx, &arr(ln, "dx"), "layernorm dx");
     assert_close(&dg, &arr(ln, "dg"), "layernorm dg");
     assert_close(&db, &arr(ln, "db"), "layernorm db");
@@ -137,7 +144,8 @@ fn attention_forward_matches_oracle() {
     let (q, kk, v) = (arr(at, "q"), arr(at, "k"), arr(at, "v"));
     let mask = arr(at, "mask_add");
     let (b, nh, l, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
-    let (out, probs) = k::attention_fwd(&q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
+    let (out, probs) =
+        k::attention_fwd(&pool(), &q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
     assert_close(&out, &arr(at, "out"), "attention out");
     // probs rows are simplex points
     for row in probs.chunks_exact(l) {
@@ -155,9 +163,9 @@ fn attention_backward_matches_oracle() {
     let mask = arr(at, "mask_add");
     let dy = arr(at, "dy");
     let (b, nh, l, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
-    let (_, probs) = k::attention_fwd(&q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
+    let (_, probs) = k::attention_fwd(&pool(), &q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
     let (dq, dk, dv) =
-        k::attention_vjp(&dy.data, &q.data, &kk.data, &v.data, &probs, b, nh, l, d);
+        k::attention_vjp(&pool(), &dy.data, &q.data, &kk.data, &v.data, &probs, b, nh, l, d);
     assert_close(&dq, &arr(at, "dq"), "attention dq");
     assert_close(&dk, &arr(at, "dk"), "attention dk");
     assert_close(&dv, &arr(at, "dv"), "attention dv");
@@ -172,7 +180,7 @@ fn attention_masked_keys_get_zero_probability() {
     let (q, kk, v) = (arr(at, "q"), arr(at, "k"), arr(at, "v"));
     let mask = arr(at, "mask_add");
     let (b, nh, l, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
-    let (_, probs) = k::attention_fwd(&q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
+    let (_, probs) = k::attention_fwd(&pool(), &q.data, &kk.data, &v.data, &mask.data, b, nh, l, d);
     for bi in 0..b {
         for hi in 0..nh {
             for i in 0..l {
