@@ -1,7 +1,9 @@
-//! Runtime microbenchmarks: the PR 1 scalar kernels vs the blocked kernels
-//! vs blocked+parallel, at every model size — forward latency, the
-//! hadamard train step (the paper's hot path), warmup and upload overhead,
-//! plus GEMM microbenchmarks at tiny/base/large shapes.
+//! Runtime microbenchmarks: the PR 1 scalar kernels vs blocked vs
+//! blocked+parallel vs packed+fused (PR 3), at every model size — forward
+//! latency, the hadamard train step (the paper's hot path) with workspace
+//! arena counters, warmup and upload overhead, plus GEMM microbenchmarks
+//! (including packed panels and the fused bias+GELU epilogue) at
+//! tiny/base/large shapes.
 //!
 //! Results are also recorded to `BENCH_kernels.json` at the repo root so
 //! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
@@ -23,10 +25,10 @@ use hadapt::util::bench::{report_throughput, Bench};
 use hadapt::util::json::Json;
 use hadapt::util::Rng;
 
-fn engine_with(pool: Pool) -> Engine {
+fn engine_with(pool: Pool, packing: bool) -> Engine {
     Engine::with_backend(
         Manifest::builtin("artifacts"),
-        Box::new(NativeBackend::with_pool(pool)),
+        Box::new(NativeBackend::with_pool(pool).packing(packing)),
     )
 }
 
@@ -39,13 +41,18 @@ fn main() {
     let b = if quick { Bench::new(1, 3) } else { Bench::default() };
     let models: &[&str] = if quick { &["tiny"] } else { &["tiny", "base", "large"] };
     let threads = Pool::auto().threads();
-    println!("backend: native — scalar (PR 1) vs blocked vs parallel ({threads} threads)");
+    println!(
+        "backend: native — scalar (PR 1) vs blocked vs parallel vs packed+fused \
+         ({threads} threads)"
+    );
 
-    // engine per kernel mode; identical manifest + weights, only kernels differ
-    let modes: [(&str, Engine); 3] = [
-        ("scalar", engine_with(Pool::scalar_reference())),
-        ("blocked", engine_with(Pool::serial())),
-        ("parallel", engine_with(Pool::auto())),
+    // engine per kernel mode; identical manifest + weights, only kernels
+    // differ. "packed" = parallel + frozen-weight panels + fused epilogues.
+    let modes: [(&str, Engine); 4] = [
+        ("scalar", engine_with(Pool::scalar_reference(), false)),
+        ("blocked", engine_with(Pool::serial(), false)),
+        ("parallel", engine_with(Pool::auto(), false)),
+        ("packed", engine_with(Pool::auto(), true)),
     ];
     let batch = modes[0].1.manifest().batch;
     let seq = modes[0].1.manifest().seq_len;
@@ -59,7 +66,7 @@ fn main() {
 
         // warmup (compile on XLA; manifest validation natively)
         let t0 = std::time::Instant::now();
-        modes[2].1.warmup(&Manifest::fwd_name(model)).unwrap();
+        modes[3].1.warmup(&Manifest::fwd_name(model)).unwrap();
         println!(
             "bench {:<44} once={:>10.3?}",
             format!("warmup/fwd_{model}"),
@@ -79,13 +86,13 @@ fn main() {
                 .map(|t| engine.upload(t).unwrap())
                 .collect();
             let tok = engine
-                .upload_int(&IntTensor::new(vec![batch, seq], bt.tokens.clone()).unwrap())
+                .upload_int_owned(IntTensor::new(vec![batch, seq], bt.tokens.clone()).unwrap())
                 .unwrap();
             let typ = engine
-                .upload_int(&IntTensor::new(vec![batch, seq], bt.type_ids.clone()).unwrap())
+                .upload_int_owned(IntTensor::new(vec![batch, seq], bt.type_ids.clone()).unwrap())
                 .unwrap();
             let msk = engine
-                .upload(&Tensor::new(vec![batch, seq], bt.attn_mask.clone()).unwrap())
+                .upload_owned(Tensor::new(vec![batch, seq], bt.attn_mask.clone()).unwrap())
                 .unwrap();
             let s = b.run(&format!("fwd_exec/{model}/{tag}"), || {
                 let mut refs: Vec<&DeviceTensor> = param_bufs.iter().collect();
@@ -97,26 +104,37 @@ fn main() {
             report_throughput(&format!("fwd_exec/{model}/{tag} (seqs)"), batch as f64, &s);
             mode_ms.push(s.mean_ms());
         }
-        let (sc, bl, pa) = (mode_ms[0], mode_ms[1], mode_ms[2]);
+        let (sc, bl, pa, pk) = (mode_ms[0], mode_ms[1], mode_ms[2], mode_ms[3]);
         println!(
-            "bench {:<44} blocked={:.2}x parallel={:.2}x (vs PR 1 scalar)",
+            "bench {:<44} blocked={:.2}x parallel={:.2}x packed={:.2}x \
+             packed_vs_parallel={:.2}x",
             format!("fwd_speedup/{model}"),
             sc / bl,
-            sc / pa
+            sc / pa,
+            sc / pk,
+            pa / pk
         );
         let mut mj = Json::obj();
         ms(&mut mj, "scalar_ms", sc);
         ms(&mut mj, "blocked_ms", bl);
         ms(&mut mj, "parallel_ms", pa);
+        ms(&mut mj, "packed_ms", pk);
         ms(&mut mj, "speedup_blocked", sc / bl);
         ms(&mut mj, "speedup_parallel", sc / pa);
+        ms(&mut mj, "speedup_packed", sc / pk);
+        ms(&mut mj, "packed_vs_parallel", pa / pk);
         fwd_json.set(model, mj);
 
-        // train step (hadamard group, the paper's hot path): scalar vs parallel
+        // train step (hadamard group, the paper's hot path): scalar vs
+        // parallel vs packed, with workspace-arena counters on the packed
+        // run proving the steady state stops allocating.
         let mask = FreezeMask::from_names(&info, &info.group("hadamard").unwrap().to_vec());
         let cm = class_mask(2);
         let mut step_ms = Vec::new();
-        for (tag, engine) in [("scalar", &modes[0].1), ("parallel", &modes[2].1)] {
+        let mut arena = (0u64, 0u64, 0u64);
+        for (tag, engine) in
+            [("scalar", &modes[0].1), ("parallel", &modes[2].1), ("packed", &modes[3].1)]
+        {
             let mut session = Session::new(
                 engine,
                 &Manifest::train_name("cls", "hadamard", model),
@@ -134,19 +152,40 @@ fn main() {
                 &s,
             );
             step_ms.push(s.mean_ms());
+            if tag == "packed" {
+                let (h0, m0) = engine.arena_stats();
+                session.step_cls(&bt, &cm).unwrap();
+                session.step_cls(&bt, &cm).unwrap();
+                let (h1, m1) = engine.arena_stats();
+                arena = (h1 - h0, m1 - m0, engine.pack_stats().0);
+                println!(
+                    "bench {:<44} hits={} misses={} packed_weights={}",
+                    format!("train_step_arena/{model} (2 steady steps)"),
+                    arena.0,
+                    arena.1,
+                    arena.2
+                );
+            }
         }
         println!(
-            "bench {:<44} parallel={:.2}x (vs PR 1 scalar)",
+            "bench {:<44} parallel={:.2}x packed={:.2}x (vs PR 1 scalar)",
             format!("train_step_speedup/{model}"),
-            step_ms[0] / step_ms[1]
+            step_ms[0] / step_ms[1],
+            step_ms[0] / step_ms[2]
         );
         let mut sj = Json::obj();
         ms(&mut sj, "scalar_ms", step_ms[0]);
         ms(&mut sj, "parallel_ms", step_ms[1]);
+        ms(&mut sj, "packed_ms", step_ms[2]);
         ms(&mut sj, "speedup_parallel", step_ms[0] / step_ms[1]);
+        ms(&mut sj, "speedup_packed", step_ms[0] / step_ms[2]);
+        ms(&mut sj, "packed_vs_parallel", step_ms[1] / step_ms[2]);
+        sj.set("arena_steady_hits", Json::num(arena.0 as f64));
+        sj.set("arena_steady_misses", Json::num(arena.1 as f64));
+        sj.set("packed_weights", Json::num(arena.2 as f64));
         step_json.set(model, sj);
 
-        // upload overhead (largest tensor) on the parallel engine
+        // upload overhead (largest tensor) on the packed engine
         let biggest = store
             .tensors
             .iter()
@@ -155,12 +194,14 @@ fn main() {
             .clone();
         let bytes = biggest.numel() * 4;
         let s = b.run(&format!("upload/{model}/largest_tensor"), || {
-            modes[2].1.upload(&biggest).unwrap()
+            modes[3].1.upload(&biggest).unwrap()
         });
         report_throughput(&format!("upload/{model} (MB)"), bytes as f64 / 1e6, &s);
     }
 
-    // GEMM microbenchmarks at forward-pass shapes: [T, H] x [H, F]
+    // GEMM microbenchmarks at forward-pass shapes: [T, H] x [H, F], plus
+    // the packed panels and the fused bias+GELU epilogue against the
+    // equivalent separate-kernel sequence.
     let mut mm_json = Json::obj();
     let shapes: &[(&str, usize, usize, usize)] = if quick {
         &[("tiny_t512_h64_f128", 512, 64, 128)]
@@ -175,23 +216,61 @@ fn main() {
     for &(tag, m, kk, n) in shapes {
         let a: Vec<f32> = (0..m * kk).map(|_| rng.normal()).collect();
         let bb: Vec<f32> = (0..kk * n).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let s_sc = b.run(&format!("matmul/{tag}/scalar"), || scalar::matmul(&a, &bb, m, kk, n));
         let p1 = Pool::serial();
         let s_bl = b.run(&format!("matmul/{tag}/blocked"), || k::matmul(&p1, &a, &bb, m, kk, n));
         let pn = Pool::auto();
         let s_pa = b.run(&format!("matmul/{tag}/parallel"), || k::matmul(&pn, &a, &bb, m, kk, n));
+        let t_pack = std::time::Instant::now();
+        let pb = k::PackedMat::pack_nn(&bb, kk, n);
+        let pack_once_ms = t_pack.elapsed().as_secs_f64() * 1e3;
+        let mut c = vec![0.0f32; m * n];
+        let s_pk = b.run(&format!("matmul/{tag}/packed"), || {
+            let epi = k::Epilogue::none();
+            k::gemm_fused_into(&pn, &a, k::BMat::Packed(&pb), &mut c, m, kk, n, epi, None)
+        });
+        // fused bias+gelu in the GEMM pass vs the separate-kernel sequence
+        let s_sep = b.run(&format!("matmul/{tag}/bias_gelu_separate"), || {
+            let mut u = k::matmul(&pn, &a, &bb, m, kk, n);
+            k::add_bias(&mut u, &bias);
+            k::gelu_vec(&pn, &u)
+        });
+        let s_fu = b.run(&format!("matmul/{tag}/bias_gelu_fused"), || {
+            k::gemm_fused_into(
+                &pn,
+                &a,
+                k::BMat::Packed(&pb),
+                &mut c,
+                m,
+                kk,
+                n,
+                k::Epilogue::bias_gelu(&bias),
+                None,
+            )
+        });
         println!(
-            "bench {:<44} blocked={:.2}x parallel={:.2}x (vs PR 1 scalar)",
+            "bench {:<44} blocked={:.2}x parallel={:.2}x packed={:.2}x fused={:.2}x \
+             (pack once: {:.3}ms)",
             format!("matmul_speedup/{tag}"),
             s_sc.mean_ms() / s_bl.mean_ms(),
-            s_sc.mean_ms() / s_pa.mean_ms()
+            s_sc.mean_ms() / s_pa.mean_ms(),
+            s_sc.mean_ms() / s_pk.mean_ms(),
+            s_sep.mean_ms() / s_fu.mean_ms(),
+            pack_once_ms
         );
         let mut mj = Json::obj();
         ms(&mut mj, "scalar_ms", s_sc.mean_ms());
         ms(&mut mj, "blocked_ms", s_bl.mean_ms());
         ms(&mut mj, "parallel_ms", s_pa.mean_ms());
+        ms(&mut mj, "packed_ms", s_pk.mean_ms());
+        ms(&mut mj, "pack_once_ms", pack_once_ms);
+        ms(&mut mj, "bias_gelu_separate_ms", s_sep.mean_ms());
+        ms(&mut mj, "bias_gelu_fused_ms", s_fu.mean_ms());
         ms(&mut mj, "speedup_blocked", s_sc.mean_ms() / s_bl.mean_ms());
         ms(&mut mj, "speedup_parallel", s_sc.mean_ms() / s_pa.mean_ms());
+        ms(&mut mj, "speedup_packed", s_sc.mean_ms() / s_pk.mean_ms());
+        ms(&mut mj, "fused_vs_separate", s_sep.mean_ms() / s_fu.mean_ms());
         mm_json.set(tag, mj);
     }
 
@@ -201,9 +280,10 @@ fn main() {
         "note",
         Json::str(
             "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
-             vs blocked vs blocked+parallel (native backend)",
+             vs blocked vs blocked+parallel vs packed+fused (native backend)",
         ),
     );
+    out.set("provenance", Json::str("measured"));
     out.set("threads", Json::num(threads as f64));
     out.set("quick", Json::Bool(quick));
     out.set("batch", Json::num(batch as f64));

@@ -26,6 +26,10 @@ pub struct Config {
     /// native-kernel worker threads: 0 = auto-detect (one per core),
     /// 1 = single-threaded (bit-reproducible across machines).
     pub threads: usize,
+    /// pack frozen backbone GEMM weights into SIMD-aligned panels once at
+    /// first use (native backend; on by default — turn off to A/B the
+    /// plain blocked kernels).
+    pub packing: bool,
     /// master seed.
     pub seed: u64,
     /// pre-training steps per backbone.
@@ -47,6 +51,7 @@ impl Default for Config {
             results_dir: "results".into(),
             models: vec!["base".into()],
             threads: 0,
+            packing: true,
             seed: 1234,
             pretrain_steps: 1500,
             pretrain_lr: 1e-3,
@@ -87,6 +92,9 @@ impl Config {
         if let Some(v) = j.opt("threads") {
             self.threads = v.as_usize()?;
         }
+        if let Some(v) = j.opt("packing") {
+            self.packing = v.as_bool()?;
+        }
         if let Some(v) = j.opt("seed") {
             self.seed = v.as_f64()? as u64;
         }
@@ -119,6 +127,7 @@ impl Config {
                 self.models = value.split(',').map(String::from).collect()
             }
             "threads" => self.threads = value.parse()?,
+            "packing" => self.packing = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "pretrain_steps" => self.pretrain_steps = value.parse()?,
             "pretrain_lr" => self.pretrain_lr = value.parse()?,
@@ -136,7 +145,9 @@ impl Config {
     /// everywhere.
     pub fn engine(&self) -> Result<Engine> {
         match self.backend.as_str() {
-            "native" => Engine::new_with_threads(&self.artifacts_dir, self.threads),
+            "native" => {
+                Engine::new_with_opts(&self.artifacts_dir, self.threads, self.packing)
+            }
             #[cfg(feature = "xla")]
             "xla" => Engine::xla(&self.artifacts_dir),
             #[cfg(not(feature = "xla"))]
@@ -197,6 +208,19 @@ mod tests {
         let mut c = Config::default();
         c.apply_json(&json::parse(r#"{"threads": 1}"#).unwrap()).unwrap();
         assert_eq!(c.threads, 1);
+    }
+
+    #[test]
+    fn packing_key_parses_and_builds() {
+        let c = Config::default();
+        assert!(c.packing, "packing defaults on");
+        let mut c = Config::default();
+        c.set("packing", "false").unwrap();
+        assert!(!c.packing);
+        assert!(c.engine().is_ok(), "unpacked native engine must build");
+        let mut c = Config::default();
+        c.apply_json(&json::parse(r#"{"packing": false}"#).unwrap()).unwrap();
+        assert!(!c.packing);
     }
 
     #[test]

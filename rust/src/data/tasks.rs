@@ -59,14 +59,70 @@ pub struct TaskInfo {
 
 /// All eight tasks, in the paper's Table 2 column order.
 pub const TASKS: [TaskInfo; 8] = [
-    TaskInfo { name: "mrpc", classes: 2, regression: false, metric: Metric::Accuracy, train_size: 1536, dev_size: 512 },
-    TaskInfo { name: "cola", classes: 2, regression: false, metric: Metric::Matthews, train_size: 2048, dev_size: 512 },
-    TaskInfo { name: "mnli", classes: 3, regression: false, metric: Metric::Accuracy, train_size: 4096, dev_size: 512 },
-    TaskInfo { name: "qnli", classes: 2, regression: false, metric: Metric::Accuracy, train_size: 4096, dev_size: 512 },
-    TaskInfo { name: "qqp", classes: 2, regression: false, metric: Metric::Accuracy, train_size: 4096, dev_size: 512 },
-    TaskInfo { name: "rte", classes: 2, regression: false, metric: Metric::Accuracy, train_size: 1024, dev_size: 384 },
-    TaskInfo { name: "sst2", classes: 2, regression: false, metric: Metric::Accuracy, train_size: 4096, dev_size: 512 },
-    TaskInfo { name: "stsb", classes: 1, regression: true, metric: Metric::Pearson, train_size: 1536, dev_size: 512 },
+    TaskInfo {
+        name: "mrpc",
+        classes: 2,
+        regression: false,
+        metric: Metric::Accuracy,
+        train_size: 1536,
+        dev_size: 512,
+    },
+    TaskInfo {
+        name: "cola",
+        classes: 2,
+        regression: false,
+        metric: Metric::Matthews,
+        train_size: 2048,
+        dev_size: 512,
+    },
+    TaskInfo {
+        name: "mnli",
+        classes: 3,
+        regression: false,
+        metric: Metric::Accuracy,
+        train_size: 4096,
+        dev_size: 512,
+    },
+    TaskInfo {
+        name: "qnli",
+        classes: 2,
+        regression: false,
+        metric: Metric::Accuracy,
+        train_size: 4096,
+        dev_size: 512,
+    },
+    TaskInfo {
+        name: "qqp",
+        classes: 2,
+        regression: false,
+        metric: Metric::Accuracy,
+        train_size: 4096,
+        dev_size: 512,
+    },
+    TaskInfo {
+        name: "rte",
+        classes: 2,
+        regression: false,
+        metric: Metric::Accuracy,
+        train_size: 1024,
+        dev_size: 384,
+    },
+    TaskInfo {
+        name: "sst2",
+        classes: 2,
+        regression: false,
+        metric: Metric::Accuracy,
+        train_size: 4096,
+        dev_size: 512,
+    },
+    TaskInfo {
+        name: "stsb",
+        classes: 1,
+        regression: true,
+        metric: Metric::Pearson,
+        train_size: 1536,
+        dev_size: 512,
+    },
 ];
 
 pub fn task_info(name: &str) -> Option<TaskInfo> {

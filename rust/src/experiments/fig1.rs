@@ -58,7 +58,10 @@ pub fn run(coord: &mut Coordinator) -> Result<()> {
 
     let shifts = norm_shift(&before, &after);
     let mut t = Table::new(
-        &format!("Fig 1: ||self-attention output||_2 per layer, before/after full FT ({model}, all tasks pooled)"),
+        &format!(
+            "Fig 1: ||self-attention output||_2 per layer, before/after full FT \
+             ({model}, all tasks pooled)"
+        ),
         &["layer", "before median", "before IQR", "after median", "after IQR",
           "delta mean", "delta median"],
     );

@@ -54,7 +54,10 @@ pub fn run(coord: &mut Coordinator) -> Result<()> {
 
     // (a1)(a2): adapter weight/bias distributions per layer
     let mut t = Table::new(
-        &format!("Fig 5 (a): Hadamard adapter vector distributions per layer ({model}, all tasks pooled)"),
+        &format!(
+            "Fig 5 (a): Hadamard adapter vector distributions per layer \
+             ({model}, all tasks pooled)"
+        ),
         &["layer", "family", "min", "q1", "median", "q3", "max", "mean"],
     );
     let push_fam = |t: &mut Table, label: &str, dists: &[BoxStats]| {

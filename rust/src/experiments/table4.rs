@@ -44,7 +44,10 @@ pub fn run(coord: &mut Coordinator) -> Result<()> {
     header.extend(TASKS);
     header.push("Average");
     let mut t = Table::new(
-        &format!("Table 4: module ablation on {model} (W=adapter weight, B=adapter bias, N=norm, A=att-norm; Ours=W+B+N)"),
+        &format!(
+            "Table 4: module ablation on {model} (W=adapter weight, B=adapter bias, \
+             N=norm, A=att-norm; Ours=W+B+N)"
+        ),
         &header,
     );
 

@@ -73,6 +73,19 @@ pub trait Backend {
     /// Move a host i32 tensor into backend-resident form.
     fn upload_int(&self, t: &IntTensor) -> Result<DeviceTensor>;
 
+    /// Like [`Backend::upload`], but takes ownership — backends whose
+    /// device tensors are host-resident (native) wrap the buffer without
+    /// copying, so callers that build a tensor just to upload it don't pay
+    /// a second copy. Default delegates to the borrowing path.
+    fn upload_owned(&self, t: Tensor) -> Result<DeviceTensor> {
+        self.upload(&t)
+    }
+
+    /// Owned-variant of [`Backend::upload_int`]; see [`Backend::upload_owned`].
+    fn upload_int_owned(&self, t: IntTensor) -> Result<DeviceTensor> {
+        self.upload_int(&t)
+    }
+
     /// Execute one artifact.
     fn execute(
         &self,
@@ -91,5 +104,19 @@ pub trait Backend {
     /// compiling backends.
     fn compile_stats(&self) -> (usize, f64) {
         (0, 0.0)
+    }
+
+    /// Workspace-arena counters `(hits, misses)` accumulated so far.
+    /// Nonzero only for backends that recycle kernel buffers (native); a
+    /// steady-state train loop stops accruing misses after its first step.
+    fn arena_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Frozen-weight pack-cache counters `(live packed entries, repacks)`.
+    /// Nonzero only for the native backend with packing enabled; a repack
+    /// means a cached panel set was invalidated by a parameter re-upload.
+    fn pack_stats(&self) -> (u64, u64) {
+        (0, 0)
     }
 }

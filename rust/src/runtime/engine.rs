@@ -57,10 +57,20 @@ impl Engine {
     /// Like [`Engine::new`] with an explicit kernel worker count (`0` =
     /// auto-detect; `1` = fully deterministic single-threaded kernels).
     pub fn new_with_threads(artifacts_dir: impl AsRef<Path>, threads: usize) -> Result<Self> {
+        Engine::new_with_opts(artifacts_dir, threads, true)
+    }
+
+    /// Full native-engine knob set: worker count plus the frozen-weight
+    /// packing toggle (the `packing` config key; on by default).
+    pub fn new_with_opts(
+        artifacts_dir: impl AsRef<Path>,
+        threads: usize,
+        packing: bool,
+    ) -> Result<Self> {
         let manifest = Manifest::load_or_builtin(artifacts_dir)?;
         Ok(Engine::with_backend(
             manifest,
-            Box::new(NativeBackend::with_threads(threads)),
+            Box::new(NativeBackend::with_threads(threads).packing(packing)),
         ))
     }
 
@@ -108,6 +118,28 @@ impl Engine {
     /// Move a host i32 tensor into backend-resident form.
     pub fn upload_int(&self, t: &IntTensor) -> Result<DeviceTensor> {
         self.backend.upload_int(t)
+    }
+
+    /// Owned upload: host-resident backends (native) wrap the tensor
+    /// without copying. Prefer this whenever the caller builds the tensor
+    /// just to upload it.
+    pub fn upload_owned(&self, t: Tensor) -> Result<DeviceTensor> {
+        self.backend.upload_owned(t)
+    }
+
+    /// Owned i32 upload; see [`Engine::upload_owned`].
+    pub fn upload_int_owned(&self, t: IntTensor) -> Result<DeviceTensor> {
+        self.backend.upload_int_owned(t)
+    }
+
+    /// Workspace-arena counters `(hits, misses)` — native backend only.
+    pub fn arena_stats(&self) -> (u64, u64) {
+        self.backend.arena_stats()
+    }
+
+    /// Pack-cache counters `(live packed weights, repacks)` — native only.
+    pub fn pack_stats(&self) -> (u64, u64) {
+        self.backend.pack_stats()
     }
 
     /// Execute an artifact: parameters in canonical order, then batch

@@ -33,8 +33,31 @@
 //! oracle, so divergence surfaces instead of being masked (see the
 //! `nan_propagates_*` tests). The original scalar kernels are retained
 //! verbatim in [`scalar`] as the parity/bench reference; parameter-
-//! gradient reductions accumulate fixed-order partials, so results are
-//! deterministic for a given thread count.
+//! gradient reductions run in a fixed serial order, so results are
+//! deterministic for any thread count.
+//!
+//! # Zero-allocation steady state (PR 3)
+//!
+//! Every hot kernel now has an `_into` out-parameter variant that writes
+//! into caller-provided buffers (the backend recycles them through a
+//! [`crate::runtime::Workspace`] arena, so step N>1 of a fixed-geometry
+//! train loop allocates nothing in kernel code). The allocating entry
+//! points remain as thin wrappers so existing call sites and the
+//! [`scalar`] parity suite keep compiling.
+//!
+//! Frozen GEMM operands can additionally be packed once into a
+//! [`PackedMat`] — `NR`-column panels, k-major, zero-padded to the SIMD
+//! lane width — which the shared microkernel ([`gemm_fused_into`] /
+//! [`matmul_nt_into`]) consumes for both the NN (forward) and NT
+//! (input-gradient) orientations. The NN path also takes a fused
+//! [`Epilogue`] (residual add(s) + bias + exact-GELU, with an optional
+//! pre-activation tap for the backward pass), so e.g. the FFN
+//! up-projection applies bias+GELU in the same pass that computes the
+//! GEMM instead of re-streaming the `[T, F]` buffer twice. Per-element
+//! accumulation order is `p`-ascending in every orientation — identical
+//! to the scalar reference on finite inputs — and the packed padding
+//! lanes are zeros that are never written back, so NaN propagation
+//! semantics are unchanged.
 
 use super::pool::Pool;
 
@@ -123,34 +146,52 @@ pub fn dgelu_f32(x: f32) -> f32 {
 
 /// Apply GELU elementwise into a new buffer, sharded over `pool`.
 pub fn gelu_vec(pool: &Pool, x: &[f32]) -> Vec<f32> {
-    if pool.is_scalar() {
-        return x.iter().map(|&v| gelu(v)).collect();
-    }
     let mut y = vec![0.0f32; x.len()];
-    pool.for_rows(&mut y, 1, EW_GRAIN, |i0, yc| {
+    gelu_into(pool, x, &mut y);
+    y
+}
+
+/// [`gelu_vec`] into a caller-provided buffer (fully overwritten).
+pub fn gelu_into(pool: &Pool, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    if pool.is_scalar() {
+        for (o, &v) in y.iter_mut().zip(x) {
+            *o = gelu(v);
+        }
+        return;
+    }
+    pool.for_rows(y, 1, EW_GRAIN, |i0, yc| {
         let xs = &x[i0..i0 + yc.len()];
         for (o, &v) in yc.iter_mut().zip(xs) {
             *o = gelu_f32(v);
         }
     });
-    y
 }
 
 /// `dy ⊙ gelu'(u)` elementwise (the GELU VJP), sharded over `pool`.
 pub fn dgelu_mul(pool: &Pool, dy: &[f32], u: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(dy.len(), u.len());
-    if pool.is_scalar() {
-        return dy.iter().zip(u).map(|(g, &x)| g * dgelu(x)).collect();
-    }
     let mut y = vec![0.0f32; dy.len()];
-    pool.for_rows(&mut y, 1, EW_GRAIN, |i0, yc| {
+    dgelu_mul_into(pool, dy, u, &mut y);
+    y
+}
+
+/// [`dgelu_mul`] into a caller-provided buffer (fully overwritten).
+pub fn dgelu_mul_into(pool: &Pool, dy: &[f32], u: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(dy.len(), u.len());
+    debug_assert_eq!(dy.len(), y.len());
+    if pool.is_scalar() {
+        for ((o, g), &x) in y.iter_mut().zip(dy).zip(u) {
+            *o = g * dgelu(x);
+        }
+        return;
+    }
+    pool.for_rows(y, 1, EW_GRAIN, |i0, yc| {
         let n = yc.len();
         let (ds, us) = (&dy[i0..i0 + n], &u[i0..i0 + n]);
         for j in 0..n {
             yc[j] = ds[j] * dgelu_f32(us[j]);
         }
     });
-    y
 }
 
 // ------------------------------------------------------------------ matmul
@@ -230,17 +271,20 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// scalar reference, so NN results are bit-identical to [`scalar::matmul`]
 /// on finite inputs — and NaN/Inf propagate (no zero-skip).
 pub fn matmul(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
     if pool.is_scalar() {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
         return scalar::matmul(a, b, m, k, n);
     }
     let mut c = vec![0.0f32; m * n];
-    if m == 0 || n == 0 {
-        return c;
-    }
-    pool.for_rows(&mut c, n, MM_GRAIN, |i0, cc| nn_block(a, b, i0, cc, k, n));
+    matmul_into(pool, a, b, &mut c, m, k, n);
     c
+}
+
+/// [`matmul`] into a caller-provided buffer (fully overwritten; the
+/// incoming contents of `c` are ignored).
+pub fn matmul_into(pool: &Pool, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_fused_into(pool, a, BMat::Plain(b), c, m, k, n, Epilogue::none(), None);
 }
 
 /// One contiguous row block (`i0..`) of the NN product.
@@ -340,24 +384,403 @@ fn tn_block(a: &[f32], b: &[f32], i0: usize, out: &mut [f32], k: usize, m: usize
 /// (`dx = dy @ W^T`). Both operand rows are contiguous, so each output
 /// element is a lane-parallel [`dot`]; sharded over output rows.
 pub fn matmul_nt(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
     if pool.is_scalar() {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
         return scalar::matmul_nt(a, b, m, k, n);
     }
     let mut c = vec![0.0f32; m * n];
-    if m == 0 || n == 0 {
-        return c;
+    matmul_nt_into(pool, a, NtMat::Plain(b), &mut c, m, k, n, false);
+    c
+}
+
+/// The `b^T` operand of an NT product: either the row-major `[n, k]`
+/// matrix itself or a [`PackedMat`] built with [`PackedMat::pack_nt`].
+#[derive(Clone, Copy)]
+pub enum NtMat<'a> {
+    Plain(&'a [f32]),
+    Packed(&'a PackedMat),
+}
+
+/// [`matmul_nt`] into a caller-provided buffer. With `acc == false` the
+/// buffer is overwritten; with `acc == true` the product accumulates into
+/// it (`c += a @ b^T`), which is what the backward pass's `dx +=` chains
+/// use instead of materializing a temporary.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_into(
+    pool: &Pool,
+    a: &[f32],
+    b: NtMat<'_>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    if pool.is_scalar() {
+        let owned: Vec<f32>;
+        let bp: &[f32] = match b {
+            NtMat::Plain(x) => {
+                debug_assert_eq!(x.len(), n * k);
+                x
+            }
+            NtMat::Packed(p) => {
+                // logical B is [k, n]; scalar wants b^T rows, i.e. [n, k]
+                debug_assert_eq!((p.k, p.n), (k, n));
+                owned = p.unpack_t();
+                &owned
+            }
+        };
+        let tmp = scalar::matmul_nt(a, bp, m, k, n);
+        if acc {
+            add_slices(c, &tmp);
+        } else {
+            c.copy_from_slice(&tmp);
+        }
+        return;
     }
-    pool.for_rows(&mut c, n, MM_GRAIN, |i0, cc| {
-        for (r, crow) in cc.chunks_exact_mut(n).enumerate() {
-            let arow = &a[(i0 + r) * k..(i0 + r) * k + k];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                *cv = dot(arow, &b[j * k..j * k + k]);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match b {
+        NtMat::Plain(bt) => {
+            debug_assert_eq!(bt.len(), n * k);
+            pool.for_rows(c, n, MM_GRAIN, |i0, cc| {
+                for (r, crow) in cc.chunks_exact_mut(n).enumerate() {
+                    let arow = &a[(i0 + r) * k..(i0 + r) * k + k];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        let v = dot(arow, &bt[j * k..j * k + k]);
+                        if acc {
+                            *cv += v;
+                        } else {
+                            *cv = v;
+                        }
+                    }
+                }
+            });
+        }
+        NtMat::Packed(pb) => {
+            debug_assert_eq!((pb.k, pb.n), (k, n));
+            pool.for_rows(c, n, MM_GRAIN, |i0, cc| packed_block(a, pb, i0, cc, k, n, acc));
+        }
+    }
+}
+
+fn add_slices(c: &mut [f32], t: &[f32]) {
+    for (o, v) in c.iter_mut().zip(t) {
+        *o += *v;
+    }
+}
+
+// ------------------------------------------------- packed B + fused GEMM
+
+/// Panel width of a [`PackedMat`]: `NR` output columns share each packed
+/// row, sized to the manual SIMD lane width so the microkernel's
+/// accumulator tile stays in registers.
+pub const NR: usize = LANES;
+
+/// A GEMM `B` operand packed once into SIMD-lane-aligned panels.
+///
+/// Logical layout is `B: [k, n]`. Physically: `ceil(n / NR)` panels, each
+/// `k * NR` floats, k-major — panel `jp` holds `B[p][jp*NR + r]` at
+/// `panel[p * NR + r]`, zero-padded in the column direction. Both GEMM
+/// orientations consume this one layout: [`PackedMat::pack_nn`] packs a
+/// row-major `[k, n]` weight for the forward product, and
+/// [`PackedMat::pack_nt`] packs a row-major `[n, k]` weight's transpose
+/// for the input-gradient product. The backend packs frozen backbone
+/// weights once at first use and reuses the panels every step
+/// (`runtime::native`'s pack cache, keyed by the trainable mask).
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    /// contraction length (rows of the logical `B`).
+    pub k: usize,
+    /// output width (columns of the logical `B`).
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedMat {
+    fn pack_with(k: usize, n: usize, get: impl Fn(usize, usize) -> f32) -> PackedMat {
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; panels * k * NR];
+        for jp in 0..panels {
+            let base = jp * k * NR;
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            for p in 0..k {
+                let row = &mut data[base + p * NR..base + p * NR + jw];
+                for (r, v) in row.iter_mut().enumerate() {
+                    *v = get(p, j0 + r);
+                }
             }
         }
-    });
-    c
+        PackedMat { k, n, data }
+    }
+
+    /// Pack a row-major `b: [k, n]` for the NN orientation (`c = a @ b`).
+    pub fn pack_nn(b: &[f32], k: usize, n: usize) -> PackedMat {
+        debug_assert_eq!(b.len(), k * n);
+        PackedMat::pack_with(k, n, |p, j| b[p * n + j])
+    }
+
+    /// Pack a row-major `bt: [n, k]` for the NT orientation
+    /// (`c = a @ bt^T`): the logical `B` is `bt^T: [k, n]`.
+    pub fn pack_nt(bt: &[f32], n: usize, k: usize) -> PackedMat {
+        debug_assert_eq!(bt.len(), n * k);
+        PackedMat::pack_with(k, n, |p, j| bt[j * k + p])
+    }
+
+    /// Reconstruct the logical row-major `[k, n]` matrix (scalar-dispatch
+    /// fallback and tests).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut b = vec![0.0f32; self.k * self.n];
+        for jp in 0..self.n.div_ceil(NR) {
+            let base = jp * self.k * NR;
+            let j0 = jp * NR;
+            let jw = NR.min(self.n - j0);
+            for p in 0..self.k {
+                for r in 0..jw {
+                    b[p * self.n + j0 + r] = self.data[base + p * NR + r];
+                }
+            }
+        }
+        b
+    }
+
+    /// Reconstruct the row-major `[n, k]` transpose (the `matmul_nt`
+    /// operand shape).
+    pub fn unpack_t(&self) -> Vec<f32> {
+        let b = self.unpack();
+        let mut bt = vec![0.0f32; self.k * self.n];
+        for p in 0..self.k {
+            for j in 0..self.n {
+                bt[j * self.k + p] = b[p * self.n + j];
+            }
+        }
+        bt
+    }
+
+    /// Packed footprint in bytes (padding included).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// The `B` operand of an NN product: plain row-major `[k, n]` or packed.
+#[derive(Clone, Copy)]
+pub enum BMat<'a> {
+    Plain(&'a [f32]),
+    Packed(&'a PackedMat),
+}
+
+/// Fused GEMM epilogue, applied in a fixed order chosen to reproduce the
+/// pre-fusion call sequences bit-for-bit:
+/// `v = (add1 + acc) + bias + add2`, then the optional pre-activation tap,
+/// then GELU. `add1`/`add2` are full `[m, n]` residual inputs; `bias` is
+/// `[n]`, broadcast over rows.
+#[derive(Clone, Copy, Default)]
+pub struct Epilogue<'a> {
+    pub add1: Option<&'a [f32]>,
+    pub bias: Option<&'a [f32]>,
+    pub add2: Option<&'a [f32]>,
+    pub gelu: bool,
+}
+
+impl<'a> Epilogue<'a> {
+    pub fn none() -> Epilogue<'a> {
+        Epilogue::default()
+    }
+
+    pub fn bias(b: &'a [f32]) -> Epilogue<'a> {
+        Epilogue { bias: Some(b), ..Epilogue::default() }
+    }
+
+    pub fn bias_gelu(b: &'a [f32]) -> Epilogue<'a> {
+        Epilogue { bias: Some(b), gelu: true, ..Epilogue::default() }
+    }
+
+    fn is_none(&self) -> bool {
+        self.add1.is_none() && self.bias.is_none() && self.add2.is_none() && !self.gelu
+    }
+}
+
+/// Apply `epi` over a contiguous row chunk starting at global row `row0`,
+/// optionally recording the pre-activation value (post-adds, pre-GELU)
+/// into the matching `pre` chunk. `exact_gelu` selects the f64 reference
+/// GELU — the scalar-dispatch path uses it so `Pool::scalar_reference()`
+/// keeps reproducing the PR 1 oracle sequence exactly; the blocked path
+/// uses [`gelu_f32`] like every other blocked elementwise kernel.
+fn apply_epilogue(
+    row0: usize,
+    c: &mut [f32],
+    mut pre: Option<&mut [f32]>,
+    epi: &Epilogue<'_>,
+    n: usize,
+    exact_gelu: bool,
+) {
+    if epi.is_none() && pre.is_none() {
+        return;
+    }
+    let rows = if n == 0 { 0 } else { c.len() / n };
+    for r in 0..rows {
+        let g = row0 + r;
+        let crow = &mut c[r * n..(r + 1) * n];
+        let mut prow = pre.as_deref_mut().map(|p| &mut p[r * n..(r + 1) * n]);
+        for j in 0..n {
+            let mut v = crow[j];
+            if let Some(a1) = epi.add1 {
+                v = a1[g * n + j] + v;
+            }
+            if let Some(b) = epi.bias {
+                v += b[j];
+            }
+            if let Some(a2) = epi.add2 {
+                v += a2[g * n + j];
+            }
+            if let Some(p) = prow.as_deref_mut() {
+                p[j] = v;
+            }
+            crow[j] = if !epi.gelu {
+                v
+            } else if exact_gelu {
+                gelu(v)
+            } else {
+                gelu_f32(v)
+            };
+        }
+    }
+}
+
+/// One contiguous row block of the packed-panel microkernel: an `MR x NR`
+/// register tile accumulates over the full `k` extent with `p`-ascending
+/// per-element order (bit-identical to the scalar reference on finite
+/// inputs). Padded columns are computed but never written back.
+fn packed_block(
+    a: &[f32],
+    pb: &PackedMat,
+    i0: usize,
+    c: &mut [f32],
+    k: usize,
+    n: usize,
+    acc: bool,
+) {
+    debug_assert_eq!((pb.k, pb.n), (k, n));
+    let rows = if n == 0 { 0 } else { c.len() / n };
+    let panels = n.div_ceil(NR);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let pd = &pb.data[jp * k * NR..(jp + 1) * k * NR];
+        let mut r = 0usize;
+        while r + MR <= rows {
+            let mut t = [[0.0f32; NR]; MR];
+            let a0 = (i0 + r) * k;
+            for p in 0..k {
+                let brow = &pd[p * NR..p * NR + NR];
+                for (ti, tr) in t.iter_mut().enumerate() {
+                    let av = a[a0 + ti * k + p];
+                    for j in 0..NR {
+                        tr[j] += av * brow[j];
+                    }
+                }
+            }
+            for (ti, tr) in t.iter().enumerate() {
+                let crow = &mut c[(r + ti) * n + j0..(r + ti) * n + j0 + jw];
+                if acc {
+                    for j in 0..jw {
+                        crow[j] += tr[j];
+                    }
+                } else {
+                    crow.copy_from_slice(&tr[..jw]);
+                }
+            }
+            r += MR;
+        }
+        while r < rows {
+            let mut t = [0.0f32; NR];
+            let a0 = (i0 + r) * k;
+            for p in 0..k {
+                let av = a[a0 + p];
+                let brow = &pd[p * NR..p * NR + NR];
+                for j in 0..NR {
+                    t[j] += av * brow[j];
+                }
+            }
+            let crow = &mut c[r * n + j0..r * n + j0 + jw];
+            if acc {
+                for j in 0..jw {
+                    crow[j] += t[j];
+                }
+            } else {
+                crow.copy_from_slice(&t[..jw]);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// Blocked GEMM with a fused epilogue: `c = epi(a @ b)` for
+/// `a: [m, k]` and a plain or packed `b: [k, n]`. `pre`, when provided,
+/// receives the pre-GELU value of every output element (the backward
+/// pass's `dgelu` input), written in the same pass — the separate
+/// bias-add and activation sweeps over `[m, n]` disappear.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_into(
+    pool: &Pool,
+    a: &[f32],
+    b: BMat<'_>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue<'_>,
+    pre: Option<&mut [f32]>,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    if let Some(p) = pre.as_deref() {
+        debug_assert_eq!(p.len(), m * n);
+    }
+    if pool.is_scalar() {
+        let owned: Vec<f32>;
+        let bp: &[f32] = match b {
+            BMat::Plain(x) => {
+                debug_assert_eq!(x.len(), k * n);
+                x
+            }
+            BMat::Packed(p) => {
+                debug_assert_eq!((p.k, p.n), (k, n));
+                owned = p.unpack();
+                &owned
+            }
+        };
+        let tmp = scalar::matmul(a, bp, m, k, n);
+        c.copy_from_slice(&tmp);
+        apply_epilogue(0, c, pre, &epi, n, true);
+        return;
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let chunk = |i0: usize, cc: &mut [f32], pc: Option<&mut [f32]>| {
+        match b {
+            BMat::Plain(bp) => {
+                debug_assert_eq!(bp.len(), k * n);
+                cc.fill(0.0);
+                nn_block(a, bp, i0, cc, k, n);
+            }
+            BMat::Packed(pb) => packed_block(a, pb, i0, cc, k, n, false),
+        }
+        apply_epilogue(i0, cc, pc, &epi, n, false);
+    };
+    match pre {
+        Some(pre) => {
+            pool.for_rows2(c, n, pre, n, MM_GRAIN, |i0, cc, pc| chunk(i0, cc, Some(pc)))
+        }
+        None => pool.for_rows(c, n, MM_GRAIN, |i0, cc| chunk(i0, cc, None)),
+    }
 }
 
 /// Add a `[n]` bias to each row of `x: [rows, n]`.
@@ -403,8 +826,22 @@ pub fn hadamard_fwd(
     w2: Option<&[f32]>,
     w3: Option<&[f32]>,
 ) -> Vec<f32> {
-    let h = w.len();
     let mut y = vec![0.0f32; x.len()];
+    hadamard_fwd_into(x, w, b, w2, w3, &mut y);
+    y
+}
+
+/// [`hadamard_fwd`] into a caller-provided buffer (fully overwritten).
+pub fn hadamard_fwd_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    w2: Option<&[f32]>,
+    w3: Option<&[f32]>,
+    y: &mut [f32],
+) {
+    let h = w.len();
+    debug_assert_eq!(x.len(), y.len());
     for (t, row) in x.chunks_exact(h).enumerate() {
         let yrow = &mut y[t * h..(t + 1) * h];
         for j in 0..h {
@@ -419,7 +856,6 @@ pub fn hadamard_fwd(
             yrow[j] = v;
         }
     }
-    y
 }
 
 /// Gradients of the Hadamard adapter.
@@ -433,8 +869,6 @@ pub struct HadamardGrads {
 }
 
 /// VJP of [`hadamard_fwd`] at `(x, w, b, w2, w3)` for upstream `dy`.
-/// Sharded over token rows; each shard returns fixed-order partial `dw`
-/// reductions that are combined in chunk order.
 pub fn hadamard_vjp(
     pool: &Pool,
     x: &[f32],
@@ -445,11 +879,50 @@ pub fn hadamard_vjp(
 ) -> HadamardGrads {
     let h = w.len();
     let mut dx = vec![0.0f32; x.len()];
-    let partials = pool.map_rows(&mut dx, h, LN_GRAIN, |t0, dxc| {
-        let mut dw = vec![0.0f32; h];
-        let mut db = vec![0.0f32; h];
-        let mut dw2 = w2.map(|_| vec![0.0f32; h]);
-        let mut dw3 = w3.map(|_| vec![0.0f32; h]);
+    let mut dw = vec![0.0f32; h];
+    let mut db = vec![0.0f32; h];
+    let mut dw2 = w2.map(|_| vec![0.0f32; h]);
+    let mut dw3 = w3.map(|_| vec![0.0f32; h]);
+    hadamard_vjp_acc_into(
+        pool,
+        x,
+        w,
+        w2,
+        w3,
+        dy,
+        &mut dx,
+        Some(&mut dw),
+        Some(&mut db),
+        dw2.as_deref_mut(),
+        dw3.as_deref_mut(),
+    );
+    HadamardGrads { dx, dw, db, dw2, dw3 }
+}
+
+/// [`hadamard_vjp`] into caller-provided buffers. `dx` is overwritten
+/// (rows sharded over `pool`); the parameter gradients **accumulate** into
+/// whichever of `dw`/`db`/`dw2`/`dw3` are provided — matching the
+/// `GradSink` convention — via a fixed serial reduction, so parameter
+/// grads are bit-identical for every thread count. Pass `None` to skip a
+/// reduction entirely (e.g. grads the gradient group does not want).
+#[allow(clippy::too_many_arguments)]
+pub fn hadamard_vjp_acc_into(
+    pool: &Pool,
+    x: &[f32],
+    w: &[f32],
+    w2: Option<&[f32]>,
+    w3: Option<&[f32]>,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: Option<&mut [f32]>,
+    db: Option<&mut [f32]>,
+    dw2: Option<&mut [f32]>,
+    dw3: Option<&mut [f32]>,
+) {
+    let h = w.len();
+    debug_assert_eq!(x.len(), dy.len());
+    debug_assert_eq!(x.len(), dx.len());
+    pool.for_rows(dx, h, LN_GRAIN, |t0, dxc| {
         let rows = dxc.len() / h;
         for r in 0..rows {
             let t = t0 + r;
@@ -458,44 +931,48 @@ pub fn hadamard_vjp(
             let dxrow = &mut dxc[r * h..(r + 1) * h];
             for j in 0..h {
                 let xv = row[j];
-                let g = dyrow[j];
-                dw[j] += g * xv;
-                db[j] += g;
                 let mut deriv = w[j];
                 if let Some(w2) = w2 {
                     deriv += 2.0 * w2[j] * xv;
-                    dw2.as_mut().unwrap()[j] += g * xv * xv;
                 }
                 if let Some(w3) = w3 {
                     deriv += 3.0 * w3[j] * xv * xv;
-                    dw3.as_mut().unwrap()[j] += g * xv * xv * xv;
                 }
-                dxrow[j] = g * deriv;
+                dxrow[j] = dyrow[j] * deriv;
             }
         }
-        (dw, db, dw2, dw3)
     });
-    let mut dw = vec![0.0f32; h];
-    let mut db = vec![0.0f32; h];
-    let mut dw2 = w2.map(|_| vec![0.0f32; h]);
-    let mut dw3 = w3.map(|_| vec![0.0f32; h]);
-    for (pw, pb, pw2, pw3) in partials {
-        for j in 0..h {
-            dw[j] += pw[j];
-            db[j] += pb[j];
-        }
-        if let (Some(d), Some(p)) = (dw2.as_mut(), pw2.as_ref()) {
+    let rows = x.len() / h.max(1);
+    if let Some(dw) = dw {
+        for t in 0..rows {
+            let row = &x[t * h..(t + 1) * h];
+            let dyrow = &dy[t * h..(t + 1) * h];
             for j in 0..h {
-                d[j] += p[j];
-            }
-        }
-        if let (Some(d), Some(p)) = (dw3.as_mut(), pw3.as_ref()) {
-            for j in 0..h {
-                d[j] += p[j];
+                dw[j] += dyrow[j] * row[j];
             }
         }
     }
-    HadamardGrads { dx, dw, db, dw2, dw3 }
+    if let Some(db) = db {
+        col_sum_acc(dy, db);
+    }
+    if let Some(dw2) = dw2 {
+        for t in 0..rows {
+            let row = &x[t * h..(t + 1) * h];
+            let dyrow = &dy[t * h..(t + 1) * h];
+            for j in 0..h {
+                dw2[j] += dyrow[j] * row[j] * row[j];
+            }
+        }
+    }
+    if let Some(dw3) = dw3 {
+        for t in 0..rows {
+            let row = &x[t * h..(t + 1) * h];
+            let dyrow = &dy[t * h..(t + 1) * h];
+            for j in 0..h {
+                dw3[j] += dyrow[j] * row[j] * row[j] * row[j];
+            }
+        }
+    }
 }
 
 // --------------------------------------------------------------- layernorm
@@ -514,12 +991,29 @@ pub const LN_EPS: f64 = 1e-5;
 /// `x: [T, H]`, `g, b: [H]`; rows sharded over `pool` (row math is
 /// independent, so results are identical for any thread count).
 pub fn layernorm_fwd(pool: &Pool, x: &[f32], g: &[f32], b: &[f32]) -> (Vec<f32>, LnCache) {
-    let h = g.len();
-    let rows = x.len() / h;
+    let rows = x.len() / g.len().max(1);
     let mut y = vec![0.0f32; x.len()];
-    let mut xhat = vec![0.0f32; x.len()];
-    let mut inv = vec![0.0f32; rows];
-    pool.for_rows3(&mut y, h, &mut xhat, h, &mut inv, 1, LN_GRAIN, |t0, yc, xhc, invc| {
+    let mut cache = LnCache { xhat: vec![0.0f32; x.len()], inv: vec![0.0f32; rows] };
+    layernorm_fwd_into(pool, x, g, b, &mut y, &mut cache.xhat, &mut cache.inv);
+    (y, cache)
+}
+
+/// [`layernorm_fwd`] into caller-provided buffers: `y`/`xhat` are `[T, H]`,
+/// `inv` is `[T]`; all fully overwritten.
+pub fn layernorm_fwd_into(
+    pool: &Pool,
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    xhat: &mut [f32],
+    inv: &mut [f32],
+) {
+    let h = g.len();
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), xhat.len());
+    debug_assert_eq!(inv.len() * h, x.len());
+    pool.for_rows3(y, h, xhat, h, inv, 1, LN_GRAIN, |t0, yc, xhc, invc| {
         for r in 0..invc.len() {
             let row = &x[(t0 + r) * h..(t0 + r + 1) * h];
             let mut mean = 0.0f64;
@@ -544,7 +1038,6 @@ pub fn layernorm_fwd(pool: &Pool, x: &[f32], g: &[f32], b: &[f32]) -> (Vec<f32>,
             }
         }
     });
-    (y, LnCache { xhat, inv })
 }
 
 /// VJP of [`layernorm_fwd`]: returns `dx`; `dg`/`db` are *accumulated
@@ -559,24 +1052,44 @@ pub fn layernorm_vjp(
     dg: Option<&mut [f32]>,
     db: Option<&mut [f32]>,
 ) -> Vec<f32> {
+    let mut dx = vec![0.0f32; dy.len()];
+    layernorm_vjp_into(pool, dy, g, &cache.xhat, &cache.inv, dg, db, &mut dx);
+    dx
+}
+
+/// [`layernorm_vjp`] into a caller-provided `dx` buffer (overwritten);
+/// `xhat`/`inv` are the forward cache slices.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_vjp_into(
+    pool: &Pool,
+    dy: &[f32],
+    g: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    dg: Option<&mut [f32]>,
+    db: Option<&mut [f32]>,
+    dx: &mut [f32],
+) {
     let h = g.len();
-    let rows = dy.len() / h;
+    let rows = dy.len() / h.max(1);
+    debug_assert_eq!(dy.len(), dx.len());
+    debug_assert_eq!(dy.len(), xhat.len());
+    debug_assert_eq!(rows, inv.len());
     if let Some(dg) = dg {
         for t in 0..rows {
             for j in 0..h {
-                dg[j] += dy[t * h + j] * cache.xhat[t * h + j];
+                dg[j] += dy[t * h + j] * xhat[t * h + j];
             }
         }
     }
     if let Some(db) = db {
         col_sum_acc(dy, db);
     }
-    let mut dx = vec![0.0f32; dy.len()];
-    pool.for_rows(&mut dx, h, LN_GRAIN, |t0, dxc| {
+    pool.for_rows(dx, h, LN_GRAIN, |t0, dxc| {
         for r in 0..dxc.len() / h {
             let t = t0 + r;
             let dyrow = &dy[t * h..(t + 1) * h];
-            let xhrow = &cache.xhat[t * h..(t + 1) * h];
+            let xhrow = &xhat[t * h..(t + 1) * h];
             let mut m1 = 0.0f64;
             let mut m2 = 0.0f64;
             for j in 0..h {
@@ -586,7 +1099,7 @@ pub fn layernorm_vjp(
             }
             m1 /= h as f64;
             m2 /= h as f64;
-            let iv = cache.inv[t] as f64;
+            let iv = inv[t] as f64;
             let dxrow = &mut dxc[r * h..(r + 1) * h];
             for j in 0..h {
                 let dxh = (dyrow[j] * g[j]) as f64;
@@ -594,7 +1107,6 @@ pub fn layernorm_vjp(
             }
         }
     });
-    dx
 }
 
 // --------------------------------------------------------------- attention
@@ -637,16 +1149,42 @@ pub fn attention_fwd(
     l: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    if pool.is_scalar() {
-        return scalar::attention_fwd(q, k, v, mask_add, b, nh, l, d);
-    }
-    let scale = 1.0 / (d as f32).sqrt();
     let mut out = vec![0.0f32; b * nh * l * d];
     let mut probs = vec![0.0f32; b * nh * l * l];
-    if b * nh == 0 || l == 0 || d == 0 {
-        return (out, probs);
+    attention_fwd_into(pool, q, k, v, mask_add, b, nh, l, d, &mut out, &mut probs);
+    (out, probs)
+}
+
+/// [`attention_fwd`] into caller-provided `out [B, NH, L, D]` and
+/// `probs [B, NH, L, L]` buffers (fully overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd_into(
+    pool: &Pool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask_add: &[f32],
+    b: usize,
+    nh: usize,
+    l: usize,
+    d: usize,
+    out: &mut [f32],
+    probs: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), b * nh * l * d);
+    debug_assert_eq!(probs.len(), b * nh * l * l);
+    if pool.is_scalar() {
+        let (o, p) = scalar::attention_fwd(q, k, v, mask_add, b, nh, l, d);
+        out.copy_from_slice(&o);
+        probs.copy_from_slice(&p);
+        return;
     }
-    pool.for_rows2(&mut out, l * d, &mut probs, l * l, 1, |bh0, outc, probsc| {
+    if b * nh == 0 || l == 0 || d == 0 {
+        return;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    pool.for_rows2(out, l * d, probs, l * l, 1, |bh0, outc, probsc| {
+        outc.fill(0.0);
         let items = probsc.len() / (l * l);
         for idx in 0..items {
             let bh = bh0 + idx;
@@ -675,12 +1213,10 @@ pub fn attention_fwd(
             }
         }
     });
-    (out, probs)
 }
 
 /// VJP of [`attention_fwd`]: given upstream `dout [B, NH, L, D]` and the
 /// forward's `probs`, returns `(dq, dk, dv)` (mask gets no gradient).
-/// Sharded over the `B x NH` blocks with per-shard scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_vjp(
     pool: &Pool,
@@ -697,25 +1233,68 @@ pub fn attention_vjp(
     if pool.is_scalar() {
         return scalar::attention_vjp(dout, q, k, v, probs, b, nh, l, d);
     }
-    let scale = 1.0 / (d as f32).sqrt();
     let mut dq = vec![0.0f32; q.len()];
     let mut dk = vec![0.0f32; k.len()];
     let mut dv = vec![0.0f32; v.len()];
-    if b * nh == 0 || l == 0 || d == 0 {
-        return (dq, dk, dv);
+    let mut scratch = vec![0.0f32; b * nh * l * l];
+    attention_vjp_into(
+        pool, dout, q, k, v, probs, b, nh, l, d, &mut dq, &mut dk, &mut dv, &mut scratch,
+    );
+    (dq, dk, dv)
+}
+
+/// [`attention_vjp`] into caller-provided buffers. `dq`/`dk`/`dv` are
+/// overwritten; `scratch` is a `[B, NH, L, L]` workspace slab (one
+/// `dprobs` block per batch×head item — the softmax backward then runs in
+/// place over it, so no second scratch is needed). Sharded over the
+/// `B x NH` blocks via the pool's 4-buffer fork-join.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_vjp_into(
+    pool: &Pool,
+    dout: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    b: usize,
+    nh: usize,
+    l: usize,
+    d: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    scratch: &mut [f32],
+) {
+    debug_assert_eq!(dq.len(), q.len());
+    debug_assert_eq!(dk.len(), k.len());
+    debug_assert_eq!(dv.len(), v.len());
+    debug_assert_eq!(scratch.len(), b * nh * l * l);
+    if pool.is_scalar() {
+        let (oq, ok, ov) = scalar::attention_vjp(dout, q, k, v, probs, b, nh, l, d);
+        dq.copy_from_slice(&oq);
+        dk.copy_from_slice(&ok);
+        dv.copy_from_slice(&ov);
+        return;
     }
-    pool.for_rows3(
-        &mut dq,
+    let scale = 1.0 / (d as f32).sqrt();
+    if b * nh == 0 || l == 0 || d == 0 {
+        return;
+    }
+    pool.for_rows4(
+        dq,
         l * d,
-        &mut dk,
+        dk,
         l * d,
-        &mut dv,
+        dv,
         l * d,
+        scratch,
+        l * l,
         1,
-        |bh0, dqc, dkc, dvc| {
+        |bh0, dqc, dkc, dvc, spc| {
+            dqc.fill(0.0);
+            dkc.fill(0.0);
+            dvc.fill(0.0);
             let items = dqc.len() / (l * d);
-            let mut dprobs = vec![0.0f32; l * l];
-            let mut dscores = vec![0.0f32; l * l];
             for idx in 0..items {
                 let bh = bh0 + idx;
                 let base = bh * l * d;
@@ -723,6 +1302,7 @@ pub fn attention_vjp(
                 let pr = &probs[pbase..pbase + l * l];
                 let dat = &dout[base..base + l * d];
                 let vs = &v[base..base + l * d];
+                let dprobs = &mut spc[idx * l * l..(idx + 1) * l * l];
                 // dprobs = dout @ v^T ; dv = probs^T @ dout
                 for i in 0..l {
                     let drow = &dat[i * d..(i + 1) * d];
@@ -740,14 +1320,13 @@ pub fn attention_vjp(
                         }
                     }
                 }
-                // softmax backward: ds = p * (dp - sum_j dp * p)
+                // softmax backward, in place: ds = p * (dp - sum_j dp * p)
                 for i in 0..l {
                     let prow = &pr[i * l..(i + 1) * l];
-                    let dprow = &dprobs[i * l..(i + 1) * l];
+                    let dprow = &mut dprobs[i * l..(i + 1) * l];
                     let dp_dot = dot(dprow, prow);
-                    let dsrow = &mut dscores[i * l..(i + 1) * l];
                     for j in 0..l {
-                        dsrow[j] = prow[j] * (dprow[j] - dp_dot);
+                        dprow[j] = prow[j] * (dprow[j] - dp_dot);
                     }
                 }
                 // dq = ds @ k * scale ; dk = ds^T @ q * scale
@@ -758,19 +1337,18 @@ pub fn attention_vjp(
                 for i in 0..l {
                     let dqrow = &mut dqs[i * d..(i + 1) * d];
                     for j in 0..l {
-                        axpy(dqrow, dscores[i * l + j] * scale, &ks[j * d..(j + 1) * d]);
+                        axpy(dqrow, dprobs[i * l + j] * scale, &ks[j * d..(j + 1) * d]);
                     }
                 }
                 for j in 0..l {
                     let dkrow = &mut dks[j * d..(j + 1) * d];
                     for i in 0..l {
-                        axpy(dkrow, dscores[i * l + j] * scale, &qs[i * d..(i + 1) * d]);
+                        axpy(dkrow, dprobs[i * l + j] * scale, &qs[i * d..(i + 1) * d]);
                     }
                 }
             }
         },
     );
-    (dq, dk, dv)
 }
 
 // ------------------------------------------------------------------ probes
@@ -1371,6 +1949,171 @@ mod tests {
             assert!((out[i * d] - 2.0).abs() < 1e-5);
             assert!((out[i * d + 1] - 3.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn packed_matmul_matches_scalar_on_odd_shapes() {
+        let mut rng = Rng::new(71);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (5, 7, 9), (17, 33, 13), (33, 64, 40)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let want = scalar::matmul(&a, &b, m, k, n);
+            let pb = PackedMat::pack_nn(&b, k, n);
+            assert_eq!(pb.unpack(), b, "pack/unpack roundtrip");
+            for threads in [1, 4] {
+                let p = Pool::with_threads(threads);
+                let mut got = vec![7.0f32; m * n];
+                let epi = Epilogue::none();
+                gemm_fused_into(&p, &a, BMat::Packed(&pb), &mut got, m, k, n, epi, None);
+                assert_close(&got, &want, "packed nn");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_nt_matches_plain_and_accumulates() {
+        let mut rng = Rng::new(72);
+        for &(m, k, n) in &[(2, 3, 1), (5, 8, 9), (16, 33, 12)] {
+            let a = randv(&mut rng, m * k);
+            let bt = randv(&mut rng, n * k);
+            let want = scalar::matmul_nt(&a, &bt, m, k, n);
+            let pb = PackedMat::pack_nt(&bt, n, k);
+            assert_eq!(pb.unpack_t(), bt, "pack_nt transpose roundtrip");
+            let p = Pool::with_threads(3);
+            let mut got = vec![0.0f32; m * n];
+            matmul_nt_into(&p, &a, NtMat::Packed(&pb), &mut got, m, k, n, false);
+            assert_close(&got, &want, "packed nt");
+            // accumulate semantics: c += a @ b^T
+            let init = randv(&mut rng, m * n);
+            let mut accd = init.clone();
+            matmul_nt_into(&p, &a, NtMat::Packed(&pb), &mut accd, m, k, n, true);
+            let expect: Vec<f32> = init.iter().zip(&want).map(|(i, w)| i + w).collect();
+            assert_close(&accd, &expect, "packed nt acc");
+            let mut accp = init.clone();
+            matmul_nt_into(&p, &a, NtMat::Plain(&bt), &mut accp, m, k, n, true);
+            assert_close(&accp, &expect, "plain nt acc");
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_sequence() {
+        let mut rng = Rng::new(73);
+        let (m, k, n) = (19, 23, 17);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        let add1 = randv(&mut rng, m * n);
+        let add2 = randv(&mut rng, m * n);
+        // reference: gemm, then residual-add, bias, residual-add, gelu
+        let mut want = scalar::matmul(&a, &b, m, k, n);
+        for (w, r) in want.iter_mut().zip(&add1) {
+            *w = r + *w;
+        }
+        add_bias(&mut want, &bias);
+        for (w, r) in want.iter_mut().zip(&add2) {
+            *w += r;
+        }
+        let want_pre = want.clone();
+        for w in want.iter_mut() {
+            *w = gelu(*w);
+        }
+        let pb = PackedMat::pack_nn(&b, k, n);
+        for threads in [1, 4] {
+            let p = Pool::with_threads(threads);
+            for bm in [BMat::Plain(&b), BMat::Packed(&pb)] {
+                let mut got = vec![0.0f32; m * n];
+                let mut pre = vec![0.0f32; m * n];
+                let epi = Epilogue {
+                    add1: Some(&add1),
+                    bias: Some(&bias),
+                    add2: Some(&add2),
+                    gelu: true,
+                };
+                gemm_fused_into(&p, &a, bm, &mut got, m, k, n, epi, Some(&mut pre));
+                assert_close(&got, &want, "fused gelu output");
+                assert_close(&pre, &want_pre, "pre-activation tap");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_api() {
+        let mut rng = Rng::new(74);
+        let (t, h) = (13, 6);
+        let x = randv(&mut rng, t * h);
+        let g = randv(&mut rng, h);
+        let bi = randv(&mut rng, h);
+        let p = Pool::with_threads(2);
+        let (y, cache) = layernorm_fwd(&p, &x, &g, &bi);
+        let mut y2 = vec![0.0f32; t * h];
+        let mut xh = vec![0.0f32; t * h];
+        let mut inv = vec![0.0f32; t];
+        layernorm_fwd_into(&p, &x, &g, &bi, &mut y2, &mut xh, &mut inv);
+        assert_eq!(y, y2);
+        assert_eq!(cache.xhat, xh);
+        assert_eq!(cache.inv, inv);
+        let dy = randv(&mut rng, t * h);
+        let dx = layernorm_vjp(&p, &dy, &g, &cache, None, None);
+        let mut dx2 = vec![9.0f32; t * h];
+        layernorm_vjp_into(&p, &dy, &g, &xh, &inv, None, None, &mut dx2);
+        assert_eq!(dx, dx2);
+        let gv = gelu_vec(&p, &x);
+        let mut gv2 = vec![0.0f32; t * h];
+        gelu_into(&p, &x, &mut gv2);
+        assert_eq!(gv, gv2);
+        let w = randv(&mut rng, h);
+        let hg = hadamard_vjp(&p, &x, &w, None, None, &dy);
+        let mut dxh = vec![0.0f32; t * h];
+        let mut dw = vec![1.0f32; h];
+        let dwp = Some(&mut dw[..]);
+        hadamard_vjp_acc_into(&p, &x, &w, None, None, &dy, &mut dxh, dwp, None, None, None);
+        assert_eq!(hg.dx, dxh);
+        let expect: Vec<f32> = hg.dw.iter().map(|v| v + 1.0).collect();
+        assert_close(&dw, &expect, "hadamard dw accumulates");
+    }
+
+    #[test]
+    fn nan_propagates_through_packed_paths() {
+        let p = Pool::serial();
+        let (m, k, n) = (2, 3, 10);
+        let a = vec![0.0f32; m * k];
+        let mut b = vec![1.0f32; k * n];
+        b[0] = f32::NAN; // column 0 of B
+        let pb = PackedMat::pack_nn(&b, k, n);
+        let mut c = vec![0.0f32; m * n];
+        gemm_fused_into(&p, &a, BMat::Packed(&pb), &mut c, m, k, n, Epilogue::none(), None);
+        assert!(c[0].is_nan(), "0 * NaN must stay NaN through packed NN");
+        assert!(!c[1].is_nan(), "non-poisoned columns stay finite");
+        let mut bt = vec![1.0f32; n * k];
+        bt[k] = f32::NAN; // row 1 of b^T
+        let pbt = PackedMat::pack_nt(&bt, n, k);
+        let mut c = vec![0.0f32; m * n];
+        matmul_nt_into(&p, &a, NtMat::Packed(&pbt), &mut c, m, k, n, false);
+        assert!(c[1].is_nan(), "0 * NaN must stay NaN through packed NT");
+    }
+
+    #[test]
+    fn attention_vjp_into_matches_wrapper() {
+        let mut rng = Rng::new(75);
+        let (b, nh, l, d) = (2, 2, 5, 3);
+        let q = randv(&mut rng, b * nh * l * d);
+        let k = randv(&mut rng, b * nh * l * d);
+        let v = randv(&mut rng, b * nh * l * d);
+        let mask = vec![0.0f32; b * l];
+        let p = Pool::with_threads(3);
+        let (_, probs) = attention_fwd(&p, &q, &k, &v, &mask, b, nh, l, d);
+        let dy = randv(&mut rng, b * nh * l * d);
+        let (wq, wk, wv) = attention_vjp(&p, &dy, &q, &k, &v, &probs, b, nh, l, d);
+        let mut dq = vec![1.0f32; q.len()];
+        let mut dk = vec![1.0f32; k.len()];
+        let mut dv = vec![1.0f32; v.len()];
+        let mut scratch = vec![1.0f32; b * nh * l * l];
+        attention_vjp_into(
+            &p, &dy, &q, &k, &v, &probs, b, nh, l, d, &mut dq, &mut dk, &mut dv, &mut scratch,
+        );
+        assert_eq!(wq, dq);
+        assert_eq!(wk, dk);
+        assert_eq!(wv, dv);
     }
 
     #[test]

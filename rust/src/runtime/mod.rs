@@ -19,14 +19,17 @@ pub mod manifest;
 pub mod native;
 pub mod pool;
 pub mod tensor;
+pub mod workspace;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
 
 pub use backend::{Backend, DeviceTensor};
 pub use engine::{Engine, EngineStats};
+pub use kernels::PackedMat;
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
 pub use pool::Pool;
 pub use tensor::{IntTensor, Tensor};
+pub use workspace::Workspace;
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;

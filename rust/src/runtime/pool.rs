@@ -108,7 +108,10 @@ impl Pool {
     }
 
     /// Like [`Pool::for_rows`], but each shard also returns a value
-    /// (partial reductions); results come back in chunk order.
+    /// (partial reductions); results come back in chunk order. As of PR 3
+    /// no kernel uses this — parameter reductions went serial for
+    /// thread-count-independent results — but it remains part of the pool
+    /// API for callers that want chunk-ordered partials.
     pub fn map_rows<T, F>(&self, out: &mut [f32], cols: usize, grain: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -227,6 +230,56 @@ impl Pool {
             }
         });
     }
+    /// Four parallel output buffers (attention VJP `dq`/`dk`/`dv` plus its
+    /// per-item `dprobs` scratch slab). All widths must be non-zero.
+    #[allow(clippy::too_many_arguments)]
+    pub fn for_rows4<F>(
+        &self,
+        a: &mut [f32],
+        acols: usize,
+        b: &mut [f32],
+        bcols: usize,
+        c: &mut [f32],
+        ccols: usize,
+        d: &mut [f32],
+        dcols: usize,
+        grain: usize,
+        f: F,
+    ) where
+        F: Fn(usize, &mut [f32], &mut [f32], &mut [f32], &mut [f32]) + Sync,
+    {
+        let items = if acols == 0 { 0 } else { a.len() / acols };
+        debug_assert_eq!(items * bcols, b.len());
+        debug_assert_eq!(items * ccols, c.len());
+        debug_assert_eq!(items * dcols, d.len());
+        let shards = self.shards(items, grain);
+        if shards <= 1 {
+            f(0, a, b, c, d);
+            return;
+        }
+        let chunk = (items + shards - 1) / shards;
+        let fref = &f;
+        thread::scope(move |s| {
+            let ca: Vec<&mut [f32]> = a.chunks_mut(chunk * acols).collect();
+            let cb: Vec<&mut [f32]> = b.chunks_mut(chunk * bcols).collect();
+            let cc: Vec<&mut [f32]> = c.chunks_mut(chunk * ccols).collect();
+            let cd: Vec<&mut [f32]> = d.chunks_mut(chunk * dcols).collect();
+            let nch = ca.len();
+            debug_assert_eq!(nch, cb.len());
+            debug_assert_eq!(nch, cc.len());
+            debug_assert_eq!(nch, cd.len());
+            for (idx, (((ha, hb), hc), hd)) in
+                ca.into_iter().zip(cb).zip(cc).zip(cd).enumerate()
+            {
+                let i0 = idx * chunk;
+                if idx + 1 == nch {
+                    fref(i0, ha, hb, hc, hd);
+                } else {
+                    s.spawn(move || fref(i0, ha, hb, hc, hd));
+                }
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +367,44 @@ mod tests {
             }
         });
         assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn for_rows4_covers_items_once() {
+        for threads in [1, 3] {
+            let pool = Pool::with_threads(threads);
+            let items = 7;
+            let (wa, wb, wc, wd) = (2, 3, 1, 4);
+            let mut a = vec![0.0f32; items * wa];
+            let mut b = vec![0.0f32; items * wb];
+            let mut c = vec![0.0f32; items * wc];
+            let mut d = vec![0.0f32; items * wd];
+            pool.for_rows4(
+                &mut a,
+                wa,
+                &mut b,
+                wb,
+                &mut c,
+                wc,
+                &mut d,
+                wd,
+                1,
+                |i0, ca, cb, cc, cd| {
+                    assert_eq!(ca.len() / wa, cb.len() / wb);
+                    assert_eq!(cc.len() / wc, cd.len() / wd);
+                    for (r, item) in cc.chunks_exact_mut(wc).enumerate() {
+                        item[0] += (i0 + r) as f32 + 1.0;
+                    }
+                    for v in cd.iter_mut() {
+                        *v += 1.0;
+                    }
+                },
+            );
+            for (r, item) in c.chunks_exact(wc).enumerate() {
+                assert_eq!(item[0], r as f32 + 1.0, "threads={threads} item={r}");
+            }
+            assert!(d.iter().all(|&v| v == 1.0));
+        }
     }
 
     #[test]

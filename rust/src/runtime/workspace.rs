@@ -1,0 +1,187 @@
+//! `runtime::workspace`: a size-keyed buffer arena for the native hot path.
+//!
+//! The train/eval step runs the same artifact with the same geometry every
+//! step, so every intermediate buffer the kernels need has a stable length.
+//! A [`Workspace`] recycles those buffers across steps: `take(len)` pops a
+//! previously-returned buffer of exactly that length (zero-filled, so
+//! accumulating kernels can rely on a clean slate) or allocates a fresh one
+//! on a miss; `give(buf)` returns a buffer to its length bucket when the
+//! caller is done with it.
+//!
+//! Steady state (step >= 2 of a fixed-geometry loop) is allocation-free in
+//! kernel code: every `take` is a hit, and the hit/miss counters make that
+//! property testable (`tests/workspace_alloc.rs` additionally pins it with
+//! a counting global allocator). Buckets are keyed by the buffer's length —
+//! `vec![0.0; len]` allocates exactly `len`, and the native backend never
+//! resizes a workspace buffer, so the round trip is stable.
+//!
+//! The arena is deliberately not thread-safe: only the orchestrating thread
+//! takes and gives buffers; pool workers receive pre-partitioned `&mut`
+//! chunks of them. `NativeBackend` owns one behind its state mutex.
+
+use std::collections::HashMap;
+
+/// Per-size cap on retained buffers: steady-state flows balance take/give,
+/// so anything beyond a small backlog is a leak we'd rather return to the
+/// allocator than hoard.
+const MAX_PER_BUCKET: usize = 32;
+
+/// A size-keyed free list of `Vec<f32>` buffers with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    buckets: HashMap<usize, Vec<Vec<f32>>>,
+    hits: u64,
+    misses: u64,
+    held_bytes: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` floats — recycled when a
+    /// same-length buffer was previously [`Workspace::give`]n back.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_dirty(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Like [`Workspace::take`] but without the zero fill: a recycled
+    /// buffer keeps its stale contents. Only for consumers that fully
+    /// overwrite every element (GEMM outputs, split/merge copies,
+    /// attention probs/scratch slabs) — accumulating consumers must use
+    /// [`Workspace::take`]. Skipping the memset matters on the large
+    /// `[T, F]` / `[B, NH, L, L]` hot-path buffers, which would otherwise
+    /// be swept twice per step.
+    pub fn take_dirty(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        if let Some(bucket) = self.buckets.get_mut(&len) {
+            if let Some(mut v) = bucket.pop() {
+                self.hits += 1;
+                self.held_bytes -= v.capacity() * 4;
+                debug_assert_eq!(v.len(), len);
+                v.resize(len, 0.0);
+                return v;
+            }
+        }
+        self.misses += 1;
+        vec![0.0f32; len]
+    }
+
+    /// Return a buffer for reuse. Buffers keep their length bucket; a full
+    /// bucket drops the buffer back to the allocator.
+    pub fn give(&mut self, v: Vec<f32>) {
+        let len = v.len();
+        if len == 0 {
+            return;
+        }
+        let bucket = self.buckets.entry(len).or_default();
+        if bucket.len() >= MAX_PER_BUCKET {
+            return;
+        }
+        self.held_bytes += v.capacity() * 4;
+        bucket.push(v);
+    }
+
+    /// Number of `take` calls served from the free list.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Number of `take` calls that had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Bytes currently resident in the free list.
+    pub fn held_bytes(&self) -> usize {
+        self.held_bytes
+    }
+
+    /// Drop every retained buffer (checkpoint boundaries, tests).
+    pub fn clear(&mut self) {
+        self.buckets.clear();
+        self.held_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_roundtrip_reuses_allocation() {
+        let mut ws = Workspace::new();
+        let a = ws.take(128);
+        assert_eq!(ws.misses(), 1);
+        assert_eq!(a.len(), 128);
+        let ptr = a.as_ptr() as usize;
+        ws.give(a);
+        assert_eq!(ws.held_bytes(), 128 * 4);
+        let b = ws.take(128);
+        assert_eq!(ws.hits(), 1, "second take of the same size must be a hit");
+        assert_eq!(b.as_ptr() as usize, ptr, "the very same allocation comes back");
+        assert!(b.iter().all(|&x| x == 0.0), "recycled buffers are zeroed");
+    }
+
+    #[test]
+    fn distinct_sizes_use_distinct_buckets() {
+        let mut ws = Workspace::new();
+        ws.give(vec![1.0; 8]);
+        ws.give(vec![2.0; 16]);
+        let a = ws.take(16);
+        assert_eq!(a.len(), 16);
+        assert_eq!(ws.hits(), 1);
+        let b = ws.take(9);
+        assert_eq!(b.len(), 9);
+        assert_eq!(ws.misses(), 1, "no 9-float buffer was ever given");
+    }
+
+    #[test]
+    fn dirty_buffers_come_back_zeroed() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(4);
+        a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        ws.give(a);
+        assert_eq!(ws.take(4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn take_dirty_skips_the_memset() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_dirty(4);
+        a.copy_from_slice(&[5.0, 6.0, 7.0, 8.0]);
+        let ptr = a.as_ptr() as usize;
+        ws.give(a);
+        let b = ws.take_dirty(4);
+        assert_eq!(b.as_ptr() as usize, ptr);
+        assert_eq!(b, vec![5.0, 6.0, 7.0, 8.0], "dirty take keeps stale contents");
+        ws.give(b);
+        assert_eq!(ws.take(4), vec![0.0; 4], "zeroing take still zeroes");
+    }
+
+    #[test]
+    fn zero_len_is_a_noop() {
+        let mut ws = Workspace::new();
+        let v = ws.take(0);
+        assert!(v.is_empty());
+        ws.give(v);
+        assert_eq!(ws.hits() + ws.misses(), 0);
+        assert_eq!(ws.held_bytes(), 0);
+    }
+
+    #[test]
+    fn bucket_cap_bounds_retention() {
+        let mut ws = Workspace::new();
+        for _ in 0..MAX_PER_BUCKET + 5 {
+            ws.give(vec![0.0; 8]);
+        }
+        assert_eq!(ws.held_bytes(), MAX_PER_BUCKET * 8 * 4);
+        ws.clear();
+        assert_eq!(ws.held_bytes(), 0);
+    }
+}

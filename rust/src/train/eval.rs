@@ -59,9 +59,9 @@ pub fn evaluate(
 
     for b in BatchIter::sequential(ds, batch, seq) {
         let batch_bufs = vec![
-            engine.upload_int(&IntTensor::new(vec![batch, seq], b.tokens.clone())?)?,
-            engine.upload_int(&IntTensor::new(vec![batch, seq], b.type_ids.clone())?)?,
-            engine.upload(&Tensor::new(vec![batch, seq], b.attn_mask.clone())?)?,
+            engine.upload_int_owned(IntTensor::new(vec![batch, seq], b.tokens.clone())?)?,
+            engine.upload_int_owned(IntTensor::new(vec![batch, seq], b.type_ids.clone())?)?,
+            engine.upload_owned(Tensor::new(vec![batch, seq], b.attn_mask.clone())?)?,
         ];
         let mut inputs: Vec<&DeviceTensor> = Vec::new();
         inputs.extend(param_bufs.iter());

@@ -7,7 +7,8 @@
 //! is ~0.03% of the parameter bytes, which is what keeps its step cost
 //! near the pure forward cost (EXPERIMENTS.md §Perf). The same contract
 //! holds for both backends: device buffers for XLA, host tensors for the
-//! native executor (where the re-upload is a cheap clone).
+//! native executor. Batch tensors go through `upload_owned`, so the
+//! native backend wraps them without a second copy.
 
 use anyhow::{bail, Context, Result};
 
@@ -179,15 +180,15 @@ impl<'e> Session<'e> {
         let s = batch.seq;
         let bufs = vec![
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, 3], batch.labels_onehot.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, 3], batch.labels_onehot.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![3], class_mask.to_vec())?)?,
+                .upload_owned(Tensor::new(vec![3], class_mask.to_vec())?)?,
         ];
         self.step_inner(bufs)
     }
@@ -198,13 +199,13 @@ impl<'e> Session<'e> {
         let s = batch.seq;
         let bufs = vec![
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b], batch.labels_f32.clone())?)?,
+                .upload_owned(Tensor::new(vec![b], batch.labels_f32.clone())?)?,
         ];
         self.step_inner(bufs)
     }
@@ -213,15 +214,15 @@ impl<'e> Session<'e> {
     pub fn step_mlm(&mut self, batch: &MlmBatch, b: usize, s: usize) -> Result<f32> {
         let bufs = vec![
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.labels.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.labels.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, s], batch.loss_mask.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, s], batch.loss_mask.clone())?)?,
         ];
         self.step_inner(bufs)
     }
@@ -238,15 +239,15 @@ impl<'e> Session<'e> {
         let s = batch.seq;
         let batch_bufs = vec![
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.tokens.clone())?)?,
             self.engine
-                .upload_int(&IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
+                .upload_int_owned(IntTensor::new(vec![b, s], batch.type_ids.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, s], batch.attn_mask.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![b, 3], batch.labels_onehot.clone())?)?,
+                .upload_owned(Tensor::new(vec![b, 3], batch.labels_onehot.clone())?)?,
             self.engine
-                .upload(&Tensor::new(vec![3], class_mask.to_vec())?)?,
+                .upload_owned(Tensor::new(vec![3], class_mask.to_vec())?)?,
         ];
         let mut inputs: Vec<&DeviceTensor> = Vec::new();
         inputs.extend(self.bufs.iter());

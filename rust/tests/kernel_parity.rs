@@ -199,6 +199,153 @@ fn rows_equal_one_and_single_thread_match_many_threads() {
     }
 }
 
+// ------------------------------------------------- packed + fused kernels
+
+#[test]
+fn packed_nn_parity_across_odd_shapes() {
+    let mut rng = Rng::new(0x90_10);
+    for &m in &DIMS {
+        for &kk in &DIMS {
+            for &n in &DIMS {
+                let a = randv(&mut rng, m * kk);
+                let b = randv(&mut rng, kk * n);
+                let want = scalar::matmul(&a, &b, m, kk, n);
+                let pb = k::PackedMat::pack_nn(&b, kk, n);
+                assert_eq!(pb.unpack(), b, "roundtrip {kk}x{n}");
+                for pool in pools() {
+                    let mut got = vec![-3.0f32; m * n];
+                    k::gemm_fused_into(
+                        &pool,
+                        &a,
+                        k::BMat::Packed(&pb),
+                        &mut got,
+                        m,
+                        kk,
+                        n,
+                        k::Epilogue::none(),
+                        None,
+                    );
+                    assert_close(&got, &want, &format!("packed nn {m}x{kk}x{n}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_nt_parity_across_odd_shapes() {
+    let mut rng = Rng::new(0x90_11);
+    for &m in &DIMS {
+        for &kk in &DIMS {
+            for &n in &DIMS {
+                let a = randv(&mut rng, m * kk);
+                let bt = randv(&mut rng, n * kk);
+                let want = scalar::matmul_nt(&a, &bt, m, kk, n);
+                let pb = k::PackedMat::pack_nt(&bt, n, kk);
+                for pool in pools() {
+                    let mut got = vec![5.0f32; m * n];
+                    k::matmul_nt_into(&pool, &a, k::NtMat::Packed(&pb), &mut got, m, kk, n, false);
+                    assert_close(&got, &want, &format!("packed nt {m}x{kk}x{n}"));
+                    // accumulate semantics on both operand forms
+                    let init = randv(&mut rng, m * n);
+                    let expect: Vec<f32> = init.iter().zip(&want).map(|(i, w)| i + w).collect();
+                    let mut acc = init.clone();
+                    k::matmul_nt_into(&pool, &a, k::NtMat::Packed(&pb), &mut acc, m, kk, n, true);
+                    assert_close(&acc, &expect, &format!("packed nt acc {m}x{kk}x{n}"));
+                    let mut acc = init.clone();
+                    k::matmul_nt_into(&pool, &a, k::NtMat::Plain(&bt), &mut acc, m, kk, n, true);
+                    assert_close(&acc, &expect, &format!("plain nt acc {m}x{kk}x{n}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_bias_gelu_epilogue_matches_separate_kernels() {
+    let mut rng = Rng::new(0x90_12);
+    for &(m, kk, n) in &[(1, 3, 5), (7, 16, 9), (33, 20, 24)] {
+        let a = randv(&mut rng, m * kk);
+        let b = randv(&mut rng, kk * n);
+        let bias = randv(&mut rng, n);
+        let res = randv(&mut rng, m * n);
+        // reference: separate GEMM, bias add, residual add, gelu
+        let mut pre_want = scalar::matmul(&a, &b, m, kk, n);
+        for (w, r) in pre_want.iter_mut().zip(&res) {
+            *w = r + *w;
+        }
+        k::add_bias(&mut pre_want, &bias);
+        let want: Vec<f32> = pre_want.iter().map(|&v| k::gelu(v)).collect();
+        let pb = k::PackedMat::pack_nn(&b, kk, n);
+        for pool in pools() {
+            for bm in [k::BMat::Plain(&b), k::BMat::Packed(&pb)] {
+                let mut got = vec![0.0f32; m * n];
+                let mut pre = vec![0.0f32; m * n];
+                let epi =
+                    k::Epilogue { add1: Some(&res), bias: Some(&bias), add2: None, gelu: true };
+                k::gemm_fused_into(&pool, &a, bm, &mut got, m, kk, n, epi, Some(&mut pre));
+                assert_close(&got, &want, &format!("fused {m}x{kk}x{n}"));
+                assert_close(&pre, &pre_want, &format!("pre tap {m}x{kk}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_kernels_thread_counts_agree() {
+    let mut rng = Rng::new(0x90_13);
+    let (m, kk, n) = (37, 49, 27);
+    let a = randv(&mut rng, m * kk);
+    let b = randv(&mut rng, kk * n);
+    let pb = k::PackedMat::pack_nn(&b, kk, n);
+    let mut c1 = vec![0.0f32; m * n];
+    let mut c8 = vec![0.0f32; m * n];
+    k::gemm_fused_into(
+        &Pool::serial(),
+        &a,
+        k::BMat::Packed(&pb),
+        &mut c1,
+        m,
+        kk,
+        n,
+        k::Epilogue::none(),
+        None,
+    );
+    k::gemm_fused_into(
+        &Pool::with_threads(8),
+        &a,
+        k::BMat::Packed(&pb),
+        &mut c8,
+        m,
+        kk,
+        n,
+        k::Epilogue::none(),
+        None,
+    );
+    assert_eq!(c1, c8, "row sharding must be thread-count independent");
+}
+
+#[test]
+fn nan_propagates_through_packed_kernels() {
+    let p = Pool::serial();
+    let (m, kk, n) = (3, 4, 11); // n exercises a padded final panel
+    let a = vec![0.0f32; m * kk];
+    let mut b = vec![1.0f32; kk * n];
+    b[2] = f32::NAN; // column 2, row 0 of B
+    let pb = k::PackedMat::pack_nn(&b, kk, n);
+    let mut c = vec![0.0f32; m * n];
+    k::gemm_fused_into(&p, &a, k::BMat::Packed(&pb), &mut c, m, kk, n, k::Epilogue::none(), None);
+    assert!(c[2].is_nan(), "0 * NaN must surface through packed NN");
+    assert!(!c[3].is_nan(), "padding lanes must not leak NaN into real columns");
+    let mut bt = vec![1.0f32; n * kk];
+    bt[(n - 1) * kk] = f32::NAN; // last b^T row: the padded panel's real lane
+    let pbt = k::PackedMat::pack_nt(&bt, n, kk);
+    let mut c = vec![0.0f32; m * n];
+    k::matmul_nt_into(&p, &a, k::NtMat::Packed(&pbt), &mut c, m, kk, n, false);
+    assert!(c[n - 1].is_nan(), "packed NT must propagate NaN in the tail panel");
+    assert!(!c[0].is_nan());
+}
+
 // ------------------------------------------------------- NaN regressions
 
 #[test]

@@ -1,0 +1,179 @@
+//! Zero-allocation steady state, pinned by a counting global allocator.
+//!
+//! A train-step-shaped kernel sequence (fused GEMM forward, LayerNorm,
+//! Hadamard adapter, attention, then the backward kernels with in-place NT
+//! accumulation) runs entirely on `_into` kernels over a `Workspace`
+//! arena. Iteration 1 warms the arena (misses allocate); iterations 2..N
+//! must perform **zero** heap allocations — every `take` is a hit and no
+//! kernel allocates internally. This is the property that makes the
+//! backend's steady-state step allocation-free (`runtime::native` threads
+//! the same arena through its full forward/backward; see
+//! `native::tests::arena_reuse_steady_state` for the artifact-level
+//! counterpart on miss counters).
+//!
+//! This file intentionally holds a single test: the counting allocator is
+//! process-global, and a sibling test running on another thread would
+//! pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use hadapt::runtime::kernels as k;
+use hadapt::runtime::{Pool, Workspace};
+use hadapt::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static TRACKING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * 0.5).collect()
+}
+
+#[test]
+fn kernel_steady_state_allocates_nothing() {
+    // Geometry of a miniature layer; serial pool so no worker threads
+    // (thread spawns are pool infrastructure, not kernel code — the
+    // threaded path reuses the same arena buffers, pinned by the
+    // backend-level miss-counter test).
+    let (b, l, nh) = (2usize, 8usize, 2usize);
+    let h = 16usize;
+    let hd = h / nh;
+    let t = b * l;
+    let pool = Pool::serial();
+    let mut rng = Rng::new(0xA110C);
+
+    // All model-side operands exist before the loop, like resident params.
+    let x = randv(&mut rng, t * h);
+    let wmat = randv(&mut rng, h * h);
+    let pw_nn = k::PackedMat::pack_nn(&wmat, h, h);
+    let pw_nt = k::PackedMat::pack_nt(&wmat, h, h);
+    let bias = randv(&mut rng, h);
+    let gain = randv(&mut rng, h);
+    let beta = randv(&mut rng, h);
+    let hw = randv(&mut rng, h);
+    let hb = randv(&mut rng, h);
+    let mask_add = vec![0.0f32; b * l];
+
+    let mut ws = Workspace::new();
+    let mut misses_after_warm = 0u64;
+    let mut sink = 0.0f32;
+
+    for iter in 0..4 {
+        if iter == 1 {
+            misses_after_warm = ws.misses();
+            assert!(misses_after_warm > 0, "warm-up step must populate the arena");
+            ALLOCS.store(0, Ordering::SeqCst);
+            TRACKING.store(true, Ordering::SeqCst);
+        }
+
+        // ---- forward: fused GEMM -> LN -> hadamard -> attention ----
+        let mut y = ws.take(t * h);
+        let mut pre = ws.take(t * h);
+        let epi = k::Epilogue { add1: Some(&x), bias: Some(&bias), add2: None, gelu: true };
+        let pw = k::BMat::Packed(&pw_nn);
+        k::gemm_fused_into(&pool, &x, pw, &mut y, t, h, h, epi, Some(&mut pre));
+        let mut ln_y = ws.take(t * h);
+        let mut xh = ws.take(t * h);
+        let mut inv = ws.take(t);
+        k::layernorm_fwd_into(&pool, &y, &gain, &beta, &mut ln_y, &mut xh, &mut inv);
+        let mut had = ws.take(t * h);
+        k::hadamard_fwd_into(&ln_y, &hw, &hb, None, None, &mut had);
+        let mut att = ws.take(t * h);
+        let mut probs = ws.take(b * nh * l * l);
+        k::attention_fwd_into(
+            &pool, &had, &ln_y, &y, &mask_add, b, nh, l, hd, &mut att, &mut probs,
+        );
+
+        // ---- backward: attention VJP -> hadamard VJP -> LN VJP -> dgelu
+        //      -> NT-accumulated dx and TN-accumulated dW ----
+        let mut dq = ws.take(t * h);
+        let mut dk = ws.take(t * h);
+        let mut dv = ws.take(t * h);
+        let mut scratch = ws.take(b * nh * l * l);
+        k::attention_vjp_into(
+            &pool, &att, &had, &ln_y, &y, &probs, b, nh, l, hd, &mut dq, &mut dk, &mut dv,
+            &mut scratch,
+        );
+        let mut dx = ws.take(t * h);
+        let mut dw = ws.take(h);
+        let mut db = ws.take(h);
+        k::hadamard_vjp_acc_into(
+            &pool,
+            &ln_y,
+            &hw,
+            None,
+            None,
+            &dq,
+            &mut dx,
+            Some(&mut dw),
+            Some(&mut db),
+            None,
+            None,
+        );
+        let mut dln = ws.take(t * h);
+        k::layernorm_vjp_into(&pool, &dx, &gain, &xh, &inv, None, None, &mut dln);
+        let mut dg = ws.take(t * h);
+        k::dgelu_mul_into(&pool, &dln, &pre, &mut dg);
+        k::matmul_nt_into(&pool, &dg, k::NtMat::Packed(&pw_nt), &mut dx, t, h, h, true);
+        let mut dwacc = ws.take(h * h);
+        k::matmul_tn_acc(&pool, &x, &dg, &mut dwacc, t, h, h);
+
+        sink += dx[0] + dwacc[0] + dv[0] + dk[0] + dw[0] + db[0];
+
+        for buf in [
+            y, pre, ln_y, xh, had, att, dq, dk, dv, scratch, dx, dln, dg, dwacc,
+        ] {
+            ws.give(buf);
+        }
+        ws.give(inv);
+        ws.give(dw);
+        ws.give(db);
+        ws.give(probs);
+    }
+    TRACKING.store(false, Ordering::SeqCst);
+
+    std::hint::black_box(sink);
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "steps 2..4 must perform zero heap allocations in kernel code"
+    );
+    assert_eq!(
+        ws.misses(),
+        misses_after_warm,
+        "steps 2..4 must be served entirely from the arena"
+    );
+    assert!(ws.hits() > 0);
+}

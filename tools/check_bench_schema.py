@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Validate the schema of BENCH_kernels.json (committed or bench-written).
+
+The file is a contract between `cargo bench --bench bench_runtime` (the
+writer), the README's "how to read this" section, and anyone tracking the
+kernel-perf trajectory in-tree. Rows may be populated from a real run
+(provenance=measured) or projected (see the file's provenance note), but
+the shape must always match what the bench writes.
+
+Usage: python3 tools/check_bench_schema.py BENCH_kernels.json
+"""
+
+import json
+import sys
+
+FWD_KEYS = {
+    "scalar_ms",
+    "blocked_ms",
+    "parallel_ms",
+    "packed_ms",
+    "speedup_blocked",
+    "speedup_parallel",
+    "speedup_packed",
+    "packed_vs_parallel",
+}
+STEP_KEYS = {
+    "scalar_ms",
+    "parallel_ms",
+    "packed_ms",
+    "speedup_parallel",
+    "speedup_packed",
+    "packed_vs_parallel",
+    "arena_steady_hits",
+    "arena_steady_misses",
+    "packed_weights",
+}
+MM_KEYS = {
+    "scalar_ms",
+    "blocked_ms",
+    "parallel_ms",
+    "packed_ms",
+    "pack_once_ms",
+    "bias_gelu_separate_ms",
+    "bias_gelu_fused_ms",
+    "speedup_blocked",
+    "speedup_parallel",
+    "speedup_packed",
+    "fused_vs_separate",
+}
+
+
+def fail(msg):
+    print(f"BENCH_kernels.json schema error: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_rows(section, rows, required):
+    if not isinstance(rows, dict):
+        fail(f"'{section}' must be an object")
+    for name, row in rows.items():
+        if not isinstance(row, dict):
+            fail(f"{section}.{name} must be an object")
+        missing = required - set(row)
+        if missing:
+            fail(f"{section}.{name} missing keys: {sorted(missing)}")
+        for key in required:
+            if not isinstance(row[key], (int, float)):
+                fail(f"{section}.{name}.{key} must be a number")
+            if key.endswith("_ms") and row[key] < 0:
+                fail(f"{section}.{name}.{key} must be non-negative")
+
+
+def main(path):
+    with open(path) as f:
+        data = json.load(f)
+    for key in ("note", "provenance", "batch", "seq_len", "forward", "train_step", "matmul"):
+        if key not in data:
+            fail(f"missing top-level key '{key}'")
+    check_rows("forward", data["forward"], FWD_KEYS)
+    check_rows("train_step", data["train_step"], STEP_KEYS)
+    check_rows("matmul", data["matmul"], MM_KEYS)
+    # steady-state misses are the zero-allocation contract
+    for name, row in data["train_step"].items():
+        if row["arena_steady_misses"] != 0:
+            fail(f"train_step.{name}.arena_steady_misses must be 0 (zero-alloc steady state)")
+    n_rows = sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
+    print(f"BENCH_kernels.json schema OK ({n_rows} rows, provenance: {str(data['provenance'])[:40]}...)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json")
