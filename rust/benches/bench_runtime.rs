@@ -5,6 +5,14 @@
 //! (including packed panels and the fused bias+GELU epilogue) at
 //! tiny/base/large shapes.
 //!
+//! PR 4 adds dispatch-latency honesty: the `pool` section measures the
+//! empty-job round trip on the persistent parked-worker pool against a
+//! reconstruction of PR 2's per-call `thread::scope` spawning, `matmul`
+//! rows carry `scoped_ms`/`persistent_ms` for the same blocked kernel
+//! under both dispatch disciplines, and `train_step` rows record the
+//! pool's steady-state spawn (must be 0) and job counters next to the
+//! arena counters.
+//!
 //! Results are also recorded to `BENCH_kernels.json` at the repo root so
 //! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
 //! smoke run (CI uses this; only the tiny model, few iterations).
@@ -34,6 +42,49 @@ fn engine_with(pool: Pool, packing: bool) -> Engine {
 
 fn ms(j: &mut Json, key: &str, v: f64) {
     j.set(key, Json::num((v * 1000.0).round() / 1000.0));
+}
+
+/// PR 2's dispatch discipline, reconstructed for the bench: shard the
+/// blocked NN GEMM over row chunks with per-call scoped spawns (the
+/// kernel math is identical to `k::matmul_into` on a serial pool — only
+/// the fork-join mechanism differs, which is exactly what the
+/// `scoped_ms` / `persistent_ms` comparison isolates).
+#[allow(clippy::too_many_arguments)]
+fn scoped_matmul(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k_: usize,
+    n: usize,
+) {
+    let serial = Pool::serial();
+    let shards = threads.min(m.max(1)).max(1);
+    let chunk = (m + shards - 1) / shards;
+    std::thread::scope(|s| {
+        let mut rest = &mut c[..];
+        let mut row0 = 0usize;
+        let mut parts = Vec::new();
+        while !rest.is_empty() {
+            let take = (chunk * n).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            parts.push((row0, head));
+            row0 += take / n;
+            rest = tail;
+        }
+        let nch = parts.len();
+        let serial = &serial;
+        for (i, (r0, cc)) in parts.into_iter().enumerate() {
+            let rows = cc.len() / n;
+            let aslice = &a[r0 * k_..(r0 + rows) * k_];
+            if i + 1 == nch {
+                k::matmul_into(serial, aslice, b, cc, rows, k_, n);
+            } else {
+                s.spawn(move || k::matmul_into(serial, aslice, b, cc, rows, k_, n));
+            }
+        }
+    });
 }
 
 fn main() {
@@ -132,6 +183,7 @@ fn main() {
         let cm = class_mask(2);
         let mut step_ms = Vec::new();
         let mut arena = (0u64, 0u64, 0u64);
+        let mut pool_steady = (0u64, 0.0f64);
         for (tag, engine) in
             [("scalar", &modes[0].1), ("parallel", &modes[2].1), ("packed", &modes[3].1)]
         {
@@ -154,16 +206,25 @@ fn main() {
             step_ms.push(s.mean_ms());
             if tag == "packed" {
                 let (h0, m0) = engine.arena_stats();
+                let p0 = engine.pool_stats();
                 session.step_cls(&bt, &cm).unwrap();
                 session.step_cls(&bt, &cm).unwrap();
                 let (h1, m1) = engine.arena_stats();
+                let p1 = engine.pool_stats();
                 arena = (h1 - h0, m1 - m0, engine.pack_stats().0);
+                pool_steady = (
+                    p1.threads_spawned - p0.threads_spawned,
+                    (p1.jobs_dispatched - p0.jobs_dispatched) as f64 / 2.0,
+                );
                 println!(
-                    "bench {:<44} hits={} misses={} packed_weights={}",
+                    "bench {:<44} hits={} misses={} packed_weights={} \
+                     pool_spawns={} pool_jobs_per_step={:.1}",
                     format!("train_step_arena/{model} (2 steady steps)"),
                     arena.0,
                     arena.1,
-                    arena.2
+                    arena.2,
+                    pool_steady.0,
+                    pool_steady.1
                 );
             }
         }
@@ -183,6 +244,8 @@ fn main() {
         sj.set("arena_steady_hits", Json::num(arena.0 as f64));
         sj.set("arena_steady_misses", Json::num(arena.1 as f64));
         sj.set("packed_weights", Json::num(arena.2 as f64));
+        sj.set("pool_steady_spawns", Json::num(pool_steady.0 as f64));
+        sj.set("pool_steady_jobs", Json::num((pool_steady.1 * 10.0).round() / 10.0));
         step_json.set(model, sj);
 
         // upload overhead (largest tensor) on the packed engine
@@ -222,6 +285,18 @@ fn main() {
         let s_bl = b.run(&format!("matmul/{tag}/blocked"), || k::matmul(&p1, &a, &bb, m, kk, n));
         let pn = Pool::auto();
         let s_pa = b.run(&format!("matmul/{tag}/parallel"), || k::matmul(&pn, &a, &bb, m, kk, n));
+        // same blocked kernel under both dispatch disciplines: per-call
+        // scoped spawns (PR 2) vs the persistent parked workers. Both
+        // sides write into a preallocated buffer via matmul_into, so the
+        // two columns differ ONLY in the fork-join mechanism.
+        let mut c_sc = vec![0.0f32; m * n];
+        let s_sco = b.run(&format!("matmul/{tag}/scoped_dispatch"), || {
+            scoped_matmul(threads, &a, &bb, &mut c_sc, m, kk, n)
+        });
+        let mut c_pe = vec![0.0f32; m * n];
+        let s_pe = b.run(&format!("matmul/{tag}/persistent_dispatch"), || {
+            k::matmul_into(&pn, &a, &bb, &mut c_pe, m, kk, n)
+        });
         let t_pack = std::time::Instant::now();
         let pb = k::PackedMat::pack_nn(&bb, kk, n);
         let pack_once_ms = t_pack.elapsed().as_secs_f64() * 1e3;
@@ -251,18 +326,21 @@ fn main() {
         });
         println!(
             "bench {:<44} blocked={:.2}x parallel={:.2}x packed={:.2}x fused={:.2}x \
-             (pack once: {:.3}ms)",
+             dispatch={:.2}x (pack once: {:.3}ms)",
             format!("matmul_speedup/{tag}"),
             s_sc.mean_ms() / s_bl.mean_ms(),
             s_sc.mean_ms() / s_pa.mean_ms(),
             s_sc.mean_ms() / s_pk.mean_ms(),
             s_sep.mean_ms() / s_fu.mean_ms(),
+            s_sco.mean_ms() / s_pe.mean_ms(),
             pack_once_ms
         );
         let mut mj = Json::obj();
         ms(&mut mj, "scalar_ms", s_sc.mean_ms());
         ms(&mut mj, "blocked_ms", s_bl.mean_ms());
         ms(&mut mj, "parallel_ms", s_pa.mean_ms());
+        ms(&mut mj, "scoped_ms", s_sco.mean_ms());
+        ms(&mut mj, "persistent_ms", s_pe.mean_ms());
         ms(&mut mj, "packed_ms", s_pk.mean_ms());
         ms(&mut mj, "pack_once_ms", pack_once_ms);
         ms(&mut mj, "bias_gelu_separate_ms", s_sep.mean_ms());
@@ -271,7 +349,88 @@ fn main() {
         ms(&mut mj, "speedup_parallel", s_sc.mean_ms() / s_pa.mean_ms());
         ms(&mut mj, "speedup_packed", s_sc.mean_ms() / s_pk.mean_ms());
         ms(&mut mj, "fused_vs_separate", s_sep.mean_ms() / s_fu.mean_ms());
+        ms(&mut mj, "dispatch_speedup", s_sco.mean_ms() / s_pe.mean_ms());
         mm_json.set(tag, mj);
+    }
+
+    // Dispatch-latency micro-rows: what one fork-join costs on the
+    // persistent pool (publish, condvar wake, latch) vs PR 2's per-call
+    // scoped spawn/join of threads-1 OS threads, at zero kernel work —
+    // plus spawn accounting across real train steps.
+    let mut pool_json = Json::obj();
+    {
+        let pp = Pool::with_threads(threads.max(2));
+        let rows = pp.threads();
+        let mut out = vec![0.0f32; rows];
+        // warm: first dispatch spawns the persistent workers
+        pp.for_rows(&mut out, 1, 1, |_, c| {
+            std::hint::black_box(c);
+        });
+        let s_per = b.run("pool/empty_job/persistent", || {
+            pp.for_rows(&mut out, 1, 1, |_, c| {
+                std::hint::black_box(c);
+            })
+        });
+        let s_sco = b.run("pool/empty_job/scoped", || {
+            std::thread::scope(|s| {
+                for _ in 0..rows - 1 {
+                    s.spawn(|| std::hint::black_box(0u32));
+                }
+            })
+        });
+        let per_ns = s_per.mean_ms() * 1e6;
+        let sco_ns = s_sco.mean_ms() * 1e6;
+
+        // spawn accounting on a fresh packed engine: the first tiny train
+        // step spawns the workers; subsequent steps spawn nothing.
+        let engine = engine_with(Pool::auto(), true);
+        let info = engine.manifest().model("tiny").unwrap().clone();
+        let store = ParamStore::init(&info, 7);
+        let mask = FreezeMask::from_names(&info, &info.group("hadamard").unwrap().to_vec());
+        let ds = generate(task_info("sst2").unwrap(), 1, "dev", batch);
+        let idx: Vec<usize> = (0..batch).collect();
+        let bt = make_batch(&ds, &idx, batch, seq);
+        let cm = class_mask(2);
+        let mut session = Session::new(
+            &engine,
+            &Manifest::train_name("cls", "hadamard", "tiny"),
+            store,
+            mask,
+            LrSchedule::constant(1e-3),
+        )
+        .unwrap();
+        session.step_cls(&bt, &cm).unwrap();
+        let p0 = engine.pool_stats();
+        let steady_steps = 4usize;
+        for _ in 0..steady_steps {
+            session.step_cls(&bt, &cm).unwrap();
+        }
+        let p1 = engine.pool_stats();
+        let jobs_per_step =
+            (p1.jobs_dispatched - p0.jobs_dispatched) as f64 / steady_steps as f64;
+        let wakeups_per_step = (p1.wakeups - p0.wakeups) as f64 / steady_steps as f64;
+        let steady_spawns = p1.threads_spawned - p0.threads_spawned;
+        // what PR 2 paid for the same steps: one spawn per non-final
+        // chunk of every dispatched job, i.e. up to threads-1 per job.
+        let scoped_est = jobs_per_step * (threads.saturating_sub(1)) as f64;
+        println!(
+            "bench {:<44} dispatch_ns={per_ns:.0} scoped_ns={sco_ns:.0} \
+             jobs/step={jobs_per_step:.1} steady_spawns={steady_spawns} \
+             scoped_spawns/step(est)={scoped_est:.0}",
+            "pool/steady_train (tiny)"
+        );
+        let r1 = |v: f64| (v * 10.0).round() / 10.0;
+        pool_json.set("provenance", Json::str("measured"));
+        pool_json.set("threads", Json::num(pp.threads() as f64));
+        pool_json.set("empty_job_persistent_ns", Json::num(per_ns.round()));
+        pool_json.set("empty_job_scoped_ns", Json::num(sco_ns.round()));
+        pool_json.set("dispatch_ns", Json::num(per_ns.round()));
+        pool_json.set("dispatch_speedup", Json::num(r1(sco_ns / per_ns.max(1.0))));
+        pool_json.set("jobs_per_step", Json::num(r1(jobs_per_step)));
+        pool_json.set("wakeups_per_step", Json::num(r1(wakeups_per_step)));
+        pool_json.set("spawns_steady_per_step", Json::num(steady_spawns as f64));
+        pool_json.set("scoped_spawns_per_step_est", Json::num(scoped_est.round()));
+        pool_json.set("pool_spawns", Json::num(p1.threads_spawned as f64));
     }
 
     // record the comparison next to the repo root for the perf trajectory
@@ -280,7 +439,8 @@ fn main() {
         "note",
         Json::str(
             "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
-             vs blocked vs blocked+parallel vs packed+fused (native backend)",
+             vs blocked vs blocked+parallel vs packed+fused (native backend), plus \
+             persistent-pool vs scoped dispatch latency (PR 4)",
         ),
     );
     out.set("provenance", Json::str("measured"));
@@ -291,6 +451,7 @@ fn main() {
     out.set("forward", fwd_json);
     out.set("train_step", step_json);
     out.set("matmul", mm_json);
+    out.set("pool", pool_json);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(path, out.render_pretty()) {
         Ok(()) => println!("bench results recorded to {path}"),

@@ -23,8 +23,12 @@ pub struct Config {
     pub results_dir: PathBuf,
     /// models to sweep in experiments ("base", "large").
     pub models: Vec<String>,
-    /// native-kernel worker threads: 0 = auto-detect (one per core),
-    /// 1 = single-threaded (bit-reproducible across machines).
+    /// native-kernel worker threads: 0 = auto-detect (one per core; the
+    /// `HADAPT_THREADS` env var overrides auto-detection, which is how CI
+    /// forces a serial second test run), 1 = single-threaded
+    /// (bit-reproducible across machines). The pool keeps `threads - 1`
+    /// persistent parked workers; they spawn once on first use and join
+    /// when the engine drops.
     pub threads: usize,
     /// pack frozen backbone GEMM weights into SIMD-aligned panels once at
     /// first use (native backend; on by default — turn off to A/B the

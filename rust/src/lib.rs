@@ -14,8 +14,9 @@
 //!   mirroring the JAX oracles in `python/compile/kernels/ref.py`
 //!   (hadamard, layernorm, masked attention; gradients validated against
 //!   `jax.grad`). The kernels are cache-blocked, register-tiled and
-//!   sharded over a std-only worker pool ([`runtime::Pool`], the
-//!   `threads` config key). [`runtime::Manifest::builtin`] supplies the
+//!   sharded over a std-only pool of persistent parked workers
+//!   ([`runtime::Pool`], the `threads` config key; zero spawns and zero
+//!   allocations in steady state). [`runtime::Manifest::builtin`] supplies the
 //!   model inventory, so `cargo build && cargo test` — and the full
 //!   experiment suite — run hermetically: no Python, no artifacts, no
 //!   network.

@@ -17,6 +17,7 @@
 use anyhow::{bail, Result};
 
 use super::manifest::{ArtifactInfo, Manifest};
+use super::pool::PoolStats;
 use super::tensor::{IntTensor, Tensor};
 
 /// A backend-resident tensor handle.
@@ -118,5 +119,14 @@ pub trait Backend {
     /// means a cached panel set was invalidated by a parameter re-upload.
     fn pack_stats(&self) -> (u64, u64) {
         (0, 0)
+    }
+
+    /// Kernel-pool dispatch counters (persistent-worker spawns, fork-join
+    /// jobs, wakeups, inline runs). Nonzero only for the native backend;
+    /// `threads_spawned` freezing after warmup is the zero-spawn
+    /// steady-state contract, the dispatch-side twin of [`Backend::arena_stats`]'
+    /// zero-miss contract.
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats::default()
     }
 }

@@ -16,6 +16,7 @@ use anyhow::Result;
 use super::backend::{Backend, DeviceTensor};
 use super::manifest::Manifest;
 use super::native::NativeBackend;
+use super::pool::PoolStats;
 use super::tensor::{IntTensor, Tensor};
 
 /// Compile + execution statistics (exposed for the perf harness).
@@ -140,6 +141,13 @@ impl Engine {
     /// Pack-cache counters `(live packed weights, repacks)` — native only.
     pub fn pack_stats(&self) -> (u64, u64) {
         self.backend.pack_stats()
+    }
+
+    /// Kernel-pool dispatch counters (spawns/jobs/wakeups) — native only.
+    /// `threads_spawned` stops growing after the first parallel step: the
+    /// zero-spawn steady state `bench_runtime` and the pool tests pin.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.backend.pool_stats()
     }
 
     /// Execute an artifact: parameters in canonical order, then batch

@@ -12,7 +12,12 @@
 //! # Kernel architecture (PR 2)
 //!
 //! The hot kernels are cache-blocked and register-tiled, and fan out over
-//! a [`Pool`] (the `threads` config key):
+//! a [`Pool`] (the `threads` config key). Since PR 4 the pool keeps
+//! persistent parked workers — a kernel call wakes them instead of
+//! spawning scoped threads, so the dispatch itself is spawn-free and
+//! allocation-free in steady state; the chunk partition (and therefore
+//! every per-chunk reduction order) is unchanged, so kernel results are
+//! byte-for-byte what the scoped pool produced:
 //!
 //! * **GEMM family** (`matmul` NN, `matmul_nt` NT, `matmul_tn_acc` TN):
 //!   `MR = 4` output rows in flight share each streamed row of `b`

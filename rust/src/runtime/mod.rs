@@ -28,8 +28,8 @@ pub use engine::{Engine, EngineStats};
 pub use kernels::PackedMat;
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
-pub use pool::Pool;
+pub use pool::{Pool, PoolStats};
 pub use tensor::{IntTensor, Tensor};
-pub use workspace::Workspace;
+pub use workspace::{Workspace, WorkspaceStats};
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;

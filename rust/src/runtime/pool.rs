@@ -1,34 +1,239 @@
-//! `runtime::pool`: a tiny std-only fork-join helper for the native
+//! `runtime::pool`: a persistent fork-join worker pool for the native
 //! kernels.
 //!
 //! The kernels in [`super::kernels`] are data-parallel over output rows
 //! (matmul), batch×head blocks (attention) or elements (GELU). A [`Pool`]
 //! carries the configured worker count (the `threads` config key; `0`
-//! auto-detects one worker per core) and provides safe scoped fork-join
-//! over disjoint row-chunks of the output buffers — `std::thread::scope`
-//! plus `chunks_mut`, no unsafe, no dependencies, and no persistent
-//! worker threads to keep `Engine` trivially droppable.
+//! auto-detects one worker per core, overridable with the
+//! `HADAPT_THREADS` env var) and provides fork-join over disjoint
+//! row-chunks of the output buffers.
 //!
-//! Work below `grain` rows stays on the calling thread, so tiny kernels
-//! (LoRA rank-4 GEMMs, head projections) never pay a spawn. The chunk
-//! partition is a pure function of `(rows, threads)`, so results are
-//! deterministic for a fixed thread count; across *different* thread
-//! counts only the order of float reductions (e.g. the Hadamard VJP's
-//! `dw` partials) can differ, at ~1e-7 relative. Set `threads=1` for
-//! bit-reproducibility across machines.
+//! # Persistent workers (PR 4)
+//!
+//! PR 2's pool spawned and joined OS threads via `std::thread::scope` on
+//! every parallel kernel call — dozens of spawn/join cycles per train
+//! step, which dominates dispatch cost at the small shapes the GLUE-style
+//! tasks use. The pool now keeps `threads - 1` long-lived workers parked
+//! on a condvar. A dispatch publishes a type-erased *borrowed* job (raw
+//! chunk-partition descriptor + a pointer to the caller's closure), bumps
+//! an epoch counter and wakes the workers; workers claim chunk indices
+//! under the job-slot mutex, the caller runs the reserved last chunk
+//! itself (then helps drain unclaimed chunks), and everyone meets at a
+//! completion latch before the dispatch returns. Consequences:
+//!
+//! * **Zero steady-state spawns**: workers are spawned lazily on the
+//!   first parallel dispatch and then reused until the last [`Pool`]
+//!   clone drops (workers are joined on drop). [`PoolStats`] counts
+//!   spawns / dispatches / wakeups so the property is testable.
+//! * **Zero dispatch allocations**: the job descriptor lives on the
+//!   caller's stack (PR 2 collected a `Vec` of `chunks_mut` slices per
+//!   call), so the threaded path now satisfies the same counting-
+//!   allocator test as the serial one (`tests/workspace_alloc.rs`).
+//! * **Work below `grain` never wakes anyone** — tiny kernels (LoRA
+//!   rank-4 GEMMs, head projections) run inline on the caller, exactly
+//!   as before.
+//! * **Worker panics propagate**: a panicking chunk poisons the job; the
+//!   dispatching caller still drains the latch (no hang, no dangling
+//!   borrows) and then panics itself.
+//!
+//! The chunk partition is unchanged from PR 2 — a pure function of
+//! `(rows, threads)` — so results are deterministic for a fixed thread
+//! count; across *different* thread counts only the order of float
+//! reductions in activation rows can differ, at ~1e-7 relative, and
+//! parameter-gradient reductions are serial (PR 3) and bit-identical for
+//! every count. Set `threads=1` for bit-reproducibility across machines;
+//! `threads<=1` pools never spawn anything.
+//!
+//! `map_rows` (chunk-ordered partial reductions) was removed in PR 4: no
+//! kernel has used it since the PR 3 parameter reductions went serial,
+//! and keeping it would have reintroduced a thread-count-dependent merge
+//! order for any future caller.
+//!
+//! # Safety
+//!
+//! This module contains the runtime pool's only `unsafe` (the repo's
+//! other `unsafe` blocks are byte-cast helpers in `runtime::tensor` and
+//! `model::store`): handing a borrowed job to long-lived threads erases
+//! lifetimes, so the two invariants are (1)
+//! chunk indices partition the output buffers disjointly — the partition
+//! arithmetic below mirrors `chunks_mut` exactly — and (2) the job
+//! descriptor outlives every access, which the completion latch enforces:
+//! a worker only dereferences the descriptor for a chunk it claimed from
+//! the *current* job slot under the mutex, and the dispatching caller
+//! cannot return (or unwind) until `pending` reaches zero, i.e. until
+//! every claimed chunk has finished executing.
 
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
-/// Worker configuration handed to every parallel kernel.
-#[derive(Debug, Clone)]
+/// Dispatch counters for a pool (and its clones, which share workers).
+///
+/// * `threads_spawned` — OS threads ever spawned; frozen after warmup
+///   (the zero-spawn steady-state contract).
+/// * `jobs_dispatched` — fork-join jobs published to the workers.
+/// * `wakeups` — times a worker woke and observed a live job (a job can
+///   wake more workers than it has chunks; the extras claim nothing and
+///   park again).
+/// * `inline_runs` — calls that stayed entirely on the caller (work
+///   below `grain`, single-shard splits, or `threads <= 1`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub threads_spawned: u64,
+    pub jobs_dispatched: u64,
+    pub wakeups: u64,
+    pub inline_runs: u64,
+}
+
+/// Worker configuration handed to every parallel kernel. Cloning is
+/// cheap and shares the same persistent workers and [`PoolStats`].
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
     scalar: bool,
+    inner: Arc<Inner>,
+}
+
+impl fmt::Debug for Pool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.threads)
+            .field("scalar", &self.scalar)
+            .field("stats", &self.stats())
+            .finish()
+    }
 }
 
 impl Default for Pool {
     fn default() -> Self {
         Pool::auto()
+    }
+}
+
+/// A published fork-join job: a monomorphized chunk runner plus a
+/// type-erased pointer to the dispatch descriptor on the caller's stack.
+/// Both fields are plain words so the slot stays `Send`.
+#[derive(Clone, Copy)]
+struct Job {
+    /// Executes chunk `idx` of the job behind `data`.
+    call: unsafe fn(usize, usize),
+    /// `*const CtxN<F>` as usize; valid until the job's latch drains.
+    data: usize,
+}
+
+/// The single job slot plus worker lifecycle flags, all guarded by one
+/// mutex: every claim/completion transition happens under it, which is
+/// what makes the borrowed-job lifetime argument airtight (chunks are at
+/// least `grain` rows of kernel work, so the lock is uncontended noise
+/// next to the work itself).
+struct Slot {
+    /// Bumped once per dispatch; parked workers wake on a change.
+    epoch: u64,
+    job: Option<Job>,
+    /// Next chunk index a worker may claim (`0..claimable`).
+    next: usize,
+    /// Chunks available to workers; the final chunk (`claimable`) is
+    /// reserved for the dispatching caller.
+    claimable: usize,
+    /// Chunks not yet finished executing — the completion latch.
+    pending: usize,
+    /// Set when any chunk panicked; the caller re-raises after the latch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers park here waiting for a new epoch.
+    work_cv: Condvar,
+    /// The dispatching caller parks here waiting for `pending == 0`.
+    done_cv: Condvar,
+    spawned: AtomicU64,
+    dispatched: AtomicU64,
+    wakeups: AtomicU64,
+    inline_runs: AtomicU64,
+}
+
+/// Owns the worker handles; dropping the last `Pool` clone signals
+/// shutdown and joins every worker.
+struct Inner {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Fast-path flag so the steady-state dispatch skips the `workers`
+    /// mutex entirely: set once (release) after the workers exist, read
+    /// (acquire) on every dispatch. Spawning happens at most once.
+    workers_ready: AtomicBool,
+    /// Serializes concurrent dispatchers: the slot holds one job at a
+    /// time, so a second thread calling `for_rows*` on the same pool (or
+    /// a clone) queues here until the first job's latch drains. Held
+    /// across the whole dispatch — which also means a job's closure must
+    /// not dispatch on its own pool (no kernel does; nested fan-out
+    /// would self-deadlock by design rather than corrupt the slot).
+    dispatch_lock: Mutex<()>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        {
+            let mut slot = lock(&self.shared.slot);
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        let workers = match self.workers.get_mut() {
+            Ok(w) => w,
+            Err(p) => p.into_inner(),
+        };
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn lock(m: &Mutex<Slot>) -> std::sync::MutexGuard<'_, Slot> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    let mut guard = lock(&shared.slot);
+    loop {
+        if guard.shutdown {
+            return;
+        }
+        if guard.epoch == seen {
+            guard = shared.work_cv.wait(guard).unwrap_or_else(|p| p.into_inner());
+            continue;
+        }
+        seen = guard.epoch;
+        if guard.job.is_none() {
+            // Slept through an entire job; nothing left to do for it.
+            continue;
+        }
+        shared.wakeups.fetch_add(1, Ordering::Relaxed);
+        while let Some(job) = guard.job {
+            if guard.next >= guard.claimable {
+                break;
+            }
+            let idx = guard.next;
+            guard.next += 1;
+            drop(guard);
+            // SAFETY: `idx` was claimed from the live job under the slot
+            // mutex; the caller is blocked on the latch until this chunk
+            // completes, so `job.data` is valid and chunk `idx` is ours
+            // exclusively.
+            let run = || unsafe { (job.call)(job.data, idx) };
+            let ok = panic::catch_unwind(AssertUnwindSafe(run)).is_ok();
+            guard = lock(&shared.slot);
+            if !ok {
+                guard.panicked = true;
+            }
+            guard.pending -= 1;
+            if guard.pending == 0 {
+                shared.done_cv.notify_one();
+            }
+        }
     }
 }
 
@@ -38,14 +243,13 @@ impl Pool {
         Pool::with_threads(0)
     }
 
-    /// Fixed worker count; `0` auto-detects (`available_parallelism`).
+    /// Fixed worker count; `0` auto-detects (the `HADAPT_THREADS` env
+    /// var when set, else `available_parallelism` — identical to the
+    /// PR 2 resolution when the env var is absent). Workers are spawned
+    /// lazily on the first parallel dispatch, never at construction.
     pub fn with_threads(threads: usize) -> Pool {
-        let t = if threads == 0 {
-            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            threads
-        };
-        Pool { threads: t.max(1), scalar: false }
+        let t = if threads == 0 { auto_threads() } else { threads };
+        Pool::build(t.max(1), false)
     }
 
     /// Single-threaded blocked kernels (no fan-out, fully deterministic).
@@ -56,7 +260,34 @@ impl Pool {
     /// Dispatch to the retained PR-1 scalar kernels, single-threaded — the
     /// baseline `cargo bench --bench bench_runtime` compares against.
     pub fn scalar_reference() -> Pool {
-        Pool { threads: 1, scalar: true }
+        Pool::build(1, true)
+    }
+
+    fn build(threads: usize, scalar: bool) -> Pool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                job: None,
+                next: 0,
+                claimable: 0,
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            spawned: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            wakeups: AtomicU64::new(0),
+            inline_runs: AtomicU64::new(0),
+        });
+        let inner = Inner {
+            shared,
+            workers: Mutex::new(Vec::new()),
+            workers_ready: AtomicBool::new(false),
+            dispatch_lock: Mutex::new(()),
+        };
+        Pool { threads, scalar, inner: Arc::new(inner) }
     }
 
     pub fn threads(&self) -> usize {
@@ -66,6 +297,17 @@ impl Pool {
     /// True when kernels should route to `kernels::scalar`.
     pub fn is_scalar(&self) -> bool {
         self.scalar
+    }
+
+    /// Snapshot of the dispatch counters (shared across clones).
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.inner.shared;
+        PoolStats {
+            threads_spawned: s.spawned.load(Ordering::Relaxed),
+            jobs_dispatched: s.dispatched.load(Ordering::Relaxed),
+            wakeups: s.wakeups.load(Ordering::Relaxed),
+            inline_runs: s.inline_runs.load(Ordering::Relaxed),
+        }
     }
 
     /// Shard count for `items` work items with at least `grain` each.
@@ -78,9 +320,87 @@ impl Pool {
         self.threads.min(cap)
     }
 
+    fn note_inline(&self) {
+        self.inner.shared.inline_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Spawn the `threads - 1` persistent workers if they don't exist
+    /// yet. Steady state takes only the relaxed-cost atomic fast path —
+    /// the `workers` mutex is touched once per pool lifetime.
+    fn ensure_workers(&self) {
+        if self.threads <= 1 || self.inner.workers_ready.load(Ordering::Acquire) {
+            return;
+        }
+        let mut ws = self.inner.workers.lock().unwrap_or_else(|p| p.into_inner());
+        if !ws.is_empty() {
+            return;
+        }
+        for i in 0..self.threads - 1 {
+            let shared = Arc::clone(&self.inner.shared);
+            let h = thread::Builder::new()
+                .name(format!("hadapt-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn a pool worker");
+            ws.push(h);
+        }
+        self.inner.shared.spawned.fetch_add((self.threads - 1) as u64, Ordering::Relaxed);
+        self.inner.workers_ready.store(true, Ordering::Release);
+    }
+
+    /// Publish a job of `nch >= 2` chunks, run the reserved last chunk on
+    /// the calling thread, help drain unclaimed chunks, and wait for the
+    /// completion latch. Re-raises if any chunk panicked.
+    fn dispatch(&self, nch: usize, call: unsafe fn(usize, usize), data: usize) {
+        debug_assert!(nch >= 2);
+        self.ensure_workers();
+        let _serialized = self.inner.dispatch_lock.lock().unwrap_or_else(|p| p.into_inner());
+        let shared = &self.inner.shared;
+        {
+            let mut slot = lock(&shared.slot);
+            slot.epoch = slot.epoch.wrapping_add(1);
+            slot.job = Some(Job { call, data });
+            slot.next = 0;
+            slot.claimable = nch - 1;
+            slot.pending = nch;
+            slot.panicked = false;
+            shared.work_cv.notify_all();
+        }
+        shared.dispatched.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: chunk `nch - 1` is reserved for the caller (never
+        // claimable), and `data` points into this stack frame.
+        let last = || unsafe { call(data, nch - 1) };
+        let mut poisoned = panic::catch_unwind(AssertUnwindSafe(last)).is_err();
+        let mut slot = lock(&shared.slot);
+        slot.pending -= 1;
+        // Help drain chunks no worker has claimed yet (covers workers
+        // that are still waking up, or a pool whose workers are busy).
+        while slot.next < slot.claimable {
+            let idx = slot.next;
+            slot.next += 1;
+            drop(slot);
+            // SAFETY: same claim discipline as the workers.
+            let run = || unsafe { call(data, idx) };
+            if panic::catch_unwind(AssertUnwindSafe(run)).is_err() {
+                poisoned = true;
+            }
+            slot = lock(&shared.slot);
+            slot.pending -= 1;
+        }
+        while slot.pending > 0 {
+            slot = shared.done_cv.wait(slot).unwrap_or_else(|p| p.into_inner());
+        }
+        poisoned |= slot.panicked;
+        slot.job = None;
+        drop(slot);
+        if poisoned {
+            panic!("pool worker panicked during a fork-join job");
+        }
+    }
+
     /// Run `f(first_row, chunk)` over disjoint row-chunks of `out`
     /// (`cols` floats per row). The final chunk runs on the caller, so a
-    /// 2-shard split costs exactly one spawn.
+    /// 2-shard split wakes exactly one worker — and work below `grain`
+    /// wakes none.
     pub fn for_rows<F>(&self, out: &mut [f32], cols: usize, grain: usize, f: F)
     where
         F: Fn(usize, &mut [f32]) + Sync,
@@ -88,64 +408,14 @@ impl Pool {
         let rows = if cols == 0 { 0 } else { out.len() / cols };
         let shards = self.shards(rows, grain);
         if shards <= 1 {
+            self.note_inline();
             f(0, out);
             return;
         }
         let chunk = (rows + shards - 1) / shards;
-        let fref = &f;
-        thread::scope(move |s| {
-            let chunks: Vec<&mut [f32]> = out.chunks_mut(chunk * cols).collect();
-            let nch = chunks.len();
-            for (idx, ch) in chunks.into_iter().enumerate() {
-                let row0 = idx * chunk;
-                if idx + 1 == nch {
-                    fref(row0, ch);
-                } else {
-                    s.spawn(move || fref(row0, ch));
-                }
-            }
-        });
-    }
-
-    /// Like [`Pool::for_rows`], but each shard also returns a value
-    /// (partial reductions); results come back in chunk order. As of PR 3
-    /// no kernel uses this — parameter reductions went serial for
-    /// thread-count-independent results — but it remains part of the pool
-    /// API for callers that want chunk-ordered partials.
-    pub fn map_rows<T, F>(&self, out: &mut [f32], cols: usize, grain: usize, f: F) -> Vec<T>
-    where
-        T: Send,
-        F: Fn(usize, &mut [f32]) -> T + Sync,
-    {
-        let rows = if cols == 0 { 0 } else { out.len() / cols };
-        let shards = self.shards(rows, grain);
-        if shards <= 1 {
-            return vec![f(0, out)];
-        }
-        let chunk = (rows + shards - 1) / shards;
-        let fref = &f;
-        thread::scope(move |s| {
-            let chunks: Vec<&mut [f32]> = out.chunks_mut(chunk * cols).collect();
-            let nch = chunks.len();
-            let mut handles = Vec::with_capacity(nch);
-            let mut last = None;
-            for (idx, ch) in chunks.into_iter().enumerate() {
-                let row0 = idx * chunk;
-                if idx + 1 == nch {
-                    last = Some(fref(row0, ch));
-                } else {
-                    handles.push(s.spawn(move || fref(row0, ch)));
-                }
-            }
-            let mut partials: Vec<T> = handles
-                .into_iter()
-                .map(|h| h.join().expect("pool worker panicked"))
-                .collect();
-            if let Some(v) = last {
-                partials.push(v);
-            }
-            partials
-        })
+        let nch = (rows + chunk - 1) / chunk;
+        let ctx = Ctx1 { base: out.as_mut_ptr(), len: out.len(), cols, chunk, nch, f: &f };
+        self.dispatch(nch, run_chunk1::<F>, &ctx as *const Ctx1<F> as usize);
     }
 
     /// Two parallel output buffers with per-item widths `acols` / `bcols`
@@ -166,29 +436,24 @@ impl Pool {
         debug_assert_eq!(items * bcols, b.len());
         let shards = self.shards(items, grain);
         if shards <= 1 {
+            self.note_inline();
             f(0, a, b);
             return;
         }
         let chunk = (items + shards - 1) / shards;
-        let fref = &f;
-        thread::scope(move |s| {
-            let ca: Vec<&mut [f32]> = a.chunks_mut(chunk * acols).collect();
-            let cb: Vec<&mut [f32]> = b.chunks_mut(chunk * bcols).collect();
-            let nch = ca.len();
-            debug_assert_eq!(nch, cb.len());
-            for (idx, (ha, hb)) in ca.into_iter().zip(cb).enumerate() {
-                let i0 = idx * chunk;
-                if idx + 1 == nch {
-                    fref(i0, ha, hb);
-                } else {
-                    s.spawn(move || fref(i0, ha, hb));
-                }
-            }
-        });
+        let nch = (items + chunk - 1) / chunk;
+        let ctx = Ctx2 {
+            a: Buf { base: a.as_mut_ptr(), len: a.len(), cols: acols },
+            b: Buf { base: b.as_mut_ptr(), len: b.len(), cols: bcols },
+            chunk,
+            nch,
+            f: &f,
+        };
+        self.dispatch(nch, run_chunk2::<F>, &ctx as *const Ctx2<F> as usize);
     }
 
-    /// Three parallel output buffers (LayerNorm `y`/`xhat`/`inv`, attention
-    /// VJP `dq`/`dk`/`dv`). All widths must be non-zero.
+    /// Three parallel output buffers (LayerNorm `y`/`xhat`/`inv`). All
+    /// widths must be non-zero.
     #[allow(clippy::too_many_arguments)]
     pub fn for_rows3<F>(
         &self,
@@ -208,28 +473,23 @@ impl Pool {
         debug_assert_eq!(items * ccols, c.len());
         let shards = self.shards(items, grain);
         if shards <= 1 {
+            self.note_inline();
             f(0, a, b, c);
             return;
         }
         let chunk = (items + shards - 1) / shards;
-        let fref = &f;
-        thread::scope(move |s| {
-            let ca: Vec<&mut [f32]> = a.chunks_mut(chunk * acols).collect();
-            let cb: Vec<&mut [f32]> = b.chunks_mut(chunk * bcols).collect();
-            let cc: Vec<&mut [f32]> = c.chunks_mut(chunk * ccols).collect();
-            let nch = ca.len();
-            debug_assert_eq!(nch, cb.len());
-            debug_assert_eq!(nch, cc.len());
-            for (idx, ((ha, hb), hc)) in ca.into_iter().zip(cb).zip(cc).enumerate() {
-                let i0 = idx * chunk;
-                if idx + 1 == nch {
-                    fref(i0, ha, hb, hc);
-                } else {
-                    s.spawn(move || fref(i0, ha, hb, hc));
-                }
-            }
-        });
+        let nch = (items + chunk - 1) / chunk;
+        let ctx = Ctx3 {
+            a: Buf { base: a.as_mut_ptr(), len: a.len(), cols: acols },
+            b: Buf { base: b.as_mut_ptr(), len: b.len(), cols: bcols },
+            c: Buf { base: c.as_mut_ptr(), len: c.len(), cols: ccols },
+            chunk,
+            nch,
+            f: &f,
+        };
+        self.dispatch(nch, run_chunk3::<F>, &ctx as *const Ctx3<F> as usize);
     }
+
     /// Four parallel output buffers (attention VJP `dq`/`dk`/`dv` plus its
     /// per-item `dprobs` scratch slab). All widths must be non-zero.
     #[allow(clippy::too_many_arguments)]
@@ -254,37 +514,151 @@ impl Pool {
         debug_assert_eq!(items * dcols, d.len());
         let shards = self.shards(items, grain);
         if shards <= 1 {
+            self.note_inline();
             f(0, a, b, c, d);
             return;
         }
         let chunk = (items + shards - 1) / shards;
-        let fref = &f;
-        thread::scope(move |s| {
-            let ca: Vec<&mut [f32]> = a.chunks_mut(chunk * acols).collect();
-            let cb: Vec<&mut [f32]> = b.chunks_mut(chunk * bcols).collect();
-            let cc: Vec<&mut [f32]> = c.chunks_mut(chunk * ccols).collect();
-            let cd: Vec<&mut [f32]> = d.chunks_mut(chunk * dcols).collect();
-            let nch = ca.len();
-            debug_assert_eq!(nch, cb.len());
-            debug_assert_eq!(nch, cc.len());
-            debug_assert_eq!(nch, cd.len());
-            for (idx, (((ha, hb), hc), hd)) in
-                ca.into_iter().zip(cb).zip(cc).zip(cd).enumerate()
-            {
-                let i0 = idx * chunk;
-                if idx + 1 == nch {
-                    fref(i0, ha, hb, hc, hd);
-                } else {
-                    s.spawn(move || fref(i0, ha, hb, hc, hd));
-                }
-            }
-        });
+        let nch = (items + chunk - 1) / chunk;
+        let ctx = Ctx4 {
+            a: Buf { base: a.as_mut_ptr(), len: a.len(), cols: acols },
+            b: Buf { base: b.as_mut_ptr(), len: b.len(), cols: bcols },
+            c: Buf { base: c.as_mut_ptr(), len: c.len(), cols: ccols },
+            d: Buf { base: d.as_mut_ptr(), len: d.len(), cols: dcols },
+            chunk,
+            nch,
+            f: &f,
+        };
+        self.dispatch(nch, run_chunk4::<F>, &ctx as *const Ctx4<F> as usize);
     }
+}
+
+/// Resolve the auto worker count: `HADAPT_THREADS` (CI's serial test run
+/// sets it to 1) when present and positive, else one per available core.
+fn auto_threads() -> usize {
+    let forced = std::env::var("HADAPT_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0);
+    match forced {
+        Some(n) => n,
+        None => thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+// ------------------------------------------------ type-erased dispatch ctxs
+
+/// One output buffer's partition geometry inside a job descriptor.
+#[derive(Clone, Copy)]
+struct Buf {
+    base: *mut f32,
+    len: usize,
+    cols: usize,
+}
+
+/// Chunk `idx` of `nch` for a buffer — identical arithmetic to
+/// `chunks_mut(chunk * cols)` on exact-multiple buffers (every kernel's
+/// case), so the partition (and therefore every per-chunk float
+/// reduction order) matches the PR 2 scoped pool exactly. The final
+/// chunk absorbs any trailing partial row, so coverage is total even
+/// for a length that is not a multiple of `cols`.
+///
+/// # Safety
+/// Caller must hold a claimed chunk index of a live job whose buffers the
+/// descriptor describes; disjointness follows from unique `idx` claims.
+unsafe fn chunk_of<'s>(b: &Buf, chunk: usize, nch: usize, idx: usize) -> &'s mut [f32] {
+    let start = (idx * chunk * b.cols).min(b.len);
+    let end = if idx + 1 == nch { b.len } else { ((idx + 1) * chunk * b.cols).min(b.len) };
+    std::slice::from_raw_parts_mut(b.base.add(start), end - start)
+}
+
+struct Ctx1<F> {
+    base: *mut f32,
+    len: usize,
+    cols: usize,
+    chunk: usize,
+    nch: usize,
+    f: *const F,
+}
+
+unsafe fn run_chunk1<F: Fn(usize, &mut [f32]) + Sync>(data: usize, idx: usize) {
+    let ctx = &*(data as *const Ctx1<F>);
+    let b = Buf { base: ctx.base, len: ctx.len, cols: ctx.cols };
+    let f = &*ctx.f;
+    f(idx * ctx.chunk, chunk_of(&b, ctx.chunk, ctx.nch, idx));
+}
+
+struct Ctx2<F> {
+    a: Buf,
+    b: Buf,
+    chunk: usize,
+    nch: usize,
+    f: *const F,
+}
+
+unsafe fn run_chunk2<F: Fn(usize, &mut [f32], &mut [f32]) + Sync>(data: usize, idx: usize) {
+    let ctx = &*(data as *const Ctx2<F>);
+    let f = &*ctx.f;
+    let row0 = idx * ctx.chunk;
+    f(
+        row0,
+        chunk_of(&ctx.a, ctx.chunk, ctx.nch, idx),
+        chunk_of(&ctx.b, ctx.chunk, ctx.nch, idx),
+    );
+}
+
+struct Ctx3<F> {
+    a: Buf,
+    b: Buf,
+    c: Buf,
+    chunk: usize,
+    nch: usize,
+    f: *const F,
+}
+
+unsafe fn run_chunk3<F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync>(
+    data: usize,
+    idx: usize,
+) {
+    let ctx = &*(data as *const Ctx3<F>);
+    let f = &*ctx.f;
+    f(
+        idx * ctx.chunk,
+        chunk_of(&ctx.a, ctx.chunk, ctx.nch, idx),
+        chunk_of(&ctx.b, ctx.chunk, ctx.nch, idx),
+        chunk_of(&ctx.c, ctx.chunk, ctx.nch, idx),
+    );
+}
+
+struct Ctx4<F> {
+    a: Buf,
+    b: Buf,
+    c: Buf,
+    d: Buf,
+    chunk: usize,
+    nch: usize,
+    f: *const F,
+}
+
+unsafe fn run_chunk4<F: Fn(usize, &mut [f32], &mut [f32], &mut [f32], &mut [f32]) + Sync>(
+    data: usize,
+    idx: usize,
+) {
+    let ctx = &*(data as *const Ctx4<F>);
+    let f = &*ctx.f;
+    f(
+        idx * ctx.chunk,
+        chunk_of(&ctx.a, ctx.chunk, ctx.nch, idx),
+        chunk_of(&ctx.b, ctx.chunk, ctx.nch, idx),
+        chunk_of(&ctx.c, ctx.chunk, ctx.nch, idx),
+        chunk_of(&ctx.d, ctx.chunk, ctx.nch, idx),
+    );
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     #[test]
     fn with_threads_resolves_auto() {
@@ -293,6 +667,20 @@ mod tests {
         assert_eq!(Pool::serial().threads(), 1);
         assert!(Pool::scalar_reference().is_scalar());
         assert!(!Pool::with_threads(4).is_scalar());
+    }
+
+    #[test]
+    fn auto_detect_matches_pr2_resolution() {
+        // `threads=0` resolves exactly as PR 2 did (available_parallelism)
+        // unless the HADAPT_THREADS override is present — the CI serial
+        // run sets it, so the expectation is computed the same way.
+        let want = std::env::var("HADAPT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+        assert_eq!(Pool::auto().threads(), want);
+        assert_eq!(Pool::with_threads(0).threads(), want);
     }
 
     #[test]
@@ -321,16 +709,27 @@ mod tests {
         // 4 rows at grain 8 must stay on the caller (single chunk at 0)
         let pool = Pool::with_threads(8);
         let mut out = vec![0.0f32; 4];
-        let starts = pool.map_rows(&mut out, 1, 8, |row0, chunk| (row0, chunk.len()));
-        assert_eq!(starts, vec![(0, 4)]);
+        let seen = Mutex::new(Vec::new());
+        pool.for_rows(&mut out, 1, 8, |row0, chunk| {
+            seen.lock().unwrap().push((row0, chunk.len()));
+        });
+        assert_eq!(*seen.lock().unwrap(), vec![(0, 4)]);
+        let st = pool.stats();
+        assert_eq!(st.inline_runs, 1);
+        assert_eq!(st.jobs_dispatched, 0, "below-grain work must not dispatch");
+        assert_eq!(st.threads_spawned, 0, "below-grain work must not even spawn");
     }
 
     #[test]
-    fn map_rows_partials_in_chunk_order() {
+    fn chunks_tile_rows_in_order() {
         let pool = Pool::with_threads(4);
         let mut out = vec![0.0f32; 100];
-        let parts = pool.map_rows(&mut out, 1, 1, |row0, chunk| (row0, chunk.len()));
-        // chunks tile [0, 100) in order and cover it exactly
+        let seen = Mutex::new(Vec::new());
+        pool.for_rows(&mut out, 1, 1, |row0, chunk| {
+            seen.lock().unwrap().push((row0, chunk.len()));
+        });
+        let mut parts = seen.into_inner().unwrap();
+        parts.sort_unstable();
         let mut expect = 0usize;
         let mut total = 0usize;
         for (row0, len) in parts {
@@ -412,7 +811,89 @@ mod tests {
         let pool = Pool::with_threads(4);
         let mut out: Vec<f32> = Vec::new();
         pool.for_rows(&mut out, 4, 1, |_, chunk| assert!(chunk.is_empty()));
-        let parts = pool.map_rows(&mut out, 4, 1, |_, chunk| chunk.len());
-        assert_eq!(parts, vec![0]);
+        assert_eq!(pool.stats().jobs_dispatched, 0);
+    }
+
+    #[test]
+    fn workers_spawn_once_and_are_reused() {
+        let pool = Pool::with_threads(3);
+        assert_eq!(pool.stats().threads_spawned, 0, "spawn is lazy");
+        let mut out = vec![0.0f32; 64];
+        for i in 0..10 {
+            pool.for_rows(&mut out, 1, 1, |row0, chunk| {
+                for (r, v) in chunk.iter_mut().enumerate() {
+                    *v = (row0 + r) as f32 + i as f32;
+                }
+            });
+        }
+        let st = pool.stats();
+        assert_eq!(st.threads_spawned, 2, "exactly threads-1 workers, once");
+        assert_eq!(st.jobs_dispatched, 10);
+        for (r, v) in out.iter().enumerate() {
+            assert_eq!(*v, r as f32 + 9.0);
+        }
+    }
+
+    #[test]
+    fn clones_share_workers_and_stats() {
+        let pool = Pool::with_threads(2);
+        let clone = pool.clone();
+        let mut out = vec![0.0f32; 32];
+        pool.for_rows(&mut out, 1, 1, |_, c| c.fill(1.0));
+        clone.for_rows(&mut out, 1, 1, |_, c| c.fill(2.0));
+        let st = pool.stats();
+        assert_eq!(st, clone.stats());
+        assert_eq!(st.threads_spawned, 1, "clones must reuse the same worker");
+        assert_eq!(st.jobs_dispatched, 2);
+        assert!(out.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::with_threads(2);
+        let mut out = vec![0.0f32; 32];
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_rows(&mut out, 1, 1, |_, _| panic!("boom"));
+        }));
+        assert!(caught.is_err(), "a panicking chunk must raise at the dispatch site");
+        // the pool is intact afterwards: the latch drained, the job slot
+        // is clear, and the same workers still serve jobs
+        pool.for_rows(&mut out, 1, 1, |_, c| c.fill(7.0));
+        assert!(out.iter().all(|&v| v == 7.0));
+        assert_eq!(pool.stats().threads_spawned, 1, "no respawn after a panic");
+    }
+
+    #[test]
+    fn drop_while_idle_joins_cleanly() {
+        // would hang (and time the suite out) if shutdown or join broke
+        let pool = Pool::with_threads(4);
+        let mut out = vec![0.0f32; 64];
+        pool.for_rows(&mut out, 1, 1, |_, c| c.fill(1.0));
+        assert_eq!(pool.stats().threads_spawned, 3);
+        drop(pool);
+        // dropping a never-dispatched pool is also clean (no workers)
+        drop(Pool::with_threads(4));
+        drop(Pool::serial());
+    }
+
+    #[test]
+    fn results_identical_for_fixed_thread_count() {
+        let run = |pool: &Pool| {
+            let mut out = vec![0.0f32; 97 * 3];
+            pool.for_rows(&mut out, 3, 2, |row0, chunk| {
+                for (r, row) in chunk.chunks_exact_mut(3).enumerate() {
+                    let t = (row0 + r) as f32;
+                    row[0] = t * 1.5;
+                    row[1] = t - 0.25;
+                    row[2] = t * t;
+                }
+            });
+            out
+        };
+        let a = run(&Pool::with_threads(3));
+        let b = run(&Pool::with_threads(3));
+        let serial = run(&Pool::serial());
+        assert_eq!(a, b, "same thread count, same partition, same bits");
+        assert_eq!(a, serial, "row-independent work matches serial exactly");
     }
 }

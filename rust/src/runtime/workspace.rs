@@ -35,6 +35,20 @@ pub struct Workspace {
     held_bytes: usize,
 }
 
+/// Snapshot of the arena's accounting, the allocation-side half of the
+/// steady-state story (the dispatch-side half is
+/// [`crate::runtime::PoolStats`]): a fixed-geometry loop stops accruing
+/// `misses` after step 1, exactly as the pool stops accruing
+/// `threads_spawned`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub held_bytes: usize,
+    /// Distinct buffer lengths currently retained.
+    pub buckets: usize,
+}
+
 impl Workspace {
     pub fn new() -> Workspace {
         Workspace::default()
@@ -100,6 +114,18 @@ impl Workspace {
     /// Bytes currently resident in the free list.
     pub fn held_bytes(&self) -> usize {
         self.held_bytes
+    }
+
+    /// One-call snapshot of all counters. `buckets` counts only sizes
+    /// that currently retain at least one buffer (a drained bucket keeps
+    /// its map entry but holds nothing).
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            hits: self.hits,
+            misses: self.misses,
+            held_bytes: self.held_bytes,
+            buckets: self.buckets.values().filter(|b| !b.is_empty()).count(),
+        }
     }
 
     /// Drop every retained buffer (checkpoint boundaries, tests).
@@ -183,5 +209,19 @@ mod tests {
         assert_eq!(ws.held_bytes(), MAX_PER_BUCKET * 8 * 4);
         ws.clear();
         assert_eq!(ws.held_bytes(), 0);
+    }
+
+    #[test]
+    fn stats_snapshot_matches_counters() {
+        let mut ws = Workspace::new();
+        let a = ws.take(16);
+        ws.give(a);
+        let _ = ws.take(16);
+        let _ = ws.take(32);
+        ws.give(vec![0.0; 8]);
+        let s = ws.stats();
+        assert_eq!((s.hits, s.misses), (ws.hits(), ws.misses()));
+        assert_eq!(s.held_bytes, ws.held_bytes());
+        assert_eq!(s.buckets, 1, "only the 8-float bucket holds a buffer");
     }
 }

@@ -1,0 +1,98 @@
+//! Engine-level persistent-pool lifecycle: the session hot path spawns
+//! workers once, reuses them across train steps, keeps serial and
+//! parallel engines numerically in agreement, and joins the workers when
+//! the engine drops.
+//!
+//! The pool's own failure modes (panic propagation, drop-while-idle,
+//! auto-detect resolution, grain short-circuits) live in
+//! `runtime::pool::tests`; the kernel-level zero-alloc/zero-spawn counter
+//! proof lives in `tests/workspace_alloc.rs`; the artifact-level spawn
+//! freeze lives in `runtime::native::tests`. This file pins the
+//! user-visible surface: `Engine::pool_stats()` on a real `Session` loop.
+
+use hadapt::data::{class_mask, generate, make_batch, task_info};
+use hadapt::model::{FreezeMask, ParamStore};
+use hadapt::optim::LrSchedule;
+use hadapt::runtime::{Engine, Manifest, NativeBackend};
+use hadapt::train::Session;
+
+fn engine_with_threads(threads: usize) -> Engine {
+    Engine::with_backend(
+        Manifest::builtin("artifacts"),
+        Box::new(NativeBackend::with_threads(threads)),
+    )
+}
+
+/// Run `steps` hadamard train steps on a fresh tiny-model session and
+/// return the per-step losses.
+fn run_steps(engine: &Engine, steps: usize) -> Vec<f32> {
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 7);
+    let mask = FreezeMask::from_names(&info, &info.group("hadamard").unwrap().to_vec());
+    let (batch, seq) = (engine.manifest().batch, engine.manifest().seq_len);
+    let ds = generate(task_info("sst2").unwrap(), 1, "dev", batch);
+    let idx: Vec<usize> = (0..batch).collect();
+    let bt = make_batch(&ds, &idx, batch, seq);
+    let cm = class_mask(2);
+    let mut session = Session::new(
+        engine,
+        &Manifest::train_name("cls", "hadamard", "tiny"),
+        store,
+        mask,
+        LrSchedule::constant(1e-3),
+    )
+    .unwrap();
+    (0..steps).map(|_| session.step_cls(&bt, &cm).unwrap()).collect()
+}
+
+#[test]
+fn session_steps_reuse_persistent_workers() {
+    let engine = engine_with_threads(2);
+    let before = engine.pool_stats();
+    assert_eq!(before.threads_spawned, 0, "workers spawn lazily, not at engine build");
+    let losses = run_steps(&engine, 4);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let after = engine.pool_stats();
+    assert_eq!(after.threads_spawned, 1, "threads=2 => exactly one persistent worker");
+    assert!(after.jobs_dispatched > 0, "tiny-model steps must fork at least the GEMMs");
+    // re-running on the same engine reuses the same worker
+    run_steps(&engine, 2);
+    assert_eq!(engine.pool_stats().threads_spawned, 1, "no respawn across sessions");
+    // dropping the engine joins the worker; a hang here times the suite out
+    drop(engine);
+}
+
+#[test]
+fn serial_and_parallel_engines_agree_on_losses() {
+    // The CI workflow runs the whole suite twice (default and
+    // HADAPT_THREADS=1); this test additionally pins the serial/parallel
+    // agreement inside one process. Activation math may reorder float
+    // reductions across thread counts (~1e-7 relative); losses after a
+    // few steps must agree far inside kernel-parity tolerance.
+    let serial = engine_with_threads(1);
+    let parallel = engine_with_threads(3);
+    let a = run_steps(&serial, 3);
+    let b = run_steps(&parallel, 3);
+    assert_eq!(serial.pool_stats().threads_spawned, 0, "threads=1 must stay spawn-free");
+    assert_eq!(parallel.pool_stats().threads_spawned, 2);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + x.abs()),
+            "step {i}: serial loss {x} vs parallel {y}"
+        );
+    }
+}
+
+#[test]
+fn scalar_reference_engine_stays_spawn_free() {
+    use hadapt::runtime::Pool;
+    let engine = Engine::with_backend(
+        Manifest::builtin("artifacts"),
+        Box::new(NativeBackend::with_pool(Pool::scalar_reference())),
+    );
+    let losses = run_steps(&engine, 2);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let st = engine.pool_stats();
+    assert_eq!(st.threads_spawned, 0);
+    assert_eq!(st.jobs_dispatched, 0, "scalar dispatch never forks");
+}

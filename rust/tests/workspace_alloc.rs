@@ -1,15 +1,24 @@
-//! Zero-allocation steady state, pinned by a counting global allocator.
+//! Zero-allocation *and* zero-spawn steady state, pinned by a counting
+//! global allocator plus the pool's dispatch counters.
 //!
 //! A train-step-shaped kernel sequence (fused GEMM forward, LayerNorm,
 //! Hadamard adapter, attention, then the backward kernels with in-place NT
 //! accumulation) runs entirely on `_into` kernels over a `Workspace`
 //! arena. Iteration 1 warms the arena (misses allocate); iterations 2..N
 //! must perform **zero** heap allocations — every `take` is a hit and no
-//! kernel allocates internally. This is the property that makes the
-//! backend's steady-state step allocation-free (`runtime::native` threads
-//! the same arena through its full forward/backward; see
-//! `native::tests::arena_reuse_steady_state` for the artifact-level
-//! counterpart on miss counters).
+//! kernel allocates internally.
+//!
+//! The loop runs twice: once on the serial pool (the PR 3 contract) and
+//! once on a persistent 2-worker pool with a geometry large enough that
+//! the GEMM/LayerNorm/attention kernels actually fork. Since PR 4 the
+//! parallel dispatch is also allocation-free (the job descriptor lives on
+//! the caller's stack; PR 2 collected a `Vec` of chunk slices per call)
+//! and spawn-free after warmup (`PoolStats::threads_spawned` freezes at
+//! `threads - 1`), so the counting allocator covers the threaded phase
+//! too — worker wake/park is condvar traffic, not heap traffic. This is
+//! the counter-verified "steps >= 2 spawn no threads and allocate no
+//! kernel memory" acceptance test; `native.rs` has the artifact-level
+//! twin (`steady_train_steps_spawn_no_threads`).
 //!
 //! This file intentionally holds a single test: the counting allocator is
 //! process-global, and a sibling test running on another thread would
@@ -61,17 +70,13 @@ fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() * 0.5).collect()
 }
 
-#[test]
-fn kernel_steady_state_allocates_nothing() {
-    // Geometry of a miniature layer; serial pool so no worker threads
-    // (thread spawns are pool infrastructure, not kernel code — the
-    // threaded path reuses the same arena buffers, pinned by the
-    // backend-level miss-counter test).
-    let (b, l, nh) = (2usize, 8usize, 2usize);
-    let h = 16usize;
+/// Run 4 train-shaped kernel iterations at the given geometry on `pool`.
+/// Iteration 0 warms the arena (and, on a parallel pool, spawns the
+/// persistent workers); iterations 1..3 run under the counting allocator
+/// and must allocate nothing and miss the arena never.
+fn steady_kernel_loop(pool: &Pool, b: usize, l: usize, nh: usize, h: usize, label: &str) {
     let hd = h / nh;
     let t = b * l;
-    let pool = Pool::serial();
     let mut rng = Rng::new(0xA110C);
 
     // All model-side operands exist before the loop, like resident params.
@@ -93,7 +98,7 @@ fn kernel_steady_state_allocates_nothing() {
     for iter in 0..4 {
         if iter == 1 {
             misses_after_warm = ws.misses();
-            assert!(misses_after_warm > 0, "warm-up step must populate the arena");
+            assert!(misses_after_warm > 0, "{label}: warm-up step must populate the arena");
             ALLOCS.store(0, Ordering::SeqCst);
             TRACKING.store(true, Ordering::SeqCst);
         }
@@ -103,17 +108,17 @@ fn kernel_steady_state_allocates_nothing() {
         let mut pre = ws.take(t * h);
         let epi = k::Epilogue { add1: Some(&x), bias: Some(&bias), add2: None, gelu: true };
         let pw = k::BMat::Packed(&pw_nn);
-        k::gemm_fused_into(&pool, &x, pw, &mut y, t, h, h, epi, Some(&mut pre));
+        k::gemm_fused_into(pool, &x, pw, &mut y, t, h, h, epi, Some(&mut pre));
         let mut ln_y = ws.take(t * h);
         let mut xh = ws.take(t * h);
         let mut inv = ws.take(t);
-        k::layernorm_fwd_into(&pool, &y, &gain, &beta, &mut ln_y, &mut xh, &mut inv);
+        k::layernorm_fwd_into(pool, &y, &gain, &beta, &mut ln_y, &mut xh, &mut inv);
         let mut had = ws.take(t * h);
         k::hadamard_fwd_into(&ln_y, &hw, &hb, None, None, &mut had);
         let mut att = ws.take(t * h);
         let mut probs = ws.take(b * nh * l * l);
         k::attention_fwd_into(
-            &pool, &had, &ln_y, &y, &mask_add, b, nh, l, hd, &mut att, &mut probs,
+            pool, &had, &ln_y, &y, &mask_add, b, nh, l, hd, &mut att, &mut probs,
         );
 
         // ---- backward: attention VJP -> hadamard VJP -> LN VJP -> dgelu
@@ -123,14 +128,14 @@ fn kernel_steady_state_allocates_nothing() {
         let mut dv = ws.take(t * h);
         let mut scratch = ws.take(b * nh * l * l);
         k::attention_vjp_into(
-            &pool, &att, &had, &ln_y, &y, &probs, b, nh, l, hd, &mut dq, &mut dk, &mut dv,
+            pool, &att, &had, &ln_y, &y, &probs, b, nh, l, hd, &mut dq, &mut dk, &mut dv,
             &mut scratch,
         );
         let mut dx = ws.take(t * h);
         let mut dw = ws.take(h);
         let mut db = ws.take(h);
         k::hadamard_vjp_acc_into(
-            &pool,
+            pool,
             &ln_y,
             &hw,
             None,
@@ -143,12 +148,12 @@ fn kernel_steady_state_allocates_nothing() {
             None,
         );
         let mut dln = ws.take(t * h);
-        k::layernorm_vjp_into(&pool, &dx, &gain, &xh, &inv, None, None, &mut dln);
+        k::layernorm_vjp_into(pool, &dx, &gain, &xh, &inv, None, None, &mut dln);
         let mut dg = ws.take(t * h);
-        k::dgelu_mul_into(&pool, &dln, &pre, &mut dg);
-        k::matmul_nt_into(&pool, &dg, k::NtMat::Packed(&pw_nt), &mut dx, t, h, h, true);
+        k::dgelu_mul_into(pool, &dln, &pre, &mut dg);
+        k::matmul_nt_into(pool, &dg, k::NtMat::Packed(&pw_nt), &mut dx, t, h, h, true);
         let mut dwacc = ws.take(h * h);
-        k::matmul_tn_acc(&pool, &x, &dg, &mut dwacc, t, h, h);
+        k::matmul_tn_acc(pool, &x, &dg, &mut dwacc, t, h, h);
 
         sink += dx[0] + dwacc[0] + dv[0] + dk[0] + dw[0] + db[0];
 
@@ -168,12 +173,35 @@ fn kernel_steady_state_allocates_nothing() {
     assert_eq!(
         ALLOCS.load(Ordering::SeqCst),
         0,
-        "steps 2..4 must perform zero heap allocations in kernel code"
+        "{label}: steps 2..4 must perform zero heap allocations in kernel code"
     );
     assert_eq!(
         ws.misses(),
         misses_after_warm,
-        "steps 2..4 must be served entirely from the arena"
+        "{label}: steps 2..4 must be served entirely from the arena"
     );
     assert!(ws.hits() > 0);
+}
+
+#[test]
+fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
+    // Serial pool: the original PR 3 zero-allocation contract. A serial
+    // pool never spawns, trivially.
+    let serial = Pool::serial();
+    steady_kernel_loop(&serial, 2, 8, 2, 16, "serial");
+    assert_eq!(serial.stats().threads_spawned, 0, "serial pools never spawn");
+    assert_eq!(serial.stats().jobs_dispatched, 0);
+
+    // Persistent 2-worker pool at a geometry whose GEMM (64 rows > the
+    // 16-row grain), LayerNorm (64 rows > the 32-row grain) and attention
+    // (16 batch*head items) kernels genuinely fork. The worker spawns in
+    // iteration 0 (untracked warm-up); iterations 1..3 run under the
+    // counting allocator, so a stray spawn OR a dispatch-path allocation
+    // would trip the zero-alloc assertion — and the spawn counter below
+    // pins it explicitly.
+    let pool = Pool::with_threads(2);
+    steady_kernel_loop(&pool, 8, 8, 2, 16, "2-worker");
+    let st = pool.stats();
+    assert_eq!(st.threads_spawned, 1, "exactly one worker, spawned once at warm-up");
+    assert!(st.jobs_dispatched > 0, "the larger geometry must actually fork");
 }

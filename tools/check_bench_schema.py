@@ -7,6 +7,14 @@ kernel-perf trajectory in-tree. Rows may be populated from a real run
 (provenance=measured) or projected (see the file's provenance note), but
 the shape must always match what the bench writes.
 
+Since PR 4 the file also carries the persistent-pool dispatch rows: a
+top-level "pool" section (empty-job round trips, per-step spawn/job
+counters, its own provenance label), `scoped_ms`/`persistent_ms`/
+`dispatch_speedup` columns in every matmul row, and
+`pool_steady_spawns`/`pool_steady_jobs` in every train_step row. Two
+zero-contracts are enforced: steady-state arena misses AND steady-state
+pool spawns must both be 0.
+
 Usage: python3 tools/check_bench_schema.py BENCH_kernels.json
 """
 
@@ -33,11 +41,15 @@ STEP_KEYS = {
     "arena_steady_hits",
     "arena_steady_misses",
     "packed_weights",
+    "pool_steady_spawns",
+    "pool_steady_jobs",
 }
 MM_KEYS = {
     "scalar_ms",
     "blocked_ms",
     "parallel_ms",
+    "scoped_ms",
+    "persistent_ms",
     "packed_ms",
     "pack_once_ms",
     "bias_gelu_separate_ms",
@@ -46,6 +58,19 @@ MM_KEYS = {
     "speedup_parallel",
     "speedup_packed",
     "fused_vs_separate",
+    "dispatch_speedup",
+}
+POOL_KEYS = {
+    "threads",
+    "empty_job_persistent_ns",
+    "empty_job_scoped_ns",
+    "dispatch_ns",
+    "dispatch_speedup",
+    "jobs_per_step",
+    "wakeups_per_step",
+    "spawns_steady_per_step",
+    "scoped_spawns_per_step_est",
+    "pool_spawns",
 }
 
 
@@ -70,21 +95,55 @@ def check_rows(section, rows, required):
                 fail(f"{section}.{name}.{key} must be non-negative")
 
 
+def check_pool(pool):
+    if not isinstance(pool, dict):
+        fail("'pool' must be an object")
+    if not isinstance(pool.get("provenance"), str) or not pool["provenance"]:
+        fail("pool.provenance must be a non-empty string label")
+    missing = POOL_KEYS - set(pool)
+    if missing:
+        fail(f"pool missing keys: {sorted(missing)}")
+    for key in POOL_KEYS:
+        if not isinstance(pool[key], (int, float)):
+            fail(f"pool.{key} must be a number")
+        if pool[key] < 0:
+            fail(f"pool.{key} must be non-negative")
+    # the zero-spawn steady state is a contract, not a measurement
+    if pool["spawns_steady_per_step"] != 0:
+        fail("pool.spawns_steady_per_step must be 0 (zero-spawn steady state)")
+
+
 def main(path):
     with open(path) as f:
         data = json.load(f)
-    for key in ("note", "provenance", "batch", "seq_len", "forward", "train_step", "matmul"):
+    for key in (
+        "note",
+        "provenance",
+        "batch",
+        "seq_len",
+        "forward",
+        "train_step",
+        "matmul",
+        "pool",
+    ):
         if key not in data:
             fail(f"missing top-level key '{key}'")
     check_rows("forward", data["forward"], FWD_KEYS)
     check_rows("train_step", data["train_step"], STEP_KEYS)
     check_rows("matmul", data["matmul"], MM_KEYS)
-    # steady-state misses are the zero-allocation contract
+    check_pool(data["pool"])
+    # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
         if row["arena_steady_misses"] != 0:
             fail(f"train_step.{name}.arena_steady_misses must be 0 (zero-alloc steady state)")
-    n_rows = sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
-    print(f"BENCH_kernels.json schema OK ({n_rows} rows, provenance: {str(data['provenance'])[:40]}...)")
+        if row["pool_steady_spawns"] != 0:
+            fail(f"train_step.{name}.pool_steady_spawns must be 0 (zero-spawn steady state)")
+    n_rows = sum(len(data[s]) for s in ("forward", "train_step", "matmul")) + 1
+    print(
+        f"BENCH_kernels.json schema OK ({n_rows} rows, "
+        f"provenance: {str(data['provenance'])[:40]}..., "
+        f"pool provenance: {data['pool']['provenance'][:40]})"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Prune orphaned run-cache files that predate the PR 2 injective id scheme.
+
+The coordinator persists every completed run under `results/runs/` as
+`<id>.json` (plus an optional `<id>.ckpt` checkpoint). PR 2 made run ids
+injective in the method string by appending a 16-hex-digit FNV-1a tag to
+the readable slug:
+
+    <model>_<task>_<slug>-<16 hex>_s<seed>_t<stage1>x<main>
+
+Files written by the pre-PR 2 scheme (no hash tag) can never be resumed
+again — the coordinator computes only new-style ids — so they sit in the
+cache as dead weight, and worse, they are exactly the files whose slugs
+could collide (`had+ln` vs `had^ln`). This tool deletes them.
+
+Default is a dry run: it lists what would be removed and exits non-zero
+if orphans exist (useful as a CI hygiene check). Pass `--delete` to
+actually remove the files.
+
+Usage:
+    python3 tools/prune_orphaned_runs.py [--runs-dir results/runs] [--delete]
+"""
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# The PR 2 injective id: readable slug, '-', 16 hex digits of FNV-1a over
+# the raw method string, then seed and step budgets.
+MODERN_ID = re.compile(r"^.+-[0-9a-f]{16}_s\d+_t\d+x\d+$")
+
+# Files the coordinator writes per run id.
+RUN_SUFFIXES = (".json", ".ckpt")
+
+
+def classify(path: Path):
+    """Return (run_id, is_orphan) for a runs-dir file, or None to skip."""
+    if path.suffix not in RUN_SUFFIXES or not path.is_file():
+        return None
+    run_id = path.name[: -len(path.suffix)]
+    return run_id, MODERN_ID.match(run_id) is None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--runs-dir",
+        default="results/runs",
+        help="run-cache directory (default: results/runs)",
+    )
+    ap.add_argument(
+        "--delete",
+        action="store_true",
+        help="actually delete orphaned files (default: dry run)",
+    )
+    args = ap.parse_args()
+
+    runs = Path(args.runs_dir)
+    if not runs.is_dir():
+        print(f"{runs}: no run cache (nothing to prune)")
+        return 0
+
+    orphans, kept = [], 0
+    for path in sorted(runs.iterdir()):
+        entry = classify(path)
+        if entry is None:
+            continue
+        run_id, is_orphan = entry
+        if is_orphan:
+            orphans.append(path)
+        else:
+            kept += 1
+
+    if not orphans:
+        print(f"{runs}: {kept} cache file(s), all carry the injective id scheme")
+        return 0
+
+    verb = "deleting" if args.delete else "would delete"
+    for path in orphans:
+        print(f"{verb} {path} (pre-PR 2 run id: {path.stem!r})")
+        if args.delete:
+            path.unlink()
+    print(
+        f"{runs}: {len(orphans)} orphaned file(s) {'removed' if args.delete else 'found'}, "
+        f"{kept} kept"
+    )
+    if not args.delete:
+        print("dry run — pass --delete to remove them")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
