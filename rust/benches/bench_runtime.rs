@@ -13,9 +13,17 @@
 //! pool's steady-state spawn (must be 0) and job counters next to the
 //! arena counters.
 //!
+//! PR 5 adds the `serve` section: the multi-tenant forward-only serve
+//! path (one packed backbone, per-task Hadamard adapter banks, cross-task
+//! micro-batching) measured as requests/sec and p50/p99 latency at batch
+//! sizes 1/8/32, plus the adapter-swap-vs-full-reupload cost comparison
+//! and the serve-side zero-contract counters (steady arena misses, pool
+//! spawns and repacks all pinned at 0).
+//!
 //! Results are also recorded to `BENCH_kernels.json` at the repo root so
 //! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
-//! smoke run (CI uses this; only the tiny model, few iterations).
+//! smoke run (CI uses this; only the tiny model, few iterations). The
+//! schema is documented in `docs/BENCH_SCHEMA.md`.
 //!
 //! To benchmark the PJRT path instead, build with `--features xla` and
 //! swap the engine constructors for `Engine::xla("artifacts")` against a
@@ -26,7 +34,8 @@ use hadapt::model::{FreezeMask, ParamStore};
 use hadapt::optim::LrSchedule;
 use hadapt::runtime::kernels::{self as k, scalar};
 use hadapt::runtime::{
-    DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool, Tensor,
+    DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool, ServeRequest,
+    ServeSession, TaskAdapter, Tensor,
 };
 use hadapt::train::Session;
 use hadapt::util::bench::{report_throughput, Bench};
@@ -433,6 +442,149 @@ fn main() {
         pool_json.set("pool_spawns", Json::num(p1.threads_spawned as f64));
     }
 
+    // Serve-path rows (PR 5): multi-tenant forward-only serving on one
+    // packed backbone — requests/sec and latency percentiles at
+    // micro-batch sizes 1/8/32, the adapter-economics comparison (hot
+    // bank swap vs re-uploading the backbone), and the steady-state
+    // zero-contract counters (arena misses, pool spawns, repacks — all
+    // must stay 0 once a session is warm).
+    let mut serve_json = Json::obj();
+    {
+        let engine = engine_with(Pool::auto(), true);
+        let smodel = if quick { "tiny" } else { "base" };
+        let info = engine.manifest().model(smodel).unwrap().clone();
+        let store = ParamStore::init(&info, 7);
+        let serve_tasks = ["sst2", "mrpc", "rte"];
+        let adapters: Vec<TaskAdapter> = serve_tasks
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| {
+                let classes = task_info(t).unwrap().classes;
+                let mut a = TaskAdapter::from_store(&info, &store, t, classes).unwrap();
+                let mut rng = Rng::new(100 + ti as u64);
+                for li in 0..a.had_w.len() {
+                    for v in a.had_w[li].iter_mut() {
+                        *v += 0.02 * rng.normal();
+                    }
+                    for v in a.had_b[li].iter_mut() {
+                        *v += 0.02 * rng.normal();
+                    }
+                }
+                a
+            })
+            .collect();
+        let streams: Vec<_> = serve_tasks
+            .iter()
+            .map(|t| generate(task_info(t).unwrap(), 5, "dev", 32))
+            .collect();
+        let reqs: Vec<ServeRequest> = (0..96)
+            .map(|i| {
+                let ds = &streams[i % streams.len()];
+                let e = &ds.examples[i % ds.examples.len()];
+                ServeRequest {
+                    task: serve_tasks[i % serve_tasks.len()].to_string(),
+                    seq_a: e.seq_a.clone(),
+                    seq_b: e.seq_b.clone(),
+                }
+            })
+            .collect();
+
+        let mut rows = Json::obj();
+        let (mut steady_misses, mut steady_spawns, mut steady_repacks) = (0u64, 0u64, 0u64);
+        for &bsz in &[1usize, 8, 32] {
+            let mut session = ServeSession::new(&engine, smodel, &store, bsz).unwrap();
+            for a in &adapters {
+                session.register_task(a.clone()).unwrap();
+            }
+            // warm-up: arena fills, workers spawn, this session's fresh
+            // uploads pack once — everything after must be steady
+            session.submit(reqs[0].clone()).unwrap();
+            session.run_pending().unwrap();
+            let (_, m0) = engine.arena_stats();
+            let p0 = engine.pool_stats();
+            let (_, rp0) = engine.pack_stats();
+            let waves = if quick { 4 } else { 16 };
+            let mut lats: Vec<f64> = Vec::new();
+            let t0 = std::time::Instant::now();
+            for w in 0..waves {
+                for i in 0..bsz {
+                    session
+                        .submit(reqs[(w * bsz + i) % reqs.len()].clone())
+                        .unwrap();
+                }
+                for reply in session.run_pending().unwrap() {
+                    lats.push(reply.latency_s);
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let (_, m1) = engine.arena_stats();
+            let p1 = engine.pool_stats();
+            let (_, rp1) = engine.pack_stats();
+            steady_misses += m1 - m0;
+            steady_spawns += p1.threads_spawned - p0.threads_spawned;
+            steady_repacks += rp1 - rp0;
+            lats.sort_by(|a, c| a.total_cmp(c));
+            let p50 = lats[lats.len() / 2] * 1e3;
+            let p99 = lats[(lats.len() * 99 / 100).min(lats.len() - 1)] * 1e3;
+            let rps = lats.len() as f64 / wall.max(1e-9);
+            println!(
+                "bench {:<44} req/s={rps:.0} p50={p50:.3}ms p99={p99:.3}ms",
+                format!("serve/{smodel}/b{bsz} ({} tasks mixed)", serve_tasks.len())
+            );
+            let mut rj = Json::obj();
+            rj.set("batch", Json::num(bsz as f64));
+            ms(&mut rj, "p50_ms", p50);
+            ms(&mut rj, "p99_ms", p99);
+            rj.set("req_per_s", Json::num(rps.round()));
+            rows.set(&format!("b{bsz}"), rj);
+        }
+
+        // adapter economics: hot-swapping a task's bank entry (vector
+        // copies) vs re-uploading the whole backbone (what task switching
+        // would cost without the bank)
+        let mut session = ServeSession::new(&engine, smodel, &store, 8).unwrap();
+        for a in &adapters {
+            session.register_task(a.clone()).unwrap();
+        }
+        let swap = adapters[0].clone();
+        let s_swap = b.run("serve/adapter_swap", || {
+            session.register_task(swap.clone()).unwrap()
+        });
+        let s_up = b.run("serve/full_reupload", || {
+            store
+                .tensors
+                .iter()
+                .map(|t| engine.upload(t).unwrap())
+                .count()
+        });
+        let swap_us = s_swap.mean_ms() * 1e3;
+        let reupload_ms = s_up.mean_ms();
+        println!(
+            "bench {:<44} swap={swap_us:.2}us reupload={reupload_ms:.3}ms \
+             ratio={:.0}x ({} adapter scalars/task)",
+            format!("serve_swap/{smodel}"),
+            (reupload_ms * 1e3) / swap_us.max(1e-9),
+            adapters[0].scalars()
+        );
+        serve_json.set("provenance", Json::str("measured"));
+        serve_json.set("model", Json::str(smodel));
+        serve_json.set("tasks", Json::num(serve_tasks.len() as f64));
+        serve_json.set(
+            "adapter_scalars_per_task",
+            Json::num(adapters[0].scalars() as f64),
+        );
+        ms(&mut serve_json, "adapter_swap_us", swap_us);
+        ms(&mut serve_json, "full_reupload_ms", reupload_ms);
+        serve_json.set(
+            "swap_vs_reupload",
+            Json::num(((reupload_ms * 1e3) / swap_us.max(1e-9)).round()),
+        );
+        serve_json.set("steady_arena_misses", Json::num(steady_misses as f64));
+        serve_json.set("steady_pool_spawns", Json::num(steady_spawns as f64));
+        serve_json.set("steady_repacks", Json::num(steady_repacks as f64));
+        serve_json.set("rows", rows);
+    }
+
     // record the comparison next to the repo root for the perf trajectory
     let mut out = Json::obj();
     out.set(
@@ -440,7 +592,8 @@ fn main() {
         Json::str(
             "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
              vs blocked vs blocked+parallel vs packed+fused (native backend), plus \
-             persistent-pool vs scoped dispatch latency (PR 4)",
+             persistent-pool vs scoped dispatch latency (PR 4) and multi-tenant \
+             serve-path rows (PR 5); schema in docs/BENCH_SCHEMA.md",
         ),
     );
     out.set("provenance", Json::str("measured"));
@@ -452,6 +605,7 @@ fn main() {
     out.set("train_step", step_json);
     out.set("matmul", mm_json);
     out.set("pool", pool_json);
+    out.set("serve", serve_json);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(path, out.render_pretty()) {
         Ok(()) => println!("bench results recorded to {path}"),

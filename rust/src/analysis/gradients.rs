@@ -15,6 +15,7 @@ pub struct GradAccum {
 }
 
 impl GradAccum {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }

@@ -11,8 +11,11 @@ use crate::report::BoxStats;
 /// before/after fine-tuning, plus the relative change Δ (paper Eq. 2).
 #[derive(Debug, Clone)]
 pub struct NormShift {
+    /// Encoder layer index.
     pub layer: usize,
+    /// Norm distribution before fine-tuning.
     pub before: BoxStats,
+    /// Norm distribution after fine-tuning.
     pub after: BoxStats,
     /// Δ = (||A_a|| - ||A_b||) / ||A_b||, distribution over examples.
     pub delta: BoxStats,
@@ -48,10 +51,13 @@ pub fn norm_shift(before: &[Vec<f32>], after: &[Vec<f32>]) -> Vec<NormShift> {
 /// over hidden and sequence — paper Eq. 3-4) per layer for one setting.
 #[derive(Debug, Clone)]
 pub struct Characteristic {
+    /// Encoder layer index.
     pub layer: usize,
+    /// Distribution of per-example characteristic values.
     pub dist: BoxStats,
 }
 
+/// Compute Fig. 2 statistics from per-layer adapter-output means.
 pub fn characteristics(means: &[Vec<f32>]) -> Vec<Characteristic> {
     means
         .iter()

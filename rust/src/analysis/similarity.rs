@@ -15,6 +15,7 @@ use super::cosine;
 /// Extracted adapter vectors from a tuned store.
 #[derive(Debug, Clone)]
 pub struct AdapterVectors {
+    /// Task the vectors were tuned on.
     pub task: String,
     /// per-layer hadamard.weight.
     pub weights: Vec<Vec<f32>>,
@@ -22,6 +23,7 @@ pub struct AdapterVectors {
     pub biases: Vec<Vec<f32>>,
     /// per-layer output LayerNorm weight / bias (the Fig 5 b-panels).
     pub norm_weights: Vec<Vec<f32>>,
+    /// Per-layer output-LayerNorm biases.
     pub norm_biases: Vec<Vec<f32>>,
 }
 
@@ -66,12 +68,14 @@ pub fn layer_distributions(
 /// Cross-task cosine-similarity matrix at one layer (or averaged).
 #[derive(Debug, Clone)]
 pub struct SimMatrix {
+    /// Task order of the matrix rows/columns.
     pub tasks: Vec<String>,
     /// row-major [n x n].
     pub values: Vec<f64>,
 }
 
 impl SimMatrix {
+    /// Similarity between tasks `i` and `j`.
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.values[i * self.tasks.len() + j]
     }

@@ -18,8 +18,11 @@ pub struct Config {
     /// artifact executor: "native" (pure Rust, default) or "xla" (PJRT,
     /// requires `--features xla` and `make artifacts`).
     pub backend: String,
+    /// AOT artifacts directory (manifest + HLO files).
     pub artifacts_dir: PathBuf,
+    /// Pre-trained backbone checkpoint directory.
     pub checkpoints_dir: PathBuf,
+    /// Experiment output directory (run cache, tables, figures).
     pub results_dir: PathBuf,
     /// models to sweep in experiments ("base", "large").
     pub models: Vec<String>,
@@ -38,9 +41,11 @@ pub struct Config {
     pub seed: u64,
     /// pre-training steps per backbone.
     pub pretrain_steps: usize,
+    /// Pre-training peak learning rate.
     pub pretrain_lr: f32,
     /// two-stage budgets.
     pub stage1_steps: usize,
+    /// Main-stage steps.
     pub main_steps: usize,
     /// quick mode: tiny budgets for smoke-testing the whole suite.
     pub quick: bool,
@@ -77,6 +82,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Apply a parsed JSON config on top of the current values.
     pub fn apply_json(&mut self, j: &Json) -> Result<()> {
         if let Some(v) = j.opt("backend") {
             self.backend = v.as_str()?.into();

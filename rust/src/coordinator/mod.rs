@@ -16,16 +16,20 @@ use crate::config::Config;
 use crate::data::{generate, task_info, Dataset};
 use crate::methods::Method;
 use crate::model::ParamStore;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, TaskAdapter};
 use crate::train::{load_or_pretrain, tune, TuneOpts, TuneResult};
 use crate::util::json::Json;
 
 /// One scheduled run.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
+    /// Model size to run.
     pub model: String,
+    /// Task to tune on.
     pub task: String,
+    /// Method registry name (may carry ablation decorations).
     pub method: String,
+    /// Seed for data and initialization.
     pub seed: u64,
 }
 
@@ -59,17 +63,26 @@ impl RunSpec {
 /// A completed run's persisted summary.
 #[derive(Debug, Clone)]
 pub struct RunRecord {
+    /// The run's specification.
     pub spec: RunSpec,
+    /// Dev-set score (paper scale).
     pub score: f64,
+    /// Scalars trained in the main stage.
     pub trainable_scalars: usize,
+    /// Adapter-only scalars (paper's headline numerator).
     pub adapter_scalars: usize,
+    /// `adapter_scalars` over the backbone total.
     pub param_fraction: f64,
+    /// Wall-clock seconds the run took.
     pub wall_secs: f64,
+    /// Final stage-1 loss, when stage 1 ran.
     pub stage1_final_loss: Option<f64>,
+    /// Final main-stage loss.
     pub main_final_loss: Option<f64>,
 }
 
 impl RunRecord {
+    /// Serialize for the run cache.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("model", Json::str(&self.spec.model))
@@ -90,6 +103,7 @@ impl RunRecord {
         j
     }
 
+    /// Deserialize a cached run record.
     pub fn from_json(j: &Json) -> Result<RunRecord> {
         Ok(RunRecord {
             spec: RunSpec {
@@ -113,13 +127,16 @@ impl RunRecord {
 
 /// The coordinator.
 pub struct Coordinator {
+    /// The engine all runs share.
     pub engine: Engine,
+    /// Effective configuration.
     pub config: Config,
     backbones: HashMap<(String, u64), ParamStore>,
     datasets: HashMap<(String, String), Dataset>,
 }
 
 impl Coordinator {
+    /// A coordinator over the config's engine.
     pub fn new(config: Config) -> Result<Self> {
         let engine = config.engine()?;
         Ok(Coordinator {
@@ -264,6 +281,21 @@ impl Coordinator {
             main_final_loss: result.main_losses.last().map(|&x| x as f64),
         };
         Ok((rec, result))
+    }
+
+    /// Train (or fetch from the run cache) one `(model, task, method)`
+    /// cell and distill its tuned store into a serve-ready adapter-bank
+    /// entry — the bridge from the experiment harness to the multi-tenant
+    /// serve path (`runtime::serve`): a few-KB [`TaskAdapter`] that a
+    /// [`crate::runtime::ServeSession`] hot-registers against the shared
+    /// frozen backbone.
+    pub fn export_adapter(&mut self, spec: &RunSpec) -> Result<TaskAdapter> {
+        let (_rec, store) = self.run_with_store(spec)?;
+        let classes = task_info(&spec.task)
+            .with_context(|| format!("unknown task '{}'", spec.task))?
+            .classes;
+        let info = self.engine.manifest().model(&spec.model)?;
+        TaskAdapter::from_store(info, &store, &spec.task, classes)
     }
 
     /// Run a whole grid, returning records keyed (model, task, method).

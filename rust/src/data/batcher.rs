@@ -7,16 +7,21 @@
 
 use crate::util::Rng;
 
-use super::tasks::{Dataset, Example, Label};
+use super::tasks::{Dataset, Label};
 use super::vocab;
 
 /// A classification/regression batch in host form.
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Examples in the batch (padding included).
     pub size: usize,
+    /// Tokens per example.
     pub seq: usize,
+    /// Token ids, `[size, seq]`.
     pub tokens: Vec<i32>,
+    /// Segment ids, `[size, seq]`.
     pub type_ids: Vec<i32>,
+    /// Attention mask, `[size, seq]`.
     pub attn_mask: Vec<f32>,
     /// one-hot [B, 3] for classification tasks.
     pub labels_onehot: Vec<f32>,
@@ -28,7 +33,10 @@ pub struct Batch {
     pub real: usize,
 }
 
-/// Encode one example into row `b` of the batch buffers.
+/// Encode one example's raw sentences into caller-provided row buffers
+/// (each exactly `seq` long) — the single-example entry the serve path
+/// re-encodes into its resident batch buffers, and what [`make_batch`]
+/// loops over.
 ///
 /// The sentence budget is `seq` minus the special tokens, *saturating*: a
 /// degenerate `seq_len` (smaller than `[CLS] ... [SEP] ... [SEP]`) clamps
@@ -36,43 +44,44 @@ pub struct Batch {
 /// is truncated to `seq` so even `seq_len < 3` never writes out of
 /// bounds. Under proportional pair truncation every present segment keeps
 /// at least one token whenever the budget allows.
-fn encode(
-    e: &Example,
+pub fn encode_into(
+    seq_a: &[i32],
+    seq_b: Option<&[i32]>,
     seq: usize,
     tokens: &mut [i32],
     type_ids: &mut [i32],
     attn: &mut [f32],
 ) {
-    let b_len = e.seq_b.as_ref().map_or(0, |b| b.len());
+    let b_len = seq_b.map_or(0, |b| b.len());
     // budget: CLS + a + SEP (+ b + SEP)
     let specials = if b_len > 0 { 3 } else { 2 };
     let avail = seq.saturating_sub(specials);
     let (a_keep, b_keep) = if b_len == 0 {
-        (e.seq_a.len().min(avail), 0)
+        (seq_a.len().min(avail), 0)
     } else {
         // proportional truncation
-        let total = e.seq_a.len() + b_len;
+        let total = seq_a.len() + b_len;
         if total <= avail {
-            (e.seq_a.len(), b_len)
+            (seq_a.len(), b_len)
         } else if avail == 0 {
             (0, 0)
         } else {
             // keep a's share, but leave b at least one token when
             // avail >= 2 (the old `.max(1)` could drive `avail - a_k`
             // below zero and underflow)
-            let a_k = (avail * e.seq_a.len() / total)
+            let a_k = (avail * seq_a.len() / total)
                 .clamp(1, (avail - 1).max(1))
-                .min(e.seq_a.len());
+                .min(seq_a.len());
             (a_k, avail - a_k)
         }
     };
     let mut enc: Vec<(i32, i32)> = Vec::with_capacity(a_keep + b_keep + specials);
     enc.push((vocab::CLS, 0));
-    for &t in &e.seq_a[..a_keep] {
+    for &t in &seq_a[..a_keep] {
         enc.push((t, 0));
     }
     enc.push((vocab::SEP, 0));
-    if let Some(bseq) = &e.seq_b {
+    if let Some(bseq) = seq_b {
         for &t in &bseq[..b_keep] {
             enc.push((t, 1));
         }
@@ -109,8 +118,9 @@ pub fn make_batch(ds: &Dataset, idx: &[usize], batch: usize, seq: usize) -> Batc
     };
     for b in 0..batch {
         let e = &ds.examples[idx[b.min(idx.len() - 1)]];
-        encode(
-            e,
+        encode_into(
+            &e.seq_a,
+            e.seq_b.as_deref(),
             seq,
             &mut out.tokens[b * seq..(b + 1) * seq],
             &mut out.type_ids[b * seq..(b + 1) * seq],
@@ -145,6 +155,7 @@ pub struct BatchIter<'a> {
 }
 
 impl<'a> BatchIter<'a> {
+    /// Shuffled iteration for training.
     pub fn new(ds: &'a Dataset, rng: &mut Rng, batch: usize, seq: usize) -> Self {
         let mut order: Vec<usize> = (0..ds.examples.len()).collect();
         rng.shuffle(&mut order);

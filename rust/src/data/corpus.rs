@@ -19,18 +19,23 @@ const LOCAL_STEP: i32 = 4;
 /// A generated sentence with its latent topic.
 #[derive(Debug, Clone)]
 pub struct Sentence {
+    /// Latent topic the sentence was drawn from.
     pub topic: usize,
+    /// Content token ids (no specials).
     pub tokens: Vec<i32>,
 }
 
 /// Deterministic corpus generator.
 pub struct Corpus {
     rng: Rng,
+    /// Minimum sentence length.
     pub min_len: usize,
+    /// Maximum sentence length.
     pub max_len: usize,
 }
 
 impl Corpus {
+    /// A deterministic generator from a seed.
     pub fn new(seed: u64) -> Self {
         Corpus { rng: Rng::new(seed), min_len: 6, max_len: 24 }
     }
@@ -62,6 +67,7 @@ impl Corpus {
         Sentence { topic, tokens }
     }
 
+    /// Generate a sentence with a random topic.
     pub fn sentence(&mut self) -> Sentence {
         let topic = self.rng.below(vocab::TOPICS);
         self.sentence_with_topic(topic)
@@ -89,10 +95,15 @@ impl Corpus {
 /// An MLM pre-training batch in host form.
 #[derive(Debug, Clone)]
 pub struct MlmBatch {
+    /// Token ids, `[B, L]`.
     pub tokens: Vec<i32>,
+    /// Segment ids, `[B, L]`.
     pub type_ids: Vec<i32>,
+    /// Attention mask, `[B, L]`.
     pub attn_mask: Vec<f32>,
+    /// Original token at masked positions, `[B, L]`.
     pub labels: Vec<i32>,
+    /// 1.0 at positions contributing to the MLM loss, `[B, L]`.
     pub loss_mask: Vec<f32>,
 }
 

@@ -6,6 +6,6 @@ pub mod corpus;
 pub mod tasks;
 pub mod vocab;
 
-pub use batcher::{class_mask, make_batch, Batch, BatchIter};
+pub use batcher::{class_mask, encode_into, make_batch, Batch, BatchIter};
 pub use corpus::{mlm_batch, Corpus, MlmBatch, Sentence};
 pub use tasks::{generate, task_info, Dataset, Example, Label, Metric, TaskInfo, TASKS};

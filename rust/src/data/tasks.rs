@@ -26,34 +26,48 @@ use super::vocab;
 /// Task label.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Label {
+    /// Classification label.
     Class(usize),
+    /// Regression score (STS-B style).
     Score(f32),
 }
 
 /// One example: one or two token sequences plus a label.
 #[derive(Debug, Clone)]
 pub struct Example {
+    /// First sentence, as token ids.
     pub seq_a: Vec<i32>,
+    /// Second sentence for pair tasks.
     pub seq_b: Option<Vec<i32>>,
+    /// Gold label.
     pub label: Label,
 }
 
 /// Evaluation metric (paper Sec. 4.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {
+    /// Plain accuracy.
     Accuracy,
+    /// Matthews correlation (CoLA).
     Matthews,
+    /// Pearson correlation (STS-B).
     Pearson,
 }
 
 /// Static description of a task.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TaskInfo {
+    /// Task name (GLUE-style lowercase).
     pub name: &'static str,
+    /// Number of classes (regression tasks use the regressor head).
     pub classes: usize,
+    /// Whether the task is scored by regression.
     pub regression: bool,
+    /// Headline metric.
     pub metric: Metric,
+    /// Full train-split size.
     pub train_size: usize,
+    /// Full dev-split size.
     pub dev_size: usize,
 }
 
@@ -125,6 +139,7 @@ pub const TASKS: [TaskInfo; 8] = [
     },
 ];
 
+/// Look up a task by name.
 pub fn task_info(name: &str) -> Option<TaskInfo> {
     TASKS.iter().copied().find(|t| t.name == name)
 }
@@ -132,7 +147,9 @@ pub fn task_info(name: &str) -> Option<TaskInfo> {
 /// A materialized dataset split.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// The task this dataset instantiates.
     pub info: TaskInfo,
+    /// Generated examples.
     pub examples: Vec<Example>,
 }
 

@@ -7,9 +7,13 @@
 
 /// Special tokens.
 pub const PAD: i32 = 0;
+/// `[CLS]` classification token.
 pub const CLS: i32 = 1;
+/// `[SEP]` separator token.
 pub const SEP: i32 = 2;
+/// `[MASK]` MLM mask token.
 pub const MASK: i32 = 3;
+/// Unknown-token id.
 pub const UNK: i32 = 4;
 /// Question marker (QNLI/QQP-style "questions").
 pub const QMARK: i32 = 5;
@@ -75,10 +79,12 @@ pub fn negative_tokens() -> impl Iterator<Item = i32> {
     (0..SENT_K).map(|i| band_start(1) + i)
 }
 
+/// Whether a token belongs to the positive sentiment lexicon.
 pub fn is_positive(tok: i32) -> bool {
     tok >= band_start(0) && tok < band_start(0) + SENT_K
 }
 
+/// Whether a token belongs to the negative sentiment lexicon.
 pub fn is_negative(tok: i32) -> bool {
     tok >= band_start(1) && tok < band_start(1) + SENT_K
 }

@@ -15,6 +15,7 @@ use crate::train::evaluate;
 
 use super::TASK_ORDER;
 
+/// Regenerate Fig. 1 (attention-output norm shifts).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     let model = coord
         .config

@@ -18,6 +18,7 @@ use super::TASK_ORDER;
 
 const SETTINGS: [&str; 4] = ["hadamard^o1", "hadamard^o2", "hadamard^o3", "full"];
 
+/// Regenerate Fig. 2 (adapter characteristic values).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     let model = coord
         .config

@@ -18,6 +18,7 @@ use crate::report::{BoxStats, Table};
 
 use super::TASK_ORDER;
 
+/// Regenerate Fig. 5 (cross-task adapter similarity).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     // Paper uses RoBERTa-large here; we use the largest configured model.
     let model = coord

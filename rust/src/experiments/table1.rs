@@ -21,9 +21,11 @@ use crate::runtime::Manifest;
 use crate::train::Session;
 use crate::util::Rng;
 
+/// Tasks probed for the gradient study.
 pub const TASKS: [&str; 2] = ["mrpc", "sst2"];
 const TOP_K: usize = 5;
 
+/// Regenerate Table 1 (per-group gradient magnitudes).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     let model = coord
         .config

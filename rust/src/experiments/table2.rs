@@ -10,8 +10,10 @@ use crate::report::Table;
 
 use super::TASK_ORDER;
 
+/// The three training regimes compared.
 pub const METHODS: [&str; 3] = ["classifier", "hadamard", "full"];
 
+/// Regenerate Table 2 (regime comparison across tasks).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     let models = coord.config.models.clone();
     let recs = coord.run_grid(&models, &TASK_ORDER, &METHODS)?;

@@ -12,9 +12,11 @@ use crate::report::{pct, Table};
 
 use super::TASK_ORDER;
 
+/// All parameter-efficient methods in the comparison.
 pub const METHODS: [&str; 6] =
     ["hadamard", "bitfit", "lora", "houlsby", "ia3", "lntuning"];
 
+/// Regenerate Table 3 (methods comparison under one harness).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     // Time budget: Table 3 runs on the first configured model (the paper's
     // BERT-base block); the hadamard rows are shared with Table 2's cache.

@@ -29,6 +29,7 @@ pub const COMBOS: [&str; 12] = [
     "hadamard",
 ];
 
+/// Regenerate Table 4 (module-combination ablation).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     // Paper runs Table 4 on BERT-base; we use our smallest experiment model.
     let model = coord

@@ -28,6 +28,7 @@ pub fn layer_sweep(depth: usize) -> Vec<usize> {
     ks
 }
 
+/// Regenerate Table 5 (layer-range unfreezing).
 pub fn run(coord: &mut Coordinator) -> Result<()> {
     let models = coord.config.models.clone();
     let mut t = Table::new(

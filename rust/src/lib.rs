@@ -28,7 +28,26 @@
 //!   crate to actually run this path (select it with `backend=xla` in the
 //!   config).
 //!
+//! ## Workloads
+//!
+//! Besides the two-stage tuning pipeline and the experiment drivers, the
+//! runtime serves: [`runtime::ServeSession`] holds one packed frozen
+//! backbone plus a bank of per-task Hadamard adapters
+//! ([`runtime::AdapterBank`]) and micro-batches classification requests
+//! *across* tasks through the forward-only [`runtime::Engine::infer`]
+//! entry — the paper's parameter-efficiency claim turned into a
+//! multi-tenant throughput claim (`hadapt serve-demo` drives it from the
+//! CLI).
+//!
 //! Python never runs on the training path in either mode.
+//!
+//! The repo-root `ARCHITECTURE.md` documents the runtime's five-layer
+//! design, the determinism matrix and the counter-verified invariants
+//! (zero-alloc / zero-spawn / zero-repack steady states).
+#![warn(missing_docs)]
+
+/// Analysis passes behind the paper's figures (gradient probes,
+/// similarity matrices, characteristic distributions).
 pub mod analysis;
 pub mod config;
 pub mod coordinator;

@@ -5,21 +5,29 @@
 //! hadapt pretrain --model base        # MLM pre-train a backbone
 //! hadapt train --model base --task sst2 --method hadamard
 //! hadapt eval --model base --task sst2 --ckpt path.ckpt
+//! hadapt serve-demo --model tiny      # multi-tenant adapter serving demo
 //! hadapt experiment table2            # regenerate a paper table/figure
 //! hadapt experiment all               # the whole evaluation section
 //! ```
 //!
 //! Global flags: `--set key=value` (config overrides), `--quick`,
-//! `--config path.json`.
+//! `--config path.json`. `serve-demo` adds `--requests N`, `--batch B`,
+//! `--tasks a,b,c` and `--trained` (export adapters from real tuning runs
+//! through the coordinator instead of synthesizing them).
+
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use hadapt::config::Config;
 use hadapt::coordinator::{Coordinator, RunSpec};
+use hadapt::data::{generate, task_info};
 use hadapt::methods::Method;
 use hadapt::model::ParamStore;
 use hadapt::report::pct;
+use hadapt::runtime::{Engine, ServeRequest, ServeSession, TaskAdapter};
 use hadapt::train::{evaluate, load_or_pretrain};
+use hadapt::util::Rng;
 
 struct Cli {
     command: String,
@@ -31,7 +39,7 @@ fn parse_args() -> Result<Cli> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         bail!(
-            "usage: hadapt <info|pretrain|train|eval|experiment> [args] \
+            "usage: hadapt <info|pretrain|train|eval|serve-demo|experiment> [args] \
              [--model M] [--task T] [--method X] [--quick] [--set k=v]"
         );
     }
@@ -42,8 +50,8 @@ fn parse_args() -> Result<Cli> {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            if name == "quick" {
-                flags.push(("quick".into(), "true".into()));
+            if name == "quick" || name == "trained" {
+                flags.push((name.to_string(), "true".into()));
             } else {
                 i += 1;
                 let v = args
@@ -72,9 +80,14 @@ impl Cli {
 fn build_config(cli: &Cli) -> Result<Config> {
     let path = cli.flag("config").unwrap_or("hadapt.json");
     let mut cfg = Config::load(path)?;
+    // serve-demo's own flags are only accepted for that command — on any
+    // other command they fall through to cfg.set and fail loudly, so
+    // e.g. `train --batch 32` cannot silently no-op.
+    let serve_demo = cli.command == "serve-demo";
     for (k, v) in &cli.flags {
         match k.as_str() {
             "config" | "model" | "task" | "method" | "ckpt" | "out" => {}
+            "requests" | "batch" | "tasks" | "trained" if serve_demo => {}
             "set" => {
                 let (kk, vv) = v
                     .split_once('=')
@@ -189,6 +202,207 @@ fn cmd_eval(cfg: Config, cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `hadapt serve-demo`: drive N mixed-task requests through a
+/// [`ServeSession`] — one packed frozen backbone, per-task Hadamard
+/// adapter banks, cross-task micro-batching — and verify the serve-path
+/// zero-contracts (no repacks, no steady-state spawns, no steady-state
+/// arena misses) with live counters. Fails loudly if any contract breaks,
+/// which is what makes it a usable CI smoke test.
+fn cmd_serve_demo(cfg: Config, cli: &Cli) -> Result<()> {
+    let model = cli.flag("model").unwrap_or("tiny").to_string();
+    let requests: usize = cli
+        .flag("requests")
+        .unwrap_or("48")
+        .parse()
+        .context("--requests wants a number")?;
+    let max_batch: usize = cli
+        .flag("batch")
+        .unwrap_or("8")
+        .parse()
+        .context("--batch wants a number")?;
+    let tasks: Vec<String> = cli
+        .flag("tasks")
+        .unwrap_or("sst2,mrpc,rte")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let trained = cli.flag("trained").is_some();
+    let seed = cfg.seed;
+
+    if trained {
+        // Real pipeline: tune each task with the coordinator (run-cache
+        // aware), export the tuned vectors into bank entries.
+        let mut coord = Coordinator::new(cfg)?;
+        let mut adapters = Vec::new();
+        for task in &tasks {
+            adapters.push(coord.export_adapter(&RunSpec {
+                model: model.clone(),
+                task: task.clone(),
+                method: "hadamard".into(),
+                seed,
+            })?);
+        }
+        coord.backbone(&model)?;
+        let store = coord.backbones_get(&model).unwrap().clone();
+        run_serve_demo(&coord.engine, &model, &store, adapters, &tasks, requests, max_batch, seed)
+    } else {
+        // Synthetic pipeline (default; fast enough for CI): a fresh
+        // deterministic backbone and per-task adapters derived from it by
+        // seeded perturbation, so tasks genuinely disagree.
+        let engine = cfg.engine()?;
+        let info = engine.manifest().model(&model)?.clone();
+        let store = ParamStore::init(&info, seed);
+        let mut adapters = Vec::new();
+        for (ti, task) in tasks.iter().enumerate() {
+            let classes = task_info(task)
+                .with_context(|| format!("unknown task '{task}'"))?
+                .classes
+                .max(1);
+            let mut a = TaskAdapter::from_store(&info, &store, task, classes)?;
+            let mut rng = Rng::new(seed.wrapping_add(7919 * (ti as u64 + 1)));
+            for li in 0..a.had_w.len() {
+                for v in a.had_w[li].iter_mut() {
+                    *v += 0.05 * rng.normal();
+                }
+                for v in a.had_b[li].iter_mut() {
+                    *v += 0.05 * rng.normal();
+                }
+            }
+            adapters.push(a);
+        }
+        run_serve_demo(&engine, &model, &store, adapters, &tasks, requests, max_batch, seed)
+    }
+}
+
+/// The serve-demo body: register the bank, pump mixed-task traffic,
+/// hot-swap an adapter mid-stream, report throughput/latency and check
+/// the zero-contract counters.
+#[allow(clippy::too_many_arguments)]
+fn run_serve_demo(
+    engine: &Engine,
+    model: &str,
+    store: &ParamStore,
+    adapters: Vec<TaskAdapter>,
+    tasks: &[String],
+    requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> Result<()> {
+    let mut session = ServeSession::new(engine, model, store, max_batch)?;
+    for a in adapters {
+        println!(
+            "bank: task '{:<6}' registered ({} adapter scalars, {} classes)",
+            a.task,
+            a.scalars(),
+            a.classes
+        );
+        session.register_task(a)?;
+    }
+
+    // Request stream: real encoded examples, round-robin across tasks so
+    // every micro-batch mixes tenants.
+    let streams: Vec<_> = tasks
+        .iter()
+        .map(|task| {
+            task_info(task)
+                .with_context(|| format!("unknown task '{task}'"))
+                .map(|info| generate(info, seed, "dev", 32))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut reqs = Vec::with_capacity(requests.max(1));
+    for i in 0..requests.max(1) {
+        let (task, ds) = (&tasks[i % tasks.len()], &streams[i % streams.len()]);
+        let e = &ds.examples[i % ds.examples.len()];
+        reqs.push(ServeRequest {
+            task: task.clone(),
+            seq_a: e.seq_a.clone(),
+            seq_b: e.seq_b.clone(),
+        });
+    }
+
+    // Warm-up batch: populates the workspace arena, spawns the persistent
+    // workers, packs the frozen backbone — everything after this must be
+    // steady state.
+    session.submit(reqs[0].clone())?;
+    session.run_pending()?;
+    let (_, arena_misses_0) = engine.arena_stats();
+    let pool_0 = engine.pool_stats();
+    let (packs_live_0, repacks_0) = engine.pack_stats();
+
+    let t0 = Instant::now();
+    let mut latencies = Vec::new();
+    for wave in reqs.chunks(max_batch) {
+        for r in wave {
+            session.submit(r.clone())?;
+        }
+        for reply in session.run_pending()? {
+            latencies.push(reply.latency_s);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Hot adapter swap mid-traffic: redeploy task 0 with nudged vectors,
+    // then serve one more wave — the swap must cost vector copies only.
+    let mut swapped = TaskAdapter::from_store(
+        engine.manifest().model(model)?,
+        store,
+        &tasks[0],
+        session.bank().get(&tasks[0]).unwrap().classes,
+    )?;
+    for v in swapped.had_b[0].iter_mut() {
+        *v += 0.125;
+    }
+    session.register_task(swapped)?;
+    for r in reqs.iter().take(max_batch) {
+        session.submit(r.clone())?;
+    }
+    session.run_pending()?;
+
+    let (_, arena_misses_1) = engine.arena_stats();
+    let pool_1 = engine.pool_stats();
+    let (packs_live_1, repacks_1) = engine.pack_stats();
+
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let stats = session.stats();
+    let p50 = latencies[latencies.len() / 2] * 1e3;
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)] * 1e3;
+    println!(
+        "served {} requests over {} tasks in {:.3}s — {:.0} req/s (batch {}, {} batches, \
+         {} padded rows)",
+        stats.requests,
+        tasks.len(),
+        wall,
+        latencies.len() as f64 / wall.max(1e-9),
+        max_batch,
+        stats.batches,
+        stats.padded_rows
+    );
+    println!("latency: p50 {p50:.3}ms  p99 {p99:.3}ms (queue wait included)");
+
+    if arena_misses_1 != arena_misses_0 {
+        bail!("serve steady state missed the arena ({arena_misses_0} -> {arena_misses_1})");
+    }
+    if pool_1.threads_spawned != pool_0.threads_spawned {
+        bail!(
+            "serve steady state spawned threads ({} -> {})",
+            pool_0.threads_spawned,
+            pool_1.threads_spawned
+        );
+    }
+    if repacks_1 != repacks_0 || packs_live_1 != packs_live_0 {
+        bail!(
+            "adapter traffic touched the pack cache (live {packs_live_0} -> {packs_live_1}, \
+             repacks {repacks_0} -> {repacks_1})"
+        );
+    }
+    println!(
+        "zero-contracts OK: arena misses frozen at {arena_misses_0}, spawns frozen at {}, \
+         repacks {repacks_0}, adapter swap = vector copy",
+        pool_0.threads_spawned
+    );
+    Ok(())
+}
+
 fn cmd_experiment(cfg: Config, cli: &Cli) -> Result<()> {
     let id = cli
         .positional
@@ -213,6 +427,7 @@ fn main() -> Result<()> {
         "pretrain" => cmd_pretrain(&cfg, &cli),
         "train" => cmd_train(cfg, &cli),
         "eval" => cmd_eval(cfg, &cli),
+        "serve-demo" => cmd_serve_demo(cfg, &cli),
         "experiment" => cmd_experiment(cfg, &cli),
         other => bail!("unknown command '{other}'"),
     }

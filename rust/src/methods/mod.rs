@@ -22,17 +22,22 @@ pub enum Pipeline {
 /// A fully-specified tuning method.
 #[derive(Debug, Clone)]
 pub struct Method {
+    /// Registry name (Table 3 row label; ablations add decorations).
     pub name: String,
     /// gradient-group artifact used in the main stage.
     pub group: &'static str,
+    /// One- or two-stage training.
     pub pipeline: Pipeline,
     /// Module selectors for hadamard-family masks; None = whole group.
     pub modules: Option<Vec<Module>>,
+    /// Which encoder layers unfreeze.
     pub layers: LayerRange,
     /// Whether the main-stage mask includes the head (single-stage methods
     /// train it jointly; the paper's two-stage freezes it in stage 2).
     pub head_in_main_stage: bool,
+    /// Stage-1 (head) learning rate.
     pub lr_stage1: f32,
+    /// Main-stage learning rate.
     pub lr_main: f32,
 }
 

@@ -29,6 +29,7 @@ pub enum Module {
 }
 
 impl Module {
+    /// Whether a canonical parameter name belongs to this module.
     pub fn matches(&self, name: &str) -> bool {
         match self {
             Module::HadamardWeight => name.ends_with(".hadamard.weight"),
@@ -43,6 +44,7 @@ impl Module {
         }
     }
 
+    /// Paper-style single-letter label (Table 4 column headers).
     pub fn label(&self) -> &'static str {
         match self {
             Module::HadamardWeight => "W",
@@ -75,6 +77,7 @@ pub fn parse_modules(combo: &str) -> Vec<Module> {
 /// consistent with Fig. 1's finding that late layers change most).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerRange {
+    /// Unfreeze every encoder layer.
     All,
     /// Unfreeze the top (last) `k` layers; earlier adapter layers stay
     /// identity.
@@ -162,6 +165,7 @@ impl FreezeMask {
         }
     }
 
+    /// Whether parameter `idx` updates under this mask.
     pub fn is_trainable(&self, idx: usize) -> bool {
         self.trainable[idx]
     }
@@ -181,6 +185,7 @@ impl FreezeMask {
         self.trainable_scalars(info) as f64 / info.backbone_params() as f64
     }
 
+    /// Element-wise OR of two masks over the same parameter list.
     pub fn union(&self, other: &FreezeMask) -> FreezeMask {
         FreezeMask {
             trainable: self

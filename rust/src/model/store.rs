@@ -19,6 +19,7 @@ const MAGIC: &[u8; 8] = b"HADAPT01";
 /// Host-resident parameters for one model instance.
 #[derive(Debug, Clone)]
 pub struct ParamStore {
+    /// Model name the store was initialized for.
     pub model: String,
     /// tensors in canonical (manifest) order.
     pub tensors: Vec<Tensor>,
@@ -51,18 +52,22 @@ impl ParamStore {
         ParamStore { model: info.name.clone(), tensors, names }
     }
 
+    /// Number of tensors (== the manifest's parameter count).
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// Whether the store holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }
 
+    /// Total scalars across all tensors.
     pub fn total_scalars(&self) -> usize {
         self.tensors.iter().map(|t| t.numel()).sum()
     }
 
+    /// Canonical index of a parameter name.
     pub fn index_of(&self, name: &str) -> Result<usize> {
         self.names
             .iter()
@@ -70,10 +75,12 @@ impl ParamStore {
             .ok_or_else(|| anyhow::anyhow!("no parameter '{name}'"))
     }
 
+    /// Borrow a parameter tensor by name.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         Ok(&self.tensors[self.index_of(name)?])
     }
 
+    /// Mutably borrow a parameter tensor by name.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
         let i = self.index_of(name)?;
         Ok(&mut self.tensors[i])
@@ -123,6 +130,7 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Load a checkpoint written by [`ParamStore::save`].
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let mut bytes = Vec::new();
         std::fs::File::open(path.as_ref())

@@ -6,9 +6,13 @@ use std::collections::HashMap;
 /// AdamW state for a set of named tensors.
 #[derive(Debug)]
 pub struct AdamW {
+    /// First-moment decay rate.
     pub beta1: f32,
+    /// Second-moment decay rate.
     pub beta2: f32,
+    /// Denominator epsilon.
     pub eps: f32,
+    /// Decoupled weight-decay coefficient.
     pub weight_decay: f32,
     step: u64,
     /// name -> (m, v); allocated on first update of each tensor.
@@ -16,6 +20,7 @@ pub struct AdamW {
 }
 
 impl AdamW {
+    /// AdamW with standard betas/eps and the given weight decay.
     pub fn new(weight_decay: f32) -> Self {
         AdamW {
             beta1: 0.9,
@@ -32,6 +37,7 @@ impl AdamW {
         Self::new(0.01)
     }
 
+    /// Steps taken so far (see [`AdamW::next_step`]).
     pub fn step_count(&self) -> u64 {
         self.step
     }

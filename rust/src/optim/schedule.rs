@@ -3,6 +3,7 @@
 /// Schedule kind.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Schedule {
+    /// Constant learning rate.
     Constant,
     /// Linear warmup for `warmup` steps then linear decay to zero at
     /// `total` steps (BERT fine-tuning standard).
@@ -12,15 +13,20 @@ pub enum Schedule {
 /// A schedule bound to a base learning rate.
 #[derive(Debug, Clone, Copy)]
 pub struct LrSchedule {
+    /// Base (peak) learning rate.
     pub base: f32,
+    /// Shape of the schedule.
     pub kind: Schedule,
 }
 
 impl LrSchedule {
+    /// Constant schedule at `base`.
     pub fn constant(base: f32) -> Self {
         LrSchedule { base, kind: Schedule::Constant }
     }
 
+    /// Linear warmup to `base` over `warmup` steps, then linear decay
+    /// to zero at `total`.
     pub fn warmup_decay(base: f32, warmup: u64, total: u64) -> Self {
         LrSchedule {
             base,
@@ -28,6 +34,7 @@ impl LrSchedule {
         }
     }
 
+    /// Learning rate at a zero-indexed step.
     pub fn at(&self, step: u64) -> f32 {
         match self.kind {
             Schedule::Constant => self.base,

@@ -10,12 +10,16 @@ use anyhow::Result;
 /// A simple column-aligned markdown table builder.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Rows of rendered cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start a table with a caption and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -24,12 +28,14 @@ impl Table {
         }
     }
 
+    /// Append one row of cells.
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity");
         self.rows.push(cells);
         self
     }
 
+    /// Render as column-aligned markdown.
     pub fn render(&self) -> String {
         let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for r in &self.rows {
@@ -60,6 +66,7 @@ impl Table {
         out
     }
 
+    /// Render as CSV (quotes cells containing commas).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let esc = |c: &str| {
@@ -96,15 +103,22 @@ impl Table {
 /// Five-number summary of a sample (box-plot rendering for the figures).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BoxStats {
+    /// Sample minimum.
     pub min: f64,
+    /// First quartile.
     pub q1: f64,
+    /// Median.
     pub median: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Sample maximum.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
 }
 
 impl BoxStats {
+    /// Five-number summary (plus mean) of a sample.
     pub fn from(values: &[f32]) -> BoxStats {
         assert!(!values.is_empty());
         let mut v: Vec<f64> = values.iter().map(|&x| x as f64).collect();
@@ -129,6 +143,7 @@ impl BoxStats {
         }
     }
 
+    /// Render the six statistics as table cells.
     pub fn cells(&self) -> Vec<String> {
         vec![
             format!("{:.3}", self.min),
@@ -140,6 +155,7 @@ impl BoxStats {
         ]
     }
 
+    /// Column headers matching [`BoxStats::cells`].
     pub const HEADER: [&'static str; 6] = ["min", "q1", "median", "q3", "max", "mean"];
 }
 

@@ -13,6 +13,13 @@
 //! for the native backend, a `PjRtBuffer` for XLA. The training hot path
 //! uploads parameters once and re-uploads only what the optimizer touched,
 //! so the handle type is what keeps that contract backend-agnostic.
+//!
+//! Besides [`Backend::execute`] (the artifact path used for training and
+//! the probe-carrying forward), the trait offers [`Backend::infer`]: a
+//! forward-only serve entry that takes host batch slices, optional
+//! per-example adapter overlays ([`BatchAdapters`]) and caller-owned
+//! output buffers ([`InferOut`]) — the substrate of the multi-tenant
+//! serve path in [`crate::runtime::serve`].
 
 use anyhow::{bail, Result};
 
@@ -60,6 +67,156 @@ impl DeviceTensor {
     }
 }
 
+/// One forward-only batch handed to [`Backend::infer`] as host slices.
+///
+/// The serve path keeps these buffers resident and re-encodes into them,
+/// so — unlike the artifact path — no per-batch upload or `Tensor`
+/// allocation happens on the way in. All three slices are `[b, l]`
+/// row-major (`tokens`/`type_ids` as i32 ids, `attn_mask` 1.0 on real
+/// tokens, 0.0 on padding).
+#[derive(Debug, Clone, Copy)]
+pub struct InferBatch<'a> {
+    /// Examples in the batch (micro-batch rows, padding included).
+    pub b: usize,
+    /// Tokens per example (the model's fixed sequence length).
+    pub l: usize,
+    /// Token ids, `[b * l]`.
+    pub tokens: &'a [i32],
+    /// Segment/type ids, `[b * l]`.
+    pub type_ids: &'a [i32],
+    /// Attention mask, `[b * l]`.
+    pub attn_mask: &'a [f32],
+}
+
+/// Per-example adapter overlays for a multi-tenant forward: one row per
+/// batch example, gathered from an adapter bank by the serve path (see
+/// `runtime::serve::AdapterBank`).
+///
+/// When present, the eval forward replaces three parameter families with
+/// the per-example rows — the Hadamard adapter vectors, the
+/// output-LayerNorm (the paper's `N` module) affine vectors, and the
+/// classifier head — while every other parameter comes from the shared
+/// frozen backbone. Rows are gathered by flat copy into these reusable
+/// buffers, so task switching costs vector-copy time and never touches
+/// the backbone's pack cache.
+#[derive(Debug, Default)]
+pub struct BatchAdapters {
+    /// Encoder layer count the rows were gathered for.
+    pub layers: usize,
+    /// Hidden width `h` of each per-layer row.
+    pub hidden: usize,
+    /// Classifier head width `c` (the global class count, mask included).
+    pub classes: usize,
+    /// Examples gathered so far (must equal the batch's `b` at use).
+    pub batch: usize,
+    /// Per layer: per-example Hadamard weight rows, flattened `[b, h]`.
+    pub had_w: Vec<Vec<f32>>,
+    /// Per layer: per-example Hadamard bias rows, flattened `[b, h]`.
+    pub had_b: Vec<Vec<f32>>,
+    /// Per layer: per-example output-LayerNorm gains, flattened `[b, h]`.
+    pub norm_w: Vec<Vec<f32>>,
+    /// Per layer: per-example output-LayerNorm biases, flattened `[b, h]`.
+    pub norm_b: Vec<Vec<f32>>,
+    /// Per-example pooler weights, flattened `[b, h * h]` (stage 1
+    /// trains the pooler with the classifier, so both are per-task).
+    pub pooler_w: Vec<f32>,
+    /// Per-example pooler biases, flattened `[b, h]`.
+    pub pooler_b: Vec<f32>,
+    /// Per-example classifier weights, flattened `[b, h * c]`.
+    pub cls_w: Vec<f32>,
+    /// Per-example classifier biases, flattened `[b, c]`.
+    pub cls_b: Vec<f32>,
+}
+
+impl BatchAdapters {
+    /// An empty gather buffer shaped for a model (`layers` per-layer row
+    /// sets, each initially empty). Reused across batches via
+    /// [`BatchAdapters::clear`], so steady-state gathering only copies.
+    pub fn for_model(layers: usize, hidden: usize, classes: usize) -> BatchAdapters {
+        BatchAdapters {
+            layers,
+            hidden,
+            classes,
+            batch: 0,
+            had_w: vec![Vec::new(); layers],
+            had_b: vec![Vec::new(); layers],
+            norm_w: vec![Vec::new(); layers],
+            norm_b: vec![Vec::new(); layers],
+            pooler_w: Vec::new(),
+            pooler_b: Vec::new(),
+            cls_w: Vec::new(),
+            cls_b: Vec::new(),
+        }
+    }
+
+    /// Drop all gathered rows but keep every buffer's capacity.
+    pub fn clear(&mut self) {
+        for v in self
+            .had_w
+            .iter_mut()
+            .chain(self.had_b.iter_mut())
+            .chain(self.norm_w.iter_mut())
+            .chain(self.norm_b.iter_mut())
+        {
+            v.clear();
+        }
+        self.pooler_w.clear();
+        self.pooler_b.clear();
+        self.cls_w.clear();
+        self.cls_b.clear();
+        self.batch = 0;
+    }
+
+    /// Check internal consistency against a batch of `b` examples.
+    pub fn validate(&self, b: usize) -> Result<()> {
+        if self.batch != b {
+            bail!("adapter rows gathered for {} examples, batch has {b}", self.batch);
+        }
+        let (h, c) = (self.hidden, self.classes);
+        for set in [&self.had_w, &self.had_b, &self.norm_w, &self.norm_b] {
+            if set.len() != self.layers {
+                bail!("adapter row sets cover {} layers, model has {}", set.len(), self.layers);
+            }
+            for rows in set.iter() {
+                if rows.len() != b * h {
+                    bail!("adapter row buffer holds {} scalars, want {}", rows.len(), b * h);
+                }
+            }
+        }
+        if self.pooler_w.len() != b * h * h || self.pooler_b.len() != b * h {
+            bail!(
+                "pooler rows hold {}/{} scalars, want {}/{}",
+                self.pooler_w.len(),
+                self.pooler_b.len(),
+                b * h * h,
+                b * h
+            );
+        }
+        if self.cls_w.len() != b * h * c || self.cls_b.len() != b * c {
+            bail!(
+                "classifier rows hold {}/{} scalars, want {}/{}",
+                self.cls_w.len(),
+                self.cls_b.len(),
+                b * h * c,
+                b * c
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Caller-owned output buffers for [`Backend::infer`], resized (not
+/// reallocated, once warm) by the callee — the serve path reuses one
+/// across its whole lifetime.
+#[derive(Debug, Default, Clone)]
+pub struct InferOut {
+    /// Classification logits, `[b, c]` (full head width; mask at read).
+    pub logits: Vec<f32>,
+    /// Regression head output, `[b]` (always from the shared backbone —
+    /// adapter overlays only retarget the classifier).
+    pub regression: Vec<f32>,
+}
+
 /// An artifact executor. Implementations receive the parsed manifest entry
 /// for the artifact plus the full input list (parameters in canonical
 /// order, then the batch tensors named by `ArtifactInfo::batch_inputs`) and
@@ -94,6 +251,29 @@ pub trait Backend {
         artifact: &ArtifactInfo,
         inputs: &[&DeviceTensor],
     ) -> Result<Vec<Tensor>>;
+
+    /// Forward-only serve entry: run an inference pass of `model` over a
+    /// host-slice batch, optionally overlaying per-example adapter rows,
+    /// writing logits/regression into caller-owned buffers.
+    ///
+    /// Unlike [`Backend::execute`], this path materializes no training
+    /// state at all — no activation caches, no pre-activation taps, no
+    /// probe statistics — and moves no tensors: parameters are the
+    /// caller's resident slice (no per-batch ref-list rebuild), batch
+    /// inputs are borrowed slices, outputs land in a reusable
+    /// [`InferOut`]. The default implementation reports that the backend
+    /// has no serve path; only the native backend provides one today.
+    fn infer(
+        &self,
+        _manifest: &Manifest,
+        _model: &str,
+        _params: &[DeviceTensor],
+        _batch: InferBatch<'_>,
+        _adapters: Option<&BatchAdapters>,
+        _out: &mut InferOut,
+    ) -> Result<()> {
+        bail!("backend '{}' has no forward-only serve path", self.name())
+    }
 
     /// Prepare an artifact ahead of first use (compile for XLA; a no-op
     /// validation for native).

@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::backend::{Backend, DeviceTensor};
+use super::backend::{Backend, BatchAdapters, DeviceTensor, InferBatch, InferOut};
 use super::manifest::Manifest;
 use super::native::NativeBackend;
 use super::pool::PoolStats;
@@ -22,9 +22,13 @@ use super::tensor::{IntTensor, Tensor};
 /// Compile + execution statistics (exposed for the perf harness).
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Artifacts compiled (XLA only).
     pub compiles: usize,
+    /// Seconds spent compiling.
     pub compile_secs: f64,
+    /// Artifact executions.
     pub executions: usize,
+    /// Seconds spent executing.
     pub execute_secs: f64,
 }
 
@@ -88,6 +92,7 @@ impl Engine {
         Engine { manifest, backend, stats: RefCell::new(EngineStats::default()) }
     }
 
+    /// The engine's manifest (model inventory + artifact contracts).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -97,6 +102,7 @@ impl Engine {
         self.backend.name()
     }
 
+    /// Execution statistics snapshot (compiles merged from the backend).
     pub fn stats(&self) -> EngineStats {
         let mut s = self.stats.borrow().clone();
         let (compiles, compile_secs) = self.backend.compile_stats();
@@ -148,6 +154,29 @@ impl Engine {
     /// zero-spawn steady state `bench_runtime` and the pool tests pin.
     pub fn pool_stats(&self) -> PoolStats {
         self.backend.pool_stats()
+    }
+
+    /// Forward-only serve entry ([`crate::runtime::Backend::infer`]):
+    /// run an inference pass of `model` over host batch slices with
+    /// optional per-example adapter overlays, writing into a reusable
+    /// [`InferOut`]. No training state, no probes, no output tensors —
+    /// the multi-tenant serve path ([`crate::runtime::ServeSession`])
+    /// drives all its batches through here.
+    pub fn infer(
+        &self,
+        model: &str,
+        params: &[DeviceTensor],
+        batch: InferBatch<'_>,
+        adapters: Option<&BatchAdapters>,
+        out: &mut InferOut,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        self.backend
+            .infer(&self.manifest, model, params, batch, adapters, out)?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     /// Execute an artifact: parameters in canonical order, then batch

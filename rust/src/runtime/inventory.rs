@@ -18,7 +18,9 @@ use super::manifest::{
 
 /// Batch geometry baked into the artifacts (`configs.BATCH` / `configs.SEQ`).
 pub const BATCH: usize = 16;
+/// Sequence length baked into the artifacts.
 pub const SEQ: usize = 32;
+/// Global classifier-head width (class mask selects per task).
 pub const NUM_CLASSES: usize = 3;
 
 /// One model-size configuration (`configs.ModelConfig`).

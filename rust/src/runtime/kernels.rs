@@ -403,7 +403,9 @@ pub fn matmul_nt(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize
 /// matrix itself or a [`PackedMat`] built with [`PackedMat::pack_nt`].
 #[derive(Clone, Copy)]
 pub enum NtMat<'a> {
+    /// Plain row-major `[n, k]` weight (an NT product reads it transposed).
     Plain(&'a [f32]),
+    /// Pre-packed NT panels of the same weight.
     Packed(&'a PackedMat),
 }
 
@@ -576,7 +578,9 @@ impl PackedMat {
 /// The `B` operand of an NN product: plain row-major `[k, n]` or packed.
 #[derive(Clone, Copy)]
 pub enum BMat<'a> {
+    /// Plain row-major `[k, n]` weight.
     Plain(&'a [f32]),
+    /// Pre-packed NN panels of the same weight.
     Packed(&'a PackedMat),
 }
 
@@ -587,21 +591,28 @@ pub enum BMat<'a> {
 /// `[n]`, broadcast over rows.
 #[derive(Clone, Copy, Default)]
 pub struct Epilogue<'a> {
+    /// Residual added before the bias (full `[m, n]`).
     pub add1: Option<&'a [f32]>,
+    /// Bias broadcast over rows (`[n]`).
     pub bias: Option<&'a [f32]>,
+    /// Residual added after the bias (full `[m, n]`).
     pub add2: Option<&'a [f32]>,
+    /// Apply GELU after the adds.
     pub gelu: bool,
 }
 
 impl<'a> Epilogue<'a> {
+    /// No epilogue (plain GEMM).
     pub fn none() -> Epilogue<'a> {
         Epilogue::default()
     }
 
+    /// Bias-only epilogue.
     pub fn bias(b: &'a [f32]) -> Epilogue<'a> {
         Epilogue { bias: Some(b), ..Epilogue::default() }
     }
 
+    /// Bias + GELU epilogue (the FFN up-projection shape).
     pub fn bias_gelu(b: &'a [f32]) -> Epilogue<'a> {
         Epilogue { bias: Some(b), gelu: true, ..Epilogue::default() }
     }
@@ -865,11 +876,15 @@ pub fn hadamard_fwd_into(
 
 /// Gradients of the Hadamard adapter.
 pub struct HadamardGrads {
+    /// Gradient w.r.t. the input, `[T, H]`.
     pub dx: Vec<f32>,
+    /// Gradient w.r.t. the weight vector, `[H]`.
     pub dw: Vec<f32>,
+    /// Gradient w.r.t. the bias vector, `[H]`.
     pub db: Vec<f32>,
     /// present iff `w2` participated in the forward.
     pub dw2: Option<Vec<f32>>,
+    /// Gradient w.r.t. the cubic coefficients (order >= 3 only).
     pub dw3: Option<Vec<f32>>,
 }
 
@@ -990,6 +1005,7 @@ pub struct LnCache {
     pub inv: Vec<f32>,
 }
 
+/// LayerNorm variance epsilon (matches the JAX reference).
 pub const LN_EPS: f64 = 1e-5;
 
 /// Row-wise LayerNorm with affine output (ref: `layernorm_ref`).

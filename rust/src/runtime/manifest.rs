@@ -16,20 +16,27 @@ use crate::util::json::{self, Json};
 /// Parameter initialization kind (mirrors `model.param_specs` in Python).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InitKind {
+    /// Truncated-normal initialization.
     Normal,
+    /// Zero initialization.
     Zeros,
+    /// Ones initialization (LayerNorm gains, identity adapters).
     Ones,
 }
 
 /// One model parameter: canonical name, shape, init kind.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Canonical parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Initialization kind.
     pub init: InitKind,
 }
 
 impl ParamSpec {
+    /// Total scalars in the tensor.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -38,15 +45,23 @@ impl ParamSpec {
 /// Model-level metadata (one per size: tiny/base/large).
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
+    /// Model name ("tiny"/"base"/"large").
     pub name: String,
+    /// Encoder layer count.
     pub layers: usize,
+    /// Hidden width.
     pub hidden: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// FFN inner width.
     pub ffn: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Maximum sequence length.
     pub max_len: usize,
     /// LoRA scaling numerator (alpha; scale = alpha / rank).
     pub lora_alpha: f32,
+    /// Parameter inventory in canonical order.
     pub params: Vec<ParamSpec>,
     /// name -> index in `params` (canonical order).
     pub index: HashMap<String, usize>,
@@ -57,6 +72,7 @@ pub struct ModelInfo {
 }
 
 impl ModelInfo {
+    /// Canonical index of a parameter name.
     pub fn param_index(&self, name: &str) -> Result<usize> {
         self.index
             .get(name)
@@ -64,6 +80,7 @@ impl ModelInfo {
             .ok_or_else(|| anyhow!("unknown parameter '{name}'"))
     }
 
+    /// Total scalars across all parameters.
     pub fn total_params(&self) -> usize {
         self.params.iter().map(|p| p.numel()).sum()
     }
@@ -77,6 +94,7 @@ impl ModelInfo {
             .sum()
     }
 
+    /// Member names of a gradient group.
     pub fn group(&self, name: &str) -> Result<&[String]> {
         self.groups
             .get(name)
@@ -88,17 +106,24 @@ impl ModelInfo {
 /// Artifact kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArtifactKind {
+    /// Probe-carrying forward pass (logits + figure probes).
     Forward,
+    /// Loss + per-group gradients for fine-tuning.
     Train,
+    /// MLM pre-training step.
     Mlm,
 }
 
 /// One HLO artifact: file, model, entry-point metadata and I/O lists.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// Artifact name (also the manifest key).
     pub name: String,
+    /// HLO file the XLA backend compiles (unused natively).
     pub file: PathBuf,
+    /// Model the artifact runs.
     pub model: String,
+    /// What the artifact computes.
     pub kind: ArtifactKind,
     /// "cls" | "reg" for train artifacts.
     pub loss: Option<String>,
@@ -123,15 +148,22 @@ impl ArtifactInfo {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Examples per batch, baked into every artifact.
     pub batch: usize,
+    /// Tokens per example.
     pub seq_len: usize,
+    /// Global classifier-head width.
     pub num_classes: usize,
+    /// Model inventory by name.
     pub models: HashMap<String, ModelInfo>,
+    /// Artifact inventory by name.
     pub artifacts: HashMap<String, ArtifactInfo>,
+    /// Artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -141,6 +173,7 @@ impl Manifest {
         Self::from_json(&root, dir)
     }
 
+    /// Parse a manifest from its JSON root.
     pub fn from_json(root: &Json, dir: PathBuf) -> Result<Self> {
         let mut models = HashMap::new();
         for (name, m) in root.get("models")?.as_obj()?.iter() {
@@ -229,6 +262,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a model by name.
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models
             .get(name)
@@ -236,6 +270,7 @@ impl Manifest {
                                    self.models.keys().collect::<Vec<_>>()))
     }
 
+    /// Look up an artifact by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
         self.artifacts
             .get(name)
@@ -247,10 +282,12 @@ impl Manifest {
         format!("fwd_{model}")
     }
 
+    /// Conventional train-artifact name.
     pub fn train_name(loss: &str, group: &str, model: &str) -> String {
         format!("train_{loss}_{group}_{model}")
     }
 
+    /// Conventional MLM-artifact name.
     pub fn mlm_name(model: &str) -> String {
         format!("mlm_{model}")
     }

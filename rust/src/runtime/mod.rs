@@ -1,4 +1,5 @@
-//! Runtime layer: backends, artifact manifest, tensors, compute kernels.
+//! Runtime layer: backends, artifact manifest, tensors, compute kernels,
+//! and the multi-tenant serve path.
 //!
 //! An [`Engine`] pairs a [`Manifest`] (model inventory + artifact I/O
 //! contracts) with a [`Backend`] that executes artifacts:
@@ -10,6 +11,12 @@
 //!   inventory.
 //! * `XlaBackend` (`--features xla`) — the PJRT path over HLO-text
 //!   artifacts lowered once by `python -m compile.aot`.
+//!
+//! Besides the artifact path, the runtime exposes a forward-only serve
+//! entry ([`Backend::infer`] / [`Engine::infer`]) and the serving layer
+//! built on it ([`serve::ServeSession`]): one packed frozen backbone, a
+//! bank of per-task Hadamard adapters, cross-task micro-batching. See
+//! `ARCHITECTURE.md` at the repo root for the layer-by-layer design.
 
 pub mod backend;
 pub mod engine;
@@ -18,17 +25,21 @@ pub mod kernels;
 pub mod manifest;
 pub mod native;
 pub mod pool;
+pub mod serve;
 pub mod tensor;
 pub mod workspace;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
 
-pub use backend::{Backend, DeviceTensor};
+pub use backend::{Backend, BatchAdapters, DeviceTensor, InferBatch, InferOut};
 pub use engine::{Engine, EngineStats};
 pub use kernels::PackedMat;
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
 pub use pool::{Pool, PoolStats};
+pub use serve::{
+    AdapterBank, ServeReply, ServeRequest, ServeSession, ServeStats, TaskAdapter,
+};
 pub use tensor::{IntTensor, Tensor};
 pub use workspace::{Workspace, WorkspaceStats};
 #[cfg(feature = "xla")]

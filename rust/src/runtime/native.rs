@@ -48,7 +48,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::backend::{Backend, DeviceTensor};
+use super::backend::{Backend, BatchAdapters, DeviceTensor, InferBatch, InferOut};
 use super::kernels as k;
 use super::kernels::{BMat, Epilogue, NtMat, PackedMat};
 use super::manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelInfo};
@@ -73,6 +73,33 @@ pub struct NativeBackend {
 struct NativeState {
     ws: Workspace,
     caches: HashMap<String, ModelCache>,
+}
+
+impl NativeState {
+    /// Ensure the model's cache (resolved index table + pack regime for
+    /// this gradient set) and hand back the pieces an executor needs —
+    /// the one prepare path shared by [`Backend::execute`] and
+    /// [`Backend::infer`], so cache-keying changes cannot drift between
+    /// the two entry points.
+    fn prepared(
+        &mut self,
+        model: &ModelInfo,
+        pp: &Params,
+        grad_params: &[&str],
+        packing: bool,
+    ) -> Result<(&Resolved, &[Option<PackPair>], &mut Workspace)> {
+        if !self.caches.contains_key(&model.name) {
+            self.caches.insert(model.name.clone(), ModelCache::default());
+        }
+        self.caches
+            .get_mut(&model.name)
+            .unwrap()
+            .ensure(model, pp, grad_params, packing)?;
+        let mc = self.caches.get(&model.name).unwrap();
+        let r = mc.resolved.as_ref().expect("resolved table built by ensure");
+        let packs = mc.current_packs();
+        Ok((r, packs, &mut self.ws))
+    }
 }
 
 impl Default for NativeBackend {
@@ -106,10 +133,12 @@ impl NativeBackend {
         self
     }
 
+    /// The backend's kernel worker pool.
     pub fn pool(&self) -> &Pool {
         &self.pool
     }
 
+    /// Whether frozen-weight panel packing is enabled.
     pub fn packing_enabled(&self) -> bool {
         self.packing
     }
@@ -174,39 +203,12 @@ impl Backend for NativeBackend {
                 inputs.len()
             );
         }
-        let mut params: Vec<&[f32]> = Vec::with_capacity(n);
-        for (i, dt) in inputs[..n].iter().enumerate() {
-            let data = dt
-                .f32s()
-                .map_err(|e| anyhow!("param '{}': {e}", model.params[i].name))?;
-            if data.len() != model.params[i].numel() {
-                bail!(
-                    "param '{}': got {} scalars, want {}",
-                    model.params[i].name,
-                    data.len(),
-                    model.params[i].numel()
-                );
-            }
-            params.push(data);
-        }
-        let pp = Params { model, data: params };
+        let pp = Params { model, data: gather_params(model, &inputs[..n])? };
         let batch = &inputs[n..];
 
         let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
-        let state = &mut *guard;
-        if !state.caches.contains_key(&model.name) {
-            state.caches.insert(model.name.clone(), ModelCache::default());
-        }
         let packing = self.packing && !self.pool.is_scalar();
-        state
-            .caches
-            .get_mut(&model.name)
-            .unwrap()
-            .ensure(model, &pp, artifact, packing)?;
-        let mc = state.caches.get(&model.name).unwrap();
-        let r = mc.resolved.as_ref().expect("resolved table built by ensure");
-        let packs = mc.current_packs();
-        let ws = &mut state.ws;
+        let (r, packs, ws) = guard.prepared(model, &pp, &artifact.grad_params(), packing)?;
         match artifact.kind {
             ArtifactKind::Forward => run_forward(&self.pool, ws, r, packs, model, &pp, batch),
             ArtifactKind::Train => {
@@ -215,6 +217,92 @@ impl Backend for NativeBackend {
             ArtifactKind::Mlm => run_mlm(&self.pool, ws, r, packs, model, &pp, batch, artifact),
         }
     }
+
+    fn infer(
+        &self,
+        manifest: &Manifest,
+        model_name: &str,
+        params: &[DeviceTensor],
+        batch: InferBatch<'_>,
+        adapters: Option<&BatchAdapters>,
+        out: &mut InferOut,
+    ) -> Result<()> {
+        let model = manifest.model(model_name)?;
+        if params.len() != model.params.len() {
+            bail!(
+                "model '{}' wants {} parameters, got {}",
+                model.name,
+                model.params.len(),
+                params.len()
+            );
+        }
+        let pp = Params { model, data: gather_params(model, params)? };
+        let dims = Dims::derive(model, &[batch.b, batch.l])?;
+        check_batch_lens(&dims, batch.tokens, batch.type_ids, batch.attn_mask)?;
+        if let Some(ad) = adapters {
+            ad.validate(dims.b)?;
+            if ad.layers != model.layers || ad.hidden != dims.h || ad.classes != dims.c {
+                bail!(
+                    "adapter rows shaped for [layers={}, h={}, c={}], model '{}' wants \
+                     [{}, {}, {}]",
+                    ad.layers,
+                    ad.hidden,
+                    ad.classes,
+                    model.name,
+                    model.layers,
+                    dims.h,
+                    dims.c
+                );
+            }
+        }
+
+        let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        // No gradient group at all: the pack decision (everything packable
+        // is frozen) is identical to the forward artifact's, so serving
+        // shares the fwd regime and never churns the pack cache.
+        let packing = self.packing && !self.pool.is_scalar();
+        let (r, packs, ws) = guard.prepared(model, &pp, &[], packing)?;
+        forward_eval(
+            &self.pool,
+            ws,
+            &dims,
+            &pp,
+            r,
+            packs,
+            batch.tokens,
+            batch.type_ids,
+            batch.attn_mask,
+            adapters,
+            out,
+        )
+    }
+}
+
+/// Validate and view the uploaded parameter list for `model` (canonical
+/// order, host-resident f32) — shared by the artifact entry (which sees
+/// `&[&DeviceTensor]`) and the serve entry (which borrows the caller's
+/// resident `&[DeviceTensor]` directly).
+fn gather_params<'a, T: std::borrow::Borrow<DeviceTensor>>(
+    model: &ModelInfo,
+    inputs: &'a [T],
+) -> Result<Vec<&'a [f32]>> {
+    let mut params: Vec<&[f32]> = Vec::with_capacity(model.params.len());
+    for (i, dt) in inputs.iter().enumerate() {
+        let data = dt
+            .borrow()
+            .f32s()
+            .map_err(|e| anyhow!("param '{}': {e}", model.params[i].name))?;
+        if data.len() != model.params[i].numel() {
+            bail!(
+                "param '{}': got {} scalars, want {}",
+                model.params[i].name,
+                data.len(),
+                model.params[i].numel()
+            );
+        }
+        params.push(data);
+    }
+    Ok(params)
 }
 
 // ----------------------------------------------------------- model caches
@@ -405,7 +493,7 @@ impl ModelCache {
         &mut self,
         model: &ModelInfo,
         pp: &Params,
-        artifact: &ArtifactInfo,
+        grad_params: &[&str],
         packing: bool,
     ) -> Result<()> {
         if self.resolved.is_none() {
@@ -415,9 +503,10 @@ impl ModelCache {
             self.pack_sets.clear();
             return Ok(());
         }
-        // The trainable mask for this artifact: exactly the parameters it
-        // emits gradients for (the FreezeMask boundary). Trainable weights
-        // are re-uploaded every step, so packing them would repack every
+        // The trainable mask for this entry point: exactly the parameters
+        // it emits gradients for (the FreezeMask boundary; empty for the
+        // forward artifact and the serve path). Trainable weights are
+        // re-uploaded every step, so packing them would repack every
         // step — they stay on the plain blocked path instead.
         //
         // Known tradeoff (within one regime): entries are keyed by the
@@ -427,7 +516,7 @@ impl ModelCache {
         // boundary. Within a training loop — the steady state this PR
         // targets — pointers are stable and the pack amortizes.
         let mut trainable = vec![false; model.params.len()];
-        for name in artifact.grad_params() {
+        for name in grad_params {
             if let Ok(i) = model.param_index(name) {
                 trainable[i] = true;
             }
@@ -898,8 +987,8 @@ fn forward(
         if tok >= dims.v {
             bail!("token id {tok} out of vocab range {}", dims.v);
         }
-        let ty = type_ids[ti] as usize;
-        if (ty + 1) * h > te.len() {
+        let ty = type_ids[ti];
+        if ty < 0 || (ty as usize + 1) * h > te.len() {
             bail!("type id {ty} out of range");
         }
     }
@@ -1272,6 +1361,497 @@ fn forward(
         norms,
         means,
     })
+}
+
+// ----------------------------------------------------------- eval forward
+
+/// Forward-only evaluation: the serve path behind [`Backend::infer`].
+///
+/// Mirrors [`forward`]'s math kernel-for-kernel — every per-row result is
+/// bit-identical to the artifact forward, and (because all kernels are
+/// row/example-local) to the same example served at any other micro-batch
+/// size — but skips every training-only workspace slab:
+///
+/// * no [`LayerCache`]: buffers return to the arena at the end of each
+///   layer, so peak memory is O(one layer), not O(depth);
+/// * no pre-activation taps: the fused GEMM epilogues run with
+///   `pre = None`, so the `[T, F]`-sized `dgelu` inputs are never
+///   materialized;
+/// * no probe statistics and no gradient sinks.
+///
+/// With `adapters` present, three parameter families are selected **per
+/// example** from the gathered rows — the Hadamard adapter vectors, the
+/// output-LayerNorm affine pair (the paper's trained `N` module) and the
+/// classifier head — which is what lets one frozen packed backbone serve
+/// a micro-batch that mixes tasks.
+#[allow(clippy::too_many_arguments)]
+fn forward_eval(
+    pool: &Pool,
+    ws: &mut Workspace,
+    dims: &Dims,
+    pp: &Params,
+    r: &Resolved,
+    packs: &[Option<PackPair>],
+    tokens: &[i32],
+    type_ids: &[i32],
+    attn_mask: &[f32],
+    adapters: Option<&BatchAdapters>,
+    out: &mut InferOut,
+) -> Result<()> {
+    let Dims { b, l, t, h, nh, f, .. } = *dims;
+    let hd = dims.d;
+    let s_lora = dims.s_lora;
+
+    // ---- embeddings + LN (identical to the training forward) ----
+    let we = pp.by(r.we);
+    let pe = pp.by(r.pe);
+    let te = pp.by(r.te);
+    for ti in 0..t {
+        let tok = tokens[ti] as usize;
+        if tok >= dims.v {
+            bail!("token id {tok} out of vocab range {}", dims.v);
+        }
+        let ty = type_ids[ti];
+        if ty < 0 || (ty as usize + 1) * h > te.len() {
+            bail!("type id {ty} out of range");
+        }
+    }
+    let mut emb = ws.take_dirty(t * h);
+    for ti in 0..t {
+        let tok = tokens[ti] as usize;
+        let ty = type_ids[ti] as usize;
+        let pos = ti % l;
+        let row = &mut emb[ti * h..(ti + 1) * h];
+        let wrow = &we[tok * h..(tok + 1) * h];
+        let prow = &pe[pos * h..(pos + 1) * h];
+        let trow = &te[ty * h..(ty + 1) * h];
+        for j in 0..h {
+            row[j] = wrow[j] + prow[j] + trow[j];
+        }
+    }
+    let mut x = ws.take_dirty(t * h);
+    {
+        let mut xhat = ws.take_dirty(t * h);
+        let mut inv = ws.take_dirty(t);
+        k::layernorm_fwd_into(
+            pool,
+            &emb,
+            pp.by(r.emb_ln_w),
+            pp.by(r.emb_ln_b),
+            &mut x,
+            &mut xhat,
+            &mut inv,
+        );
+        ws.give(xhat);
+        ws.give(inv);
+    }
+    ws.give(emb);
+
+    let mut mask_add = ws.take_dirty(b * l);
+    for (m, &am) in mask_add.iter_mut().zip(attn_mask) {
+        *m = (1.0 - am) * NEG_INF;
+    }
+
+    // ---- encoder layers (buffers recycled per layer) ----
+    for (li, rl) in r.layers.iter().enumerate() {
+        let x_in = x;
+        // Q/K/V with LoRA (Q, V) and IA3 (K, V); one [T, r] scratch serves
+        // both LoRA down-projections in sequence.
+        let mut xa = ws.take_dirty(t * dims.r);
+        k::matmul_into(pool, &x_in, pp.by(rl.lora_qa), &mut xa, t, h, dims.r);
+        let mut q = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &x_in,
+            nn_mat(packs, rl.q_w, pp.by(rl.q_w)),
+            &mut q,
+            t,
+            h,
+            h,
+            Epilogue::bias(pp.by(rl.q_b)),
+            None,
+        );
+        {
+            let mut lb = ws.take_dirty(t * h);
+            k::matmul_into(pool, &xa, pp.by(rl.lora_qb), &mut lb, t, dims.r, h);
+            for (qv, lv) in q.iter_mut().zip(&lb) {
+                *qv += lv * s_lora;
+            }
+            ws.give(lb);
+        }
+        let mut klin = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &x_in,
+            nn_mat(packs, rl.k_w, pp.by(rl.k_w)),
+            &mut klin,
+            t,
+            h,
+            h,
+            Epilogue::bias(pp.by(rl.k_b)),
+            None,
+        );
+        let mut kk = ws.take_dirty(t * h);
+        mul_rows_into(&klin, pp.by(rl.ia3_k), &mut kk);
+        ws.give(klin);
+        k::matmul_into(pool, &x_in, pp.by(rl.lora_va), &mut xa, t, h, dims.r);
+        let mut vpre = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &x_in,
+            nn_mat(packs, rl.v_w, pp.by(rl.v_w)),
+            &mut vpre,
+            t,
+            h,
+            h,
+            Epilogue::bias(pp.by(rl.v_b)),
+            None,
+        );
+        {
+            let mut lb = ws.take_dirty(t * h);
+            k::matmul_into(pool, &xa, pp.by(rl.lora_vb), &mut lb, t, dims.r, h);
+            for (pv, lv) in vpre.iter_mut().zip(&lb) {
+                *pv += lv * s_lora;
+            }
+            ws.give(lb);
+        }
+        ws.give(xa);
+        let mut vv = ws.take_dirty(t * h);
+        mul_rows_into(&vpre, pp.by(rl.ia3_v), &mut vv);
+        ws.give(vpre);
+
+        // attention
+        let mut qh = ws.take_dirty(t * h);
+        split_heads_into(&q, b, l, nh, hd, &mut qh);
+        ws.give(q);
+        let mut kh = ws.take_dirty(t * h);
+        split_heads_into(&kk, b, l, nh, hd, &mut kh);
+        ws.give(kk);
+        let mut vh = ws.take_dirty(t * h);
+        split_heads_into(&vv, b, l, nh, hd, &mut vh);
+        ws.give(vv);
+        let mut atth = ws.take_dirty(t * h);
+        let mut probs = ws.take_dirty(b * nh * l * l);
+        k::attention_fwd_into(pool, &qh, &kh, &vh, &mask_add, b, nh, l, hd, &mut atth, &mut probs);
+        ws.give(probs);
+        ws.give(qh);
+        ws.give(kh);
+        ws.give(vh);
+        let mut att = ws.take_dirty(t * h);
+        merge_heads_into(&atth, b, l, nh, hd, &mut att);
+        ws.give(atth);
+
+        // Hadamard adapter: per-example bank rows when serving
+        // multi-tenant (order 1 — the paper's deployed adapter), else the
+        // resident model vectors at order 3, exactly as the forward
+        // artifact runs them.
+        let mut att_ad = ws.take_dirty(t * h);
+        match adapters {
+            Some(ad) => {
+                let lh = l * h;
+                for bi in 0..b {
+                    k::hadamard_fwd_into(
+                        &att[bi * lh..(bi + 1) * lh],
+                        &ad.had_w[li][bi * h..(bi + 1) * h],
+                        &ad.had_b[li][bi * h..(bi + 1) * h],
+                        None,
+                        None,
+                        &mut att_ad[bi * lh..(bi + 1) * lh],
+                    );
+                }
+            }
+            None => k::hadamard_fwd_into(
+                &att,
+                pp.by(rl.had_w),
+                pp.by(rl.had_b),
+                Some(pp.by(rl.had_w2)),
+                Some(pp.by(rl.had_w3)),
+                &mut att_ad,
+            ),
+        }
+        ws.give(att);
+
+        // attention output dense + Houlsby attn adapter + residual LN —
+        // no pre-activation taps anywhere on the serve path
+        let mut a_dense = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &att_ad,
+            nn_mat(packs, rl.ao_w, pp.by(rl.ao_w)),
+            &mut a_dense,
+            t,
+            h,
+            h,
+            Epilogue::bias(pp.by(rl.ao_b)),
+            None,
+        );
+        ws.give(att_ad);
+        let mut ha = ws.take_dirty(t * dims.bn);
+        k::gemm_fused_into(
+            pool,
+            &a_dense,
+            nn_mat(packs, rl.ha_dw, pp.by(rl.ha_dw)),
+            &mut ha,
+            t,
+            h,
+            dims.bn,
+            Epilogue::bias_gelu(pp.by(rl.ha_db)),
+            None,
+        );
+        let mut a2 = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &ha,
+            nn_mat(packs, rl.ha_uw, pp.by(rl.ha_uw)),
+            &mut a2,
+            t,
+            dims.bn,
+            h,
+            Epilogue {
+                add1: Some(&a_dense),
+                bias: Some(pp.by(rl.ha_ub)),
+                add2: Some(&x_in),
+                gelu: false,
+            },
+            None,
+        );
+        ws.give(ha);
+        ws.give(a_dense);
+        ws.give(x_in);
+        let mut x1 = ws.take_dirty(t * h);
+        {
+            let mut xhat = ws.take_dirty(t * h);
+            let mut inv = ws.take_dirty(t);
+            k::layernorm_fwd_into(
+                pool,
+                &a2,
+                pp.by(rl.ln1_w),
+                pp.by(rl.ln1_b),
+                &mut x1,
+                &mut xhat,
+                &mut inv,
+            );
+            ws.give(xhat);
+            ws.give(inv);
+        }
+        ws.give(a2);
+
+        // FFN with IA3 + Houlsby ffn adapter
+        let mut ginter = ws.take_dirty(t * f);
+        k::gemm_fused_into(
+            pool,
+            &x1,
+            nn_mat(packs, rl.in_w, pp.by(rl.in_w)),
+            &mut ginter,
+            t,
+            h,
+            f,
+            Epilogue::bias_gelu(pp.by(rl.in_b)),
+            None,
+        );
+        let mut inter = ws.take_dirty(t * f);
+        mul_rows_into(&ginter, pp.by(rl.ia3_ff), &mut inter);
+        ws.give(ginter);
+        let mut ffn = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &inter,
+            nn_mat(packs, rl.out_w, pp.by(rl.out_w)),
+            &mut ffn,
+            t,
+            f,
+            h,
+            Epilogue::bias(pp.by(rl.out_b)),
+            None,
+        );
+        ws.give(inter);
+        let mut hf = ws.take_dirty(t * dims.bn);
+        k::gemm_fused_into(
+            pool,
+            &ffn,
+            nn_mat(packs, rl.hf_dw, pp.by(rl.hf_dw)),
+            &mut hf,
+            t,
+            h,
+            dims.bn,
+            Epilogue::bias_gelu(pp.by(rl.hf_db)),
+            None,
+        );
+        let mut f2 = ws.take_dirty(t * h);
+        k::gemm_fused_into(
+            pool,
+            &hf,
+            nn_mat(packs, rl.hf_uw, pp.by(rl.hf_uw)),
+            &mut f2,
+            t,
+            dims.bn,
+            h,
+            Epilogue {
+                add1: Some(&ffn),
+                bias: Some(pp.by(rl.hf_ub)),
+                add2: Some(&x1),
+                gelu: false,
+            },
+            None,
+        );
+        ws.give(hf);
+        ws.give(ffn);
+        ws.give(x1);
+
+        // output LayerNorm — the Hadamard method's trained `N` module, so
+        // the affine pair is per-example when serving multi-tenant (the
+        // row math is example-local either way)
+        let mut x_out = ws.take_dirty(t * h);
+        match adapters {
+            Some(ad) => {
+                let lh = l * h;
+                let mut xhat = ws.take_dirty(lh);
+                let mut inv = ws.take_dirty(l);
+                for bi in 0..b {
+                    k::layernorm_fwd_into(
+                        pool,
+                        &f2[bi * lh..(bi + 1) * lh],
+                        &ad.norm_w[li][bi * h..(bi + 1) * h],
+                        &ad.norm_b[li][bi * h..(bi + 1) * h],
+                        &mut x_out[bi * lh..(bi + 1) * lh],
+                        &mut xhat,
+                        &mut inv,
+                    );
+                }
+                ws.give(xhat);
+                ws.give(inv);
+            }
+            None => {
+                let mut xhat = ws.take_dirty(t * h);
+                let mut inv = ws.take_dirty(t);
+                k::layernorm_fwd_into(
+                    pool,
+                    &f2,
+                    pp.by(rl.ln2_w),
+                    pp.by(rl.ln2_b),
+                    &mut x_out,
+                    &mut xhat,
+                    &mut inv,
+                );
+                ws.give(xhat);
+                ws.give(inv);
+            }
+        }
+        ws.give(f2);
+        x = x_out;
+    }
+    ws.give(mask_add);
+
+    // ---- masked mean pooling + heads ----
+    let mut denom = ws.take_dirty(b);
+    for (bi, dv) in denom.iter_mut().enumerate() {
+        let s: f32 = attn_mask[bi * l..(bi + 1) * l].iter().sum();
+        *dv = s.max(1.0);
+    }
+    let mut mean_h = ws.take(b * h);
+    for bi in 0..b {
+        for li in 0..l {
+            let m = attn_mask[bi * l + li];
+            if m == 0.0 {
+                continue;
+            }
+            let row = &x[(bi * l + li) * h..(bi * l + li + 1) * h];
+            let dst = &mut mean_h[bi * h..(bi + 1) * h];
+            for j in 0..h {
+                dst[j] += row[j] * m;
+            }
+        }
+    }
+    for bi in 0..b {
+        for j in 0..h {
+            mean_h[bi * h + j] /= denom[bi];
+        }
+    }
+    ws.give(denom);
+    ws.give(x);
+    // pooler: stage 1 trains it alongside the classifier, so the serve
+    // path selects both per example (one m=1 GEMM per row)
+    let mut pooled = ws.take_dirty(b * h);
+    match adapters {
+        Some(ad) => {
+            for (bi, prow) in pooled.chunks_exact_mut(h).enumerate() {
+                k::gemm_fused_into(
+                    pool,
+                    &mean_h[bi * h..(bi + 1) * h],
+                    BMat::Plain(&ad.pooler_w[bi * h * h..(bi + 1) * h * h]),
+                    prow,
+                    1,
+                    h,
+                    h,
+                    Epilogue::bias(&ad.pooler_b[bi * h..(bi + 1) * h]),
+                    None,
+                );
+            }
+        }
+        None => k::gemm_fused_into(
+            pool,
+            &mean_h,
+            nn_mat(packs, r.pooler_w, pp.by(r.pooler_w)),
+            &mut pooled,
+            b,
+            h,
+            h,
+            Epilogue::bias(pp.by(r.pooler_b)),
+            None,
+        ),
+    }
+    ws.give(mean_h);
+    for v in pooled.iter_mut() {
+        *v = v.tanh();
+    }
+
+    // classifier head: per-example rows (one m=1 GEMM per example — the
+    // same blocked kernel, so rows match the broadcast path bit-for-bit)
+    // when serving multi-tenant, else the shared head
+    out.logits.resize(b * dims.c, 0.0);
+    match adapters {
+        Some(ad) => {
+            let c = dims.c;
+            for (bi, lrow) in out.logits.chunks_exact_mut(c).enumerate() {
+                k::gemm_fused_into(
+                    pool,
+                    &pooled[bi * h..(bi + 1) * h],
+                    BMat::Plain(&ad.cls_w[bi * h * c..(bi + 1) * h * c]),
+                    lrow,
+                    1,
+                    h,
+                    c,
+                    Epilogue::bias(&ad.cls_b[bi * c..(bi + 1) * c]),
+                    None,
+                );
+            }
+        }
+        None => k::gemm_fused_into(
+            pool,
+            &pooled,
+            BMat::Plain(pp.by(r.cls_w)),
+            &mut out.logits,
+            b,
+            h,
+            dims.c,
+            Epilogue::bias(pp.by(r.cls_b)),
+            None,
+        ),
+    }
+    out.regression.resize(b, 0.0);
+    k::gemm_fused_into(
+        pool,
+        &pooled,
+        BMat::Plain(pp.by(r.reg_w)),
+        &mut out.regression,
+        b,
+        h,
+        1,
+        Epilogue::bias(pp.by(r.reg_b)),
+        None,
+    );
+    ws.give(pooled);
+    Ok(())
 }
 
 // --------------------------------------------------------------- backward

@@ -81,9 +81,13 @@ use std::thread;
 ///   below `grain`, single-shard splits, or `threads <= 1`).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PoolStats {
+    /// Persistent workers ever spawned (freezes after warm-up).
     pub threads_spawned: u64,
+    /// Fork-join jobs published to the workers.
     pub jobs_dispatched: u64,
+    /// Worker wakeups across all jobs.
     pub wakeups: u64,
+    /// Calls that ran entirely on the caller.
     pub inline_runs: u64,
 }
 
@@ -290,6 +294,7 @@ impl Pool {
         Pool { threads, scalar, inner: Arc::new(inner) }
     }
 
+    /// Configured worker count (including the caller).
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -14,11 +14,14 @@ use xla::{ElementType, Literal, PjRtBuffer, PjRtClient};
 /// Dense f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes (row-major).
     pub shape: Vec<usize>,
+    /// Flat row-major storage.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A tensor from a shape and matching flat data.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -27,20 +30,24 @@ impl Tensor {
         Ok(Tensor { shape, data })
     }
 
+    /// A zero-filled tensor.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// A ones-filled tensor.
     pub fn ones(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![1.0; n] }
     }
 
+    /// A rank-0 (single-element) tensor.
     pub fn scalar(v: f32) -> Self {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total scalars.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -74,6 +81,7 @@ impl Tensor {
     }
 
     #[cfg(feature = "xla")]
+    /// Copy a device literal back into a host tensor (XLA path).
     pub fn from_literal(lit: &Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -85,11 +93,14 @@ impl Tensor {
 /// Dense i32 tensor (token ids, labels).
 #[derive(Debug, Clone, PartialEq)]
 pub struct IntTensor {
+    /// Dimension sizes (row-major).
     pub shape: Vec<usize>,
+    /// Flat row-major storage.
     pub data: Vec<i32>,
 }
 
 impl IntTensor {
+    /// An integer tensor from a shape and matching flat data.
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -98,12 +109,14 @@ impl IntTensor {
         Ok(IntTensor { shape, data })
     }
 
+    /// A zero-filled integer tensor.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         IntTensor { shape, data: vec![0; n] }
     }
 
     #[cfg(feature = "xla")]
+    /// Convert to a device literal (XLA path).
     pub fn to_literal(&self) -> Result<Literal> {
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(
@@ -119,6 +132,7 @@ impl IntTensor {
     }
 
     #[cfg(feature = "xla")]
+    /// Upload to a PJRT device buffer (XLA path).
     pub fn to_buffer(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
         Ok(client.buffer_from_host_buffer::<i32>(&self.data, &self.shape, None)?)
     }

@@ -42,14 +42,18 @@ pub struct Workspace {
 /// `threads_spawned`.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct WorkspaceStats {
+    /// `take` calls served from the free list.
     pub hits: u64,
+    /// `take` calls that had to allocate.
     pub misses: u64,
+    /// Bytes currently retained in the free list.
     pub held_bytes: usize,
     /// Distinct buffer lengths currently retained.
     pub buckets: usize,
 }
 
 impl Workspace {
+    /// An empty arena.
     pub fn new() -> Workspace {
         Workspace::default()
     }

@@ -28,6 +28,7 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
+    /// A backend over a fresh PJRT CPU client.
     pub fn new() -> Result<XlaBackend> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(XlaBackend {

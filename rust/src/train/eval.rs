@@ -14,14 +14,19 @@ use crate::runtime::{DeviceTensor, Engine, IntTensor, Manifest, Tensor};
 pub struct EvalResult {
     /// headline metric on the paper's 0-100 scale.
     pub score: f64,
+    /// Predicted class per classification example.
     pub preds: Vec<usize>,
+    /// Gold class per classification example.
     pub golds: Vec<usize>,
+    /// Predicted score per regression example.
     pub pred_scores: Vec<f32>,
+    /// Gold score per regression example.
     pub gold_scores: Vec<f32>,
     /// per-layer attention-output spectral norms, all examples ([layer][i]).
     pub attn_norms: Vec<Vec<f32>>,
     /// per-layer adapter-output means (the Fig. 2 characteristic values).
     pub attn_means: Vec<Vec<f32>>,
+    /// Real examples evaluated (batch padding excluded).
     pub examples: usize,
 }
 

@@ -19,10 +19,15 @@ use super::session::Session;
 /// Pre-training configuration.
 #[derive(Debug, Clone)]
 pub struct PretrainOpts {
+    /// MLM steps to run.
     pub steps: usize,
+    /// Peak learning rate.
     pub lr: f32,
+    /// Linear-warmup steps.
     pub warmup: u64,
+    /// Data/init seed.
     pub seed: u64,
+    /// Progress-print cadence (steps).
     pub log_every: usize,
 }
 
@@ -34,7 +39,9 @@ impl Default for PretrainOpts {
 
 /// Result: final store + loss curve.
 pub struct PretrainResult {
+    /// The pre-trained parameters.
     pub store: ParamStore,
+    /// Per-step MLM loss curve.
     pub losses: Vec<f32>,
 }
 

@@ -20,9 +20,13 @@ use crate::runtime::{ArtifactKind, DeviceTensor, Engine, IntTensor, Tensor};
 /// Options shared by all training loops.
 #[derive(Debug, Clone)]
 pub struct TrainOpts {
+    /// Examples per batch.
     pub batch: usize,
+    /// Global-norm gradient clip (`<= 0` disables).
     pub grad_clip: f32,
+    /// Progress-print cadence (steps).
     pub log_every: usize,
+    /// Shuffling/init seed.
     pub seed: u64,
 }
 
@@ -35,10 +39,14 @@ impl Default for TrainOpts {
 /// A live training session against one artifact.
 pub struct Session<'e> {
     engine: &'e Engine,
+    /// Gradient-group artifact the session steps.
     pub artifact: String,
     store: ParamStore,
+    /// Freeze mask selecting which gradients the optimizer applies.
     pub mask: FreezeMask,
+    /// Optimizer state (masked AdamW).
     pub opt: AdamW,
+    /// Learning-rate schedule.
     pub sched: LrSchedule,
     /// Global-norm gradient clip applied each step; `<= 0` disables.
     /// Defaults to [`TrainOpts::default`]'s 1.0; training pipelines wire
@@ -48,10 +56,14 @@ pub struct Session<'e> {
     bufs: Vec<DeviceTensor>,
     /// (output index offset by 1 for loss, param index, trainable).
     grad_map: Vec<(usize, usize, bool)>,
+    /// Per-step loss curve.
     pub losses: Vec<f32>,
 }
 
 impl<'e> Session<'e> {
+    /// Open a session: validates the store and mask against the
+    /// artifact's model, uploads all parameters once (resident for the
+    /// session's lifetime) and maps gradient outputs to parameters.
     pub fn new(
         engine: &'e Engine,
         artifact: &str,
@@ -101,10 +113,12 @@ impl<'e> Session<'e> {
         })
     }
 
+    /// The session's current (host-side) parameters.
     pub fn store(&self) -> &ParamStore {
         &self.store
     }
 
+    /// Consume the session, keeping the tuned parameters.
     pub fn into_store(self) -> ParamStore {
         self.store
     }

@@ -20,13 +20,19 @@ use super::session::{Session, TrainOpts};
 /// Step budgets for the two stages.
 #[derive(Debug, Clone)]
 pub struct TuneOpts {
+    /// Stage-1 (head-only) steps.
     pub stage1_steps: usize,
+    /// Main-stage steps.
     pub main_steps: usize,
+    /// Fraction of steps spent in linear warmup.
     pub warmup_frac: f32,
+    /// Shared loop options (batch size, clip, seed).
     pub train: TrainOpts,
     /// Override the method's default LRs (used by sweeps).
     pub lr_stage1: Option<f32>,
+    /// Override the method's main-stage LR.
     pub lr_main: Option<f32>,
+    /// Print per-stage progress.
     pub verbose: bool,
 }
 
@@ -54,15 +60,20 @@ impl TuneOpts {
 /// Outcome of one (model, task, method) tuning run.
 #[derive(Debug, Clone)]
 pub struct TuneResult {
+    /// Dev-set score on the paper's 0-100 scale.
     pub score: f64,
+    /// Full evaluation output (predictions, probes).
     pub eval: EvalResult,
+    /// Stage-1 loss curve.
     pub stage1_losses: Vec<f32>,
+    /// Main-stage loss curve.
     pub main_losses: Vec<f32>,
     /// trainable scalars in the main stage (paper accounting, incl. head
     /// when the method trains it jointly).
     pub trainable_scalars: usize,
     /// adapter-only scalars (paper's headline %, excludes the task head).
     pub adapter_scalars: usize,
+    /// `adapter_scalars` over the backbone total.
     pub param_fraction: f64,
     /// final store (for the analysis module / adapter extraction).
     pub store: ParamStore,

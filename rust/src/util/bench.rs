@@ -10,15 +10,22 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Benchmark name (one line per bench in the output).
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean wall time.
     pub mean: Duration,
+    /// Median wall time.
     pub p50: Duration,
+    /// 95th-percentile wall time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl Sample {
+    /// Print the standard one-line report.
     pub fn print(&self) {
         println!(
             "bench {:<44} iters={:<4} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} min={:>10.3?}",
@@ -34,7 +41,9 @@ impl Sample {
 
 /// Benchmark runner with fixed warmup + measurement iteration counts.
 pub struct Bench {
+    /// Untimed warmup iterations.
     pub warmup: usize,
+    /// Timed iterations.
     pub iters: usize,
 }
 
@@ -45,6 +54,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A runner with explicit warmup/iteration counts.
     pub fn new(warmup: usize, iters: usize) -> Self {
         Bench { warmup, iters }
     }

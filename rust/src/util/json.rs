@@ -15,25 +15,34 @@ use anyhow::{anyhow, bail, Result};
 /// BTreeMap index for O(log n) lookup.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (insertion-ordered).
     Obj(Obj),
 }
 
 #[derive(Debug, Clone, Default, PartialEq)]
+/// An insertion-ordered JSON object with indexed lookup.
 pub struct Obj {
     pairs: Vec<(String, Json)>,
     index: BTreeMap<String, usize>,
 }
 
 impl Obj {
+    /// An empty object.
     pub fn new() -> Self {
         Obj::default()
     }
 
+    /// Insert or replace a key (replacement keeps the original position).
     pub fn insert(&mut self, key: impl Into<String>, val: Json) {
         let key = key.into();
         if let Some(&i) = self.index.get(&key) {
@@ -44,40 +53,49 @@ impl Obj {
         }
     }
 
+    /// Look up a key.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.index.get(key).map(|&i| &self.pairs[i].1)
     }
 
+    /// Iterate pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
         self.pairs.iter().map(|(k, v)| (k, v))
     }
 
+    /// Number of pairs.
     pub fn len(&self) -> usize {
         self.pairs.len()
     }
 
+    /// Whether the object has no pairs.
     pub fn is_empty(&self) -> bool {
         self.pairs.is_empty()
     }
 }
 
 impl Json {
+    /// An empty object value.
     pub fn obj() -> Json {
         Json::Obj(Obj::new())
     }
 
+    /// A string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// A number value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
+    /// An array value.
     pub fn arr(items: Vec<Json>) -> Json {
         Json::Arr(items)
     }
 
+    /// Insert into an object value (panics on non-objects); chains.
     pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
         if let Json::Obj(o) = self {
             o.insert(key, val);
@@ -87,6 +105,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Require a key on an object value.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(o) => o
@@ -96,6 +115,7 @@ impl Json {
         }
     }
 
+    /// Optional key lookup on an object value.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(o) => o.get(key),
@@ -103,6 +123,7 @@ impl Json {
         }
     }
 
+    /// Require a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -110,6 +131,7 @@ impl Json {
         }
     }
 
+    /// Require a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -117,10 +139,12 @@ impl Json {
         }
     }
 
+    /// Require a non-negative integer-valued number.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// Require a boolean.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -128,6 +152,7 @@ impl Json {
         }
     }
 
+    /// Require an array.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -135,6 +160,7 @@ impl Json {
         }
     }
 
+    /// Require an object.
     pub fn as_obj(&self) -> Result<&Obj> {
         match self {
             Json::Obj(o) => Ok(o),
@@ -142,6 +168,7 @@ impl Json {
         }
     }
 
+    /// Require an array of strings, cloned.
     pub fn str_vec(&self) -> Result<Vec<String>> {
         self.as_arr()?
             .iter()
@@ -151,12 +178,14 @@ impl Json {
 
     // ---- serialization ---------------------------------------------------
 
+    /// Render compactly.
     pub fn render(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);
         out
     }
 
+    /// Render with 2-space indentation (stable result files).
     pub fn render_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
@@ -247,6 +276,7 @@ fn write_escaped(out: &mut String, s: &str) {
 
 // ---------------------------------------------------------------- parsing
 
+/// Parse a JSON document (strict; trailing garbage is an error).
 pub fn parse(text: &str) -> Result<Json> {
     let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
     p.skip_ws();

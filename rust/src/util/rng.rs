@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator from a seed (SplitMix64-scrambled).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
     }
@@ -22,6 +23,7 @@ impl Rng {
         Rng::new(s)
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -46,6 +48,7 @@ impl Rng {
         lo + self.below(hi - lo)
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn chance(&mut self, p: f32) -> bool {
         self.next_f32() < p
     }

@@ -1,0 +1,241 @@
+//! Serve-path contracts, counter-verified:
+//!
+//! 1. A request's logits are identical whether it is served alone
+//!    (`max_batch = 1`) or inside a mixed-task micro-batch — every kernel
+//!    on the eval forward is row/example-local, so cross-tenant batching
+//!    is free of cross-talk.
+//! 2. The inference entry with no adapter overlays reproduces the forward
+//!    artifact's logits exactly (same kernels, same order — the eval path
+//!    only *skips* training slabs, it never changes math).
+//! 3. Hot-swapping adapters in the bank never touches the frozen
+//!    backbone's pack cache: task switching costs vector copies, not
+//!    repacks.
+//! 4. The steady-state serve loop inherits the training loop's
+//!    zero-allocation / zero-spawn contracts: arena misses and pool
+//!    spawns freeze after the first (warm-up) batch.
+
+use hadapt::data::{generate, make_batch, task_info};
+use hadapt::model::ParamStore;
+use hadapt::runtime::{
+    Engine, InferBatch, InferOut, IntTensor, Manifest, ServeRequest, ServeSession, TaskAdapter,
+    Tensor,
+};
+
+fn engine2() -> Engine {
+    Engine::new_with_threads("/definitely/not/a/dir", 2).unwrap()
+}
+
+fn store_for(engine: &Engine, model: &str, seed: u64) -> ParamStore {
+    ParamStore::init(engine.manifest().model(model).unwrap(), seed)
+}
+
+/// Two deliberately-different synthetic task adapters.
+fn two_tasks(engine: &Engine, store: &ParamStore) -> (TaskAdapter, TaskAdapter) {
+    let info = engine.manifest().model("tiny").unwrap();
+    let mut a = TaskAdapter::from_store(info, store, "a", 2).unwrap();
+    let mut b = TaskAdapter::from_store(info, store, "b", 3).unwrap();
+    for (j, v) in a.had_w[0].iter_mut().enumerate() {
+        *v += 0.01 * (j as f32 + 1.0);
+    }
+    for v in a.had_b[1].iter_mut() {
+        *v -= 0.05;
+    }
+    for v in b.norm_b[0].iter_mut() {
+        *v += 0.1;
+    }
+    for (j, v) in b.cls_w.iter_mut().enumerate() {
+        *v += 0.002 * (j % 7) as f32;
+    }
+    (a, b)
+}
+
+fn mixed_requests(n: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| ServeRequest {
+            task: if i % 2 == 0 { "a".into() } else { "b".into() },
+            seq_a: (0..6 + i % 5).map(|j| 5 + (i * 13 + j * 7) as i32 % 500).collect(),
+            seq_b: if i % 3 == 0 {
+                Some((0..4).map(|j| 9 + (i * 11 + j * 3) as i32 % 500).collect())
+            } else {
+                None
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn mixed_task_micro_batch_matches_single_request_serves() {
+    let engine = engine2();
+    let store = store_for(&engine, "tiny", 42);
+    let (ta, tb) = two_tasks(&engine, &store);
+
+    let mut batched = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    batched.register_task(ta.clone()).unwrap();
+    batched.register_task(tb.clone()).unwrap();
+    let mut solo = ServeSession::new(&engine, "tiny", &store, 1).unwrap();
+    solo.register_task(ta).unwrap();
+    solo.register_task(tb).unwrap();
+
+    let reqs = mixed_requests(6);
+    for r in &reqs {
+        batched.submit(r.clone()).unwrap();
+    }
+    // 6 requests at max_batch=4: one full batch + one padded batch
+    let batch_replies = batched.run_pending().unwrap();
+    assert_eq!(batch_replies.len(), 6);
+
+    for (i, r) in reqs.iter().enumerate() {
+        solo.submit(r.clone()).unwrap();
+        let one = solo.run_pending().unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(
+            one[0].logits, batch_replies[i].logits,
+            "request {i} ({}): mixed-task micro-batch must reproduce the \
+             single-request logits exactly",
+            r.task
+        );
+        assert_eq!(one[0].label, batch_replies[i].label);
+    }
+
+    // the two tasks' adapters genuinely disagree on identical input
+    let same_input = ServeRequest { task: "a".into(), seq_a: vec![7, 8, 9], seq_b: None };
+    let mut as_b = same_input.clone();
+    as_b.task = "b".into();
+    solo.submit(same_input).unwrap();
+    let ra = solo.run_pending().unwrap();
+    solo.submit(as_b).unwrap();
+    let rb = solo.run_pending().unwrap();
+    assert_ne!(ra[0].logits, rb[0].logits, "different tenants, different logits");
+}
+
+#[test]
+fn infer_without_adapters_matches_forward_artifact() {
+    let engine = engine2();
+    let store = store_for(&engine, "tiny", 7);
+    let (b, l) = (engine.manifest().batch, engine.manifest().seq_len);
+    let ds = generate(task_info("sst2").unwrap(), 3, "dev", b);
+    let idx: Vec<usize> = (0..b).collect();
+    let bt = make_batch(&ds, &idx, b, l);
+
+    let params: Vec<_> = store.tensors.iter().map(|t| engine.upload(t).unwrap()).collect();
+    let mut inputs: Vec<&_> = params.iter().collect();
+    let batch_bufs = vec![
+        engine
+            .upload_int_owned(IntTensor::new(vec![b, l], bt.tokens.clone()).unwrap())
+            .unwrap(),
+        engine
+            .upload_int_owned(IntTensor::new(vec![b, l], bt.type_ids.clone()).unwrap())
+            .unwrap(),
+        engine
+            .upload_owned(Tensor::new(vec![b, l], bt.attn_mask.clone()).unwrap())
+            .unwrap(),
+    ];
+    inputs.extend(batch_bufs.iter());
+    let artifact_outs = engine.run(&Manifest::fwd_name("tiny"), &inputs).unwrap();
+
+    let mut out = InferOut::default();
+    engine
+        .infer(
+            "tiny",
+            &params,
+            InferBatch {
+                b,
+                l,
+                tokens: &bt.tokens,
+                type_ids: &bt.type_ids,
+                attn_mask: &bt.attn_mask,
+            },
+            None,
+            &mut out,
+        )
+        .unwrap();
+    assert_eq!(out.logits, artifact_outs[0].data, "logits must match the artifact");
+    assert_eq!(out.regression, artifact_outs[1].data, "regression must match");
+}
+
+#[test]
+fn adapter_swap_leaves_the_pack_cache_frozen() {
+    let engine = engine2();
+    let store = store_for(&engine, "tiny", 9);
+    let (ta, tb) = two_tasks(&engine, &store);
+    let mut s = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    s.register_task(ta.clone()).unwrap();
+    s.register_task(tb).unwrap();
+
+    let reqs = mixed_requests(4);
+    for r in &reqs {
+        s.submit(r.clone()).unwrap();
+    }
+    s.run_pending().unwrap();
+    let (live0, repacks0) = engine.pack_stats();
+    assert!(live0 > 0, "serving must pack the frozen backbone");
+    assert_eq!(repacks0, 0);
+
+    // redeploy task 'a' repeatedly, serving between swaps; capture logits
+    // before/after one swap to prove the new vectors actually apply
+    s.submit(reqs[0].clone()).unwrap();
+    let before = s.run_pending().unwrap()[0].logits.clone();
+    for round in 0..3 {
+        let mut swapped = ta.clone();
+        for v in swapped.had_b[0].iter_mut() {
+            *v += 0.2 + round as f32 * 0.1;
+        }
+        s.register_task(swapped).unwrap();
+        for r in &reqs {
+            s.submit(r.clone()).unwrap();
+        }
+        s.run_pending().unwrap();
+    }
+    s.submit(reqs[0].clone()).unwrap();
+    let after = s.run_pending().unwrap()[0].logits.clone();
+    assert_ne!(before, after, "a swapped adapter must change the tenant's logits");
+
+    let (live1, repacks1) = engine.pack_stats();
+    assert_eq!(
+        (live1, repacks1),
+        (live0, 0),
+        "adapter swaps must never repack the frozen backbone"
+    );
+}
+
+#[test]
+fn serve_steady_state_freezes_arena_and_pool_counters() {
+    let engine = engine2();
+    let store = store_for(&engine, "tiny", 21);
+    let (ta, tb) = two_tasks(&engine, &store);
+    let mut s = ServeSession::new(&engine, "tiny", &store, 8).unwrap();
+    s.register_task(ta).unwrap();
+    s.register_task(tb).unwrap();
+
+    let reqs = mixed_requests(8);
+    // warm-up batch: arena fills, workers spawn, backbone packs
+    for r in &reqs {
+        s.submit(r.clone()).unwrap();
+    }
+    s.run_pending().unwrap();
+    let (hits0, misses0) = engine.arena_stats();
+    let pool0 = engine.pool_stats();
+    assert_eq!(pool0.threads_spawned, 1, "a 2-thread engine spawns one worker");
+
+    for _ in 0..3 {
+        for r in &reqs {
+            s.submit(r.clone()).unwrap();
+        }
+        s.run_pending().unwrap();
+    }
+    let (hits1, misses1) = engine.arena_stats();
+    let pool1 = engine.pool_stats();
+    assert_eq!(misses1, misses0, "steady-state serve batches must not miss the arena");
+    assert!(hits1 > hits0, "steady-state serve batches must hit the arena");
+    assert_eq!(
+        pool1.threads_spawned, pool0.threads_spawned,
+        "steady-state serve batches must not spawn threads"
+    );
+    assert!(pool1.jobs_dispatched > pool0.jobs_dispatched, "batches keep dispatching");
+
+    // short (padded) batches at the same geometry stay steady too
+    s.submit(reqs[0].clone()).unwrap();
+    s.run_pending().unwrap();
+    let (_, misses2) = engine.arena_stats();
+    assert_eq!(misses2, misses1, "padded batches reuse the same fixed geometry");
+}

@@ -20,6 +20,12 @@
 //! kernel memory" acceptance test; `native.rs` has the artifact-level
 //! twin (`steady_train_steps_spawn_no_threads`).
 //!
+//! Since PR 5 the loop has an eval-shaped sibling: the serve path's
+//! forward-only kernel sequence (fused GEMM with **no** pre-activation
+//! tap, LayerNorm, per-example Hadamard adapter rows, attention forward)
+//! must hold the same zero-allocation steady state — the counter-proof
+//! behind `ServeSession`'s fixed-geometry micro-batches.
+//!
 //! This file intentionally holds a single test: the counting allocator is
 //! process-global, and a sibling test running on another thread would
 //! pollute the count.
@@ -183,6 +189,85 @@ fn steady_kernel_loop(pool: &Pool, b: usize, l: usize, nh: usize, h: usize, labe
     assert!(ws.hits() > 0);
 }
 
+/// Run 4 serve-shaped (forward-only) kernel iterations at the given
+/// geometry: the eval path's sequence — fused GEMM with bias+GELU and no
+/// pre-activation tap, LayerNorm, **per-example** Hadamard adapter rows
+/// (exactly how the multi-tenant serve path applies a gathered bank), and
+/// the attention forward. Iterations 1..3 run under the counting
+/// allocator and must allocate nothing and never miss the arena.
+fn steady_eval_loop(pool: &Pool, b: usize, l: usize, nh: usize, h: usize, label: &str) {
+    let hd = h / nh;
+    let t = b * l;
+    let mut rng = Rng::new(0xE7A1);
+
+    let x = randv(&mut rng, t * h);
+    let wmat = randv(&mut rng, h * h);
+    let pw_nn = k::PackedMat::pack_nn(&wmat, h, h);
+    let bias = randv(&mut rng, h);
+    let gain = randv(&mut rng, h);
+    let beta = randv(&mut rng, h);
+    // per-example adapter rows, as the serve path gathers them from a bank
+    let hw_rows = randv(&mut rng, b * h);
+    let hb_rows = randv(&mut rng, b * h);
+    let mask_add = vec![0.0f32; b * l];
+
+    let mut ws = Workspace::new();
+    let mut misses_after_warm = 0u64;
+    let mut sink = 0.0f32;
+    for iter in 0..4 {
+        if iter == 1 {
+            misses_after_warm = ws.misses();
+            assert!(misses_after_warm > 0, "{label}: warm-up must populate the arena");
+            ALLOCS.store(0, Ordering::SeqCst);
+            TRACKING.store(true, Ordering::SeqCst);
+        }
+
+        let mut y = ws.take_dirty(t * h);
+        let epi = k::Epilogue { add1: None, bias: Some(&bias), add2: None, gelu: true };
+        k::gemm_fused_into(pool, &x, k::BMat::Packed(&pw_nn), &mut y, t, h, h, epi, None);
+        let mut ln_y = ws.take_dirty(t * h);
+        let mut xh = ws.take_dirty(t * h);
+        let mut inv = ws.take_dirty(t);
+        k::layernorm_fwd_into(pool, &y, &gain, &beta, &mut ln_y, &mut xh, &mut inv);
+        let mut had = ws.take_dirty(t * h);
+        for bi in 0..b {
+            k::hadamard_fwd_into(
+                &ln_y[bi * l * h..(bi + 1) * l * h],
+                &hw_rows[bi * h..(bi + 1) * h],
+                &hb_rows[bi * h..(bi + 1) * h],
+                None,
+                None,
+                &mut had[bi * l * h..(bi + 1) * l * h],
+            );
+        }
+        let mut att = ws.take_dirty(t * h);
+        let mut probs = ws.take_dirty(b * nh * l * l);
+        k::attention_fwd_into(
+            pool, &had, &ln_y, &y, &mask_add, b, nh, l, hd, &mut att, &mut probs,
+        );
+
+        sink += att[0] + had[0] + ln_y[0] + xh[0];
+        for buf in [y, ln_y, xh, had, att, probs] {
+            ws.give(buf);
+        }
+        ws.give(inv);
+    }
+    TRACKING.store(false, Ordering::SeqCst);
+
+    std::hint::black_box(sink);
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "{label}: eval steps 2..4 must perform zero heap allocations in kernel code"
+    );
+    assert_eq!(
+        ws.misses(),
+        misses_after_warm,
+        "{label}: eval steps 2..4 must be served entirely from the arena"
+    );
+    assert!(ws.hits() > 0);
+}
+
 #[test]
 fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
     // Serial pool: the original PR 3 zero-allocation contract. A serial
@@ -204,4 +289,15 @@ fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
     let st = pool.stats();
     assert_eq!(st.threads_spawned, 1, "exactly one worker, spawned once at warm-up");
     assert!(st.jobs_dispatched > 0, "the larger geometry must actually fork");
+
+    // The serve path's forward-only sequence holds the same contract —
+    // serially and on the already-warm persistent pool (which must not
+    // spawn again for eval work).
+    steady_eval_loop(&serial, 2, 8, 2, 16, "serial-eval");
+    steady_eval_loop(&pool, 8, 8, 2, 16, "2-worker-eval");
+    assert_eq!(
+        pool.stats().threads_spawned,
+        1,
+        "eval dispatch reuses the persistent worker"
+    );
 }

@@ -11,9 +11,17 @@ Since PR 4 the file also carries the persistent-pool dispatch rows: a
 top-level "pool" section (empty-job round trips, per-step spawn/job
 counters, its own provenance label), `scoped_ms`/`persistent_ms`/
 `dispatch_speedup` columns in every matmul row, and
-`pool_steady_spawns`/`pool_steady_jobs` in every train_step row. Two
-zero-contracts are enforced: steady-state arena misses AND steady-state
-pool spawns must both be 0.
+`pool_steady_spawns`/`pool_steady_jobs` in every train_step row.
+
+Since PR 5 it also carries a top-level "serve" section: the multi-tenant
+serve path's throughput/latency rows at micro-batch sizes 1/8/32 plus the
+adapter-swap economics and its own steady-state counters.
+
+Zero-contracts enforced (all counters, not measurements): steady-state
+arena misses, steady-state pool spawns, and the serve path's steady-state
+arena misses / pool spawns / repacks must all be 0.
+
+Every section and key is documented in docs/BENCH_SCHEMA.md.
 
 Usage: python3 tools/check_bench_schema.py BENCH_kernels.json
 """
@@ -60,6 +68,22 @@ MM_KEYS = {
     "fused_vs_separate",
     "dispatch_speedup",
 }
+SERVE_KEYS = {
+    "tasks",
+    "adapter_scalars_per_task",
+    "adapter_swap_us",
+    "full_reupload_ms",
+    "swap_vs_reupload",
+    "steady_arena_misses",
+    "steady_pool_spawns",
+    "steady_repacks",
+}
+SERVE_ROW_KEYS = {
+    "batch",
+    "p50_ms",
+    "p99_ms",
+    "req_per_s",
+}
 POOL_KEYS = {
     "threads",
     "empty_job_persistent_ns",
@@ -75,7 +99,11 @@ POOL_KEYS = {
 
 
 def fail(msg):
-    print(f"BENCH_kernels.json schema error: {msg}", file=sys.stderr)
+    print(
+        f"BENCH_kernels.json schema error: {msg} "
+        "(see docs/BENCH_SCHEMA.md for the full schema)",
+        file=sys.stderr,
+    )
     sys.exit(1)
 
 
@@ -113,6 +141,31 @@ def check_pool(pool):
         fail("pool.spawns_steady_per_step must be 0 (zero-spawn steady state)")
 
 
+def check_serve(serve):
+    if not isinstance(serve, dict):
+        fail("'serve' must be an object")
+    if not isinstance(serve.get("provenance"), str) or not serve["provenance"]:
+        fail("serve.provenance must be a non-empty string label")
+    if not isinstance(serve.get("model"), str) or not serve["model"]:
+        fail("serve.model must name the benchmarked model")
+    missing = SERVE_KEYS - set(serve)
+    if missing:
+        fail(f"serve missing keys: {sorted(missing)}")
+    for key in SERVE_KEYS:
+        if not isinstance(serve[key], (int, float)):
+            fail(f"serve.{key} must be a number")
+        if serve[key] < 0:
+            fail(f"serve.{key} must be non-negative")
+    rows = serve.get("rows")
+    if not isinstance(rows, dict) or not rows:
+        fail("serve.rows must be a non-empty object of per-batch-size rows")
+    check_rows("serve.rows", rows, SERVE_ROW_KEYS)
+    # the serve path inherits every steady-state zero-contract
+    for key in ("steady_arena_misses", "steady_pool_spawns", "steady_repacks"):
+        if serve[key] != 0:
+            fail(f"serve.{key} must be 0 (serve-path steady-state contract)")
+
+
 def main(path):
     with open(path) as f:
         data = json.load(f)
@@ -125,6 +178,7 @@ def main(path):
         "train_step",
         "matmul",
         "pool",
+        "serve",
     ):
         if key not in data:
             fail(f"missing top-level key '{key}'")
@@ -132,13 +186,18 @@ def main(path):
     check_rows("train_step", data["train_step"], STEP_KEYS)
     check_rows("matmul", data["matmul"], MM_KEYS)
     check_pool(data["pool"])
+    check_serve(data["serve"])
     # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
         if row["arena_steady_misses"] != 0:
             fail(f"train_step.{name}.arena_steady_misses must be 0 (zero-alloc steady state)")
         if row["pool_steady_spawns"] != 0:
             fail(f"train_step.{name}.pool_steady_spawns must be 0 (zero-spawn steady state)")
-    n_rows = sum(len(data[s]) for s in ("forward", "train_step", "matmul")) + 1
+    n_rows = (
+        sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
+        + len(data["serve"]["rows"])
+        + 1
+    )
     print(
         f"BENCH_kernels.json schema OK ({n_rows} rows, "
         f"provenance: {str(data['provenance'])[:40]}..., "
