@@ -20,6 +20,13 @@
 //! and the serve-side zero-contract counters (steady arena misses, pool
 //! spawns and repacks all pinned at 0).
 //!
+//! PR 6 adds the `ingress` section: the wire front door measured end to
+//! end — nanoseconds for the pull parser to decode a request body
+//! straight into the resident scratch, then socket-to-logits
+//! requests/sec and p50/p99 latency through a real [`WireServer`]
+//! (`serve-http`'s engine) at wave sizes 1/8/32, with the serve
+//! zero-contract counters read back over the wire from `/stats`.
+//!
 //! Results are also recorded to `BENCH_kernels.json` at the repo root so
 //! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
 //! smoke run (CI uses this; only the tiny model, few iterations). The
@@ -34,8 +41,8 @@ use hadapt::model::{FreezeMask, ParamStore};
 use hadapt::optim::LrSchedule;
 use hadapt::runtime::kernels::{self as k, scalar};
 use hadapt::runtime::{
-    DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool, ServeRequest,
-    ServeSession, TaskAdapter, Tensor,
+    spawn_synthetic_server, DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool,
+    RequestScratch, ServeRequest, ServeSession, SpawnOpts, TaskAdapter, Tensor, WireLimits,
 };
 use hadapt::train::Session;
 use hadapt::util::bench::{report_throughput, Bench};
@@ -94,6 +101,68 @@ fn scoped_matmul(
             }
         }
     });
+}
+
+// ---- minimal HTTP client for the ingress rows (bench-side, allocating) ----
+
+fn wire_body(task: &str, seq_a: &[i32], seq_b: Option<&[i32]>) -> String {
+    let ids = |v: &[i32]| v.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+    match seq_b {
+        Some(sb) => format!(
+            "{{\"task\":\"{task}\",\"text_a\":[{}],\"text_b\":[{}]}}",
+            ids(seq_a),
+            ids(sb)
+        ),
+        None => format!("{{\"task\":\"{task}\",\"text_a\":[{}]}}", ids(seq_a)),
+    }
+}
+
+fn wire_post(path: &str, body: &str) -> Vec<u8> {
+    format!("POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len()).into_bytes()
+}
+
+/// Read `n` Content-Length-framed responses off `s`, returning bodies.
+fn wire_read(s: &mut std::net::TcpStream, n: usize) -> Vec<String> {
+    use std::io::Read as _;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 8192];
+    while out.len() < n {
+        loop {
+            let Some(he) = buf.windows(4).position(|w| w == b"\r\n\r\n") else { break };
+            let head = String::from_utf8_lossy(&buf[..he]).to_string();
+            let cl: usize = head
+                .lines()
+                .find_map(|l| {
+                    let (k, v) = l.split_once(':')?;
+                    k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+                })
+                .unwrap_or(0);
+            let total = he + 4 + cl;
+            if buf.len() < total {
+                break;
+            }
+            out.push(String::from_utf8_lossy(&buf[he + 4..total]).to_string());
+            buf.drain(..total);
+            if out.len() == n {
+                return out;
+            }
+        }
+        let r = s.read(&mut chunk).unwrap();
+        assert!(r > 0, "wire bench: server closed early");
+        buf.extend_from_slice(&chunk[..r]);
+    }
+    out
+}
+
+/// `/stats` over an open connection: (arena misses, pool spawns, repacks).
+fn wire_counters(s: &mut std::net::TcpStream) -> (u64, u64, u64) {
+    use std::io::Write as _;
+    s.write_all(b"GET /stats HTTP/1.1\r\n\r\n").unwrap();
+    let body = wire_read(s, 1).pop().unwrap();
+    let v = hadapt::util::json::parse(&body).unwrap();
+    let n = |k: &str| v.get(k).unwrap().as_usize().unwrap() as u64;
+    (n("arena_misses"), n("pool_threads_spawned"), n("repacks"))
 }
 
 fn main() {
@@ -585,6 +654,115 @@ fn main() {
         serve_json.set("rows", rows);
     }
 
+    // Ingress rows (PR 6): the socket front door. First the pull parser
+    // alone — nanoseconds to decode a request body straight into the
+    // resident scratch — then socket-to-logits throughput and latency
+    // through a real `WireServer` at wave sizes 1/8/32. Per-request
+    // latency is the client-observed wave round trip (wire-inclusive,
+    // unlike the serve rows' in-process `latency_s`), and the serve
+    // zero-contract counters come back over the wire from `/stats`.
+    let mut ingress_json = Json::obj();
+    {
+        let smodel = if quick { "tiny" } else { "base" };
+        let serve_tasks = ["sst2", "mrpc", "rte"];
+
+        let limits = WireLimits::default();
+        let mut scratch = RequestScratch::default();
+        let pbody = wire_body("sst2", &(0..32).map(|i| (i * 3) % 512).collect::<Vec<_>>(), None);
+        let s_parse = b.run("ingress/parse_request", || {
+            hadapt::runtime::wire::decode_request(pbody.as_bytes(), &limits, &mut scratch).unwrap()
+        });
+        let parse_ns = s_parse.mean_ms() * 1e6;
+
+        let streams: Vec<_> = serve_tasks
+            .iter()
+            .map(|t| generate(task_info(t).unwrap(), 5, "dev", 32))
+            .collect();
+        let req_bufs: Vec<Vec<u8>> = (0..96)
+            .map(|i| {
+                let ds = &streams[i % streams.len()];
+                let e = &ds.examples[i % ds.examples.len()];
+                let body =
+                    wire_body(serve_tasks[i % serve_tasks.len()], &e.seq_a, e.seq_b.as_deref());
+                wire_post("/infer", &body)
+            })
+            .collect();
+
+        let mut rows = Json::obj();
+        let (mut misses, mut spawns, mut repacks) = (0u64, 0u64, 0u64);
+        for &bsz in &[1usize, 8, 32] {
+            let mut opts = SpawnOpts::tiny(7);
+            opts.model = smodel.to_string();
+            opts.threads = threads;
+            opts.max_batch = bsz;
+            opts.tasks = serve_tasks.iter().map(|t| t.to_string()).collect();
+            let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            conn.set_nodelay(true).unwrap();
+
+            use std::io::Write as _;
+            let mut wavebuf: Vec<u8> = Vec::new();
+            for r in req_bufs.iter().take(bsz) {
+                wavebuf.extend_from_slice(r);
+            }
+            conn.write_all(&wavebuf).unwrap();
+            wire_read(&mut conn, bsz); // warm-up wave: arena, workers, packs
+
+            let c0 = wire_counters(&mut conn);
+            let waves = if quick { 8 } else { 32 };
+            let mut lats: Vec<f64> = Vec::new();
+            let t0 = std::time::Instant::now();
+            for w in 0..waves {
+                wavebuf.clear();
+                for i in 0..bsz {
+                    wavebuf.extend_from_slice(&req_bufs[(w * bsz + i) % req_bufs.len()]);
+                }
+                let tw = std::time::Instant::now();
+                conn.write_all(&wavebuf).unwrap();
+                wire_read(&mut conn, bsz);
+                let rtt = tw.elapsed().as_secs_f64();
+                lats.extend(std::iter::repeat(rtt).take(bsz));
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let c1 = wire_counters(&mut conn);
+            misses += c1.0 - c0.0;
+            spawns += c1.1 - c0.1;
+            repacks += c1.2 - c0.2;
+
+            conn.write_all(&wire_post("/shutdown", "")).unwrap();
+            wire_read(&mut conn, 1);
+            handle.join().unwrap().unwrap();
+
+            lats.sort_by(|a, c| a.total_cmp(c));
+            let p50 = lats[lats.len() / 2] * 1e3;
+            let p99 = lats[(lats.len() * 99 / 100).min(lats.len() - 1)] * 1e3;
+            let rps = lats.len() as f64 / wall.max(1e-9);
+            println!(
+                "bench {:<44} req/s={rps:.0} p50={p50:.3}ms p99={p99:.3}ms",
+                format!("ingress/{smodel}/b{bsz} (socket-to-logits)")
+            );
+            let mut rj = Json::obj();
+            rj.set("batch", Json::num(bsz as f64));
+            ms(&mut rj, "p50_ms", p50);
+            ms(&mut rj, "p99_ms", p99);
+            rj.set("req_per_s", Json::num(rps.round()));
+            rows.set(&format!("b{bsz}"), rj);
+        }
+        println!(
+            "bench {:<44} parse_ns={parse_ns:.0} steady: misses={misses} spawns={spawns} \
+             repacks={repacks}",
+            format!("ingress_zero_contract/{smodel}")
+        );
+        ingress_json.set("provenance", Json::str("measured"));
+        ingress_json.set("model", Json::str(smodel));
+        ingress_json.set("tasks", Json::num(serve_tasks.len() as f64));
+        ingress_json.set("parse_ns_per_request", Json::num(parse_ns.round()));
+        ingress_json.set("steady_arena_misses", Json::num(misses as f64));
+        ingress_json.set("steady_pool_spawns", Json::num(spawns as f64));
+        ingress_json.set("steady_repacks", Json::num(repacks as f64));
+        ingress_json.set("rows", rows);
+    }
+
     // record the comparison next to the repo root for the perf trajectory
     let mut out = Json::obj();
     out.set(
@@ -592,8 +770,9 @@ fn main() {
         Json::str(
             "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
              vs blocked vs blocked+parallel vs packed+fused (native backend), plus \
-             persistent-pool vs scoped dispatch latency (PR 4) and multi-tenant \
-             serve-path rows (PR 5); schema in docs/BENCH_SCHEMA.md",
+             persistent-pool vs scoped dispatch latency (PR 4), multi-tenant \
+             serve-path rows (PR 5) and wire-ingress rows (PR 6); schema in \
+             docs/BENCH_SCHEMA.md",
         ),
     );
     out.set("provenance", Json::str("measured"));
@@ -606,6 +785,7 @@ fn main() {
     out.set("matmul", mm_json);
     out.set("pool", pool_json);
     out.set("serve", serve_json);
+    out.set("ingress", ingress_json);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(path, out.render_pretty()) {
         Ok(()) => println!("bench results recorded to {path}"),

@@ -41,9 +41,18 @@ pub struct Batch {
 /// The sentence budget is `seq` minus the special tokens, *saturating*: a
 /// degenerate `seq_len` (smaller than `[CLS] ... [SEP] ... [SEP]`) clamps
 /// instead of underflowing `usize` (which used to panic), and the layout
-/// is truncated to `seq` so even `seq_len < 3` never writes out of
-/// bounds. Under proportional pair truncation every present segment keeps
-/// at least one token whenever the budget allows.
+/// stops at `seq` so even `seq_len < 3` never writes out of bounds. Under
+/// proportional pair truncation every present segment keeps at least one
+/// token whenever the budget allows.
+///
+/// Since the wire front door landed this function is reachable with fully
+/// attacker-controlled `seq_a`/`seq_b` lengths, so it is hardened against
+/// that class: the proportional share is computed in `u128` (the old
+/// `avail * |a|` product was `usize` math and could overflow for gigantic
+/// sentences), row shapes are asserted up front instead of trusting the
+/// caller, and the row is written in place with no temporary allocation
+/// (the serve path calls this once per request on the zero-alloc hot
+/// path).
 pub fn encode_into(
     seq_a: &[i32],
     seq_b: Option<&[i32]>,
@@ -52,6 +61,9 @@ pub fn encode_into(
     type_ids: &mut [i32],
     attn: &mut [f32],
 ) {
+    assert_eq!(tokens.len(), seq, "tokens row must be exactly seq long");
+    assert_eq!(type_ids.len(), seq, "type_ids row must be exactly seq long");
+    assert_eq!(attn.len(), seq, "attn row must be exactly seq long");
     let b_len = seq_b.map_or(0, |b| b.len());
     // budget: CLS + a + SEP (+ b + SEP)
     let specials = if b_len > 0 { 3 } else { 2 };
@@ -68,35 +80,40 @@ pub fn encode_into(
         } else {
             // keep a's share, but leave b at least one token when
             // avail >= 2 (the old `.max(1)` could drive `avail - a_k`
-            // below zero and underflow)
-            let a_k = (avail * seq_a.len() / total)
-                .clamp(1, (avail - 1).max(1))
-                .min(seq_a.len());
+            // below zero and underflow). Widened to u128: with untrusted
+            // lengths the usize product could wrap before the divide.
+            let share =
+                (avail as u128 * seq_a.len() as u128 / total as u128) as usize;
+            let a_k = share.clamp(1, (avail - 1).max(1)).min(seq_a.len());
+            // a_k <= avail in every branch above, so this cannot underflow,
+            // and share >= avail - b_len guarantees b_keep <= b_len
             (a_k, avail - a_k)
         }
     };
-    let mut enc: Vec<(i32, i32)> = Vec::with_capacity(a_keep + b_keep + specials);
-    enc.push((vocab::CLS, 0));
+    let mut p = 0usize;
+    let mut put = |tok: i32, ty: i32| {
+        if p < seq {
+            tokens[p] = tok;
+            type_ids[p] = ty;
+            attn[p] = 1.0;
+            p += 1;
+        }
+    };
+    put(vocab::CLS, 0);
     for &t in &seq_a[..a_keep] {
-        enc.push((t, 0));
+        put(t, 0);
     }
-    enc.push((vocab::SEP, 0));
+    put(vocab::SEP, 0);
     if let Some(bseq) = seq_b {
         for &t in &bseq[..b_keep] {
-            enc.push((t, 1));
+            put(t, 1);
         }
-        enc.push((vocab::SEP, 1));
+        put(vocab::SEP, 1);
     }
-    enc.truncate(seq);
-    for (p, &(tok, ty)) in enc.iter().enumerate() {
-        tokens[p] = tok;
-        type_ids[p] = ty;
-        attn[p] = 1.0;
-    }
-    for p in enc.len()..seq {
-        tokens[p] = vocab::PAD;
-        type_ids[p] = 0;
-        attn[p] = 0.0;
+    for q in p..seq {
+        tokens[q] = vocab::PAD;
+        type_ids[q] = 0;
+        attn[q] = 0.0;
     }
 }
 
@@ -273,6 +290,118 @@ mod tests {
                 assert!(n_b >= 1, "seq={seq} row {i}: segment b emptied");
             }
         }
+    }
+
+    /// Row-level invariants shared by the wire-boundary tests below.
+    fn check_row(seq: usize, tokens: &[i32], type_ids: &[i32], attn: &[f32]) {
+        let real = attn.iter().filter(|&&m| m > 0.0).count();
+        assert!(real <= seq);
+        // mask is a 0/1 prefix
+        for p in 0..seq {
+            assert_eq!(attn[p] > 0.0, p < real, "mask not a prefix at {p}");
+        }
+        if seq > 0 && real > 0 {
+            assert_eq!(tokens[0], vocab::CLS);
+        }
+        for p in real..seq {
+            assert_eq!(tokens[p], vocab::PAD, "pad tail at {p}");
+            assert_eq!(type_ids[p], 0);
+        }
+        assert!(type_ids.iter().all(|&t| t == 0 || t == 1));
+    }
+
+    #[test]
+    fn encode_into_wire_boundary_budgets() {
+        // the serve front door feeds attacker-chosen lengths straight in;
+        // pin the 0 / 1 / seq-1 / seq / beyond-seq boundaries for both the
+        // single and the pair layout
+        let seq = 16;
+        let mut tokens = vec![0i32; seq];
+        let mut type_ids = vec![0i32; seq];
+        let mut attn = vec![0f32; seq];
+        for a_len in [0usize, 1, seq - 1, seq, seq + 7, 3 * seq] {
+            for b_len in [None, Some(0usize), Some(1), Some(seq - 1), Some(seq)] {
+                let a: Vec<i32> = (0..a_len).map(|i| 5 + i as i32).collect();
+                let b: Option<Vec<i32>> =
+                    b_len.map(|n| (0..n).map(|i| 9 + i as i32).collect());
+                encode_into(
+                    &a,
+                    b.as_deref(),
+                    seq,
+                    &mut tokens,
+                    &mut type_ids,
+                    &mut attn,
+                );
+                check_row(seq, &tokens, &type_ids, &attn);
+                let n_a = (0..seq)
+                    .filter(|&p| {
+                        attn[p] > 0.0
+                            && type_ids[p] == 0
+                            && tokens[p] != vocab::CLS
+                            && tokens[p] != vocab::SEP
+                    })
+                    .count();
+                let n_b = (0..seq)
+                    .filter(|&p| {
+                        attn[p] > 0.0 && type_ids[p] == 1 && tokens[p] != vocab::SEP
+                    })
+                    .count();
+                assert!(n_a <= a_len, "a_len={a_len} b_len={b_len:?}");
+                match b_len {
+                    None | Some(0) => assert_eq!(n_b, 0, "a_len={a_len}"),
+                    Some(bl) => {
+                        assert!(n_b <= bl);
+                        // both segments survive whenever the budget allows
+                        if a_len >= 1 && seq >= 5 {
+                            assert!(n_a >= 1, "a emptied: a={a_len} b={bl}");
+                            assert!(n_b >= 1, "b emptied: a={a_len} b={bl}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_into_empty_second_segment_keeps_its_sep() {
+        // `Some(&[])` is "pair task, empty b": budget is 2 specials (b_len
+        // is 0) but the type-1 SEP is still emitted — pinned because the
+        // wire path maps "text_b": [] here
+        let seq = 8;
+        let mut tokens = vec![0i32; seq];
+        let mut type_ids = vec![0i32; seq];
+        let mut attn = vec![0f32; seq];
+        encode_into(&[7, 8], Some(&[]), seq, &mut tokens, &mut type_ids, &mut attn);
+        assert_eq!(&tokens[..5], &[vocab::CLS, 7, 8, vocab::SEP, vocab::SEP]);
+        assert_eq!(&type_ids[..5], &[0, 0, 0, 0, 1]);
+        assert_eq!(tokens[5], vocab::PAD);
+    }
+
+    #[test]
+    fn encode_into_attacker_sized_sentences_truncate_cleanly() {
+        // very large (heap-realizable) lengths exercise the widened
+        // proportional-share arithmetic: the row must saturate at seq with
+        // both segments represented, never panic or overflow
+        let seq = 8;
+        let a = vec![7i32; 100_000];
+        let b = vec![9i32; 3];
+        let mut tokens = vec![0i32; seq];
+        let mut type_ids = vec![0i32; seq];
+        let mut attn = vec![0f32; seq];
+        encode_into(&a, Some(&b), seq, &mut tokens, &mut type_ids, &mut attn);
+        check_row(seq, &tokens, &type_ids, &attn);
+        assert!(attn.iter().all(|&m| m > 0.0), "row must be full");
+        assert!(type_ids.iter().any(|&t| t == 1), "b segment must survive");
+
+        let b2 = vec![9i32; 250_000];
+        encode_into(&a, Some(&b2), seq, &mut tokens, &mut type_ids, &mut attn);
+        check_row(seq, &tokens, &type_ids, &attn);
+        assert!(type_ids.iter().any(|&t| t == 1));
+
+        // single-sentence flood
+        encode_into(&a, None, seq, &mut tokens, &mut type_ids, &mut attn);
+        check_row(seq, &tokens, &type_ids, &attn);
+        assert_eq!(tokens[seq - 1], vocab::SEP);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! hadapt train --model base --task sst2 --method hadamard
 //! hadapt eval --model base --task sst2 --ckpt path.ckpt
 //! hadapt serve-demo --model tiny      # multi-tenant adapter serving demo
+//! hadapt serve-http --model tiny      # HTTP front door (zero-alloc ingress)
 //! hadapt experiment table2            # regenerate a paper table/figure
 //! hadapt experiment all               # the whole evaluation section
 //! ```
@@ -13,7 +14,11 @@
 //! Global flags: `--set key=value` (config overrides), `--quick`,
 //! `--config path.json`. `serve-demo` adds `--requests N`, `--batch B`,
 //! `--tasks a,b,c` and `--trained` (export adapters from real tuning runs
-//! through the coordinator instead of synthesizing them).
+//! through the coordinator instead of synthesizing them). `serve-http`
+//! adds `--addr host:port`, `--max-batch B` (wave size) and
+//! `--tenants a,b,c` (synthetic adapters, same path as the demo); it
+//! serves `POST /infer`, `GET /stats`, `GET /healthz` and
+//! `POST /shutdown` until shut down.
 
 use std::time::Instant;
 
@@ -25,9 +30,10 @@ use hadapt::data::{generate, task_info};
 use hadapt::methods::Method;
 use hadapt::model::ParamStore;
 use hadapt::report::pct;
-use hadapt::runtime::{Engine, ServeRequest, ServeSession, TaskAdapter};
+use hadapt::runtime::{
+    synthetic_adapters, Engine, ServeRequest, ServeSession, TaskAdapter, WireLimits, WireServer,
+};
 use hadapt::train::{evaluate, load_or_pretrain};
-use hadapt::util::Rng;
 
 struct Cli {
     command: String,
@@ -39,8 +45,8 @@ fn parse_args() -> Result<Cli> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         bail!(
-            "usage: hadapt <info|pretrain|train|eval|serve-demo|experiment> [args] \
-             [--model M] [--task T] [--method X] [--quick] [--set k=v]"
+            "usage: hadapt <info|pretrain|train|eval|serve-demo|serve-http|experiment> \
+             [args] [--model M] [--task T] [--method X] [--quick] [--set k=v]"
         );
     }
     let command = args[0].clone();
@@ -80,14 +86,16 @@ impl Cli {
 fn build_config(cli: &Cli) -> Result<Config> {
     let path = cli.flag("config").unwrap_or("hadapt.json");
     let mut cfg = Config::load(path)?;
-    // serve-demo's own flags are only accepted for that command — on any
-    // other command they fall through to cfg.set and fail loudly, so
-    // e.g. `train --batch 32` cannot silently no-op.
+    // serve-demo's/serve-http's own flags are only accepted for their
+    // command — on any other command they fall through to cfg.set and
+    // fail loudly, so e.g. `train --batch 32` cannot silently no-op.
     let serve_demo = cli.command == "serve-demo";
+    let serve_http = cli.command == "serve-http";
     for (k, v) in &cli.flags {
         match k.as_str() {
             "config" | "model" | "task" | "method" | "ckpt" | "out" => {}
             "requests" | "batch" | "tasks" | "trained" if serve_demo => {}
+            "addr" | "max-batch" | "tenants" if serve_http => {}
             "set" => {
                 let (kk, vv) = v
                     .split_once('=')
@@ -252,24 +260,7 @@ fn cmd_serve_demo(cfg: Config, cli: &Cli) -> Result<()> {
         let engine = cfg.engine()?;
         let info = engine.manifest().model(&model)?.clone();
         let store = ParamStore::init(&info, seed);
-        let mut adapters = Vec::new();
-        for (ti, task) in tasks.iter().enumerate() {
-            let classes = task_info(task)
-                .with_context(|| format!("unknown task '{task}'"))?
-                .classes
-                .max(1);
-            let mut a = TaskAdapter::from_store(&info, &store, task, classes)?;
-            let mut rng = Rng::new(seed.wrapping_add(7919 * (ti as u64 + 1)));
-            for li in 0..a.had_w.len() {
-                for v in a.had_w[li].iter_mut() {
-                    *v += 0.05 * rng.normal();
-                }
-                for v in a.had_b[li].iter_mut() {
-                    *v += 0.05 * rng.normal();
-                }
-            }
-            adapters.push(a);
-        }
+        let adapters = synthetic_adapters(&info, &store, &tasks, seed)?;
         run_serve_demo(&engine, &model, &store, adapters, &tasks, requests, max_batch, seed)
     }
 }
@@ -403,6 +394,76 @@ fn run_serve_demo(
     Ok(())
 }
 
+/// `hadapt serve-http`: the wire front door — bind a socket, stand up a
+/// [`ServeSession`] with synthetic tenants (same deterministic path as
+/// `serve-demo`), and serve `POST /infer` / `GET /stats` /
+/// `GET /healthz` until `POST /shutdown`. On exit, prints the wire
+/// counters next to the engine's zero-contract counters so a load run
+/// (`tools/wire_load.py`) can be read end to end.
+fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
+    let model = cli.flag("model").unwrap_or("tiny").to_string();
+    let addr = cli.flag("addr").unwrap_or("127.0.0.1:8471");
+    let max_batch: usize = cli
+        .flag("max-batch")
+        .unwrap_or("8")
+        .parse()
+        .context("--max-batch wants a number")?;
+    let tenants: Vec<String> = cli
+        .flag("tenants")
+        .unwrap_or("sst2,mrpc,rte")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let seed = cfg.seed;
+
+    let engine = cfg.engine()?;
+    let info = engine.manifest().model(&model)?.clone();
+    let store = ParamStore::init(&info, seed);
+    let mut session = ServeSession::new(&engine, &model, &store, max_batch)?;
+    for a in synthetic_adapters(&info, &store, &tenants, seed)? {
+        println!(
+            "bank: task '{:<6}' registered ({} adapter scalars, {} classes)",
+            a.task,
+            a.scalars(),
+            a.classes
+        );
+        session.register_task(a)?;
+    }
+    let listener =
+        std::net::TcpListener::bind(addr).with_context(|| format!("cannot bind {addr}"))?;
+    let bound = listener.local_addr()?;
+    println!(
+        "serve-http: model '{model}', {} tenants, wave size {max_batch}, listening on {bound}",
+        tenants.len()
+    );
+    // the load script waits for this line before sending traffic
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    let stats = WireServer::new(session, listener, WireLimits::default()).run()?;
+
+    let (_, arena_misses) = engine.arena_stats();
+    let pool = engine.pool_stats();
+    let (_, repacks) = engine.pack_stats();
+    println!(
+        "serve-http done: {} connections, {} requests, {} replies, {} batches, \
+         rejects http/parse/submit {}/{}/{}",
+        stats.connections,
+        stats.requests,
+        stats.replies,
+        stats.batches,
+        stats.rejects_http,
+        stats.rejects_parse,
+        stats.rejects_submit
+    );
+    println!(
+        "engine counters at exit: arena misses {arena_misses}, threads spawned {}, \
+         repacks {repacks}",
+        pool.threads_spawned
+    );
+    Ok(())
+}
+
 fn cmd_experiment(cfg: Config, cli: &Cli) -> Result<()> {
     let id = cli
         .positional
@@ -428,6 +489,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(cfg, &cli),
         "eval" => cmd_eval(cfg, &cli),
         "serve-demo" => cmd_serve_demo(cfg, &cli),
+        "serve-http" => cmd_serve_http(cfg, &cli),
         "experiment" => cmd_experiment(cfg, &cli),
         other => bail!("unknown command '{other}'"),
     }

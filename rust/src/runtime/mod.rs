@@ -15,8 +15,12 @@
 //! Besides the artifact path, the runtime exposes a forward-only serve
 //! entry ([`Backend::infer`] / [`Engine::infer`]) and the serving layer
 //! built on it ([`serve::ServeSession`]): one packed frozen backbone, a
-//! bank of per-task Hadamard adapters, cross-task micro-batching. See
-//! `ARCHITECTURE.md` at the repo root for the layer-by-layer design.
+//! bank of per-task Hadamard adapters, cross-task micro-batching. In
+//! front of the session sits the wire ingress layer ([`wire`] for the
+//! std-only HTTP/1.1 + pull-JSON request grammar, [`server`] for the
+//! socket loop): a `serve-http` front door whose request path touches
+//! the heap zero times after warmup. See `ARCHITECTURE.md` at the repo
+//! root for the layer-by-layer design.
 
 pub mod backend;
 pub mod engine;
@@ -26,7 +30,9 @@ pub mod manifest;
 pub mod native;
 pub mod pool;
 pub mod serve;
+pub mod server;
 pub mod tensor;
+pub mod wire;
 pub mod workspace;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
@@ -38,9 +44,12 @@ pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, Pa
 pub use native::NativeBackend;
 pub use pool::{Pool, PoolStats};
 pub use serve::{
-    AdapterBank, ServeReply, ServeRequest, ServeSession, ServeStats, TaskAdapter,
+    synthetic_adapters, AdapterBank, DirectReply, ServeReply, ServeRequest, ServeSession,
+    ServeStats, SubmitError, TaskAdapter,
 };
+pub use server::{spawn_synthetic_server, ServerStats, SpawnOpts, WireServer};
 pub use tensor::{IntTensor, Tensor};
+pub use wire::{RequestScratch, ResponseBuf, WireError, WireLimits};
 pub use workspace::{Workspace, WorkspaceStats};
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;

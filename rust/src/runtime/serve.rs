@@ -31,14 +31,25 @@
 //! and zero-spawn contracts (`Engine::arena_stats` / `pool_stats`
 //! counters freeze after warm-up — also pinned by the tests and recorded
 //! by `bench_runtime`'s `serve` rows).
+//!
+//! The session exposes two admission paths. [`ServeSession::submit`]
+//! takes an owned [`ServeRequest`] and queues it (the in-process API).
+//! [`ServeSession::submit_borrowed`] is the wire front door's entry: it
+//! encodes borrowed token slices **directly into the resident batch
+//! buffers**, fails with a typed `Copy` [`SubmitError`] instead of an
+//! allocating message, and its replies ([`DirectReply`]) borrow the
+//! session's output buffers — end to end, a served request touches the
+//! heap zero times after warmup.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::batcher::encode_into;
+use crate::data::task_info;
 use crate::model::ParamStore;
+use crate::util::Rng;
 
 use super::backend::{BatchAdapters, DeviceTensor, InferBatch, InferOut};
 use super::engine::Engine;
@@ -151,12 +162,19 @@ impl TaskAdapter {
 /// an upsert: replacing a task's adapter is the hot "deploy a new tuned
 /// adapter" path and costs exactly the vector copies involved — it never
 /// invalidates the backbone's packed panels.
+///
+/// Entries live in a dense `Vec` with a name index on the side. A task's
+/// dense index ([`AdapterBank::index_of`]) is assigned at first
+/// registration and **stable across hot swaps** (replacement happens in
+/// place), which is what lets the wire path hold a `usize` per in-flight
+/// request instead of an owned task name.
 #[derive(Debug)]
 pub struct AdapterBank {
     layers: usize,
     hidden: usize,
     classes: usize,
-    tasks: HashMap<String, TaskAdapter>,
+    entries: Vec<TaskAdapter>,
+    index: HashMap<String, usize>,
 }
 
 impl AdapterBank {
@@ -167,7 +185,8 @@ impl AdapterBank {
             layers: info.layers,
             hidden: info.hidden,
             classes,
-            tasks: HashMap::new(),
+            entries: Vec::new(),
+            index: HashMap::new(),
         })
     }
 
@@ -225,33 +244,49 @@ impl AdapterBank {
                 adapter.classes
             );
         }
-        self.tasks.insert(adapter.task.clone(), adapter);
+        match self.index.get(&adapter.task) {
+            Some(&i) => self.entries[i] = adapter,
+            None => {
+                self.index.insert(adapter.task.clone(), self.entries.len());
+                self.entries.push(adapter);
+            }
+        }
         Ok(())
     }
 
     /// Look up a task's adapter.
     pub fn get(&self, task: &str) -> Option<&TaskAdapter> {
-        self.tasks.get(task)
+        self.index.get(task).map(|&i| &self.entries[i])
+    }
+
+    /// A task's dense index (stable across hot swaps).
+    pub fn index_of(&self, task: &str) -> Option<usize> {
+        self.index.get(task).copied()
+    }
+
+    /// The adapter at a dense index.
+    pub fn by_index(&self, i: usize) -> Option<&TaskAdapter> {
+        self.entries.get(i)
     }
 
     /// Whether a task is registered.
     pub fn contains(&self, task: &str) -> bool {
-        self.tasks.contains_key(task)
+        self.index.contains_key(task)
     }
 
     /// Registered task count.
     pub fn len(&self) -> usize {
-        self.tasks.len()
+        self.entries.len()
     }
 
     /// Whether the bank is empty.
     pub fn is_empty(&self) -> bool {
-        self.tasks.is_empty()
+        self.entries.is_empty()
     }
 
-    /// Registered task names (unordered).
+    /// Registered task names, in first-registration order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
-        self.tasks.keys().map(String::as_str)
+        self.entries.iter().map(|a| a.task.as_str())
     }
 }
 
@@ -282,6 +317,48 @@ pub struct ServeReply {
     pub label: usize,
     /// Submit-to-reply latency in seconds (queue wait included).
     pub latency_s: f64,
+}
+
+/// Typed admission error for the borrowed submit path
+/// ([`ServeSession::submit_borrowed`]). `Copy` on purpose: the wire
+/// front door maps these to error responses on the zero-alloc hot path,
+/// where the `String`-backed `anyhow` shim is off limits (the owned
+/// [`ServeSession::submit`] keeps its rich allocating messages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The task has no registered adapter in the bank.
+    UnknownTask,
+    /// A token id is negative or at/above the model's vocabulary size.
+    TokenOutOfVocab,
+    /// The open direct wave already holds `max_batch` requests; run
+    /// [`ServeSession::run_direct`] before submitting more.
+    WaveFull,
+}
+
+/// One direct-wave result, borrowing the session's resident buffers —
+/// the zero-copy sibling of [`ServeReply`], valid until the next wave
+/// runs.
+#[derive(Debug, Clone, Copy)]
+pub struct DirectReply<'a> {
+    /// The id [`ServeSession::submit_borrowed`] returned.
+    pub id: u64,
+    /// The request's task tag (borrowed from the bank).
+    pub task: &'a str,
+    /// Full-width logits row (borrowed from the session's output buffer).
+    pub logits: &'a [f32],
+    /// Argmax over the task's active classes.
+    pub label: usize,
+    /// Submit-to-reply latency in seconds.
+    pub latency_s: f64,
+}
+
+/// A direct-wave row: request metadata held without owning any request
+/// payload (the payload went straight into the batch buffers at submit).
+#[derive(Debug, Clone, Copy)]
+struct DirectMeta {
+    id: u64,
+    task_idx: usize,
+    enqueued: Instant,
 }
 
 /// Serve-side counters (requests, batches and padding overhead).
@@ -332,6 +409,16 @@ pub struct ServeSession<'e> {
     actives: Vec<usize>,
     out: InferOut,
     stats: ServeStats,
+    /// The open direct wave (borrowed-submit rows already encoded into
+    /// the batch buffers, oldest first).
+    direct: Vec<DirectMeta>,
+    /// The last *served* direct wave — what [`Self::direct_replies`]
+    /// iterates (swapped with `direct` at run time, buffers reused).
+    served: Vec<DirectMeta>,
+    /// Per-row argmax labels of the last direct wave (reused).
+    labels: Vec<usize>,
+    /// Per-row latencies of the last direct wave (reused).
+    latencies: Vec<f64>,
 }
 
 impl<'e> ServeSession<'e> {
@@ -392,6 +479,12 @@ impl<'e> ServeSession<'e> {
             actives: Vec::new(),
             out: InferOut::default(),
             stats: ServeStats::default(),
+            // pre-sized so a first full wave cannot grow them mid-request
+            // (the wire alloc test tracks from request 2 onward)
+            direct: Vec::with_capacity(max_batch),
+            served: Vec::with_capacity(max_batch),
+            labels: Vec::with_capacity(max_batch),
+            latencies: Vec::with_capacity(max_batch),
         })
     }
 
@@ -418,7 +511,7 @@ impl<'e> ServeSession<'e> {
             bail!(
                 "task '{}' has no registered adapter (have: {:?})",
                 req.task,
-                self.bank.tasks.keys().collect::<Vec<_>>()
+                self.bank.names().collect::<Vec<_>>()
             );
         }
         for &t in req.seq_a.iter().chain(req.seq_b.iter().flatten()) {
@@ -450,11 +543,162 @@ impl<'e> ServeSession<'e> {
         (self.max_batch, self.seq)
     }
 
+    /// The engine this session serves on (for counter snapshots — the
+    /// wire server's `/stats` reports arena/pool/pack counters alongside
+    /// its own).
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    /// Borrowed-slice admission for the wire path: validates the request
+    /// and encodes it **directly into the resident batch buffers** — no
+    /// owned `String`/`Vec`, no queue entry, no heap traffic after
+    /// warmup. Rows accumulate until [`Self::run_direct`]; replies are
+    /// read back with [`Self::direct_replies`].
+    ///
+    /// Admission mirrors [`Self::submit`]: unknown tasks and out-of-vocab
+    /// ids are rejected per request (with a typed [`SubmitError`] instead
+    /// of an allocating message) before they can poison the mixed-tenant
+    /// wave they would ride in.
+    pub fn submit_borrowed(
+        &mut self,
+        task: &str,
+        seq_a: &[i32],
+        seq_b: Option<&[i32]>,
+    ) -> Result<u64, SubmitError> {
+        if self.direct.len() >= self.max_batch {
+            return Err(SubmitError::WaveFull);
+        }
+        let task_idx = self.bank.index_of(task).ok_or(SubmitError::UnknownTask)?;
+        for &t in seq_a.iter().chain(seq_b.into_iter().flatten()) {
+            if t < 0 || t as usize >= self.vocab {
+                return Err(SubmitError::TokenOutOfVocab);
+            }
+        }
+        let (b, l) = (self.max_batch, self.seq);
+        self.tokens.resize(b * l, 0);
+        self.type_ids.resize(b * l, 0);
+        self.attn_mask.resize(b * l, 0.0);
+        let i = self.direct.len();
+        encode_into(
+            seq_a,
+            seq_b,
+            l,
+            &mut self.tokens[i * l..(i + 1) * l],
+            &mut self.type_ids[i * l..(i + 1) * l],
+            &mut self.attn_mask[i * l..(i + 1) * l],
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.direct.push(DirectMeta { id, task_idx, enqueued: Instant::now() });
+        Ok(id)
+    }
+
+    /// Drop an open direct wave without running it — the wire server's
+    /// post-admission failure path: if [`Self::run_direct`] errors, the
+    /// admitted rows must not leak into the next wave.
+    pub fn abort_direct(&mut self) {
+        self.direct.clear();
+    }
+
+    /// Requests in the open (not yet run) direct wave.
+    pub fn direct_pending(&self) -> usize {
+        self.direct.len()
+    }
+
+    /// Run the open direct wave as one padded micro-batch (fixed
+    /// `[max_batch, seq]` geometry — short waves repeat the last real
+    /// row, exactly like the queued path). Returns the number of real
+    /// requests served; results stay resident until the next wave and
+    /// are read with [`Self::direct_replies`].
+    pub fn run_direct(&mut self) -> Result<usize> {
+        let n = self.direct.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        let (b, l) = (self.max_batch, self.seq);
+        for row in n..b {
+            repeat_row(&mut self.tokens, l, n - 1, row);
+            repeat_row(&mut self.type_ids, l, n - 1, row);
+            repeat_row(&mut self.attn_mask, l, n - 1, row);
+        }
+        self.gather.clear();
+        self.actives.clear();
+        for i in 0..b {
+            let meta = self.direct[i.min(n - 1)];
+            let ad = self.bank.by_index(meta.task_idx).ok_or_else(|| {
+                anyhow!("task index {} vanished from the bank", meta.task_idx)
+            })?;
+            self.actives.push(ad.classes);
+            gather_rows(&mut self.gather, ad);
+        }
+        self.engine.infer(
+            &self.model,
+            &self.params,
+            InferBatch {
+                b,
+                l,
+                tokens: &self.tokens,
+                type_ids: &self.type_ids,
+                attn_mask: &self.attn_mask,
+            },
+            Some(&self.gather),
+            &mut self.out,
+        )?;
+        let c = self.classes;
+        self.labels.clear();
+        self.latencies.clear();
+        for i in 0..n {
+            let row = &self.out.logits[i * c..(i + 1) * c];
+            let active = self.actives[i];
+            let mut best = 0usize;
+            let mut bestv = f32::MIN;
+            for (j, &v) in row.iter().enumerate().take(active) {
+                if v > bestv {
+                    bestv = v;
+                    best = j;
+                }
+            }
+            self.labels.push(best);
+            self.latencies.push(self.direct[i].enqueued.elapsed().as_secs_f64());
+        }
+        self.stats.requests += n as u64;
+        self.stats.batches += 1;
+        self.stats.padded_rows += (b - n) as u64;
+        std::mem::swap(&mut self.direct, &mut self.served);
+        self.direct.clear();
+        Ok(n)
+    }
+
+    /// Iterate the last direct wave's replies in submit order, borrowing
+    /// the session's resident buffers (valid until the next wave runs).
+    pub fn direct_replies(&self) -> impl Iterator<Item = DirectReply<'_>> {
+        let c = self.classes;
+        self.served.iter().enumerate().map(move |(i, meta)| DirectReply {
+            id: meta.id,
+            task: self
+                .bank
+                .by_index(meta.task_idx)
+                .map(|a| a.task.as_str())
+                .unwrap_or(""),
+            logits: &self.out.logits[i * c..(i + 1) * c],
+            label: self.labels[i],
+            latency_s: self.latencies[i],
+        })
+    }
+
     /// Drain the queue: FIFO micro-batches of up to `max_batch` requests
     /// (mixed tasks welcome — adapter rows are selected per example),
     /// each run as one inference-only forward. Returns every reply in
     /// completion order.
     pub fn run_pending(&mut self) -> Result<Vec<ServeReply>> {
+        if !self.direct.is_empty() {
+            bail!(
+                "a direct wave is open ({} request(s)); run_direct() must drain it \
+                 before the queued path can reuse the shared batch buffers",
+                self.direct.len()
+            );
+        }
         let mut replies = Vec::new();
         while !self.queue.is_empty() {
             let n = self.queue.len().min(self.max_batch);
@@ -529,6 +773,49 @@ impl<'e> ServeSession<'e> {
         self.stats.padded_rows += (b - chunk.len()) as u64;
         Ok(())
     }
+}
+
+/// Copy row `src` over row `dst` in a `[rows, l]` buffer (`src < dst`) —
+/// the padding primitive for short direct waves.
+fn repeat_row<T: Copy>(buf: &mut [T], l: usize, src: usize, dst: usize) {
+    debug_assert!(src < dst);
+    let (head, tail) = buf.split_at_mut(dst * l);
+    tail[..l].copy_from_slice(&head[src * l..(src + 1) * l]);
+}
+
+/// Build deterministic synthetic tenants: distill the store's identity
+/// adapter once per task, then perturb the Hadamard vectors with a
+/// task-seeded RNG so tenants genuinely disagree on identical input.
+///
+/// This is the shared synthetic-tenant path behind `serve-demo`,
+/// `serve-http`, the wire tests and the ingress bench — same `(store,
+/// tasks, seed)` always yields the same adapters, which is what lets the
+/// wire-vs-in-process test compare logits bitwise across two sessions.
+pub fn synthetic_adapters(
+    info: &ModelInfo,
+    store: &ParamStore,
+    tasks: &[String],
+    seed: u64,
+) -> Result<Vec<TaskAdapter>> {
+    let mut adapters = Vec::with_capacity(tasks.len());
+    for (ti, task) in tasks.iter().enumerate() {
+        let classes = task_info(task)
+            .with_context(|| format!("unknown task '{task}'"))?
+            .classes
+            .max(1);
+        let mut a = TaskAdapter::from_store(info, store, task, classes)?;
+        let mut rng = Rng::new(seed.wrapping_add(7919 * (ti as u64 + 1)));
+        for li in 0..a.had_w.len() {
+            for v in a.had_w[li].iter_mut() {
+                *v += 0.05 * rng.normal();
+            }
+            for v in a.had_b[li].iter_mut() {
+                *v += 0.05 * rng.normal();
+            }
+        }
+        adapters.push(a);
+    }
+    Ok(adapters)
 }
 
 /// Append one task's adapter vectors as the next example's rows.
@@ -631,6 +918,93 @@ mod tests {
         s2.get_mut("encoder.layer.1.hadamard.w3").unwrap().data[0] = 0.2;
         let err = ServeSession::new(&engine, "tiny", &s2, 2).unwrap_err();
         assert!(err.to_string().contains("order-1"), "{err}");
+    }
+
+    #[test]
+    fn direct_wave_matches_owned_path_and_reuses_buffers() {
+        let (engine, store) = setup();
+        let info = engine.manifest().model("tiny").unwrap().clone();
+        let tasks = vec!["sst2".to_string(), "rte".to_string()];
+        let adapters = synthetic_adapters(&info, &store, &tasks, 33).unwrap();
+
+        let mut owned = ServeSession::new(&engine, "tiny", &store, 3).unwrap();
+        let mut direct = ServeSession::new(&engine, "tiny", &store, 3).unwrap();
+        for a in adapters {
+            owned.register_task(a.clone()).unwrap();
+            direct.register_task(a).unwrap();
+        }
+
+        // typed admission errors on the borrowed path
+        assert_eq!(
+            direct.submit_borrowed("nope", &[5], None),
+            Err(SubmitError::UnknownTask)
+        );
+        assert_eq!(
+            direct.submit_borrowed("sst2", &[5, -1], None),
+            Err(SubmitError::TokenOutOfVocab)
+        );
+        assert_eq!(
+            direct.submit_borrowed("sst2", &[5], Some(&[100_000])),
+            Err(SubmitError::TokenOutOfVocab)
+        );
+        assert_eq!(direct.direct_pending(), 0);
+
+        // two waves (one short, one full) must match the owned queue path
+        let reqs: Vec<(&str, Vec<i32>, Option<Vec<i32>>)> = vec![
+            ("sst2", vec![7, 8, 9], None),
+            ("rte", vec![10, 11], Some(vec![12, 13, 14])),
+            ("sst2", vec![15], Some(vec![])),
+            ("rte", vec![], None),
+            ("sst2", (0..40).map(|i| 20 + i).collect(), Some(vec![4, 5])),
+        ];
+        let mut owned_replies = Vec::new();
+        for (task, a, b) in &reqs {
+            owned
+                .submit(ServeRequest {
+                    task: (*task).into(),
+                    seq_a: a.clone(),
+                    seq_b: b.clone(),
+                })
+                .unwrap();
+        }
+        owned_replies.extend(owned.run_pending().unwrap());
+
+        let mut direct_out: Vec<(u64, String, Vec<f32>, usize)> = Vec::new();
+        for chunk in reqs.chunks(3) {
+            for (task, a, b) in chunk {
+                direct.submit_borrowed(task, a, b.as_deref()).unwrap();
+            }
+            let n = direct.run_direct().unwrap();
+            assert_eq!(n, chunk.len());
+            direct_out.extend(
+                direct
+                    .direct_replies()
+                    .map(|r| (r.id, r.task.to_string(), r.logits.to_vec(), r.label)),
+            );
+        }
+        assert_eq!(direct_out.len(), owned_replies.len());
+        for (o, d) in owned_replies.iter().zip(&direct_out) {
+            assert_eq!(o.id, d.0);
+            assert_eq!(o.task, d.1);
+            assert_eq!(o.logits, d.2, "borrowed path must serve identical logits");
+            assert_eq!(o.label, d.3);
+        }
+
+        // a full wave rejects further admissions with a typed error
+        for _ in 0..3 {
+            direct.submit_borrowed("sst2", &[5], None).unwrap();
+        }
+        assert_eq!(
+            direct.submit_borrowed("sst2", &[6], None),
+            Err(SubmitError::WaveFull)
+        );
+        // and the queued path refuses to run over an open wave
+        direct
+            .submit(ServeRequest { task: "sst2".into(), seq_a: vec![5], seq_b: None })
+            .unwrap();
+        assert!(direct.run_pending().is_err(), "open direct wave must block the queue");
+        direct.run_direct().unwrap();
+        assert!(direct.run_pending().is_ok());
     }
 
     #[test]

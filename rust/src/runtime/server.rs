@@ -1,0 +1,534 @@
+//! The socket loop of the serve front door: a std-only HTTP/1.1 server
+//! in front of [`ServeSession`].
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero heap traffic after warmup.** Every per-request buffer — the
+//!    connection read buffer, the decode scratch, the response
+//!    accumulator, the session's batch buffers — is owned by the server
+//!    and reused; buffers only ever grow to their high-water mark. The
+//!    steady-state contract is pinned by `tests/workspace_alloc.rs`
+//!    (`steady_wire_loop`): requests 2..N through the socket perform
+//!    zero allocations, zero thread spawns and zero weight repacks.
+//! 2. **One thread.** The [`crate::runtime::Engine`] is single-owner
+//!    (`RefCell` stats, thread-pinned workers), so the server accepts
+//!    and serves sequentially. Pipelined requests on one connection are
+//!    gathered into a direct wave and executed as a single padded
+//!    micro-batch — wire concurrency comes from batching, not threads.
+//! 3. **Every rejection is typed and accounted.** Framing, parse and
+//!    admission rejections land in separate [`ServerStats`] counters and
+//!    produce [`WireError`]-coded JSON bodies; only errors that
+//!    desynchronize the byte stream close the connection.
+//!
+//! [`spawn_synthetic_server`] is the shared harness entry (tests, bench,
+//! load script): it binds an ephemeral port in the caller, then builds
+//! engine + session + synthetic tenants inside the server thread —
+//! the engine never crosses a thread boundary.
+
+use std::io::{self, Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread::{self, JoinHandle};
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+
+use super::engine::Engine;
+use super::serve::{synthetic_adapters, ServeSession, SubmitError};
+use super::wire::{
+    decode_request, parse_head, Head, Method, RejectKind, RequestScratch, ResponseBuf, Route,
+    WireError, WireLimits,
+};
+
+/// Wire-level counters, separate from (and reported alongside) the
+/// session's serve counters and the engine's arena/pool/pack counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Complete request frames parsed (served or rejected).
+    pub requests: u64,
+    /// 200 inference replies written.
+    pub replies: u64,
+    /// Direct micro-batches executed.
+    pub batches: u64,
+    /// Framing/routing rejections (malformed heads, unknown routes,
+    /// wrong methods, truncated streams).
+    pub rejects_http: u64,
+    /// Body rejections (JSON grammar or request-shape violations).
+    pub rejects_parse: u64,
+    /// Admission rejections (unknown task, out-of-vocab token id).
+    pub rejects_submit: u64,
+    /// Bytes read off accepted connections.
+    pub bytes_in: u64,
+    /// Bytes written back.
+    pub bytes_out: u64,
+}
+
+/// Per-request outcome slot, recorded in arrival order so responses can
+/// be written back in lockstep after the wave runs.
+enum Slot {
+    /// Admitted into the open direct wave; consumes one wave reply.
+    Reply,
+    /// Rejected with a typed error.
+    Error(WireError),
+    /// A control route (stats/health/shutdown), answered after the wave.
+    Control(Route),
+}
+
+/// How gathering a wave ended.
+enum Gather {
+    /// Serve what was gathered.
+    Flush,
+    /// The byte stream is broken; serve the gathered wave, then report
+    /// `e` and close.
+    Fatal(WireError),
+    /// Peer closed cleanly between requests.
+    Eof,
+}
+
+/// The serve front door: one [`ServeSession`] behind one listening
+/// socket, single-threaded, zero-alloc steady state.
+pub struct WireServer<'e> {
+    session: ServeSession<'e>,
+    listener: TcpListener,
+    limits: WireLimits,
+    stats: ServerStats,
+    /// Connection read buffer (consumed front-to-front per frame).
+    buf: Vec<u8>,
+    /// Reused request-decode target.
+    scratch: RequestScratch,
+    /// Reused response accumulator (one `write_all` per wave).
+    resp: ResponseBuf,
+    /// Outcomes of the wave being gathered, in arrival order.
+    slots: Vec<Slot>,
+    shutdown: bool,
+}
+
+impl<'e> WireServer<'e> {
+    /// Wrap a session and a bound listener into a server.
+    pub fn new(
+        session: ServeSession<'e>,
+        listener: TcpListener,
+        limits: WireLimits,
+    ) -> WireServer<'e> {
+        WireServer {
+            session,
+            listener,
+            limits,
+            stats: ServerStats::default(),
+            // sized past any legal frame (max_head + max_body) plus one
+            // read chunk of slack, so adversarial TCP chunking can never
+            // force a steady-state regrow (the alloc test counts those)
+            buf: Vec::with_capacity(limits.max_head + limits.max_body + 2 * 8192),
+            scratch: RequestScratch::default(),
+            resp: ResponseBuf::default(),
+            slots: Vec::with_capacity(64),
+            shutdown: false,
+        }
+    }
+
+    /// Wire counters accumulated so far.
+    pub fn stats(&self) -> ServerStats {
+        self.stats
+    }
+
+    /// Accept and serve connections sequentially until `POST /shutdown`.
+    /// Per-connection I/O errors drop that connection and keep serving;
+    /// only accept failures are fatal.
+    pub fn run(mut self) -> Result<ServerStats> {
+        while !self.shutdown {
+            let stream = match self.listener.accept() {
+                Ok((stream, _peer)) => stream,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            };
+            let _ = stream.set_nodelay(true);
+            self.stats.connections += 1;
+            let _ = self.handle_conn(stream);
+        }
+        Ok(self.stats)
+    }
+
+    /// Serve one connection: gather a pipelined wave of frames, run the
+    /// admitted rows as one padded micro-batch, write all responses with
+    /// a single `write_all`, repeat until close/EOF/shutdown.
+    fn handle_conn(&mut self, mut stream: TcpStream) -> io::Result<()> {
+        self.buf.clear();
+        loop {
+            self.slots.clear();
+            let mut ok_rows = 0usize;
+            let mut close = false;
+            let outcome = loop {
+                match parse_head(&self.buf, &self.limits) {
+                    Err(e) => break Gather::Fatal(e),
+                    Ok(Some(head)) => {
+                        let total = head.head_len + head.content_length;
+                        if self.buf.len() < total {
+                            if self.read_more(&mut stream)? == 0 {
+                                break Gather::Fatal(WireError::TruncatedBody);
+                            }
+                            continue;
+                        }
+                        self.stats.requests += 1;
+                        let slot = self.route_request(&head, total);
+                        // consume the frame's bytes from the buffer front
+                        self.buf.copy_within(total.., 0);
+                        self.buf.truncate(self.buf.len() - total);
+                        let is_control = matches!(slot, Slot::Control(_));
+                        if matches!(slot, Slot::Reply) {
+                            ok_rows += 1;
+                        }
+                        close |= !head.keep_alive;
+                        self.slots.push(slot);
+                        // a wave ends at a control frame, a closing
+                        // request, or a full micro-batch
+                        if is_control || close || ok_rows == self.session.geometry().0 {
+                            break Gather::Flush;
+                        }
+                    }
+                    Ok(None) => {
+                        // incomplete head: serve what we already gathered
+                        // before blocking on more bytes
+                        if !self.slots.is_empty() {
+                            break Gather::Flush;
+                        }
+                        if self.read_more(&mut stream)? == 0 {
+                            if self.buf.is_empty() {
+                                break Gather::Eof;
+                            }
+                            break Gather::Fatal(WireError::TruncatedHead);
+                        }
+                    }
+                }
+            };
+            let mut fatal = None;
+            match outcome {
+                Gather::Flush => {}
+                Gather::Fatal(e) => {
+                    fatal = Some(e);
+                    close = true;
+                }
+                Gather::Eof => {
+                    if self.slots.is_empty() {
+                        return Ok(());
+                    }
+                    close = true;
+                }
+            }
+            if ok_rows > 0 {
+                if self.session.run_direct().is_ok() {
+                    self.stats.batches += 1;
+                } else {
+                    // post-admission failure: the wave is lost; every
+                    // admitted row answers 500 and the connection closes
+                    self.session.abort_direct();
+                    for slot in self.slots.iter_mut() {
+                        if matches!(slot, Slot::Reply) {
+                            *slot = Slot::Error(WireError::Internal);
+                        }
+                    }
+                    close = true;
+                }
+            }
+            self.resp.clear();
+            let mut control: Option<Route> = None;
+            {
+                let mut replies = self.session.direct_replies();
+                for slot in self.slots.iter() {
+                    match slot {
+                        Slot::Reply => {
+                            let r = replies.next().expect("one reply per admitted row");
+                            self.resp.push_reply(&r);
+                            self.stats.replies += 1;
+                        }
+                        Slot::Error(e) => {
+                            self.resp.push_error(*e);
+                            bump_reject(&mut self.stats, *e);
+                            close |= e.fatal();
+                        }
+                        // control frames always end the wave, so at most
+                        // one exists and it is last — answered below, in
+                        // order
+                        Slot::Control(route) => control = Some(*route),
+                    }
+                }
+            }
+            if let Some(route) = control {
+                match route {
+                    Route::Stats => self.push_stats(),
+                    Route::Health => self.resp.push_json(200, "OK", false, |b| {
+                        b.extend_from_slice(b"{\"ok\":true}");
+                    }),
+                    Route::Shutdown => {
+                        self.shutdown = true;
+                        close = true;
+                        self.resp.push_json(200, "OK", true, |b| {
+                            b.extend_from_slice(b"{\"shutting_down\":true}");
+                        });
+                    }
+                    Route::Infer | Route::Unknown => {}
+                }
+            }
+            if let Some(e) = fatal {
+                bump_reject(&mut self.stats, e);
+                self.resp.push_error(e);
+            }
+            if !self.resp.bytes().is_empty() {
+                stream.write_all(self.resp.bytes())?;
+                self.stats.bytes_out += self.resp.bytes().len() as u64;
+            }
+            if close || self.shutdown {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Route one complete frame (`buf[..total]`, head already parsed).
+    fn route_request(&mut self, head: &Head, total: usize) -> Slot {
+        match (head.route, head.method) {
+            (Route::Infer, Method::Post) => {
+                let body = &self.buf[head.head_len..total];
+                if let Err(e) = decode_request(body, &self.limits, &mut self.scratch) {
+                    return Slot::Error(e);
+                }
+                let text_b = self.scratch.text_b();
+                match self.session.submit_borrowed(
+                    &self.scratch.task,
+                    &self.scratch.seq_a,
+                    text_b,
+                ) {
+                    Ok(_) => Slot::Reply,
+                    Err(SubmitError::UnknownTask) => Slot::Error(WireError::UnknownTask),
+                    Err(SubmitError::TokenOutOfVocab) => {
+                        Slot::Error(WireError::TokenOutOfVocab)
+                    }
+                    // unreachable: gathering flushes at max_batch rows
+                    Err(SubmitError::WaveFull) => Slot::Error(WireError::Internal),
+                }
+            }
+            (Route::Infer, _) => Slot::Error(WireError::MethodNotAllowed),
+            (Route::Stats | Route::Health, Method::Get) => Slot::Control(head.route),
+            (Route::Shutdown, Method::Post) => Slot::Control(head.route),
+            (Route::Unknown, _) => Slot::Error(WireError::UnknownRoute),
+            _ => Slot::Error(WireError::MethodNotAllowed),
+        }
+    }
+
+    /// Append the `/stats` snapshot: wire counters + session serve
+    /// counters + the engine's arena/pool/pack counters, flat JSON.
+    fn push_stats(&mut self) {
+        let s = self.stats;
+        let serve = self.session.stats();
+        let engine = self.session.engine();
+        let (arena_hits, arena_misses) = engine.arena_stats();
+        let (packs_live, repacks) = engine.pack_stats();
+        let pool = engine.pool_stats();
+        self.resp.push_json(200, "OK", false, |b| {
+            let _ = write!(
+                b,
+                "{{\"connections\":{},\"requests\":{},\"replies\":{},\"batches\":{},\
+                 \"rejects_http\":{},\"rejects_parse\":{},\"rejects_submit\":{},\
+                 \"bytes_in\":{},\"bytes_out\":{},",
+                s.connections,
+                s.requests,
+                s.replies,
+                s.batches,
+                s.rejects_http,
+                s.rejects_parse,
+                s.rejects_submit,
+                s.bytes_in,
+                s.bytes_out
+            );
+            let _ = write!(
+                b,
+                "\"serve_requests\":{},\"serve_batches\":{},\"padded_rows\":{},\
+                 \"arena_hits\":{arena_hits},\"arena_misses\":{arena_misses},\
+                 \"pool_threads_spawned\":{},\"pool_jobs\":{},\"pool_wakeups\":{},\
+                 \"packs_live\":{packs_live},\"repacks\":{repacks}}}",
+                serve.requests,
+                serve.batches,
+                serve.padded_rows,
+                pool.threads_spawned,
+                pool.jobs_dispatched,
+                pool.wakeups
+            );
+        });
+    }
+
+    /// Read another chunk into the connection buffer (Interrupted
+    /// retried). Returns the byte count (0 = EOF / peer half-close).
+    fn read_more(&mut self, stream: &mut TcpStream) -> io::Result<usize> {
+        let old = self.buf.len();
+        self.buf.resize(old + 8192, 0);
+        loop {
+            match stream.read(&mut self.buf[old..]) {
+                Ok(n) => {
+                    self.buf.truncate(old + n);
+                    self.stats.bytes_in += n as u64;
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.buf.truncate(old);
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+fn bump_reject(stats: &mut ServerStats, e: WireError) {
+    match e.bucket() {
+        RejectKind::Http => stats.rejects_http += 1,
+        RejectKind::Parse => stats.rejects_parse += 1,
+        RejectKind::Submit => stats.rejects_submit += 1,
+    }
+}
+
+/// Configuration for [`spawn_synthetic_server`].
+#[derive(Debug, Clone)]
+pub struct SpawnOpts {
+    /// Artifacts directory handed to [`Engine::new_with_threads`] (the
+    /// native backend never reads it; any path works offline).
+    pub artifacts_dir: String,
+    /// Model name from the manifest ("tiny"/"base"/"large").
+    pub model: String,
+    /// Seed for both the backbone [`ParamStore::init`] and the synthetic
+    /// tenant perturbations — same seed, same logits, bit-for-bit.
+    pub seed: u64,
+    /// Worker-thread request for the engine (0 = auto-detect).
+    pub threads: usize,
+    /// Serve micro-batch geometry (wave size).
+    pub max_batch: usize,
+    /// Tenant task names to register synthetic adapters for.
+    pub tasks: Vec<String>,
+    /// Wire limits.
+    pub limits: WireLimits,
+}
+
+impl SpawnOpts {
+    /// The test harness default: tiny model, two explicit workers (so
+    /// `HADAPT_THREADS=1` CI runs keep the same pool geometry), wave
+    /// size 4, two tenants.
+    pub fn tiny(seed: u64) -> SpawnOpts {
+        SpawnOpts {
+            artifacts_dir: "/definitely/not/a/dir".to_string(),
+            model: "tiny".to_string(),
+            seed,
+            threads: 2,
+            max_batch: 4,
+            tasks: vec!["sst2".to_string(), "rte".to_string()],
+            limits: WireLimits::default(),
+        }
+    }
+}
+
+/// Bind an ephemeral localhost port, then stand up engine + session +
+/// synthetic tenants **inside the server thread** (the engine is
+/// single-owner and never crosses threads) and serve until shutdown.
+/// Returns the bound address and the server thread's handle; joining it
+/// yields the final [`ServerStats`].
+pub fn spawn_synthetic_server(
+    opts: SpawnOpts,
+) -> Result<(SocketAddr, JoinHandle<Result<ServerStats>>)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let handle = thread::Builder::new()
+        .name("hadapt-wire".to_string())
+        .spawn(move || -> Result<ServerStats> {
+            let engine = Engine::new_with_threads(&opts.artifacts_dir, opts.threads)?;
+            let info = engine.manifest().model(&opts.model)?.clone();
+            let store = ParamStore::init(&info, opts.seed);
+            let mut session = ServeSession::new(&engine, &opts.model, &store, opts.max_batch)?;
+            for adapter in synthetic_adapters(&info, &store, &opts.tasks, opts.seed)? {
+                session.register_task(adapter)?;
+            }
+            WireServer::new(session, listener, opts.limits).run()
+        })?;
+    Ok((addr, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(stream: &mut TcpStream, req: &[u8]) -> (u16, String) {
+        stream.write_all(req).unwrap();
+        read_response(stream)
+    }
+
+    fn read_response(stream: &mut TcpStream) -> (u16, String) {
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i + 4;
+            }
+            let n = stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "eof mid-response: {:?}", String::from_utf8_lossy(&buf));
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+        let status: u16 =
+            head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let cl: usize = head
+            .lines()
+            .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+            .unwrap()
+            .split(':')
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        while buf.len() < head_end + cl {
+            let n = stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "eof mid-body");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        (status, String::from_utf8_lossy(&buf[head_end..head_end + cl]).to_string())
+    }
+
+    fn post_infer(body: &str) -> Vec<u8> {
+        format!(
+            "POST /infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .into_bytes()
+    }
+
+    #[test]
+    fn smoke_serve_reject_stats_shutdown() {
+        let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(5)).unwrap();
+        let mut c = TcpStream::connect(addr).unwrap();
+        // happy request
+        let (status, body) =
+            roundtrip(&mut c, &post_infer(r#"{"task":"sst2","text_a":[5,6,7]}"#));
+        assert_eq!(status, 200, "{body}");
+        assert!(body.contains("\"logits\":["), "{body}");
+        // typed rejection on the same (kept-alive) connection
+        let (status, body) =
+            roundtrip(&mut c, &post_infer(r#"{"task":"nope","text_a":[1]}"#));
+        assert_eq!(status, 404, "{body}");
+        assert!(body.contains("\"error\":\"unknown-task\""), "{body}");
+        // liveness + counters
+        let (status, body) = roundtrip(&mut c, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        let (status, body) = roundtrip(&mut c, b"GET /stats HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200, "{body}");
+        assert!(body.contains("\"replies\":1"), "{body}");
+        assert!(body.contains("\"rejects_submit\":1"), "{body}");
+        assert!(body.contains("\"batches\":1"), "{body}");
+        // shutdown drains the accept loop and the thread exits
+        let (status, _) = roundtrip(&mut c, b"POST /shutdown HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        let stats = handle.join().unwrap().unwrap();
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.replies, 1);
+        assert_eq!(stats.rejects_submit, 1);
+    }
+}

@@ -1,0 +1,831 @@
+//! Wire grammar for the serve front door: request framing, body decode,
+//! response encode — all without per-request heap traffic.
+//!
+//! This module is the protocol half of the ingress layer (the socket
+//! loop lives in [`super::server`]). Three pieces:
+//!
+//! * [`parse_head`] — an incremental HTTP/1.1 head parser over the
+//!   connection's read buffer. Length-prefixed bodies only
+//!   (`Content-Length`; `Transfer-Encoding` is rejected as unsupported),
+//!   byte-slice scanning, no allocation, hard limits from
+//!   [`WireLimits`].
+//! * [`decode_request`] — the typed extractor over
+//!   [`crate::util::PullParser`] events: decodes
+//!   `{"task", "text_a", "text_b"}` into a caller-owned
+//!   [`RequestScratch`] whose buffers are reused request to request.
+//!   Strict by design: unknown fields, duplicate fields, wrong types,
+//!   fractional/overflowing token ids and oversized token arrays each
+//!   map to their own [`WireError`].
+//! * [`ResponseBuf`] — a per-connection response accumulator: bodies are
+//!   serialized into a reusable scratch, framed with a computed
+//!   `Content-Length`, and appended to an output buffer so a pipelined
+//!   wave is flushed with one `write_all`.
+//!
+//! Every failure mode is a `Copy` [`WireError`] with a stable kebab-case
+//! [`WireError::code`] — the adversarial fixture corpus
+//! (`rust/tests/fixtures/wire/`) names each fixture after the code it
+//! must produce, and the `String`-backed `anyhow` shim never appears on
+//! this path.
+
+use crate::util::pull_json::{Event, JsonError, PullParser};
+
+use super::serve::DirectReply;
+
+/// Hard ceilings for untrusted wire input. Defaults are generous for the
+/// models in the manifest and small enough that a hostile peer cannot
+/// make the server buffer unbounded memory.
+#[derive(Debug, Clone, Copy)]
+pub struct WireLimits {
+    /// Maximum request-head bytes (request line + headers + CRLFCRLF).
+    pub max_head: usize,
+    /// Maximum declared `Content-Length`.
+    pub max_body: usize,
+    /// Maximum token ids per `text_a`/`text_b` array.
+    pub max_tokens: usize,
+}
+
+impl Default for WireLimits {
+    fn default() -> WireLimits {
+        WireLimits { max_head: 4096, max_body: 64 * 1024, max_tokens: 4096 }
+    }
+}
+
+/// Which server-side counter a rejected request lands in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// Framing/routing rejections (bad head, unknown route, bad method).
+    Http,
+    /// Body rejections (JSON grammar or request-shape violations).
+    Parse,
+    /// Admission rejections (unknown task, out-of-vocab token).
+    Submit,
+}
+
+/// Typed wire failure: every way an untrusted request can be refused.
+/// `Copy` on purpose — produced and serialized on the zero-alloc path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Request line is not `METHOD SP TARGET SP VERSION`.
+    BadRequestLine,
+    /// Version is neither `HTTP/1.1` nor `HTTP/1.0`.
+    BadVersion,
+    /// Head exceeds [`WireLimits::max_head`] bytes.
+    HeadTooLarge,
+    /// A header line without a colon or with an empty name.
+    BadHeader,
+    /// `Content-Length` is not a plain decimal (or two headers disagree).
+    BadContentLength,
+    /// `Transfer-Encoding` present (only length-prefixed bodies served).
+    UnsupportedTransferEncoding,
+    /// Connection closed mid-head.
+    TruncatedHead,
+    /// Connection closed before `Content-Length` bytes arrived.
+    TruncatedBody,
+    /// Declared `Content-Length` exceeds [`WireLimits::max_body`].
+    BodyTooLarge,
+    /// No handler at the request target.
+    UnknownRoute,
+    /// Known route, wrong method.
+    MethodNotAllowed,
+    /// A JSON grammar violation in the body (wrapped parser error).
+    Json(JsonError),
+    /// The body's top-level value is not an object.
+    NotAnObject,
+    /// A request field appeared twice.
+    DuplicateField,
+    /// A field outside `task`/`text_a`/`text_b`.
+    UnknownField,
+    /// A field with the wrong JSON type (e.g. nested arrays as tokens).
+    BadFieldType,
+    /// No (or empty) `task` field.
+    MissingTask,
+    /// No `text_a` field.
+    MissingText,
+    /// A token id with a fractional part.
+    TokenNotAnInteger,
+    /// A token id outside the `i32` range.
+    TokenOutOfRange,
+    /// More than [`WireLimits::max_tokens`] ids in one array.
+    TooManyTokens,
+    /// The task has no registered adapter.
+    UnknownTask,
+    /// A token id outside the model's vocabulary.
+    TokenOutOfVocab,
+    /// The serve path failed after admission (never expected; the
+    /// response closes the connection).
+    Internal,
+}
+
+impl From<JsonError> for WireError {
+    fn from(e: JsonError) -> WireError {
+        WireError::Json(e)
+    }
+}
+
+impl WireError {
+    /// Stable kebab-case code used in error bodies and fixture names.
+    pub fn code(self) -> &'static str {
+        match self {
+            WireError::BadRequestLine => "bad-request-line",
+            WireError::BadVersion => "bad-version",
+            WireError::HeadTooLarge => "head-too-large",
+            WireError::BadHeader => "bad-header",
+            WireError::BadContentLength => "bad-content-length",
+            WireError::UnsupportedTransferEncoding => "unsupported-transfer-encoding",
+            WireError::TruncatedHead => "truncated-head",
+            WireError::TruncatedBody => "truncated-body",
+            WireError::BodyTooLarge => "body-too-large",
+            WireError::UnknownRoute => "unknown-route",
+            WireError::MethodNotAllowed => "method-not-allowed",
+            WireError::Json(e) => e.code(),
+            WireError::NotAnObject => "not-an-object",
+            WireError::DuplicateField => "duplicate-field",
+            WireError::UnknownField => "unknown-field",
+            WireError::BadFieldType => "bad-field-type",
+            WireError::MissingTask => "missing-task",
+            WireError::MissingText => "missing-text",
+            WireError::TokenNotAnInteger => "token-not-integer",
+            WireError::TokenOutOfRange => "token-out-of-range",
+            WireError::TooManyTokens => "too-many-tokens",
+            WireError::UnknownTask => "unknown-task",
+            WireError::TokenOutOfVocab => "token-out-of-vocab",
+            WireError::Internal => "internal",
+        }
+    }
+
+    /// HTTP status and reason phrase.
+    pub fn status(self) -> (u16, &'static str) {
+        match self {
+            WireError::HeadTooLarge => (431, "Request Header Fields Too Large"),
+            WireError::BodyTooLarge | WireError::TooManyTokens => (413, "Payload Too Large"),
+            WireError::UnknownRoute | WireError::UnknownTask => (404, "Not Found"),
+            WireError::MethodNotAllowed => (405, "Method Not Allowed"),
+            WireError::UnsupportedTransferEncoding => (501, "Not Implemented"),
+            WireError::BadVersion => (505, "HTTP Version Not Supported"),
+            WireError::Internal => (500, "Internal Server Error"),
+            _ => (400, "Bad Request"),
+        }
+    }
+
+    /// Short human-readable message (static: no quotes, no escapes).
+    pub fn message(self) -> &'static str {
+        match self {
+            WireError::BadRequestLine => "malformed request line",
+            WireError::BadVersion => "only HTTP/1.1 and HTTP/1.0 are served",
+            WireError::HeadTooLarge => "request head exceeds the size limit",
+            WireError::BadHeader => "malformed header line",
+            WireError::BadContentLength => "content-length is not a plain decimal",
+            WireError::UnsupportedTransferEncoding => {
+                "transfer-encoding is not supported; send content-length"
+            }
+            WireError::TruncatedHead => "connection closed mid-head",
+            WireError::TruncatedBody => "connection closed before the declared body arrived",
+            WireError::BodyTooLarge => "declared content-length exceeds the body limit",
+            WireError::UnknownRoute => "no handler at this path",
+            WireError::MethodNotAllowed => "wrong method for this path",
+            WireError::Json(_) => "request body is not valid JSON",
+            WireError::NotAnObject => "request body must be a JSON object",
+            WireError::DuplicateField => "a request field appeared twice",
+            WireError::UnknownField => "only task, text_a and text_b are accepted",
+            WireError::BadFieldType => "a request field has the wrong type",
+            WireError::MissingTask => "a non-empty task field is required",
+            WireError::MissingText => "a text_a token array is required",
+            WireError::TokenNotAnInteger => "token ids must be integers",
+            WireError::TokenOutOfRange => "token ids must fit in 32 bits",
+            WireError::TooManyTokens => "too many token ids in one array",
+            WireError::UnknownTask => "task has no registered adapter",
+            WireError::TokenOutOfVocab => "token id outside the model vocabulary",
+            WireError::Internal => "serve path failed after admission",
+        }
+    }
+
+    /// Whether the connection must close after this error. Framing and
+    /// length errors desynchronize the byte stream — nothing after them
+    /// can be trusted to start a request — so they are fatal; body-level
+    /// rejections keep the connection (the frame boundary is intact).
+    pub fn fatal(self) -> bool {
+        matches!(
+            self,
+            WireError::BadRequestLine
+                | WireError::BadVersion
+                | WireError::HeadTooLarge
+                | WireError::BadHeader
+                | WireError::BadContentLength
+                | WireError::UnsupportedTransferEncoding
+                | WireError::TruncatedHead
+                | WireError::TruncatedBody
+                | WireError::BodyTooLarge
+                | WireError::Internal
+        )
+    }
+
+    /// Which reject counter this error lands in.
+    pub fn bucket(self) -> RejectKind {
+        match self {
+            WireError::UnknownTask | WireError::TokenOutOfVocab => RejectKind::Submit,
+            WireError::Json(_)
+            | WireError::NotAnObject
+            | WireError::DuplicateField
+            | WireError::UnknownField
+            | WireError::BadFieldType
+            | WireError::MissingTask
+            | WireError::MissingText
+            | WireError::TokenNotAnInteger
+            | WireError::TokenOutOfRange
+            | WireError::TooManyTokens => RejectKind::Parse,
+            _ => RejectKind::Http,
+        }
+    }
+}
+
+/// Request method (only the two served ones are distinguished).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// `GET`
+    Get,
+    /// `POST`
+    Post,
+    /// Anything else (always method-not-allowed or not-found).
+    Other,
+}
+
+/// Request target, resolved at head-parse time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /infer` — decode, admit, serve.
+    Infer,
+    /// `GET /stats` — counter snapshot (server + session + engine).
+    Stats,
+    /// `GET /healthz` — liveness.
+    Health,
+    /// `POST /shutdown` — drain and exit the accept loop.
+    Shutdown,
+    /// No handler.
+    Unknown,
+}
+
+/// A parsed request head.
+#[derive(Debug, Clone, Copy)]
+pub struct Head {
+    /// Request method.
+    pub method: Method,
+    /// Resolved route.
+    pub route: Route,
+    /// Declared body length (0 when absent).
+    pub content_length: usize,
+    /// Bytes the head occupies in the buffer (through the CRLFCRLF).
+    pub head_len: usize,
+    /// Whether the connection stays open after the response
+    /// (HTTP/1.1 default true, `Connection: close` false).
+    pub keep_alive: bool,
+}
+
+/// Incrementally parse a request head from the front of `buf`.
+///
+/// Returns `Ok(None)` when the head is not complete yet (caller reads
+/// more), `Ok(Some)` once the CRLFCRLF terminator is in the buffer, or a
+/// typed error. No allocation, no copies — everything is byte-slice
+/// scanning over the caller's read buffer.
+pub fn parse_head(buf: &[u8], limits: &WireLimits) -> Result<Option<Head>, WireError> {
+    let head_end = match find_subslice(buf, b"\r\n\r\n") {
+        Some(i) => i,
+        None => {
+            if buf.len() > limits.max_head {
+                return Err(WireError::HeadTooLarge);
+            }
+            return Ok(None);
+        }
+    };
+    if head_end + 4 > limits.max_head {
+        return Err(WireError::HeadTooLarge);
+    }
+    let head = &buf[..head_end];
+    let line_end = find_subslice(head, b"\r\n").unwrap_or(head.len());
+    let line = &head[..line_end];
+    let sp1 = line.iter().position(|&c| c == b' ').ok_or(WireError::BadRequestLine)?;
+    let rest = &line[sp1 + 1..];
+    let sp2 = rest.iter().position(|&c| c == b' ').ok_or(WireError::BadRequestLine)?;
+    let method_b = &line[..sp1];
+    let target = &rest[..sp2];
+    let version = &rest[sp2 + 1..];
+    if method_b.is_empty() || target.is_empty() {
+        return Err(WireError::BadRequestLine);
+    }
+    let http11 = version == b"HTTP/1.1";
+    if !http11 && version != b"HTTP/1.0" {
+        return Err(WireError::BadVersion);
+    }
+    let method = match method_b {
+        b"GET" => Method::Get,
+        b"POST" => Method::Post,
+        _ => Method::Other,
+    };
+    let route = match target {
+        b"/infer" => Route::Infer,
+        b"/stats" => Route::Stats,
+        b"/healthz" => Route::Health,
+        b"/shutdown" => Route::Shutdown,
+        _ => Route::Unknown,
+    };
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = http11;
+    let mut at = line_end;
+    while at < head.len() {
+        at += 2; // step over the separating CRLF
+        let next = match find_subslice(&head[at..], b"\r\n") {
+            Some(i) => at + i,
+            None => head.len(),
+        };
+        let hline = &head[at..next];
+        let colon =
+            hline.iter().position(|&c| c == b':').ok_or(WireError::BadHeader)?;
+        let name = trim_ascii(&hline[..colon]);
+        let value = trim_ascii(&hline[colon + 1..]);
+        if name.is_empty() {
+            return Err(WireError::BadHeader);
+        }
+        if name.eq_ignore_ascii_case(b"content-length") {
+            let n = parse_decimal(value).ok_or(WireError::BadContentLength)?;
+            if content_length.is_some_and(|prev| prev != n) {
+                return Err(WireError::BadContentLength);
+            }
+            content_length = Some(n);
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            return Err(WireError::UnsupportedTransferEncoding);
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            if value.eq_ignore_ascii_case(b"close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case(b"keep-alive") {
+                keep_alive = true;
+            }
+        }
+        at = next;
+    }
+    let content_length = content_length.unwrap_or(0);
+    if content_length > limits.max_body {
+        return Err(WireError::BodyTooLarge);
+    }
+    Ok(Some(Head { method, route, content_length, head_len: head_end + 4, keep_alive }))
+}
+
+/// Caller-owned decode target: every request reuses these buffers, so
+/// after the first (largest) request the decode path allocates nothing.
+#[derive(Debug, Default)]
+pub struct RequestScratch {
+    /// Decoded task name.
+    pub task: String,
+    /// Decoded `text_a` token ids.
+    pub seq_a: Vec<i32>,
+    /// Decoded `text_b` token ids (meaningful when `has_b`).
+    pub seq_b: Vec<i32>,
+    /// Whether the request carried a `text_b` *array* — an empty array
+    /// is distinct from absent/`null` (pair rows encode an extra SEP).
+    pub has_b: bool,
+    /// Unescape scratch lent to the pull parser.
+    str_buf: Vec<u8>,
+}
+
+impl RequestScratch {
+    /// The `text_b` view the batcher takes (`None` when absent/`null`).
+    pub fn text_b(&self) -> Option<&[i32]> {
+        if self.has_b {
+            Some(&self.seq_b)
+        } else {
+            None
+        }
+    }
+}
+
+/// Decode one `/infer` body into `scratch`. Strict single-pass extraction
+/// over pull-parser events; on success `scratch` holds the request, on
+/// failure it holds partial garbage the next decode overwrites.
+pub fn decode_request(
+    body: &[u8],
+    limits: &WireLimits,
+    scratch: &mut RequestScratch,
+) -> Result<(), WireError> {
+    // split borrow: the parser holds `str_buf` for its whole lifetime
+    // while the extractor fills the sibling fields
+    let RequestScratch { task, seq_a, seq_b, has_b, str_buf } = scratch;
+    task.clear();
+    seq_a.clear();
+    seq_b.clear();
+    *has_b = false;
+    let mut p = PullParser::new(body, str_buf);
+    match p.next()? {
+        Event::ObjBegin => {}
+        _ => return Err(WireError::NotAnObject),
+    }
+    const F_TASK: u8 = 1;
+    const F_TEXT_A: u8 = 2;
+    const F_TEXT_B: u8 = 4;
+    let mut seen: u8 = 0;
+    loop {
+        let field = match p.next()? {
+            Event::ObjEnd => break,
+            Event::Key("task") => F_TASK,
+            Event::Key("text_a") => F_TEXT_A,
+            Event::Key("text_b") => F_TEXT_B,
+            Event::Key(_) => return Err(WireError::UnknownField),
+            // the parser only yields Key/ObjEnd in key position
+            _ => return Err(WireError::NotAnObject),
+        };
+        if seen & field != 0 {
+            return Err(WireError::DuplicateField);
+        }
+        seen |= field;
+        match field {
+            F_TASK => match p.next()? {
+                Event::Str(s) => {
+                    if s.is_empty() {
+                        return Err(WireError::MissingTask);
+                    }
+                    task.push_str(s);
+                }
+                _ => return Err(WireError::BadFieldType),
+            },
+            F_TEXT_A => {
+                match p.next()? {
+                    Event::ArrBegin => {}
+                    _ => return Err(WireError::BadFieldType),
+                }
+                read_token_items(&mut p, seq_a, limits.max_tokens)?;
+            }
+            _ => match p.next()? {
+                Event::Null => {}
+                Event::ArrBegin => {
+                    read_token_items(&mut p, seq_b, limits.max_tokens)?;
+                    *has_b = true;
+                }
+                _ => return Err(WireError::BadFieldType),
+            },
+        }
+    }
+    // the object closed at top level; only End (or trailing garbage,
+    // which the parser types as an error) can follow
+    match p.next()? {
+        Event::End => {}
+        _ => return Err(WireError::Json(JsonError::TrailingData)),
+    }
+    if seen & F_TASK == 0 {
+        return Err(WireError::MissingTask);
+    }
+    if seen & F_TEXT_A == 0 {
+        return Err(WireError::MissingText);
+    }
+    Ok(())
+}
+
+/// Read number events into `out` until the matching `ArrEnd`.
+fn read_token_items(
+    p: &mut PullParser<'_, '_>,
+    out: &mut Vec<i32>,
+    max: usize,
+) -> Result<(), WireError> {
+    loop {
+        match p.next()? {
+            Event::ArrEnd => return Ok(()),
+            Event::Num(v) => {
+                if v.fract() != 0.0 {
+                    return Err(WireError::TokenNotAnInteger);
+                }
+                if v < i32::MIN as f64 || v > i32::MAX as f64 {
+                    return Err(WireError::TokenOutOfRange);
+                }
+                if out.len() >= max {
+                    return Err(WireError::TooManyTokens);
+                }
+                out.push(v as i32);
+            }
+            _ => return Err(WireError::BadFieldType),
+        }
+    }
+}
+
+/// Per-connection response accumulator: one reusable body scratch, one
+/// output buffer a whole pipelined wave is flushed from with a single
+/// `write_all`. Both buffers hold their high-water capacity, so steady
+/// traffic serializes responses with zero allocation.
+#[derive(Debug, Default)]
+pub struct ResponseBuf {
+    out: Vec<u8>,
+    body: Vec<u8>,
+}
+
+impl ResponseBuf {
+    /// The accumulated wire bytes (one or more framed responses).
+    pub fn bytes(&self) -> &[u8] {
+        &self.out
+    }
+
+    /// Drop the accumulated bytes, keeping capacity.
+    pub fn clear(&mut self) {
+        self.out.clear();
+    }
+
+    /// Append a response whose JSON body is written by `f` into the
+    /// reusable body scratch.
+    pub fn push_json(
+        &mut self,
+        status: u16,
+        reason: &str,
+        close: bool,
+        f: impl FnOnce(&mut Vec<u8>),
+    ) {
+        self.body.clear();
+        f(&mut self.body);
+        self.finish(status, reason, close);
+    }
+
+    /// Append the 200 reply for one served request. Logits use Rust's
+    /// shortest round-trip float repr: parsing the decimal back as `f64`
+    /// and narrowing to `f32` reproduces the exact bits (the
+    /// wire-vs-in-process equality test relies on this).
+    pub fn push_reply(&mut self, r: &DirectReply<'_>) {
+        use std::io::Write as _;
+        self.body.clear();
+        let _ = write!(self.body, "{{\"id\":{},\"task\":\"", r.id);
+        write_json_escaped(&mut self.body, r.task);
+        let _ = write!(
+            self.body,
+            "\",\"label\":{},\"latency_us\":{},\"logits\":[",
+            r.label,
+            (r.latency_s * 1e6) as u64
+        );
+        for (i, v) in r.logits.iter().enumerate() {
+            if i > 0 {
+                self.body.push(b',');
+            }
+            let _ = write!(self.body, "{v}");
+        }
+        self.body.extend_from_slice(b"]}");
+        self.finish(200, "OK", false);
+    }
+
+    /// Append the typed error response for `e` (closing variants carry
+    /// `Connection: close`).
+    pub fn push_error(&mut self, e: WireError) {
+        use std::io::Write as _;
+        let (status, reason) = e.status();
+        self.body.clear();
+        let _ = write!(
+            self.body,
+            "{{\"error\":\"{}\",\"message\":\"{}\"}}",
+            e.code(),
+            e.message()
+        );
+        self.finish(status, reason, e.fatal());
+    }
+
+    fn finish(&mut self, status: u16, reason: &str, close: bool) {
+        use std::io::Write as _;
+        let _ = write!(
+            self.out,
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n",
+            self.body.len()
+        );
+        if close {
+            self.out.extend_from_slice(b"Connection: close\r\n");
+        }
+        self.out.extend_from_slice(b"\r\n");
+        self.out.extend_from_slice(&self.body);
+    }
+}
+
+/// Write `s` as JSON string content: `"`/`\`/control bytes escaped,
+/// multi-byte UTF-8 passed through raw (valid JSON either way).
+pub fn write_json_escaped(out: &mut Vec<u8>, s: &str) {
+    use std::io::Write as _;
+    for &c in s.as_bytes() {
+        match c {
+            b'"' => out.extend_from_slice(b"\\\""),
+            b'\\' => out.extend_from_slice(b"\\\\"),
+            0x08 => out.extend_from_slice(b"\\b"),
+            0x0C => out.extend_from_slice(b"\\f"),
+            b'\n' => out.extend_from_slice(b"\\n"),
+            b'\r' => out.extend_from_slice(b"\\r"),
+            b'\t' => out.extend_from_slice(b"\\t"),
+            c if c < 0x20 => {
+                let _ = write!(out, "\\u{c:04x}");
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+// ---- byte-scanning helpers ----------------------------------------------
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn trim_ascii(mut b: &[u8]) -> &[u8] {
+    while let Some((&c, rest)) = b.split_first() {
+        if c == b' ' || c == b'\t' {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    while let Some((&c, rest)) = b.split_last() {
+        if c == b' ' || c == b'\t' {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+fn parse_decimal(v: &[u8]) -> Option<usize> {
+    if v.is_empty() {
+        return None;
+    }
+    let mut n: usize = 0;
+    for &c in v {
+        if !c.is_ascii_digit() {
+            return None;
+        }
+        n = n.checked_mul(10)?.checked_add((c - b'0') as usize)?;
+    }
+    Some(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: WireLimits = WireLimits { max_head: 256, max_body: 1024, max_tokens: 8 };
+
+    #[test]
+    fn head_parses_incrementally() {
+        let full = b"POST /infer HTTP/1.1\r\nContent-Length: 12\r\n\r\n";
+        for cut in 0..full.len() {
+            assert!(
+                parse_head(&full[..cut], &L).unwrap().is_none(),
+                "cut at {cut} must ask for more bytes"
+            );
+        }
+        let h = parse_head(full, &L).unwrap().unwrap();
+        assert_eq!(h.method, Method::Post);
+        assert_eq!(h.route, Route::Infer);
+        assert_eq!(h.content_length, 12);
+        assert_eq!(h.head_len, full.len());
+        assert!(h.keep_alive);
+    }
+
+    #[test]
+    fn head_routes_methods_and_connection() {
+        let h = parse_head(b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n", &L)
+            .unwrap()
+            .unwrap();
+        assert_eq!((h.route, h.method), (Route::Stats, Method::Get));
+        assert!(!h.keep_alive);
+        let h = parse_head(b"GET /healthz HTTP/1.0\r\n\r\n", &L).unwrap().unwrap();
+        assert_eq!(h.route, Route::Health);
+        assert!(!h.keep_alive, "HTTP/1.0 defaults to close");
+        let h = parse_head(b"POST /shutdown HTTP/1.1\r\n\r\n", &L).unwrap().unwrap();
+        assert_eq!(h.route, Route::Shutdown);
+        assert_eq!(h.content_length, 0, "missing content-length means empty body");
+        let h = parse_head(b"PUT /nope HTTP/1.1\r\n\r\n", &L).unwrap().unwrap();
+        assert_eq!((h.route, h.method), (Route::Unknown, Method::Other));
+    }
+
+    #[test]
+    fn head_rejections_are_typed() {
+        let cases: &[(&[u8], WireError)] = &[
+            (b"garbage\r\n\r\n", WireError::BadRequestLine),
+            (b"GET / HTTP/0.9\r\n\r\n", WireError::BadVersion),
+            (b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", WireError::BadHeader),
+            (b"GET / HTTP/1.1\r\nContent-Length: -5\r\n\r\n", WireError::BadContentLength),
+            (b"GET / HTTP/1.1\r\nContent-Length: 2x\r\n\r\n", WireError::BadContentLength),
+            (
+                b"POST /infer HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                WireError::UnsupportedTransferEncoding,
+            ),
+            (
+                b"POST /infer HTTP/1.1\r\nContent-Length: 99999\r\n\r\n",
+                WireError::BodyTooLarge,
+            ),
+        ];
+        for (input, want) in cases {
+            assert_eq!(
+                parse_head(input, &L).err(),
+                Some(*want),
+                "{:?}",
+                String::from_utf8_lossy(input)
+            );
+        }
+        // oversized heads reject with or without the terminator in sight
+        let mut big = b"GET / HTTP/1.1\r\n".to_vec();
+        big.extend(std::iter::repeat(b'a').take(300));
+        assert_eq!(parse_head(&big, &L).err(), Some(WireError::HeadTooLarge));
+        let mut terminated = b"GET / HTTP/1.1\r\nX: ".to_vec();
+        terminated.extend(std::iter::repeat(b'a').take(300));
+        terminated.extend_from_slice(b"\r\n\r\n");
+        assert_eq!(parse_head(&terminated, &L).err(), Some(WireError::HeadTooLarge));
+    }
+
+    #[test]
+    fn decode_fills_scratch_and_reuses_it() {
+        let mut s = RequestScratch::default();
+        decode_request(br#"{"task":"sst2","text_a":[5,6,7]}"#, &L, &mut s).unwrap();
+        assert_eq!(s.task, "sst2");
+        assert_eq!(s.seq_a, vec![5, 6, 7]);
+        assert_eq!(s.text_b(), None);
+
+        decode_request(
+            br#"{"text_b":[9],"task":"rte","text_a":[1]}"#,
+            &L,
+            &mut s,
+        )
+        .unwrap();
+        assert_eq!(s.task, "rte");
+        assert_eq!(s.seq_a, vec![1]);
+        assert_eq!(s.text_b(), Some(&[9][..]));
+
+        // null and empty-array text_b are distinct
+        decode_request(br#"{"task":"a","text_a":[],"text_b":null}"#, &L, &mut s).unwrap();
+        assert_eq!(s.text_b(), None);
+        decode_request(br#"{"task":"a","text_a":[],"text_b":[]}"#, &L, &mut s).unwrap();
+        assert_eq!(s.text_b(), Some(&[][..]));
+
+        // escaped task names land through the parser scratch
+        decode_request(br#"{"task":"sst2","text_a":[4]}"#, &L, &mut s).unwrap();
+        assert_eq!(s.task, "sst2");
+    }
+
+    #[test]
+    fn decode_rejections_are_typed() {
+        let cases: &[(&[u8], WireError)] = &[
+            (b"[1,2]", WireError::NotAnObject),
+            (b"\"s\"", WireError::NotAnObject),
+            (br#"{"task":"a","task":"b","text_a":[]}"#, WireError::DuplicateField),
+            (br#"{"task":"a","text_a":[],"extra":1}"#, WireError::UnknownField),
+            (br#"{"task":7,"text_a":[]}"#, WireError::BadFieldType),
+            (br#"{"task":"a","text_a":[[1]]}"#, WireError::BadFieldType),
+            (br#"{"task":"a","text_a":{"x":1}}"#, WireError::BadFieldType),
+            (br#"{"task":"a","text_a":[1,"x"]}"#, WireError::BadFieldType),
+            (br#"{"task":"","text_a":[]}"#, WireError::MissingTask),
+            (br#"{"text_a":[1]}"#, WireError::MissingTask),
+            (br#"{"task":"a"}"#, WireError::MissingText),
+            (br#"{"task":"a","text_a":[1.5]}"#, WireError::TokenNotAnInteger),
+            (
+                br#"{"task":"a","text_a":[3000000000]}"#,
+                WireError::TokenOutOfRange,
+            ),
+            (
+                br#"{"task":"a","text_a":[1,2,3,4,5,6,7,8,9]}"#,
+                WireError::TooManyTokens,
+            ),
+            (br#"{"task":"a","text_a":[1]}{}"#, WireError::Json(JsonError::TrailingData)),
+            (br#"{"task":"a","text_a":[1]"#, WireError::Json(JsonError::UnexpectedEof)),
+            (br#"{"task":"a","text_a":[1e999]}"#, WireError::Json(JsonError::NonFiniteNumber)),
+        ];
+        let mut s = RequestScratch::default();
+        for (body, want) in cases {
+            assert_eq!(
+                decode_request(body, &L, &mut s).err(),
+                Some(*want),
+                "{:?}",
+                String::from_utf8_lossy(body)
+            );
+        }
+    }
+
+    #[test]
+    fn response_buf_frames_and_accumulates() {
+        let mut r = ResponseBuf::default();
+        r.push_json(200, "OK", false, |b| b.extend_from_slice(b"{\"ok\":true}"));
+        r.push_error(WireError::UnknownTask);
+        let text = String::from_utf8(r.bytes().to_vec()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("\"error\":\"unknown-task\""), "{text}");
+        assert!(!text.contains("Connection: close"), "non-fatal errors keep alive");
+        r.clear();
+        r.push_error(WireError::TruncatedBody);
+        let text = String::from_utf8(r.bytes().to_vec()).unwrap();
+        assert!(text.contains("Connection: close"), "fatal errors close: {text}");
+        // declared lengths frame the stream exactly
+        let body_at = text.find("\r\n\r\n").unwrap() + 4;
+        let cl: usize = text
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(text.len() - body_at, cl);
+    }
+
+    #[test]
+    fn json_escaping_covers_specials() {
+        let mut out = Vec::new();
+        write_json_escaped(&mut out, "a\"b\\c\nd\u{1}é");
+        assert_eq!(out, b"a\\\"b\\\\c\\nd\\u0001\xc3\xa9".to_vec());
+    }
+}

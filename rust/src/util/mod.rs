@@ -4,9 +4,11 @@
 
 pub mod bench;
 pub mod json;
+pub mod pull_json;
 pub mod rng;
 
 pub use json::Json;
+pub use pull_json::{Event, JsonError, PullParser};
 pub use rng::Rng;
 
 /// Simple stable hash (FNV-1a) for cache keys and run ids.

@@ -1,0 +1,622 @@
+//! Recursion-free, allocation-free JSON pull parser for the wire path.
+//!
+//! The offline substrate already ships a DOM-style JSON implementation
+//! ([`super::json`]) for manifests and result files; that one allocates
+//! freely and is the right tool for configuration. The serve front door
+//! cannot use it: request parsing sits on the per-request hot path, where
+//! the runtime's counting-allocator contract demands zero heap traffic
+//! after warmup. This module is the ingress-grade alternative, following
+//! the picojson discipline:
+//!
+//! - **Pull, don't build.** The parser is an iterator-like state machine
+//!   over a borrowed byte slice. `next()` returns one [`Event`] at a time;
+//!   no tree is ever materialized.
+//! - **No recursion.** Nesting is tracked with a *bitstack*: one bit per
+//!   open container (1 = array, 0 = object) packed into a `u64`, bounded
+//!   by [`MAX_DEPTH`]. Hostile deep nesting yields a typed error, never a
+//!   stack overflow.
+//! - **Borrowed strings, caller-owned scratch.** Strings without escapes
+//!   are returned as slices of the input. Escaped strings are unescaped
+//!   into a caller-provided scratch buffer (copy-on-write); after warmup
+//!   the scratch capacity is resident and re-used, so even escaped keys
+//!   cost no allocation.
+//! - **Typed errors.** Every failure mode is a [`JsonError`] variant with
+//!   a stable wire code — a `Copy` enum, not an allocating error string.
+//!
+//! The typed extractor that consumes these events for the serve request
+//! shape lives in `runtime::wire`; this module knows nothing about HTTP.
+
+/// Maximum container nesting depth (bits available in the bitstack).
+pub const MAX_DEPTH: usize = 64;
+
+/// Typed parse failure. `Copy` on purpose: hot-path errors must not touch
+/// the heap (the vendored `anyhow` shim is `String`-backed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonError {
+    /// Input ended inside a value, string, or container.
+    UnexpectedEof,
+    /// A byte that cannot start or continue the expected token.
+    UnexpectedByte,
+    /// More than [`MAX_DEPTH`] nested containers (bitstack exhausted).
+    DepthOverflow,
+    /// A malformed `true`/`false`/`null` literal.
+    BadLiteral,
+    /// A number violating the strict JSON grammar (e.g. `01`, `1.`, `-`).
+    BadNumber,
+    /// A syntactically valid number that overflows to ±inf (e.g. `1e999`).
+    NonFiniteNumber,
+    /// A raw control byte (< 0x20) inside a string.
+    BadString,
+    /// An unknown backslash escape.
+    BadEscape,
+    /// A malformed `\uXXXX` escape or invalid surrogate pairing.
+    BadUnicodeEscape,
+    /// String bytes that are not valid UTF-8.
+    InvalidUtf8,
+    /// Bytes remaining after the top-level value closed.
+    TrailingData,
+}
+
+impl JsonError {
+    /// Stable kebab-case wire code (used in error response bodies and as
+    /// fixture-file name prefixes in the adversarial corpus).
+    pub fn code(self) -> &'static str {
+        match self {
+            JsonError::UnexpectedEof => "json-eof",
+            JsonError::UnexpectedByte => "json-byte",
+            JsonError::DepthOverflow => "json-depth",
+            JsonError::BadLiteral => "json-literal",
+            JsonError::BadNumber => "json-number",
+            JsonError::NonFiniteNumber => "json-nonfinite",
+            JsonError::BadString => "json-string",
+            JsonError::BadEscape => "json-escape",
+            JsonError::BadUnicodeEscape => "json-unicode",
+            JsonError::InvalidUtf8 => "json-utf8",
+            JsonError::TrailingData => "json-trailing",
+        }
+    }
+}
+
+/// One parse event. String payloads borrow either the input slice or the
+/// caller's scratch buffer — never an owned `String`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    /// `{`
+    ObjBegin,
+    /// `}`
+    ObjEnd,
+    /// `[`
+    ArrBegin,
+    /// `]`
+    ArrEnd,
+    /// An object key (the following event is its value).
+    Key(&'a str),
+    /// A string value.
+    Str(&'a str),
+    /// A number value (finite f64).
+    Num(f64),
+    /// A boolean value.
+    Bool(bool),
+    /// `null`.
+    Null,
+    /// The top-level value is complete and no bytes remain.
+    End,
+}
+
+/// Where a just-parsed string token lives (resolved to `&str` at return).
+#[derive(Clone, Copy)]
+enum StrTok {
+    /// Escape-free: byte range of the input slice.
+    Borrowed(usize, usize),
+    /// Contained escapes: unescaped bytes are in the scratch buffer.
+    Scratch,
+}
+
+/// Parser state between events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Expecting a value (top level, after `:`, or after `,` in an array).
+    Value,
+    /// Expecting a value or `]` (immediately after `[`).
+    ValueOrEnd,
+    /// Expecting a key (after `,` in an object).
+    Key,
+    /// Expecting a key or `}` (immediately after `{`).
+    KeyOrEnd,
+    /// Expecting `,` or the matching close bracket.
+    CommaOrEnd,
+    /// Top-level value complete; only whitespace may remain.
+    Done,
+}
+
+/// The pull parser: borrowed input, borrowed scratch, bitstack nesting.
+pub struct PullParser<'a, 's> {
+    input: &'a [u8],
+    scratch: &'s mut Vec<u8>,
+    pos: usize,
+    /// One bit per open container; LSB is the innermost (1 = array).
+    stack: u64,
+    depth: usize,
+    state: State,
+}
+
+impl<'a, 's> PullParser<'a, 's> {
+    /// Start parsing `input`. `scratch` is only written when a string
+    /// contains escapes; its capacity is retained across requests.
+    pub fn new(input: &'a [u8], scratch: &'s mut Vec<u8>) -> PullParser<'a, 's> {
+        scratch.clear();
+        PullParser { input, scratch, pos: 0, stack: 0, depth: 0, state: State::Value }
+    }
+
+    /// Byte offset of the parse cursor (for diagnostics/tests).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Pull the next event. After [`Event::End`] this keeps returning
+    /// `End`; every error is sticky in the sense that the caller is
+    /// expected to stop (state is not rewound).
+    pub fn next(&mut self) -> Result<Event<'_>, JsonError> {
+        loop {
+            self.skip_ws();
+            match self.state {
+                State::Done => {
+                    if self.pos < self.input.len() {
+                        return Err(JsonError::TrailingData);
+                    }
+                    return Ok(Event::End);
+                }
+                State::Value => return self.begin_value(),
+                State::ValueOrEnd => {
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Event::ArrEnd);
+                    }
+                    return self.begin_value();
+                }
+                State::Key | State::KeyOrEnd => match self.peek() {
+                    None => return Err(JsonError::UnexpectedEof),
+                    Some(b'}') if self.state == State::KeyOrEnd => {
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Event::ObjEnd);
+                    }
+                    Some(b'"') => {
+                        let tok = self.parse_string()?;
+                        self.skip_ws();
+                        match self.peek() {
+                            Some(b':') => self.pos += 1,
+                            Some(_) => return Err(JsonError::UnexpectedByte),
+                            None => return Err(JsonError::UnexpectedEof),
+                        }
+                        self.state = State::Value;
+                        return Ok(Event::Key(self.resolve(tok)?));
+                    }
+                    Some(_) => return Err(JsonError::UnexpectedByte),
+                },
+                State::CommaOrEnd => match self.peek() {
+                    None => return Err(JsonError::UnexpectedEof),
+                    Some(b',') => {
+                        self.pos += 1;
+                        // `,` never permits a close bracket next: trailing
+                        // commas are rejected via Key/Value (not *OrEnd).
+                        self.state =
+                            if self.stack & 1 == 1 { State::Value } else { State::Key };
+                    }
+                    Some(b']') => {
+                        if self.stack & 1 != 1 {
+                            return Err(JsonError::UnexpectedByte);
+                        }
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Event::ArrEnd);
+                    }
+                    Some(b'}') => {
+                        if self.stack & 1 != 0 {
+                            return Err(JsonError::UnexpectedByte);
+                        }
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Event::ObjEnd);
+                    }
+                    Some(_) => return Err(JsonError::UnexpectedByte),
+                },
+            }
+        }
+    }
+
+    // ---- values ----------------------------------------------------------
+
+    fn begin_value(&mut self) -> Result<Event<'_>, JsonError> {
+        match self.peek() {
+            None => Err(JsonError::UnexpectedEof),
+            Some(b'{') => {
+                self.pos += 1;
+                self.push_container(false)?;
+                self.state = State::KeyOrEnd;
+                Ok(Event::ObjBegin)
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.push_container(true)?;
+                self.state = State::ValueOrEnd;
+                Ok(Event::ArrBegin)
+            }
+            Some(b'"') => {
+                let tok = self.parse_string()?;
+                self.after_value();
+                Ok(Event::Str(self.resolve(tok)?))
+            }
+            Some(b't') => {
+                self.expect_literal(b"true")?;
+                self.after_value();
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.expect_literal(b"false")?;
+                self.after_value();
+                Ok(Event::Bool(false))
+            }
+            Some(b'n') => {
+                self.expect_literal(b"null")?;
+                self.after_value();
+                Ok(Event::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let v = self.parse_number()?;
+                self.after_value();
+                Ok(Event::Num(v))
+            }
+            Some(_) => Err(JsonError::UnexpectedByte),
+        }
+    }
+
+    fn after_value(&mut self) {
+        self.state = if self.depth == 0 { State::Done } else { State::CommaOrEnd };
+    }
+
+    fn push_container(&mut self, is_array: bool) -> Result<(), JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(JsonError::DepthOverflow);
+        }
+        self.stack = (self.stack << 1) | (is_array as u64);
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn pop_container(&mut self) {
+        self.stack >>= 1;
+        self.depth -= 1;
+        self.after_value();
+    }
+
+    // ---- scanning helpers ------------------------------------------------
+
+    fn peek(&self) -> Option<u8> {
+        self.input.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect_literal(&mut self, lit: &[u8]) -> Result<(), JsonError> {
+        if self.input[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(JsonError::BadLiteral)
+        }
+    }
+
+    // ---- numbers ---------------------------------------------------------
+
+    fn eat_digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    fn parse_number(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // strict integer part: "0" or [1-9][0-9]*
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(JsonError::BadNumber);
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                self.eat_digits();
+            }
+            _ => return Err(JsonError::BadNumber),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if self.eat_digits() == 0 {
+                return Err(JsonError::BadNumber);
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if self.eat_digits() == 0 {
+                return Err(JsonError::BadNumber);
+            }
+        }
+        // The token is pure ASCII by construction; core's float parsing
+        // does not allocate.
+        let text = std::str::from_utf8(&self.input[start..self.pos])
+            .map_err(|_| JsonError::BadNumber)?;
+        let v: f64 = text.parse().map_err(|_| JsonError::BadNumber)?;
+        if !v.is_finite() {
+            return Err(JsonError::NonFiniteNumber);
+        }
+        Ok(v)
+    }
+
+    // ---- strings ---------------------------------------------------------
+
+    fn resolve(&self, tok: StrTok) -> Result<&str, JsonError> {
+        let bytes = match tok {
+            StrTok::Borrowed(s, e) => &self.input[s..e],
+            StrTok::Scratch => &self.scratch[..],
+        };
+        std::str::from_utf8(bytes).map_err(|_| JsonError::InvalidUtf8)
+    }
+
+    /// Parse a string starting at the opening quote. Fast path borrows the
+    /// input; on the first escape the prefix is copied into scratch and
+    /// unescaping continues there.
+    fn parse_string(&mut self) -> Result<StrTok, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let start = self.pos;
+        loop {
+            match self.input.get(self.pos) {
+                None => return Err(JsonError::UnexpectedEof),
+                Some(b'"') => {
+                    let end = self.pos;
+                    self.pos += 1;
+                    return Ok(StrTok::Borrowed(start, end));
+                }
+                Some(b'\\') => break,
+                Some(&c) if c < 0x20 => return Err(JsonError::BadString),
+                Some(_) => self.pos += 1,
+            }
+        }
+        // copy-on-write: escape found at self.pos
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.input[start..self.pos]);
+        loop {
+            match self.input.get(self.pos) {
+                None => return Err(JsonError::UnexpectedEof),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(StrTok::Scratch);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    self.unescape_one()?;
+                }
+                Some(&c) if c < 0x20 => return Err(JsonError::BadString),
+                Some(&c) => {
+                    self.scratch.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn unescape_one(&mut self) -> Result<(), JsonError> {
+        let c = *self.input.get(self.pos).ok_or(JsonError::UnexpectedEof)?;
+        self.pos += 1;
+        let out = match c {
+            b'"' => b'"',
+            b'\\' => b'\\',
+            b'/' => b'/',
+            b'n' => b'\n',
+            b't' => b'\t',
+            b'r' => b'\r',
+            b'b' => 0x08,
+            b'f' => 0x0C,
+            b'u' => {
+                let hi = self.hex4()?;
+                let ch = if (0xD800..0xDC00).contains(&hi) {
+                    // high surrogate: a low surrogate escape must follow
+                    if self.input.get(self.pos) != Some(&b'\\')
+                        || self.input.get(self.pos + 1) != Some(&b'u')
+                    {
+                        return Err(JsonError::BadUnicodeEscape);
+                    }
+                    self.pos += 2;
+                    let lo = self.hex4()?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(JsonError::BadUnicodeEscape);
+                    }
+                    let v = 0x10000
+                        + (((hi as u32 - 0xD800) << 10) | (lo as u32 - 0xDC00));
+                    char::from_u32(v).ok_or(JsonError::BadUnicodeEscape)?
+                } else if (0xDC00..0xE000).contains(&hi) {
+                    // lone low surrogate
+                    return Err(JsonError::BadUnicodeEscape);
+                } else {
+                    char::from_u32(hi as u32).ok_or(JsonError::BadUnicodeEscape)?
+                };
+                let mut buf = [0u8; 4];
+                self.scratch.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                return Ok(());
+            }
+            _ => return Err(JsonError::BadEscape),
+        };
+        self.scratch.push(out);
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> Result<u16, JsonError> {
+        let mut v: u16 = 0;
+        for _ in 0..4 {
+            let c = *self.input.get(self.pos).ok_or(JsonError::UnexpectedEof)?;
+            self.pos += 1;
+            let d = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return Err(JsonError::BadUnicodeEscape),
+            };
+            v = (v << 4) | d as u16;
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a document, collecting owned event descriptions (tests only).
+    fn drain(input: &[u8]) -> Result<Vec<String>, JsonError> {
+        let mut scratch = Vec::new();
+        let mut p = PullParser::new(input, &mut scratch);
+        let mut out = Vec::new();
+        loop {
+            match p.next()? {
+                Event::End => return Ok(out),
+                ev => out.push(format!("{ev:?}")),
+            }
+        }
+    }
+
+    #[test]
+    fn pulls_a_flat_request_shape() {
+        let evs = drain(br#"{"task":"sst2","text_a":[5,6],"text_b":null}"#).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                "ObjBegin",
+                "Key(\"task\")",
+                "Str(\"sst2\")",
+                "Key(\"text_a\")",
+                "ArrBegin",
+                "Num(5.0)",
+                "Num(6.0)",
+                "ArrEnd",
+                "Key(\"text_b\")",
+                "Null",
+                "ObjEnd",
+            ]
+        );
+    }
+
+    #[test]
+    fn scalars_and_whitespace() {
+        assert_eq!(drain(b" true ").unwrap(), vec!["Bool(true)"]);
+        assert_eq!(drain(b"false").unwrap(), vec!["Bool(false)"]);
+        assert_eq!(drain(b"null").unwrap(), vec!["Null"]);
+        assert_eq!(drain(b"-12.5e2").unwrap(), vec!["Num(-1250.0)"]);
+        assert_eq!(drain(b"\t[ ]\r\n").unwrap(), vec!["ArrBegin", "ArrEnd"]);
+        assert_eq!(drain(b"{ }").unwrap(), vec!["ObjBegin", "ObjEnd"]);
+    }
+
+    #[test]
+    fn escapes_unescape_into_scratch() {
+        let evs = drain(br#""a\n\"b\"\u0041\ud83d\ude00""#).unwrap();
+        assert_eq!(evs, vec!["Str(\"a\\n\\\"b\\\"A\u{1F600}\")"]);
+    }
+
+    #[test]
+    fn end_is_sticky() {
+        let mut scratch = Vec::new();
+        let mut p = PullParser::new(b"1", &mut scratch);
+        assert_eq!(p.next().unwrap(), Event::Num(1.0));
+        assert_eq!(p.next().unwrap(), Event::End);
+        assert_eq!(p.next().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn typed_errors_for_malformed_documents() {
+        let cases: &[(&[u8], JsonError)] = &[
+            (b"", JsonError::UnexpectedEof),
+            (b"{", JsonError::UnexpectedEof),
+            (b"[1,", JsonError::UnexpectedEof),
+            (b"\"abc", JsonError::UnexpectedEof),
+            (b"{\"a\"", JsonError::UnexpectedEof),
+            (b"x", JsonError::UnexpectedByte),
+            (b"[1 2]", JsonError::UnexpectedByte),
+            (b"{\"a\":1]", JsonError::UnexpectedByte),
+            (b"[1,2}", JsonError::UnexpectedByte),
+            (b"[1,]", JsonError::UnexpectedByte),
+            (b"{\"a\":1,}", JsonError::UnexpectedByte),
+            (b"{1:2}", JsonError::UnexpectedByte),
+            (b"NaN", JsonError::UnexpectedByte),
+            (b"tru", JsonError::BadLiteral),
+            (b"nul", JsonError::BadLiteral),
+            (b"falsy", JsonError::BadLiteral),
+            (b"01", JsonError::BadNumber),
+            (b"1.", JsonError::BadNumber),
+            (b"-", JsonError::BadNumber),
+            (b"1e", JsonError::BadNumber),
+            (b"1e999", JsonError::NonFiniteNumber),
+            (b"\"a\x01b\"", JsonError::BadString),
+            (b"\"a\\x\"", JsonError::BadEscape),
+            (b"\"\\u12g4\"", JsonError::BadUnicodeEscape),
+            (b"\"\\ud800x\"", JsonError::BadUnicodeEscape),
+            (b"\"\\udc00\"", JsonError::BadUnicodeEscape),
+            (b"\"\xff\"", JsonError::InvalidUtf8),
+            (b"1 2", JsonError::TrailingData),
+            (b"{}{}", JsonError::TrailingData),
+        ];
+        for (input, want) in cases {
+            let got = drain(input);
+            assert_eq!(
+                got.as_ref().err(),
+                Some(want),
+                "input {:?} -> {:?}",
+                String::from_utf8_lossy(input),
+                got
+            );
+        }
+    }
+
+    #[test]
+    fn bitstack_depth_is_bounded_not_recursive() {
+        // depth == MAX_DEPTH parses; one deeper overflows with a typed error
+        let mut ok = Vec::new();
+        ok.extend(std::iter::repeat(b'[').take(MAX_DEPTH));
+        ok.extend(std::iter::repeat(b']').take(MAX_DEPTH));
+        let evs = drain(&ok).unwrap();
+        assert_eq!(evs.len(), 2 * MAX_DEPTH);
+
+        let mut deep = Vec::new();
+        deep.extend(std::iter::repeat(b'[').take(MAX_DEPTH + 1));
+        assert_eq!(drain(&deep).err(), Some(JsonError::DepthOverflow));
+
+        // mixed object/array nesting keeps the bits straight
+        let evs = drain(b"{\"a\":[{\"b\":[[]]}]}").unwrap();
+        assert_eq!(evs.last().unwrap(), "ObjEnd");
+    }
+
+    #[test]
+    fn borrowed_fast_path_skips_scratch() {
+        let mut scratch = Vec::new();
+        let input = br#"{"key":"plain value"}"#;
+        let mut p = PullParser::new(input, &mut scratch);
+        loop {
+            if p.next().unwrap() == Event::End {
+                break;
+            }
+        }
+        assert_eq!(scratch.capacity(), 0, "escape-free parse must not touch scratch");
+    }
+}

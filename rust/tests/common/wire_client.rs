@@ -1,0 +1,122 @@
+//! Shared test-side HTTP client, included into integration-test crates
+//! via `#[path = "common/wire_client.rs"] mod wire_client;`.
+//!
+//! Deliberately simple and allocating — it sits on the *client* side of
+//! the socket, so test-harness allocations never pollute the server's
+//! zero-alloc accounting (the alloc-tracking client in
+//! `workspace_alloc.rs` is its own, stricter implementation).
+#![allow(dead_code)] // each including crate uses a subset
+
+use std::io::{Read as _, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+
+/// One parsed HTTP response.
+pub struct Response {
+    pub status: u16,
+    pub head: String,
+    pub body: String,
+}
+
+/// Raw `POST /infer` bytes for a JSON body (exact Content-Length).
+pub fn post_infer(body: &str) -> Vec<u8> {
+    format!(
+        "POST /infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Raw `/infer` request for a task + token ids (text_b optional).
+pub fn infer_req(task: &str, seq_a: &[i32], seq_b: Option<&[i32]>) -> Vec<u8> {
+    let mut body = format!("{{\"task\":\"{task}\",\"text_a\":{}", fmt_ids(seq_a));
+    if let Some(b) = seq_b {
+        body.push_str(&format!(",\"text_b\":{}", fmt_ids(b)));
+    }
+    body.push('}');
+    post_infer(&body)
+}
+
+fn fmt_ids(ids: &[i32]) -> String {
+    let inner = ids.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+    format!("[{inner}]")
+}
+
+/// Raw bodyless GET request bytes.
+pub fn get(path: &str) -> Vec<u8> {
+    format!("GET {path} HTTP/1.1\r\n\r\n").into_bytes()
+}
+
+/// Raw bodyless POST request bytes.
+pub fn post(path: &str) -> Vec<u8> {
+    format!("POST {path} HTTP/1.1\r\nContent-Length: 0\r\n\r\n").into_bytes()
+}
+
+/// Open a fresh connection, send `req` (optionally half-closing the
+/// write side, the convention for `truncated-*` fixtures), and read
+/// exactly `nresp` responses.
+pub fn send_and_read(
+    addr: SocketAddr,
+    req: &[u8],
+    nresp: usize,
+    half_close: bool,
+) -> Vec<Response> {
+    let mut s = TcpStream::connect(addr).expect("connect to wire server");
+    s.write_all(req).unwrap();
+    if half_close {
+        s.shutdown(Shutdown::Write).unwrap();
+    }
+    read_responses(&mut s, nresp)
+}
+
+/// Read exactly `n` Content-Length-framed responses off `stream`.
+pub fn read_responses(stream: &mut TcpStream, n: usize) -> Vec<Response> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 8192];
+    while out.len() < n {
+        loop {
+            let Some(head_end) = find(&buf, b"\r\n\r\n") else { break };
+            let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+            let cl = content_length(&head);
+            let total = head_end + 4 + cl;
+            if buf.len() < total {
+                break;
+            }
+            let body = String::from_utf8_lossy(&buf[head_end + 4..total]).to_string();
+            let status: u16 = head
+                .split_whitespace()
+                .nth(1)
+                .expect("status code in response line")
+                .parse()
+                .unwrap();
+            out.push(Response { status, head, body });
+            buf.drain(..total);
+            if out.len() == n {
+                return out;
+            }
+        }
+        let nr = stream.read(&mut chunk).unwrap();
+        assert!(
+            nr > 0,
+            "eof after {} of {n} responses; partial: {:?}",
+            out.len(),
+            String::from_utf8_lossy(&buf)
+        );
+        buf.extend_from_slice(&chunk[..nr]);
+    }
+    out
+}
+
+fn content_length(head: &str) -> usize {
+    head.lines()
+        .find_map(|l| {
+            let (name, value) = l.split_once(':')?;
+            name.eq_ignore_ascii_case("content-length")
+                .then(|| value.trim().parse().unwrap())
+        })
+        .unwrap_or(0)
+}
+
+fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}

@@ -307,3 +307,99 @@ fn prop_json_roundtrip_random_values() {
         assert_eq!(json::parse(&compact).unwrap(), v, "case {case} compact");
     }
 }
+
+/// Build a random-but-valid `/infer` body: a task name exercising the
+/// string escape space (quotes, backslashes, non-ASCII), token ids from
+/// the full `i32` range, `text_b` in all three shapes (absent, `null`
+/// is covered by the decoder's unit tests, array). Rendered through
+/// `util::json` — an independent serializer, escaping included.
+fn rand_wire_request(rng: &mut Rng) -> (String, Vec<i32>, Option<Vec<i32>>, String) {
+    let task: String = (0..rng.range(1, 9))
+        .map(|_| match rng.below(6) {
+            0 => '"',
+            1 => '\\',
+            2 => '/',
+            _ => char::from_u32(rng.range(32, 0x500) as u32).unwrap_or('x'),
+        })
+        .collect();
+    let ids = |rng: &mut Rng| -> Vec<i32> {
+        (0..rng.range(0, 12))
+            .map(|_| match rng.below(4) {
+                0 => rng.next_u64() as i32, // full range, signs included
+                1 => i32::MAX - rng.below(3) as i32,
+                2 => i32::MIN + rng.below(3) as i32,
+                _ => rng.below(30_000) as i32,
+            })
+            .collect()
+    };
+    let seq_a = ids(rng);
+    let seq_b = if rng.chance(0.5) { Some(ids(rng)) } else { None };
+    let mut body = Json::obj();
+    body.set("task", Json::Str(task.clone()));
+    body.set(
+        "text_a",
+        Json::Arr(seq_a.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    if let Some(b) = &seq_b {
+        body.set(
+            "text_b",
+            Json::Arr(b.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+    }
+    let text = body.render();
+    (task, seq_a, seq_b, text)
+}
+
+#[test]
+fn prop_wire_decode_roundtrips_exactly() {
+    use hadapt::runtime::wire::decode_request;
+    use hadapt::runtime::{RequestScratch, WireLimits};
+    let mut rng = Rng::new(0x1B0B5);
+    let limits = WireLimits::default();
+    let mut scratch = RequestScratch::default();
+    for case in 0..CASES {
+        let (task, seq_a, seq_b, text) = rand_wire_request(&mut rng);
+        decode_request(text.as_bytes(), &limits, &mut scratch)
+            .unwrap_or_else(|e| panic!("case {case}: {:?} on {text}", e.code()));
+        assert_eq!(scratch.task, task, "case {case}: {text}");
+        assert_eq!(scratch.seq_a, seq_a, "case {case}: {text}");
+        assert_eq!(scratch.text_b(), seq_b.as_deref(), "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_wire_mutations_terminate_ok_or_typed() {
+    use hadapt::runtime::wire::decode_request;
+    use hadapt::runtime::{RequestScratch, WireLimits};
+    use hadapt::util::{Event, PullParser};
+    let mut rng = Rng::new(0xF422);
+    let limits = WireLimits::default();
+    let mut scratch = RequestScratch::default();
+    let mut sbuf = Vec::new();
+    for case in 0..CASES * 4 {
+        let (_, _, _, text) = rand_wire_request(&mut rng);
+        let mut body = text.into_bytes();
+        for _ in 0..rng.range(1, 5) {
+            let at = rng.below(body.len());
+            body[at] = (rng.next_u64() & 0xFF) as u8;
+        }
+        // the extractor returns — servable or typed error, never a panic
+        let _ = decode_request(&body, &limits, &mut scratch);
+        // and the raw parser drains in bounded steps (non-recursive, no
+        // livelock): every next() either consumes input or terminates
+        let mut p = PullParser::new(&body, &mut sbuf);
+        let mut steps = 0usize;
+        loop {
+            steps += 1;
+            assert!(
+                steps <= body.len() * 4 + 16,
+                "case {case}: parser failed to terminate on {:?}",
+                String::from_utf8_lossy(&body)
+            );
+            match p.next() {
+                Err(_) | Ok(Event::End) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+}

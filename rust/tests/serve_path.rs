@@ -13,13 +13,21 @@
 //! 4. The steady-state serve loop inherits the training loop's
 //!    zero-allocation / zero-spawn contracts: arena misses and pool
 //!    spawns freeze after the first (warm-up) batch.
+//! 5. A request served over the HTTP front door returns **bitwise** the
+//!    same logits as the same request through the in-process session:
+//!    the wire layer (pull-JSON decode into resident buffers, shortest
+//!    round-trip float serialization) adds zero numeric drift.
+
+#[path = "common/wire_client.rs"]
+mod wire_client;
 
 use hadapt::data::{generate, make_batch, task_info};
 use hadapt::model::ParamStore;
 use hadapt::runtime::{
-    Engine, InferBatch, InferOut, IntTensor, Manifest, ServeRequest, ServeSession, TaskAdapter,
-    Tensor,
+    spawn_synthetic_server, synthetic_adapters, Engine, InferBatch, InferOut, IntTensor,
+    Manifest, ServeReply, ServeRequest, ServeSession, SpawnOpts, TaskAdapter, Tensor,
 };
+use hadapt::util::json;
 
 fn engine2() -> Engine {
     Engine::new_with_threads("/definitely/not/a/dir", 2).unwrap()
@@ -238,4 +246,102 @@ fn serve_steady_state_freezes_arena_and_pool_counters() {
     s.run_pending().unwrap();
     let (_, misses2) = engine.arena_stats();
     assert_eq!(misses2, misses1, "padded batches reuse the same fixed geometry");
+}
+
+fn assert_reply_bitwise(body: &str, want: &ServeReply, i: usize) {
+    let v = json::parse(body).unwrap_or_else(|e| panic!("case {i}: {e}\n{body}"));
+    assert_eq!(v.get("task").unwrap().as_str().unwrap(), want.task, "case {i}");
+    assert_eq!(v.get("label").unwrap().as_usize().unwrap(), want.label, "case {i}");
+    let logits: Vec<f32> = v
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(logits.len(), want.logits.len(), "case {i}");
+    for (j, (got, exp)) in logits.iter().zip(&want.logits).enumerate() {
+        assert_eq!(
+            got.to_bits(),
+            exp.to_bits(),
+            "case {i} logit {j}: {got} vs {exp} — the wire's shortest round-trip \
+             decimal must reproduce the f32 bits exactly"
+        );
+    }
+}
+
+#[test]
+fn wire_serve_matches_in_process_bitwise() {
+    let seed = 33;
+    let tasks = vec!["sst2".to_string(), "rte".to_string()];
+    // in-process reference: the same deterministic backbone + synthetic
+    // tenants SpawnOpts::tiny(seed) builds inside the server thread
+    let engine = engine2();
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let mut session = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    for a in synthetic_adapters(&info, &store, &tasks, seed).unwrap() {
+        session.register_task(a).unwrap();
+    }
+    let seq = session.geometry().1 as i32;
+
+    // boundary budgets through the wire path: 0 / 1 / seq-1 / seq /
+    // seq+k tokens, with absent, empty and truncating text_b
+    let cases: Vec<(&str, Vec<i32>, Option<Vec<i32>>)> = vec![
+        ("sst2", vec![], None),
+        ("sst2", vec![5], None),
+        ("rte", (0..seq - 1).map(|j| 2 + j % 37).collect(), None),
+        ("sst2", (0..seq).map(|j| 1 + j % 29).collect(), Some(vec![])),
+        (
+            "rte",
+            (0..seq + 9).map(|j| 3 + j % 31).collect(),
+            Some((0..7).map(|j| 4 + j).collect()),
+        ),
+        ("sst2", vec![8, 9, 10], Some((0..seq).map(|j| 2 + j % 23).collect())),
+    ];
+    let mut expected = Vec::new();
+    for (task, a, b) in &cases {
+        session
+            .submit(ServeRequest {
+                task: task.to_string(),
+                seq_a: a.clone(),
+                seq_b: b.clone(),
+            })
+            .unwrap();
+        expected.push(session.run_pending().unwrap().pop().unwrap());
+    }
+
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(seed)).unwrap();
+    // one request per round trip (each rides a padded single-row wave)
+    for (i, (task, a, b)) in cases.iter().enumerate() {
+        let req = wire_client::infer_req(task, a, b.as_deref());
+        let resp = wire_client::send_and_read(addr, &req, 1, false).pop().unwrap();
+        assert_eq!(resp.status, 200, "case {i}: {}", resp.body);
+        assert_reply_bitwise(&resp.body, &expected[i], i);
+    }
+
+    // pipelined: four requests in one write become one full wave, and
+    // replies come back in request order, still bit-identical
+    let mut burst = Vec::new();
+    for (task, a, b) in cases.iter().take(4) {
+        burst.extend_from_slice(&wire_client::infer_req(task, a, b.as_deref()));
+    }
+    use std::io::Write as _;
+    let mut c = std::net::TcpStream::connect(addr).unwrap();
+    c.write_all(&burst).unwrap();
+    let resps = wire_client::read_responses(&mut c, 4);
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.status, 200, "pipelined case {i}: {}", resp.body);
+        assert_reply_bitwise(&resp.body, &expected[i], i);
+    }
+    drop(c);
+
+    let mut sh = std::net::TcpStream::connect(addr).unwrap();
+    sh.write_all(&wire_client::post("/shutdown")).unwrap();
+    let r = wire_client::read_responses(&mut sh, 1).pop().unwrap();
+    assert_eq!(r.status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.replies, cases.len() as u64 + 4);
+    assert_eq!(stats.rejects_parse + stats.rejects_http + stats.rejects_submit, 0);
 }

@@ -26,15 +26,25 @@
 //! must hold the same zero-allocation steady state — the counter-proof
 //! behind `ServeSession`'s fixed-geometry micro-batches.
 //!
+//! Since PR 6 the loop has a third act, one level up the stack: a
+//! [`WireServer`] on its own thread serves pipelined `/infer` waves plus
+//! the entire adversarial wire-fixture corpus through a real socket while
+//! the allocator counts. The allocator is process-global, so the server
+//! thread's parse → admit → batch → respond path is counted alongside the
+//! (deliberately alloc-free) test client — any steady-state allocation on
+//! either side of the socket trips the zero.
+//!
 //! This file intentionally holds a single test: the counting allocator is
 //! process-global, and a sibling test running on another thread would
 //! pollute the count.
 
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::{Read as _, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use hadapt::runtime::kernels as k;
-use hadapt::runtime::{Pool, Workspace};
+use hadapt::runtime::{spawn_synthetic_server, Pool, SpawnOpts, Workspace};
 use hadapt::util::Rng;
 
 struct CountingAlloc;
@@ -268,6 +278,221 @@ fn steady_eval_loop(pool: &Pool, b: usize, l: usize, nh: usize, h: usize, label:
     assert!(ws.hits() > 0);
 }
 
+// ---------------------------------------------------------------------------
+// Wire ingress steady state (PR 6): the same counting allocator, but the
+// traffic now enters through a real socket against a `WireServer` running
+// on its own thread.
+// ---------------------------------------------------------------------------
+
+/// Alloc-free test-side HTTP client. Every buffer is sized during setup
+/// and reused; a connection is opened per round (connect is a syscall,
+/// not a heap allocation) and dropped once its frames are drained, which
+/// is also what hands the single-threaded server back to `accept`.
+struct WireProbe {
+    addr: SocketAddr,
+    buf: Vec<u8>,
+    stats_resp: Vec<u8>,
+}
+
+impl WireProbe {
+    fn new(addr: SocketAddr) -> Self {
+        Self { addr, buf: Vec::with_capacity(64 * 1024), stats_resp: Vec::with_capacity(4096) }
+    }
+
+    /// Open a fresh connection, send `req` (optionally half-closing the
+    /// write side, the convention for `truncated-*` fixtures), and read
+    /// exactly `nresp` Content-Length-framed responses into `self.buf`.
+    fn round(&mut self, req: &[u8], nresp: usize, half_close: bool) {
+        let mut s = TcpStream::connect(self.addr).expect("connect to wire server");
+        s.write_all(req).unwrap();
+        if half_close {
+            s.shutdown(Shutdown::Write).unwrap();
+        }
+        wire_read_frames(&mut s, &mut self.buf, nresp);
+    }
+
+    /// A `/stats` round that keeps the raw response bytes so they can be
+    /// parsed *after* tracking ends (parsing allocates; copying into the
+    /// pre-sized keep buffer does not).
+    fn stats_round(&mut self, req: &[u8]) {
+        self.round(req, 1, false);
+        self.stats_resp.clear();
+        self.stats_resp.extend_from_slice(&self.buf);
+    }
+}
+
+/// Read exactly `n` framed responses into `buf` without allocating: the
+/// buffer only ever regrows past its warmed capacity if a response
+/// outgrows the 64 KiB high-water mark, which none can.
+fn wire_read_frames(s: &mut TcpStream, buf: &mut Vec<u8>, n: usize) {
+    buf.clear();
+    let mut done = 0usize;
+    let mut start = 0usize;
+    loop {
+        while done < n {
+            let Some(rel) = wire_find(&buf[start..], b"\r\n\r\n") else { break };
+            let head_end = start + rel + 4;
+            assert!(buf[start..].starts_with(b"HTTP/1.1 "), "malformed response frame");
+            let total = head_end + wire_content_length(&buf[start..head_end]);
+            if buf.len() < total {
+                break;
+            }
+            start = total;
+            done += 1;
+        }
+        if done == n {
+            return;
+        }
+        let old = buf.len();
+        buf.resize(old + 4096, 0);
+        let r = match s.read(&mut buf[old..]) {
+            Ok(r) => r,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                buf.truncate(old);
+                continue;
+            }
+            Err(e) => panic!("wire read: {e}"),
+        };
+        buf.truncate(old + r);
+        assert!(r > 0, "server closed after {done} of {n} responses");
+    }
+}
+
+fn wire_content_length(head: &[u8]) -> usize {
+    let mut at = 0;
+    while let Some(rel) = wire_find(&head[at..], b"\r\n") {
+        let line = &head[at..at + rel];
+        at += rel + 2;
+        if line.len() >= 15 && line[..15].eq_ignore_ascii_case(b"content-length:") {
+            let mut v = 0usize;
+            for &b in &line[15..] {
+                if b != b' ' {
+                    v = v * 10 + (b - b'0') as usize;
+                }
+            }
+            return v;
+        }
+    }
+    0
+}
+
+fn wire_find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn wire_post_infer(body: &str) -> Vec<u8> {
+    format!("POST /infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len()).into_bytes()
+}
+
+struct WireCounters {
+    replies: u64,
+    batches: u64,
+    rejects: u64,
+    arena_misses: u64,
+    pool_threads_spawned: u64,
+    repacks: u64,
+}
+
+/// Parse the server + engine counters out of a kept `/stats` response.
+/// Allocates freely — only ever called outside the tracked region.
+fn parse_wire_stats(resp: &[u8]) -> WireCounters {
+    let head_end = wire_find(resp, b"\r\n\r\n").expect("stats response head") + 4;
+    let body = std::str::from_utf8(&resp[head_end..]).unwrap();
+    let v = hadapt::util::json::parse(body).unwrap();
+    let n = |k: &str| v.get(k).unwrap().as_usize().unwrap() as u64;
+    WireCounters {
+        replies: n("replies"),
+        batches: n("batches"),
+        rejects: n("rejects_http") + n("rejects_parse") + n("rejects_submit"),
+        arena_misses: n("arena_misses"),
+        pool_threads_spawned: n("pool_threads_spawned"),
+        repacks: n("repacks"),
+    }
+}
+
+/// Serve traffic through the socket front door for 4 rounds. Round 0
+/// warms every path — connection buffers, parser scratch, resident batch
+/// buffers, response scratch, the engine's arena and its worker thread.
+/// Rounds 1..3 run under the counting allocator: a full pipelined wave,
+/// the entire adversarial fixture corpus over fresh connections, and a
+/// final tracked `/stats` round must allocate nothing process-wide, and
+/// the counters parsed from `/stats` must show zero new arena misses,
+/// zero thread spawns, and zero frozen-weight repacks.
+fn steady_wire_loop() {
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(41)).expect("spawn wire server");
+
+    // ---- setup (untracked): pre-serialize every request byte string ----
+    let long_ids = (0..40).map(|i| (i * 7 % 512).to_string()).collect::<Vec<_>>().join(",");
+    let wave: Vec<u8> = [
+        wire_post_infer("{\"task\":\"sst2\",\"text_a\":[1,2,3]}"),
+        wire_post_infer("{\"task\":\"rte\",\"text_a\":[4,5],\"text_b\":[6,7]}"),
+        // escaped task name: the parser's unescape scratch runs tracked
+        wire_post_infer("{\"task\":\"sst\\u0032\",\"text_a\":[8,9]}"),
+        // over-length text_a: the truncation path runs tracked
+        wire_post_infer(&format!("{{\"task\":\"sst2\",\"text_a\":[{long_ids}]}}")),
+    ]
+    .concat();
+    let stats_req = b"GET /stats HTTP/1.1\r\n\r\n".to_vec();
+    let shutdown_req = b"POST /shutdown HTTP/1.1\r\nContent-Length: 0\r\n\r\n".to_vec();
+
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/wire");
+    let fixtures: Vec<(bool, bool, Vec<u8>)> = std::fs::read_dir(dir)
+        .expect("fixture corpus missing — run tools/gen_wire_fixtures.py")
+        .map(|e| {
+            let p = e.unwrap().path();
+            let name = p.file_stem().unwrap().to_str().unwrap().to_string();
+            let code = name.split("__").next().unwrap();
+            (code == "ok", code.starts_with("truncated"), std::fs::read(&p).unwrap())
+        })
+        .collect();
+    let ok_n = fixtures.iter().filter(|f| f.0).count() as u64;
+    let err_n = fixtures.len() as u64 - ok_n;
+    assert!(ok_n >= 3 && err_n >= 25, "corpus shape: {ok_n} ok / {err_n} err");
+
+    // ---- round 0 (untracked warm-up, same traffic shape as tracked) ----
+    let mut probe = WireProbe::new(addr);
+    probe.round(&wave, 4, false);
+    for (_, half_close, bytes) in &fixtures {
+        probe.round(bytes, 1, *half_close);
+    }
+    probe.stats_round(&stats_req);
+    let s0 = parse_wire_stats(&probe.stats_resp);
+    assert_eq!(s0.pool_threads_spawned, 1, "tiny server: one worker, spawned at warm-up");
+    assert_eq!(s0.replies, 4 + ok_n);
+
+    // ---- rounds 1..3 under the counting allocator ----
+    ALLOCS.store(0, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        probe.round(&wave, 4, false);
+        for (_, half_close, bytes) in &fixtures {
+            probe.round(bytes, 1, *half_close);
+        }
+    }
+    // the /stats render path itself must also be alloc-free
+    probe.stats_round(&stats_req);
+    TRACKING.store(false, Ordering::SeqCst);
+
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "wire rounds 2..4 must allocate nothing on either side of the socket"
+    );
+    let s1 = parse_wire_stats(&probe.stats_resp);
+    assert_eq!(s1.arena_misses, s0.arena_misses, "steady wire waves never miss the arena");
+    assert_eq!(s1.pool_threads_spawned, s0.pool_threads_spawned, "and never spawn a thread");
+    assert_eq!(s1.repacks, s0.repacks, "and never repack frozen weights");
+    assert_eq!(s1.replies - s0.replies, 3 * (4 + ok_n));
+    assert_eq!(s1.batches - s0.batches, 3 * (1 + ok_n));
+    assert_eq!(s1.rejects - s0.rejects, 3 * err_n);
+
+    probe.round(&shutdown_req, 1, false);
+    let st = handle.join().unwrap().expect("server exits cleanly on /shutdown");
+    assert_eq!(st.replies, 4 * (4 + ok_n));
+    assert_eq!(st.batches, 4 * (1 + ok_n));
+    assert_eq!(st.rejects_http + st.rejects_parse + st.rejects_submit, 4 * err_n);
+}
+
 #[test]
 fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
     // Serial pool: the original PR 3 zero-allocation contract. A serial
@@ -300,4 +525,10 @@ fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
         1,
         "eval dispatch reuses the persistent worker"
     );
+
+    // Finally, the whole serve stack through a real socket: waves of
+    // pipelined /infer requests plus the adversarial fixture corpus hold
+    // the same zero-alloc / zero-spawn / zero-repack steady state. Runs
+    // last so the kernel-level loops above see an unpolluted allocator.
+    steady_wire_loop();
 }

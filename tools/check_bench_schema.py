@@ -17,9 +17,14 @@ Since PR 5 it also carries a top-level "serve" section: the multi-tenant
 serve path's throughput/latency rows at micro-batch sizes 1/8/32 plus the
 adapter-swap economics and its own steady-state counters.
 
+Since PR 6 it also carries a top-level "ingress" section: the wire front
+door — pull-parser nanoseconds per request body, socket-to-logits
+throughput/latency rows at wave sizes 1/8/32 through a real WireServer,
+and the serve zero-contracts re-asserted over the wire via /stats.
+
 Zero-contracts enforced (all counters, not measurements): steady-state
-arena misses, steady-state pool spawns, and the serve path's steady-state
-arena misses / pool spawns / repacks must all be 0.
+arena misses, steady-state pool spawns, and the serve and ingress paths'
+steady-state arena misses / pool spawns / repacks must all be 0.
 
 Every section and key is documented in docs/BENCH_SCHEMA.md.
 
@@ -79,6 +84,19 @@ SERVE_KEYS = {
     "steady_repacks",
 }
 SERVE_ROW_KEYS = {
+    "batch",
+    "p50_ms",
+    "p99_ms",
+    "req_per_s",
+}
+INGRESS_KEYS = {
+    "tasks",
+    "parse_ns_per_request",
+    "steady_arena_misses",
+    "steady_pool_spawns",
+    "steady_repacks",
+}
+INGRESS_ROW_KEYS = {
     "batch",
     "p50_ms",
     "p99_ms",
@@ -166,6 +184,31 @@ def check_serve(serve):
             fail(f"serve.{key} must be 0 (serve-path steady-state contract)")
 
 
+def check_ingress(ingress):
+    if not isinstance(ingress, dict):
+        fail("'ingress' must be an object")
+    if not isinstance(ingress.get("provenance"), str) or not ingress["provenance"]:
+        fail("ingress.provenance must be a non-empty string label")
+    if not isinstance(ingress.get("model"), str) or not ingress["model"]:
+        fail("ingress.model must name the benchmarked model")
+    missing = INGRESS_KEYS - set(ingress)
+    if missing:
+        fail(f"ingress missing keys: {sorted(missing)}")
+    for key in INGRESS_KEYS:
+        if not isinstance(ingress[key], (int, float)):
+            fail(f"ingress.{key} must be a number")
+        if ingress[key] < 0:
+            fail(f"ingress.{key} must be non-negative")
+    rows = ingress.get("rows")
+    if not isinstance(rows, dict) or not rows:
+        fail("ingress.rows must be a non-empty object of per-wave-size rows")
+    check_rows("ingress.rows", rows, INGRESS_ROW_KEYS)
+    # the wire front door inherits the serve path's steady-state contracts
+    for key in ("steady_arena_misses", "steady_pool_spawns", "steady_repacks"):
+        if ingress[key] != 0:
+            fail(f"ingress.{key} must be 0 (wire-ingress steady-state contract)")
+
+
 def main(path):
     with open(path) as f:
         data = json.load(f)
@@ -179,6 +222,7 @@ def main(path):
         "matmul",
         "pool",
         "serve",
+        "ingress",
     ):
         if key not in data:
             fail(f"missing top-level key '{key}'")
@@ -187,6 +231,7 @@ def main(path):
     check_rows("matmul", data["matmul"], MM_KEYS)
     check_pool(data["pool"])
     check_serve(data["serve"])
+    check_ingress(data["ingress"])
     # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
         if row["arena_steady_misses"] != 0:
@@ -196,6 +241,7 @@ def main(path):
     n_rows = (
         sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
         + len(data["serve"]["rows"])
+        + len(data["ingress"]["rows"])
         + 1
     )
     print(

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Generate the adversarial wire fixture corpus (rust/tests/fixtures/wire).
+
+Each fixture is a full raw HTTP/1.1 request byte string named
+``<expected_code>__<description>.raw`` — the part before the first ``__``
+is the exact error code (``WireError::code()`` / ``JsonError::code()``)
+the server must answer with, or ``ok`` for requests that must serve.
+``rust/tests/wire_parser.rs`` asserts the code twice: once against a
+unit-level classifier mirroring the server's routing, once end-to-end
+over a real socket.
+
+Conventions the tests rely on:
+
+* ``Content-Length`` is byte-exact unless the fixture name says
+  otherwise (the two ``bad-content-length`` fixtures and the declared
+  over-length ones).
+* fixtures whose code starts with ``truncated`` are *incomplete by
+  design*: the client sends the bytes, half-closes the write side, and
+  the server must answer the truncation error instead of hanging.
+* happy fixtures only use token ids < 64 so they stay inside every
+  manifest model's vocabulary, and only the tasks the test harness
+  registers (sst2, rte).
+
+Deterministic: running it twice produces identical bytes. Stdlib only.
+"""
+
+import json
+import os
+
+
+def jbody(obj):
+    return json.dumps(obj, separators=(",", ":")).encode()
+
+
+def req(body, method=b"POST", target=b"/infer", version=b"HTTP/1.1", headers=None, cl=None):
+    """Build a raw request. cl: None = exact, False = omit, else literal."""
+    head = [method + b" " + target + b" " + version]
+    if cl is None:
+        head.append(b"Content-Length: " + str(len(body)).encode())
+    elif cl is not False:
+        head.append(b"Content-Length: " + str(cl).encode())
+    for h in headers or []:
+        head.append(h)
+    return b"\r\n".join(head) + b"\r\n\r\n" + body
+
+
+FIXTURES = {
+    # -- happy path ---------------------------------------------------------
+    "ok__minimal": req(jbody({"task": "sst2", "text_a": [5, 6, 7]})),
+    # 2 is '2': the unescape scratch path must still admit to "sst2"
+    "ok__escaped_task_pair": req(
+        b'{"task":"sst\\u0032","text_a":[4,5],"text_b":[6]}'
+    ),
+    "ok__null_text_b": req(jbody({"task": "rte", "text_a": [9], "text_b": None})),
+    # -- framing ------------------------------------------------------------
+    "bad-request-line__garbage": b"garbage\r\n\r\n",
+    "bad-version__http09": req(
+        jbody({"task": "sst2", "text_a": [1]}), version=b"HTTP/0.9"
+    ),
+    "bad-header__missing_colon": req(b"", headers=[b"X-Weird"]),
+    "bad-content-length__negative": req(b"", cl=b"-5".decode()),
+    "bad-content-length__alpha": req(b"", cl="12abc"),
+    "unsupported-transfer-encoding__chunked": req(
+        b"", headers=[b"Transfer-Encoding: chunked"], cl=False
+    ),
+    "head-too-large__5k_header": req(b"", headers=[b"X-Pad: " + b"a" * 5000]),
+    "body-too-large__giant_content_length": req(b"", cl=10_000_000),
+    "truncated-head__half_closed_mid_head": b"POST /infer HTTP/1.1\r\nContent-",
+    "truncated-body__half_closed_short_body": req(b'{"task":"s', cl=500),
+    # -- routing ------------------------------------------------------------
+    "unknown-route__post_predict": req(
+        jbody({"task": "sst2", "text_a": [1]}), target=b"/predict"
+    ),
+    "method-not-allowed__get_infer": req(b"", method=b"GET"),
+    # -- JSON grammar -------------------------------------------------------
+    "json-eof__truncated_object": req(b'{"task":"sst2","text_a":[5'),
+    "json-byte__nan_literal": req(b'{"task":"sst2","text_a":[NaN]}'),
+    "json-nonfinite__exp_overflow": req(b'{"task":"sst2","text_a":[1e999]}'),
+    "json-escape__unknown_escape": req(b'{"task":"a\\q","text_a":[1]}'),
+    "json-utf8__raw_ff_in_task": req(b'{"task":"\xff","text_a":[1]}'),
+    "json-trailing__second_document": req(b'{"task":"sst2","text_a":[1]}{}'),
+    # -- request shape ------------------------------------------------------
+    "not-an-object__deep_array_nesting": req(b"[" * 100),
+    "bad-field-type__nested_text_a": req(jbody({"task": "sst2", "text_a": [[1]]})),
+    "bad-field-type__task_number": req(jbody({"task": 7, "text_a": [1]})),
+    "duplicate-field__task_twice": req(b'{"task":"a","task":"b","text_a":[1]}'),
+    "unknown-field__extra_key": req(
+        jbody({"task": "sst2", "text_a": [1], "mode": "fast"})
+    ),
+    "missing-task__only_text": req(jbody({"text_a": [1]})),
+    "missing-text__only_task": req(jbody({"task": "sst2"})),
+    "token-not-integer__fractional": req(jbody({"task": "sst2", "text_a": [1.5]})),
+    "token-out-of-range__huge_number": req(
+        jbody({"task": "sst2", "text_a": [3000000000]})
+    ),
+    "too-many-tokens__flood": req(jbody({"task": "sst2", "text_a": [1] * 5000})),
+    # -- admission ----------------------------------------------------------
+    "unknown-task__unregistered_tenant": req(
+        jbody({"task": "not-a-task", "text_a": [1]})
+    ),
+    "token-out-of-vocab__negative_id": req(jbody({"task": "sst2", "text_a": [-4]})),
+}
+
+
+def main():
+    out = os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "rust", "tests", "fixtures", "wire")
+    )
+    os.makedirs(out, exist_ok=True)
+    for name, data in sorted(FIXTURES.items()):
+        path = os.path.join(out, name + ".raw")
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"{len(data):>6} bytes  {name}.raw")
+    print(f"{len(FIXTURES)} fixtures -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Drive a running `hadapt serve-http` server and verify the wire contract.
+
+CI's "wire ingress smoke" step starts the release binary, points this
+script at it, and fails the build unless every assertion below holds:
+
+1.  The server becomes ready (retried connects, ~10 s budget).
+2.  Every fixture in the adversarial corpus (rust/tests/fixtures/wire/,
+    named `<expected_code>__<desc>.raw`) replayed over its own
+    connection is answered with the expected typed error code (or 200
+    with logits for `ok` fixtures), and the server survives all of them.
+3.  A pipelined happy-path burst (--requests requests in waves of
+    --batch on one connection) is answered in order with 200s and
+    parseable logits.
+4.  /stats before vs after shows the steady-state zero-contracts hold
+    *through the socket*: zero new arena misses, thread spawns and
+    frozen-weight repacks across the whole burst, and the reject
+    counters account for exactly the non-ok fixtures.
+5.  POST /shutdown answers 200 and the server exits (the caller waits
+    on the process).
+
+Stdlib only. Exit code 0 on success, 1 with a diagnostic on any failure.
+
+Usage:
+  python3 tools/wire_load.py --addr 127.0.0.1:8471 \
+      --fixtures rust/tests/fixtures/wire --requests 64 --batch 8
+"""
+
+import argparse
+import json
+import os
+import socket
+import sys
+import time
+
+TASKS = ["sst2", "mrpc", "rte"]
+
+
+def fail(msg):
+    print(f"wire_load: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def connect(addr, timeout=5.0):
+    s = socket.create_connection(addr, timeout=timeout)
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return s
+
+
+def wait_ready(addr, budget=10.0):
+    deadline = time.monotonic() + budget
+    while True:
+        try:
+            connect(addr, timeout=1.0).close()
+            return
+        except OSError:
+            if time.monotonic() > deadline:
+                fail(f"server at {addr[0]}:{addr[1]} never became ready")
+            time.sleep(0.1)
+
+
+def read_responses(sock, n):
+    """Read exactly n Content-Length-framed responses: [(status, body)]."""
+    buf = b""
+    out = []
+    while len(out) < n:
+        while True:
+            head_end = buf.find(b"\r\n\r\n")
+            if head_end < 0:
+                break
+            head = buf[:head_end].decode("utf-8", "replace")
+            cl = 0
+            for line in head.split("\r\n")[1:]:
+                k, _, v = line.partition(":")
+                if k.strip().lower() == "content-length":
+                    cl = int(v.strip())
+            total = head_end + 4 + cl
+            if len(buf) < total:
+                break
+            status = int(head.split(" ", 2)[1])
+            out.append((status, buf[head_end + 4 : total].decode("utf-8", "replace")))
+            buf = buf[total:]
+            if len(out) == n:
+                return out
+        chunk = sock.recv(65536)
+        if not chunk:
+            fail(f"server closed after {len(out)} of {n} responses")
+        buf += chunk
+    return out
+
+
+def roundtrip(addr, payload, half_close=False):
+    s = connect(addr)
+    s.sendall(payload)
+    if half_close:
+        s.shutdown(socket.SHUT_WR)
+    resp = read_responses(s, 1)[0]
+    s.close()
+    return resp
+
+
+def post(path, body=b""):
+    head = f"POST {path} HTTP/1.1\r\nContent-Length: {len(body)}\r\n\r\n"
+    return head.encode() + body
+
+
+def infer(task, ids):
+    body = json.dumps(
+        {"task": task, "text_a": ids}, separators=(",", ":")
+    ).encode()
+    return post("/infer", body)
+
+
+def get_stats(addr):
+    status, body = roundtrip(addr, b"GET /stats HTTP/1.1\r\n\r\n")
+    if status != 200:
+        fail(f"/stats answered {status}: {body}")
+    return json.loads(body)
+
+
+def replay_corpus(addr, fixtures_dir):
+    names = sorted(f for f in os.listdir(fixtures_dir) if f.endswith(".raw"))
+    if len(names) < 30:
+        fail(f"fixture corpus shrank: only {len(names)} fixtures in {fixtures_dir}")
+    ok = err = 0
+    for name in names:
+        code = name.split("__")[0]
+        with open(os.path.join(fixtures_dir, name), "rb") as f:
+            raw = f.read()
+        status, body = roundtrip(addr, raw, half_close=code.startswith("truncated"))
+        if code == "ok":
+            ok += 1
+            if status != 200 or '"logits":[' not in body:
+                fail(f"fixture {name}: expected 200 with logits, got {status}: {body}")
+        else:
+            err += 1
+            if status == 200 or f'"error":"{code}"' not in body:
+                fail(f"fixture {name}: expected code {code}, got {status}: {body}")
+    print(f"wire_load: corpus OK ({ok} ok / {err} rejected, server survived)")
+    return ok, err
+
+
+def happy_burst(addr, requests, batch):
+    s = connect(addr)
+    served = 0
+    wave_idx = 0
+    while served < requests:
+        n = min(batch, requests - served)
+        payload = b"".join(
+            infer(TASKS[(served + i) % len(TASKS)], [(served + i) * 7 % 512, 3, 11])
+            for i in range(n)
+        )
+        s.sendall(payload)
+        for status, body in read_responses(s, n):
+            if status != 200:
+                fail(f"burst wave {wave_idx}: status {status}: {body}")
+            logits = json.loads(body).get("logits")
+            if not isinstance(logits, list) or not logits:
+                fail(f"burst wave {wave_idx}: unparseable logits: {body}")
+        served += n
+        wave_idx += 1
+    s.close()
+    print(f"wire_load: burst OK ({served} requests in {wave_idx} waves of {batch})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--addr", default="127.0.0.1:8471")
+    ap.add_argument("--fixtures", default="rust/tests/fixtures/wire")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    host, _, port = args.addr.rpartition(":")
+    addr = (host, int(port))
+
+    wait_ready(addr)
+    # warm everything (arena, workers, packs, connection buffers) before
+    # snapshotting the zero-contract counters
+    happy_burst(addr, args.batch, args.batch)
+    s0 = get_stats(addr)
+
+    ok_n, err_n = replay_corpus(addr, args.fixtures)
+    happy_burst(addr, args.requests, args.batch)
+    s1 = get_stats(addr)
+
+    for key in ("arena_misses", "pool_threads_spawned", "repacks"):
+        delta = s1[key] - s0[key]
+        if delta != 0:
+            fail(f"steady-state contract broken over the wire: {key} grew by {delta}")
+    rejects = sum(
+        s1[k] - s0[k] for k in ("rejects_http", "rejects_parse", "rejects_submit")
+    )
+    if rejects != err_n:
+        fail(f"reject counters drifted: {rejects} new rejects for {err_n} bad fixtures")
+    replies = s1["replies"] - s0["replies"]
+    if replies < args.requests + ok_n:
+        fail(f"reply counter drifted: {replies} < {args.requests + ok_n}")
+
+    status, body = roundtrip(addr, post("/shutdown"))
+    if status != 200 or '"shutting_down":true' not in body:
+        fail(f"/shutdown answered {status}: {body}")
+    print(
+        "wire_load: PASS — zero-contracts held over the wire "
+        f"(replies +{replies}, rejects +{rejects}, arena/spawn/repack deltas 0)"
+    )
+
+
+if __name__ == "__main__":
+    main()
