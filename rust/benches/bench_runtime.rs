@@ -27,6 +27,14 @@
 //! (`serve-http`'s engine) at wave sizes 1/8/32, with the serve
 //! zero-contract counters read back over the wire from `/stats`.
 //!
+//! PR 7 adds the `bank` section: the tiered adapter bank — a
+//! Zipf-clustered synthetic fleet delta-encoded into the on-disk bank
+//! format (compression ratio vs dense per-tenant storage), the
+//! cold-fault path (page + reconstruct one tenant, p50/p99
+//! microseconds), the hot-hit rate of a Zipf traffic replay through a
+//! tiered [`ServeSession`], and the hot-resident steady state proven
+//! allocation-free by this binary's own counting allocator.
+//!
 //! Results are also recorded to `BENCH_kernels.json` at the repo root so
 //! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
 //! smoke run (CI uses this; only the tiny model, few iterations). The
@@ -41,13 +49,47 @@ use hadapt::model::{FreezeMask, ParamStore};
 use hadapt::optim::LrSchedule;
 use hadapt::runtime::kernels::{self as k, scalar};
 use hadapt::runtime::{
-    spawn_synthetic_server, DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool,
-    RequestScratch, ServeRequest, ServeSession, SpawnOpts, TaskAdapter, Tensor, WireLimits,
+    spawn_synthetic_server, synthetic_adapters, synthetic_tenant, BankBuilder, BankGeometry,
+    BankReader, DeviceTensor, Engine, IntTensor, Manifest, NativeBackend, Pool, RequestScratch,
+    ServeRequest, ServeSession, SpawnOpts, TaskAdapter, Tensor, WireLimits,
 };
 use hadapt::train::Session;
 use hadapt::util::bench::{report_throughput, Bench};
 use hadapt::util::json::Json;
 use hadapt::util::Rng;
+
+/// Counts heap allocations while `TRACKING` is set, so the bank rows'
+/// `steady_hot_allocs` figure is a measurement from this very process,
+/// not a replay of the workspace_alloc test's verdict. Pass-through to
+/// the system allocator; counting is off outside the tracked window.
+struct CountingAlloc;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static TRACKING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn engine_with(pool: Pool, packing: bool) -> Engine {
     Engine::with_backend(
@@ -763,6 +805,148 @@ fn main() {
         ingress_json.set("rows", rows);
     }
 
+    // Bank rows (PR 7): the tiered adapter bank. Delta-encode a
+    // Zipf-clustered synthetic fleet into the on-disk bank format, time
+    // the cold-fault path (page + reconstruct one tenant into a reused
+    // scratch adapter), replay Zipf-skewed traffic through a tiered
+    // ServeSession for the hot-hit rate, then freeze a hot-resident
+    // working set and prove steady serve allocation-free with this
+    // binary's counting allocator.
+    let mut bank_json = Json::obj();
+    {
+        let engine = engine_with(Pool::auto(), true);
+        // fleet scale, not model scale, is what the bank rows measure —
+        // tiny keeps the 1k-tenant build and replay fast at full depth
+        let bmodel = "tiny";
+        let info = engine.manifest().model(bmodel).unwrap().clone();
+        let store = ParamStore::init(&info, 7);
+        let base_names: Vec<String> =
+            ["sst2", "mrpc", "rte"].iter().map(|t| t.to_string()).collect();
+        let bases = synthetic_adapters(&info, &store, &base_names, 1234).unwrap();
+        let tenants = if quick { 200 } else { 1000 };
+        let classes = info.params[info.param_index("classifier.bias").unwrap()].shape[0];
+        let geom = BankGeometry { layers: info.layers, hidden: info.hidden, classes };
+        let mut builder = BankBuilder::new(geom, bases.clone(), 0.0).unwrap();
+        let t_build = std::time::Instant::now();
+        for idx in 0..tenants {
+            builder.add_tenant(&synthetic_tenant(&bases, idx, 1234)).unwrap();
+        }
+        let path =
+            std::env::temp_dir().join(format!("hadapt_bench_{}.bank", std::process::id()));
+        let summary = builder.write(&path).unwrap();
+        let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "bench {:<44} tenants={} file={:.2}MB ratio={:.1}x build={:.1}ms",
+            format!("bank_build/{bmodel}"),
+            summary.tenants,
+            summary.file_bytes as f64 / 1e6,
+            summary.compression_ratio,
+            build_ms
+        );
+
+        // cold-fault microseconds: page + reconstruct straight off the
+        // reader into one reused scratch adapter (the promotion path
+        // minus the hot-tier bookkeeping)
+        let mut reader = BankReader::open(&path).unwrap();
+        let mut scratch = reader.blank_adapter();
+        let probes = if quick { 64 } else { 256 };
+        let synth = tenants - bases.len();
+        let mut fault_us: Vec<f64> = Vec::with_capacity(probes);
+        for i in 0..probes {
+            let name = format!("t{:06}", bases.len() + (i * 97) % synth);
+            let t0 = std::time::Instant::now();
+            reader.read_into(&name, &mut scratch).unwrap();
+            fault_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        fault_us.sort_by(|a, c| a.total_cmp(c));
+        let fault_p50 = fault_us[fault_us.len() / 2];
+        let fault_p99 = fault_us[(fault_us.len() * 99 / 100).min(fault_us.len() - 1)];
+
+        // Zipf replay: traffic skewed the way the fleet itself is (the
+        // product of three uniforms piles most draws on low ranks), hot
+        // tier of 64 over the whole fleet
+        let hot = 64usize;
+        let mut session = ServeSession::new(&engine, bmodel, &store, 8).unwrap();
+        session.attach_store(BankReader::open(&path).unwrap(), hot).unwrap();
+        let mut rng = Rng::new(4242);
+        let replays = if quick { 256 } else { 1024 };
+        let names: Vec<String> = (0..replays)
+            .map(|_| {
+                let u = rng.next_f32() * rng.next_f32() * rng.next_f32();
+                let r = ((u * tenants as f32) as usize).min(tenants - 1);
+                if r < base_names.len() {
+                    base_names[r].clone()
+                } else {
+                    format!("t{r:06}")
+                }
+            })
+            .collect();
+        let seq = [5i32, 6, 7];
+        let s0 = session.bank().bank_stats();
+        let mut sink = 0usize;
+        for wave in names.chunks(8) {
+            for name in wave {
+                session.submit_borrowed(name, &seq, None).unwrap();
+            }
+            session.run_direct().unwrap();
+            for r in session.direct_replies() {
+                sink += r.label;
+            }
+        }
+        let s1 = session.bank().bank_stats();
+        let hits = s1.hot_hits - s0.hot_hits;
+        let faults = s1.cold_faults - s0.cold_faults;
+        let hit_rate = hits as f64 / (hits + faults).max(1) as f64;
+
+        // hot-resident zero-alloc contract, measured: freeze an
+        // 8-tenant working set, warm it into the hot tier, then count
+        // every heap allocation across 16 steady waves
+        let mut hotset = base_names.clone();
+        for idx in bases.len()..8 {
+            hotset.push(format!("t{idx:06}"));
+        }
+        for name in &hotset {
+            session.submit_borrowed(name, &seq, None).unwrap();
+        }
+        session.run_direct().unwrap();
+        for r in session.direct_replies() {
+            sink += r.label;
+        }
+        ALLOCS.store(0, Ordering::SeqCst);
+        TRACKING.store(true, Ordering::SeqCst);
+        for _ in 0..16 {
+            for name in &hotset {
+                session.submit_borrowed(name, &seq, None).unwrap();
+            }
+            session.run_direct().unwrap();
+            for r in session.direct_replies() {
+                sink += r.label;
+            }
+        }
+        TRACKING.store(false, Ordering::SeqCst);
+        let steady_allocs = ALLOCS.load(Ordering::SeqCst);
+        std::hint::black_box(sink);
+        let _ = std::fs::remove_file(&path);
+        println!(
+            "bench {:<44} fault_p50={fault_p50:.1}us fault_p99={fault_p99:.1}us \
+             hot_hit_rate={hit_rate:.3} steady_hot_allocs={steady_allocs}",
+            format!("bank_serve/{bmodel} (hot {hot} of {tenants})")
+        );
+
+        bank_json.set("provenance", Json::str("measured"));
+        bank_json.set("model", Json::str(bmodel));
+        bank_json.set("tenants", Json::num(summary.tenants as f64));
+        bank_json.set("centroids", Json::num(summary.centroids as f64));
+        bank_json.set("file_bytes", Json::num(summary.file_bytes as f64));
+        ms(&mut bank_json, "build_ms", build_ms);
+        ms(&mut bank_json, "compression_ratio", summary.compression_ratio);
+        ms(&mut bank_json, "cold_fault_us_p50", fault_p50);
+        ms(&mut bank_json, "cold_fault_us_p99", fault_p99);
+        bank_json.set("hot", Json::num(hot as f64));
+        ms(&mut bank_json, "hot_hit_rate", hit_rate);
+        bank_json.set("steady_hot_allocs", Json::num(steady_allocs as f64));
+    }
+
     // record the comparison next to the repo root for the perf trajectory
     let mut out = Json::obj();
     out.set(
@@ -771,8 +955,8 @@ fn main() {
             "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
              vs blocked vs blocked+parallel vs packed+fused (native backend), plus \
              persistent-pool vs scoped dispatch latency (PR 4), multi-tenant \
-             serve-path rows (PR 5) and wire-ingress rows (PR 6); schema in \
-             docs/BENCH_SCHEMA.md",
+             serve-path rows (PR 5), wire-ingress rows (PR 6) and tiered \
+             adapter-bank rows (PR 7); schema in docs/BENCH_SCHEMA.md",
         ),
     );
     out.set("provenance", Json::str("measured"));
@@ -786,6 +970,7 @@ fn main() {
     out.set("pool", pool_json);
     out.set("serve", serve_json);
     out.set("ingress", ingress_json);
+    out.set("bank", bank_json);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(path, out.render_pretty()) {
         Ok(()) => println!("bench results recorded to {path}"),

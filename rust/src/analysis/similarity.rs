@@ -155,6 +155,157 @@ pub fn identity_deviation(av: &AdapterVectors) -> HashMap<&'static str, f64> {
     m
 }
 
+/// K-means clustering of adapter-vector bundles into shared centroids.
+///
+/// This is the serve-time exploitation of the paper's cross-task
+/// similarity finding: Hadamard weights are near-reusable across tasks,
+/// so a large tenant fleet collapses onto a few shared per-layer
+/// centroids, with per-tenant storage reduced to the rows that differ
+/// (see `runtime::bankstore`).
+#[derive(Debug, Clone)]
+pub struct ClusterModel {
+    /// Number of clusters (clamped to the input size).
+    pub k: usize,
+    /// Per-input cluster assignment; `assignments[i]` indexes `centroids`.
+    pub assignments: Vec<usize>,
+    /// Index into the input slice of the member each centroid snapped to.
+    pub medoids: Vec<usize>,
+    /// Cluster centers. Each is a **bitwise copy of its medoid member**
+    /// (not a floating mean), so a centroid row can dedupe a duplicate
+    /// member row exactly — the property the delta encoder relies on.
+    pub centroids: Vec<AdapterVectors>,
+}
+
+fn flatten(av: &AdapterVectors) -> Vec<f64> {
+    let mut out = Vec::new();
+    for fam in [&av.weights, &av.biases, &av.norm_weights, &av.norm_biases] {
+        for row in fam.iter() {
+            out.extend(row.iter().map(|&x| x as f64));
+        }
+    }
+    out
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn nearest(f: &[f64], centers: &[Vec<f64>]) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (c, center) in centers.iter().enumerate() {
+        let d = dist2(f, center);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Deterministic Lloyd k-means over flattened adapter vectors, snapped to
+/// medoids.
+///
+/// Initial centers are evenly spaced members (no RNG — same input, same
+/// clustering, on every machine). After `iters` Lloyd rounds the centers
+/// are snapped to their nearest member (the medoid) and every input is
+/// re-assigned against the snapped centers, so an input that is a bitwise
+/// duplicate of a medoid always lands in that medoid's cluster at
+/// distance zero. Empty clusters keep their previous center.
+pub fn cluster_adapters(all: &[AdapterVectors], k: usize, iters: usize) -> ClusterModel {
+    assert!(!all.is_empty(), "cluster_adapters: empty input");
+    let k = k.clamp(1, all.len());
+    let feats: Vec<Vec<f64>> = all.iter().map(flatten).collect();
+    let mut centers: Vec<Vec<f64>> = (0..k).map(|c| feats[c * all.len() / k].clone()).collect();
+    let mut assignments = vec![0usize; all.len()];
+    for _ in 0..iters.max(1) {
+        for (i, f) in feats.iter().enumerate() {
+            assignments[i] = nearest(f, &centers);
+        }
+        for (c, center) in centers.iter_mut().enumerate() {
+            let members: Vec<usize> =
+                (0..all.len()).filter(|&i| assignments[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            for (d, slot) in center.iter_mut().enumerate() {
+                *slot = members.iter().map(|&m| feats[m][d]).sum::<f64>() / members.len() as f64;
+            }
+        }
+    }
+    let mut medoids = Vec::with_capacity(k);
+    let mut centroids = Vec::with_capacity(k);
+    for (c, center) in centers.iter().enumerate() {
+        let best = (0..all.len())
+            .filter(|&i| assignments[i] == c)
+            .min_by(|&a, &b| {
+                dist2(&feats[a], center)
+                    .partial_cmp(&dist2(&feats[b], center))
+                    .unwrap()
+            })
+            .unwrap_or(c * all.len() / k);
+        medoids.push(best);
+        let mut cv = all[best].clone();
+        cv.task = format!("centroid.{c}");
+        centroids.push(cv);
+    }
+    let med_feats: Vec<Vec<f64>> = medoids.iter().map(|&m| feats[m].clone()).collect();
+    for (i, f) in feats.iter().enumerate() {
+        assignments[i] = nearest(f, &med_feats);
+    }
+    ClusterModel { k, assignments, medoids, centroids }
+}
+
+/// Which layers of one task's adapter are redundant — within `epsilon`
+/// (max-abs, all four vector families) of a reference bundle, typically
+/// the untuned backbone rows (weight = 1, bias = 0, backbone LayerNorm).
+///
+/// The paper's §redundant-layers result (0.033% → 0.022% of model
+/// parameters): a redundant layer serves the backbone row and stores
+/// nothing. For `epsilon = 0` the mask only marks bitwise-equal layers,
+/// so reconstruction from a mask is exact, not approximate.
+#[derive(Debug, Clone)]
+pub struct RedundancyMask {
+    /// Task the mask was computed for.
+    pub task: String,
+    /// `redundant[l]` — layer `l` is within epsilon of the reference.
+    pub redundant: Vec<bool>,
+}
+
+impl RedundancyMask {
+    /// Number of layers that must actually be stored (non-redundant).
+    pub fn stored_layers(&self) -> usize {
+        self.redundant.iter().filter(|r| !**r).count()
+    }
+}
+
+/// Compute the per-layer redundancy mask of `av` against `reference`.
+pub fn redundant_layers(
+    av: &AdapterVectors,
+    reference: &AdapterVectors,
+    epsilon: f64,
+) -> RedundancyMask {
+    let layers = av.weights.len();
+    assert_eq!(layers, reference.weights.len(), "layer count mismatch");
+    let redundant = (0..layers)
+        .map(|l| {
+            let fams = [
+                (&av.weights[l], &reference.weights[l]),
+                (&av.biases[l], &reference.biases[l]),
+                (&av.norm_weights[l], &reference.norm_weights[l]),
+                (&av.norm_biases[l], &reference.norm_biases[l]),
+            ];
+            fams.iter().all(|(a, r)| {
+                a.len() == r.len()
+                    && a.iter()
+                        .zip(r.iter())
+                        .all(|(&x, &y)| ((x - y).abs() as f64) <= epsilon)
+            })
+        })
+        .collect();
+    RedundancyMask { task: av.task.clone(), redundant }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,5 +355,50 @@ mod tests {
         let d = identity_deviation(&a);
         assert_eq!(d["weight_rms_dev_from_1"], 0.0);
         assert_eq!(d["bias_rms_dev_from_0"], 0.0);
+    }
+
+    #[test]
+    fn clustering_separates_obvious_groups_and_snaps_to_medoids() {
+        let g1a = av("a", vec![1.0; 4], vec![0.0; 4]);
+        let g1b = av("b", vec![1.01; 4], vec![0.0; 4]);
+        let g2a = av("c", vec![3.0; 4], vec![0.5; 4]);
+        let g2b = av("d", vec![3.02; 4], vec![0.5; 4]);
+        let all = [g1a, g2a, g1b, g2b];
+        let m = cluster_adapters(&all, 2, 8);
+        assert_eq!(m.k, 2);
+        assert_eq!(m.assignments[0], m.assignments[2]);
+        assert_eq!(m.assignments[1], m.assignments[3]);
+        assert_ne!(m.assignments[0], m.assignments[1]);
+        // every centroid is a bitwise copy of its medoid member
+        for (c, &mi) in m.medoids.iter().enumerate() {
+            assert_eq!(m.centroids[c].weights, all[mi].weights);
+            assert_eq!(m.centroids[c].biases, all[mi].biases);
+            assert_eq!(m.assignments[mi], c, "medoid must belong to its own cluster");
+        }
+    }
+
+    #[test]
+    fn duplicate_of_a_medoid_lands_in_that_cluster() {
+        let base = av("base", vec![1.0, 1.2, 0.8, 1.1], vec![0.1, -0.2, 0.0, 0.3]);
+        let dup = AdapterVectors { task: "dup".into(), ..base.clone() };
+        let far = av("far", vec![5.0; 4], vec![2.0; 4]);
+        let all = [base, far, dup];
+        let m = cluster_adapters(&all, 2, 4);
+        assert_eq!(m.assignments[0], m.assignments[2]);
+        let c = m.assignments[2];
+        assert_eq!(m.centroids[c].weights, all[2].weights);
+    }
+
+    #[test]
+    fn redundancy_mask_marks_identity_layers() {
+        let reference = av("ref", vec![1.0; 4], vec![0.0; 4]);
+        let mut tuned = av("t", vec![1.0; 4], vec![0.0; 4]);
+        tuned.weights[1][2] = 1.25; // only layer 1 deviates
+        let m = redundant_layers(&tuned, &reference, 0.0);
+        assert_eq!(m.redundant, vec![true, false]);
+        assert_eq!(m.stored_layers(), 1);
+        // a loose epsilon absorbs the deviation
+        let loose = redundant_layers(&tuned, &reference, 0.5);
+        assert_eq!(loose.stored_layers(), 0);
     }
 }

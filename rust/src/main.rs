@@ -7,6 +7,8 @@
 //! hadapt eval --model base --task sst2 --ckpt path.ckpt
 //! hadapt serve-demo --model tiny      # multi-tenant adapter serving demo
 //! hadapt serve-http --model tiny      # HTTP front door (zero-alloc ingress)
+//! hadapt bank-build --tenants 100000 --out fleet.bank   # tiered bank file
+//! hadapt serve-http --bank fleet.bank --hot 64          # serve it
 //! hadapt experiment table2            # regenerate a paper table/figure
 //! hadapt experiment all               # the whole evaluation section
 //! ```
@@ -15,10 +17,13 @@
 //! `--config path.json`. `serve-demo` adds `--requests N`, `--batch B`,
 //! `--tasks a,b,c` and `--trained` (export adapters from real tuning runs
 //! through the coordinator instead of synthesizing them). `serve-http`
-//! adds `--addr host:port`, `--max-batch B` (wave size) and
-//! `--tenants a,b,c` (synthetic adapters, same path as the demo); it
-//! serves `POST /infer`, `GET /stats`, `GET /healthz` and
-//! `POST /shutdown` until shut down.
+//! adds `--addr host:port`, `--max-batch B` (wave size) and either
+//! `--tenants a,b,c` (synthetic adapters, same path as the demo) or
+//! `--bank path` + `--hot N` (page tenants from a prebuilt on-disk bank
+//! through an N-row LRU hot tier); it serves `POST /infer`, `GET /stats`,
+//! `GET /healthz` and `POST /shutdown` until shut down. `bank-build` adds
+//! `--tenants N` (fleet size), `--bases a,b,c` (base tasks, reused as the
+//! bank's shared centroids) and `--out path`.
 
 use std::time::Instant;
 
@@ -31,7 +36,8 @@ use hadapt::methods::Method;
 use hadapt::model::ParamStore;
 use hadapt::report::pct;
 use hadapt::runtime::{
-    synthetic_adapters, Engine, ServeRequest, ServeSession, TaskAdapter, WireLimits, WireServer,
+    synthetic_adapters, synthetic_tenant, BankBuilder, BankGeometry, BankReader, Engine,
+    ServeRequest, ServeSession, TaskAdapter, WireLimits, WireServer,
 };
 use hadapt::train::{evaluate, load_or_pretrain};
 
@@ -45,8 +51,8 @@ fn parse_args() -> Result<Cli> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         bail!(
-            "usage: hadapt <info|pretrain|train|eval|serve-demo|serve-http|experiment> \
-             [args] [--model M] [--task T] [--method X] [--quick] [--set k=v]"
+            "usage: hadapt <info|pretrain|train|eval|serve-demo|serve-http|bank-build|\
+             experiment> [args] [--model M] [--task T] [--method X] [--quick] [--set k=v]"
         );
     }
     let command = args[0].clone();
@@ -91,11 +97,13 @@ fn build_config(cli: &Cli) -> Result<Config> {
     // fail loudly, so e.g. `train --batch 32` cannot silently no-op.
     let serve_demo = cli.command == "serve-demo";
     let serve_http = cli.command == "serve-http";
+    let bank_build = cli.command == "bank-build";
     for (k, v) in &cli.flags {
         match k.as_str() {
             "config" | "model" | "task" | "method" | "ckpt" | "out" => {}
             "requests" | "batch" | "tasks" | "trained" if serve_demo => {}
-            "addr" | "max-batch" | "tenants" if serve_http => {}
+            "addr" | "max-batch" | "tenants" | "bank" | "hot" if serve_http => {}
+            "tenants" | "bases" if bank_build => {}
             "set" => {
                 let (kk, vv) = v
                     .split_once('=')
@@ -394,6 +402,62 @@ fn run_serve_demo(
     Ok(())
 }
 
+/// `hadapt bank-build`: synthesize a Zipf-clustered tenant fleet around
+/// the base tasks, delta-encode every tenant against its base centroid,
+/// and write the crash-safe on-disk bank file that `serve-http --bank`
+/// pages at serve time. Prints the per-tier scalar accounting and the
+/// compression ratio versus storing every tenant densely.
+fn cmd_bank_build(cfg: Config, cli: &Cli) -> Result<()> {
+    let model = cli.flag("model").unwrap_or("tiny").to_string();
+    let tenants: usize = cli
+        .flag("tenants")
+        .unwrap_or("1000")
+        .parse()
+        .context("--tenants wants a fleet size")?;
+    let bases: Vec<String> = cli
+        .flag("bases")
+        .unwrap_or("sst2,mrpc,rte")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let out = cli.flag("out").unwrap_or("fleet.bank").to_string();
+    let seed = cfg.seed;
+
+    let engine = cfg.engine()?;
+    let info = engine.manifest().model(&model)?.clone();
+    let store = ParamStore::init(&info, seed);
+    let base_adapters = synthetic_adapters(&info, &store, &bases, seed)?;
+    if tenants < base_adapters.len() {
+        bail!(
+            "--tenants {tenants} is smaller than the {} base tasks",
+            base_adapters.len()
+        );
+    }
+    let classes = info.params[info.param_index("classifier.bias")?].shape[0];
+    let geom = BankGeometry { layers: info.layers, hidden: info.hidden, classes };
+    // The bases double as the shared centroids: every synthetic tenant is
+    // a (possibly empty) perturbation of one of them, so ε=0 bitwise
+    // delta-encoding stores only the layers a tenant actually changed —
+    // the paper's redundant-layer finding, applied as storage.
+    let mut builder = BankBuilder::new(geom, base_adapters.clone(), 0.0)?;
+    for idx in 0..tenants {
+        builder.add_tenant(&synthetic_tenant(&base_adapters, idx, seed))?;
+    }
+    let summary = builder.write(&out)?;
+    println!(
+        "bank-build: {} tenants over {} centroids -> {out} ({} bytes)",
+        summary.tenants, summary.centroids, summary.file_bytes
+    );
+    println!("  naive dense storage : {} scalars", summary.naive_scalars);
+    println!("  centroid tier       : {} scalars (shared, paid once)", summary.centroid_scalars);
+    println!(
+        "  delta tier          : {} scalars (only rows that differ from the centroid)",
+        summary.delta_scalars
+    );
+    println!("  compression ratio   : {:.1}x vs dense", summary.compression_ratio);
+    Ok(())
+}
+
 /// `hadapt serve-http`: the wire front door — bind a socket, stand up a
 /// [`ServeSession`] with synthetic tenants (same deterministic path as
 /// `serve-demo`), and serve `POST /infer` / `GET /stats` /
@@ -408,6 +472,15 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
         .unwrap_or("8")
         .parse()
         .context("--max-batch wants a number")?;
+    let bank_path = cli.flag("bank").map(str::to_string);
+    let hot: usize = cli
+        .flag("hot")
+        .unwrap_or("64")
+        .parse()
+        .context("--hot wants a number of hot-tier rows")?;
+    if bank_path.is_some() && cli.flag("tenants").is_some() {
+        bail!("--bank and --tenants are mutually exclusive: the bank file already names its tenants");
+    }
     let tenants: Vec<String> = cli
         .flag("tenants")
         .unwrap_or("sst2,mrpc,rte")
@@ -420,21 +493,35 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
     let info = engine.manifest().model(&model)?.clone();
     let store = ParamStore::init(&info, seed);
     let mut session = ServeSession::new(&engine, &model, &store, max_batch)?;
-    for a in synthetic_adapters(&info, &store, &tenants, seed)? {
-        println!(
-            "bank: task '{:<6}' registered ({} adapter scalars, {} classes)",
-            a.task,
-            a.scalars(),
-            a.classes
-        );
-        session.register_task(a)?;
+    match &bank_path {
+        Some(path) => {
+            let reader = BankReader::open(path)
+                .with_context(|| format!("cannot open bank file {path}"))?;
+            println!(
+                "bank: {} tenants on disk over {} centroids, hot tier {hot} rows",
+                reader.len(),
+                reader.centroids().len()
+            );
+            session.attach_store(reader, hot)?;
+        }
+        None => {
+            for a in synthetic_adapters(&info, &store, &tenants, seed)? {
+                println!(
+                    "bank: task '{:<6}' registered ({} adapter scalars, {} classes)",
+                    a.task,
+                    a.scalars(),
+                    a.classes
+                );
+                session.register_task(a)?;
+            }
+        }
     }
     let listener =
         std::net::TcpListener::bind(addr).with_context(|| format!("cannot bind {addr}"))?;
     let bound = listener.local_addr()?;
     println!(
         "serve-http: model '{model}', {} tenants, wave size {max_batch}, listening on {bound}",
-        tenants.len()
+        session.bank().tenant_count()
     );
     // the load script waits for this line before sending traffic
     use std::io::Write as _;
@@ -490,6 +577,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(cfg, &cli),
         "serve-demo" => cmd_serve_demo(cfg, &cli),
         "serve-http" => cmd_serve_http(cfg, &cli),
+        "bank-build" => cmd_bank_build(cfg, &cli),
         "experiment" => cmd_experiment(cfg, &cli),
         other => bail!("unknown command '{other}'"),
     }

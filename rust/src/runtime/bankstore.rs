@@ -1,0 +1,864 @@
+//! Crash-safe on-disk adapter banks: shared centroids + per-tenant deltas.
+//!
+//! The paper's two serve-relevant findings — cross-task Hadamard vectors
+//! are strongly shared (Fig. 5) and several per-layer rows are redundant
+//! (§redundant layers, 0.033% → 0.022% of model parameters) — turn into
+//! a storage story here: a fleet of tenants collapses onto a few shared
+//! **centroid** adapters (full dense rows, loaded resident at open), and
+//! each tenant stores only the rows that differ from its centroid (a
+//! sparse **delta record**). A row within `eps` of the centroid row
+//! stores nothing and serves the centroid row; for `eps = 0` the
+//! comparison is bitwise, so reconstruction is exact, not approximate.
+//!
+//! ## File format (all integers little-endian)
+//!
+//! ```text
+//! header   (48 B)  magic "HADBANK1" | version u32 | layers u32
+//!                  hidden u32 | classes u32 | centroid_count u32
+//!                  reserved u32 | centroid_region_len u64
+//!                  fnv1a-64 over the preceding 40 bytes
+//! centroid region  centroid_count dense adapters (name, active classes,
+//!                  per-layer had_w/had_b/norm_w/norm_b rows, pooler +
+//!                  classifier head), then fnv1a-64 over the region
+//! tenant records   append-log, each:
+//!                    magic "TENT" | rec_len u32
+//!                    payload: name (u16 len + bytes) | centroid u32 |
+//!                             classes u32 | row_count u16 |
+//!                             rows of { family u8, layer u16, len u32,
+//!                                       len × f32 }
+//!                    fnv1a-64 over the payload
+//! ```
+//!
+//! ## Crash safety
+//!
+//! A full build ([`BankBuilder::write`]) goes through write-temp +
+//! `fsync` + atomic rename, so a crashed build leaves the previous file
+//! intact. An [`BankReader::upsert`] appends one record and `fsync`s;
+//! [`BankReader::open`] scans the log and stops at the first torn or
+//! corrupt record (short read, bad magic, impossible length, checksum
+//! mismatch), so a reload after a crash always yields exactly the last
+//! committed state — `tests/bank_persistence.rs` truncates an upsert at
+//! every byte boundary to pin this. Later records shadow earlier ones
+//! (the log is an upsert history), and the next upsert truncates any
+//! torn tail before appending.
+//!
+//! Cold tenants are paged in by offset reads into a reusable scratch
+//! buffer ([`BankReader::read_into`]); after the scratch's high-water
+//! mark is reached, a fault costs one seek + one read + vector copies,
+//! with no per-lookup allocation.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::serve::TaskAdapter;
+
+/// Magic bytes opening every bank file.
+pub const BANK_MAGIC: &[u8; 8] = b"HADBANK1";
+/// On-disk format version this module reads and writes.
+pub const BANK_VERSION: u32 = 1;
+
+const REC_MAGIC: &[u8; 4] = b"TENT";
+const HEADER_LEN: usize = 48;
+
+// Row family codes in tenant delta records. 0..=3 are per-layer rows
+// (the `layer` field selects the row); 4..=7 are the head (layer = 0).
+const FAM_HAD_W: u8 = 0;
+const FAM_HAD_B: u8 = 1;
+const FAM_NORM_W: u8 = 2;
+const FAM_NORM_B: u8 = 3;
+const FAM_POOLER_W: u8 = 4;
+const FAM_POOLER_B: u8 = 5;
+const FAM_CLS_W: u8 = 6;
+const FAM_CLS_B: u8 = 7;
+
+/// FNV-1a over raw bytes (the string-keyed sibling lives in `util`).
+fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The model geometry a bank file is shaped for. A reader refuses to
+/// serve a session whose model disagrees on any of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankGeometry {
+    /// Encoder layer count.
+    pub layers: usize,
+    /// Hidden width of every per-layer row.
+    pub hidden: usize,
+    /// Total width of the classifier head (`classes_total`).
+    pub classes: usize,
+}
+
+fn check_geometry(a: &TaskAdapter, g: &BankGeometry) -> Result<()> {
+    let ok = a.had_w.len() == g.layers
+        && a.had_b.len() == g.layers
+        && a.norm_w.len() == g.layers
+        && a.norm_b.len() == g.layers
+        && a.had_w.iter().all(|v| v.len() == g.hidden)
+        && a.had_b.iter().all(|v| v.len() == g.hidden)
+        && a.norm_w.iter().all(|v| v.len() == g.hidden)
+        && a.norm_b.iter().all(|v| v.len() == g.hidden)
+        && a.pooler_w.len() == g.hidden * g.hidden
+        && a.pooler_b.len() == g.hidden
+        && a.cls_w.len() == g.hidden * g.classes
+        && a.cls_b.len() == g.classes
+        && a.classes >= 1
+        && a.classes <= g.classes;
+    if !ok {
+        bail!(
+            "adapter '{}' does not match the bank geometry \
+             (layers={}, hidden={}, classes={})",
+            a.task,
+            g.layers,
+            g.hidden,
+            g.classes
+        );
+    }
+    Ok(())
+}
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// A bounds-checked little-endian cursor over a byte slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("bank record truncated: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Does a tenant row deviate from the centroid row enough to store?
+/// `eps = 0` compares bitwise (so `-0.0` vs `0.0` and NaN payloads
+/// round-trip exactly); `eps > 0` compares max-abs.
+fn row_differs(a: &[f32], b: &[f32], eps: f32) -> bool {
+    if a.len() != b.len() {
+        return true;
+    }
+    if eps == 0.0 {
+        a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits())
+    } else {
+        a.iter().zip(b).any(|(x, y)| (x - y).abs() > eps)
+    }
+}
+
+fn dist2(a: &TaskAdapter, b: &TaskAdapter) -> f64 {
+    let mut d = 0f64;
+    let acc = |d: &mut f64, x: &[f32], y: &[f32]| {
+        for (&p, &q) in x.iter().zip(y) {
+            let e = p as f64 - q as f64;
+            *d += e * e;
+        }
+    };
+    for l in 0..a.had_w.len() {
+        acc(&mut d, &a.had_w[l], &b.had_w[l]);
+        acc(&mut d, &a.had_b[l], &b.had_b[l]);
+        acc(&mut d, &a.norm_w[l], &b.norm_w[l]);
+        acc(&mut d, &a.norm_b[l], &b.norm_b[l]);
+    }
+    acc(&mut d, &a.pooler_w, &b.pooler_w);
+    acc(&mut d, &a.pooler_b, &b.pooler_b);
+    acc(&mut d, &a.cls_w, &b.cls_w);
+    acc(&mut d, &a.cls_b, &b.cls_b);
+    d
+}
+
+/// Index of the centroid nearest to `a` (L2 over every family; ties go
+/// to the lowest index, so assignment is deterministic).
+pub fn nearest_centroid(centroids: &[TaskAdapter], a: &TaskAdapter) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, c) in centroids.iter().enumerate() {
+        let d = dist2(a, c);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Enumerate every (family, layer, tenant row, centroid row) pair.
+fn rows_of<'a>(
+    a: &'a TaskAdapter,
+    c: &'a TaskAdapter,
+) -> impl Iterator<Item = (u8, u16, &'a [f32], &'a [f32])> {
+    let layered = (0..a.had_w.len()).flat_map(move |l| {
+        [
+            (FAM_HAD_W, l as u16, a.had_w[l].as_slice(), c.had_w[l].as_slice()),
+            (FAM_HAD_B, l as u16, a.had_b[l].as_slice(), c.had_b[l].as_slice()),
+            (FAM_NORM_W, l as u16, a.norm_w[l].as_slice(), c.norm_w[l].as_slice()),
+            (FAM_NORM_B, l as u16, a.norm_b[l].as_slice(), c.norm_b[l].as_slice()),
+        ]
+    });
+    let head = [
+        (FAM_POOLER_W, 0u16, a.pooler_w.as_slice(), c.pooler_w.as_slice()),
+        (FAM_POOLER_B, 0, a.pooler_b.as_slice(), c.pooler_b.as_slice()),
+        (FAM_CLS_W, 0, a.cls_w.as_slice(), c.cls_w.as_slice()),
+        (FAM_CLS_B, 0, a.cls_b.as_slice(), c.cls_b.as_slice()),
+    ];
+    layered.chain(head)
+}
+
+/// Encode one tenant as a delta record against its nearest centroid.
+/// Appends `magic | rec_len | payload | checksum` to `out`; returns
+/// `(centroid index, stored delta scalars)`.
+fn encode_tenant(
+    out: &mut Vec<u8>,
+    centroids: &[TaskAdapter],
+    a: &TaskAdapter,
+    eps: f32,
+) -> (usize, u64) {
+    let ci = nearest_centroid(centroids, a);
+    let c = &centroids[ci];
+    let mut payload = Vec::new();
+    push_u16(&mut payload, a.task.len() as u16);
+    payload.extend_from_slice(a.task.as_bytes());
+    push_u32(&mut payload, ci as u32);
+    push_u32(&mut payload, a.classes as u32);
+    let rows: Vec<(u8, u16, &[f32])> = rows_of(a, c)
+        .filter(|(_, _, ar, cr)| row_differs(ar, cr, eps))
+        .map(|(f, l, ar, _)| (f, l, ar))
+        .collect();
+    push_u16(&mut payload, rows.len() as u16);
+    let mut stored = 0u64;
+    for (fam, layer, row) in rows {
+        payload.push(fam);
+        push_u16(&mut payload, layer);
+        push_u32(&mut payload, row.len() as u32);
+        push_f32s(&mut payload, row);
+        stored += row.len() as u64;
+    }
+    out.extend_from_slice(REC_MAGIC);
+    push_u32(out, payload.len() as u32);
+    let sum = fnv1a_bytes(&payload);
+    out.extend_from_slice(&payload);
+    push_u64(out, sum);
+    (ci, stored)
+}
+
+fn copy_rows(src: &[Vec<f32>], dst: &mut Vec<Vec<f32>>) {
+    dst.resize_with(src.len(), Vec::new);
+    for (d, s) in dst.iter_mut().zip(src) {
+        d.clear();
+        d.extend_from_slice(s);
+    }
+}
+
+/// Reconstruct a tenant from its payload: copy the centroid, then
+/// overwrite the stored delta rows. For `eps = 0` banks this is bitwise.
+fn decode_tenant(
+    payload: &[u8],
+    geom: &BankGeometry,
+    centroids: &[TaskAdapter],
+    out: &mut TaskAdapter,
+) -> Result<()> {
+    let mut cur = Cursor::new(payload);
+    let name_len = cur.u16()? as usize;
+    let name = std::str::from_utf8(cur.take(name_len)?).context("tenant name is not UTF-8")?;
+    let ci = cur.u32()? as usize;
+    let c = centroids
+        .get(ci)
+        .with_context(|| format!("tenant '{name}' references centroid {ci} of {}", centroids.len()))?;
+    let classes = cur.u32()? as usize;
+    if classes == 0 || classes > geom.classes {
+        bail!("tenant '{name}': {classes} active classes outside the {}-wide head", geom.classes);
+    }
+    out.task.clear();
+    out.task.push_str(name);
+    out.classes = classes;
+    copy_rows(&c.had_w, &mut out.had_w);
+    copy_rows(&c.had_b, &mut out.had_b);
+    copy_rows(&c.norm_w, &mut out.norm_w);
+    copy_rows(&c.norm_b, &mut out.norm_b);
+    out.pooler_w.clear();
+    out.pooler_w.extend_from_slice(&c.pooler_w);
+    out.pooler_b.clear();
+    out.pooler_b.extend_from_slice(&c.pooler_b);
+    out.cls_w.clear();
+    out.cls_w.extend_from_slice(&c.cls_w);
+    out.cls_b.clear();
+    out.cls_b.extend_from_slice(&c.cls_b);
+    let row_count = cur.u16()?;
+    for _ in 0..row_count {
+        let fam = cur.u8()?;
+        let layer = cur.u16()? as usize;
+        let len = cur.u32()? as usize;
+        let want = match fam {
+            FAM_HAD_W | FAM_HAD_B | FAM_NORM_W | FAM_NORM_B => {
+                if layer >= geom.layers {
+                    bail!("tenant '{name}': row layer {layer} outside 0..{}", geom.layers);
+                }
+                geom.hidden
+            }
+            FAM_POOLER_W => geom.hidden * geom.hidden,
+            FAM_POOLER_B => geom.hidden,
+            FAM_CLS_W => geom.hidden * geom.classes,
+            FAM_CLS_B => geom.classes,
+            _ => bail!("tenant '{name}': unknown row family {fam}"),
+        };
+        if len != want {
+            bail!("tenant '{name}': family {fam} row holds {len} scalars, want {want}");
+        }
+        let bytes = cur.take(len * 4)?;
+        let dst = match fam {
+            FAM_HAD_W => &mut out.had_w[layer],
+            FAM_HAD_B => &mut out.had_b[layer],
+            FAM_NORM_W => &mut out.norm_w[layer],
+            FAM_NORM_B => &mut out.norm_b[layer],
+            FAM_POOLER_W => &mut out.pooler_w,
+            FAM_POOLER_B => &mut out.pooler_b,
+            FAM_CLS_W => &mut out.cls_w,
+            _ => &mut out.cls_b,
+        };
+        dst.clear();
+        for c4 in bytes.chunks_exact(4) {
+            dst.push(f32::from_le_bytes(c4.try_into().unwrap()));
+        }
+    }
+    if !cur.done() {
+        bail!("tenant '{name}': {} trailing bytes in record", payload.len() - cur.pos);
+    }
+    Ok(())
+}
+
+fn encode_centroid(buf: &mut Vec<u8>, a: &TaskAdapter) {
+    push_u16(buf, a.task.len() as u16);
+    buf.extend_from_slice(a.task.as_bytes());
+    push_u32(buf, a.classes as u32);
+    for l in 0..a.had_w.len() {
+        push_f32s(buf, &a.had_w[l]);
+        push_f32s(buf, &a.had_b[l]);
+        push_f32s(buf, &a.norm_w[l]);
+        push_f32s(buf, &a.norm_b[l]);
+    }
+    push_f32s(buf, &a.pooler_w);
+    push_f32s(buf, &a.pooler_b);
+    push_f32s(buf, &a.cls_w);
+    push_f32s(buf, &a.cls_b);
+}
+
+fn decode_centroid(cur: &mut Cursor<'_>, geom: &BankGeometry) -> Result<TaskAdapter> {
+    let name_len = cur.u16()? as usize;
+    let name =
+        std::str::from_utf8(cur.take(name_len)?).context("centroid name is not UTF-8")?.to_string();
+    let classes = cur.u32()? as usize;
+    let mut row = |n: usize| -> Result<Vec<f32>> {
+        let bytes = cur.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    };
+    let mut had_w = Vec::with_capacity(geom.layers);
+    let mut had_b = Vec::with_capacity(geom.layers);
+    let mut norm_w = Vec::with_capacity(geom.layers);
+    let mut norm_b = Vec::with_capacity(geom.layers);
+    for _ in 0..geom.layers {
+        had_w.push(row(geom.hidden)?);
+        had_b.push(row(geom.hidden)?);
+        norm_w.push(row(geom.hidden)?);
+        norm_b.push(row(geom.hidden)?);
+    }
+    Ok(TaskAdapter {
+        task: name,
+        classes,
+        had_w,
+        had_b,
+        norm_w,
+        norm_b,
+        pooler_w: row(geom.hidden * geom.hidden)?,
+        pooler_b: row(geom.hidden)?,
+        cls_w: row(geom.hidden * geom.classes)?,
+        cls_b: row(geom.classes)?,
+    })
+}
+
+/// What a built bank cost versus the naive flat bank, returned by
+/// [`BankBuilder::write`] and printed by the `bank-build` CLI.
+#[derive(Debug, Clone, Copy)]
+pub struct BankSummary {
+    /// Tenant records written.
+    pub tenants: usize,
+    /// Shared centroids written.
+    pub centroids: usize,
+    /// Logical scalars a flat bank would store (sum of every tenant's
+    /// [`TaskAdapter::scalars`]).
+    pub naive_scalars: u64,
+    /// Delta scalars actually stored across all tenant records.
+    pub delta_scalars: u64,
+    /// Scalars in the shared centroid table (paid once, not per tenant).
+    pub centroid_scalars: u64,
+    /// Final file size in bytes.
+    pub file_bytes: u64,
+    /// `naive_scalars * 4` over `file_bytes` — how many times smaller the
+    /// bank file is than the flat per-tenant representation.
+    pub compression_ratio: f64,
+}
+
+/// Builds a bank file: fixed centroids up front, tenants delta-encoded
+/// as they are added, one atomic [`BankBuilder::write`] at the end.
+#[derive(Debug)]
+pub struct BankBuilder {
+    geom: BankGeometry,
+    eps: f32,
+    centroids: Vec<TaskAdapter>,
+    records: Vec<u8>,
+    tenants: usize,
+    naive_scalars: u64,
+    delta_scalars: u64,
+}
+
+impl BankBuilder {
+    /// Start a bank over `centroids` (typically cluster medoids from
+    /// `analysis::similarity::cluster_adapters`). `eps` is the
+    /// row-dedupe threshold: `0.0` drops only bitwise-equal rows (exact
+    /// reconstruction), larger values trade fidelity for compression.
+    pub fn new(geom: BankGeometry, centroids: Vec<TaskAdapter>, eps: f32) -> Result<BankBuilder> {
+        if centroids.is_empty() {
+            bail!("a bank needs at least one centroid");
+        }
+        if !(eps >= 0.0) {
+            bail!("eps must be a non-negative number, got {eps}");
+        }
+        for c in &centroids {
+            check_geometry(c, &geom)?;
+        }
+        Ok(BankBuilder {
+            geom,
+            eps,
+            centroids,
+            records: Vec::new(),
+            tenants: 0,
+            naive_scalars: 0,
+            delta_scalars: 0,
+        })
+    }
+
+    /// Delta-encode one tenant against its nearest centroid. Tenants may
+    /// repeat a name; on read, later records shadow earlier ones.
+    pub fn add_tenant(&mut self, a: &TaskAdapter) -> Result<()> {
+        check_geometry(a, &self.geom)?;
+        if a.task.len() > u16::MAX as usize {
+            bail!("tenant name '{}...' exceeds {} bytes", &a.task[..32], u16::MAX);
+        }
+        let (_, stored) = encode_tenant(&mut self.records, &self.centroids, a, self.eps);
+        self.tenants += 1;
+        self.naive_scalars += a.scalars() as u64;
+        self.delta_scalars += stored;
+        Ok(())
+    }
+
+    /// Write the bank atomically: serialize to `<path>.tmp`, `fsync`,
+    /// rename over `path`, `fsync` the directory. A crash mid-write
+    /// leaves any previous bank at `path` untouched.
+    pub fn write<P: AsRef<Path>>(&self, path: P) -> Result<BankSummary> {
+        let path = path.as_ref();
+        let mut centroid_region = Vec::new();
+        for c in &self.centroids {
+            encode_centroid(&mut centroid_region, c);
+        }
+        let sum = fnv1a_bytes(&centroid_region);
+        push_u64(&mut centroid_region, sum);
+
+        let mut header = Vec::with_capacity(HEADER_LEN);
+        header.extend_from_slice(BANK_MAGIC);
+        push_u32(&mut header, BANK_VERSION);
+        push_u32(&mut header, self.geom.layers as u32);
+        push_u32(&mut header, self.geom.hidden as u32);
+        push_u32(&mut header, self.geom.classes as u32);
+        push_u32(&mut header, self.centroids.len() as u32);
+        push_u32(&mut header, 0); // reserved
+        push_u64(&mut header, centroid_region.len() as u64);
+        let hsum = fnv1a_bytes(&header);
+        push_u64(&mut header, hsum);
+        debug_assert_eq!(header.len(), HEADER_LEN);
+
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating bank temp file {}", tmp.to_string_lossy()))?;
+            f.write_all(&header)?;
+            f.write_all(&centroid_region)?;
+            f.write_all(&self.records)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming bank into place at {}", path.display()))?;
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = File::open(if dir.as_os_str().is_empty() { Path::new(".") } else { dir })
+            {
+                let _ = d.sync_all();
+            }
+        }
+        let file_bytes = fs::metadata(path)?.len();
+        let centroid_scalars: u64 = self.centroids.iter().map(|c| c.scalars() as u64).sum();
+        Ok(BankSummary {
+            tenants: self.tenants,
+            centroids: self.centroids.len(),
+            naive_scalars: self.naive_scalars,
+            delta_scalars: self.delta_scalars,
+            centroid_scalars,
+            file_bytes,
+            compression_ratio: if file_bytes > 0 {
+                (self.naive_scalars * 4) as f64 / file_bytes as f64
+            } else {
+                0.0
+            },
+        })
+    }
+}
+
+/// An open bank file: centroids resident, tenants paged in on demand.
+///
+/// Opening validates the header and centroid checksums (hard errors —
+/// the shared tier must be intact) and scans the tenant log, stopping at
+/// the first torn or corrupt record; everything before that point is the
+/// committed state. The reader keeps the file handle for offset reads
+/// ([`BankReader::read_into`]) and crash-safe appends
+/// ([`BankReader::upsert`]).
+#[derive(Debug)]
+pub struct BankReader {
+    file: File,
+    geom: BankGeometry,
+    centroids: Vec<TaskAdapter>,
+    /// tenant name → (payload offset, payload length) of its newest record.
+    index: HashMap<String, (u64, u32)>,
+    /// Byte offset just past the last valid record (where upserts append).
+    end_of_valid: u64,
+    scratch: Vec<u8>,
+}
+
+impl BankReader {
+    /// Open and validate a bank file.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<BankReader> {
+        let path = path.as_ref();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening bank file {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+
+        let mut header = [0u8; HEADER_LEN];
+        file.read_exact(&mut header).context("bank header truncated")?;
+        if &header[..8] != BANK_MAGIC {
+            bail!("{} is not a bank file (bad magic)", path.display());
+        }
+        let stored_sum = u64::from_le_bytes(header[HEADER_LEN - 8..].try_into().unwrap());
+        if fnv1a_bytes(&header[..HEADER_LEN - 8]) != stored_sum {
+            bail!("bank header checksum mismatch in {}", path.display());
+        }
+        let mut cur = Cursor::new(&header[8..HEADER_LEN - 8]);
+        let version = cur.u32()?;
+        if version != BANK_VERSION {
+            bail!("bank version {version} unsupported (this build reads {BANK_VERSION})");
+        }
+        let geom = BankGeometry {
+            layers: cur.u32()? as usize,
+            hidden: cur.u32()? as usize,
+            classes: cur.u32()? as usize,
+        };
+        let centroid_count = cur.u32()? as usize;
+        let _reserved = cur.u32()?;
+        let region_len = u64::from_le_bytes(cur.take(8)?.try_into().unwrap()) as usize;
+        if region_len < 8 || HEADER_LEN as u64 + region_len as u64 > file_len {
+            bail!("bank centroid region length {region_len} is impossible");
+        }
+
+        let mut region = vec![0u8; region_len];
+        file.read_exact(&mut region).context("bank centroid region truncated")?;
+        let stored_sum = u64::from_le_bytes(region[region_len - 8..].try_into().unwrap());
+        if fnv1a_bytes(&region[..region_len - 8]) != stored_sum {
+            bail!("bank centroid table checksum mismatch in {}", path.display());
+        }
+        let mut cur = Cursor::new(&region[..region_len - 8]);
+        let mut centroids = Vec::with_capacity(centroid_count);
+        for _ in 0..centroid_count {
+            centroids.push(decode_centroid(&mut cur, &geom)?);
+        }
+        if !cur.done() {
+            bail!("bank centroid table carries trailing bytes");
+        }
+        if centroids.is_empty() {
+            bail!("bank holds no centroids");
+        }
+
+        // Scan the tenant append-log. Any torn/corrupt record ends the
+        // committed prefix — that is the crash-recovery semantics.
+        let tenant_start = HEADER_LEN as u64 + region_len as u64;
+        let mut index = HashMap::new();
+        let mut off = tenant_start;
+        let mut scratch = Vec::new();
+        loop {
+            let mut rec_head = [0u8; 8];
+            file.seek(SeekFrom::Start(off))?;
+            if file.read_exact(&mut rec_head).is_err() {
+                break;
+            }
+            if &rec_head[..4] != REC_MAGIC {
+                break;
+            }
+            let rec_len = u32::from_le_bytes(rec_head[4..].try_into().unwrap());
+            let total = 8u64 + rec_len as u64 + 8;
+            if off + total > file_len {
+                break;
+            }
+            if scratch.len() < rec_len as usize {
+                scratch.resize(rec_len as usize, 0);
+            }
+            if file.read_exact(&mut scratch[..rec_len as usize]).is_err() {
+                break;
+            }
+            let mut sum = [0u8; 8];
+            if file.read_exact(&mut sum).is_err() {
+                break;
+            }
+            if fnv1a_bytes(&scratch[..rec_len as usize]) != u64::from_le_bytes(sum) {
+                break;
+            }
+            // the name prefix is enough to index the record
+            let mut cur = Cursor::new(&scratch[..rec_len as usize]);
+            let name = match cur
+                .u16()
+                .and_then(|n| cur.take(n as usize))
+                .and_then(|b| std::str::from_utf8(b).context("tenant name is not UTF-8"))
+            {
+                Ok(n) => n.to_string(),
+                Err(_) => break,
+            };
+            index.insert(name, (off + 8, rec_len));
+            off += total;
+        }
+
+        Ok(BankReader { file, geom, centroids, index, end_of_valid: off, scratch })
+    }
+
+    /// The geometry the bank was built for.
+    pub fn geometry(&self) -> BankGeometry {
+        self.geom
+    }
+
+    /// Committed tenant count (after shadowing).
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Whether no tenants are committed.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Whether `name` has a committed record.
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Committed tenant names (arbitrary order).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.index.keys().map(String::as_str)
+    }
+
+    /// The resident shared centroids.
+    pub fn centroids(&self) -> &[TaskAdapter] {
+        &self.centroids
+    }
+
+    /// A correctly-shaped all-zero adapter for this bank's geometry —
+    /// the promotion scratch the hot tier reconstructs into.
+    pub fn blank_adapter(&self) -> TaskAdapter {
+        let g = &self.geom;
+        TaskAdapter {
+            task: String::new(),
+            classes: 1,
+            had_w: vec![vec![0.0; g.hidden]; g.layers],
+            had_b: vec![vec![0.0; g.hidden]; g.layers],
+            norm_w: vec![vec![0.0; g.hidden]; g.layers],
+            norm_b: vec![vec![0.0; g.hidden]; g.layers],
+            pooler_w: vec![0.0; g.hidden * g.hidden],
+            pooler_b: vec![0.0; g.hidden],
+            cls_w: vec![0.0; g.hidden * g.classes],
+            cls_b: vec![0.0; g.classes],
+        }
+    }
+
+    /// Page one tenant in: seek to its newest record, read the payload
+    /// into the reusable scratch, reconstruct centroid + deltas into
+    /// `out`. After the scratch high-water mark this allocates nothing
+    /// (vector copies only) as long as `out` is already bank-shaped.
+    pub fn read_into(&mut self, name: &str, out: &mut TaskAdapter) -> Result<()> {
+        let &(off, len) = self
+            .index
+            .get(name)
+            .with_context(|| format!("tenant '{name}' is not in the bank"))?;
+        if self.scratch.len() < len as usize {
+            self.scratch.resize(len as usize, 0);
+        }
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file
+            .read_exact(&mut self.scratch[..len as usize])
+            .context("bank tenant record vanished mid-read")?;
+        decode_tenant(&self.scratch[..len as usize], &self.geom, &self.centroids, out)
+    }
+
+    /// Append (or shadow) one tenant record, crash-safely: any torn tail
+    /// past the committed prefix is truncated away, the new record is
+    /// appended and `fsync`ed, and only then does the index move — a
+    /// crash at any byte boundary leaves the previous state readable.
+    pub fn upsert(&mut self, a: &TaskAdapter) -> Result<()> {
+        check_geometry(a, &self.geom)?;
+        let mut rec = Vec::new();
+        let (_, _stored) = encode_tenant(&mut rec, &self.centroids, a, 0.0);
+        self.file.set_len(self.end_of_valid)?;
+        self.file.seek(SeekFrom::Start(self.end_of_valid))?;
+        self.file.write_all(&rec)?;
+        self.file.sync_data()?;
+        let payload_len = rec.len() as u32 - 16;
+        self.index.insert(a.task.clone(), (self.end_of_valid + 8, payload_len));
+        self.end_of_valid += rec.len() as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_adapter(name: &str, g: &BankGeometry, fill: f32) -> TaskAdapter {
+        TaskAdapter {
+            task: name.to_string(),
+            classes: 2,
+            had_w: vec![vec![fill; g.hidden]; g.layers],
+            had_b: vec![vec![0.0; g.hidden]; g.layers],
+            norm_w: vec![vec![1.0; g.hidden]; g.layers],
+            norm_b: vec![vec![0.0; g.hidden]; g.layers],
+            pooler_w: vec![0.5; g.hidden * g.hidden],
+            pooler_b: vec![0.0; g.hidden],
+            cls_w: vec![0.25; g.hidden * g.classes],
+            cls_b: vec![0.0; g.classes],
+        }
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hadapt_bankstore_{tag}_{}.bank", std::process::id()))
+    }
+
+    #[test]
+    fn round_trips_tenants_bitwise_and_dedupes_duplicates() {
+        let g = BankGeometry { layers: 2, hidden: 4, classes: 3 };
+        let centroid = mini_adapter("centroid.0", &g, 1.0);
+        let mut b = BankBuilder::new(g, vec![centroid.clone()], 0.0).unwrap();
+
+        let dup = mini_adapter("dup", &g, 1.0); // every row == centroid
+        let mut dev = mini_adapter("dev", &g, 1.0);
+        dev.had_w[1][2] = -0.0; // deviates from the centroid's 1.0 fill
+        dev.had_b[0][3] = 0.75;
+        b.add_tenant(&dup).unwrap();
+        b.add_tenant(&dev).unwrap();
+        let path = tmp_path("roundtrip");
+        let summary = b.write(&path).unwrap();
+        assert_eq!(summary.tenants, 2);
+        // the pure duplicate stored zero delta scalars; 'dev' stored two rows
+        assert_eq!(summary.delta_scalars, 2 * g.hidden as u64);
+
+        let mut r = BankReader::open(&path).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(r.contains("dup") && r.contains("dev"));
+        let mut out = r.blank_adapter();
+        r.read_into("dup", &mut out).unwrap();
+        assert_eq!(out.task, "dup");
+        assert_eq!(out.had_w, dup.had_w);
+        assert_eq!(out.pooler_w, dup.pooler_w);
+        r.read_into("dev", &mut out).unwrap();
+        assert_eq!(out.had_w[1][2].to_bits(), (-0.0f32).to_bits(), "deltas are bitwise");
+        assert_eq!(out.had_b[0][3], 0.75);
+        assert_eq!(out.had_b[0][0], 0.0, "untouched values come from the centroid");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn upsert_shadows_and_reload_sees_the_newest_record() {
+        let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+        let centroid = mini_adapter("c", &g, 1.0);
+        let mut b = BankBuilder::new(g, vec![centroid], 0.0).unwrap();
+        b.add_tenant(&mini_adapter("t", &g, 1.0)).unwrap();
+        let path = tmp_path("upsert");
+        b.write(&path).unwrap();
+
+        let mut r = BankReader::open(&path).unwrap();
+        let mut swapped = mini_adapter("t", &g, 1.0);
+        swapped.had_b[0][1] = 9.5;
+        r.upsert(&swapped).unwrap();
+        let mut out = r.blank_adapter();
+        r.read_into("t", &mut out).unwrap();
+        assert_eq!(out.had_b[0][1], 9.5);
+
+        let mut r2 = BankReader::open(&path).unwrap();
+        assert_eq!(r2.len(), 1, "shadowed record still counts once");
+        let mut out2 = r2.blank_adapter();
+        r2.read_into("t", &mut out2).unwrap();
+        assert_eq!(out2.had_b[0][1], 9.5, "reload sees the upsert");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_headers_and_wrong_geometry() {
+        let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+        let mut b = BankBuilder::new(g, vec![mini_adapter("c", &g, 1.0)], 0.0).unwrap();
+        b.add_tenant(&mini_adapter("t", &g, 2.0)).unwrap();
+        let path = tmp_path("corrupt");
+        b.write(&path).unwrap();
+
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xff; // inside the header
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(BankReader::open(&path).is_err(), "header corruption must be fatal");
+
+        let wrong = mini_adapter("x", &BankGeometry { layers: 2, hidden: 3, classes: 2 }, 1.0);
+        let mut b2 = BankBuilder::new(g, vec![mini_adapter("c", &g, 1.0)], 0.0).unwrap();
+        assert!(b2.add_tenant(&wrong).is_err(), "geometry mismatch must be rejected");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -23,6 +23,7 @@
 //! root for the layer-by-layer design.
 
 pub mod backend;
+pub mod bankstore;
 pub mod engine;
 pub mod inventory;
 pub mod kernels;
@@ -38,14 +39,15 @@ pub mod workspace;
 pub mod xla_backend;
 
 pub use backend::{Backend, BatchAdapters, DeviceTensor, InferBatch, InferOut};
+pub use bankstore::{BankBuilder, BankGeometry, BankReader, BankSummary};
 pub use engine::{Engine, EngineStats};
 pub use kernels::PackedMat;
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
 pub use pool::{Pool, PoolStats};
 pub use serve::{
-    synthetic_adapters, AdapterBank, DirectReply, ServeReply, ServeRequest, ServeSession,
-    ServeStats, SubmitError, TaskAdapter,
+    synthetic_adapters, synthetic_tenant, AdapterBank, BankStats, DirectReply, ServeReply,
+    ServeRequest, ServeSession, ServeStats, SubmitError, TaskAdapter,
 };
 pub use server::{spawn_synthetic_server, ServerStats, SpawnOpts, WireServer};
 pub use tensor::{IntTensor, Tensor};

@@ -52,6 +52,7 @@ use crate::model::ParamStore;
 use crate::util::Rng;
 
 use super::backend::{BatchAdapters, DeviceTensor, InferBatch, InferOut};
+use super::bankstore::BankReader;
 use super::engine::Engine;
 use super::manifest::ModelInfo;
 
@@ -144,8 +145,15 @@ impl TaskAdapter {
         })
     }
 
-    /// Total scalars this adapter carries (the per-task serving cost —
-    /// compare with the backbone's millions).
+    /// **Logical** scalars this adapter serves (the paper-comparable
+    /// per-task parameter count — compare with the backbone's millions).
+    /// This is what a tenant *means*, not what it costs to hold: in a
+    /// tiered bank most of these scalars are shared centroid rows stored
+    /// once for the whole fleet, so summing `scalars()` across tenants
+    /// overstates storage. Use [`TaskAdapter::resident_bytes`] for
+    /// memory accounting and `bankstore::BankSummary` for on-disk cost —
+    /// keeping the two axes separate is what stops compression ratios
+    /// from double-counting centroid storage per tenant.
     pub fn scalars(&self) -> usize {
         self.had_w.iter().map(Vec::len).sum::<usize>()
             + self.had_b.iter().map(Vec::len).sum::<usize>()
@@ -156,6 +164,28 @@ impl TaskAdapter {
             + self.cls_w.len()
             + self.cls_b.len()
     }
+
+    /// Bytes this adapter actually occupies fully materialized in memory
+    /// (the hot-tier residency cost of one tenant).
+    pub fn resident_bytes(&self) -> usize {
+        self.scalars() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Hot/cold tier counters of an [`AdapterBank`]. In flat (store-less)
+/// banks every lookup is a hot hit; with a `bankstore` attached, a miss
+/// on the resident set faults the tenant in from disk (one promotion,
+/// plus one eviction once the hot set is full).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BankStats {
+    /// Lookups answered by the resident hot set.
+    pub hot_hits: u64,
+    /// Lookups that missed the hot set and paged a cold tenant in.
+    pub cold_faults: u64,
+    /// Tenants reconstructed (centroid + deltas) into the hot set.
+    pub promotions: u64,
+    /// Hot entries recycled to make room for a promotion.
+    pub evictions: u64,
 }
 
 /// Named per-task adapters sharing one frozen backbone. Registration is
@@ -168,6 +198,15 @@ impl TaskAdapter {
 /// registration and **stable across hot swaps** (replacement happens in
 /// place), which is what lets the wire path hold a `usize` per in-flight
 /// request instead of an owned task name.
+/// When a `bankstore` is attached ([`AdapterBank::attach_store`]), the
+/// dense `Vec` becomes the **hot tier** of a two-tier bank: an LRU set
+/// of fully materialized adapters over an on-disk fleet. A lookup that
+/// misses the hot set faults the tenant in — reconstructed centroid +
+/// delta into a recycled entry slot, in place, so the steady state over
+/// a hot-resident working set stays allocation-free. Dense indices then
+/// name *slots*, not tasks forever: an eviction reuses the slot for the
+/// promoted tenant, which is why in-flight waves pin their slots (see
+/// [`AdapterBank::resolve_pinned`]).
 #[derive(Debug)]
 pub struct AdapterBank {
     layers: usize,
@@ -175,6 +214,15 @@ pub struct AdapterBank {
     classes: usize,
     entries: Vec<TaskAdapter>,
     index: HashMap<String, usize>,
+    /// Cold tier: the on-disk bank, if attached.
+    store: Option<BankReader>,
+    /// Hot-tier capacity when a store is attached (0 = flat, unbounded).
+    hot_cap: usize,
+    /// Per-slot LRU stamps (parallel to `entries`).
+    stamps: Vec<u64>,
+    /// Monotonic LRU clock.
+    clock: u64,
+    stats: BankStats,
 }
 
 impl AdapterBank {
@@ -187,7 +235,108 @@ impl AdapterBank {
             classes,
             entries: Vec::new(),
             index: HashMap::new(),
+            store: None,
+            hot_cap: 0,
+            stamps: Vec::new(),
+            clock: 0,
+            stats: BankStats::default(),
         })
+    }
+
+    /// Attach an on-disk bank as the cold tier, capping the resident hot
+    /// set at `hot` entries. The store's geometry must match the bank's
+    /// model; already-registered entries stay resident and count against
+    /// the cap (so `hot` must cover them).
+    pub fn attach_store(&mut self, store: BankReader, hot: usize) -> Result<()> {
+        let g = store.geometry();
+        if g.layers != self.layers || g.hidden != self.hidden || g.classes != self.classes {
+            bail!(
+                "bank file geometry (layers={}, hidden={}, classes={}) does not match \
+                 the model (layers={}, hidden={}, classes={})",
+                g.layers,
+                g.hidden,
+                g.classes,
+                self.layers,
+                self.hidden,
+                self.classes
+            );
+        }
+        if hot == 0 {
+            bail!("the hot tier needs at least one slot");
+        }
+        if hot < self.entries.len() {
+            bail!(
+                "hot tier of {hot} cannot hold the {} already-registered entries",
+                self.entries.len()
+            );
+        }
+        self.store = Some(store);
+        self.hot_cap = hot;
+        Ok(())
+    }
+
+    /// Whether `task` is servable from either tier.
+    pub fn available(&self, task: &str) -> bool {
+        self.index.contains_key(task)
+            || self.store.as_ref().is_some_and(|s| s.contains(task))
+    }
+
+    /// Resolve a task to its hot-tier slot, faulting it in from the cold
+    /// tier if needed. `pinned` must return `true` for slots an open wave
+    /// already references — eviction skips those, because a gathered row
+    /// index must keep naming the same tenant until its wave runs.
+    /// Returns `None` only if the task exists in neither tier.
+    ///
+    /// The caller guarantees fewer than `hot_cap` pinned slots (the
+    /// session enforces `hot >= max_batch` at attach), so a victim
+    /// always exists. Hot hits cost a map probe and a stamp write —
+    /// no allocation; faults cost one offset read plus vector copies
+    /// into the recycled slot (in place — no allocation at high-water).
+    pub fn resolve_pinned(
+        &mut self,
+        task: &str,
+        pinned: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        if let Some(&i) = self.index.get(task) {
+            self.clock += 1;
+            self.stamps[i] = self.clock;
+            self.stats.hot_hits += 1;
+            return Some(i);
+        }
+        let store = self.store.as_mut()?;
+        if !store.contains(task) {
+            return None;
+        }
+        self.stats.cold_faults += 1;
+        let slot = if self.entries.len() < self.hot_cap {
+            // warm-up growth: materialize a fresh slot (allocates; the
+            // steady state below never takes this branch)
+            self.entries.push(store.blank_adapter());
+            self.stamps.push(0);
+            self.entries.len() - 1
+        } else {
+            // evict the least-recently-used unpinned slot (ties go to
+            // the lowest index — deterministic across runs)
+            let victim = (0..self.entries.len())
+                .filter(|&i| !pinned(i))
+                .min_by_key(|&i| self.stamps[i])?;
+            self.index.remove(&self.entries[victim].task);
+            self.stats.evictions += 1;
+            victim
+        };
+        if store.read_into(task, &mut self.entries[slot]).is_err() {
+            // the record vanished or failed to decode mid-serve; the
+            // slot now holds a half-written tenant — drop it entirely
+            // rather than serve it (its index entry was already removed
+            // or never existed)
+            self.entries[slot].task.clear();
+            return None;
+        }
+        self.stats.promotions += 1;
+        self.clock += 1;
+        self.stamps[slot] = self.clock;
+        self.index.insert(self.entries[slot].task.clone(), slot);
+        Some(slot)
     }
 
     /// Register (or replace) a task's adapter after validating its
@@ -244,11 +393,16 @@ impl AdapterBank {
                 adapter.classes
             );
         }
+        self.clock += 1;
         match self.index.get(&adapter.task) {
-            Some(&i) => self.entries[i] = adapter,
+            Some(&i) => {
+                self.entries[i] = adapter;
+                self.stamps[i] = self.clock;
+            }
             None => {
                 self.index.insert(adapter.task.clone(), self.entries.len());
                 self.entries.push(adapter);
+                self.stamps.push(self.clock);
             }
         }
         Ok(())
@@ -287,6 +441,35 @@ impl AdapterBank {
     /// Registered task names, in first-registration order.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.iter().map(|a| a.task.as_str())
+    }
+
+    /// Hot/cold tier counters. In a flat bank every lookup counts as a
+    /// hot hit and the fault/promotion/eviction counters stay zero.
+    pub fn bank_stats(&self) -> BankStats {
+        self.stats
+    }
+
+    /// Bytes resident in memory: the materialized hot entries plus (with
+    /// a store attached) the shared centroid table. Cold tenants on disk
+    /// cost nothing here — that is the point of the tiered bank.
+    pub fn resident_bytes(&self) -> u64 {
+        let hot: u64 = self.entries.iter().map(|a| a.resident_bytes() as u64).sum();
+        let centroids: u64 = self
+            .store
+            .as_ref()
+            .map(|s| s.centroids().iter().map(|c| c.resident_bytes() as u64).sum())
+            .unwrap_or(0);
+        hot + centroids
+    }
+
+    /// Distinct servable tenants across both tiers.
+    pub fn tenant_count(&self) -> usize {
+        let cold_only = self
+            .store
+            .as_ref()
+            .map(|s| s.names().filter(|n| !self.index.contains_key(*n)).count())
+            .unwrap_or(0);
+        self.entries.len() + cold_only
     }
 }
 
@@ -407,6 +590,9 @@ pub struct ServeSession<'e> {
     gather: BatchAdapters,
     /// Per-row active-class counts captured at gather time (reused).
     actives: Vec<usize>,
+    /// Per-row resolved bank slots of the queued path's current chunk
+    /// (reused; doubles as the pin set while the chunk resolves).
+    chunk_idx: Vec<usize>,
     out: InferOut,
     stats: ServeStats,
     /// The open direct wave (borrowed-submit rows already encoded into
@@ -477,6 +663,7 @@ impl<'e> ServeSession<'e> {
             attn_mask: Vec::new(),
             gather: BatchAdapters::for_model(layers, hidden, classes),
             actives: Vec::new(),
+            chunk_idx: Vec::with_capacity(max_batch),
             out: InferOut::default(),
             stats: ServeStats::default(),
             // pre-sized so a first full wave cannot grow them mid-request
@@ -499,6 +686,25 @@ impl<'e> ServeSession<'e> {
         &self.bank
     }
 
+    /// Attach an on-disk bank ([`BankReader`]) as the cold tier, capping
+    /// the resident hot set at `hot` fully materialized adapters. Both
+    /// submit paths then fault cold tenants in transparently.
+    ///
+    /// `hot` must be at least `max_batch`: an open wave pins up to
+    /// `max_batch` hot slots (a gathered row index must keep naming the
+    /// same tenant until the wave runs), and eviction needs at least one
+    /// unpinned slot left to recycle.
+    pub fn attach_store(&mut self, store: BankReader, hot: usize) -> Result<()> {
+        if hot < self.max_batch {
+            bail!(
+                "hot tier of {hot} is smaller than the wave size {} — an open wave \
+                 could pin every slot and leave nothing to evict",
+                self.max_batch
+            );
+        }
+        self.bank.attach_store(store, hot)
+    }
+
     /// Queue a request for the next micro-batch; returns its reply id.
     ///
     /// Admission control happens here, per request: unknown tasks and
@@ -507,9 +713,9 @@ impl<'e> ServeSession<'e> {
     /// it would have ridden in (the batch forward validates too, but an
     /// error there would cost every co-batched tenant its reply).
     pub fn submit(&mut self, req: ServeRequest) -> Result<u64> {
-        if !self.bank.contains(&req.task) {
+        if !self.bank.available(&req.task) {
             bail!(
-                "task '{}' has no registered adapter (have: {:?})",
+                "task '{}' has no adapter in either tier (hot: {:?})",
                 req.task,
                 self.bank.names().collect::<Vec<_>>()
             );
@@ -569,7 +775,14 @@ impl<'e> ServeSession<'e> {
         if self.direct.len() >= self.max_batch {
             return Err(SubmitError::WaveFull);
         }
-        let task_idx = self.bank.index_of(task).ok_or(SubmitError::UnknownTask)?;
+        // resolve through the tiered bank, pinning the open wave's slots
+        // so a fault's eviction can never recycle a row index an earlier
+        // submit in this wave already gathered
+        let direct = &self.direct;
+        let task_idx = self
+            .bank
+            .resolve_pinned(task, |i| direct.iter().any(|m| m.task_idx == i))
+            .ok_or(SubmitError::UnknownTask)?;
         for &t in seq_a.iter().chain(seq_b.into_iter().flatten()) {
             if t < 0 || t as usize >= self.vocab {
                 return Err(SubmitError::TokenOutOfVocab);
@@ -716,6 +929,20 @@ impl<'e> ServeSession<'e> {
         self.attn_mask.resize(b * l, 0.0);
         self.gather.clear();
         self.actives.clear();
+        // resolve every task up front (faulting cold tenants in), pinning
+        // the slots already resolved for this chunk so one row's eviction
+        // cannot recycle another row's slot mid-gather
+        let mut chunk_idx = std::mem::take(&mut self.chunk_idx);
+        chunk_idx.clear();
+        for p in chunk {
+            match self.bank.resolve_pinned(&p.req.task, |i| chunk_idx.contains(&i)) {
+                Some(idx) => chunk_idx.push(idx),
+                None => {
+                    self.chunk_idx = chunk_idx;
+                    bail!("task '{}' vanished from the bank", p.req.task);
+                }
+            }
+        }
         for i in 0..b {
             // fixed geometry: pad short batches by repeating the last
             // real request (padded rows are dropped below)
@@ -728,13 +955,15 @@ impl<'e> ServeSession<'e> {
                 &mut self.type_ids[i * l..(i + 1) * l],
                 &mut self.attn_mask[i * l..(i + 1) * l],
             );
+            let slot = chunk_idx[i.min(chunk.len() - 1)];
             let ad = self
                 .bank
-                .get(&p.req.task)
+                .by_index(slot)
                 .ok_or_else(|| anyhow!("task '{}' vanished from the bank", p.req.task))?;
             self.actives.push(ad.classes);
             gather_rows(&mut self.gather, ad);
         }
+        self.chunk_idx = chunk_idx;
         self.engine.infer(
             &self.model,
             &self.params,
@@ -816,6 +1045,72 @@ pub fn synthetic_adapters(
         adapters.push(a);
     }
     Ok(adapters)
+}
+
+/// Deterministically synthesize tenant `idx` of a Zipf-clustered fleet
+/// over `bases` (the fleet's centroid adapters, e.g. from
+/// [`synthetic_adapters`]).
+///
+/// Tenants `0..bases.len()` are the bases themselves, name verbatim —
+/// so a bank built from this fleet serves the same task names as a flat
+/// synthetic bank, which is what lets the wire smoke and fixture corpus
+/// run unchanged against a bank-backed server. Tenants beyond that are
+/// named `t{idx:06}` (predictable cold-tenant names for load drivers),
+/// Zipf-assigned to a base (popular bases collect most tenants, like
+/// production task popularity), and perturbed the way the paper says
+/// real tuning runs differ: ~3/8 are exact duplicates of their base,
+/// half deviate in a single layer's Hadamard rows, and the rest deviate
+/// in every layer — so most per-layer rows dedupe against the centroid
+/// and the redundant-layer finding becomes measurable compression.
+///
+/// Same `(bases, idx, seed)` always yields the same tenant bitwise.
+pub fn synthetic_tenant(bases: &[TaskAdapter], idx: usize, seed: u64) -> TaskAdapter {
+    assert!(!bases.is_empty(), "a fleet needs at least one base adapter");
+    if idx < bases.len() {
+        return bases[idx].clone();
+    }
+    let mut rng = Rng::new(seed ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    // Zipf base pick: weight of base r is 1/(r+1), via inverse CDF
+    let h: f64 = (0..bases.len()).map(|r| 1.0 / (r + 1) as f64).sum();
+    let u = rng.next_f32() as f64 * h;
+    let mut acc = 0.0;
+    let mut base = bases.len() - 1;
+    for r in 0..bases.len() {
+        acc += 1.0 / (r + 1) as f64;
+        if u <= acc {
+            base = r;
+            break;
+        }
+    }
+    let mut t = bases[base].clone();
+    t.task.clear();
+    use std::fmt::Write as _;
+    let _ = write!(t.task, "t{idx:06}");
+    let mix = rng.next_f32();
+    if mix < 0.375 {
+        // exact duplicate of its base: every row dedupes to zero bytes
+    } else if mix < 0.875 {
+        // single-layer deviation (the common case the redundant-layer
+        // finding predicts: most layers stay at their shared rows)
+        let li = rng.below(t.had_w.len());
+        for v in t.had_w[li].iter_mut() {
+            *v += 0.02 * rng.normal();
+        }
+        for v in t.had_b[li].iter_mut() {
+            *v += 0.02 * rng.normal();
+        }
+    } else {
+        // fully independent tune: every Hadamard row deviates
+        for li in 0..t.had_w.len() {
+            for v in t.had_w[li].iter_mut() {
+                *v += 0.02 * rng.normal();
+            }
+            for v in t.had_b[li].iter_mut() {
+                *v += 0.02 * rng.normal();
+            }
+        }
+    }
+    t
 }
 
 /// Append one task's adapter vectors as the next example's rows.

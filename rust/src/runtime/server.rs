@@ -28,6 +28,7 @@
 use std::io::{self, Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::thread::{self, JoinHandle};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -144,6 +145,13 @@ impl<'e> WireServer<'e> {
                 Err(e) => return Err(e.into()),
             };
             let _ = stream.set_nodelay(true);
+            // the idle deadline: a connection that stalls mid-frame (or
+            // holds the socket open without sending) is rejected with a
+            // typed 408 instead of parking the single serve thread forever
+            if self.limits.idle_timeout_ms > 0 {
+                let _ = stream
+                    .set_read_timeout(Some(Duration::from_millis(self.limits.idle_timeout_ms)));
+            }
             self.stats.connections += 1;
             let _ = self.handle_conn(stream);
         }
@@ -165,8 +173,13 @@ impl<'e> WireServer<'e> {
                     Ok(Some(head)) => {
                         let total = head.head_len + head.content_length;
                         if self.buf.len() < total {
-                            if self.read_more(&mut stream)? == 0 {
-                                break Gather::Fatal(WireError::TruncatedBody);
+                            match self.read_more(&mut stream) {
+                                Ok(0) => break Gather::Fatal(WireError::TruncatedBody),
+                                Ok(_) => {}
+                                Err(e) if is_timeout(&e) => {
+                                    break Gather::Fatal(WireError::IdleTimeout)
+                                }
+                                Err(e) => return Err(e),
                             }
                             continue;
                         }
@@ -193,11 +206,14 @@ impl<'e> WireServer<'e> {
                         if !self.slots.is_empty() {
                             break Gather::Flush;
                         }
-                        if self.read_more(&mut stream)? == 0 {
-                            if self.buf.is_empty() {
-                                break Gather::Eof;
+                        match self.read_more(&mut stream) {
+                            Ok(0) if self.buf.is_empty() => break Gather::Eof,
+                            Ok(0) => break Gather::Fatal(WireError::TruncatedHead),
+                            Ok(_) => {}
+                            Err(e) if is_timeout(&e) => {
+                                break Gather::Fatal(WireError::IdleTimeout)
                             }
-                            break Gather::Fatal(WireError::TruncatedHead);
+                            Err(e) => return Err(e),
                         }
                     }
                 }
@@ -316,10 +332,14 @@ impl<'e> WireServer<'e> {
     }
 
     /// Append the `/stats` snapshot: wire counters + session serve
-    /// counters + the engine's arena/pool/pack counters, flat JSON.
+    /// counters + tiered-bank counters + the engine's arena/pool/pack
+    /// counters, flat JSON. The `bank_*` keys are always present and
+    /// stay zero when no on-disk bank is attached.
     fn push_stats(&mut self) {
         let s = self.stats;
         let serve = self.session.stats();
+        let bank = self.session.bank().bank_stats();
+        let bank_resident = self.session.bank().resident_bytes();
         let engine = self.session.engine();
         let (arena_hits, arena_misses) = engine.arena_stats();
         let (packs_live, repacks) = engine.pack_stats();
@@ -343,12 +363,17 @@ impl<'e> WireServer<'e> {
             let _ = write!(
                 b,
                 "\"serve_requests\":{},\"serve_batches\":{},\"padded_rows\":{},\
+                 \"bank_hot_hits\":{},\"bank_cold_faults\":{},\"bank_promotions\":{},\
+                 \"bank_resident_bytes\":{bank_resident},\
                  \"arena_hits\":{arena_hits},\"arena_misses\":{arena_misses},\
                  \"pool_threads_spawned\":{},\"pool_jobs\":{},\"pool_wakeups\":{},\
                  \"packs_live\":{packs_live},\"repacks\":{repacks}}}",
                 serve.requests,
                 serve.batches,
                 serve.padded_rows,
+                bank.hot_hits,
+                bank.cold_faults,
+                bank.promotions,
                 pool.threads_spawned,
                 pool.jobs_dispatched,
                 pool.wakeups
@@ -376,6 +401,12 @@ impl<'e> WireServer<'e> {
             }
         }
     }
+}
+
+/// Whether a read error is the platform's read-timeout expiry (unix
+/// reports `WouldBlock`, windows `TimedOut`).
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
 }
 
 fn bump_reject(stats: &mut ServerStats, e: WireError) {
@@ -530,5 +561,34 @@ mod tests {
         assert_eq!(stats.requests, 5);
         assert_eq!(stats.replies, 1);
         assert_eq!(stats.rejects_submit, 1);
+    }
+
+    #[test]
+    fn idle_connection_gets_a_typed_408_and_the_server_keeps_serving() {
+        let mut opts = SpawnOpts::tiny(11);
+        opts.limits.idle_timeout_ms = 150;
+        let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+        // a stalled connection: half a request head, then silence past
+        // the deadline
+        let mut idle = TcpStream::connect(addr).unwrap();
+        idle.write_all(b"POST /inf").unwrap();
+        let (status, body) = read_response(&mut idle);
+        assert_eq!(status, 408, "{body}");
+        assert!(body.contains("\"error\":\"idle-timeout\""), "{body}");
+        // the deadline also closes the connection (EOF, not a hang)
+        let mut rest = Vec::new();
+        assert_eq!(idle.read_to_end(&mut rest).unwrap(), 0, "{rest:?}");
+        // the single serve thread is free again: a fresh connection is
+        // accepted and served normally
+        let mut c = TcpStream::connect(addr).unwrap();
+        let (status, body) =
+            roundtrip(&mut c, &post_infer(r#"{"task":"sst2","text_a":[5,6,7]}"#));
+        assert_eq!(status, 200, "{body}");
+        let (status, _) = roundtrip(&mut c, b"POST /shutdown HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        let stats = handle.join().unwrap().unwrap();
+        assert_eq!(stats.connections, 2);
+        assert_eq!(stats.rejects_http, 1, "the timeout lands in the http bucket");
+        assert_eq!(stats.replies, 1);
     }
 }

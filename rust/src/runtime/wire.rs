@@ -42,11 +42,17 @@ pub struct WireLimits {
     pub max_body: usize,
     /// Maximum token ids per `text_a`/`text_b` array.
     pub max_tokens: usize,
+    /// Idle-connection deadline in milliseconds: how long a connection
+    /// may sit without delivering a byte the server is waiting for
+    /// before it is closed with [`WireError::IdleTimeout`]. A stalled
+    /// client must not wedge the single-threaded wave loop. `0` disables
+    /// the deadline (tests only; production keeps one).
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for WireLimits {
     fn default() -> WireLimits {
-        WireLimits { max_head: 4096, max_body: 64 * 1024, max_tokens: 4096 }
+        WireLimits { max_head: 4096, max_body: 64 * 1024, max_tokens: 4096, idle_timeout_ms: 10_000 }
     }
 }
 
@@ -81,6 +87,9 @@ pub enum WireError {
     TruncatedHead,
     /// Connection closed before `Content-Length` bytes arrived.
     TruncatedBody,
+    /// The connection sat idle past [`WireLimits::idle_timeout_ms`]
+    /// while the server was waiting for request bytes.
+    IdleTimeout,
     /// Declared `Content-Length` exceeds [`WireLimits::max_body`].
     BodyTooLarge,
     /// No handler at the request target.
@@ -134,6 +143,7 @@ impl WireError {
             WireError::UnsupportedTransferEncoding => "unsupported-transfer-encoding",
             WireError::TruncatedHead => "truncated-head",
             WireError::TruncatedBody => "truncated-body",
+            WireError::IdleTimeout => "idle-timeout",
             WireError::BodyTooLarge => "body-too-large",
             WireError::UnknownRoute => "unknown-route",
             WireError::MethodNotAllowed => "method-not-allowed",
@@ -160,6 +170,7 @@ impl WireError {
             WireError::BodyTooLarge | WireError::TooManyTokens => (413, "Payload Too Large"),
             WireError::UnknownRoute | WireError::UnknownTask => (404, "Not Found"),
             WireError::MethodNotAllowed => (405, "Method Not Allowed"),
+            WireError::IdleTimeout => (408, "Request Timeout"),
             WireError::UnsupportedTransferEncoding => (501, "Not Implemented"),
             WireError::BadVersion => (505, "HTTP Version Not Supported"),
             WireError::Internal => (500, "Internal Server Error"),
@@ -180,6 +191,7 @@ impl WireError {
             }
             WireError::TruncatedHead => "connection closed mid-head",
             WireError::TruncatedBody => "connection closed before the declared body arrived",
+            WireError::IdleTimeout => "connection idle past the server deadline",
             WireError::BodyTooLarge => "declared content-length exceeds the body limit",
             WireError::UnknownRoute => "no handler at this path",
             WireError::MethodNotAllowed => "wrong method for this path",
@@ -214,6 +226,7 @@ impl WireError {
                 | WireError::UnsupportedTransferEncoding
                 | WireError::TruncatedHead
                 | WireError::TruncatedBody
+                | WireError::IdleTimeout
                 | WireError::BodyTooLarge
                 | WireError::Internal
         )
@@ -656,7 +669,8 @@ fn parse_decimal(v: &[u8]) -> Option<usize> {
 mod tests {
     use super::*;
 
-    const L: WireLimits = WireLimits { max_head: 256, max_body: 1024, max_tokens: 8 };
+    const L: WireLimits =
+        WireLimits { max_head: 256, max_body: 1024, max_tokens: 8, idle_timeout_ms: 0 };
 
     #[test]
     fn head_parses_incrementally() {

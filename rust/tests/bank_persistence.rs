@@ -1,0 +1,306 @@
+//! Tiered-bank persistence contracts, end to end:
+//!
+//! 1. **Tier transparency**: a session paging tenants through a small
+//!    LRU hot tier over the on-disk bank returns **bitwise** the logits
+//!    of a flat in-memory bank holding every tenant — reconstruction
+//!    (centroid + delta rows) is exact for the ε=0 encoding, and the
+//!    fault/evict machinery never leaks into the math.
+//! 2. **Compression**: a Zipf-clustered synthetic fleet (duplicates,
+//!    single-layer deviations, full tunes — the shape the paper's
+//!    redundant-layer finding predicts) stores at ≥10x below the naive
+//!    per-tenant scalar total, and cold reads reconstruct tenants
+//!    bitwise.
+//! 3. **Crash safety**: truncating an upsert at *every* byte boundary
+//!    still reloads, and always yields the last committed state; a
+//!    corrupt byte anywhere in the appended record is caught by its
+//!    checksum and falls back the same way.
+//! 4. **Determinism**: promotion/eviction order, slot assignment and the
+//!    tier counters are identical across repeated runs, and eviction
+//!    provably skips pinned slots.
+
+use std::fs;
+use std::path::PathBuf;
+
+use hadapt::model::ParamStore;
+use hadapt::runtime::{
+    synthetic_adapters, synthetic_tenant, AdapterBank, BankBuilder, BankGeometry, BankReader,
+    Engine, ServeRequest, ServeSession, TaskAdapter,
+};
+
+fn engine2() -> Engine {
+    Engine::new_with_threads("/definitely/not/a/dir", 2).unwrap()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hadapt_bankp_{}_{tag}.bank", std::process::id()))
+}
+
+/// Every float of every family as raw bits, in a fixed family order —
+/// one flat value to compare two adapters bitwise (`-0.0` vs `0.0` and
+/// exact payloads included).
+fn adapter_bits(a: &TaskAdapter) -> Vec<u32> {
+    let mut out = Vec::new();
+    for fam in [&a.had_w, &a.had_b, &a.norm_w, &a.norm_b] {
+        for row in fam.iter() {
+            out.extend(row.iter().map(|x| x.to_bits()));
+        }
+    }
+    for flat in [&a.pooler_w, &a.pooler_b, &a.cls_w, &a.cls_b] {
+        out.extend(flat.iter().map(|x| x.to_bits()));
+    }
+    out
+}
+
+fn tiny_geom(engine: &Engine) -> BankGeometry {
+    let info = engine.manifest().model("tiny").unwrap();
+    let classes = info.params[info.param_index("classifier.bias").unwrap()].shape[0];
+    BankGeometry { layers: info.layers, hidden: info.hidden, classes }
+}
+
+/// A hand-shaped adapter at an arbitrary mini geometry (no engine
+/// involved) for the byte-level crash-safety test.
+fn mini(g: &BankGeometry, name: &str, fill: f32) -> TaskAdapter {
+    TaskAdapter {
+        task: name.to_string(),
+        classes: g.classes,
+        had_w: vec![vec![fill; g.hidden]; g.layers],
+        had_b: vec![vec![fill * 0.5; g.hidden]; g.layers],
+        norm_w: vec![vec![1.0; g.hidden]; g.layers],
+        norm_b: vec![vec![0.0; g.hidden]; g.layers],
+        pooler_w: vec![fill; g.hidden * g.hidden],
+        pooler_b: vec![0.0; g.hidden],
+        cls_w: vec![fill; g.hidden * g.classes],
+        cls_b: vec![0.0; g.classes],
+    }
+}
+
+#[test]
+fn tiered_serve_is_bitwise_identical_to_a_flat_bank() {
+    let engine = engine2();
+    let seed = 71;
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let base_tasks = vec!["sst2".to_string(), "mrpc".to_string(), "rte".to_string()];
+    let bases = synthetic_adapters(&info, &store, &base_tasks, seed).unwrap();
+    let fleet: Vec<TaskAdapter> =
+        (0..12).map(|i| synthetic_tenant(&bases, i, seed)).collect();
+
+    let path = tmp("roundtrip");
+    let mut builder = BankBuilder::new(tiny_geom(&engine), bases.clone(), 0.0).unwrap();
+    for t in &fleet {
+        builder.add_tenant(t).unwrap();
+    }
+    let summary = builder.write(&path).unwrap();
+    assert_eq!(summary.tenants, fleet.len());
+
+    // 12 tenants through a 4-slot hot tier (= the wave size) vs all 12
+    // resident in a flat bank
+    let mut tiered = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    tiered.attach_store(BankReader::open(&path).unwrap(), 4).unwrap();
+    let mut flat = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    for t in &fleet {
+        flat.register_task(t.clone()).unwrap();
+    }
+
+    // three rounds over the whole fleet: every round churns the LRU, so
+    // the stream constantly mixes hot hits, faults and evictions
+    for round in 0..3usize {
+        for (i, t) in fleet.iter().enumerate() {
+            let req = ServeRequest {
+                task: t.task.clone(),
+                seq_a: (0..5 + (i + round) % 4)
+                    .map(|j| 3 + ((i * 31 + round * 7 + j * 11) % 500) as i32)
+                    .collect(),
+                seq_b: (i % 2 == 0).then(|| vec![9 + i as i32, 17, 23]),
+            };
+            tiered.submit(req.clone()).unwrap();
+            flat.submit(req).unwrap();
+        }
+        let got = tiered.run_pending().unwrap();
+        let want = flat.run_pending().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.task, w.task, "round {round}");
+            assert_eq!(g.label, w.label, "round {round} task {}", g.task);
+            let gb: Vec<u32> = g.logits.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = w.logits.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                gb, wb,
+                "round {round} task {}: paged reconstruction must be bitwise",
+                g.task
+            );
+        }
+    }
+
+    let stats = tiered.bank().bank_stats();
+    assert!(stats.cold_faults > 0, "a 4-slot tier over 12 tenants must fault");
+    assert!(stats.evictions > 0, "and recycle slots");
+    assert_eq!(stats.promotions, stats.cold_faults, "every fault promotes");
+    assert!(tiered.bank().len() <= 4, "hot tier stays capped");
+    assert_eq!(tiered.bank().tenant_count(), 12, "both tiers together serve the fleet");
+    assert!(
+        tiered.bank().resident_bytes() < flat.bank().resident_bytes(),
+        "the tiered bank must hold fewer bytes resident than the flat bank"
+    );
+    let flat_stats = flat.bank().bank_stats();
+    assert_eq!((flat_stats.cold_faults, flat_stats.evictions), (0, 0));
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn zipf_fleet_bank_compresses_at_least_10x_and_reads_back_bitwise() {
+    let engine = engine2();
+    let seed = 1234;
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let base_tasks = vec!["sst2".to_string(), "mrpc".to_string(), "rte".to_string()];
+    let bases = synthetic_adapters(&info, &store, &base_tasks, seed).unwrap();
+
+    let n = 1000usize;
+    let path = tmp("zipf");
+    let mut builder = BankBuilder::new(tiny_geom(&engine), bases.clone(), 0.0).unwrap();
+    for i in 0..n {
+        builder.add_tenant(&synthetic_tenant(&bases, i, seed)).unwrap();
+    }
+    let summary = builder.write(&path).unwrap();
+    assert_eq!(summary.tenants, n);
+    assert_eq!(
+        summary.naive_scalars,
+        (n * bases[0].scalars()) as u64,
+        "naive accounting is logical scalars × tenants"
+    );
+    assert!(
+        summary.compression_ratio >= 10.0,
+        "fleet must store <10% of the dense total, got {:.2}x over {} bytes",
+        summary.compression_ratio,
+        summary.file_bytes
+    );
+
+    // cold reads reconstruct exactly what the generator produced
+    let mut reader = BankReader::open(&path).unwrap();
+    assert_eq!(reader.len(), n);
+    for idx in [0usize, 2, 17, 500, n - 1] {
+        let want = synthetic_tenant(&bases, idx, seed);
+        let mut got = reader.blank_adapter();
+        reader.read_into(&want.task, &mut got).unwrap();
+        assert_eq!(got.task, want.task);
+        assert_eq!(got.classes, want.classes);
+        assert_eq!(adapter_bits(&got), adapter_bits(&want), "tenant {idx}");
+    }
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn torn_upsert_always_reloads_the_last_committed_state() {
+    let g = BankGeometry { layers: 2, hidden: 4, classes: 2 };
+    let base = mini(&g, "base", 1.0);
+    let mut old = mini(&g, "t1", 1.0);
+    old.had_b[1][2] = -0.75; // deviates, so the record carries delta rows
+    let path = tmp("torn_src");
+    let mut builder = BankBuilder::new(g, vec![base], 0.0).unwrap();
+    builder.add_tenant(&old).unwrap();
+    builder.write(&path).unwrap();
+
+    // shadow t1 through the reader's append path
+    let mut new = old.clone();
+    new.had_w[0][0] = 2.5;
+    new.had_b[1][2] = -0.5;
+    let len0 = fs::metadata(&path).unwrap().len() as usize;
+    {
+        let mut r = BankReader::open(&path).unwrap();
+        r.upsert(&new).unwrap();
+    }
+    let bytes = fs::read(&path).unwrap();
+    let len1 = bytes.len();
+    assert!(len1 > len0, "the upsert must append a shadowing record");
+
+    // truncate the file at every byte boundary of the appended record:
+    // reload must always succeed and always yield the last state whose
+    // record is fully on disk
+    let cut_path = tmp("torn_cut");
+    for cut in len0..=len1 {
+        fs::write(&cut_path, &bytes[..cut]).unwrap();
+        let mut r = BankReader::open(&cut_path).unwrap_or_else(|e| {
+            panic!("cut at {cut}/{len1}: reload must survive a torn tail: {e}")
+        });
+        let mut got = r.blank_adapter();
+        r.read_into("t1", &mut got).unwrap_or_else(|e| panic!("cut at {cut}: {e}"));
+        let want = if cut == len1 { &new } else { &old };
+        assert_eq!(got.task, "t1");
+        assert_eq!(adapter_bits(&got), adapter_bits(want), "cut at {cut}/{len1}");
+    }
+
+    // a flipped byte anywhere in the appended record (magic, payload or
+    // trailing checksum) is detected and the reload falls back the same
+    // way a torn tail does
+    for i in [len0 + 2, len0 + (len1 - len0) / 2, len1 - 1] {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0x40;
+        fs::write(&cut_path, &corrupt).unwrap();
+        let mut r = BankReader::open(&cut_path).unwrap();
+        let mut got = r.blank_adapter();
+        r.read_into("t1", &mut got).unwrap();
+        assert_eq!(adapter_bits(&got), adapter_bits(&old), "corrupt byte at {i}");
+    }
+    fs::remove_file(&path).ok();
+    fs::remove_file(&cut_path).ok();
+}
+
+#[test]
+fn hot_tier_promotion_and_eviction_are_deterministic() {
+    let engine = engine2();
+    let seed = 5;
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let bases = synthetic_adapters(&info, &store, &["sst2".to_string()], seed).unwrap();
+    let fleet: Vec<TaskAdapter> =
+        (0..5).map(|i| synthetic_tenant(&bases, i, seed)).collect();
+    let path = tmp("lru");
+    let mut builder = BankBuilder::new(tiny_geom(&engine), bases.clone(), 0.0).unwrap();
+    for t in &fleet {
+        builder.add_tenant(t).unwrap();
+    }
+    builder.write(&path).unwrap();
+
+    // the same access pattern through a 2-slot tier, twice: identical
+    // slot assignments, identical final hot set, identical counters
+    let run = || {
+        let mut bank = AdapterBank::for_model(&info).unwrap();
+        bank.attach_store(BankReader::open(&path).unwrap(), 2).unwrap();
+        let pattern = ["sst2", "t000001", "sst2", "t000002", "t000001", "t000002"];
+        let slots: Vec<usize> = pattern
+            .iter()
+            .map(|n| bank.resolve_pinned(n, |_| false).unwrap())
+            .collect();
+        let hot: Vec<String> = bank.names().map(str::to_string).collect();
+        (slots, hot, bank.bank_stats())
+    };
+    let (slots_a, hot_a, stats_a) = run();
+    let (slots_b, hot_b, stats_b) = run();
+    assert_eq!(slots_a, slots_b, "slot assignment must be reproducible");
+    assert_eq!(hot_a, hot_b, "final hot set must be reproducible");
+    assert_eq!(stats_a, stats_b, "tier counters must be reproducible");
+    assert_eq!(slots_a, vec![0, 1, 0, 1, 0, 1]);
+    assert_eq!(hot_a, vec!["t000001".to_string(), "t000002".to_string()]);
+    assert_eq!(stats_a.hot_hits, 2);
+    assert_eq!(stats_a.cold_faults, 4);
+    assert_eq!(stats_a.promotions, 4);
+    assert_eq!(stats_a.evictions, 2);
+
+    // eviction skips pinned slots: with the true LRU slot pinned, the
+    // fault recycles the younger slot instead
+    let mut bank = AdapterBank::for_model(&info).unwrap();
+    bank.attach_store(BankReader::open(&path).unwrap(), 2).unwrap();
+    assert_eq!(bank.resolve_pinned("t000003", |_| false).unwrap(), 0);
+    assert_eq!(bank.resolve_pinned("t000004", |_| false).unwrap(), 1);
+    let got = bank.resolve_pinned("sst2", |i| i == 0).unwrap();
+    assert_eq!(got, 1, "eviction must skip the pinned LRU slot");
+    assert!(bank.contains("t000003"), "the pinned tenant survives");
+    assert!(!bank.contains("t000004"), "the unpinned one is recycled");
+
+    // a promoted entry is the generator's tenant, bitwise
+    let slot = bank.resolve_pinned("t000002", |_| false).unwrap();
+    let got = bank.by_index(slot).unwrap();
+    assert_eq!(adapter_bits(got), adapter_bits(&fleet[2]));
+    fs::remove_file(&path).ok();
+}

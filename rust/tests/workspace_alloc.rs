@@ -34,6 +34,12 @@
 //! (deliberately alloc-free) test client — any steady-state allocation on
 //! either side of the socket trips the zero.
 //!
+//! Since PR 7 there is a fourth act: a [`ServeSession`] paging tenants
+//! from an on-disk tiered bank (`bankstore`) serves a hot-resident
+//! working set — once the working set is faulted into the LRU hot tier,
+//! steady waves are hot hits only (a map probe plus a stamp write) and
+//! must add **zero** allocations to the serve path's zero.
+//!
 //! This file intentionally holds a single test: the counting allocator is
 //! process-global, and a sibling test running on another thread would
 //! pollute the count.
@@ -43,8 +49,12 @@ use std::io::{Read as _, Write as _};
 use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+use hadapt::model::ParamStore;
 use hadapt::runtime::kernels as k;
-use hadapt::runtime::{spawn_synthetic_server, Pool, SpawnOpts, Workspace};
+use hadapt::runtime::{
+    spawn_synthetic_server, synthetic_adapters, synthetic_tenant, BankBuilder, BankGeometry,
+    BankReader, Engine, Pool, ServeSession, SpawnOpts, TaskAdapter, Workspace,
+};
 use hadapt::util::Rng;
 
 struct CountingAlloc;
@@ -493,6 +503,84 @@ fn steady_wire_loop() {
     assert_eq!(st.rejects_http + st.rejects_parse + st.rejects_submit, 4 * err_n);
 }
 
+/// One serve round over the resident working set: two-row waves through
+/// the borrowed (wire-shaped) submit path, replies drained by borrow.
+fn bank_round(session: &mut ServeSession<'_>, working: &[&str], seqs: &[&[i32]], sink: &mut f32) {
+    for (pair, sq) in working.chunks(2).zip(seqs.chunks(2)) {
+        for (task, seq) in pair.iter().zip(sq) {
+            session.submit_borrowed(task, seq, None).expect("resident submit");
+        }
+        session.run_direct().expect("resident wave");
+        for r in session.direct_replies() {
+            *sink += r.logits[0];
+        }
+    }
+}
+
+/// Serve a hot-resident working set from a tiered on-disk bank for 4
+/// rounds. Round 0 faults the working set into the hot tier (allocating:
+/// slot growth, index strings, batch-buffer warm-up); rounds 1..3 run
+/// under the counting allocator — every lookup must be a hot hit and the
+/// tiered bank must add zero allocations to the serve path's zero.
+fn steady_bank_loop() {
+    // ---- setup (untracked): fleet -> bank file -> tiered session ----
+    let engine = Engine::new_with_threads("/definitely/not/a/dir", 2).expect("engine");
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 97);
+    let bases =
+        synthetic_adapters(&info, &store, &["sst2".to_string(), "rte".to_string()], 97).unwrap();
+    let fleet: Vec<TaskAdapter> = (0..6).map(|i| synthetic_tenant(&bases, i, 97)).collect();
+    let classes = info.params[info.param_index("classifier.bias").unwrap()].shape[0];
+    let geom = BankGeometry { layers: info.layers, hidden: info.hidden, classes };
+    let path =
+        std::env::temp_dir().join(format!("hadapt_alloc_bank_{}.bank", std::process::id()));
+    let mut builder = BankBuilder::new(geom, bases, 0.0).unwrap();
+    for t in &fleet {
+        builder.add_tenant(t).unwrap();
+    }
+    builder.write(&path).unwrap();
+
+    let mut session = ServeSession::new(&engine, "tiny", &store, 2).expect("session");
+    session.attach_store(BankReader::open(&path).expect("open bank"), 4).expect("attach");
+    let working: [&str; 4] = ["sst2", "rte", "t000002", "t000003"];
+    let seqs: [&[i32]; 4] = [&[5, 6, 7], &[9, 10], &[3, 4, 5, 6], &[11]];
+    let mut sink = 0.0f32;
+
+    // round 0 (untracked): fault the whole working set in, warm buffers
+    bank_round(&mut session, &working, &seqs, &mut sink);
+    let warm = session.bank().bank_stats();
+    assert_eq!(warm.cold_faults, 4, "warm-up faults the whole working set in");
+    assert_eq!(warm.evictions, 0, "a 4-slot tier holds the 4-tenant working set");
+
+    // ---- rounds 1..3 under the counting allocator ----
+    ALLOCS.store(0, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        bank_round(&mut session, &working, &seqs, &mut sink);
+    }
+    TRACKING.store(false, Ordering::SeqCst);
+    std::hint::black_box(sink);
+
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "hot-resident tiered serve must add zero allocations to the serve path"
+    );
+    let steady = session.bank().bank_stats();
+    assert_eq!(steady.cold_faults, warm.cold_faults, "steady rounds never fault");
+    assert_eq!(steady.evictions, warm.evictions, "or evict");
+    assert_eq!(steady.hot_hits - warm.hot_hits, 12, "every steady lookup is a hot hit");
+
+    // a cold tenant still faults in after the steady phase, evicting one
+    // resident entry to make room (untracked: faults may allocate)
+    session.submit_borrowed("t000004", &[2, 3], None).expect("cold fault");
+    session.run_direct().unwrap();
+    let after = session.bank().bank_stats();
+    assert_eq!(after.cold_faults, steady.cold_faults + 1);
+    assert_eq!(after.evictions, steady.evictions + 1);
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
     // Serial pool: the original PR 3 zero-allocation contract. A serial
@@ -526,9 +614,14 @@ fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
         "eval dispatch reuses the persistent worker"
     );
 
-    // Finally, the whole serve stack through a real socket: waves of
-    // pipelined /infer requests plus the adversarial fixture corpus hold
-    // the same zero-alloc / zero-spawn / zero-repack steady state. Runs
-    // last so the kernel-level loops above see an unpolluted allocator.
+    // The whole serve stack through a real socket: waves of pipelined
+    // /infer requests plus the adversarial fixture corpus hold the same
+    // zero-alloc / zero-spawn / zero-repack steady state. Runs after the
+    // kernel-level loops so they see an unpolluted allocator.
     steady_wire_loop();
+
+    // And the tiered bank: once the working set is hot-resident, paging
+    // machinery (LRU stamps, the cold-tier index) must be invisible to
+    // the allocator.
+    steady_bank_loop();
 }

@@ -22,9 +22,16 @@ door — pull-parser nanoseconds per request body, socket-to-logits
 throughput/latency rows at wave sizes 1/8/32 through a real WireServer,
 and the serve zero-contracts re-asserted over the wire via /stats.
 
+Since PR 7 it also carries a top-level "bank" section: the tiered
+adapter bank — fleet size, on-disk compression ratio vs dense per-tenant
+storage, cold-fault p99 and the hot-hit rate of a Zipf replay, plus the
+hot-resident steady allocation counter.
+
 Zero-contracts enforced (all counters, not measurements): steady-state
-arena misses, steady-state pool spawns, and the serve and ingress paths'
-steady-state arena misses / pool spawns / repacks must all be 0.
+arena misses, steady-state pool spawns, the serve and ingress paths'
+steady-state arena misses / pool spawns / repacks, and the bank's
+hot-resident steady allocations must all be 0. The bank's compression
+ratio must be at least 10 (the tiered format's acceptance floor).
 
 Every section and key is documented in docs/BENCH_SCHEMA.md.
 
@@ -101,6 +108,13 @@ INGRESS_ROW_KEYS = {
     "p50_ms",
     "p99_ms",
     "req_per_s",
+}
+BANK_KEYS = {
+    "tenants",
+    "compression_ratio",
+    "cold_fault_us_p99",
+    "hot_hit_rate",
+    "steady_hot_allocs",
 }
 POOL_KEYS = {
     "threads",
@@ -209,6 +223,31 @@ def check_ingress(ingress):
             fail(f"ingress.{key} must be 0 (wire-ingress steady-state contract)")
 
 
+def check_bank(bank):
+    if not isinstance(bank, dict):
+        fail("'bank' must be an object")
+    if not isinstance(bank.get("provenance"), str) or not bank["provenance"]:
+        fail("bank.provenance must be a non-empty string label")
+    if not isinstance(bank.get("model"), str) or not bank["model"]:
+        fail("bank.model must name the benchmarked model")
+    missing = BANK_KEYS - set(bank)
+    if missing:
+        fail(f"bank missing keys: {sorted(missing)}")
+    for key in BANK_KEYS:
+        if not isinstance(bank[key], (int, float)):
+            fail(f"bank.{key} must be a number")
+        if bank[key] < 0:
+            fail(f"bank.{key} must be non-negative")
+    if not 0 <= bank["hot_hit_rate"] <= 1:
+        fail("bank.hot_hit_rate must be a fraction in [0, 1]")
+    # contracts, not measurements: the hot-resident steady state is
+    # allocation-free, and the tiered format must beat dense 10x
+    if bank["steady_hot_allocs"] != 0:
+        fail("bank.steady_hot_allocs must be 0 (hot-resident zero-alloc contract)")
+    if bank["compression_ratio"] < 10:
+        fail("bank.compression_ratio must be >= 10 (tiered-format acceptance floor)")
+
+
 def main(path):
     with open(path) as f:
         data = json.load(f)
@@ -223,6 +262,7 @@ def main(path):
         "pool",
         "serve",
         "ingress",
+        "bank",
     ):
         if key not in data:
             fail(f"missing top-level key '{key}'")
@@ -232,6 +272,7 @@ def main(path):
     check_pool(data["pool"])
     check_serve(data["serve"])
     check_ingress(data["ingress"])
+    check_bank(data["bank"])
     # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
         if row["arena_steady_misses"] != 0:
@@ -242,7 +283,7 @@ def main(path):
         sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
         + len(data["serve"]["rows"])
         + len(data["ingress"]["rows"])
-        + 1
+        + 2  # the pool and bank sections are one row each
     )
     print(
         f"BENCH_kernels.json schema OK ({n_rows} rows, "

@@ -13,17 +13,21 @@ script at it, and fails the build unless every assertion below holds:
     --batch on one connection) is answered in order with 200s and
     parseable logits.
 4.  /stats before vs after shows the steady-state zero-contracts hold
-    *through the socket*: zero new arena misses, thread spawns and
-    frozen-weight repacks across the whole burst, and the reject
-    counters account for exactly the non-ok fixtures.
-5.  POST /shutdown answers 200 and the server exits (the caller waits
+    *through the socket*: zero new arena misses, thread spawns,
+    frozen-weight repacks and bank cold faults across the whole burst,
+    and the reject counters account for exactly the non-ok fixtures.
+5.  With --cold-tenants (a server started with --bank): each named
+    tenant's first request faults and promotes it exactly once, and a
+    second request serves it from the hot tier with no new fault.
+6.  POST /shutdown answers 200 and the server exits (the caller waits
     on the process).
 
 Stdlib only. Exit code 0 on success, 1 with a diagnostic on any failure.
 
 Usage:
   python3 tools/wire_load.py --addr 127.0.0.1:8471 \
-      --fixtures rust/tests/fixtures/wire --requests 64 --batch 8
+      --fixtures rust/tests/fixtures/wire --requests 64 --batch 8 \
+      [--cold-tenants t000500,t000731]
 """
 
 import argparse
@@ -163,12 +167,51 @@ def happy_burst(addr, requests, batch):
     print(f"wire_load: burst OK ({served} requests in {wave_idx} waves of {batch})")
 
 
+def cold_tenant_phase(addr, cold):
+    """First touch of each cold tenant faults+promotes exactly once; the
+    second touch is a hot hit with no new fault."""
+    s_before = get_stats(addr)
+    for i, task in enumerate(cold):
+        status, body = roundtrip(addr, infer(task, [7 + i, 3, 11]))
+        if status != 200 or '"logits":[' not in body:
+            fail(f"cold tenant {task}: expected 200 with logits, got {status}: {body}")
+    s_mid = get_stats(addr)
+    faults = s_mid["bank_cold_faults"] - s_before["bank_cold_faults"]
+    promos = s_mid["bank_promotions"] - s_before["bank_promotions"]
+    if faults != len(cold) or promos != len(cold):
+        fail(
+            f"first touch of {len(cold)} cold tenants should fault+promote each "
+            f"exactly once, got faults +{faults}, promotions +{promos}"
+        )
+    for i, task in enumerate(cold):
+        status, body = roundtrip(addr, infer(task, [9 + i, 5, 13]))
+        if status != 200:
+            fail(f"hot re-touch of {task}: status {status}: {body}")
+    s_after = get_stats(addr)
+    if s_after["bank_cold_faults"] != s_mid["bank_cold_faults"]:
+        fail("re-touching promoted tenants must not fault again")
+    if s_after["bank_hot_hits"] <= s_mid["bank_hot_hits"]:
+        fail("re-touching promoted tenants must register hot hits")
+    if s_after["bank_resident_bytes"] != s_mid["bank_resident_bytes"]:
+        fail("hot re-touches must not change resident bytes")
+    print(
+        f"wire_load: bank OK ({len(cold)} cold tenants faulted+promoted once, "
+        "then served hot)"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--addr", default="127.0.0.1:8471")
     ap.add_argument("--fixtures", default="rust/tests/fixtures/wire")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument(
+        "--cold-tenants",
+        default="",
+        help="comma-separated tenant names expected to be cold in the server's "
+        "bank file: each must fault in exactly once, then serve hot",
+    )
     args = ap.parse_args()
     host, _, port = args.addr.rpartition(":")
     addr = (host, int(port))
@@ -183,7 +226,7 @@ def main():
     happy_burst(addr, args.requests, args.batch)
     s1 = get_stats(addr)
 
-    for key in ("arena_misses", "pool_threads_spawned", "repacks"):
+    for key in ("arena_misses", "pool_threads_spawned", "repacks", "bank_cold_faults"):
         delta = s1[key] - s0[key]
         if delta != 0:
             fail(f"steady-state contract broken over the wire: {key} grew by {delta}")
@@ -195,6 +238,10 @@ def main():
     replies = s1["replies"] - s0["replies"]
     if replies < args.requests + ok_n:
         fail(f"reply counter drifted: {replies} < {args.requests + ok_n}")
+
+    cold = [t for t in args.cold_tenants.split(",") if t]
+    if cold:
+        cold_tenant_phase(addr, cold)
 
     status, body = roundtrip(addr, post("/shutdown"))
     if status != 200 or '"shutting_down":true' not in body:
