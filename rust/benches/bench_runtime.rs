@@ -35,6 +35,13 @@
 //! tiered [`ServeSession`], and the hot-resident steady state proven
 //! allocation-free by this binary's own counting allocator.
 //!
+//! PR 8 adds the `overload` section: the front door deliberately offered
+//! several times its admitted capacity (deep Zipf-skewed pipelined
+//! bursts against a bounded queue and per-tenant token buckets), with
+//! SLO-honest reporting — latency percentiles over admitted replies
+//! only, goodput vs offered load, typed 429/503 counts, and an asserted
+//! zero unclassified errors.
+//!
 //! Results are also recorded to `BENCH_kernels.json` at the repo root so
 //! kernel-perf trajectory survives in-tree. Pass `--quick` for a short
 //! smoke run (CI uses this; only the tiny model, few iterations). The
@@ -185,6 +192,42 @@ fn wire_read(s: &mut std::net::TcpStream, n: usize) -> Vec<String> {
                 break;
             }
             out.push(String::from_utf8_lossy(&buf[he + 4..total]).to_string());
+            buf.drain(..total);
+            if out.len() == n {
+                return out;
+            }
+        }
+        let r = s.read(&mut chunk).unwrap();
+        assert!(r > 0, "wire bench: server closed early");
+        buf.extend_from_slice(&chunk[..r]);
+    }
+    out
+}
+
+/// Read `n` framed responses off `s`, returning each status code (the
+/// overload rows classify 200/429/503 rather than reading bodies).
+fn wire_read_statuses(s: &mut std::net::TcpStream, n: usize) -> Vec<u16> {
+    use std::io::Read as _;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 8192];
+    while out.len() < n {
+        loop {
+            let Some(he) = buf.windows(4).position(|w| w == b"\r\n\r\n") else { break };
+            let head = String::from_utf8_lossy(&buf[..he]).to_string();
+            let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+            let cl: usize = head
+                .lines()
+                .find_map(|l| {
+                    let (k, v) = l.split_once(':')?;
+                    k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+                })
+                .unwrap_or(0);
+            let total = he + 4 + cl;
+            if buf.len() < total {
+                break;
+            }
+            out.push(status);
             buf.drain(..total);
             if out.len() == n {
                 return out;
@@ -947,6 +990,114 @@ fn main() {
         bank_json.set("steady_hot_allocs", Json::num(steady_allocs as f64));
     }
 
+    // Overload rows (PR 8): deliberately offer the front door several
+    // times its admitted capacity — a Zipf-skewed burst of 48 pipelined
+    // requests per round against queue_cap 32 and a 50 rps/tenant bucket
+    // — and report *SLO-honest* numbers: latency percentiles over
+    // admitted (200) replies only, goodput next to offered load, and the
+    // typed-outcome counts (429/503). `unclassified_errors` must be 0:
+    // under overload every single request still gets a typed answer.
+    // `tools/wire_load.py --overload` overwrites these rows with a
+    // longer open-loop run against a release binary.
+    let mut overload_json = Json::obj();
+    {
+        let policy = hadapt::runtime::ServePolicy {
+            queue_cap: 32,
+            window_us: 2_000,
+            tenant_rps: 50,
+            tenant_burst: 50,
+        };
+        let mut opts = SpawnOpts::tiny(13);
+        opts.threads = threads;
+        opts.max_batch = 8;
+        opts.tasks = vec!["sst2".to_string(), "mrpc".to_string(), "rte".to_string()];
+        opts.policy = policy;
+        let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        use std::io::Write as _;
+
+        // one Zipf-skewed burst: 36 heavy-tenant requests, 6 + 6 light
+        let mut burst: Vec<u8> = Vec::new();
+        let mut mix: Vec<&str> = Vec::new();
+        for i in 0..48usize {
+            let task = match i % 8 {
+                6 => "mrpc",
+                7 => "rte",
+                _ => "sst2",
+            };
+            mix.push(task);
+            let body = wire_body(task, &[3 + (i % 29) as i32, 7, 11], None);
+            burst.extend_from_slice(&wire_post("/infer", &body));
+        }
+
+        // warm-up: a small in-budget wave per tenant
+        for task in ["sst2", "mrpc", "rte"] {
+            conn.write_all(&wire_post("/infer", &wire_body(task, &[5, 6, 7], None))).unwrap();
+        }
+        wire_read(&mut conn, 3);
+
+        let rounds = if quick { 10 } else { 30 };
+        let (mut ok, mut throttled, mut shed, mut other) = (0u64, 0u64, 0u64, 0u64);
+        let mut goodput_by_task = [0u64; 3];
+        let mut lats: Vec<f64> = Vec::new();
+        let t0 = std::time::Instant::now();
+        for _ in 0..rounds {
+            let tw = std::time::Instant::now();
+            conn.write_all(&burst).unwrap();
+            let statuses = wire_read_statuses(&mut conn, mix.len());
+            let rtt = tw.elapsed().as_secs_f64();
+            for (status, task) in statuses.iter().zip(&mix) {
+                match status {
+                    200 => {
+                        ok += 1;
+                        lats.push(rtt);
+                        let ti = ["sst2", "mrpc", "rte"].iter().position(|t| t == task);
+                        goodput_by_task[ti.unwrap()] += 1;
+                    }
+                    429 => throttled += 1,
+                    503 => shed += 1,
+                    _ => other += 1,
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        conn.write_all(&wire_post("/shutdown", "")).unwrap();
+        wire_read(&mut conn, 1);
+        handle.join().unwrap().unwrap();
+
+        let offered_rps = (rounds * mix.len()) as f64 / wall;
+        let goodput_rps = ok as f64 / wall;
+        lats.sort_by(|a, c| a.total_cmp(c));
+        let pct = |q: f64| lats[((lats.len() as f64 * q) as usize).min(lats.len() - 1)] * 1e3;
+        let (p50, p99, p999) = (pct(0.50), pct(0.99), pct(0.999));
+        // fairness over the two *equally offered* tenants (mrpc vs rte):
+        // deviation of each from their mean goodput
+        let (gm, gr) = (goodput_by_task[1] as f64, goodput_by_task[2] as f64);
+        let fair_dev = (gm - gr).abs() / ((gm + gr) / 2.0).max(1.0);
+        println!(
+            "bench {:<44} offered={offered_rps:.0}/s goodput={goodput_rps:.0}/s \
+             p50={p50:.3}ms p99={p99:.3}ms 429={throttled} 503={shed} other={other}",
+            "overload/tiny (48-deep Zipf bursts)"
+        );
+        assert_eq!(other, 0, "overload must produce typed outcomes only");
+
+        overload_json.set("provenance", Json::str("measured"));
+        overload_json.set("model", Json::str("tiny"));
+        overload_json.set("offered_rps", Json::num(offered_rps.round()));
+        overload_json.set("goodput_rps", Json::num(goodput_rps.round()));
+        ms(&mut overload_json, "p50_ms", p50);
+        ms(&mut overload_json, "p99_ms", p99);
+        ms(&mut overload_json, "p999_ms", p999);
+        overload_json.set("throttled_429", Json::num(throttled as f64));
+        overload_json.set("shed_503", Json::num(shed as f64));
+        overload_json.set("unclassified_errors", Json::num(other as f64));
+        ms(&mut overload_json, "fair_dev", fair_dev);
+        overload_json.set("window_us", Json::num(policy.window_us as f64));
+        overload_json.set("queue_cap", Json::num(policy.queue_cap as f64));
+        overload_json.set("tenant_rps", Json::num(policy.tenant_rps as f64));
+    }
+
     // record the comparison next to the repo root for the perf trajectory
     let mut out = Json::obj();
     out.set(
@@ -955,8 +1106,9 @@ fn main() {
             "generated by `cargo bench --bench bench_runtime` — PR 1 scalar kernels \
              vs blocked vs blocked+parallel vs packed+fused (native backend), plus \
              persistent-pool vs scoped dispatch latency (PR 4), multi-tenant \
-             serve-path rows (PR 5), wire-ingress rows (PR 6) and tiered \
-             adapter-bank rows (PR 7); schema in docs/BENCH_SCHEMA.md",
+             serve-path rows (PR 5), wire-ingress rows (PR 6), tiered \
+             adapter-bank rows (PR 7) and overload rows (PR 8); schema in \
+             docs/BENCH_SCHEMA.md",
         ),
     );
     out.set("provenance", Json::str("measured"));
@@ -971,6 +1123,7 @@ fn main() {
     out.set("serve", serve_json);
     out.set("ingress", ingress_json);
     out.set("bank", bank_json);
+    out.set("overload", overload_json);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(path, out.render_pretty()) {
         Ok(()) => println!("bench results recorded to {path}"),

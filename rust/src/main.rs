@@ -21,7 +21,12 @@
 //! `--tenants a,b,c` (synthetic adapters, same path as the demo) or
 //! `--bank path` + `--hot N` (page tenants from a prebuilt on-disk bank
 //! through an N-row LRU hot tier); it serves `POST /infer`, `GET /stats`,
-//! `GET /healthz` and `POST /shutdown` until shut down. `bank-build` adds
+//! `GET /healthz` and `POST /shutdown` until shut down. Its overload
+//! policy is set by `--queue-cap N` (bounded admission queue, default
+//! `4*max_batch`), `--window-us T` (deadline batching: flush a partial
+//! wave once its oldest row has waited T µs; 0 = flush as soon as the
+//! pipe drains) and `--tenant-rps R` / `--tenant-burst B` (per-tenant
+//! token buckets; 0 = no throttle). `bank-build` adds
 //! `--tenants N` (fleet size), `--bases a,b,c` (base tasks, reused as the
 //! bank's shared centroids) and `--out path`.
 
@@ -37,7 +42,7 @@ use hadapt::model::ParamStore;
 use hadapt::report::pct;
 use hadapt::runtime::{
     synthetic_adapters, synthetic_tenant, BankBuilder, BankGeometry, BankReader, Engine,
-    ServeRequest, ServeSession, TaskAdapter, WireLimits, WireServer,
+    ServePolicy, ServeRequest, ServeSession, TaskAdapter, WireLimits, WireServer,
 };
 use hadapt::train::{evaluate, load_or_pretrain};
 
@@ -103,6 +108,7 @@ fn build_config(cli: &Cli) -> Result<Config> {
             "config" | "model" | "task" | "method" | "ckpt" | "out" => {}
             "requests" | "batch" | "tasks" | "trained" if serve_demo => {}
             "addr" | "max-batch" | "tenants" | "bank" | "hot" if serve_http => {}
+            "window-us" | "queue-cap" | "tenant-rps" | "tenant-burst" if serve_http => {}
             "tenants" | "bases" if bank_build => {}
             "set" => {
                 let (kk, vv) = v
@@ -481,6 +487,31 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
     if bank_path.is_some() && cli.flag("tenants").is_some() {
         bail!("--bank and --tenants are mutually exclusive: the bank file already names its tenants");
     }
+    // Overload policy: 0 keeps the legacy behavior for each axis
+    // (drain-on-demand flush, no per-tenant throttle); the queue default
+    // gives the front door two waves of headroom beyond the one in flight.
+    let window_us: u64 = cli
+        .flag("window-us")
+        .unwrap_or("0")
+        .parse()
+        .context("--window-us wants a batching deadline in microseconds")?;
+    let queue_cap: usize = cli
+        .flag("queue-cap")
+        .map(str::parse)
+        .transpose()
+        .context("--queue-cap wants a number of queued rows")?
+        .unwrap_or(4 * max_batch);
+    let tenant_rps: u32 = cli
+        .flag("tenant-rps")
+        .unwrap_or("0")
+        .parse()
+        .context("--tenant-rps wants a per-tenant admission rate")?;
+    let tenant_burst: u32 = cli
+        .flag("tenant-burst")
+        .map(str::parse)
+        .transpose()
+        .context("--tenant-burst wants a bucket depth in requests")?
+        .unwrap_or(tenant_rps.max(1));
     let tenants: Vec<String> = cli
         .flag("tenants")
         .unwrap_or("sst2,mrpc,rte")
@@ -516,12 +547,20 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
             }
         }
     }
+    session.set_policy(ServePolicy { queue_cap, window_us, tenant_rps, tenant_burst })?;
     let listener =
         std::net::TcpListener::bind(addr).with_context(|| format!("cannot bind {addr}"))?;
     let bound = listener.local_addr()?;
     println!(
         "serve-http: model '{model}', {} tenants, wave size {max_batch}, listening on {bound}",
         session.bank().tenant_count()
+    );
+    println!(
+        "admission: queue cap {} rows, batching window {}us, tenant rate {}/s (burst {})",
+        session.queue_cap(),
+        window_us,
+        tenant_rps,
+        tenant_burst
     );
     // the load script waits for this line before sending traffic
     use std::io::Write as _;
@@ -534,14 +573,17 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
     let (_, repacks) = engine.pack_stats();
     println!(
         "serve-http done: {} connections, {} requests, {} replies, {} batches, \
-         rejects http/parse/submit {}/{}/{}",
+         rejects http/parse/submit {}/{}/{}, throttled {} shed {} window flushes {}",
         stats.connections,
         stats.requests,
         stats.replies,
         stats.batches,
         stats.rejects_http,
         stats.rejects_parse,
-        stats.rejects_submit
+        stats.rejects_submit,
+        stats.rejects_throttle,
+        stats.rejects_shed,
+        stats.window_flushes
     );
     println!(
         "engine counters at exit: arena misses {arena_misses}, threads spawned {}, \

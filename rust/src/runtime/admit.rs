@@ -1,0 +1,220 @@
+//! Per-tenant admission control: deterministic token buckets plus the
+//! weighted-round-robin weights the wave assembler reads.
+//!
+//! Overload policy for the serve path (`runtime/serve.rs`): when
+//! adapters cost ~0.033% of a model, the fleet outgrows the box long
+//! before the kernels do, and the first thing that fails is *fairness* —
+//! one hot tenant saturating the queue starves everyone else's tail.
+//! This module is the per-tenant half of the defense:
+//!
+//! * a [`TokenBucket`] per hot-tier slot, refilled by **integer**
+//!   arithmetic in micro-tokens (1 token = 1_000_000 µtok, refill =
+//!   `elapsed_us * rps` µtok) so admission decisions are exactly
+//!   reproducible from a request timestamp trace — no floats, no
+//!   platform drift. A rejected request gets back the earliest retry
+//!   time, which the wire layer surfaces as `Retry-After`.
+//! * per-slot **weights** for the session's weighted-round-robin wave
+//!   assembly (default 1 = equal shares). The bucket decides *whether* a
+//!   request enters the queue; the weight decides *how soon* its tenant's
+//!   queued rows get picked into a wave.
+//!
+//! Buckets are keyed by hot-tier slot (the same dense index the wave
+//! gather uses), so the steady admitted path costs two integer
+//! multiplies and never allocates. Slot recycling (LRU eviction
+//! promoting a new tenant into the slot) must call
+//! [`AdmissionController::reset_slot`] so the newcomer starts with a
+//! full burst instead of inheriting the evictee's debt.
+
+/// µtok per token: bucket arithmetic is integer micro-tokens.
+const MICRO: u64 = 1_000_000;
+
+/// One tenant's token bucket, in micro-tokens.
+#[derive(Debug, Clone, Copy)]
+struct TokenBucket {
+    /// Current level in µtok (capped at `burst * MICRO`).
+    micro: u64,
+    /// Timestamp (µs since the controller's epoch) of the last refill.
+    /// `u64::MAX` marks a never-touched bucket, which fills to the full
+    /// burst on first use.
+    last_us: u64,
+}
+
+const FRESH: TokenBucket = TokenBucket { micro: 0, last_us: u64::MAX };
+
+/// Deterministic per-tenant admission state for a [`super::ServeSession`].
+///
+/// `rps == 0` disables throttling entirely (every `try_admit` succeeds
+/// and the bucket vector stays empty — the legacy zero-cost path).
+#[derive(Debug, Default)]
+pub struct AdmissionController {
+    /// Refill rate, tokens (= requests) per second per tenant.
+    rps: u32,
+    /// Bucket depth in tokens.
+    burst: u32,
+    /// Per-slot buckets, parallel to the bank's hot tier.
+    buckets: Vec<TokenBucket>,
+    /// Per-slot WRR weights (empty entries read as 1).
+    weights: Vec<u32>,
+}
+
+impl AdmissionController {
+    /// Replace the rate policy and reset every bucket. `burst == 0`
+    /// resolves to `max(rps, 1)` — one second of refill, and never a
+    /// zero-capacity bucket that could deadlock admission.
+    pub fn configure(&mut self, rps: u32, burst: u32) {
+        self.rps = rps;
+        self.burst = if burst == 0 { rps.max(1) } else { burst };
+        self.buckets.clear();
+    }
+
+    /// The configured refill rate (0 = throttling disabled).
+    pub fn rps(&self) -> u32 {
+        self.rps
+    }
+
+    /// The resolved bucket depth in tokens.
+    pub fn burst(&self) -> u32 {
+        self.burst
+    }
+
+    /// Grow the per-slot state to cover `n` bank slots. Allocation
+    /// happens only when the hot tier itself grows (warmup), never on
+    /// the steady admitted path.
+    pub fn ensure_slots(&mut self, n: usize) {
+        if self.rps > 0 && self.buckets.len() < n {
+            self.buckets.resize(n, FRESH);
+        }
+    }
+
+    /// Try to take one token from slot `slot`'s bucket at `now_us`
+    /// (µs on the caller's monotonic clock). `Ok(())` admits; `Err(ms)`
+    /// rejects with the milliseconds until a token will be available
+    /// (always ≥ 1 — the `Retry-After` the wire layer reports).
+    pub fn try_admit(&mut self, slot: usize, now_us: u64) -> Result<(), u32> {
+        if self.rps == 0 {
+            return Ok(());
+        }
+        self.ensure_slots(slot + 1);
+        let cap = self.burst as u64 * MICRO;
+        let b = &mut self.buckets[slot];
+        if b.last_us == u64::MAX {
+            b.micro = cap;
+        } else {
+            let elapsed = now_us.saturating_sub(b.last_us);
+            b.micro = b.micro.saturating_add(elapsed.saturating_mul(self.rps as u64)).min(cap);
+        }
+        b.last_us = now_us;
+        if b.micro >= MICRO {
+            b.micro -= MICRO;
+            Ok(())
+        } else {
+            // deficit µtok / (rps µtok per µs) = µs until one token
+            let deficit = MICRO - b.micro;
+            let wait_us = deficit.div_ceil(self.rps as u64);
+            let wait_ms = wait_us.div_ceil(1000).max(1);
+            Err(wait_ms.min(u32::MAX as u64) as u32)
+        }
+    }
+
+    /// Reset one slot's bucket to "never touched" (full burst on first
+    /// use). The session calls this when an LRU eviction recycles the
+    /// slot for a newly promoted tenant.
+    pub fn reset_slot(&mut self, slot: usize) {
+        if let Some(b) = self.buckets.get_mut(slot) {
+            *b = FRESH;
+        }
+    }
+
+    /// The WRR weight of slot `slot` (how many rows its tenant may place
+    /// in one assembly round). Unset slots weigh 1.
+    pub fn weight(&self, slot: usize) -> u32 {
+        self.weights.get(slot).copied().unwrap_or(1).max(1)
+    }
+
+    /// Set a slot's WRR weight (`0` is clamped to 1 at read time).
+    pub fn set_weight(&mut self, slot: usize, weight: u32) {
+        if self.weights.len() <= slot {
+            self.weights.resize(slot + 1, 1);
+        }
+        self.weights[slot] = weight;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rps_admits_everything_without_state() {
+        let mut a = AdmissionController::default();
+        a.configure(0, 0);
+        for i in 0..10_000 {
+            assert_eq!(a.try_admit(i % 7, i as u64), Ok(()));
+        }
+        assert!(a.buckets.is_empty(), "disabled throttling must keep no per-slot state");
+    }
+
+    #[test]
+    fn bucket_arithmetic_is_exact_and_deterministic() {
+        // 2 rps, burst 3: first touch grants the full burst
+        let mut a = AdmissionController::default();
+        a.configure(2, 3);
+        assert_eq!(a.try_admit(0, 0), Ok(()));
+        assert_eq!(a.try_admit(0, 0), Ok(()));
+        assert_eq!(a.try_admit(0, 0), Ok(()));
+        // bucket empty; at 2 rps a token takes 500_000 µs = 500 ms
+        assert_eq!(a.try_admit(0, 0), Err(500));
+        // 250 ms later: half a token accrued, 250 ms still to wait
+        assert_eq!(a.try_admit(0, 250_000), Err(250));
+        // exactly one token at 500 ms (no drift from the failed probes —
+        // refill is absolute-time based, probes only update `last_us`)
+        assert_eq!(a.try_admit(0, 500_000), Ok(()));
+        assert_eq!(a.try_admit(0, 500_000), Err(500));
+    }
+
+    #[test]
+    fn refill_caps_at_burst_and_slots_are_independent() {
+        let mut a = AdmissionController::default();
+        a.configure(1, 2);
+        assert_eq!(a.try_admit(0, 0), Ok(()));
+        assert_eq!(a.try_admit(0, 0), Ok(()));
+        // an hour of idle refills to the 2-token cap, not 3600 tokens
+        assert_eq!(a.try_admit(0, 3_600_000_000), Ok(()));
+        assert_eq!(a.try_admit(0, 3_600_000_000), Ok(()));
+        assert_eq!(a.try_admit(0, 3_600_000_000), Err(1000));
+        // a different slot is untouched by slot 0's debt
+        assert_eq!(a.try_admit(5, 3_600_000_000), Ok(()));
+    }
+
+    #[test]
+    fn retry_after_is_at_least_one_ms() {
+        // high rate: the wait rounds up to 1 ms, never 0 (a 0 would tell
+        // the client "retry immediately" while the bucket still says no)
+        let mut a = AdmissionController::default();
+        a.configure(10_000, 1);
+        assert_eq!(a.try_admit(0, 0), Ok(()));
+        assert_eq!(a.try_admit(0, 0), Err(1));
+    }
+
+    #[test]
+    fn reset_slot_restores_a_full_burst() {
+        let mut a = AdmissionController::default();
+        a.configure(1, 1);
+        assert_eq!(a.try_admit(3, 0), Ok(()));
+        assert_eq!(a.try_admit(3, 0), Err(1000));
+        // the slot was recycled for a new tenant: full burst again
+        a.reset_slot(3);
+        assert_eq!(a.try_admit(3, 0), Ok(()));
+    }
+
+    #[test]
+    fn weights_default_to_one_and_clamp_zero() {
+        let mut a = AdmissionController::default();
+        assert_eq!(a.weight(42), 1);
+        a.set_weight(2, 5);
+        assert_eq!(a.weight(2), 5);
+        assert_eq!(a.weight(0), 1);
+        a.set_weight(2, 0);
+        assert_eq!(a.weight(2), 1, "zero weights would starve a tenant forever");
+    }
+}

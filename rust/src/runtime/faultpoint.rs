@@ -1,0 +1,138 @@
+//! Named fault-injection points for the serve path, compiled under the
+//! non-default `fault-inject` feature.
+//!
+//! Robustness claims need a way to *make* the bad thing happen: a full
+//! queue, a tenant suddenly over its rate, a connection torn mid-reply,
+//! a panic in the middle of a wave. Each site on the serve/wire path
+//! calls [`fire`] with a stable point name; with the feature off the
+//! call compiles to `false` and the branch folds away, so the production
+//! binary carries no fault-injection code at all. With the feature on
+//! (tests and benches build with it via the crate's self
+//! dev-dependency), a point fires when armed either
+//!
+//! * programmatically — [`arm`]`("serve.mid-wave-panic", 1)` fires the
+//!   point on its next `n` hits, or [`arm_always`] forever; or
+//! * by environment — `HADAPT_FAULT="point=3;other=always"` parsed on
+//!   first use, for driving the release binary from a harness.
+//!
+//! Points in the tree:
+//!
+//! | point                  | effect when fired                           |
+//! |------------------------|---------------------------------------------|
+//! | `serve.queue-full`     | submit rejects as if the queue were full    |
+//! | `admit.slow-tenant`    | submit rejects as if the bucket were empty  |
+//! | `serve.mid-wave-panic` | the wave panics before inference            |
+//! | `wire.torn-reply`      | the reply write stops halfway, then drops   |
+//!
+//! The table is process-global and mutex-guarded; integration tests that
+//! arm points run in their own test binary (`tests/fault_injection.rs`)
+//! so armed state cannot leak into unrelated parallel tests.
+
+#[cfg(feature = "fault-inject")]
+mod imp {
+    use std::sync::{Mutex, OnceLock};
+
+    /// Remaining fire count per armed point; `i64::MIN` = always.
+    type Table = Vec<(String, i64)>;
+
+    fn table() -> &'static Mutex<Table> {
+        static TABLE: OnceLock<Mutex<Table>> = OnceLock::new();
+        TABLE.get_or_init(|| {
+            let mut t = Table::new();
+            if let Ok(spec) = std::env::var("HADAPT_FAULT") {
+                for part in spec.split(';').filter(|p| !p.is_empty()) {
+                    let (name, count) = part.split_once('=').unwrap_or((part, "1"));
+                    let n = if count == "always" {
+                        i64::MIN
+                    } else {
+                        count.parse().unwrap_or(1)
+                    };
+                    t.push((name.trim().to_string(), n));
+                }
+            }
+            Mutex::new(t)
+        })
+    }
+
+    /// Whether `point` fires now (consuming one armed hit).
+    pub fn fire(point: &str) -> bool {
+        let mut t = table().lock().unwrap();
+        match t.iter_mut().find(|(n, _)| n == point) {
+            Some((_, n)) if *n == i64::MIN => true,
+            Some((_, n)) if *n > 0 => {
+                *n -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Arm `point` to fire on its next `count` hits.
+    pub fn arm(point: &str, count: i64) {
+        let mut t = table().lock().unwrap();
+        match t.iter_mut().find(|(n, _)| n == point) {
+            Some((_, n)) => *n = count,
+            None => t.push((point.to_string(), count)),
+        }
+    }
+
+    /// Arm `point` to fire on every hit until [`reset`].
+    pub fn arm_always(point: &str) {
+        arm(point, i64::MIN);
+    }
+
+    /// Disarm every point (including ones armed via `HADAPT_FAULT`).
+    pub fn reset() {
+        table().lock().unwrap().clear();
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use imp::{arm, arm_always, fire, reset};
+
+/// Whether `point` fires now. With `fault-inject` off this is a
+/// constant `false` the optimizer deletes along with the guarded branch.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn fire(_point: &str) -> bool {
+    false
+}
+
+/// No-op without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+pub fn arm(_point: &str, _count: i64) {}
+
+/// No-op without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+pub fn arm_always(_point: &str) {}
+
+/// No-op without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+pub fn reset() {}
+
+#[cfg(all(test, feature = "fault-inject"))]
+mod tests {
+    // The armed-point table is process-global, so these unit tests only
+    // touch names no serve-path site ever checks — firing them cannot
+    // perturb a server test running in a sibling thread.
+    use super::*;
+
+    #[test]
+    fn counted_arms_fire_exactly_n_times() {
+        arm("test.counted-point", 2);
+        assert!(fire("test.counted-point"));
+        assert!(fire("test.counted-point"));
+        assert!(!fire("test.counted-point"));
+        assert!(!fire("test.never-armed-point"));
+    }
+
+    #[test]
+    fn always_fires_until_rearmed_to_zero() {
+        arm_always("test.always-point");
+        for _ in 0..10 {
+            assert!(fire("test.always-point"));
+        }
+        arm("test.always-point", 0);
+        assert!(!fire("test.always-point"));
+    }
+}

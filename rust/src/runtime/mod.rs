@@ -19,12 +19,18 @@
 //! front of the session sits the wire ingress layer ([`wire`] for the
 //! std-only HTTP/1.1 + pull-JSON request grammar, [`server`] for the
 //! socket loop): a `serve-http` front door whose request path touches
-//! the heap zero times after warmup. See `ARCHITECTURE.md` at the repo
-//! root for the layer-by-layer design.
+//! the heap zero times after warmup. Overload never falls over silently:
+//! [`admit`] supplies per-tenant token buckets and fair-share weights,
+//! the session runs a bounded queue with deadline batching, and
+//! [`faultpoint`] (non-default `fault-inject` feature) lets the test
+//! suite force each failure mode and assert the typed degradation. See
+//! `ARCHITECTURE.md` at the repo root for the layer-by-layer design.
 
+pub mod admit;
 pub mod backend;
 pub mod bankstore;
 pub mod engine;
+pub mod faultpoint;
 pub mod inventory;
 pub mod kernels;
 pub mod manifest;
@@ -45,9 +51,10 @@ pub use kernels::PackedMat;
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
 pub use pool::{Pool, PoolStats};
+pub use admit::AdmissionController;
 pub use serve::{
-    synthetic_adapters, synthetic_tenant, AdapterBank, BankStats, DirectReply, ServeReply,
-    ServeRequest, ServeSession, ServeStats, SubmitError, TaskAdapter,
+    synthetic_adapters, synthetic_tenant, AdapterBank, BankStats, DirectReply, ResolveMiss,
+    ServePolicy, ServeReply, ServeRequest, ServeSession, ServeStats, SubmitError, TaskAdapter,
 };
 pub use server::{spawn_synthetic_server, ServerStats, SpawnOpts, WireServer};
 pub use tensor::{IntTensor, Tensor};

@@ -32,17 +32,31 @@
 //! counters freeze after warm-up — also pinned by the tests and recorded
 //! by `bench_runtime`'s `serve` rows).
 //!
-//! The session exposes two admission paths. [`ServeSession::submit`]
-//! takes an owned [`ServeRequest`] and queues it (the in-process API).
-//! [`ServeSession::submit_borrowed`] is the wire front door's entry: it
-//! encodes borrowed token slices **directly into the resident batch
-//! buffers**, fails with a typed `Copy` [`SubmitError`] instead of an
-//! allocating message, and its replies ([`DirectReply`]) borrow the
-//! session's output buffers — end to end, a served request touches the
-//! heap zero times after warmup.
+//! The session exposes two admission paths over **one bounded queue**.
+//! [`ServeSession::submit`] takes an owned [`ServeRequest`] (the
+//! in-process API, rich error messages). [`ServeSession::submit_borrowed`]
+//! is the wire front door's entry: it encodes borrowed token slices
+//! **directly into the resident queue buffers**, fails with a typed
+//! `Copy` [`SubmitError`] instead of an allocating message, and its
+//! replies ([`DirectReply`]) borrow the session's output buffers — end
+//! to end, a served request touches the heap zero times after warmup.
+//! Both paths validate, resolve (faulting cold tenants in) and admit at
+//! **submit time**, so a doomed request is refused before it can occupy
+//! a queue slot or poison the wave it would have ridden in.
+//!
+//! Overload behavior is governed by a [`ServePolicy`]: a hard queue cap
+//! (typed [`SubmitError::QueueFull`] — load shed, never a silent drop),
+//! per-tenant token buckets ([`super::admit`] —
+//! [`SubmitError::Throttled`] with a deterministic retry hint), a flush
+//! window (`window_us`: the wire loop flushes a wave at `max_batch` rows
+//! *or* when the oldest queued row has waited that long, whichever
+//! first), and weighted-round-robin wave assembly so one hot tenant
+//! cannot starve the tail of the queue. Because every kernel is
+//! row-local, WRR's reordering across waves never changes a request's
+//! logits — fairness is free of the bitwise-equality contract.
 
-use std::collections::{HashMap, VecDeque};
-use std::time::Instant;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -51,9 +65,11 @@ use crate::data::task_info;
 use crate::model::ParamStore;
 use crate::util::Rng;
 
+use super::admit::AdmissionController;
 use super::backend::{BatchAdapters, DeviceTensor, InferBatch, InferOut};
 use super::bankstore::BankReader;
 use super::engine::Engine;
+use super::faultpoint;
 use super::manifest::ModelInfo;
 
 /// Everything task-specific the Hadamard method trains, in serve-ready
@@ -172,6 +188,19 @@ impl TaskAdapter {
     }
 }
 
+/// Why [`AdapterBank::resolve_pinned`] could not produce a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolveMiss {
+    /// The task exists in neither tier.
+    Unknown,
+    /// Every hot slot is pinned by queued rows — no victim to evict.
+    /// Transient: retry once the queue drains (the wire layer sheds
+    /// with a 503, not a 404).
+    Busy,
+    /// The on-disk record vanished or failed its checksum mid-read.
+    Torn,
+}
+
 /// Hot/cold tier counters of an [`AdapterBank`]. In flat (store-less)
 /// banks every lookup is a hot hit; with a `bankstore` attached, a miss
 /// on the resident set faults the tenant in from disk (one promotion,
@@ -282,30 +311,30 @@ impl AdapterBank {
     }
 
     /// Resolve a task to its hot-tier slot, faulting it in from the cold
-    /// tier if needed. `pinned` must return `true` for slots an open wave
-    /// already references — eviction skips those, because a gathered row
+    /// tier if needed. `pinned` must return `true` for slots the queue
+    /// already references — eviction skips those, because a queued row's
     /// index must keep naming the same tenant until its wave runs.
-    /// Returns `None` only if the task exists in neither tier.
     ///
-    /// The caller guarantees fewer than `hot_cap` pinned slots (the
-    /// session enforces `hot >= max_batch` at attach), so a victim
-    /// always exists. Hot hits cost a map probe and a stamp write —
-    /// no allocation; faults cost one offset read plus vector copies
-    /// into the recycled slot (in place — no allocation at high-water).
+    /// Hot hits cost a map probe and a stamp write — no allocation;
+    /// faults cost one offset read plus vector copies into the recycled
+    /// slot (in place — no allocation at high-water). A miss is typed
+    /// ([`ResolveMiss`]): the caller maps "no such tenant" to a 404-class
+    /// reject and "every slot pinned" to a retryable shed, instead of
+    /// conflating the two.
     pub fn resolve_pinned(
         &mut self,
         task: &str,
         pinned: impl Fn(usize) -> bool,
-    ) -> Option<usize> {
+    ) -> Result<usize, ResolveMiss> {
         if let Some(&i) = self.index.get(task) {
             self.clock += 1;
             self.stamps[i] = self.clock;
             self.stats.hot_hits += 1;
-            return Some(i);
+            return Ok(i);
         }
-        let store = self.store.as_mut()?;
+        let store = self.store.as_mut().ok_or(ResolveMiss::Unknown)?;
         if !store.contains(task) {
-            return None;
+            return Err(ResolveMiss::Unknown);
         }
         self.stats.cold_faults += 1;
         let slot = if self.entries.len() < self.hot_cap {
@@ -319,7 +348,8 @@ impl AdapterBank {
             // the lowest index — deterministic across runs)
             let victim = (0..self.entries.len())
                 .filter(|&i| !pinned(i))
-                .min_by_key(|&i| self.stamps[i])?;
+                .min_by_key(|&i| self.stamps[i])
+                .ok_or(ResolveMiss::Busy)?;
             self.index.remove(&self.entries[victim].task);
             self.stats.evictions += 1;
             victim
@@ -330,13 +360,13 @@ impl AdapterBank {
             // rather than serve it (its index entry was already removed
             // or never existed)
             self.entries[slot].task.clear();
-            return None;
+            return Err(ResolveMiss::Torn);
         }
         self.stats.promotions += 1;
         self.clock += 1;
         self.stamps[slot] = self.clock;
         self.index.insert(self.entries[slot].task.clone(), slot);
-        Some(slot)
+        Ok(slot)
     }
 
     /// Register (or replace) a task's adapter after validating its
@@ -513,9 +543,13 @@ pub enum SubmitError {
     UnknownTask,
     /// A token id is negative or at/above the model's vocabulary size.
     TokenOutOfVocab,
-    /// The open direct wave already holds `max_batch` requests; run
-    /// [`ServeSession::run_direct`] before submitting more.
-    WaveFull,
+    /// The bounded queue is at [`ServePolicy::queue_cap`] (or every hot
+    /// slot is pinned by queued rows) — shed load, retry after a drain.
+    QueueFull,
+    /// The tenant's token bucket is empty; the payload is the
+    /// milliseconds until one token refills (the wire layer's
+    /// `Retry-After`).
+    Throttled(u32),
 }
 
 /// One direct-wave result, borrowing the session's resident buffers —
@@ -533,10 +567,14 @@ pub struct DirectReply<'a> {
     pub label: usize,
     /// Submit-to-reply latency in seconds.
     pub latency_s: f64,
+    /// Which wave of the last drain served this row (0-based). Replies
+    /// iterate in arrival order regardless; this exposes the
+    /// weighted-round-robin wave assembly for tests and tracing.
+    pub wave: u32,
 }
 
-/// A direct-wave row: request metadata held without owning any request
-/// payload (the payload went straight into the batch buffers at submit).
+/// A queued row: request metadata held without owning any request
+/// payload (the payload went straight into the queue buffers at submit).
 #[derive(Debug, Clone, Copy)]
 struct DirectMeta {
     id: u64,
@@ -547,6 +585,8 @@ struct DirectMeta {
 /// Serve-side counters (requests, batches and padding overhead).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct ServeStats {
+    /// Requests admitted into the queue.
+    pub admitted: u64,
     /// Real requests served.
     pub requests: u64,
     /// Micro-batches executed.
@@ -556,23 +596,35 @@ pub struct ServeStats {
     pub padded_rows: u64,
 }
 
-/// A pending request with its admission timestamp.
-#[derive(Debug)]
-struct Pending {
-    id: u64,
-    req: ServeRequest,
-    enqueued: Instant,
+/// The session's overload policy: queue bound, flush window and
+/// per-tenant rate. The all-zero [`Default`] reproduces the legacy
+/// behavior exactly — unbounded-feeling capacity (`2 * max_batch`),
+/// flush-on-demand, no throttling.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServePolicy {
+    /// Bounded queue capacity in rows; `0` resolves to `2 * max_batch`.
+    /// Submits past the cap get [`SubmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Flush window in µs: the wire loop flushes a short wave once the
+    /// oldest queued row has waited this long ([`ServeSession::flush_deadline`]).
+    /// `0` = flush as soon as the loop asks (legacy behavior).
+    pub window_us: u64,
+    /// Per-tenant admission rate in requests/second (token-bucket
+    /// refill); `0` disables throttling.
+    pub tenant_rps: u32,
+    /// Token-bucket depth; `0` resolves to `max(tenant_rps, 1)`.
+    pub tenant_burst: u32,
 }
 
 /// A live multi-tenant serving session: one uploaded frozen backbone, an
-/// adapter bank, a request queue and the reused batch/gather/output
-/// buffers that keep the steady-state serve loop allocation-stable.
+/// adapter bank, **one bounded request queue** and the reused
+/// batch/gather/output buffers that keep the steady-state serve loop
+/// allocation-stable.
 ///
 /// Batches always run at the fixed `[max_batch, seq]` geometry (short
-/// queues pad by repeating the last real request), so after the first
-/// batch the workspace arena stops missing and the worker pool stops
-/// spawning — the same counters the training loop pins, now on the serve
-/// path.
+/// waves pad by repeating the last real row), so after the first batch
+/// the workspace arena stops missing and the worker pool stops spawning
+/// — the same counters the training loop pins, now on the serve path.
 pub struct ServeSession<'e> {
     engine: &'e Engine,
     model: String,
@@ -582,35 +634,59 @@ pub struct ServeSession<'e> {
     vocab: usize,
     params: Vec<DeviceTensor>,
     bank: AdapterBank,
-    queue: VecDeque<Pending>,
     next_id: u64,
+    /// Overload policy as configured (zeros = legacy defaults).
+    policy: ServePolicy,
+    /// Resolved queue capacity in rows (`policy.queue_cap` or
+    /// `2 * max_batch`).
+    q_cap: usize,
+    /// Per-tenant token buckets plus the WRR weights.
+    admit: AdmissionController,
+    /// Epoch for the buckets' monotonic µs timestamps.
+    epoch: Instant,
+    /// The bounded queue: row metadata in arrival order.
+    q_meta: Vec<DirectMeta>,
+    /// Queue-resident encoded rows, `[q_cap, seq]` each.
+    q_tokens: Vec<i32>,
+    q_type_ids: Vec<i32>,
+    q_attn: Vec<f32>,
+    /// Wave assignment per queued row (`u32::MAX` = unassigned).
+    q_wave: Vec<u32>,
+    /// Per-row logits of the last drain, `[q_cap, classes]`.
+    q_logits: Vec<f32>,
+    /// The last drained rows — what [`Self::direct_replies`] iterates
+    /// (swapped with `q_meta` after a drain, buffers reused).
+    served: Vec<DirectMeta>,
+    /// Wave assignments of the last drained rows.
+    served_wave: Vec<u32>,
+    /// Queue indices of the wave being assembled (reused).
+    wave_rows: Vec<usize>,
+    /// WRR round clock with per-slot round/pick stamps: a slot's pick
+    /// count is implicitly zero whenever its round stamp is stale, so
+    /// wave assembly never clears per-slot state.
+    wrr_round: u64,
+    mark_round: Vec<u64>,
+    mark_picks: Vec<u32>,
+    /// Batch buffers at the fixed `[max_batch, seq]` geometry.
     tokens: Vec<i32>,
     type_ids: Vec<i32>,
     attn_mask: Vec<f32>,
     gather: BatchAdapters,
     /// Per-row active-class counts captured at gather time (reused).
     actives: Vec<usize>,
-    /// Per-row resolved bank slots of the queued path's current chunk
-    /// (reused; doubles as the pin set while the chunk resolves).
-    chunk_idx: Vec<usize>,
     out: InferOut,
     stats: ServeStats,
-    /// The open direct wave (borrowed-submit rows already encoded into
-    /// the batch buffers, oldest first).
-    direct: Vec<DirectMeta>,
-    /// The last *served* direct wave — what [`Self::direct_replies`]
-    /// iterates (swapped with `direct` at run time, buffers reused).
-    served: Vec<DirectMeta>,
-    /// Per-row argmax labels of the last direct wave (reused).
+    /// Per-row argmax labels of the last drain (arrival-indexed).
     labels: Vec<usize>,
-    /// Per-row latencies of the last direct wave (reused).
+    /// Per-row latencies of the last drain (arrival-indexed).
     latencies: Vec<f64>,
 }
 
 impl<'e> ServeSession<'e> {
     /// Open a session: validates `store` against the model, uploads the
     /// backbone once (resident for the session's lifetime) and sizes the
-    /// reused batch buffers for `[max_batch, seq_len]`.
+    /// reused batch buffers for `[max_batch, seq_len]`. Starts under the
+    /// legacy-exact [`ServePolicy::default`]; see [`Self::set_policy`].
     pub fn new(
         engine: &'e Engine,
         model: &str,
@@ -647,7 +723,7 @@ impl<'e> ServeSession<'e> {
             .iter()
             .map(|t| engine.upload(t))
             .collect::<Result<Vec<_>>>()?;
-        Ok(ServeSession {
+        let mut session = ServeSession {
             engine,
             model: model.to_string(),
             seq: engine.manifest().seq_len,
@@ -656,23 +732,103 @@ impl<'e> ServeSession<'e> {
             vocab,
             params,
             bank,
-            queue: VecDeque::new(),
             next_id: 0,
+            policy: ServePolicy::default(),
+            q_cap: 0,
+            admit: AdmissionController::default(),
+            epoch: Instant::now(),
+            q_meta: Vec::new(),
+            q_tokens: Vec::new(),
+            q_type_ids: Vec::new(),
+            q_attn: Vec::new(),
+            q_wave: Vec::new(),
+            q_logits: Vec::new(),
+            served: Vec::new(),
+            served_wave: Vec::new(),
+            wave_rows: Vec::with_capacity(max_batch),
+            wrr_round: 0,
+            mark_round: Vec::new(),
+            mark_picks: Vec::new(),
             tokens: Vec::new(),
             type_ids: Vec::new(),
             attn_mask: Vec::new(),
             gather: BatchAdapters::for_model(layers, hidden, classes),
             actives: Vec::new(),
-            chunk_idx: Vec::with_capacity(max_batch),
             out: InferOut::default(),
             stats: ServeStats::default(),
-            // pre-sized so a first full wave cannot grow them mid-request
-            // (the wire alloc test tracks from request 2 onward)
-            direct: Vec::with_capacity(max_batch),
-            served: Vec::with_capacity(max_batch),
-            labels: Vec::with_capacity(max_batch),
-            latencies: Vec::with_capacity(max_batch),
-        })
+            labels: Vec::new(),
+            latencies: Vec::new(),
+        };
+        session.set_policy(ServePolicy::default())?;
+        Ok(session)
+    }
+
+    /// Replace the session's overload policy. Only legal on an empty
+    /// queue (queued rows were admitted under the old policy's cap and
+    /// buckets — re-shaping the queue under them would tear the buffers).
+    ///
+    /// Sizes every queue buffer up front so the steady admitted path
+    /// never grows a `Vec` — the zero-allocation contract the wire alloc
+    /// test pins covers submits at any queue depth up to the cap.
+    pub fn set_policy(&mut self, policy: ServePolicy) -> Result<()> {
+        if !self.q_meta.is_empty() {
+            bail!(
+                "cannot replace the serve policy with {} row(s) queued — drain first",
+                self.q_meta.len()
+            );
+        }
+        self.policy = policy;
+        self.q_cap = if policy.queue_cap == 0 {
+            2 * self.max_batch
+        } else {
+            policy.queue_cap
+        };
+        let (b, l, c, cap) = (self.max_batch, self.seq, self.classes, self.q_cap);
+        self.q_tokens.resize(cap * l, 0);
+        self.q_type_ids.resize(cap * l, 0);
+        self.q_attn.resize(cap * l, 0.0);
+        self.q_logits.resize(cap * c, 0.0);
+        self.q_meta.reserve(cap);
+        self.q_wave.reserve(cap);
+        self.served.reserve(cap);
+        self.served_wave.reserve(cap);
+        self.labels.reserve(cap);
+        self.latencies.reserve(cap);
+        self.tokens.resize(b * l, 0);
+        self.type_ids.resize(b * l, 0);
+        self.attn_mask.resize(b * l, 0.0);
+        self.admit.configure(policy.tenant_rps, policy.tenant_burst);
+        self.admit.ensure_slots(self.bank.len());
+        Ok(())
+    }
+
+    /// The session's active overload policy (as configured — zeros mean
+    /// the documented defaults).
+    pub fn policy(&self) -> ServePolicy {
+        self.policy
+    }
+
+    /// The resolved queue capacity in rows.
+    pub fn queue_cap(&self) -> usize {
+        self.q_cap
+    }
+
+    /// Whether the next submit would shed with
+    /// [`SubmitError::QueueFull`].
+    pub fn queue_full(&self) -> bool {
+        self.q_meta.len() >= self.q_cap
+    }
+
+    /// When the oldest queued row's flush window expires — the wire
+    /// loop's read deadline. `None` when the queue is empty or the
+    /// policy has no window (`window_us == 0`: flush whenever asked).
+    pub fn flush_deadline(&self) -> Option<Instant> {
+        if self.policy.window_us == 0 {
+            return None;
+        }
+        self.q_meta
+            .first()
+            .map(|m| m.enqueued + Duration::from_micros(self.policy.window_us))
     }
 
     /// Register (or hot-replace) a task's adapter — the vector-copy-cheap
@@ -690,14 +846,16 @@ impl<'e> ServeSession<'e> {
     /// the resident hot set at `hot` fully materialized adapters. Both
     /// submit paths then fault cold tenants in transparently.
     ///
-    /// `hot` must be at least `max_batch`: an open wave pins up to
-    /// `max_batch` hot slots (a gathered row index must keep naming the
-    /// same tenant until the wave runs), and eviction needs at least one
-    /// unpinned slot left to recycle.
+    /// `hot` must be at least `max_batch` so one full wave always fits
+    /// the hot tier. Queued rows pin their slots (a row's index must
+    /// keep naming the same tenant until its wave runs), so with many
+    /// *distinct* tenants queued the tier can still fill up — that miss
+    /// is typed ([`ResolveMiss::Busy`]) and surfaces as a retryable
+    /// [`SubmitError::QueueFull`] shed, never a wrong-tenant reply.
     pub fn attach_store(&mut self, store: BankReader, hot: usize) -> Result<()> {
         if hot < self.max_batch {
             bail!(
-                "hot tier of {hot} is smaller than the wave size {} — an open wave \
+                "hot tier of {hot} is smaller than the wave size {} — one wave \
                  could pin every slot and leave nothing to evict",
                 self.max_batch
             );
@@ -707,36 +865,43 @@ impl<'e> ServeSession<'e> {
 
     /// Queue a request for the next micro-batch; returns its reply id.
     ///
-    /// Admission control happens here, per request: unknown tasks and
-    /// out-of-vocab token ids are rejected at submit time, so one
-    /// malformed request can never poison the mixed-tenant micro-batch
-    /// it would have ridden in (the batch forward validates too, but an
-    /// error there would cost every co-batched tenant its reply).
+    /// This is the owned-request twin of [`Self::submit_borrowed`] — one
+    /// bounded queue, one admission pipeline (resolve, validate, cap,
+    /// throttle, **encode**) run at submit time, so a doomed request is
+    /// refused before it can occupy a slot or poison the wave it would
+    /// have ridden in. The only difference is ergonomics: this path
+    /// takes an owned [`ServeRequest`] and reports rejects as rich
+    /// `anyhow` messages instead of the typed `Copy` [`SubmitError`].
     pub fn submit(&mut self, req: ServeRequest) -> Result<u64> {
-        if !self.bank.available(&req.task) {
-            bail!(
+        match self.submit_borrowed(&req.task, &req.seq_a, req.seq_b.as_deref()) {
+            Ok(id) => Ok(id),
+            Err(SubmitError::UnknownTask) => bail!(
                 "task '{}' has no adapter in either tier (hot: {:?})",
                 req.task,
                 self.bank.names().collect::<Vec<_>>()
-            );
+            ),
+            Err(SubmitError::TokenOutOfVocab) => bail!(
+                "request for task '{}' carries a token id outside the model's \
+                 vocabulary (0..{})",
+                req.task,
+                self.vocab
+            ),
+            Err(SubmitError::QueueFull) => bail!(
+                "the serve queue is full ({} of {} rows) — drain with run_pending() \
+                 or raise the policy's queue_cap",
+                self.q_meta.len(),
+                self.q_cap
+            ),
+            Err(SubmitError::Throttled(ms)) => bail!(
+                "tenant '{}' is over its admission rate; retry in {ms} ms",
+                req.task
+            ),
         }
-        for &t in req.seq_a.iter().chain(req.seq_b.iter().flatten()) {
-            if t < 0 || t as usize >= self.vocab {
-                bail!(
-                    "request token id {t} outside the model's vocabulary (0..{})",
-                    self.vocab
-                );
-            }
-        }
-        let id = self.next_id;
-        self.next_id += 1;
-        self.queue.push_back(Pending { id, req, enqueued: Instant::now() });
-        Ok(id)
     }
 
     /// Requests currently queued.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.q_meta.len()
     }
 
     /// Serve counters accumulated so far.
@@ -756,135 +921,126 @@ impl<'e> ServeSession<'e> {
         self.engine
     }
 
-    /// Borrowed-slice admission for the wire path: validates the request
-    /// and encodes it **directly into the resident batch buffers** — no
-    /// owned `String`/`Vec`, no queue entry, no heap traffic after
-    /// warmup. Rows accumulate until [`Self::run_direct`]; replies are
-    /// read back with [`Self::direct_replies`].
+    /// Borrowed-slice admission for the wire path: runs the full
+    /// admission pipeline and encodes the request **directly into the
+    /// resident queue buffers** — no owned `String`/`Vec`, no heap
+    /// traffic after warmup. Rows accumulate until [`Self::run_direct`];
+    /// replies are read back with [`Self::direct_replies`].
     ///
-    /// Admission mirrors [`Self::submit`]: unknown tasks and out-of-vocab
-    /// ids are rejected per request (with a typed [`SubmitError`] instead
-    /// of an allocating message) before they can poison the mixed-tenant
-    /// wave they would ride in.
+    /// The pipeline, in order, each stage with its typed reject:
+    ///
+    /// 1. queue cap ([`SubmitError::QueueFull`] — load shed);
+    /// 2. bank resolution, faulting cold tenants in while pinning every
+    ///    queued row's slot ([`SubmitError::UnknownTask`], or `QueueFull`
+    ///    when every hot slot is pinned);
+    /// 3. token validation ([`SubmitError::TokenOutOfVocab`] — a
+    ///    malformed request must not poison the wave it would ride in);
+    /// 4. the tenant's token bucket ([`SubmitError::Throttled`] with a
+    ///    deterministic retry-after).
     pub fn submit_borrowed(
         &mut self,
         task: &str,
         seq_a: &[i32],
         seq_b: Option<&[i32]>,
     ) -> Result<u64, SubmitError> {
-        if self.direct.len() >= self.max_batch {
-            return Err(SubmitError::WaveFull);
+        if faultpoint::fire("serve.queue-full") || self.q_meta.len() >= self.q_cap {
+            return Err(SubmitError::QueueFull);
         }
-        // resolve through the tiered bank, pinning the open wave's slots
-        // so a fault's eviction can never recycle a row index an earlier
-        // submit in this wave already gathered
-        let direct = &self.direct;
-        let task_idx = self
+        // resolve through the tiered bank, pinning every queued row's
+        // slot so a fault's eviction can never recycle an index an
+        // earlier queued row still holds
+        let q_meta = &self.q_meta;
+        let promotions = self.bank.bank_stats().promotions;
+        let slot = self
             .bank
-            .resolve_pinned(task, |i| direct.iter().any(|m| m.task_idx == i))
-            .ok_or(SubmitError::UnknownTask)?;
+            .resolve_pinned(task, |i| q_meta.iter().any(|m| m.task_idx == i))
+            .map_err(|miss| match miss {
+                ResolveMiss::Unknown | ResolveMiss::Torn => SubmitError::UnknownTask,
+                ResolveMiss::Busy => SubmitError::QueueFull,
+            })?;
+        if self.bank.bank_stats().promotions != promotions {
+            // the slot was just recycled for a newly promoted tenant —
+            // it must start with a full burst, not the evictee's debt
+            self.admit.reset_slot(slot);
+        }
         for &t in seq_a.iter().chain(seq_b.into_iter().flatten()) {
             if t < 0 || t as usize >= self.vocab {
                 return Err(SubmitError::TokenOutOfVocab);
             }
         }
-        let (b, l) = (self.max_batch, self.seq);
-        self.tokens.resize(b * l, 0);
-        self.type_ids.resize(b * l, 0);
-        self.attn_mask.resize(b * l, 0.0);
-        let i = self.direct.len();
+        if faultpoint::fire("admit.slow-tenant") {
+            return Err(SubmitError::Throttled(1000));
+        }
+        let enqueued = Instant::now();
+        let now_us = enqueued.duration_since(self.epoch).as_micros() as u64;
+        self.admit.try_admit(slot, now_us).map_err(SubmitError::Throttled)?;
+        let l = self.seq;
+        let i = self.q_meta.len();
         encode_into(
             seq_a,
             seq_b,
             l,
-            &mut self.tokens[i * l..(i + 1) * l],
-            &mut self.type_ids[i * l..(i + 1) * l],
-            &mut self.attn_mask[i * l..(i + 1) * l],
+            &mut self.q_tokens[i * l..(i + 1) * l],
+            &mut self.q_type_ids[i * l..(i + 1) * l],
+            &mut self.q_attn[i * l..(i + 1) * l],
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.direct.push(DirectMeta { id, task_idx, enqueued: Instant::now() });
+        self.q_meta.push(DirectMeta { id, task_idx: slot, enqueued });
+        self.stats.admitted += 1;
         Ok(id)
     }
 
-    /// Drop an open direct wave without running it — the wire server's
-    /// post-admission failure path: if [`Self::run_direct`] errors, the
-    /// admitted rows must not leak into the next wave.
+    /// Drop every queued row without serving it — the wire server's
+    /// post-admission failure path: if a drain errors (or panics under
+    /// fault injection), the admitted rows must not leak into the next
+    /// wave.
     pub fn abort_direct(&mut self) {
-        self.direct.clear();
+        self.q_meta.clear();
+        self.q_wave.clear();
     }
 
-    /// Requests in the open (not yet run) direct wave.
+    /// Queued rows not yet drained (alias of [`Self::pending`], kept for
+    /// the wire server's vocabulary).
     pub fn direct_pending(&self) -> usize {
-        self.direct.len()
+        self.q_meta.len()
     }
 
-    /// Run the open direct wave as one padded micro-batch (fixed
-    /// `[max_batch, seq]` geometry — short waves repeat the last real
-    /// row, exactly like the queued path). Returns the number of real
-    /// requests served; results stay resident until the next wave and
-    /// are read with [`Self::direct_replies`].
+    /// Drain the queue: weighted-round-robin waves of up to `max_batch`
+    /// rows (mixed tasks welcome — adapter rows are selected per
+    /// example), each run as one padded fixed-geometry micro-batch.
+    /// Returns the number of real requests served; results stay resident
+    /// until the next drain and are read with [`Self::direct_replies`].
     pub fn run_direct(&mut self) -> Result<usize> {
-        let n = self.direct.len();
-        if n == 0 {
-            return Ok(0);
-        }
-        let (b, l) = (self.max_batch, self.seq);
-        for row in n..b {
-            repeat_row(&mut self.tokens, l, n - 1, row);
-            repeat_row(&mut self.type_ids, l, n - 1, row);
-            repeat_row(&mut self.attn_mask, l, n - 1, row);
-        }
-        self.gather.clear();
-        self.actives.clear();
-        for i in 0..b {
-            let meta = self.direct[i.min(n - 1)];
-            let ad = self.bank.by_index(meta.task_idx).ok_or_else(|| {
-                anyhow!("task index {} vanished from the bank", meta.task_idx)
-            })?;
-            self.actives.push(ad.classes);
-            gather_rows(&mut self.gather, ad);
-        }
-        self.engine.infer(
-            &self.model,
-            &self.params,
-            InferBatch {
-                b,
-                l,
-                tokens: &self.tokens,
-                type_ids: &self.type_ids,
-                attn_mask: &self.attn_mask,
-            },
-            Some(&self.gather),
-            &mut self.out,
-        )?;
-        let c = self.classes;
-        self.labels.clear();
-        self.latencies.clear();
-        for i in 0..n {
-            let row = &self.out.logits[i * c..(i + 1) * c];
-            let active = self.actives[i];
-            let mut best = 0usize;
-            let mut bestv = f32::MIN;
-            for (j, &v) in row.iter().enumerate().take(active) {
-                if v > bestv {
-                    bestv = v;
-                    best = j;
-                }
-            }
-            self.labels.push(best);
-            self.latencies.push(self.direct[i].enqueued.elapsed().as_secs_f64());
-        }
-        self.stats.requests += n as u64;
-        self.stats.batches += 1;
-        self.stats.padded_rows += (b - n) as u64;
-        std::mem::swap(&mut self.direct, &mut self.served);
-        self.direct.clear();
-        Ok(n)
+        self.drain()
     }
 
-    /// Iterate the last direct wave's replies in submit order, borrowing
-    /// the session's resident buffers (valid until the next wave runs).
+    /// Drain the queue and materialize owned replies, in arrival order.
+    pub fn run_pending(&mut self) -> Result<Vec<ServeReply>> {
+        let n = self.drain()?;
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let c = self.classes;
+        let mut replies = Vec::with_capacity(n);
+        for (i, meta) in self.served.iter().enumerate() {
+            replies.push(ServeReply {
+                id: meta.id,
+                task: self
+                    .bank
+                    .by_index(meta.task_idx)
+                    .map(|a| a.task.clone())
+                    .unwrap_or_default(),
+                logits: self.q_logits[i * c..(i + 1) * c].to_vec(),
+                label: self.labels[i],
+                latency_s: self.latencies[i],
+            });
+        }
+        Ok(replies)
+    }
+
+    /// Iterate the last drain's replies in arrival order, borrowing the
+    /// session's resident buffers (valid until the next drain).
     pub fn direct_replies(&self) -> impl Iterator<Item = DirectReply<'_>> {
         let c = self.classes;
         self.served.iter().enumerate().map(move |(i, meta)| DirectReply {
@@ -894,113 +1050,145 @@ impl<'e> ServeSession<'e> {
                 .by_index(meta.task_idx)
                 .map(|a| a.task.as_str())
                 .unwrap_or(""),
-            logits: &self.out.logits[i * c..(i + 1) * c],
+            logits: &self.q_logits[i * c..(i + 1) * c],
             label: self.labels[i],
             latency_s: self.latencies[i],
+            wave: self.served_wave[i],
         })
     }
 
-    /// Drain the queue: FIFO micro-batches of up to `max_batch` requests
-    /// (mixed tasks welcome — adapter rows are selected per example),
-    /// each run as one inference-only forward. Returns every reply in
-    /// completion order.
-    pub fn run_pending(&mut self) -> Result<Vec<ServeReply>> {
-        if !self.direct.is_empty() {
-            bail!(
-                "a direct wave is open ({} request(s)); run_direct() must drain it \
-                 before the queued path can reuse the shared batch buffers",
-                self.direct.len()
-            );
+    /// Serve every queued row: assemble weighted-round-robin waves, run
+    /// each as one padded micro-batch, scatter results back to
+    /// arrival-indexed buffers, then swap the queue into the served set.
+    ///
+    /// WRR assembly walks the queue in arrival order in repeated rounds;
+    /// each round a tenant may place at most its weight
+    /// ([`AdmissionController::weight`], default 1) of rows, so a
+    /// backlog from one hot tenant cannot monopolize a wave while other
+    /// tenants wait. Every kernel downstream is row-local, so this
+    /// reordering across waves never changes a request's logits.
+    fn drain(&mut self) -> Result<usize> {
+        let n = self.q_meta.len();
+        if n == 0 {
+            return Ok(0);
         }
-        let mut replies = Vec::new();
-        while !self.queue.is_empty() {
-            let n = self.queue.len().min(self.max_batch);
-            let chunk: Vec<Pending> = self.queue.drain(..n).collect();
-            self.serve_chunk(&chunk, &mut replies)?;
+        if faultpoint::fire("serve.mid-wave-panic") {
+            panic!("fault injected: serve.mid-wave-panic");
         }
-        Ok(replies)
-    }
-
-    /// Encode, gather, run and unpack one padded micro-batch.
-    fn serve_chunk(&mut self, chunk: &[Pending], replies: &mut Vec<ServeReply>) -> Result<()> {
-        let (b, l) = (self.max_batch, self.seq);
-        self.tokens.resize(b * l, 0);
-        self.type_ids.resize(b * l, 0);
-        self.attn_mask.resize(b * l, 0.0);
-        self.gather.clear();
-        self.actives.clear();
-        // resolve every task up front (faulting cold tenants in), pinning
-        // the slots already resolved for this chunk so one row's eviction
-        // cannot recycle another row's slot mid-gather
-        let mut chunk_idx = std::mem::take(&mut self.chunk_idx);
-        chunk_idx.clear();
-        for p in chunk {
-            match self.bank.resolve_pinned(&p.req.task, |i| chunk_idx.contains(&i)) {
-                Some(idx) => chunk_idx.push(idx),
-                None => {
-                    self.chunk_idx = chunk_idx;
-                    bail!("task '{}' vanished from the bank", p.req.task);
+        let (b, l, c) = (self.max_batch, self.seq, self.classes);
+        if self.mark_round.len() < self.bank.len() {
+            self.mark_round.resize(self.bank.len(), 0);
+            self.mark_picks.resize(self.bank.len(), 0);
+        }
+        self.q_wave.clear();
+        self.q_wave.resize(n, u32::MAX);
+        self.labels.clear();
+        self.labels.resize(n, 0);
+        self.latencies.clear();
+        self.latencies.resize(n, 0.0);
+        let mut wave: u32 = 0;
+        let mut done = 0usize;
+        while done < n {
+            // assemble one wave: arrival-order rounds, ≤ weight picks
+            // per tenant per round; a round that picks nothing means no
+            // unassigned rows remain (weights are ≥ 1, so any round over
+            // a non-empty remainder picks at least its first row)
+            self.wave_rows.clear();
+            while self.wave_rows.len() < b {
+                self.wrr_round += 1;
+                let round = self.wrr_round;
+                let picked_before = self.wave_rows.len();
+                for qi in 0..n {
+                    if self.wave_rows.len() >= b {
+                        break;
+                    }
+                    if self.q_wave[qi] != u32::MAX {
+                        continue;
+                    }
+                    let slot = self.q_meta[qi].task_idx;
+                    if self.mark_round[slot] != round {
+                        self.mark_round[slot] = round;
+                        self.mark_picks[slot] = 0;
+                    }
+                    if self.mark_picks[slot] >= self.admit.weight(slot) {
+                        continue;
+                    }
+                    self.mark_picks[slot] += 1;
+                    self.q_wave[qi] = wave;
+                    self.wave_rows.push(qi);
+                }
+                if self.wave_rows.len() == picked_before {
+                    break;
                 }
             }
-        }
-        for i in 0..b {
-            // fixed geometry: pad short batches by repeating the last
-            // real request (padded rows are dropped below)
-            let p = &chunk[i.min(chunk.len() - 1)];
-            encode_into(
-                &p.req.seq_a,
-                p.req.seq_b.as_deref(),
-                l,
-                &mut self.tokens[i * l..(i + 1) * l],
-                &mut self.type_ids[i * l..(i + 1) * l],
-                &mut self.attn_mask[i * l..(i + 1) * l],
-            );
-            let slot = chunk_idx[i.min(chunk.len() - 1)];
-            let ad = self
-                .bank
-                .by_index(slot)
-                .ok_or_else(|| anyhow!("task '{}' vanished from the bank", p.req.task))?;
-            self.actives.push(ad.classes);
-            gather_rows(&mut self.gather, ad);
-        }
-        self.chunk_idx = chunk_idx;
-        self.engine.infer(
-            &self.model,
-            &self.params,
-            InferBatch {
-                b,
-                l,
-                tokens: &self.tokens,
-                type_ids: &self.type_ids,
-                attn_mask: &self.attn_mask,
-            },
-            Some(&self.gather),
-            &mut self.out,
-        )?;
-        let c = self.classes;
-        for (i, p) in chunk.iter().enumerate() {
-            let row = &self.out.logits[i * c..(i + 1) * c];
-            let active = self.actives[i];
-            let mut best = 0usize;
-            let mut bestv = f32::MIN;
-            for (j, &v) in row.iter().enumerate().take(active) {
-                if v > bestv {
-                    bestv = v;
-                    best = j;
-                }
+            let w = self.wave_rows.len();
+            debug_assert!(w > 0, "a wave over a non-empty queue picked no rows");
+            for (row, &qi) in self.wave_rows.iter().enumerate() {
+                self.tokens[row * l..(row + 1) * l]
+                    .copy_from_slice(&self.q_tokens[qi * l..(qi + 1) * l]);
+                self.type_ids[row * l..(row + 1) * l]
+                    .copy_from_slice(&self.q_type_ids[qi * l..(qi + 1) * l]);
+                self.attn_mask[row * l..(row + 1) * l]
+                    .copy_from_slice(&self.q_attn[qi * l..(qi + 1) * l]);
             }
-            replies.push(ServeReply {
-                id: p.id,
-                task: p.req.task.clone(),
-                logits: row.to_vec(),
-                label: best,
-                latency_s: p.enqueued.elapsed().as_secs_f64(),
-            });
+            for row in w..b {
+                repeat_row(&mut self.tokens, l, w - 1, row);
+                repeat_row(&mut self.type_ids, l, w - 1, row);
+                repeat_row(&mut self.attn_mask, l, w - 1, row);
+            }
+            self.gather.clear();
+            self.actives.clear();
+            for row in 0..b {
+                let meta = self.q_meta[self.wave_rows[row.min(w - 1)]];
+                let ad = self.bank.by_index(meta.task_idx).ok_or_else(|| {
+                    anyhow!("task index {} vanished from the bank", meta.task_idx)
+                })?;
+                self.actives.push(ad.classes);
+                gather_rows(&mut self.gather, ad);
+            }
+            self.engine.infer(
+                &self.model,
+                &self.params,
+                InferBatch {
+                    b,
+                    l,
+                    tokens: &self.tokens,
+                    type_ids: &self.type_ids,
+                    attn_mask: &self.attn_mask,
+                },
+                Some(&self.gather),
+                &mut self.out,
+            )?;
+            for (row, &qi) in self.wave_rows.iter().enumerate() {
+                self.q_logits[qi * c..(qi + 1) * c]
+                    .copy_from_slice(&self.out.logits[row * c..(row + 1) * c]);
+                let active = self.actives[row];
+                let mut best = 0usize;
+                let mut bestv = f32::MIN;
+                for (j, &v) in self.out.logits[row * c..(row + 1) * c]
+                    .iter()
+                    .enumerate()
+                    .take(active)
+                {
+                    if v > bestv {
+                        bestv = v;
+                        best = j;
+                    }
+                }
+                self.labels[qi] = best;
+                self.latencies[qi] = self.q_meta[qi].enqueued.elapsed().as_secs_f64();
+            }
+            self.stats.requests += w as u64;
+            self.stats.batches += 1;
+            self.stats.padded_rows += (b - w) as u64;
+            done += w;
+            wave += 1;
         }
-        self.stats.requests += chunk.len() as u64;
-        self.stats.batches += 1;
-        self.stats.padded_rows += (b - chunk.len()) as u64;
-        Ok(())
+        std::mem::swap(&mut self.q_meta, &mut self.served);
+        std::mem::swap(&mut self.q_wave, &mut self.served_wave);
+        self.q_meta.clear();
+        self.q_wave.clear();
+        Ok(n)
     }
 }
 
@@ -1285,21 +1473,84 @@ mod tests {
             assert_eq!(o.label, d.3);
         }
 
-        // a full wave rejects further admissions with a typed error
+        // a full queue sheds further admissions with a typed error —
+        // from both submit paths, which share the one bounded queue
+        direct
+            .set_policy(ServePolicy { queue_cap: 3, ..ServePolicy::default() })
+            .unwrap();
         for _ in 0..3 {
             direct.submit_borrowed("sst2", &[5], None).unwrap();
         }
+        assert!(direct.queue_full());
         assert_eq!(
             direct.submit_borrowed("sst2", &[6], None),
-            Err(SubmitError::WaveFull)
+            Err(SubmitError::QueueFull)
         );
-        // and the queued path refuses to run over an open wave
-        direct
+        let err = direct
             .submit(ServeRequest { task: "sst2".into(), seq_a: vec![5], seq_b: None })
-            .unwrap();
-        assert!(direct.run_pending().is_err(), "open direct wave must block the queue");
-        direct.run_direct().unwrap();
-        assert!(direct.run_pending().is_ok());
+            .unwrap_err();
+        assert!(err.to_string().contains("queue is full"), "{err}");
+        // policy changes are refused while rows are queued
+        assert!(direct.set_policy(ServePolicy::default()).is_err());
+        assert_eq!(direct.run_direct().unwrap(), 3);
+        assert!(direct.run_pending().unwrap().is_empty());
+        direct.set_policy(ServePolicy::default()).unwrap();
+    }
+
+    #[test]
+    fn wrr_wave_assembly_interleaves_tenants() {
+        let (engine, store) = setup();
+        let info = engine.manifest().model("tiny").unwrap().clone();
+        let tasks = vec!["sst2".to_string(), "rte".to_string()];
+        let adapters = synthetic_adapters(&info, &store, &tasks, 5).unwrap();
+        let mut s = ServeSession::new(&engine, "tiny", &store, 2).unwrap();
+        for a in adapters {
+            s.register_task(a).unwrap();
+        }
+        // three rows of one tenant then one of another, wave size 2:
+        // round-robin gives the lone rte row the first wave's second
+        // slot instead of parking it behind the sst2 backlog
+        for (t, tok) in [("sst2", 5), ("sst2", 6), ("sst2", 7), ("rte", 8)] {
+            s.submit_borrowed(t, &[tok], None).unwrap();
+        }
+        assert_eq!(s.run_direct().unwrap(), 4);
+        let waves: Vec<u32> = s.direct_replies().map(|r| r.wave).collect();
+        assert_eq!(waves, vec![0, 1, 1, 0], "rte jumps the backlog into wave 0");
+        // replies still iterate in arrival order with ids intact
+        let ids: Vec<u64> = s.direct_replies().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(s.stats().batches, 2);
+        assert_eq!(s.stats().admitted, 4);
+    }
+
+    #[test]
+    fn token_buckets_throttle_per_tenant() {
+        let (engine, store) = setup();
+        let info = engine.manifest().model("tiny").unwrap().clone();
+        let tasks = vec!["sst2".to_string(), "rte".to_string()];
+        let adapters = synthetic_adapters(&info, &store, &tasks, 5).unwrap();
+        let mut s = ServeSession::new(&engine, "tiny", &store, 2).unwrap();
+        for a in adapters {
+            s.register_task(a).unwrap();
+        }
+        s.set_policy(ServePolicy {
+            queue_cap: 8,
+            tenant_rps: 1,
+            tenant_burst: 1,
+            ..ServePolicy::default()
+        })
+        .unwrap();
+        s.submit_borrowed("sst2", &[5], None).unwrap();
+        match s.submit_borrowed("sst2", &[6], None) {
+            Err(SubmitError::Throttled(ms)) => {
+                assert!((1..=1000).contains(&ms), "retry hint {ms} ms out of range");
+            }
+            other => panic!("expected a throttle, got {other:?}"),
+        }
+        // a different tenant draws from its own bucket
+        s.submit_borrowed("rte", &[7], None).unwrap();
+        assert_eq!(s.run_direct().unwrap(), 2);
+        assert_eq!(s.stats().admitted, 2);
     }
 
     #[test]

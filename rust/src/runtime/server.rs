@@ -13,12 +13,22 @@
 //! 2. **One thread.** The [`crate::runtime::Engine`] is single-owner
 //!    (`RefCell` stats, thread-pinned workers), so the server accepts
 //!    and serves sequentially. Pipelined requests on one connection are
-//!    gathered into a direct wave and executed as a single padded
-//!    micro-batch — wire concurrency comes from batching, not threads.
-//! 3. **Every rejection is typed and accounted.** Framing, parse and
-//!    admission rejections land in separate [`ServerStats`] counters and
-//!    produce [`WireError`]-coded JSON bodies; only errors that
-//!    desynchronize the byte stream close the connection.
+//!    gathered into waves and executed as padded micro-batches — wire
+//!    concurrency comes from batching, not threads.
+//! 3. **Every rejection is typed and accounted.** Framing, parse,
+//!    admission, throttle and shed rejections land in separate
+//!    [`ServerStats`] counters and produce [`WireError`]-coded JSON
+//!    bodies; only errors that desynchronize the byte stream close the
+//!    connection.
+//! 4. **Overload degrades, never falls over.** The gather loop flushes a
+//!    wave when the oldest queued row's window expires (deadline
+//!    batching), a full queue answers typed 503s while the buffered
+//!    backlog keeps draining, a tenant over its rate gets a 429 with a
+//!    `Retry-After`, a mid-frame stall trips the progress deadline (the
+//!    slowloris guard, distinct from the between-frames idle 408), and
+//!    `POST /shutdown` drains gracefully: in-flight waves complete,
+//!    pipelined trailing requests get typed 503s, then the listener
+//!    closes.
 //!
 //! [`spawn_synthetic_server`] is the shared harness entry (tests, bench,
 //! load script): it binds an ephemeral port in the caller, then builds
@@ -28,14 +38,15 @@
 use std::io::{self, Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::model::ParamStore;
 
 use super::engine::Engine;
-use super::serve::{synthetic_adapters, ServeSession, SubmitError};
+use super::faultpoint;
+use super::serve::{synthetic_adapters, ServePolicy, ServeSession, SubmitError};
 use super::wire::{
     decode_request, parse_head, Head, Method, RejectKind, RequestScratch, ResponseBuf, Route,
     WireError, WireLimits,
@@ -51,15 +62,23 @@ pub struct ServerStats {
     pub requests: u64,
     /// 200 inference replies written.
     pub replies: u64,
-    /// Direct micro-batches executed.
+    /// Micro-batches executed on the wire path.
     pub batches: u64,
     /// Framing/routing rejections (malformed heads, unknown routes,
-    /// wrong methods, truncated streams).
+    /// wrong methods, truncated streams, deadline expiries).
     pub rejects_http: u64,
     /// Body rejections (JSON grammar or request-shape violations).
     pub rejects_parse: u64,
     /// Admission rejections (unknown task, out-of-vocab token id).
     pub rejects_submit: u64,
+    /// Tenant rate-limit rejections (typed 429s with `Retry-After`).
+    pub rejects_throttle: u64,
+    /// Load-shedding rejections (queue full or shutting down — typed
+    /// 503s, never silent drops).
+    pub rejects_shed: u64,
+    /// Waves flushed because the oldest queued row's window expired
+    /// (vs. flushed by a full batch, a control frame or a close).
+    pub window_flushes: u64,
     /// Bytes read off accepted connections.
     pub bytes_in: u64,
     /// Bytes written back.
@@ -86,6 +105,18 @@ enum Gather {
     Fatal(WireError),
     /// Peer closed cleanly between requests.
     Eof,
+}
+
+/// What ended a deadline-aware wait for bytes ([`WireServer::wait_bytes`]).
+enum Wait {
+    /// The read returned this many bytes (0 = EOF / peer half-close).
+    Bytes(usize),
+    /// The queue's flush window expired: serve the queued rows now.
+    Window,
+    /// The progress deadline expired mid-frame (slowloris guard).
+    Progress,
+    /// The idle deadline expired.
+    Idle,
 }
 
 /// The serve front door: one [`ServeSession`] behind one listening
@@ -136,7 +167,8 @@ impl<'e> WireServer<'e> {
 
     /// Accept and serve connections sequentially until `POST /shutdown`.
     /// Per-connection I/O errors drop that connection and keep serving;
-    /// only accept failures are fatal.
+    /// only accept failures are fatal. Read deadlines (window, progress,
+    /// idle) are armed per wait inside [`Self::wait_bytes`].
     pub fn run(mut self) -> Result<ServerStats> {
         while !self.shutdown {
             let stream = match self.listener.accept() {
@@ -145,27 +177,72 @@ impl<'e> WireServer<'e> {
                 Err(e) => return Err(e.into()),
             };
             let _ = stream.set_nodelay(true);
-            // the idle deadline: a connection that stalls mid-frame (or
-            // holds the socket open without sending) is rejected with a
-            // typed 408 instead of parking the single serve thread forever
-            if self.limits.idle_timeout_ms > 0 {
-                let _ = stream
-                    .set_read_timeout(Some(Duration::from_millis(self.limits.idle_timeout_ms)));
-            }
             self.stats.connections += 1;
             let _ = self.handle_conn(stream);
         }
         Ok(self.stats)
     }
 
-    /// Serve one connection: gather a pipelined wave of frames, run the
-    /// admitted rows as one padded micro-batch, write all responses with
-    /// a single `write_all`, repeat until close/EOF/shutdown.
+    /// Block for more bytes with the connection's deadlines armed: the
+    /// queue's flush window (only while rows are queued and the policy
+    /// has one), the progress deadline (only mid-frame — the slowloris
+    /// guard: trickled bytes reset the idle clock but never this one)
+    /// and the per-wait idle deadline. A timeout reports *which*
+    /// deadline expired instead of surfacing an error; ties resolve
+    /// toward flushing over closing.
+    fn wait_bytes(
+        &mut self,
+        stream: &mut TcpStream,
+        frame_start: &mut Option<Instant>,
+    ) -> io::Result<Wait> {
+        let now = Instant::now();
+        let window = self.session.flush_deadline();
+        let progress = frame_start.and_then(|t| {
+            (self.limits.progress_timeout_ms > 0)
+                .then(|| t + Duration::from_millis(self.limits.progress_timeout_ms))
+        });
+        let idle = (self.limits.idle_timeout_ms > 0)
+            .then(|| now + Duration::from_millis(self.limits.idle_timeout_ms));
+        let mut earliest: Option<Instant> = None;
+        for d in [window, progress, idle].into_iter().flatten() {
+            earliest = Some(earliest.map_or(d, |e| e.min(d)));
+        }
+        // ≥ 1 ms: a zero Duration would disable the timeout entirely
+        let timeout = earliest
+            .map(|d| d.saturating_duration_since(now).max(Duration::from_millis(1)));
+        let _ = stream.set_read_timeout(timeout);
+        match self.read_more(stream) {
+            Ok(n) => {
+                if n > 0 && frame_start.is_none() {
+                    *frame_start = Some(Instant::now());
+                }
+                Ok(Wait::Bytes(n))
+            }
+            Err(e) if is_timeout(&e) && earliest.is_some() => {
+                let at = earliest.unwrap();
+                if window == Some(at) {
+                    Ok(Wait::Window)
+                } else if progress == Some(at) {
+                    Ok(Wait::Progress)
+                } else {
+                    Ok(Wait::Idle)
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Serve one connection: gather a pipelined wave of frames (bounded
+    /// by the flush window), run the admitted rows as weighted
+    /// round-robin micro-batches, write all responses with a single
+    /// `write_all`, repeat until close/EOF/shutdown.
     fn handle_conn(&mut self, mut stream: TcpStream) -> io::Result<()> {
         self.buf.clear();
+        // when the frame at the buffer front started arriving (None =
+        // the buffer is empty / between frames)
+        let mut frame_start: Option<Instant> = None;
         loop {
             self.slots.clear();
-            let mut ok_rows = 0usize;
             let mut close = false;
             let outcome = loop {
                 match parse_head(&self.buf, &self.limits) {
@@ -173,13 +250,20 @@ impl<'e> WireServer<'e> {
                     Ok(Some(head)) => {
                         let total = head.head_len + head.content_length;
                         if self.buf.len() < total {
-                            match self.read_more(&mut stream) {
-                                Ok(0) => break Gather::Fatal(WireError::TruncatedBody),
-                                Ok(_) => {}
-                                Err(e) if is_timeout(&e) => {
-                                    break Gather::Fatal(WireError::IdleTimeout)
+                            match self.wait_bytes(&mut stream, &mut frame_start)? {
+                                Wait::Bytes(0) => break Gather::Fatal(WireError::TruncatedBody),
+                                Wait::Bytes(_) => {}
+                                // flush the queued rows around the stalled
+                                // frame; it stays buffered and its progress
+                                // clock keeps running
+                                Wait::Window => {
+                                    self.stats.window_flushes += 1;
+                                    break Gather::Flush;
                                 }
-                                Err(e) => return Err(e),
+                                Wait::Progress => {
+                                    break Gather::Fatal(WireError::ProgressTimeout)
+                                }
+                                Wait::Idle => break Gather::Fatal(WireError::IdleTimeout),
                             }
                             continue;
                         }
@@ -188,32 +272,51 @@ impl<'e> WireServer<'e> {
                         // consume the frame's bytes from the buffer front
                         self.buf.copy_within(total.., 0);
                         self.buf.truncate(self.buf.len() - total);
+                        frame_start = if self.buf.is_empty() {
+                            None
+                        } else {
+                            Some(Instant::now())
+                        };
                         let is_control = matches!(slot, Slot::Control(_));
-                        if matches!(slot, Slot::Reply) {
-                            ok_rows += 1;
-                        }
                         close |= !head.keep_alive;
                         self.slots.push(slot);
-                        // a wave ends at a control frame, a closing
-                        // request, or a full micro-batch
-                        if is_control || close || ok_rows == self.session.geometry().0 {
+                        // a control frame or a closing request ends the
+                        // wave; a full queue does NOT — further buffered
+                        // frames keep draining into typed 503s
+                        if is_control || close {
                             break Gather::Flush;
                         }
                     }
                     Ok(None) => {
-                        // incomplete head: serve what we already gathered
-                        // before blocking on more bytes
+                        // no complete frame buffered: flush if the window
+                        // is spent (or the policy has none), else wait
                         if !self.slots.is_empty() {
-                            break Gather::Flush;
-                        }
-                        match self.read_more(&mut stream) {
-                            Ok(0) if self.buf.is_empty() => break Gather::Eof,
-                            Ok(0) => break Gather::Fatal(WireError::TruncatedHead),
-                            Ok(_) => {}
-                            Err(e) if is_timeout(&e) => {
-                                break Gather::Fatal(WireError::IdleTimeout)
+                            let window_us = self.session.policy().window_us;
+                            if self.session.pending() == 0
+                                || window_us == 0
+                                || self.session.queue_full()
+                            {
+                                break Gather::Flush;
                             }
-                            Err(e) => return Err(e),
+                            if self
+                                .session
+                                .flush_deadline()
+                                .is_some_and(|d| d <= Instant::now())
+                            {
+                                self.stats.window_flushes += 1;
+                                break Gather::Flush;
+                            }
+                        }
+                        match self.wait_bytes(&mut stream, &mut frame_start)? {
+                            Wait::Bytes(0) if self.buf.is_empty() => break Gather::Eof,
+                            Wait::Bytes(0) => break Gather::Fatal(WireError::TruncatedHead),
+                            Wait::Bytes(_) => {}
+                            Wait::Window => {
+                                self.stats.window_flushes += 1;
+                                break Gather::Flush;
+                            }
+                            Wait::Progress => break Gather::Fatal(WireError::ProgressTimeout),
+                            Wait::Idle => break Gather::Fatal(WireError::IdleTimeout),
                         }
                     }
                 }
@@ -232,12 +335,14 @@ impl<'e> WireServer<'e> {
                     close = true;
                 }
             }
-            if ok_rows > 0 {
-                if self.session.run_direct().is_ok() {
-                    self.stats.batches += 1;
+            if self.session.pending() > 0 {
+                let batches_before = self.session.stats().batches;
+                if run_waves(&mut self.session).is_ok() {
+                    self.stats.batches += self.session.stats().batches - batches_before;
                 } else {
-                    // post-admission failure: the wave is lost; every
-                    // admitted row answers 500 and the connection closes
+                    // post-admission failure (or an injected mid-wave
+                    // panic): the wave is lost; every admitted row
+                    // answers 500 and the connection closes
                     self.session.abort_direct();
                     for slot in self.slots.iter_mut() {
                         if matches!(slot, Slot::Reply) {
@@ -291,19 +396,77 @@ impl<'e> WireServer<'e> {
                 self.resp.push_error(e);
             }
             if !self.resp.bytes().is_empty() {
+                if faultpoint::fire("wire.torn-reply") {
+                    // injected fault: write half the reply, then drop the
+                    // connection — the client must see a truncated body
+                    // and a FIN, and the server must keep serving
+                    let half = self.resp.bytes().len() / 2;
+                    let _ = stream.write_all(&self.resp.bytes()[..half]);
+                    self.stats.bytes_out += half as u64;
+                    return Ok(());
+                }
                 stream.write_all(self.resp.bytes())?;
                 self.stats.bytes_out += self.resp.bytes().len() as u64;
             }
-            if close || self.shutdown {
+            if self.shutdown {
+                // graceful drain: pipelined frames behind the shutdown
+                // (buffered or already on the wire) get typed 503s, not
+                // a connection reset
+                return self.drain_tail(&mut stream);
+            }
+            if close {
                 return Ok(());
             }
         }
+    }
+
+    /// After `POST /shutdown` is answered: keep parsing frames the
+    /// client already pipelined (buffered plus a few bounded grace
+    /// reads), answering each with a typed `shutting-down` 503, then
+    /// close. Bounded on both rounds and time, so a client that keeps
+    /// streaming cannot hold the listener hostage.
+    fn drain_tail(&mut self, stream: &mut TcpStream) -> io::Result<()> {
+        for _ in 0..64 {
+            self.resp.clear();
+            loop {
+                let head = match parse_head(&self.buf, &self.limits) {
+                    Ok(Some(h)) if self.buf.len() >= h.head_len + h.content_length => h,
+                    _ => break,
+                };
+                let total = head.head_len + head.content_length;
+                self.stats.requests += 1;
+                // route_request sees `shutdown` and answers every infer
+                // with ShuttingDown; control frames during drain do too
+                let slot = self.route_request(&head, total);
+                self.buf.copy_within(total.., 0);
+                self.buf.truncate(self.buf.len() - total);
+                let e = match slot {
+                    Slot::Error(e) => e,
+                    Slot::Reply | Slot::Control(_) => WireError::ShuttingDown,
+                };
+                bump_reject(&mut self.stats, e);
+                self.resp.push_error(e);
+            }
+            if !self.resp.bytes().is_empty() {
+                stream.write_all(self.resp.bytes())?;
+                self.stats.bytes_out += self.resp.bytes().len() as u64;
+            }
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+            match self.read_more(stream) {
+                Ok(n) if n > 0 => continue,
+                _ => return Ok(()),
+            }
+        }
+        Ok(())
     }
 
     /// Route one complete frame (`buf[..total]`, head already parsed).
     fn route_request(&mut self, head: &Head, total: usize) -> Slot {
         match (head.route, head.method) {
             (Route::Infer, Method::Post) => {
+                if self.shutdown {
+                    return Slot::Error(WireError::ShuttingDown);
+                }
                 let body = &self.buf[head.head_len..total];
                 if let Err(e) = decode_request(body, &self.limits, &mut self.scratch) {
                     return Slot::Error(e);
@@ -319,8 +482,10 @@ impl<'e> WireServer<'e> {
                     Err(SubmitError::TokenOutOfVocab) => {
                         Slot::Error(WireError::TokenOutOfVocab)
                     }
-                    // unreachable: gathering flushes at max_batch rows
-                    Err(SubmitError::WaveFull) => Slot::Error(WireError::Internal),
+                    Err(SubmitError::QueueFull) => Slot::Error(WireError::QueueFull),
+                    Err(SubmitError::Throttled(ms)) => {
+                        Slot::Error(WireError::TenantThrottled(ms))
+                    }
                 }
             }
             (Route::Infer, _) => Slot::Error(WireError::MethodNotAllowed),
@@ -331,13 +496,17 @@ impl<'e> WireServer<'e> {
         }
     }
 
-    /// Append the `/stats` snapshot: wire counters + session serve
-    /// counters + tiered-bank counters + the engine's arena/pool/pack
-    /// counters, flat JSON. The `bank_*` keys are always present and
-    /// stay zero when no on-disk bank is attached.
+    /// Append the `/stats` snapshot: wire counters (including the
+    /// admit/shed/throttle ledger) + session serve counters +
+    /// tiered-bank counters + the engine's arena/pool/pack counters +
+    /// the active overload policy, flat JSON. The `bank_*` keys are
+    /// always present and stay zero when no on-disk bank is attached;
+    /// the overload counters stay zero on an unloaded steady path.
     fn push_stats(&mut self) {
         let s = self.stats;
         let serve = self.session.stats();
+        let policy = self.session.policy();
+        let queue_cap = self.session.queue_cap();
         let bank = self.session.bank().bank_stats();
         let bank_resident = self.session.bank().resident_bytes();
         let engine = self.session.engine();
@@ -349,6 +518,7 @@ impl<'e> WireServer<'e> {
                 b,
                 "{{\"connections\":{},\"requests\":{},\"replies\":{},\"batches\":{},\
                  \"rejects_http\":{},\"rejects_parse\":{},\"rejects_submit\":{},\
+                 \"rejects_throttle\":{},\"rejects_shed\":{},\"window_flushes\":{},\
                  \"bytes_in\":{},\"bytes_out\":{},",
                 s.connections,
                 s.requests,
@@ -357,20 +527,28 @@ impl<'e> WireServer<'e> {
                 s.rejects_http,
                 s.rejects_parse,
                 s.rejects_submit,
+                s.rejects_throttle,
+                s.rejects_shed,
+                s.window_flushes,
                 s.bytes_in,
                 s.bytes_out
             );
             let _ = write!(
                 b,
-                "\"serve_requests\":{},\"serve_batches\":{},\"padded_rows\":{},\
+                "\"serve_admitted\":{},\"serve_requests\":{},\"serve_batches\":{},\
+                 \"padded_rows\":{},\
+                 \"queue_cap\":{queue_cap},\"window_us\":{},\"tenant_rps\":{},\
                  \"bank_hot_hits\":{},\"bank_cold_faults\":{},\"bank_promotions\":{},\
                  \"bank_resident_bytes\":{bank_resident},\
                  \"arena_hits\":{arena_hits},\"arena_misses\":{arena_misses},\
                  \"pool_threads_spawned\":{},\"pool_jobs\":{},\"pool_wakeups\":{},\
                  \"packs_live\":{packs_live},\"repacks\":{repacks}}}",
+                serve.admitted,
                 serve.requests,
                 serve.batches,
                 serve.padded_rows,
+                policy.window_us,
+                policy.tenant_rps,
                 bank.hot_hits,
                 bank.cold_faults,
                 bank.promotions,
@@ -414,6 +592,29 @@ fn bump_reject(stats: &mut ServerStats, e: WireError) {
         RejectKind::Http => stats.rejects_http += 1,
         RejectKind::Parse => stats.rejects_parse += 1,
         RejectKind::Submit => stats.rejects_submit += 1,
+        RejectKind::Throttle => stats.rejects_throttle += 1,
+        RejectKind::Shed => stats.rejects_shed += 1,
+    }
+}
+
+/// Run the queued rows, catching a mid-wave panic when fault injection
+/// is compiled in: an injected panic must degrade to typed 500s and a
+/// closed connection, never take the single serve thread down. Without
+/// the feature this is a plain call — no unwind machinery on the
+/// production path.
+fn run_waves(session: &mut ServeSession<'_>) -> Result<usize> {
+    #[cfg(feature = "fault-inject")]
+    {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| session.run_direct())) {
+            Ok(result) => result,
+            Err(_) => {
+                anyhow::bail!("wave panicked (injected fault)")
+            }
+        }
+    }
+    #[cfg(not(feature = "fault-inject"))]
+    {
+        session.run_direct()
     }
 }
 
@@ -436,12 +637,15 @@ pub struct SpawnOpts {
     pub tasks: Vec<String>,
     /// Wire limits.
     pub limits: WireLimits,
+    /// Overload policy applied to the session before serving (the
+    /// all-zero default reproduces legacy behavior exactly).
+    pub policy: ServePolicy,
 }
 
 impl SpawnOpts {
     /// The test harness default: tiny model, two explicit workers (so
     /// `HADAPT_THREADS=1` CI runs keep the same pool geometry), wave
-    /// size 4, two tenants.
+    /// size 4, two tenants, legacy-exact overload policy.
     pub fn tiny(seed: u64) -> SpawnOpts {
         SpawnOpts {
             artifacts_dir: "/definitely/not/a/dir".to_string(),
@@ -451,6 +655,7 @@ impl SpawnOpts {
             max_batch: 4,
             tasks: vec!["sst2".to_string(), "rte".to_string()],
             limits: WireLimits::default(),
+            policy: ServePolicy::default(),
         }
     }
 }
@@ -475,6 +680,7 @@ pub fn spawn_synthetic_server(
             for adapter in synthetic_adapters(&info, &store, &opts.tasks, opts.seed)? {
                 session.register_task(adapter)?;
             }
+            session.set_policy(opts.policy)?;
             WireServer::new(session, listener, opts.limits).run()
         })?;
     Ok((addr, handle))

@@ -48,11 +48,24 @@ pub struct WireLimits {
     /// client must not wedge the single-threaded wave loop. `0` disables
     /// the deadline (tests only; production keeps one).
     pub idle_timeout_ms: u64,
+    /// Slowloris guard, distinct from the idle deadline: once a frame's
+    /// first byte arrives, the *whole* frame must complete within this
+    /// many milliseconds or the connection is closed with
+    /// [`WireError::ProgressTimeout`]. A client trickling one byte per
+    /// idle window resets the idle clock forever but never this one.
+    /// `0` disables the guard.
+    pub progress_timeout_ms: u64,
 }
 
 impl Default for WireLimits {
     fn default() -> WireLimits {
-        WireLimits { max_head: 4096, max_body: 64 * 1024, max_tokens: 4096, idle_timeout_ms: 10_000 }
+        WireLimits {
+            max_head: 4096,
+            max_body: 64 * 1024,
+            max_tokens: 4096,
+            idle_timeout_ms: 10_000,
+            progress_timeout_ms: 30_000,
+        }
     }
 }
 
@@ -65,6 +78,10 @@ pub enum RejectKind {
     Parse,
     /// Admission rejections (unknown task, out-of-vocab token).
     Submit,
+    /// Per-tenant rate rejections (429 with `Retry-After`).
+    Throttle,
+    /// Load-shedding rejections (queue full, draining for shutdown).
+    Shed,
 }
 
 /// Typed wire failure: every way an untrusted request can be refused.
@@ -120,6 +137,18 @@ pub enum WireError {
     UnknownTask,
     /// A token id outside the model's vocabulary.
     TokenOutOfVocab,
+    /// The tenant is over its admission rate; the payload is the
+    /// milliseconds until its token bucket refills (surfaced both as a
+    /// `Retry-After` header and a `retry_after_ms` body field).
+    TenantThrottled(u32),
+    /// The global request queue is at capacity — load shed with 503.
+    QueueFull,
+    /// The server is draining after `POST /shutdown`; new submits are
+    /// refused while in-flight waves complete.
+    ShuttingDown,
+    /// A frame's first byte arrived but the frame did not complete
+    /// within [`WireLimits::progress_timeout_ms`] (slowloris guard).
+    ProgressTimeout,
     /// The serve path failed after admission (never expected; the
     /// response closes the connection).
     Internal,
@@ -159,6 +188,10 @@ impl WireError {
             WireError::TooManyTokens => "too-many-tokens",
             WireError::UnknownTask => "unknown-task",
             WireError::TokenOutOfVocab => "token-out-of-vocab",
+            WireError::TenantThrottled(_) => "tenant-throttled",
+            WireError::QueueFull => "queue-full",
+            WireError::ShuttingDown => "shutting-down",
+            WireError::ProgressTimeout => "progress-timeout",
             WireError::Internal => "internal",
         }
     }
@@ -170,7 +203,9 @@ impl WireError {
             WireError::BodyTooLarge | WireError::TooManyTokens => (413, "Payload Too Large"),
             WireError::UnknownRoute | WireError::UnknownTask => (404, "Not Found"),
             WireError::MethodNotAllowed => (405, "Method Not Allowed"),
-            WireError::IdleTimeout => (408, "Request Timeout"),
+            WireError::IdleTimeout | WireError::ProgressTimeout => (408, "Request Timeout"),
+            WireError::TenantThrottled(_) => (429, "Too Many Requests"),
+            WireError::QueueFull | WireError::ShuttingDown => (503, "Service Unavailable"),
             WireError::UnsupportedTransferEncoding => (501, "Not Implemented"),
             WireError::BadVersion => (505, "HTTP Version Not Supported"),
             WireError::Internal => (500, "Internal Server Error"),
@@ -207,6 +242,10 @@ impl WireError {
             WireError::TooManyTokens => "too many token ids in one array",
             WireError::UnknownTask => "task has no registered adapter",
             WireError::TokenOutOfVocab => "token id outside the model vocabulary",
+            WireError::TenantThrottled(_) => "tenant over its admission rate; honor retry-after",
+            WireError::QueueFull => "request queue at capacity; retry with backoff",
+            WireError::ShuttingDown => "server is draining for shutdown",
+            WireError::ProgressTimeout => "request frame did not complete within the deadline",
             WireError::Internal => "serve path failed after admission",
         }
     }
@@ -227,7 +266,9 @@ impl WireError {
                 | WireError::TruncatedHead
                 | WireError::TruncatedBody
                 | WireError::IdleTimeout
+                | WireError::ProgressTimeout
                 | WireError::BodyTooLarge
+                | WireError::ShuttingDown
                 | WireError::Internal
         )
     }
@@ -236,6 +277,8 @@ impl WireError {
     pub fn bucket(self) -> RejectKind {
         match self {
             WireError::UnknownTask | WireError::TokenOutOfVocab => RejectKind::Submit,
+            WireError::TenantThrottled(_) => RejectKind::Throttle,
+            WireError::QueueFull | WireError::ShuttingDown => RejectKind::Shed,
             WireError::Json(_)
             | WireError::NotAnObject
             | WireError::DuplicateField
@@ -576,21 +619,42 @@ impl ResponseBuf {
     }
 
     /// Append the typed error response for `e` (closing variants carry
-    /// `Connection: close`).
+    /// `Connection: close`; throttle responses carry `Retry-After` and a
+    /// machine-readable `retry_after_ms` body field).
     pub fn push_error(&mut self, e: WireError) {
         use std::io::Write as _;
         let (status, reason) = e.status();
         self.body.clear();
         let _ = write!(
             self.body,
-            "{{\"error\":\"{}\",\"message\":\"{}\"}}",
+            "{{\"error\":\"{}\",\"message\":\"{}\"",
             e.code(),
             e.message()
         );
-        self.finish(status, reason, e.fatal());
+        let retry_after_s = match e {
+            WireError::TenantThrottled(ms) => {
+                let _ = write!(self.body, ",\"retry_after_ms\":{ms}");
+                // Retry-After is whole seconds; round up so honoring it
+                // always lands after the bucket refills
+                Some((ms as u64).div_ceil(1000).max(1))
+            }
+            _ => None,
+        };
+        self.body.push(b'}');
+        self.finish_with(status, reason, e.fatal(), retry_after_s);
     }
 
     fn finish(&mut self, status: u16, reason: &str, close: bool) {
+        self.finish_with(status, reason, close, None);
+    }
+
+    fn finish_with(
+        &mut self,
+        status: u16,
+        reason: &str,
+        close: bool,
+        retry_after_s: Option<u64>,
+    ) {
         use std::io::Write as _;
         let _ = write!(
             self.out,
@@ -598,6 +662,9 @@ impl ResponseBuf {
              Content-Length: {}\r\n",
             self.body.len()
         );
+        if let Some(s) = retry_after_s {
+            let _ = write!(self.out, "Retry-After: {s}\r\n");
+        }
         if close {
             self.out.extend_from_slice(b"Connection: close\r\n");
         }
@@ -669,8 +736,13 @@ fn parse_decimal(v: &[u8]) -> Option<usize> {
 mod tests {
     use super::*;
 
-    const L: WireLimits =
-        WireLimits { max_head: 256, max_body: 1024, max_tokens: 8, idle_timeout_ms: 0 };
+    const L: WireLimits = WireLimits {
+        max_head: 256,
+        max_body: 1024,
+        max_tokens: 8,
+        idle_timeout_ms: 0,
+        progress_timeout_ms: 0,
+    };
 
     #[test]
     fn head_parses_incrementally() {
@@ -834,6 +906,36 @@ mod tests {
             .parse()
             .unwrap();
         assert_eq!(text.len() - body_at, cl);
+    }
+
+    #[test]
+    fn throttle_responses_carry_retry_after() {
+        let mut r = ResponseBuf::default();
+        r.push_error(WireError::TenantThrottled(2400));
+        let text = String::from_utf8(r.bytes().to_vec()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        // 2400 ms rounds UP to 3 s: honoring the header always lands
+        // after the bucket refills
+        assert!(text.contains("Retry-After: 3\r\n"), "{text}");
+        assert!(text.contains("\"error\":\"tenant-throttled\""), "{text}");
+        assert!(text.contains("\"retry_after_ms\":2400"), "{text}");
+        assert!(!text.contains("Connection: close"), "throttles keep the connection");
+        // sub-second waits still advertise at least one whole second
+        r.clear();
+        r.push_error(WireError::TenantThrottled(1));
+        let text = String::from_utf8(r.bytes().to_vec()).unwrap();
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        // shed responses are plain 503s
+        r.clear();
+        r.push_error(WireError::QueueFull);
+        let text = String::from_utf8(r.bytes().to_vec()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("\"error\":\"queue-full\""), "{text}");
+        assert_eq!(WireError::QueueFull.bucket(), RejectKind::Shed);
+        assert_eq!(WireError::TenantThrottled(7).bucket(), RejectKind::Throttle);
+        assert_eq!(WireError::ShuttingDown.bucket(), RejectKind::Shed);
+        assert!(WireError::ProgressTimeout.fatal(), "slowloris closes the connection");
+        assert!(!WireError::QueueFull.fatal(), "shed keeps the framing intact");
     }
 
     #[test]

@@ -102,33 +102,37 @@ fn tiered_serve_is_bitwise_identical_to_a_flat_bank() {
         flat.register_task(t.clone()).unwrap();
     }
 
-    // three rounds over the whole fleet: every round churns the LRU, so
-    // the stream constantly mixes hot hits, faults and evictions
+    // three rounds over the whole fleet in wave-sized chunks (submission
+    // resolves tenants immediately, so a wave can pin at most the hot
+    // tier's 4 slots): every round churns the LRU, so the stream
+    // constantly mixes hot hits, faults and evictions
     for round in 0..3usize {
-        for (i, t) in fleet.iter().enumerate() {
-            let req = ServeRequest {
-                task: t.task.clone(),
-                seq_a: (0..5 + (i + round) % 4)
-                    .map(|j| 3 + ((i * 31 + round * 7 + j * 11) % 500) as i32)
-                    .collect(),
-                seq_b: (i % 2 == 0).then(|| vec![9 + i as i32, 17, 23]),
-            };
-            tiered.submit(req.clone()).unwrap();
-            flat.submit(req).unwrap();
-        }
-        let got = tiered.run_pending().unwrap();
-        let want = flat.run_pending().unwrap();
-        assert_eq!(got.len(), want.len());
-        for (g, w) in got.iter().zip(&want) {
-            assert_eq!(g.task, w.task, "round {round}");
-            assert_eq!(g.label, w.label, "round {round} task {}", g.task);
-            let gb: Vec<u32> = g.logits.iter().map(|x| x.to_bits()).collect();
-            let wb: Vec<u32> = w.logits.iter().map(|x| x.to_bits()).collect();
-            assert_eq!(
-                gb, wb,
-                "round {round} task {}: paged reconstruction must be bitwise",
-                g.task
-            );
+        for chunk in fleet.iter().enumerate().collect::<Vec<_>>().chunks(4) {
+            for &(i, t) in chunk {
+                let req = ServeRequest {
+                    task: t.task.clone(),
+                    seq_a: (0..5 + (i + round) % 4)
+                        .map(|j| 3 + ((i * 31 + round * 7 + j * 11) % 500) as i32)
+                        .collect(),
+                    seq_b: (i % 2 == 0).then(|| vec![9 + i as i32, 17, 23]),
+                };
+                tiered.submit(req.clone()).unwrap();
+                flat.submit(req).unwrap();
+            }
+            let got = tiered.run_pending().unwrap();
+            let want = flat.run_pending().unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.task, w.task, "round {round}");
+                assert_eq!(g.label, w.label, "round {round} task {}", g.task);
+                let gb: Vec<u32> = g.logits.iter().map(|x| x.to_bits()).collect();
+                let wb: Vec<u32> = w.logits.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    gb, wb,
+                    "round {round} task {}: paged reconstruction must be bitwise",
+                    g.task
+                );
+            }
         }
     }
 
@@ -144,6 +148,57 @@ fn tiered_serve_is_bitwise_identical_to_a_flat_bank() {
     );
     let flat_stats = flat.bank().bank_stats();
     assert_eq!((flat_stats.cold_faults, flat_stats.evictions), (0, 0));
+    fs::remove_file(&path).ok();
+}
+
+/// Regression: the owned `submit` path must resolve (and fault in) the
+/// tenant at submit time, exactly like `submit_borrowed` — an unknown
+/// task rejects immediately instead of poisoning the whole wave at
+/// `run_pending`, and a queued row pins a *slot*, not a name.
+#[test]
+fn owned_submit_resolves_and_rejects_at_submit_time() {
+    let engine = engine2();
+    let seed = 83;
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let base_tasks = vec!["sst2".to_string(), "mrpc".to_string(), "rte".to_string()];
+    let bases = synthetic_adapters(&info, &store, &base_tasks, seed).unwrap();
+    let path = tmp("submit_time");
+    let mut builder = BankBuilder::new(tiny_geom(&engine), bases.clone(), 0.0).unwrap();
+    for i in 0..6 {
+        builder.add_tenant(&synthetic_tenant(&bases, i, seed)).unwrap();
+    }
+    builder.write(&path).unwrap();
+
+    let mut session = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    session.attach_store(BankReader::open(&path).unwrap(), 4).unwrap();
+    let req = |task: &str| ServeRequest {
+        task: task.to_string(),
+        seq_a: vec![4, 5, 6],
+        seq_b: None,
+    };
+
+    // an unknown task fails at submit — the error arrives before any
+    // neighbor row is dragged into a failing wave
+    let err = session.submit(req("not-a-tenant")).unwrap_err();
+    assert!(err.to_string().contains("no adapter in either tier"), "{err}");
+
+    // a cold tenant faults in *at submit*: the queue holds a resolved,
+    // pinned slot from that point on
+    let before = session.bank().bank_stats().cold_faults;
+    session.submit(req("t000004")).unwrap();
+    assert_eq!(
+        session.bank().bank_stats().cold_faults,
+        before + 1,
+        "resolution (and the cold fault) happens at submit time"
+    );
+    session.submit(req("t000005")).unwrap();
+
+    // the earlier rejection cost nothing: both admitted rows serve
+    let replies = session.run_pending().unwrap();
+    assert_eq!(replies.len(), 2);
+    assert_eq!(replies[0].task, "t000004");
+    assert_eq!(replies[1].task, "t000005");
     fs::remove_file(&path).ok();
 }
 

@@ -1,0 +1,173 @@
+//! Fault-injection drills: arm each named fault point on the serve path
+//! and prove the failure degrades to a **typed** outcome with the server
+//! still serving afterwards — the four faults the robustness contract
+//! names (forced queue-full, forced slow tenant, a torn reply write,
+//! a panic mid-wave).
+//!
+//! This suite lives in its own test binary on purpose: the armed-point
+//! table is process-global, so arming in a shared binary could perturb
+//! unrelated parallel tests. Within this binary, tests serialize on a
+//! mutex and each leaves every point disarmed.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+
+use hadapt::runtime::{faultpoint, spawn_synthetic_server, SpawnOpts};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn post_infer(body: &str) -> Vec<u8> {
+    format!("POST /infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len()).into_bytes()
+}
+
+const SST2: &str = r#"{"task":"sst2","text_a":[5,6,7]}"#;
+const SHUTDOWN: &[u8] = b"POST /shutdown HTTP/1.1\r\nContent-Length: 0\r\n\r\n";
+
+/// Send one request and read one full response frame.
+fn roundtrip(stream: &mut TcpStream, req: &[u8]) -> (u16, String) {
+    stream.write_all(req).unwrap();
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i + 4;
+        }
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "eof mid-head: {:?}", String::from_utf8_lossy(&buf));
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let cl: usize = head
+        .lines()
+        .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+        .map(|l| l.split(':').nth(1).unwrap().trim().parse().unwrap())
+        .unwrap_or(0);
+    while buf.len() < head_end + cl {
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "eof mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    (status, String::from_utf8_lossy(&buf[head_end..head_end + cl]).to_string())
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+#[test]
+fn forced_queue_full_sheds_typed_503_then_recovers() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(101)).unwrap();
+    let mut c = connect(addr);
+
+    faultpoint::arm("serve.queue-full", 1);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("\"error\":\"queue-full\""), "{body}");
+
+    // the injected rejection consumed the armed hit: same connection,
+    // next request serves
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.rejects_shed, 1);
+    assert_eq!(stats.replies, 1);
+}
+
+#[test]
+fn forced_slow_tenant_throttles_typed_429_then_recovers() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(103)).unwrap();
+    let mut c = connect(addr);
+
+    faultpoint::arm("admit.slow-tenant", 1);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("\"error\":\"tenant-throttled\""), "{body}");
+    assert!(body.contains("\"retry_after_ms\":"), "{body}");
+
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.rejects_throttle, 1);
+    assert_eq!(stats.replies, 1);
+}
+
+#[test]
+fn torn_reply_drops_the_connection_but_the_server_keeps_serving() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(107)).unwrap();
+
+    faultpoint::arm("wire.torn-reply", 1);
+    let mut torn = connect(addr);
+    torn.write_all(&post_infer(SST2)).unwrap();
+    let mut raw = Vec::new();
+    torn.read_to_end(&mut raw).unwrap();
+    assert!(!raw.is_empty(), "half the reply must make it out before the tear");
+    // the frame is provably incomplete: either the head never finished,
+    // or the body is short of its declared Content-Length
+    let complete = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|i| {
+            let head = String::from_utf8_lossy(&raw[..i + 4]).to_string();
+            let cl: usize = head
+                .lines()
+                .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+                .map(|l| l.split(':').nth(1).unwrap().trim().parse().unwrap())
+                .unwrap_or(0);
+            raw.len() >= i + 4 + cl
+        })
+        .unwrap_or(false);
+    assert!(!complete, "the reply must be torn, got {:?}", String::from_utf8_lossy(&raw));
+
+    // a fresh connection serves bitwise-normally
+    let mut c = connect(addr);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.connections, 2);
+}
+
+#[test]
+fn mid_wave_panic_degrades_to_typed_500_and_the_thread_survives() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(109)).unwrap();
+
+    faultpoint::arm("serve.mid-wave-panic", 1);
+    let mut c = connect(addr);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 500, "{body}");
+    assert!(body.contains("\"error\":\"internal\""), "{body}");
+    // a lost wave is fatal for the connection (the client must not see
+    // a silently re-run request)…
+    let mut rest = Vec::new();
+    assert_eq!(c.read_to_end(&mut rest).unwrap(), 0, "{rest:?}");
+
+    // …but never for the server: the panic was caught, the queue
+    // aborted, and the next connection serves
+    let mut c = connect(addr);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.replies, 1);
+}

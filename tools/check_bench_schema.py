@@ -27,11 +27,20 @@ adapter bank — fleet size, on-disk compression ratio vs dense per-tenant
 storage, cold-fault p99 and the hot-hit rate of a Zipf replay, plus the
 hot-resident steady allocation counter.
 
+Since PR 8 it also carries a top-level "overload" section: the front
+door offered several times its admitted capacity — SLO-honest latency
+percentiles over admitted replies only, goodput vs offered load, typed
+429/503 counts, fairness deviation between equally-offered tenants, and
+the policy knobs (queue_cap/window_us/tenant_rps) the run used. Written
+by the bench, overwritten by `tools/wire_load.py --overload --bench-out`.
+
 Zero-contracts enforced (all counters, not measurements): steady-state
 arena misses, steady-state pool spawns, the serve and ingress paths'
 steady-state arena misses / pool spawns / repacks, and the bank's
 hot-resident steady allocations must all be 0. The bank's compression
-ratio must be at least 10 (the tiered format's acceptance floor).
+ratio must be at least 10 (the tiered format's acceptance floor). The
+overload section's unclassified_errors must be 0 (every overloaded
+request gets a typed outcome) and fair_dev at most 0.2.
 
 Every section and key is documented in docs/BENCH_SCHEMA.md.
 
@@ -115,6 +124,20 @@ BANK_KEYS = {
     "cold_fault_us_p99",
     "hot_hit_rate",
     "steady_hot_allocs",
+}
+OVERLOAD_KEYS = {
+    "offered_rps",
+    "goodput_rps",
+    "p50_ms",
+    "p99_ms",
+    "p999_ms",
+    "throttled_429",
+    "shed_503",
+    "unclassified_errors",
+    "fair_dev",
+    "window_us",
+    "queue_cap",
+    "tenant_rps",
 }
 POOL_KEYS = {
     "threads",
@@ -248,6 +271,30 @@ def check_bank(bank):
         fail("bank.compression_ratio must be >= 10 (tiered-format acceptance floor)")
 
 
+def check_overload(overload):
+    if not isinstance(overload, dict):
+        fail("'overload' must be an object")
+    if not isinstance(overload.get("provenance"), str) or not overload["provenance"]:
+        fail("overload.provenance must be a non-empty string label")
+    missing = OVERLOAD_KEYS - set(overload)
+    if missing:
+        fail(f"overload missing keys: {sorted(missing)}")
+    for key in OVERLOAD_KEYS:
+        if not isinstance(overload[key], (int, float)):
+            fail(f"overload.{key} must be a number")
+        if overload[key] < 0:
+            fail(f"overload.{key} must be non-negative")
+    # contracts, not measurements: overload degrades typed and fair
+    if overload["unclassified_errors"] != 0:
+        fail("overload.unclassified_errors must be 0 (typed-degradation contract)")
+    if overload["fair_dev"] > 0.2:
+        fail("overload.fair_dev must be <= 0.2 (equal-weight fairness contract)")
+    if overload["throttled_429"] < 1 or overload["shed_503"] < 1:
+        fail("overload must exercise both degradation modes (>=1 429 and >=1 503)")
+    if overload["goodput_rps"] > overload["offered_rps"]:
+        fail("overload.goodput_rps cannot exceed offered_rps")
+
+
 def main(path):
     with open(path) as f:
         data = json.load(f)
@@ -263,6 +310,7 @@ def main(path):
         "serve",
         "ingress",
         "bank",
+        "overload",
     ):
         if key not in data:
             fail(f"missing top-level key '{key}'")
@@ -273,6 +321,7 @@ def main(path):
     check_serve(data["serve"])
     check_ingress(data["ingress"])
     check_bank(data["bank"])
+    check_overload(data["overload"])
     # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
         if row["arena_steady_misses"] != 0:
@@ -283,7 +332,7 @@ def main(path):
         sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
         + len(data["serve"]["rows"])
         + len(data["ingress"]["rows"])
-        + 2  # the pool and bank sections are one row each
+        + 3  # the pool, bank and overload sections are one row each
     )
     print(
         f"BENCH_kernels.json schema OK ({n_rows} rows, "

@@ -22,12 +22,24 @@ script at it, and fails the build unless every assertion below holds:
 6.  POST /shutdown answers 200 and the server exits (the caller waits
     on the process).
 
+With --overload the steady-state phases are replaced by an overload
+drill against a server started with --queue-cap/--tenant-rps/--window-us:
+sustained Zipf-skewed bursts far past admitted capacity, asserting that
+every request gets a *typed* outcome (200/429/503, zero unclassified),
+that both throttling and shedding actually fired, that equally-offered
+tenants keep fair goodput, and that the admitted path's zero-contracts
+survive the abuse; SLO-honest results (admitted-only percentiles,
+goodput vs offered) can be merged into BENCH_kernels.json via
+--bench-out.
+
 Stdlib only. Exit code 0 on success, 1 with a diagnostic on any failure.
 
 Usage:
   python3 tools/wire_load.py --addr 127.0.0.1:8471 \
       --fixtures rust/tests/fixtures/wire --requests 64 --batch 8 \
       [--cold-tenants t000500,t000731]
+  python3 tools/wire_load.py --addr 127.0.0.1:8473 --overload \
+      --overload-duration 3 [--bench-out BENCH_kernels.json]
 """
 
 import argparse
@@ -52,11 +64,29 @@ def connect(addr, timeout=5.0):
 
 
 def wait_ready(addr, budget=10.0):
+    """Bounded readiness probe. A bare connect() is not proof of life —
+    the kernel accepts onto the listen backlog before the server thread
+    serves, and an early request can then die with ConnectionResetError.
+    Probe /healthz until a 200 comes back, retrying refused/reset/timeout
+    (each on a fresh connection) within the budget."""
     deadline = time.monotonic() + budget
     while True:
         try:
-            connect(addr, timeout=1.0).close()
-            return
+            s = connect(addr, timeout=1.0)
+            try:
+                s.sendall(b"GET /healthz HTTP/1.1\r\n\r\n")
+                s.settimeout(1.0)
+                data = b""
+                while b"\r\n\r\n" not in data:
+                    chunk = s.recv(4096)
+                    if not chunk:
+                        raise ConnectionResetError("closed before /healthz answered")
+                    data += chunk
+                if b" 200 " not in data.split(b"\r\n", 1)[0]:
+                    raise ConnectionResetError(f"healthz: {data[:64]!r}")
+                return
+            finally:
+                s.close()
         except OSError:
             if time.monotonic() > deadline:
                 fail(f"server at {addr[0]}:{addr[1]} never became ready")
@@ -200,6 +230,127 @@ def cold_tenant_phase(addr, cold):
     )
 
 
+def overload_phase(addr, duration, bench_out):
+    """Offer the front door several times its admitted capacity — deep
+    Zipf-skewed pipelined bursts (36 heavy-tenant + 6 + 6 light per 48)
+    against the bounded queue and per-tenant buckets — and assert the
+    overload contract:
+
+    * every request gets a *typed* outcome (200 / 429 tenant-throttled /
+      503 queue-full); zero unclassified errors;
+    * both degradation modes actually fired (>=1 throttle, >=1 shed);
+    * the server's throttle/shed counters account for each observed one;
+    * the two equally-offered light tenants end within 20% of each
+      other's goodput (weighted fairness, not luck);
+    * the admitted steady path stayed on its zero-contracts (no arena
+      misses, thread spawns, repacks or cold faults) through the abuse.
+
+    Reports SLO-honest numbers — percentiles over admitted replies only,
+    goodput next to offered load — and merges them into `bench_out`'s
+    `overload` section when given."""
+    # warm the engine (arena, workers, packs) with one in-budget wave per
+    # tenant before snapshotting the zero-contract counters
+    s = connect(addr)
+    s.sendall(b"".join(infer(t, [5, 6, 7]) for t in TASKS))
+    read_responses(s, len(TASKS))
+    s.close()
+    s0 = get_stats(addr)
+
+    burst_tasks = [
+        "mrpc" if i % 8 == 6 else "rte" if i % 8 == 7 else "sst2" for i in range(48)
+    ]
+    payload = b"".join(
+        infer(t, [3 + i % 29, 7, 11]) for i, t in enumerate(burst_tasks)
+    )
+    ok = throttled = shed = other = 0
+    goodput = {t: 0 for t in TASKS}
+    lats = []
+    rounds = 0
+    s = connect(addr)
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < duration:
+        tw = time.monotonic()
+        s.sendall(payload)
+        resp = read_responses(s, len(burst_tasks))
+        rtt = time.monotonic() - tw
+        rounds += 1
+        for (status, body), task in zip(resp, burst_tasks):
+            if status == 200:
+                ok += 1
+                goodput[task] += 1
+                lats.append(rtt)
+            elif status == 429:
+                throttled += 1
+                if '"error":"tenant-throttled"' not in body or '"retry_after_ms":' not in body:
+                    fail(f"429 without typed throttle body: {body}")
+            elif status == 503:
+                shed += 1
+                if '"error":"queue-full"' not in body:
+                    fail(f"503 without typed queue-full body: {body}")
+            else:
+                other += 1
+    wall = max(time.monotonic() - t0, 1e-9)
+    s.close()
+    s1 = get_stats(addr)
+
+    offered = rounds * len(burst_tasks)
+    if other:
+        fail(f"{other} of {offered} overload requests got an untyped outcome")
+    if throttled < 1 or shed < 1:
+        fail(f"overload never tripped both modes: 429s={throttled} 503s={shed}")
+    if ok < 1:
+        fail("overload starved every request; goodput should survive")
+    dt = s1["rejects_throttle"] - s0["rejects_throttle"]
+    ds = s1["rejects_shed"] - s0["rejects_shed"]
+    if dt != throttled or ds != shed:
+        fail(
+            f"reject counters drifted: server saw +{dt} throttles/+{ds} sheds "
+            f"for {throttled}/{shed} observed"
+        )
+    for key in ("arena_misses", "pool_threads_spawned", "repacks", "bank_cold_faults"):
+        delta = s1[key] - s0[key]
+        if delta != 0:
+            fail(f"overload broke a steady-state contract: {key} grew by {delta}")
+    gm, gr = goodput["mrpc"], goodput["rte"]
+    fair_dev = abs(gm - gr) / max((gm + gr) / 2.0, 1.0)
+    if fair_dev > 0.2:
+        fail(f"equal-weight tenants diverged: mrpc {gm} vs rte {gr} ({fair_dev:.2f})")
+
+    lats.sort()
+    pct = lambda q: lats[min(int(len(lats) * q), len(lats) - 1)] * 1e3
+    rows = {
+        "provenance": "measured",
+        "offered_rps": round(offered / wall),
+        "goodput_rps": round(ok / wall),
+        "p50_ms": round(pct(0.50), 3),
+        "p99_ms": round(pct(0.99), 3),
+        "p999_ms": round(pct(0.999), 3),
+        "throttled_429": throttled,
+        "shed_503": shed,
+        "unclassified_errors": other,
+        "fair_dev": round(fair_dev, 3),
+        "window_us": s1["window_us"],
+        "queue_cap": s1["queue_cap"],
+        "tenant_rps": s1["tenant_rps"],
+    }
+    print(
+        f"wire_load: overload OK ({offered} offered at {rows['offered_rps']}/s, "
+        f"goodput {rows['goodput_rps']}/s, 429s {throttled}, 503s {shed}, "
+        f"p99 {rows['p99_ms']}ms, fair_dev {rows['fair_dev']})"
+    )
+    if bench_out:
+        try:
+            with open(bench_out) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+        doc["overload"] = rows
+        with open(bench_out, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"wire_load: overload rows merged into {bench_out}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--addr", default="127.0.0.1:8471")
@@ -212,11 +363,37 @@ def main():
         help="comma-separated tenant names expected to be cold in the server's "
         "bank file: each must fault in exactly once, then serve hot",
     )
+    ap.add_argument(
+        "--overload",
+        action="store_true",
+        help="run the overload phase instead of the steady-state phases: "
+        "point this at a server started with --queue-cap/--tenant-rps/"
+        "--window-us and assert typed 429/503 degradation",
+    )
+    ap.add_argument(
+        "--overload-duration",
+        type=float,
+        default=3.0,
+        help="seconds of sustained overload bursts",
+    )
+    ap.add_argument(
+        "--bench-out",
+        default="",
+        help="merge the overload rows into this BENCH_kernels.json",
+    )
     args = ap.parse_args()
     host, _, port = args.addr.rpartition(":")
     addr = (host, int(port))
 
     wait_ready(addr)
+
+    if args.overload:
+        overload_phase(addr, args.overload_duration, args.bench_out)
+        status, body = roundtrip(addr, post("/shutdown"))
+        if status != 200 or '"shutting_down":true' not in body:
+            fail(f"/shutdown answered {status}: {body}")
+        print("wire_load: PASS — overload degraded typed, server drained cleanly")
+        return
     # warm everything (arena, workers, packs, connection buffers) before
     # snapshotting the zero-contract counters
     happy_burst(addr, args.batch, args.batch)
