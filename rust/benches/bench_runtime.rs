@@ -856,6 +856,7 @@ fn main() {
     // working set and prove steady serve allocation-free with this
     // binary's counting allocator.
     let mut bank_json = Json::obj();
+    let mut bank_lifecycle_json = Json::obj();
     {
         let engine = engine_with(Pool::auto(), true);
         // fleet scale, not model scale, is what the bank rows measure —
@@ -968,13 +969,96 @@ fn main() {
         }
         TRACKING.store(false, Ordering::SeqCst);
         let steady_allocs = ALLOCS.load(Ordering::SeqCst);
-        std::hint::black_box(sink);
-        let _ = std::fs::remove_file(&path);
         println!(
             "bench {:<44} fault_p50={fault_p50:.1}us fault_p99={fault_p99:.1}us \
              hot_hit_rate={hit_rate:.3} steady_hot_allocs={steady_allocs}",
             format!("bank_serve/{bmodel} (hot {hot} of {tenants})")
         );
+
+        // ---- bank lifecycle rows (PR 9): open / scrub / compact ----
+        // clean open (header + centroid verify + full log scan)
+        let t0 = std::time::Instant::now();
+        let mut life = BankReader::open(&path).unwrap();
+        let clean_open_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // scrub throughput: every checksum re-verified plus a deep
+        // decode of every live payload
+        let t0 = std::time::Instant::now();
+        let rep = life.scrub().unwrap();
+        let scrub_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let scrub_mb_per_s = rep.bytes_scanned as f64 / 1e6 / (scrub_ms / 1e3).max(1e-9);
+
+        // salvage open: one flipped byte a third of the way into the
+        // tenant log (mid-log, so the scan must resync past it)
+        let mut flipped = std::fs::read(&path).unwrap();
+        let log_start =
+            48 + u64::from_le_bytes(flipped[32..40].try_into().unwrap()) as usize;
+        let flip_at = log_start + (flipped.len() - log_start) / 3;
+        flipped[flip_at] ^= 0xff;
+        let flip_path = std::env::temp_dir()
+            .join(format!("hadapt_bench_{}_flip.bank", std::process::id()));
+        std::fs::write(&flip_path, &flipped).unwrap();
+        let t0 = std::time::Instant::now();
+        let salvaged = BankReader::open(&flip_path).unwrap();
+        let salvage_open_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(salvaged.damage().len(), 1, "the flip costs one record");
+        drop(salvaged);
+        let _ = std::fs::remove_file(&flip_path);
+
+        // churn shadows into the log, then compact through the live
+        // session — the real online generation swap, hot tier and all
+        let churn = if quick { 50 } else { 200 };
+        let churn_names: Vec<String> = life.names().map(str::to_string).collect();
+        let mut churn_out = life.blank_adapter();
+        for i in 0..churn {
+            life.read_into(&churn_names[i % churn_names.len()], &mut churn_out).unwrap();
+            churn_out.had_b[i % churn_out.had_b.len()][0] += 0.0625;
+            life.upsert(&churn_out).unwrap();
+        }
+        drop(life);
+        let t0 = std::time::Instant::now();
+        let cs = session.compact_bank().unwrap();
+        let compact_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // zero-contract: steady serve right after the generation swap
+        // allocates nothing (the hot tier survived the swap resident)
+        ALLOCS.store(0, Ordering::SeqCst);
+        TRACKING.store(true, Ordering::SeqCst);
+        for _ in 0..16 {
+            for name in &hotset {
+                session.submit_borrowed(name, &seq, None).unwrap();
+            }
+            session.run_direct().unwrap();
+            for r in session.direct_replies() {
+                sink += r.label;
+            }
+        }
+        TRACKING.store(false, Ordering::SeqCst);
+        let compact_steady_allocs = ALLOCS.load(Ordering::SeqCst);
+        std::hint::black_box(sink);
+        let _ = std::fs::remove_file(&path);
+        println!(
+            "bench {:<44} clean_open={clean_open_ms:.2}ms salvage_open={salvage_open_ms:.2}ms \
+             scrub={scrub_mb_per_s:.0}MB/s compact={compact_ms:.1}ms \
+             reclaimed={} gen={} steady_allocs={compact_steady_allocs}",
+            format!("bank_lifecycle/{bmodel} ({tenants} tenants)"),
+            cs.reclaimed_bytes,
+            cs.generation
+        );
+
+        bank_lifecycle_json.set("provenance", Json::str("measured"));
+        bank_lifecycle_json.set("model", Json::str(bmodel));
+        bank_lifecycle_json.set("tenants", Json::num(tenants as f64));
+        ms(&mut bank_lifecycle_json, "clean_open_ms", clean_open_ms);
+        ms(&mut bank_lifecycle_json, "salvage_open_ms", salvage_open_ms);
+        ms(&mut bank_lifecycle_json, "scrub_mb_per_s", scrub_mb_per_s);
+        ms(&mut bank_lifecycle_json, "compact_ms", compact_ms);
+        bank_lifecycle_json.set("compact_upserts", Json::num(churn as f64));
+        bank_lifecycle_json
+            .set("reclaimed_bytes", Json::num(cs.reclaimed_bytes as f64));
+        bank_lifecycle_json.set("generation", Json::num(cs.generation as f64));
+        bank_lifecycle_json
+            .set("compact_steady_allocs", Json::num(compact_steady_allocs as f64));
 
         bank_json.set("provenance", Json::str("measured"));
         bank_json.set("model", Json::str(bmodel));
@@ -1107,8 +1191,8 @@ fn main() {
              vs blocked vs blocked+parallel vs packed+fused (native backend), plus \
              persistent-pool vs scoped dispatch latency (PR 4), multi-tenant \
              serve-path rows (PR 5), wire-ingress rows (PR 6), tiered \
-             adapter-bank rows (PR 7) and overload rows (PR 8); schema in \
-             docs/BENCH_SCHEMA.md",
+             adapter-bank rows (PR 7), overload rows (PR 8) and bank \
+             lifecycle rows (PR 9); schema in docs/BENCH_SCHEMA.md",
         ),
     );
     out.set("provenance", Json::str("measured"));
@@ -1123,6 +1207,7 @@ fn main() {
     out.set("serve", serve_json);
     out.set("ingress", ingress_json);
     out.set("bank", bank_json);
+    out.set("bank_lifecycle", bank_lifecycle_json);
     out.set("overload", overload_json);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(path, out.render_pretty()) {

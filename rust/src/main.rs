@@ -9,6 +9,9 @@
 //! hadapt serve-http --model tiny      # HTTP front door (zero-alloc ingress)
 //! hadapt bank-build --tenants 100000 --out fleet.bank   # tiered bank file
 //! hadapt serve-http --bank fleet.bank --hot 64          # serve it
+//! hadapt bank-scrub --bank fleet.bank   # verify every checksum on disk
+//! hadapt bank-churn --bank fleet.bank --upserts 500     # shadow-heavy log
+//! hadapt bank-compact --bank fleet.bank # drop shadowed/quarantined records
 //! hadapt experiment table2            # regenerate a paper table/figure
 //! hadapt experiment all               # the whole evaluation section
 //! ```
@@ -26,9 +29,17 @@
 //! `4*max_batch`), `--window-us T` (deadline batching: flush a partial
 //! wave once its oldest row has waited T µs; 0 = flush as soon as the
 //! pipe drains) and `--tenant-rps R` / `--tenant-burst B` (per-tenant
-//! token buckets; 0 = no throttle). `bank-build` adds
+//! token buckets; 0 = no throttle) and `--compact-at F` (self-compact the
+//! attached bank between waves once the shadowed fraction of its log
+//! reaches F; needs `--bank`). `bank-build` adds
 //! `--tenants N` (fleet size), `--bases a,b,c` (base tasks, reused as the
-//! bank's shared centroids) and `--out path`.
+//! bank's shared centroids) and `--out path`. The lifecycle commands all
+//! take `--bank path`: `bank-scrub` re-verifies every checksum (exit
+//! nonzero iff quarantined damage is found — a torn tail alone is
+//! benign), `bank-compact` rewrites the log dropping shadowed and
+//! quarantined records into a generation-bumped image, and `bank-churn`
+//! (`--upserts N`) round-robins nudged upserts over the bank's own
+//! tenants to create shadowed records for compaction drills.
 
 use std::time::Instant;
 
@@ -57,7 +68,8 @@ fn parse_args() -> Result<Cli> {
     if args.is_empty() {
         bail!(
             "usage: hadapt <info|pretrain|train|eval|serve-demo|serve-http|bank-build|\
-             experiment> [args] [--model M] [--task T] [--method X] [--quick] [--set k=v]"
+             bank-compact|bank-scrub|bank-churn|experiment> [args] [--model M] [--task T] \
+             [--method X] [--quick] [--set k=v]"
         );
     }
     let command = args[0].clone();
@@ -103,13 +115,18 @@ fn build_config(cli: &Cli) -> Result<Config> {
     let serve_demo = cli.command == "serve-demo";
     let serve_http = cli.command == "serve-http";
     let bank_build = cli.command == "bank-build";
+    let bank_lifecycle =
+        matches!(cli.command.as_str(), "bank-compact" | "bank-scrub" | "bank-churn");
     for (k, v) in &cli.flags {
         match k.as_str() {
             "config" | "model" | "task" | "method" | "ckpt" | "out" => {}
             "requests" | "batch" | "tasks" | "trained" if serve_demo => {}
             "addr" | "max-batch" | "tenants" | "bank" | "hot" if serve_http => {}
             "window-us" | "queue-cap" | "tenant-rps" | "tenant-burst" if serve_http => {}
+            "compact-at" if serve_http => {}
             "tenants" | "bases" if bank_build => {}
+            "bank" if bank_lifecycle => {}
+            "upserts" if cli.command == "bank-churn" => {}
             "set" => {
                 let (kk, vv) = v
                     .split_once('=')
@@ -464,6 +481,110 @@ fn cmd_bank_build(cfg: Config, cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `hadapt bank-compact`: rewrite a bank's tenant log dropping shadowed
+/// and quarantined records into a generation-bumped image, committed by
+/// write-temp + fsync + rename — a crash at any point leaves the
+/// previous generation loadable. Prints one machine-parseable
+/// `key=value` summary line (the crash-loop smoke reads it).
+fn cmd_bank_compact(cli: &Cli) -> Result<()> {
+    let path = cli.flag("bank").context("bank-compact needs --bank <path>")?;
+    let mut reader =
+        BankReader::open(path).with_context(|| format!("cannot open bank file {path}"))?;
+    let live_before = reader.live_fraction();
+    let s = reader.compact()?;
+    println!(
+        "bank-compact: generation={} tenants={} dropped_shadowed={} dropped_quarantined={} \
+         bytes_before={} bytes_after={} reclaimed_bytes={} live_frac_before={:.4}",
+        s.generation,
+        s.tenants,
+        s.dropped_shadowed,
+        s.dropped_quarantined,
+        s.bytes_before,
+        s.bytes_after,
+        s.reclaimed_bytes,
+        live_before
+    );
+    Ok(())
+}
+
+/// `hadapt bank-scrub`: re-verify every checksum in a bank file from
+/// disk — header, centroid table, a salvage scan of the tenant log, and
+/// a decode of every live payload. Prints one machine-parseable
+/// `key=value` report line plus one line per damage region, and exits
+/// nonzero iff quarantined damage was found (a torn tail alone is a
+/// benign crash artifact and does not fail the scrub).
+fn cmd_bank_scrub(cli: &Cli) -> Result<()> {
+    let path = cli.flag("bank").context("bank-scrub needs --bank <path>")?;
+    let mut reader =
+        BankReader::open(path).with_context(|| format!("cannot open bank file {path}"))?;
+    let rep = reader.scrub()?;
+    println!(
+        "bank-scrub: generation={} tenants={} records={} shadowed={} quarantined={} \
+         torn_bytes={} bytes_scanned={} live_frac={:.4}",
+        rep.generation,
+        rep.tenants,
+        rep.records,
+        rep.shadowed,
+        rep.quarantined,
+        rep.torn_bytes,
+        rep.bytes_scanned,
+        rep.live_fraction
+    );
+    for d in &rep.damage {
+        println!(
+            "  damage offset={} kind={} tenant={}",
+            d.offset,
+            d.kind,
+            d.tenant.as_deref().unwrap_or("?")
+        );
+    }
+    if rep.quarantined > 0 {
+        bail!(
+            "bank {path} carries {} quarantined damage region(s) — bank-compact drops them",
+            rep.quarantined
+        );
+    }
+    println!("bank-scrub: clean");
+    Ok(())
+}
+
+/// `hadapt bank-churn`: round-robin nudged upserts over a bank's own
+/// tenants, shadowing their previous records — the fastest way to grow
+/// the shadowed fraction that `bank-compact` (or `serve-http
+/// --compact-at`) reclaims. Used by the crash-loop smoke to exercise
+/// upsert-time crash safety.
+fn cmd_bank_churn(cli: &Cli) -> Result<()> {
+    let path = cli.flag("bank").context("bank-churn needs --bank <path>")?;
+    let upserts: usize = cli
+        .flag("upserts")
+        .unwrap_or("100")
+        .parse()
+        .context("--upserts wants a count")?;
+    let mut reader =
+        BankReader::open(path).with_context(|| format!("cannot open bank file {path}"))?;
+    let mut names: Vec<String> = reader.names().map(str::to_string).collect();
+    names.sort();
+    if names.is_empty() {
+        bail!("bank {path} holds no tenants to churn");
+    }
+    let mut out = reader.blank_adapter();
+    for i in 0..upserts {
+        reader.read_into(&names[i % names.len()], &mut out)?;
+        let layer = i % out.had_b.len();
+        out.had_b[layer][0] += 0.0625;
+        reader.upsert(&out)?;
+    }
+    println!(
+        "bank-churn: upserts={} tenants={} live_frac={:.4} log_bytes={} generation={}",
+        upserts,
+        names.len(),
+        reader.live_fraction(),
+        reader.log_bytes(),
+        reader.generation()
+    );
+    Ok(())
+}
+
 /// `hadapt serve-http`: the wire front door — bind a socket, stand up a
 /// [`ServeSession`] with synthetic tenants (same deterministic path as
 /// `serve-demo`), and serve `POST /infer` / `GET /stats` /
@@ -486,6 +607,19 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
         .context("--hot wants a number of hot-tier rows")?;
     if bank_path.is_some() && cli.flag("tenants").is_some() {
         bail!("--bank and --tenants are mutually exclusive: the bank file already names its tenants");
+    }
+    let compact_at: Option<f64> = cli
+        .flag("compact-at")
+        .map(str::parse)
+        .transpose()
+        .context("--compact-at wants a shadowed fraction in (0, 1]")?;
+    if let Some(f) = compact_at {
+        if !(f > 0.0 && f <= 1.0) {
+            bail!("--compact-at wants a shadowed fraction in (0, 1], got {f}");
+        }
+        if bank_path.is_none() {
+            bail!("--compact-at needs --bank: only an on-disk bank can be compacted");
+        }
     }
     // Overload policy: 0 keeps the legacy behavior for each axis
     // (drain-on-demand flush, no per-tenant throttle); the queue default
@@ -566,7 +700,9 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
     use std::io::Write as _;
     std::io::stdout().flush().ok();
 
-    let stats = WireServer::new(session, listener, WireLimits::default()).run()?;
+    let mut server = WireServer::new(session, listener, WireLimits::default());
+    server.set_compact_at(compact_at);
+    let stats = server.run()?;
 
     let (_, arena_misses) = engine.arena_stats();
     let pool = engine.pool_stats();
@@ -585,6 +721,13 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
         stats.rejects_shed,
         stats.window_flushes
     );
+    if stats.compactions + stats.compact_failures > 0 {
+        println!(
+            "bank lifecycle at exit: {} self-compactions, {} failed (previous generation \
+             kept serving)",
+            stats.compactions, stats.compact_failures
+        );
+    }
     println!(
         "engine counters at exit: arena misses {arena_misses}, threads spawned {}, \
          repacks {repacks}",
@@ -620,6 +763,9 @@ fn main() -> Result<()> {
         "serve-demo" => cmd_serve_demo(cfg, &cli),
         "serve-http" => cmd_serve_http(cfg, &cli),
         "bank-build" => cmd_bank_build(cfg, &cli),
+        "bank-compact" => cmd_bank_compact(&cli),
+        "bank-scrub" => cmd_bank_scrub(&cli),
+        "bank-churn" => cmd_bank_churn(&cli),
         "experiment" => cmd_experiment(cfg, &cli),
         other => bail!("unknown command '{other}'"),
     }

@@ -29,31 +29,54 @@
 //!                    fnv1a-64 over the payload
 //! ```
 //!
-//! ## Crash safety
+//! ## Crash safety and salvage
 //!
 //! A full build ([`BankBuilder::write`]) goes through write-temp +
 //! `fsync` + atomic rename, so a crashed build leaves the previous file
-//! intact. An [`BankReader::upsert`] appends one record and `fsync`s;
-//! [`BankReader::open`] scans the log and stops at the first torn or
-//! corrupt record (short read, bad magic, impossible length, checksum
-//! mismatch), so a reload after a crash always yields exactly the last
-//! committed state — `tests/bank_persistence.rs` truncates an upsert at
-//! every byte boundary to pin this. Later records shadow earlier ones
-//! (the log is an upsert history), and the next upsert truncates any
-//! torn tail before appending.
+//! intact. An [`BankReader::upsert`] appends one record and `fsync`s.
+//!
+//! [`BankReader::open`] distinguishes two failure shapes in the tenant
+//! log. A **torn tail** — an unparseable trailing region with no valid
+//! record after it — is the only artifact a crash can leave (everything
+//! before it was `fsync`ed), so it is dropped: the next upsert truncates
+//! it and a reload yields exactly the last committed state
+//! (`tests/bank_persistence.rs` truncates an upsert at every byte
+//! boundary to pin this). **Mid-log corruption** — a bad record with a
+//! valid record after it — cannot come from a crash, so the scan
+//! resynchronizes to the next record magic, quarantines exactly the
+//! damaged region with a typed [`BankDamage`], and keeps indexing the
+//! tail: one flipped byte costs at most one tenant, never the suffix.
+//! Quarantined regions are preserved on disk (upsert never truncates
+//! below the last structurally complete record) until a
+//! [`BankReader::compact`] rewrites the log without them.
+//!
+//! ## Generations and online compaction
+//!
+//! The header carries a **generation** counter (the word PR 7 reserved,
+//! so generation-0 files are byte-identical to the old format).
+//! [`BankReader::compact`] rewrites the log dropping shadowed and
+//! quarantined records into a `generation + 1` image, committed by the
+//! same write-temp + `fsync` + rename discipline, then reopens it in
+//! place — a crash or injected fault at any point leaves the previous
+//! generation serving. [`BankReader::scrub`] re-verifies every checksum
+//! on disk (deeper than open: it also decodes every live payload).
 //!
 //! Cold tenants are paged in by offset reads into a reusable scratch
 //! buffer ([`BankReader::read_into`]); after the scratch's high-water
 //! mark is reached, a fault costs one seek + one read + vector copies,
-//! with no per-lookup allocation.
+//! with no per-lookup allocation. All durable writes go through a thin
+//! shim that the `fault-inject` build can fail on demand
+//! (`bank.short-write`, `bank.fsync-fail`, `bank.rename-fail`,
+//! `bank.compact-crash`).
 
 use std::collections::HashMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use super::faultpoint;
 use super::serve::TaskAdapter;
 
 /// Magic bytes opening every bank file.
@@ -74,6 +97,167 @@ const FAM_POOLER_W: u8 = 4;
 const FAM_POOLER_B: u8 = 5;
 const FAM_CLS_W: u8 = 6;
 const FAM_CLS_B: u8 = 7;
+
+/// Why a tenant-log region failed to parse — the `kind` of a
+/// [`BankDamage`] diagnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DamageKind {
+    /// The bytes at the offset do not start with the record magic.
+    BadMagic,
+    /// The record head is short, or its declared length runs past the
+    /// end of the file.
+    Truncated,
+    /// The payload checksum does not match the stored checksum.
+    BadChecksum,
+    /// The checksum is valid but the tenant-name prefix is unusable
+    /// (length beyond the payload, or not UTF-8). The record's extent is
+    /// still known, so exactly one record is quarantined.
+    BadName,
+    /// A checksum-valid record whose payload fails to decode (caught by
+    /// [`BankReader::scrub`]'s deep pass — a writer bug, not bit rot).
+    BadDecode,
+    /// The trailing unparseable region, with no valid record after it —
+    /// indistinguishable from a crash-torn append, so it is truncated by
+    /// the next upsert instead of quarantined.
+    TornTail,
+}
+
+impl std::fmt::Display for DamageKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DamageKind::BadMagic => "bad-magic",
+            DamageKind::Truncated => "truncated",
+            DamageKind::BadChecksum => "bad-checksum",
+            DamageKind::BadName => "bad-name",
+            DamageKind::BadDecode => "bad-decode",
+            DamageKind::TornTail => "torn-tail",
+        })
+    }
+}
+
+/// One damaged region of the tenant log, reported by
+/// [`BankReader::open`] (via [`BankReader::damage`]) and
+/// [`BankReader::scrub`]. A contiguous run of unparseable bytes is one
+/// diagnostic, stamped with the first failure seen at its start.
+#[derive(Debug, Clone)]
+pub struct BankDamage {
+    /// Byte offset in the file where the damaged region starts.
+    pub offset: u64,
+    /// What failed first at that offset.
+    pub kind: DamageKind,
+    /// Best-effort tenant name parsed from the (untrusted) payload, when
+    /// the name prefix was still readable.
+    pub tenant: Option<String>,
+}
+
+// ---- injectable storage shim -------------------------------------------
+//
+// Every durable byte the bank writes goes through these functions, so
+// the `fault-inject` build can drill short writes, failed fsyncs and
+// failed renames at the exact operation the production build performs.
+// Without the feature, `faultpoint::fire` is a compiled-out `false`.
+
+/// Write `buf`, or fail partway through when `bank.short-write` is
+/// armed: half the bytes land, then a typed error — what a full disk or
+/// a yanked cord leaves behind.
+fn shim_write(f: &mut File, buf: &[u8]) -> Result<()> {
+    if faultpoint::fire("bank.short-write") {
+        let half = buf.len() / 2;
+        let _ = f.write_all(&buf[..half]);
+        bail!("bank I/O fault injected: short write ({half} of {} bytes)", buf.len());
+    }
+    f.write_all(buf)?;
+    Ok(())
+}
+
+/// `sync_all`, or a typed failure when `bank.fsync-fail` is armed.
+fn shim_sync_all(f: &File) -> Result<()> {
+    if faultpoint::fire("bank.fsync-fail") {
+        bail!("bank I/O fault injected: fsync failed");
+    }
+    f.sync_all()?;
+    Ok(())
+}
+
+/// `sync_data`, or a typed failure when `bank.fsync-fail` is armed.
+fn shim_sync_data(f: &File) -> Result<()> {
+    if faultpoint::fire("bank.fsync-fail") {
+        bail!("bank I/O fault injected: fsync failed");
+    }
+    f.sync_data()?;
+    Ok(())
+}
+
+/// `fs::rename`, or a typed failure when `bank.rename-fail` is armed —
+/// the commit point of every atomic bank write.
+fn shim_rename(from: &Path, to: &Path) -> Result<()> {
+    if faultpoint::fire("bank.rename-fail") {
+        bail!("bank I/O fault injected: rename into {} failed", to.display());
+    }
+    fs::rename(from, to)
+        .with_context(|| format!("renaming bank into place at {}", to.display()))?;
+    Ok(())
+}
+
+/// Write a complete bank image atomically: `<path>.tmp` + `fsync` +
+/// rename over `path` + directory `fsync`, all through the injectable
+/// shim. A failure (or crash) at any step leaves whatever was at `path`
+/// untouched; a partial `.tmp` may remain and is overwritten by the
+/// next attempt. `crash_point`, when set, names a fault point fired
+/// after the first part lands — compaction's simulated mid-rewrite
+/// crash.
+fn write_bank_file(path: &Path, parts: &[&[u8]], crash_point: Option<&str>) -> Result<()> {
+    let mut tmp_os = path.as_os_str().to_os_string();
+    tmp_os.push(".tmp");
+    let tmp = PathBuf::from(tmp_os);
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating bank temp file {}", tmp.display()))?;
+        shim_write(&mut f, parts[0])?;
+        if crash_point.is_some_and(faultpoint::fire) {
+            bail!(
+                "bank I/O fault injected: simulated crash mid-rewrite \
+                 (partial {} left behind)",
+                tmp.display()
+            );
+        }
+        for p in &parts[1..] {
+            shim_write(&mut f, p)?;
+        }
+        shim_sync_all(&f)?;
+    }
+    shim_rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(if dir.as_os_str().is_empty() { Path::new(".") } else { dir }) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Serialize the 48-byte header. `generation` occupies the word PR 7
+/// wrote as reserved-zero, so generation-0 files are byte-identical to
+/// the old format and old files read back as generation 0.
+fn make_header(
+    geom: &BankGeometry,
+    centroid_count: usize,
+    generation: u32,
+    region_len: usize,
+) -> Vec<u8> {
+    let mut header = Vec::with_capacity(HEADER_LEN);
+    header.extend_from_slice(BANK_MAGIC);
+    push_u32(&mut header, BANK_VERSION);
+    push_u32(&mut header, geom.layers as u32);
+    push_u32(&mut header, geom.hidden as u32);
+    push_u32(&mut header, geom.classes as u32);
+    push_u32(&mut header, centroid_count as u32);
+    push_u32(&mut header, generation);
+    push_u64(&mut header, region_len as u64);
+    let hsum = fnv1a_bytes(&header);
+    push_u64(&mut header, hsum);
+    debug_assert_eq!(header.len(), HEADER_LEN);
+    header
+}
 
 /// FNV-1a over raw bytes (the string-keyed sibling lives in `util`).
 fn fnv1a_bytes(bytes: &[u8]) -> u64 {
@@ -501,38 +685,8 @@ impl BankBuilder {
         }
         let sum = fnv1a_bytes(&centroid_region);
         push_u64(&mut centroid_region, sum);
-
-        let mut header = Vec::with_capacity(HEADER_LEN);
-        header.extend_from_slice(BANK_MAGIC);
-        push_u32(&mut header, BANK_VERSION);
-        push_u32(&mut header, self.geom.layers as u32);
-        push_u32(&mut header, self.geom.hidden as u32);
-        push_u32(&mut header, self.geom.classes as u32);
-        push_u32(&mut header, self.centroids.len() as u32);
-        push_u32(&mut header, 0); // reserved
-        push_u64(&mut header, centroid_region.len() as u64);
-        let hsum = fnv1a_bytes(&header);
-        push_u64(&mut header, hsum);
-        debug_assert_eq!(header.len(), HEADER_LEN);
-
-        let mut tmp = path.as_os_str().to_os_string();
-        tmp.push(".tmp");
-        {
-            let mut f = File::create(&tmp)
-                .with_context(|| format!("creating bank temp file {}", tmp.to_string_lossy()))?;
-            f.write_all(&header)?;
-            f.write_all(&centroid_region)?;
-            f.write_all(&self.records)?;
-            f.sync_all()?;
-        }
-        fs::rename(&tmp, path)
-            .with_context(|| format!("renaming bank into place at {}", path.display()))?;
-        if let Some(dir) = path.parent() {
-            if let Ok(d) = File::open(if dir.as_os_str().is_empty() { Path::new(".") } else { dir })
-            {
-                let _ = d.sync_all();
-            }
-        }
+        let header = make_header(&self.geom, self.centroids.len(), 0, centroid_region.len());
+        write_bank_file(path, &[&header, &centroid_region, &self.records], None)?;
         let file_bytes = fs::metadata(path)?.len();
         let centroid_scalars: u64 = self.centroids.iter().map(|c| c.scalars() as u64).sum();
         Ok(BankSummary {
@@ -551,23 +705,204 @@ impl BankBuilder {
     }
 }
 
+/// One structurally complete record seen by the log scan.
+struct RecOk {
+    /// `None` when the checksum passed but the name prefix is unusable —
+    /// the record's extent is known, so it is quarantined as
+    /// [`DamageKind::BadName`] without losing the tail.
+    name: Option<String>,
+    payload_len: u32,
+    total: u64,
+}
+
+enum RecProbe {
+    Ok(RecOk),
+    Broken { kind: DamageKind, tenant: Option<String> },
+}
+
+/// Best-effort tenant name from an (untrusted) payload prefix.
+fn parse_name(payload: &[u8]) -> Option<String> {
+    let mut cur = Cursor::new(payload);
+    let n = cur.u16().ok()? as usize;
+    let bytes = cur.take(n).ok()?;
+    std::str::from_utf8(bytes).ok().map(str::to_string)
+}
+
+/// Examine the bytes at `off` as one tenant record. Structural verdicts
+/// come back as `Ok(RecProbe)`; a real I/O error (bounds are pre-checked,
+/// so `read_exact` cannot fail structurally) propagates as `Err`.
+fn probe_record(
+    file: &mut File,
+    off: u64,
+    file_len: u64,
+    scratch: &mut Vec<u8>,
+) -> Result<RecProbe> {
+    if off + 8 > file_len {
+        return Ok(RecProbe::Broken { kind: DamageKind::Truncated, tenant: None });
+    }
+    let mut rec_head = [0u8; 8];
+    file.seek(SeekFrom::Start(off))?;
+    file.read_exact(&mut rec_head)?;
+    if &rec_head[..4] != REC_MAGIC {
+        return Ok(RecProbe::Broken { kind: DamageKind::BadMagic, tenant: None });
+    }
+    let rec_len = u32::from_le_bytes(rec_head[4..].try_into().unwrap());
+    let total = 8u64 + rec_len as u64 + 8;
+    if off + total > file_len {
+        return Ok(RecProbe::Broken { kind: DamageKind::Truncated, tenant: None });
+    }
+    if scratch.len() < rec_len as usize {
+        scratch.resize(rec_len as usize, 0);
+    }
+    file.read_exact(&mut scratch[..rec_len as usize])?;
+    let mut sum = [0u8; 8];
+    file.read_exact(&mut sum)?;
+    if fnv1a_bytes(&scratch[..rec_len as usize]) != u64::from_le_bytes(sum) {
+        return Ok(RecProbe::Broken {
+            kind: DamageKind::BadChecksum,
+            tenant: parse_name(&scratch[..rec_len as usize]),
+        });
+    }
+    Ok(RecProbe::Ok(RecOk {
+        name: parse_name(&scratch[..rec_len as usize]),
+        payload_len: rec_len,
+        total,
+    }))
+}
+
+/// Find the next candidate record magic strictly after `from`. Candidates
+/// are only *candidates* — the caller re-validates with [`probe_record`],
+/// so a false `TENT` inside a corrupt payload cannot derail recovery, and
+/// scanning byte-by-byte means a valid record can never be skipped.
+fn resync(file: &mut File, from: u64, file_len: u64) -> Result<Option<u64>> {
+    const CHUNK: usize = 64 * 1024;
+    let mut buf = vec![0u8; CHUNK];
+    let mut base = from + 1;
+    while base + 4 <= file_len {
+        let want = ((file_len - base) as usize).min(CHUNK);
+        file.seek(SeekFrom::Start(base))?;
+        file.read_exact(&mut buf[..want])?;
+        for i in 0..want.saturating_sub(3) {
+            if &buf[i..i + 4] == REC_MAGIC {
+                return Ok(Some(base + i as u64));
+            }
+        }
+        if want <= 3 {
+            break;
+        }
+        // re-read the last 3 bytes so a magic spanning chunks is seen
+        base += (want - 3) as u64;
+    }
+    Ok(None)
+}
+
+/// Everything one pass over the tenant log learns.
+struct LogScan {
+    index: HashMap<String, (u64, u32)>,
+    damage: Vec<BankDamage>,
+    /// One past the last structurally complete record — the append point.
+    log_end: u64,
+    /// Bytes owned by live (newest-per-tenant) records.
+    live_bytes: u64,
+    /// Structurally complete records seen (live + shadowed + bad-name).
+    records: usize,
+    /// Records shadowed by a newer record for the same tenant.
+    shadowed: usize,
+}
+
+/// Scan the tenant append-log with salvage: index every structurally
+/// complete record, quarantine each contiguous broken region (one
+/// [`BankDamage`] per region), and classify a trailing broken region as
+/// a torn tail. Shared by [`BankReader::open`] and [`BankReader::scrub`].
+fn scan_log(
+    file: &mut File,
+    tenant_start: u64,
+    file_len: u64,
+    scratch: &mut Vec<u8>,
+) -> Result<LogScan> {
+    let mut index: HashMap<String, (u64, u32)> = HashMap::new();
+    let mut damage: Vec<BankDamage> = Vec::new();
+    let mut live_bytes = 0u64;
+    let mut records = 0usize;
+    let mut shadowed = 0usize;
+    let mut log_end = tenant_start;
+    let mut off = tenant_start;
+    let mut in_broken = false;
+    while off < file_len {
+        match probe_record(file, off, file_len, scratch)? {
+            RecProbe::Ok(rec) => {
+                in_broken = false;
+                records += 1;
+                match rec.name {
+                    Some(name) => {
+                        if let Some(old) = index.insert(name, (off + 8, rec.payload_len)) {
+                            shadowed += 1;
+                            live_bytes -= old.1 as u64 + 16;
+                        }
+                        live_bytes += rec.payload_len as u64 + 16;
+                    }
+                    None => damage.push(BankDamage {
+                        offset: off,
+                        kind: DamageKind::BadName,
+                        tenant: None,
+                    }),
+                }
+                off += rec.total;
+                log_end = off;
+            }
+            RecProbe::Broken { kind, tenant } => {
+                if !in_broken {
+                    damage.push(BankDamage { offset: off, kind, tenant });
+                    in_broken = true;
+                }
+                match resync(file, off, file_len)? {
+                    Some(next) => off = next,
+                    None => break,
+                }
+            }
+        }
+    }
+    // A trailing broken region with no valid record after it is exactly
+    // what a crash-torn append looks like — reclassify it so it is
+    // truncated by the next upsert rather than quarantined forever.
+    if in_broken {
+        if let Some(last) = damage.last_mut() {
+            last.kind = DamageKind::TornTail;
+        }
+    }
+    Ok(LogScan { index, damage, log_end, live_bytes, records, shadowed })
+}
+
 /// An open bank file: centroids resident, tenants paged in on demand.
 ///
 /// Opening validates the header and centroid checksums (hard errors —
-/// the shared tier must be intact) and scans the tenant log, stopping at
-/// the first torn or corrupt record; everything before that point is the
-/// committed state. The reader keeps the file handle for offset reads
-/// ([`BankReader::read_into`]) and crash-safe appends
-/// ([`BankReader::upsert`]).
+/// the shared tier must be intact) and scans the tenant log with
+/// salvage: every structurally complete record is indexed, damaged
+/// regions are quarantined with typed [`BankDamage`] diagnostics, and
+/// only a trailing torn region (a crash artifact) is dropped. The reader
+/// keeps the file handle for offset reads ([`BankReader::read_into`]),
+/// crash-safe appends ([`BankReader::upsert`]), deep verification
+/// ([`BankReader::scrub`]) and generation-bumping rewrites
+/// ([`BankReader::compact`]).
 #[derive(Debug)]
 pub struct BankReader {
     file: File,
+    path: PathBuf,
     geom: BankGeometry,
+    generation: u32,
     centroids: Vec<TaskAdapter>,
     /// tenant name → (payload offset, payload length) of its newest record.
     index: HashMap<String, (u64, u32)>,
-    /// Byte offset just past the last valid record (where upserts append).
-    end_of_valid: u64,
+    /// Quarantined regions (and any torn tail) found on open.
+    damage: Vec<BankDamage>,
+    /// One past the last structurally complete record (where upserts append).
+    log_end: u64,
+    /// First byte of the tenant log (just past the centroid region).
+    tenant_start: u64,
+    /// Bytes owned by live records; `live_fraction`'s numerator.
+    live_bytes: u64,
+    /// Shadow events seen (open scan + upserts since).
+    shadowed: usize,
     scratch: Vec<u8>,
 }
 
@@ -602,7 +937,7 @@ impl BankReader {
             classes: cur.u32()? as usize,
         };
         let centroid_count = cur.u32()? as usize;
-        let _reserved = cur.u32()?;
+        let generation = cur.u32()?;
         let region_len = u64::from_le_bytes(cur.take(8)?.try_into().unwrap()) as usize;
         if region_len < 8 || HEADER_LEN as u64 + region_len as u64 > file_len {
             bail!("bank centroid region length {region_len} is impossible");
@@ -626,59 +961,68 @@ impl BankReader {
             bail!("bank holds no centroids");
         }
 
-        // Scan the tenant append-log. Any torn/corrupt record ends the
-        // committed prefix — that is the crash-recovery semantics.
+        // Scan the tenant append-log with salvage: keep indexing past
+        // damaged regions, quarantining each one (see `scan_log`).
         let tenant_start = HEADER_LEN as u64 + region_len as u64;
-        let mut index = HashMap::new();
-        let mut off = tenant_start;
         let mut scratch = Vec::new();
-        loop {
-            let mut rec_head = [0u8; 8];
-            file.seek(SeekFrom::Start(off))?;
-            if file.read_exact(&mut rec_head).is_err() {
-                break;
-            }
-            if &rec_head[..4] != REC_MAGIC {
-                break;
-            }
-            let rec_len = u32::from_le_bytes(rec_head[4..].try_into().unwrap());
-            let total = 8u64 + rec_len as u64 + 8;
-            if off + total > file_len {
-                break;
-            }
-            if scratch.len() < rec_len as usize {
-                scratch.resize(rec_len as usize, 0);
-            }
-            if file.read_exact(&mut scratch[..rec_len as usize]).is_err() {
-                break;
-            }
-            let mut sum = [0u8; 8];
-            if file.read_exact(&mut sum).is_err() {
-                break;
-            }
-            if fnv1a_bytes(&scratch[..rec_len as usize]) != u64::from_le_bytes(sum) {
-                break;
-            }
-            // the name prefix is enough to index the record
-            let mut cur = Cursor::new(&scratch[..rec_len as usize]);
-            let name = match cur
-                .u16()
-                .and_then(|n| cur.take(n as usize))
-                .and_then(|b| std::str::from_utf8(b).context("tenant name is not UTF-8"))
-            {
-                Ok(n) => n.to_string(),
-                Err(_) => break,
-            };
-            index.insert(name, (off + 8, rec_len));
-            off += total;
-        }
+        let scan = scan_log(&mut file, tenant_start, file_len, &mut scratch)?;
 
-        Ok(BankReader { file, geom, centroids, index, end_of_valid: off, scratch })
+        Ok(BankReader {
+            file,
+            path: path.to_path_buf(),
+            geom,
+            generation,
+            centroids,
+            index: scan.index,
+            damage: scan.damage,
+            log_end: scan.log_end,
+            tenant_start,
+            live_bytes: scan.live_bytes,
+            shadowed: scan.shadowed,
+            scratch,
+        })
     }
 
     /// The geometry the bank was built for.
     pub fn geometry(&self) -> BankGeometry {
         self.geom
+    }
+
+    /// The header generation: 0 for freshly built banks (and every file
+    /// written before generations existed), bumped by each successful
+    /// [`BankReader::compact`].
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+
+    /// Damage diagnostics recorded by the open scan, in file order
+    /// (including a trailing torn tail, if one was present).
+    pub fn damage(&self) -> &[BankDamage] {
+        &self.damage
+    }
+
+    /// Quarantined mid-log regions — damage excluding any torn tail,
+    /// which is a benign crash artifact rather than corruption.
+    pub fn quarantined(&self) -> usize {
+        self.damage.iter().filter(|d| d.kind != DamageKind::TornTail).count()
+    }
+
+    /// Tenant-log bytes up to the append point.
+    pub fn log_bytes(&self) -> u64 {
+        self.log_end - self.tenant_start
+    }
+
+    /// Fraction of the tenant log owned by live (newest-per-tenant)
+    /// records; `1.0` for an empty log. `1.0 - live_fraction()` is the
+    /// shadowed-plus-quarantined waste a [`BankReader::compact`] would
+    /// reclaim — the `serve-http --compact-at` trigger.
+    pub fn live_fraction(&self) -> f64 {
+        let log = self.log_end - self.tenant_start;
+        if log == 0 {
+            1.0
+        } else {
+            self.live_bytes as f64 / log as f64
+        }
     }
 
     /// Committed tenant count (after shadowing).
@@ -744,22 +1088,206 @@ impl BankReader {
     }
 
     /// Append (or shadow) one tenant record, crash-safely: any torn tail
-    /// past the committed prefix is truncated away, the new record is
+    /// past the append point is truncated away, the new record is
     /// appended and `fsync`ed, and only then does the index move — a
     /// crash at any byte boundary leaves the previous state readable.
+    ///
+    /// `log_end` is one past the last *structurally complete* record, so
+    /// the truncation can only remove a torn tail — never a valid or
+    /// quarantined record sitting past mid-log damage (the PR 7 reader
+    /// clamped its append point at the first bad record and destroyed
+    /// the salvageable tail here).
     pub fn upsert(&mut self, a: &TaskAdapter) -> Result<()> {
         check_geometry(a, &self.geom)?;
         let mut rec = Vec::new();
         let (_, _stored) = encode_tenant(&mut rec, &self.centroids, a, 0.0);
-        self.file.set_len(self.end_of_valid)?;
-        self.file.seek(SeekFrom::Start(self.end_of_valid))?;
-        self.file.write_all(&rec)?;
-        self.file.sync_data()?;
+        self.file.set_len(self.log_end)?;
+        if matches!(self.damage.last(), Some(d) if d.kind == DamageKind::TornTail) {
+            self.damage.pop();
+        }
+        self.file.seek(SeekFrom::Start(self.log_end))?;
+        shim_write(&mut self.file, &rec)?;
+        shim_sync_data(&self.file)?;
         let payload_len = rec.len() as u32 - 16;
-        self.index.insert(a.task.clone(), (self.end_of_valid + 8, payload_len));
-        self.end_of_valid += rec.len() as u64;
+        if let Some(old) = self.index.insert(a.task.clone(), (self.log_end + 8, payload_len)) {
+            self.shadowed += 1;
+            self.live_bytes -= old.1 as u64 + 16;
+        }
+        self.live_bytes += payload_len as u64 + 16;
+        self.log_end += rec.len() as u64;
         Ok(())
     }
+
+    /// Re-verify the whole file from disk, deeper than `open`: header and
+    /// centroid checksums (hard errors — the shared tier must be intact),
+    /// a fresh salvage scan of the tenant log, then a decode of every
+    /// live payload against the resident centroids (a checksum-valid
+    /// record that fails to decode is a writer bug, reported as
+    /// [`DamageKind::BadDecode`]). Read-only: serving state is untouched.
+    pub fn scrub(&mut self) -> Result<ScrubReport> {
+        let file_len = self.file.metadata()?.len();
+        let mut header = [0u8; HEADER_LEN];
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.read_exact(&mut header).context("bank header truncated")?;
+        let stored = u64::from_le_bytes(header[HEADER_LEN - 8..].try_into().unwrap());
+        if fnv1a_bytes(&header[..HEADER_LEN - 8]) != stored {
+            bail!("scrub: bank header checksum mismatch in {}", self.path.display());
+        }
+        let region_len = (self.tenant_start - HEADER_LEN as u64) as usize;
+        let mut region = vec![0u8; region_len];
+        self.file.read_exact(&mut region).context("bank centroid region truncated")?;
+        let stored = u64::from_le_bytes(region[region_len - 8..].try_into().unwrap());
+        if fnv1a_bytes(&region[..region_len - 8]) != stored {
+            bail!("scrub: bank centroid table checksum mismatch in {}", self.path.display());
+        }
+        let mut scan = scan_log(&mut self.file, self.tenant_start, file_len, &mut self.scratch)?;
+        let torn_bytes = match scan.damage.last() {
+            Some(d) if d.kind == DamageKind::TornTail => file_len - scan.log_end,
+            _ => 0,
+        };
+        let mut live: Vec<(String, (u64, u32))> =
+            scan.index.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        live.sort();
+        let mut tmp = self.blank_adapter();
+        for (name, (off, len)) in live {
+            if self.scratch.len() < len as usize {
+                self.scratch.resize(len as usize, 0);
+            }
+            self.file.seek(SeekFrom::Start(off))?;
+            self.file.read_exact(&mut self.scratch[..len as usize])?;
+            let payload = &self.scratch[..len as usize];
+            if decode_tenant(payload, &self.geom, &self.centroids, &mut tmp).is_err() {
+                scan.damage.push(BankDamage {
+                    offset: off - 8,
+                    kind: DamageKind::BadDecode,
+                    tenant: Some(name),
+                });
+            }
+        }
+        scan.damage.sort_by_key(|d| d.offset);
+        let quarantined =
+            scan.damage.iter().filter(|d| d.kind != DamageKind::TornTail).count();
+        let log = scan.log_end - self.tenant_start;
+        Ok(ScrubReport {
+            generation: self.generation,
+            bytes_scanned: file_len,
+            records: scan.records,
+            tenants: scan.index.len(),
+            shadowed: scan.shadowed,
+            quarantined,
+            torn_bytes,
+            live_fraction: if log == 0 { 1.0 } else { scan.live_bytes as f64 / log as f64 },
+            damage: scan.damage,
+        })
+    }
+
+    /// Rewrite the bank dropping shadowed and quarantined records, into a
+    /// `generation + 1` image committed by write-temp + `fsync` + rename,
+    /// then adopt it in place. Crash-safe at every point: any failure up
+    /// to the rename (including every injected `bank.*` fault) leaves the
+    /// previous generation on disk and `self` still serving it. Live
+    /// records are copied verbatim with their checksums re-verified off
+    /// disk, so bit rot that appeared since open fails the compact rather
+    /// than being laundered into a fresh-looking file.
+    pub fn compact(&mut self) -> Result<CompactSummary> {
+        let bytes_before = self.file.metadata()?.len();
+        let region_len = (self.tenant_start - HEADER_LEN as u64) as usize;
+        let mut region = vec![0u8; region_len];
+        self.file.seek(SeekFrom::Start(HEADER_LEN as u64))?;
+        self.file.read_exact(&mut region).context("bank centroid region truncated")?;
+        let stored = u64::from_le_bytes(region[region_len - 8..].try_into().unwrap());
+        if fnv1a_bytes(&region[..region_len - 8]) != stored {
+            bail!(
+                "compact: bank centroid table checksum mismatch in {} — scrub first",
+                self.path.display()
+            );
+        }
+        let mut live: Vec<(u64, u32)> = self.index.values().copied().collect();
+        live.sort_unstable();
+        let mut records = Vec::with_capacity(self.live_bytes as usize);
+        for &(payload_off, payload_len) in &live {
+            let total = payload_len as usize + 16;
+            let rec_off = payload_off - 8;
+            if self.scratch.len() < total {
+                self.scratch.resize(total, 0);
+            }
+            self.file.seek(SeekFrom::Start(rec_off))?;
+            self.file.read_exact(&mut self.scratch[..total])?;
+            let payload = &self.scratch[8..8 + payload_len as usize];
+            let sum = u64::from_le_bytes(self.scratch[total - 8..total].try_into().unwrap());
+            if fnv1a_bytes(payload) != sum {
+                bail!(
+                    "compact: record at offset {rec_off} rotted since open in {} — scrub first",
+                    self.path.display()
+                );
+            }
+            records.extend_from_slice(&self.scratch[..total]);
+        }
+        let generation = self.generation + 1;
+        let header = make_header(&self.geom, self.centroids.len(), generation, region_len);
+        write_bank_file(&self.path, &[&header, &region, &records], Some("bank.compact-crash"))?;
+        // The rename committed; adopt the new image. Reuse the old
+        // scratch so a hot serve path keeps its high-water mark.
+        let scratch = std::mem::take(&mut self.scratch);
+        let dropped_shadowed = self.shadowed;
+        let dropped_quarantined = self.quarantined();
+        let mut fresh = BankReader::open(&self.path)?;
+        fresh.scratch = scratch;
+        let tenants = fresh.len();
+        *self = fresh;
+        let bytes_after = self.file.metadata()?.len();
+        Ok(CompactSummary {
+            generation,
+            tenants,
+            dropped_shadowed,
+            dropped_quarantined,
+            bytes_before,
+            bytes_after,
+            reclaimed_bytes: bytes_before.saturating_sub(bytes_after),
+        })
+    }
+}
+
+/// What [`BankReader::scrub`] verified — a disk-health report.
+#[derive(Debug, Clone)]
+pub struct ScrubReport {
+    /// Header generation of the scrubbed file.
+    pub generation: u32,
+    /// Total bytes examined (the whole file).
+    pub bytes_scanned: u64,
+    /// Structurally complete records seen (live + shadowed + bad-name).
+    pub records: usize,
+    /// Distinct live tenants.
+    pub tenants: usize,
+    /// Records shadowed by a newer record for the same tenant.
+    pub shadowed: usize,
+    /// Damage regions excluding any torn tail (bad-decode included).
+    pub quarantined: usize,
+    /// Bytes in the trailing torn region, zero when the tail is clean.
+    pub torn_bytes: u64,
+    /// Live bytes over log bytes (`1.0` for an empty log).
+    pub live_fraction: f64,
+    /// Every damage diagnostic, sorted by file offset.
+    pub damage: Vec<BankDamage>,
+}
+
+/// What one [`BankReader::compact`] accomplished.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactSummary {
+    /// Generation stamped into the new image (previous + 1).
+    pub generation: u32,
+    /// Live tenants carried into the new image.
+    pub tenants: usize,
+    /// Shadowed records dropped (open scan + upserts since).
+    pub dropped_shadowed: usize,
+    /// Quarantined damage regions dropped.
+    pub dropped_quarantined: usize,
+    /// File bytes before the rewrite.
+    pub bytes_before: u64,
+    /// File bytes after the rewrite.
+    pub bytes_after: u64,
+    /// `bytes_before - bytes_after` (saturating).
+    pub reclaimed_bytes: u64,
 }
 
 #[cfg(test)]
@@ -840,6 +1368,94 @@ mod tests {
         let mut out2 = r2.blank_adapter();
         r2.read_into("t", &mut out2).unwrap();
         assert_eq!(out2.had_b[0][1], 9.5, "reload sees the upsert");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// First byte of the tenant log, read from the file's own header.
+    fn tenant_start_of(bytes: &[u8]) -> usize {
+        let region_len = u64::from_le_bytes(bytes[32..40].try_into().unwrap()) as usize;
+        HEADER_LEN + region_len
+    }
+
+    /// Byte extents of every record in the tenant log: (offset, total).
+    fn record_extents(bytes: &[u8]) -> Vec<(usize, usize)> {
+        let mut off = tenant_start_of(bytes);
+        let mut out = Vec::new();
+        while off + 8 <= bytes.len() {
+            assert_eq!(&bytes[off..off + 4], REC_MAGIC);
+            let rec_len = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap()) as usize;
+            out.push((off, rec_len + 16));
+            off += rec_len + 16;
+        }
+        out
+    }
+
+    #[test]
+    fn salvages_past_mid_log_corruption_and_quarantines_one_tenant() {
+        let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+        let mut b = BankBuilder::new(g, vec![mini_adapter("c", &g, 1.0)], 0.0).unwrap();
+        for (name, fill) in [("alpha", 2.0), ("beta", 3.0), ("gamma", 4.0)] {
+            b.add_tenant(&mini_adapter(name, &g, fill)).unwrap();
+        }
+        let path = tmp_path("salvage");
+        b.write(&path).unwrap();
+
+        let mut bytes = std::fs::read(&path).unwrap();
+        let recs = record_extents(&bytes);
+        assert_eq!(recs.len(), 3);
+        // flip one payload byte of the MIDDLE record — PR 7's reader
+        // would have dropped beta AND gamma here
+        bytes[recs[1].0 + 12] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut r = BankReader::open(&path).unwrap();
+        assert_eq!(r.len(), 2, "exactly one tenant lost");
+        assert!(r.contains("alpha") && r.contains("gamma"));
+        assert_eq!(r.damage().len(), 1);
+        assert_eq!(r.damage()[0].kind, DamageKind::BadChecksum);
+        assert_eq!(r.damage()[0].offset, recs[1].0 as u64);
+        assert_eq!(r.damage()[0].tenant.as_deref(), Some("beta"));
+        assert_eq!(r.quarantined(), 1);
+        let mut out = r.blank_adapter();
+        r.read_into("gamma", &mut out).unwrap();
+        assert_eq!(out.had_w[0][0], 4.0, "tail tenant reads back bitwise");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compact_drops_shadowed_records_and_bumps_the_generation() {
+        let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+        let mut b = BankBuilder::new(g, vec![mini_adapter("c", &g, 1.0)], 0.0).unwrap();
+        b.add_tenant(&mini_adapter("t", &g, 2.0)).unwrap();
+        b.add_tenant(&mini_adapter("u", &g, 3.0)).unwrap();
+        let path = tmp_path("compact");
+        b.write(&path).unwrap();
+
+        let mut r = BankReader::open(&path).unwrap();
+        assert_eq!(r.generation(), 0);
+        let mut t = mini_adapter("t", &g, 2.0);
+        for fill in [5.0, 6.0, 7.0] {
+            t.had_b[0][1] = fill;
+            r.upsert(&t).unwrap();
+        }
+        assert!(r.live_fraction() < 1.0, "shadowed records dilute the log");
+
+        let summary = r.compact().unwrap();
+        assert_eq!(summary.generation, 1);
+        assert_eq!(summary.tenants, 2);
+        assert_eq!(summary.dropped_shadowed, 3);
+        assert!(summary.reclaimed_bytes > 0);
+        assert!((r.live_fraction() - 1.0).abs() < 1e-12);
+        let mut out = r.blank_adapter();
+        r.read_into("t", &mut out).unwrap();
+        assert_eq!(out.had_b[0][1], 7.0, "newest upsert survives the rewrite");
+
+        let mut r2 = BankReader::open(&path).unwrap();
+        assert_eq!(r2.generation(), 1, "generation is durable");
+        assert_eq!(r2.len(), 2);
+        let mut out2 = r2.blank_adapter();
+        r2.read_into("u", &mut out2).unwrap();
+        assert_eq!(out2.had_w[0][0], 3.0);
         std::fs::remove_file(&path).ok();
     }
 

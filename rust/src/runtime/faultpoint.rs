@@ -23,6 +23,10 @@
 //! | `admit.slow-tenant`    | submit rejects as if the bucket were empty  |
 //! | `serve.mid-wave-panic` | the wave panics before inference            |
 //! | `wire.torn-reply`      | the reply write stops halfway, then drops   |
+//! | `bank.short-write`     | a bank write lands half its bytes, then fails |
+//! | `bank.fsync-fail`      | a bank `fsync` reports failure              |
+//! | `bank.rename-fail`     | the atomic rename commit point fails        |
+//! | `bank.compact-crash`   | compaction dies mid-rewrite (partial `.tmp`) |
 //!
 //! The table is process-global and mutex-guarded; integration tests that
 //! arm points run in their own test binary (`tests/fault_injection.rs`)

@@ -45,7 +45,10 @@ pub mod workspace;
 pub mod xla_backend;
 
 pub use backend::{Backend, BatchAdapters, DeviceTensor, InferBatch, InferOut};
-pub use bankstore::{BankBuilder, BankGeometry, BankReader, BankSummary};
+pub use bankstore::{
+    BankBuilder, BankDamage, BankGeometry, BankReader, BankSummary, CompactSummary, DamageKind,
+    ScrubReport,
+};
 pub use engine::{Engine, EngineStats};
 pub use kernels::PackedMat;
 pub use manifest::{ArtifactInfo, ArtifactKind, InitKind, Manifest, ModelInfo, ParamSpec};

@@ -67,7 +67,7 @@ use crate::util::Rng;
 
 use super::admit::AdmissionController;
 use super::backend::{BatchAdapters, DeviceTensor, InferBatch, InferOut};
-use super::bankstore::BankReader;
+use super::bankstore::{BankReader, CompactSummary};
 use super::engine::Engine;
 use super::faultpoint;
 use super::manifest::ModelInfo;
@@ -302,6 +302,26 @@ impl AdapterBank {
         self.store = Some(store);
         self.hot_cap = hot;
         Ok(())
+    }
+
+    /// The attached cold-tier store, if any — read-only access to its
+    /// health surface (generation, damage, live fraction) for `/stats`
+    /// and the CLI.
+    pub fn store(&self) -> Option<&BankReader> {
+        self.store.as_ref()
+    }
+
+    /// Compact the attached store in place: rewrite its log dropping
+    /// shadowed and quarantined records into a generation-bumped image
+    /// (see [`BankReader::compact`]), then keep serving from the new
+    /// file. The hot tier is untouched — resident entries are fully
+    /// materialized, so nothing they serve depends on old file offsets —
+    /// and on any failure the previous generation keeps serving.
+    pub fn compact_store(&mut self) -> Result<CompactSummary> {
+        match self.store.as_mut() {
+            Some(s) => s.compact(),
+            None => bail!("no on-disk bank attached — nothing to compact"),
+        }
     }
 
     /// Whether `task` is servable from either tier.
@@ -861,6 +881,22 @@ impl<'e> ServeSession<'e> {
             );
         }
         self.bank.attach_store(store, hot)
+    }
+
+    /// Compact the attached on-disk bank between waves. Refused while
+    /// rows are queued: open-wave rows pin hot slots by index, and the
+    /// swap must happen at a wave boundary so admitted replies are
+    /// bitwise identical across it (the wire server calls this only
+    /// after draining its responses). The hot tier, its LRU stamps and
+    /// all serve counters survive the swap untouched.
+    pub fn compact_bank(&mut self) -> Result<CompactSummary> {
+        if !self.q_meta.is_empty() {
+            bail!(
+                "refusing to compact with {} rows queued — run the wave first",
+                self.q_meta.len()
+            );
+        }
+        self.bank.compact_store()
     }
 
     /// Queue a request for the next micro-batch; returns its reply id.

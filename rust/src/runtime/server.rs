@@ -44,6 +44,7 @@ use anyhow::Result;
 
 use crate::model::ParamStore;
 
+use super::bankstore::BankReader;
 use super::engine::Engine;
 use super::faultpoint;
 use super::serve::{synthetic_adapters, ServePolicy, ServeSession, SubmitError};
@@ -83,6 +84,11 @@ pub struct ServerStats {
     pub bytes_in: u64,
     /// Bytes written back.
     pub bytes_out: u64,
+    /// Successful self-compactions of the attached bank (`--compact-at`).
+    pub compactions: u64,
+    /// Failed self-compaction attempts; the previous generation kept
+    /// serving each time.
+    pub compact_failures: u64,
 }
 
 /// Per-request outcome slot, recorded in arrival order so responses can
@@ -134,6 +140,9 @@ pub struct WireServer<'e> {
     resp: ResponseBuf,
     /// Outcomes of the wave being gathered, in arrival order.
     slots: Vec<Slot>,
+    /// Shadowed-fraction threshold for between-wave self-compaction of
+    /// the attached bank (`None` = never self-compact).
+    compact_at: Option<f64>,
     shutdown: bool,
 }
 
@@ -156,8 +165,16 @@ impl<'e> WireServer<'e> {
             scratch: RequestScratch::default(),
             resp: ResponseBuf::default(),
             slots: Vec::with_capacity(64),
+            compact_at: None,
             shutdown: false,
         }
+    }
+
+    /// Arm between-wave self-compaction: once the shadowed fraction of
+    /// the attached bank's log (`1 - live_fraction`) reaches `frac`, the
+    /// server compacts at the next wave boundary. `None` disarms.
+    pub fn set_compact_at(&mut self, frac: Option<f64>) {
+        self.compact_at = frac;
     }
 
     /// Wire counters accumulated so far.
@@ -408,6 +425,7 @@ impl<'e> WireServer<'e> {
                 stream.write_all(self.resp.bytes())?;
                 self.stats.bytes_out += self.resp.bytes().len() as u64;
             }
+            self.maybe_compact();
             if self.shutdown {
                 // graceful drain: pipelined frames behind the shutdown
                 // (buffered or already on the wire) get typed 503s, not
@@ -460,6 +478,30 @@ impl<'e> WireServer<'e> {
         Ok(())
     }
 
+    /// Between-wave self-compaction (`--compact-at`): once the shadowed
+    /// fraction of the attached bank's log crosses the threshold, rewrite
+    /// it here — the wave's responses are already on the wire and the
+    /// queue is empty, so admitted replies are bitwise identical across
+    /// the generation swap. A failure is counted (`compact_failures`) and
+    /// the previous generation keeps serving; the server never dies here.
+    fn maybe_compact(&mut self) {
+        let Some(threshold) = self.compact_at else { return };
+        if self.session.pending() != 0 {
+            return;
+        }
+        let shadow = match self.session.bank().store() {
+            Some(s) if s.log_bytes() > 0 => 1.0 - s.live_fraction(),
+            _ => return,
+        };
+        if shadow < threshold {
+            return;
+        }
+        match self.session.compact_bank() {
+            Ok(_) => self.stats.compactions += 1,
+            Err(_) => self.stats.compact_failures += 1,
+        }
+    }
+
     /// Route one complete frame (`buf[..total]`, head already parsed).
     fn route_request(&mut self, head: &Head, total: usize) -> Slot {
         match (head.route, head.method) {
@@ -500,8 +542,10 @@ impl<'e> WireServer<'e> {
     /// admit/shed/throttle ledger) + session serve counters +
     /// tiered-bank counters + the engine's arena/pool/pack counters +
     /// the active overload policy, flat JSON. The `bank_*` keys are
-    /// always present and stay zero when no on-disk bank is attached;
-    /// the overload counters stay zero on an unloaded steady path.
+    /// always present and inert when no on-disk bank is attached
+    /// (counters and `bank_generation`/`bank_quarantined` zero,
+    /// `bank_log_live_frac` 1.0); the overload counters stay zero on an
+    /// unloaded steady path.
     fn push_stats(&mut self) {
         let s = self.stats;
         let serve = self.session.stats();
@@ -509,6 +553,11 @@ impl<'e> WireServer<'e> {
         let queue_cap = self.session.queue_cap();
         let bank = self.session.bank().bank_stats();
         let bank_resident = self.session.bank().resident_bytes();
+        let (bank_generation, bank_quarantined, bank_live_frac) =
+            match self.session.bank().store() {
+                Some(store) => (store.generation(), store.quarantined(), store.live_fraction()),
+                None => (0, 0, 1.0),
+            };
         let engine = self.session.engine();
         let (arena_hits, arena_misses) = engine.arena_stats();
         let (packs_live, repacks) = engine.pack_stats();
@@ -540,6 +589,10 @@ impl<'e> WireServer<'e> {
                  \"queue_cap\":{queue_cap},\"window_us\":{},\"tenant_rps\":{},\
                  \"bank_hot_hits\":{},\"bank_cold_faults\":{},\"bank_promotions\":{},\
                  \"bank_resident_bytes\":{bank_resident},\
+                 \"bank_generation\":{bank_generation},\
+                 \"bank_quarantined\":{bank_quarantined},\
+                 \"bank_log_live_frac\":{bank_live_frac:.4},\
+                 \"compactions\":{},\"compact_failures\":{},\
                  \"arena_hits\":{arena_hits},\"arena_misses\":{arena_misses},\
                  \"pool_threads_spawned\":{},\"pool_jobs\":{},\"pool_wakeups\":{},\
                  \"packs_live\":{packs_live},\"repacks\":{repacks}}}",
@@ -552,6 +605,8 @@ impl<'e> WireServer<'e> {
                 bank.hot_hits,
                 bank.cold_faults,
                 bank.promotions,
+                s.compactions,
+                s.compact_failures,
                 pool.threads_spawned,
                 pool.jobs_dispatched,
                 pool.wakeups
@@ -640,6 +695,13 @@ pub struct SpawnOpts {
     /// Overload policy applied to the session before serving (the
     /// all-zero default reproduces legacy behavior exactly).
     pub policy: ServePolicy,
+    /// On-disk bank to attach as the cold tier (`None` = hot-only).
+    pub bank_path: Option<String>,
+    /// Hot-tier capacity used when `bank_path` is set.
+    pub bank_hot: usize,
+    /// Shadowed-fraction threshold for between-wave self-compaction
+    /// (`None` = never self-compact).
+    pub compact_at: Option<f64>,
 }
 
 impl SpawnOpts {
@@ -656,6 +718,9 @@ impl SpawnOpts {
             tasks: vec!["sst2".to_string(), "rte".to_string()],
             limits: WireLimits::default(),
             policy: ServePolicy::default(),
+            bank_path: None,
+            bank_hot: 8,
+            compact_at: None,
         }
     }
 }
@@ -681,7 +746,12 @@ pub fn spawn_synthetic_server(
                 session.register_task(adapter)?;
             }
             session.set_policy(opts.policy)?;
-            WireServer::new(session, listener, opts.limits).run()
+            if let Some(path) = &opts.bank_path {
+                session.attach_store(BankReader::open(path)?, opts.bank_hot)?;
+            }
+            let mut server = WireServer::new(session, listener, opts.limits);
+            server.set_compact_at(opts.compact_at);
+            server.run()
         })?;
     Ok((addr, handle))
 }

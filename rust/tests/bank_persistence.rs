@@ -24,7 +24,7 @@ use std::path::PathBuf;
 use hadapt::model::ParamStore;
 use hadapt::runtime::{
     synthetic_adapters, synthetic_tenant, AdapterBank, BankBuilder, BankGeometry, BankReader,
-    Engine, ServeRequest, ServeSession, TaskAdapter,
+    DamageKind, Engine, ServeRequest, ServeSession, TaskAdapter,
 };
 
 fn engine2() -> Engine {
@@ -299,6 +299,375 @@ fn torn_upsert_always_reloads_the_last_committed_state() {
     }
     fs::remove_file(&path).ok();
     fs::remove_file(&cut_path).ok();
+}
+
+/// The same FNV-1a the bank uses for its checksums, reimplemented here
+/// so tests can forge a valid checksum over a doctored payload.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// First byte of the tenant log, read from the file's own header
+/// (`centroid_region_len` is the u64 at offset 32).
+fn tenant_start_of(bytes: &[u8]) -> usize {
+    48 + u64::from_le_bytes(bytes[32..40].try_into().unwrap()) as usize
+}
+
+/// Byte extents of every tenant record: (record offset, total bytes).
+fn record_extents(bytes: &[u8]) -> Vec<(usize, usize)> {
+    let mut off = tenant_start_of(bytes);
+    let mut out = Vec::new();
+    while off + 8 <= bytes.len() {
+        assert_eq!(&bytes[off..off + 4], b"TENT", "extent walk out of sync at {off}");
+        let rec_len = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap()) as usize;
+        out.push((off, rec_len + 16));
+        off += rec_len + 16;
+    }
+    assert_eq!(off, bytes.len(), "trailing bytes after the last record");
+    out
+}
+
+/// The corruption blast-radius proof, exhaustively: flip every single
+/// byte of a multi-tenant bank, one at a time, and assert the typed
+/// outcome per region. Header and centroid-table flips are fatal (the
+/// shared tier must be intact); a tenant-log flip costs **exactly one
+/// tenant** — quarantined with a typed [`DamageKind`] mid-log, a torn
+/// tail at the end — and every other tenant reads back bitwise.
+#[test]
+fn byte_flip_matrix_loses_at_most_one_tenant_per_flip() {
+    let g = BankGeometry { layers: 1, hidden: 2, classes: 2 };
+    let names = ["alpha", "beta", "gamma", "delta", "omega"];
+    let mut builder = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    let tenants: Vec<TaskAdapter> = names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| mini(&g, n, 2.0 + i as f32))
+        .collect();
+    for t in &tenants {
+        builder.add_tenant(t).unwrap();
+    }
+    let path = tmp("flip_src");
+    builder.write(&path).unwrap();
+    let bytes = fs::read(&path).unwrap();
+    let tenant_start = tenant_start_of(&bytes);
+    let recs = record_extents(&bytes);
+    assert_eq!(recs.len(), names.len());
+    let owner_of = |p: usize| {
+        recs.iter().position(|&(off, total)| p >= off && p < off + total).unwrap()
+    };
+
+    let flip_path = tmp("flip_cut");
+    // header flips: every one fatal
+    for p in 0..48 {
+        let mut c = bytes.clone();
+        c[p] ^= 0x01;
+        fs::write(&flip_path, &c).unwrap();
+        assert!(BankReader::open(&flip_path).is_err(), "header flip at {p} must be fatal");
+    }
+    // centroid-table flips: every one fatal
+    for p in 48..tenant_start {
+        let mut c = bytes.clone();
+        c[p] ^= 0x01;
+        fs::write(&flip_path, &c).unwrap();
+        assert!(BankReader::open(&flip_path).is_err(), "centroid flip at {p} must be fatal");
+    }
+    // tenant-log flips: exactly one tenant lost, everything else bitwise
+    for p in tenant_start..bytes.len() {
+        let mut c = bytes.clone();
+        c[p] ^= 0x01;
+        fs::write(&flip_path, &c).unwrap();
+        let victim = owner_of(p);
+        let mut r = BankReader::open(&flip_path)
+            .unwrap_or_else(|e| panic!("log flip at {p} must salvage, not fail: {e}"));
+        assert_eq!(r.len(), names.len() - 1, "flip at {p}: exactly one tenant lost");
+        assert_eq!(r.damage().len(), 1, "flip at {p}: one contiguous damage region");
+        let d = &r.damage()[0];
+        assert_eq!(d.offset, recs[victim].0 as u64, "flip at {p}: damage names the record");
+        if victim == names.len() - 1 {
+            assert_eq!(d.kind, DamageKind::TornTail, "flip at {p}: trailing damage is torn");
+            assert_eq!(r.quarantined(), 0, "a torn tail is not quarantine");
+        } else {
+            assert!(
+                matches!(
+                    d.kind,
+                    DamageKind::BadMagic | DamageKind::Truncated | DamageKind::BadChecksum
+                ),
+                "flip at {p}: mid-log damage must be typed, got {:?}",
+                d.kind
+            );
+            assert_eq!(r.quarantined(), 1);
+        }
+        for (i, t) in tenants.iter().enumerate() {
+            if i == victim {
+                assert!(!r.contains(&t.task), "flip at {p}: the victim is unserved");
+                continue;
+            }
+            let mut got = r.blank_adapter();
+            r.read_into(&t.task, &mut got)
+                .unwrap_or_else(|e| panic!("flip at {p}: survivor '{}': {e}", t.task));
+            assert_eq!(adapter_bits(&got), adapter_bits(t), "flip at {p} survivor {}", t.task);
+        }
+    }
+    fs::remove_file(&path).ok();
+    fs::remove_file(&flip_path).ok();
+}
+
+/// The same blast-radius claim at fleet scale: a 1000-tenant bank with a
+/// sampled set of single-byte flips — each flip costs at most one of the
+/// 1000 tenants and a reload stays cheap and typed.
+#[test]
+fn thousand_tenant_bank_survives_sampled_flips_with_unit_blast_radius() {
+    let g = BankGeometry { layers: 1, hidden: 2, classes: 2 };
+    let n = 1000usize;
+    let mut builder = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    for i in 0..n {
+        builder.add_tenant(&mini(&g, &format!("t{i:06}"), 1.0 + (i % 17) as f32 * 0.25)).unwrap();
+    }
+    let path = tmp("flip1000_src");
+    builder.write(&path).unwrap();
+    let bytes = fs::read(&path).unwrap();
+    let tenant_start = tenant_start_of(&bytes);
+    let log_len = bytes.len() - tenant_start;
+
+    let flip_path = tmp("flip1000_cut");
+    for k in 0..25usize {
+        let p = tenant_start + (k.wrapping_mul(2654435761) + 13) % log_len;
+        let mut c = bytes.clone();
+        c[p] ^= 0xff;
+        fs::write(&flip_path, &c).unwrap();
+        let r = BankReader::open(&flip_path)
+            .unwrap_or_else(|e| panic!("sampled flip at {p} must salvage: {e}"));
+        assert!(r.len() >= n - 1, "flip at {p}: lost {} tenants", n - r.len());
+        assert_eq!(r.damage().len(), 1, "flip at {p}");
+        assert!(r.quarantined() <= 1, "flip at {p}");
+    }
+    fs::remove_file(&path).ok();
+    fs::remove_file(&flip_path).ok();
+}
+
+/// Regression for the PR 7 data-loss bug: `upsert` used to truncate the
+/// file at the *first* bad record's offset, permanently destroying every
+/// valid record behind mid-log damage. Now it appends past the last
+/// structurally complete record: the tail survives the upsert, the
+/// damage stays quarantined, and a reload sees old tail + new record.
+#[test]
+fn upsert_after_mid_log_damage_never_deletes_valid_records() {
+    let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+    let mut builder = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    for (name, fill) in [("alpha", 2.0), ("beta", 3.0), ("gamma", 4.0)] {
+        builder.add_tenant(&mini(&g, name, fill)).unwrap();
+    }
+    let path = tmp("upsert_after_damage");
+    builder.write(&path).unwrap();
+
+    let mut bytes = fs::read(&path).unwrap();
+    let recs = record_extents(&bytes);
+    bytes[recs[1].0 + 10] ^= 0xff; // corrupt 'beta', mid-log
+    fs::write(&path, &bytes).unwrap();
+
+    {
+        let mut r = BankReader::open(&path).unwrap();
+        assert_eq!(r.quarantined(), 1);
+        assert!(r.contains("gamma"), "the tail is salvaged on open");
+        r.upsert(&mini(&g, "fresh", 9.0)).unwrap();
+    }
+
+    let mut r = BankReader::open(&path).unwrap();
+    assert!(r.contains("gamma"), "upsert must not have truncated the salvaged tail");
+    assert!(r.contains("alpha") && r.contains("fresh"));
+    assert_eq!(r.len(), 3);
+    assert_eq!(r.quarantined(), 1, "the damaged region is preserved, not deleted");
+    let mut got = r.blank_adapter();
+    r.read_into("gamma", &mut got).unwrap();
+    assert_eq!(adapter_bits(&got), adapter_bits(&mini(&g, "gamma", 4.0)));
+    r.read_into("fresh", &mut got).unwrap();
+    assert_eq!(adapter_bits(&got), adapter_bits(&mini(&g, "fresh", 9.0)));
+    fs::remove_file(&path).ok();
+}
+
+/// Regression for the PR 7 scan bug: a checksum-valid record whose name
+/// is not UTF-8 ended the whole scan (`Err(_) => break`), silently
+/// dropping the tail. Now it quarantines exactly that record as
+/// [`DamageKind::BadName`] and keeps indexing.
+#[test]
+fn non_utf8_name_quarantines_one_record_not_the_tail() {
+    let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+    let mut builder = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    for (name, fill) in [("aa", 2.0), ("bb", 3.0), ("cc", 4.0)] {
+        builder.add_tenant(&mini(&g, name, fill)).unwrap();
+    }
+    let path = tmp("badname");
+    builder.write(&path).unwrap();
+
+    // overwrite 'bb''s name bytes with invalid UTF-8, then re-forge the
+    // payload checksum so the record stays structurally valid
+    let mut bytes = fs::read(&path).unwrap();
+    let recs = record_extents(&bytes);
+    let (off, total) = recs[1];
+    let payload_len = total - 16;
+    bytes[off + 10] = 0xff; // name bytes start at off + 8 (head) + 2 (u16 len)
+    bytes[off + 11] = 0xfe;
+    let sum = fnv1a(&bytes[off + 8..off + 8 + payload_len]);
+    bytes[off + 8 + payload_len..off + total].copy_from_slice(&sum.to_le_bytes());
+    fs::write(&path, &bytes).unwrap();
+
+    let mut r = BankReader::open(&path).unwrap();
+    assert_eq!(r.len(), 2, "only the doctored record is lost");
+    assert!(r.contains("aa") && r.contains("cc"));
+    assert_eq!(r.damage().len(), 1);
+    assert_eq!(r.damage()[0].kind, DamageKind::BadName);
+    assert_eq!(r.damage()[0].offset, off as u64);
+    assert_eq!(r.quarantined(), 1);
+    let mut got = r.blank_adapter();
+    r.read_into("cc", &mut got).unwrap();
+    assert_eq!(adapter_bits(&got), adapter_bits(&mini(&g, "cc", 4.0)), "tail reads bitwise");
+    fs::remove_file(&path).ok();
+}
+
+/// Compaction end to end at the byte level: shadowed and quarantined
+/// records are dropped, the generation is bumped durably, survivors read
+/// back bitwise, and a scrub of the new image is clean.
+#[test]
+fn compact_drops_waste_bumps_generation_and_scrubs_clean() {
+    let g = BankGeometry { layers: 2, hidden: 3, classes: 2 };
+    let mut builder = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    for (name, fill) in [("aa", 2.0), ("bb", 3.0), ("cc", 4.0), ("dd", 5.0)] {
+        builder.add_tenant(&mini(&g, name, fill)).unwrap();
+    }
+    let path = tmp("compact_e2e");
+    builder.write(&path).unwrap();
+
+    // corrupt 'bb' mid-log, then shadow 'aa' three times through upserts
+    let mut bytes = fs::read(&path).unwrap();
+    let recs = record_extents(&bytes);
+    bytes[recs[1].0 + 9] ^= 0xff;
+    fs::write(&path, &bytes).unwrap();
+    let mut r = BankReader::open(&path).unwrap();
+    assert_eq!(r.quarantined(), 1);
+    let mut aa = mini(&g, "aa", 2.0);
+    for fill in [6.0f32, 7.0, 8.0] {
+        aa.had_b[1][0] = fill;
+        r.upsert(&aa).unwrap();
+    }
+    let report = r.scrub().unwrap();
+    assert_eq!(report.quarantined, 1);
+    assert_eq!(report.shadowed, 3);
+    assert!(report.live_fraction < 1.0);
+
+    let before = fs::metadata(&path).unwrap().len();
+    let s = r.compact().unwrap();
+    assert_eq!(s.generation, 1);
+    assert_eq!(s.tenants, 3, "aa, cc, dd — bb stays lost");
+    assert_eq!(s.dropped_shadowed, 3);
+    assert_eq!(s.dropped_quarantined, 1);
+    assert_eq!(s.bytes_before, before);
+    assert!(s.bytes_after < s.bytes_before);
+    assert_eq!(s.reclaimed_bytes, s.bytes_before - s.bytes_after);
+
+    // the live reader serves the new image; a fresh open agrees
+    let mut got = r.blank_adapter();
+    r.read_into("aa", &mut got).unwrap();
+    assert_eq!(got.had_b[1][0], 8.0, "the newest shadow wins the rewrite");
+    let mut r2 = BankReader::open(&path).unwrap();
+    assert_eq!(r2.generation(), 1, "generation survives reopen");
+    assert_eq!(r2.len(), 3);
+    assert!(r2.damage().is_empty(), "the rewrite carries no damage");
+    r2.read_into("dd", &mut got).unwrap();
+    assert_eq!(adapter_bits(&got), adapter_bits(&mini(&g, "dd", 5.0)));
+    let clean = r2.scrub().unwrap();
+    assert_eq!((clean.quarantined, clean.shadowed, clean.torn_bytes), (0, 0, 0));
+    assert_eq!(clean.generation, 1);
+    assert!((clean.live_fraction - 1.0).abs() < 1e-12);
+    fs::remove_file(&path).ok();
+}
+
+/// The online-swap contract: compacting the attached store between waves
+/// must not change a single logit bit, must keep the hot tier resident
+/// (no re-faulting of hot tenants), and must leave the session serving
+/// the generation-bumped file.
+#[test]
+fn online_compact_between_waves_is_bitwise_invisible() {
+    let engine = engine2();
+    let seed = 303;
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let base_tasks = vec!["sst2".to_string(), "rte".to_string()];
+    let bases = synthetic_adapters(&info, &store, &base_tasks, seed).unwrap();
+    let fleet: Vec<TaskAdapter> = (0..8).map(|i| synthetic_tenant(&bases, i, seed)).collect();
+
+    let path = tmp("online_compact");
+    let mut builder = BankBuilder::new(tiny_geom(&engine), bases.clone(), 0.0).unwrap();
+    for t in &fleet {
+        builder.add_tenant(t).unwrap();
+    }
+    builder.write(&path).unwrap();
+    // shadow half the fleet so the compact has something to reclaim
+    {
+        let mut r = BankReader::open(&path).unwrap();
+        for t in fleet.iter().take(4) {
+            let mut nudged = t.clone();
+            nudged.had_b[0][0] += 0.5;
+            r.upsert(&nudged).unwrap();
+        }
+        assert!(r.live_fraction() < 1.0);
+    }
+
+    let mut session = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    session.attach_store(BankReader::open(&path).unwrap(), 4).unwrap();
+    let reqs: Vec<ServeRequest> = fleet
+        .iter()
+        .enumerate()
+        .map(|(i, t)| ServeRequest {
+            task: t.task.clone(),
+            seq_a: (0..6).map(|j| 3 + ((i * 13 + j * 7) % 400) as i32).collect(),
+            seq_b: None,
+        })
+        .collect();
+    let serve_all = |session: &mut ServeSession, reqs: &[ServeRequest]| -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        for wave in reqs.chunks(4) {
+            for r in wave {
+                session.submit(r.clone()).unwrap();
+            }
+            for reply in session.run_pending().unwrap() {
+                out.push(reply.logits.iter().map(|x| x.to_bits()).collect());
+            }
+        }
+        out
+    };
+
+    // first full pass: ends with the last wave (fleet[4..8]) resident hot
+    let before = serve_all(&mut session, &reqs);
+    let hot_before = session.bank().bank_stats();
+    assert_eq!(session.bank().store().unwrap().generation(), 0);
+
+    let s = session.compact_bank().unwrap();
+    assert_eq!(s.generation, 1);
+    assert_eq!(s.dropped_shadowed, 4);
+    assert_eq!(session.bank().store().unwrap().generation(), 1);
+
+    // the resident hot set survives the swap: re-serving the last wave
+    // hits hot 4 times and faults zero times against the new generation
+    let resident = serve_all(&mut session, &reqs[4..]);
+    assert_eq!(before[4..], resident[..], "hot-tier replies bitwise across the swap");
+    let hot_mid = session.bank().bank_stats();
+    assert_eq!(hot_mid.hot_hits - hot_before.hot_hits, 4, "resident tenants stay hot");
+    assert_eq!(hot_mid.cold_faults, hot_before.cold_faults, "no re-fault after the swap");
+
+    // a full pass (hot hits and cold faults from the gen-1 file alike)
+    // is bitwise identical to the pre-compact pass
+    let after = serve_all(&mut session, &reqs);
+    assert_eq!(before, after, "admitted replies must be bitwise identical across the swap");
+    assert!(
+        session.bank().bank_stats().cold_faults > hot_mid.cold_faults,
+        "evicted tenants fault in from the new generation"
+    );
+    fs::remove_file(&path).ok();
 }
 
 #[test]

@@ -1,8 +1,11 @@
 //! Fault-injection drills: arm each named fault point on the serve path
 //! and prove the failure degrades to a **typed** outcome with the server
-//! still serving afterwards — the four faults the robustness contract
-//! names (forced queue-full, forced slow tenant, a torn reply write,
-//! a panic mid-wave).
+//! still serving afterwards — the four serve faults the robustness
+//! contract names (forced queue-full, forced slow tenant, a torn reply
+//! write, a panic mid-wave) plus the four bank storage faults
+//! (`bank.short-write`, `bank.fsync-fail`, `bank.rename-fail`,
+//! `bank.compact-crash`), each of which must leave the previous
+//! on-disk generation loadable and whoever held the bank still serving.
 //!
 //! This suite lives in its own test binary on purpose: the armed-point
 //! table is process-global, so arming in a shared binary could perturb
@@ -11,9 +14,14 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
 use std::sync::Mutex;
 
-use hadapt::runtime::{faultpoint, spawn_synthetic_server, SpawnOpts};
+use hadapt::model::ParamStore;
+use hadapt::runtime::{
+    faultpoint, spawn_synthetic_server, synthetic_adapters, synthetic_tenant, BankBuilder,
+    BankGeometry, BankReader, Engine, SpawnOpts, TaskAdapter,
+};
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -170,4 +178,243 @@ fn mid_wave_panic_degrades_to_typed_500_and_the_thread_survives() {
     let stats = handle.join().unwrap().unwrap();
     assert_eq!(stats.connections, 2);
     assert_eq!(stats.replies, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Bank storage faults
+// ---------------------------------------------------------------------------
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hadapt_faultb_{}_{tag}.bank", std::process::id()))
+}
+
+/// A small hand-geometry bank on disk: `base` centroid plus `names`,
+/// each tenant filled with a distinct constant.
+fn mini_bank(path: &PathBuf, names: &[&str]) -> BankGeometry {
+    let g = BankGeometry { layers: 1, hidden: 3, classes: 2 };
+    let mut b = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    for (i, n) in names.iter().enumerate() {
+        b.add_tenant(&mini(&g, n, 2.0 + i as f32)).unwrap();
+    }
+    b.write(path).unwrap();
+    g
+}
+
+fn mini(g: &BankGeometry, name: &str, fill: f32) -> TaskAdapter {
+    TaskAdapter {
+        task: name.to_string(),
+        classes: g.classes,
+        had_w: vec![vec![fill; g.hidden]; g.layers],
+        had_b: vec![vec![fill * 0.5; g.hidden]; g.layers],
+        norm_w: vec![vec![1.0; g.hidden]; g.layers],
+        norm_b: vec![vec![0.0; g.hidden]; g.layers],
+        pooler_w: vec![fill; g.hidden * g.hidden],
+        pooler_b: vec![0.0; g.hidden],
+        cls_w: vec![fill; g.hidden * g.classes],
+        cls_b: vec![0.0; g.classes],
+    }
+}
+
+#[test]
+fn short_write_fails_the_upsert_typed_and_the_committed_state_survives() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let path = tmp("short_write");
+    let g = mini_bank(&path, &["aa", "bb"]);
+
+    let mut r = BankReader::open(&path).unwrap();
+    faultpoint::arm("bank.short-write", 1);
+    let err = r.upsert(&mini(&g, "cc", 9.0)).unwrap_err();
+    assert!(err.to_string().contains("short write"), "{err}");
+    assert!(!r.contains("cc"), "a failed append must not be indexed");
+
+    // the half-written bytes are a torn tail: a reopen salvages straight
+    // back to the committed state
+    let mut r2 = BankReader::open(&path).unwrap();
+    assert_eq!(r2.len(), 2);
+    assert!(r2.contains("aa") && r2.contains("bb") && !r2.contains("cc"));
+    assert_eq!(r2.quarantined(), 0);
+
+    // same reader, disarmed: the retry truncates the garbage and lands
+    faultpoint::reset();
+    r.upsert(&mini(&g, "cc", 9.0)).unwrap();
+    assert!(r.contains("cc"));
+    let mut r3 = BankReader::open(&path).unwrap();
+    assert_eq!(r3.len(), 3);
+    assert!(r3.damage().is_empty(), "the retry leaves no damage behind");
+    let mut got = r3.blank_adapter();
+    r3.read_into("cc", &mut got).unwrap();
+    assert_eq!(got.had_w[0][0], 9.0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fsync_failure_fails_the_rewrite_before_the_commit_point() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let path = tmp("fsync");
+    let g = mini_bank(&path, &["aa", "bb"]);
+    let committed = std::fs::read(&path).unwrap();
+
+    // a full rewrite of the same path dies at fsync — before the rename,
+    // so the committed image is untouched byte for byte
+    let mut b = BankBuilder::new(g, vec![mini(&g, "base", 1.0)], 0.0).unwrap();
+    b.add_tenant(&mini(&g, "zz", 7.0)).unwrap();
+    faultpoint::arm("bank.fsync-fail", 1);
+    let err = b.write(&path).unwrap_err();
+    assert!(err.to_string().contains("fsync failed"), "{err}");
+    assert_eq!(std::fs::read(&path).unwrap(), committed, "commit point never reached");
+    let r = BankReader::open(&path).unwrap();
+    assert!(r.contains("aa") && r.contains("bb") && !r.contains("zz"));
+
+    faultpoint::reset();
+    b.write(&path).unwrap();
+    assert!(BankReader::open(&path).unwrap().contains("zz"));
+    std::fs::remove_file(&path).ok();
+    let mut tmp_os = path.clone().into_os_string();
+    tmp_os.push(".tmp");
+    std::fs::remove_file(PathBuf::from(tmp_os)).ok();
+}
+
+#[test]
+fn rename_failure_fails_the_compact_and_the_old_generation_keeps_serving() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let path = tmp("rename");
+    let g = mini_bank(&path, &["aa", "bb", "cc"]);
+
+    let mut r = BankReader::open(&path).unwrap();
+    let mut aa = mini(&g, "aa", 2.0);
+    aa.had_b[0][0] = 6.0;
+    r.upsert(&aa).unwrap();
+    assert!(r.live_fraction() < 1.0);
+
+    faultpoint::arm("bank.rename-fail", 1);
+    let err = r.compact().unwrap_err();
+    assert!(err.to_string().contains("rename"), "{err}");
+
+    // the reader that failed to compact still serves the old generation…
+    assert_eq!(r.generation(), 0);
+    let mut got = r.blank_adapter();
+    r.read_into("aa", &mut got).unwrap();
+    assert_eq!(got.had_b[0][0], 6.0, "the shadowing upsert is still the live row");
+    r.read_into("cc", &mut got).unwrap();
+    assert_eq!(got.had_w[0][0], 4.0);
+    // …and so does a fresh open of the path
+    assert_eq!(BankReader::open(&path).unwrap().generation(), 0);
+
+    faultpoint::reset();
+    let s = r.compact().unwrap();
+    assert_eq!((s.generation, s.tenants, s.dropped_shadowed), (1, 3, 1));
+    assert_eq!(BankReader::open(&path).unwrap().generation(), 1);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn compact_crash_leaves_a_partial_tmp_and_an_intact_previous_generation() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let path = tmp("crash");
+    let g = mini_bank(&path, &["aa", "bb"]);
+    let committed = std::fs::read(&path).unwrap();
+
+    let mut r = BankReader::open(&path).unwrap();
+    r.upsert(&mini(&g, "dd", 8.0)).unwrap();
+    let churned = std::fs::read(&path).unwrap();
+
+    faultpoint::arm("bank.compact-crash", 1);
+    let err = r.compact().unwrap_err();
+    assert!(err.to_string().contains("crash mid-rewrite"), "{err}");
+    let mut tmp_os = path.clone().into_os_string();
+    tmp_os.push(".tmp");
+    let tmp_path = PathBuf::from(tmp_os);
+    assert!(tmp_path.exists(), "the crash leaves a partial sibling behind");
+    assert_eq!(std::fs::read(&path).unwrap(), churned, "the served file is untouched");
+    assert_ne!(committed, churned);
+    assert_eq!(BankReader::open(&path).unwrap().generation(), 0);
+
+    // recovery is just running compact again: the retry truncates the
+    // partial sibling and commits generation 1
+    faultpoint::reset();
+    let s = r.compact().unwrap();
+    assert_eq!(s.generation, 1);
+    assert!(!tmp_path.exists(), "the commit consumed the sibling");
+    let mut r2 = BankReader::open(&path).unwrap();
+    assert_eq!(r2.generation(), 1);
+    assert_eq!(r2.len(), 3);
+    let mut got = r2.blank_adapter();
+    r2.read_into("dd", &mut got).unwrap();
+    assert_eq!(got.had_w[0][0], 8.0);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The server-level drill: a `--compact-at` server whose self-compaction
+/// hits an injected rename failure counts the failure, keeps serving the
+/// old generation, and compacts successfully once the fault clears —
+/// all observed over the wire via `/stats`.
+#[test]
+fn server_survives_a_failed_self_compaction_and_retries_into_generation_one() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+
+    // a pre-churned tiny-geometry bank: enough shadowed bytes to cross
+    // any reasonable --compact-at threshold
+    let path = tmp("server_compact");
+    let engine = Engine::new_with_threads("/definitely/not/a/dir", 2).unwrap();
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, 113);
+    let bases =
+        synthetic_adapters(&info, &store, &["sst2".to_string(), "rte".to_string()], 113).unwrap();
+    let classes = info.params[info.param_index("classifier.bias").unwrap()].shape[0];
+    let geom = BankGeometry { layers: info.layers, hidden: info.hidden, classes };
+    let mut b = BankBuilder::new(geom, bases.clone(), 0.0).unwrap();
+    for i in 0..4 {
+        b.add_tenant(&synthetic_tenant(&bases, i, 113)).unwrap();
+    }
+    b.write(&path).unwrap();
+    {
+        let mut r = BankReader::open(&path).unwrap();
+        for i in 0..4 {
+            let mut t = synthetic_tenant(&bases, i, 113);
+            t.had_b[0][0] += 0.25;
+            r.upsert(&t).unwrap();
+        }
+        assert!(1.0 - r.live_fraction() > 0.2);
+    }
+
+    let mut opts = SpawnOpts::tiny(113);
+    opts.bank_path = Some(path.to_string_lossy().into_owned());
+    opts.compact_at = Some(0.1);
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+    let mut c = connect(addr);
+
+    // first reply's wave boundary triggers self-compaction into the
+    // armed rename failure: counted, generation unchanged, still serving
+    faultpoint::arm("bank.rename-fail", 1);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = roundtrip(&mut c, b"GET /stats HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"compact_failures\":1"), "{body}");
+    assert!(body.contains("\"bank_generation\":0"), "{body}");
+
+    // the /stats wave boundary retried with the fault cleared: the next
+    // snapshot shows the committed generation and a fully-live log
+    let (status, body) = roundtrip(&mut c, b"GET /stats HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"compactions\":1"), "{body}");
+    assert!(body.contains("\"compact_failures\":1"), "{body}");
+    assert!(body.contains("\"bank_generation\":1"), "{body}");
+    assert!(body.contains("\"bank_log_live_frac\":1.0000"), "{body}");
+
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.compactions, 1);
+    assert_eq!(stats.compact_failures, 1);
+    assert_eq!(stats.replies, 2);
+    assert_eq!(BankReader::open(&path).unwrap().generation(), 1);
+    std::fs::remove_file(&path).ok();
 }

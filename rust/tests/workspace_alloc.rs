@@ -521,7 +521,10 @@ fn bank_round(session: &mut ServeSession<'_>, working: &[&str], seqs: &[&[i32]],
 /// rounds. Round 0 faults the working set into the hot tier (allocating:
 /// slot growth, index strings, batch-buffer warm-up); rounds 1..3 run
 /// under the counting allocator — every lookup must be a hot hit and the
-/// tiered bank must add zero allocations to the serve path's zero.
+/// tiered bank must add zero allocations to the serve path's zero. An
+/// online compaction (generation swap) between steady phases must be
+/// invisible: three more tracked rounds after it stay at zero
+/// allocations with the tier counters frozen.
 fn steady_bank_loop() {
     // ---- setup (untracked): fleet -> bank file -> tiered session ----
     let engine = Engine::new_with_threads("/definitely/not/a/dir", 2).expect("engine");
@@ -570,6 +573,31 @@ fn steady_bank_loop() {
     assert_eq!(steady.cold_faults, warm.cold_faults, "steady rounds never fault");
     assert_eq!(steady.evictions, warm.evictions, "or evict");
     assert_eq!(steady.hot_hits - warm.hot_hits, 12, "every steady lookup is a hot hit");
+
+    // ---- online compaction is invisible to the steady path ----
+    // (untracked: the rewrite itself may allocate — it is a maintenance
+    // op, not a serve op)
+    let summary = session.compact_bank().expect("online compact");
+    assert_eq!(summary.generation, 1);
+    assert_eq!(session.bank().store().unwrap().generation(), 1);
+
+    // the generation swap must leave the serve path exactly as it was:
+    // zero allocations, zero new faults or evictions, all hot hits
+    ALLOCS.store(0, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        bank_round(&mut session, &working, &seqs, &mut sink);
+    }
+    TRACKING.store(false, Ordering::SeqCst);
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "steady serve across an online compaction must stay allocation-free"
+    );
+    let post = session.bank().bank_stats();
+    assert_eq!(post.cold_faults, steady.cold_faults, "the swap never re-faults the hot tier");
+    assert_eq!(post.evictions, steady.evictions);
+    assert_eq!(post.hot_hits - steady.hot_hits, 12);
 
     // a cold tenant still faults in after the steady phase, evicting one
     // resident entry to make room (untracked: faults may allocate)

@@ -1,0 +1,202 @@
+#!/usr/bin/env python3
+"""Crash-loop smoke for the durable bank lifecycle.
+
+CI's "bank crash-loop smoke" step points this script at the release
+binary and fails the build unless the bank's two durability invariants
+hold under repeated SIGKILL and injected corruption:
+
+1.  **The previous generation is always loadable.** The script runs
+    `bank-build` / `bank-churn` / `bank-compact` in a loop, killing the
+    process with SIGKILL at a random point inside each op's measured
+    runtime. After every kill, `bank-scrub` must exit 0 on the bank
+    path: same tenant count as the seed build, zero quarantined damage
+    (a torn tail from a killed churn append is a benign crash artifact
+    and scrubs clean). A kill landing after the op completed is fine —
+    the round still has to scrub clean.
+2.  **Quarantine is bounded by injected damage.** The script then flips
+    K single bytes inside the tenant log (located from the file's own
+    header: the centroid-region length is the u64 at byte offset 32, so
+    the log starts at 48 + region_len; flips land in the first half of
+    the log so at least one sits mid-log). `bank-scrub` must now exit
+    nonzero with quarantined in [1, K] and at most K tenants lost —
+    one flipped byte never costs more than one tenant. A final
+    `bank-compact` must drop exactly the quarantined regions, bump the
+    generation, and scrub clean.
+
+Stdlib only. Exit code 0 on success, 1 with a diagnostic on any failure.
+
+Usage:
+  python3 tools/bank_crash_loop.py --binary ./target/release/hadapt \
+      --tenants 1000 --rounds 12
+"""
+
+import argparse
+import os
+import random
+import signal
+import struct
+import subprocess
+import sys
+import tempfile
+import time
+
+
+def fail(msg: str) -> None:
+    print(f"bank_crash_loop: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def run(cmd, **kw):
+    """Run to completion, returning (exit_code, stdout+stderr)."""
+    p = subprocess.run(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, **kw
+    )
+    return p.returncode, p.stdout
+
+
+def run_killed(cmd, delay: float) -> bool:
+    """Start `cmd`, SIGKILL it after `delay` seconds. Returns True if the
+    kill landed while the process was still running."""
+    p = subprocess.Popen(cmd, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    time.sleep(delay)
+    landed = p.poll() is None
+    if landed:
+        os.kill(p.pid, signal.SIGKILL)
+    p.wait()
+    return landed
+
+
+def scrub(binary: str, bank: str):
+    """Run bank-scrub; return (exit_code, dict of the report key=values)."""
+    code, out = run([binary, "bank-scrub", "--bank", bank])
+    report = {}
+    for line in out.splitlines():
+        if line.startswith("bank-scrub:") and "=" in line:
+            for tok in line.split()[1:]:
+                k, _, v = tok.partition("=")
+                report[k] = v
+    if not report:
+        fail(f"bank-scrub printed no report (exit {code}):\n{out}")
+    return code, report
+
+
+def require_clean(binary: str, bank: str, tenants: int, context: str):
+    code, rep = scrub(binary, bank)
+    if code != 0:
+        fail(f"{context}: scrub must exit 0, got {code}: {rep}")
+    if int(rep["tenants"]) != tenants:
+        fail(f"{context}: expected {tenants} tenants, scrub saw {rep['tenants']}")
+    if int(rep["quarantined"]) != 0:
+        fail(f"{context}: kill-induced state must never quarantine: {rep}")
+    return rep
+
+
+def tenant_log_extent(bank: str):
+    """(log_start, file_len) read from the bank's own header."""
+    with open(bank, "rb") as f:
+        header = f.read(48)
+        file_len = os.fstat(f.fileno()).st_size
+    if len(header) < 48 or header[:8] != b"HADBANK1":
+        fail(f"{bank} does not start with a bank header")
+    region_len = struct.unpack_from("<Q", header, 32)[0]
+    return 48 + region_len, file_len
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--binary", default="./target/release/hadapt")
+    ap.add_argument("--tenants", type=int, default=1000)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--flips", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=20260808)
+    args = ap.parse_args()
+    rng = random.Random(args.seed)
+    bank = os.path.join(tempfile.mkdtemp(prefix="hadapt_crash_loop_"), "fleet.bank")
+
+    # ---- seed build + baseline op timings --------------------------------
+    ops = {
+        "bank-build": [
+            args.binary, "bank-build", "--model", "tiny",
+            "--tenants", str(args.tenants), "--out", bank,
+        ],
+        "bank-churn": [args.binary, "bank-churn", "--bank", bank, "--upserts", "200"],
+        "bank-compact": [args.binary, "bank-compact", "--bank", bank],
+    }
+    base = {}
+    for name, cmd in ops.items():
+        t0 = time.monotonic()
+        code, out = run(cmd)
+        base[name] = max(time.monotonic() - t0, 0.02)
+        if code != 0:
+            fail(f"baseline {name} failed:\n{out}")
+    require_clean(args.binary, bank, args.tenants, "baseline")
+    print(
+        "bank_crash_loop: baseline ok — "
+        + " ".join(f"{k}={v * 1e3:.0f}ms" for k, v in base.items())
+    )
+
+    # ---- phase 1: SIGKILL each op at random points -----------------------
+    names = list(ops)
+    kills = 0
+    for i in range(args.rounds):
+        name = names[i % len(names)]
+        delay = rng.uniform(0.0, base[name] * 1.1)
+        landed = run_killed(ops[name], delay)
+        kills += landed
+        rep = require_clean(
+            args.binary, bank, args.tenants,
+            f"round {i} ({name}, killed at {delay * 1e3:.0f}ms, landed={landed})",
+        )
+        print(
+            f"bank_crash_loop: round {i}: {name} kill@{delay * 1e3:.0f}ms "
+            f"landed={landed} -> gen={rep['generation']} "
+            f"tenants={rep['tenants']} torn_bytes={rep['torn_bytes']}"
+        )
+    if kills == 0:
+        fail(f"no kill landed in {args.rounds} rounds — delays are mis-scaled")
+
+    # ---- phase 2: injected corruption stays bounded ----------------------
+    log_start, file_len = tenant_log_extent(bank)
+    if log_start + 64 >= file_len:
+        fail(f"tenant log too small to flip ({log_start}..{file_len})")
+    span = (file_len - log_start) // 2  # first half: guaranteed mid-log
+    offsets = rng.sample(range(log_start, log_start + span), args.flips)
+    with open(bank, "r+b") as f:
+        for off in offsets:
+            f.seek(off)
+            byte = f.read(1)[0]
+            f.seek(off)
+            f.write(bytes([byte ^ 0xFF]))
+    code, rep = scrub(args.binary, bank)
+    if code == 0:
+        fail(f"scrub must flag injected mid-log corruption: {rep}")
+    quarantined = int(rep["quarantined"])
+    lost = args.tenants - int(rep["tenants"])
+    if not 1 <= quarantined <= args.flips:
+        fail(f"quarantine must be bounded by the {args.flips} flips: {rep}")
+    if not 0 <= lost <= args.flips:
+        fail(f"{args.flips} flipped bytes may cost at most {args.flips} tenants: {rep}")
+    print(
+        f"bank_crash_loop: {args.flips} flips -> quarantined={quarantined} "
+        f"tenants_lost={lost} (blast radius bounded)"
+    )
+
+    # ---- phase 3: compact drops the quarantine and scrubs clean ----------
+    code, out = run(ops["bank-compact"])
+    if code != 0:
+        fail(f"bank-compact must recover a quarantined bank:\n{out}")
+    code, rep = scrub(args.binary, bank)
+    if code != 0:
+        fail(f"post-compact scrub must be clean: {rep}")
+    if int(rep["quarantined"]) != 0 or int(rep["generation"]) < 1:
+        fail(f"compact must drop the quarantine and bump the generation: {rep}")
+    if int(rep["tenants"]) != args.tenants - lost:
+        fail(f"compact must keep every surviving tenant: {rep}")
+    print(
+        f"bank_crash_loop: PASS — {kills}/{args.rounds} kills landed, "
+        f"final gen={rep['generation']} tenants={rep['tenants']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

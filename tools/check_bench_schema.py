@@ -27,6 +27,12 @@ adapter bank — fleet size, on-disk compression ratio vs dense per-tenant
 storage, cold-fault p99 and the hot-hit rate of a Zipf replay, plus the
 hot-resident steady allocation counter.
 
+Since PR 9 it also carries a top-level "bank_lifecycle" section: the
+durable-bank maintenance path — clean-open vs salvage-open (one flipped
+mid-log byte) milliseconds, scrub throughput in MB/s, online-compaction
+milliseconds and reclaimed bytes after a churn at fleet scale, and the
+steady allocation counter across the generation swap.
+
 Since PR 8 it also carries a top-level "overload" section: the front
 door offered several times its admitted capacity — SLO-honest latency
 percentiles over admitted replies only, goodput vs offered load, typed
@@ -40,7 +46,10 @@ steady-state arena misses / pool spawns / repacks, and the bank's
 hot-resident steady allocations must all be 0. The bank's compression
 ratio must be at least 10 (the tiered format's acceptance floor). The
 overload section's unclassified_errors must be 0 (every overloaded
-request gets a typed outcome) and fair_dev at most 0.2.
+request gets a typed outcome) and fair_dev at most 0.2. The
+bank_lifecycle section's compact_steady_allocs must be 0 (serving across
+an online generation swap allocates nothing) and its generation at
+least 1 (the compact actually committed a new image).
 
 Every section and key is documented in docs/BENCH_SCHEMA.md.
 
@@ -124,6 +133,17 @@ BANK_KEYS = {
     "cold_fault_us_p99",
     "hot_hit_rate",
     "steady_hot_allocs",
+}
+BANK_LIFECYCLE_KEYS = {
+    "tenants",
+    "clean_open_ms",
+    "salvage_open_ms",
+    "scrub_mb_per_s",
+    "compact_ms",
+    "compact_upserts",
+    "reclaimed_bytes",
+    "generation",
+    "compact_steady_allocs",
 }
 OVERLOAD_KEYS = {
     "offered_rps",
@@ -271,6 +291,32 @@ def check_bank(bank):
         fail("bank.compression_ratio must be >= 10 (tiered-format acceptance floor)")
 
 
+def check_bank_lifecycle(life):
+    if not isinstance(life, dict):
+        fail("'bank_lifecycle' must be an object")
+    if not isinstance(life.get("provenance"), str) or not life["provenance"]:
+        fail("bank_lifecycle.provenance must be a non-empty string label")
+    if not isinstance(life.get("model"), str) or not life["model"]:
+        fail("bank_lifecycle.model must name the benchmarked model")
+    missing = BANK_LIFECYCLE_KEYS - set(life)
+    if missing:
+        fail(f"bank_lifecycle missing keys: {sorted(missing)}")
+    for key in BANK_LIFECYCLE_KEYS:
+        if not isinstance(life[key], (int, float)):
+            fail(f"bank_lifecycle.{key} must be a number")
+        if life[key] < 0:
+            fail(f"bank_lifecycle.{key} must be non-negative")
+    # contracts, not measurements: the generation swap is invisible to
+    # the serve path, and the compact must have actually committed
+    if life["compact_steady_allocs"] != 0:
+        fail(
+            "bank_lifecycle.compact_steady_allocs must be 0 "
+            "(zero-alloc serving across the online generation swap)"
+        )
+    if life["generation"] < 1:
+        fail("bank_lifecycle.generation must be >= 1 (the compact committed)")
+
+
 def check_overload(overload):
     if not isinstance(overload, dict):
         fail("'overload' must be an object")
@@ -310,6 +356,7 @@ def main(path):
         "serve",
         "ingress",
         "bank",
+        "bank_lifecycle",
         "overload",
     ):
         if key not in data:
@@ -321,6 +368,7 @@ def main(path):
     check_serve(data["serve"])
     check_ingress(data["ingress"])
     check_bank(data["bank"])
+    check_bank_lifecycle(data["bank_lifecycle"])
     check_overload(data["overload"])
     # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
@@ -332,7 +380,7 @@ def main(path):
         sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
         + len(data["serve"]["rows"])
         + len(data["ingress"]["rows"])
-        + 3  # the pool, bank and overload sections are one row each
+        + 4  # pool, bank, bank_lifecycle and overload are one row each
     )
     print(
         f"BENCH_kernels.json schema OK ({n_rows} rows, "
