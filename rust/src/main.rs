@@ -31,7 +31,11 @@
 //! pipe drains) and `--tenant-rps R` / `--tenant-burst B` (per-tenant
 //! token buckets; 0 = no throttle) and `--compact-at F` (self-compact the
 //! attached bank between waves once the shadowed fraction of its log
-//! reaches F; needs `--bank`). `bank-build` adds
+//! reaches F; needs `--bank`). Ingress concurrency is set by
+//! `--max-conns N` (connection-slot table size, default 64 — an accept
+//! past the table sheds with a typed 503 `too-many-connections`) and
+//! `--conn-queue-cap N` (per-connection queued-row quota, 0 = off, so
+//! one pipelining client cannot fill the global queue). `bank-build` adds
 //! `--tenants N` (fleet size), `--bases a,b,c` (base tasks, reused as the
 //! bank's shared centroids) and `--out path`. The lifecycle commands all
 //! take `--bank path`: `bank-scrub` re-verifies every checksum (exit
@@ -123,7 +127,7 @@ fn build_config(cli: &Cli) -> Result<Config> {
             "requests" | "batch" | "tasks" | "trained" if serve_demo => {}
             "addr" | "max-batch" | "tenants" | "bank" | "hot" if serve_http => {}
             "window-us" | "queue-cap" | "tenant-rps" | "tenant-burst" if serve_http => {}
-            "compact-at" if serve_http => {}
+            "compact-at" | "max-conns" | "conn-queue-cap" if serve_http => {}
             "tenants" | "bases" if bank_build => {}
             "bank" if bank_lifecycle => {}
             "upserts" if cli.command == "bank-churn" => {}
@@ -646,6 +650,19 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
         .transpose()
         .context("--tenant-burst wants a bucket depth in requests")?
         .unwrap_or(tenant_rps.max(1));
+    let max_conns: usize = cli
+        .flag("max-conns")
+        .unwrap_or("64")
+        .parse()
+        .context("--max-conns wants a connection-slot count")?;
+    if max_conns == 0 {
+        bail!("--max-conns wants at least 1 connection slot");
+    }
+    let conn_queue_cap: usize = cli
+        .flag("conn-queue-cap")
+        .unwrap_or("0")
+        .parse()
+        .context("--conn-queue-cap wants a per-connection queued-row quota (0 = off)")?;
     let tenants: Vec<String> = cli
         .flag("tenants")
         .unwrap_or("sst2,mrpc,rte")
@@ -681,12 +698,19 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
             }
         }
     }
-    session.set_policy(ServePolicy { queue_cap, window_us, tenant_rps, tenant_burst })?;
+    session.set_policy(ServePolicy {
+        queue_cap,
+        window_us,
+        tenant_rps,
+        tenant_burst,
+        conn_queue_cap,
+    })?;
     let listener =
         std::net::TcpListener::bind(addr).with_context(|| format!("cannot bind {addr}"))?;
     let bound = listener.local_addr()?;
     println!(
-        "serve-http: model '{model}', {} tenants, wave size {max_batch}, listening on {bound}",
+        "serve-http: model '{model}', {} tenants, wave size {max_batch}, listening on {bound} \
+         (up to {max_conns} concurrent connections)",
         session.bank().tenant_count()
     );
     println!(
@@ -702,15 +726,18 @@ fn cmd_serve_http(cfg: Config, cli: &Cli) -> Result<()> {
 
     let mut server = WireServer::new(session, listener, WireLimits::default());
     server.set_compact_at(compact_at);
+    server.set_max_conns(max_conns);
     let stats = server.run()?;
 
     let (_, arena_misses) = engine.arena_stats();
     let pool = engine.pool_stats();
     let (_, repacks) = engine.pack_stats();
     println!(
-        "serve-http done: {} connections, {} requests, {} replies, {} batches, \
-         rejects http/parse/submit {}/{}/{}, throttled {} shed {} window flushes {}",
+        "serve-http done: {} connections ({} shed at accept), {} requests, {} replies, \
+         {} batches, rejects http/parse/submit {}/{}/{}, throttled {} shed {} \
+         window flushes {}",
         stats.connections,
+        stats.conns_rejected,
         stats.requests,
         stats.replies,
         stats.batches,

@@ -55,6 +55,15 @@ pub struct AdmissionController {
     buckets: Vec<TokenBucket>,
     /// Per-slot WRR weights (empty entries read as 1).
     weights: Vec<u32>,
+    /// Per-connection queue-depth cap (`0` = unlimited — the pre-PR-10
+    /// single-connection behavior, where the global cap is the only
+    /// depth limit).
+    conn_cap: usize,
+    /// Queued-row count per connection slot, parallel to the wire
+    /// server's connection table. Sized on first use per slot; the
+    /// table is small (max_conns) and sizes stop changing after the
+    /// first full house, so the steady path never allocates.
+    conn_depth: Vec<u32>,
 }
 
 impl AdmissionController {
@@ -138,6 +147,54 @@ impl AdmissionController {
         }
         self.weights[slot] = weight;
     }
+
+    /// Replace the per-connection queue-depth cap and forget every
+    /// connection's current depth (policy changes happen with the queue
+    /// empty, so the counts are all zero anyway).
+    pub fn configure_conns(&mut self, cap: usize) {
+        self.conn_cap = cap;
+        self.conn_depth.clear();
+    }
+
+    /// The configured per-connection depth cap (0 = unlimited).
+    pub fn conn_cap(&self) -> usize {
+        self.conn_cap
+    }
+
+    /// Whether connection `conn` may queue one more row. With the cap
+    /// disabled this is free and keeps no state.
+    pub fn conn_within_quota(&mut self, conn: u32) -> bool {
+        if self.conn_cap == 0 {
+            return true;
+        }
+        let i = conn as usize;
+        if self.conn_depth.len() <= i {
+            self.conn_depth.resize(i + 1, 0);
+        }
+        (self.conn_depth[i] as usize) < self.conn_cap
+    }
+
+    /// Record that connection `conn` queued one row. Callers pair this
+    /// with a successful [`Self::conn_within_quota`] probe, so the slot
+    /// is already in range.
+    pub fn note_conn_enqueue(&mut self, conn: u32) {
+        if self.conn_cap == 0 {
+            return;
+        }
+        if let Some(d) = self.conn_depth.get_mut(conn as usize) {
+            *d += 1;
+        }
+    }
+
+    /// Record that one of connection `conn`'s queued rows left the queue
+    /// (served in a wave or dropped by an abort). Saturating: a release
+    /// without a matching enqueue (cap reconfigured mid-flight) is a
+    /// no-op rather than an underflow.
+    pub fn release_conn(&mut self, conn: u32) {
+        if let Some(d) = self.conn_depth.get_mut(conn as usize) {
+            *d = d.saturating_sub(1);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +262,38 @@ mod tests {
         // the slot was recycled for a new tenant: full burst again
         a.reset_slot(3);
         assert_eq!(a.try_admit(3, 0), Ok(()));
+    }
+
+    #[test]
+    fn conn_quota_disabled_keeps_no_state() {
+        let mut a = AdmissionController::default();
+        a.configure_conns(0);
+        for c in 0..1000u32 {
+            assert!(a.conn_within_quota(c));
+            a.note_conn_enqueue(c);
+        }
+        assert!(a.conn_depth.is_empty(), "disabled quota must keep no per-conn state");
+    }
+
+    #[test]
+    fn conn_quota_caps_depth_and_releases_restore_headroom() {
+        let mut a = AdmissionController::default();
+        a.configure_conns(2);
+        assert!(a.conn_within_quota(3));
+        a.note_conn_enqueue(3);
+        assert!(a.conn_within_quota(3));
+        a.note_conn_enqueue(3);
+        assert!(!a.conn_within_quota(3), "third row exceeds a cap of 2");
+        // a different connection has its own budget
+        assert!(a.conn_within_quota(0));
+        // a wave serving one of conn 3's rows frees one unit of quota
+        a.release_conn(3);
+        assert!(a.conn_within_quota(3));
+        // releases never underflow
+        a.release_conn(3);
+        a.release_conn(3);
+        a.release_conn(3);
+        assert!(a.conn_within_quota(3));
     }
 
     #[test]

@@ -23,6 +23,8 @@
 //! | `admit.slow-tenant`    | submit rejects as if the bucket were empty  |
 //! | `serve.mid-wave-panic` | the wave panics before inference            |
 //! | `wire.torn-reply`      | the reply write stops halfway, then drops   |
+//! | `wire.accept-fail`     | the accept sheds as if the slot table were full |
+//! | `conn.slow-reader`     | that connection reads at most 1 byte per ms |
 //! | `bank.short-write`     | a bank write lands half its bytes, then fails |
 //! | `bank.fsync-fail`      | a bank `fsync` reports failure              |
 //! | `bank.rename-fail`     | the atomic rename commit point fails        |

@@ -18,8 +18,10 @@
 //! bank of per-task Hadamard adapters, cross-task micro-batching. In
 //! front of the session sits the wire ingress layer ([`wire`] for the
 //! std-only HTTP/1.1 + pull-JSON request grammar, [`server`] for the
-//! socket loop): a `serve-http` front door whose request path touches
-//! the heap zero times after warmup. Overload never falls over silently:
+//! socket loop): a `serve-http` front door that multiplexes many
+//! nonblocking connections into the single-owner session — waves may
+//! mix rows from several connections — and whose request path touches
+//! the heap zero times after warmup, connection churn included. Overload never falls over silently:
 //! [`admit`] supplies per-tenant token buckets and fair-share weights,
 //! the session runs a bounded queue with deadline batching, and
 //! [`faultpoint`] (non-default `fault-inject` feature) lets the test

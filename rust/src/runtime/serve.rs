@@ -591,6 +591,10 @@ pub struct DirectReply<'a> {
     /// iterate in arrival order regardless; this exposes the
     /// weighted-round-robin wave assembly for tests and tracing.
     pub wave: u32,
+    /// The connection tag the row was submitted under
+    /// ([`ServeSession::submit_from`]; 0 for the in-process paths) —
+    /// what the multi-connection wire server routes replies by.
+    pub conn: u32,
 }
 
 /// A queued row: request metadata held without owning any request
@@ -600,6 +604,8 @@ struct DirectMeta {
     id: u64,
     task_idx: usize,
     enqueued: Instant,
+    /// Connection-slot tag for reply routing (0 = in-process).
+    conn: u32,
 }
 
 /// Serve-side counters (requests, batches and padding overhead).
@@ -614,6 +620,10 @@ pub struct ServeStats {
     /// Padding rows executed (fixed-geometry batches repeat the last
     /// real request; padded rows never produce replies).
     pub padded_rows: u64,
+    /// Waves that mixed rows from more than one connection tag — the
+    /// multi-connection ingress actually batching across clients rather
+    /// than serializing them.
+    pub cross_conn_waves: u64,
 }
 
 /// The session's overload policy: queue bound, flush window and
@@ -634,6 +644,12 @@ pub struct ServePolicy {
     pub tenant_rps: u32,
     /// Token-bucket depth; `0` resolves to `max(tenant_rps, 1)`.
     pub tenant_burst: u32,
+    /// Per-connection queued-row quota: one connection may hold at most
+    /// this many rows in the queue at once, so a single pipelining
+    /// client cannot fill the global queue and shed everyone else.
+    /// `0` disables the quota (the global `queue_cap` still applies).
+    /// Over-quota submits shed as [`SubmitError::QueueFull`].
+    pub conn_queue_cap: usize,
 }
 
 /// A live multi-tenant serving session: one uploaded frozen backbone, an
@@ -819,6 +835,7 @@ impl<'e> ServeSession<'e> {
         self.attn_mask.resize(b * l, 0.0);
         self.admit.configure(policy.tenant_rps, policy.tenant_burst);
         self.admit.ensure_slots(self.bank.len());
+        self.admit.configure_conns(policy.conn_queue_cap);
         Ok(())
     }
 
@@ -979,7 +996,28 @@ impl<'e> ServeSession<'e> {
         seq_a: &[i32],
         seq_b: Option<&[i32]>,
     ) -> Result<u64, SubmitError> {
+        self.submit_from(0, task, seq_a, seq_b)
+    }
+
+    /// [`Self::submit_borrowed`] with an explicit connection tag: the
+    /// multi-connection wire server stamps each row with its
+    /// connection-slot index so [`Self::direct_replies`] can be routed
+    /// back to the right socket ([`DirectReply::conn`]), and so the
+    /// per-connection queue quota ([`ServePolicy::conn_queue_cap`]) has
+    /// something to count. In-process callers use `submit_borrowed`
+    /// (tag 0); the tag never influences *what* is computed, only where
+    /// the reply is delivered and whether this connection may queue.
+    pub fn submit_from(
+        &mut self,
+        conn: u32,
+        task: &str,
+        seq_a: &[i32],
+        seq_b: Option<&[i32]>,
+    ) -> Result<u64, SubmitError> {
         if faultpoint::fire("serve.queue-full") || self.q_meta.len() >= self.q_cap {
+            return Err(SubmitError::QueueFull);
+        }
+        if !self.admit.conn_within_quota(conn) {
             return Err(SubmitError::QueueFull);
         }
         // resolve through the tiered bank, pinning every queued row's
@@ -1022,7 +1060,8 @@ impl<'e> ServeSession<'e> {
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.q_meta.push(DirectMeta { id, task_idx: slot, enqueued });
+        self.q_meta.push(DirectMeta { id, task_idx: slot, enqueued, conn });
+        self.admit.note_conn_enqueue(conn);
         self.stats.admitted += 1;
         Ok(id)
     }
@@ -1030,8 +1069,12 @@ impl<'e> ServeSession<'e> {
     /// Drop every queued row without serving it — the wire server's
     /// post-admission failure path: if a drain errors (or panics under
     /// fault injection), the admitted rows must not leak into the next
-    /// wave.
+    /// wave. Per-connection quota held by the dropped rows is released.
     pub fn abort_direct(&mut self) {
+        for i in 0..self.q_meta.len() {
+            let conn = self.q_meta[i].conn;
+            self.admit.release_conn(conn);
+        }
         self.q_meta.clear();
         self.q_wave.clear();
     }
@@ -1090,6 +1133,7 @@ impl<'e> ServeSession<'e> {
             label: self.labels[i],
             latency_s: self.latencies[i],
             wave: self.served_wave[i],
+            conn: meta.conn,
         })
     }
 
@@ -1159,6 +1203,10 @@ impl<'e> ServeSession<'e> {
             }
             let w = self.wave_rows.len();
             debug_assert!(w > 0, "a wave over a non-empty queue picked no rows");
+            let first_conn = self.q_meta[self.wave_rows[0]].conn;
+            if self.wave_rows.iter().any(|&qi| self.q_meta[qi].conn != first_conn) {
+                self.stats.cross_conn_waves += 1;
+            }
             for (row, &qi) in self.wave_rows.iter().enumerate() {
                 self.tokens[row * l..(row + 1) * l]
                     .copy_from_slice(&self.q_tokens[qi * l..(qi + 1) * l]);
@@ -1219,6 +1267,11 @@ impl<'e> ServeSession<'e> {
             self.stats.padded_rows += (b - w) as u64;
             done += w;
             wave += 1;
+        }
+        // served rows leave the queue: release their connections' quota
+        for i in 0..self.q_meta.len() {
+            let conn = self.q_meta[i].conn;
+            self.admit.release_conn(conn);
         }
         std::mem::swap(&mut self.q_meta, &mut self.served);
         std::mem::swap(&mut self.q_wave, &mut self.served_wave);

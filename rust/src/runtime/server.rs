@@ -1,34 +1,47 @@
 //! The socket loop of the serve front door: a std-only HTTP/1.1 server
-//! in front of [`ServeSession`].
+//! multiplexing many live connections in front of one [`ServeSession`].
 //!
 //! Design constraints, in order:
 //!
-//! 1. **Zero heap traffic after warmup.** Every per-request buffer — the
-//!    connection read buffer, the decode scratch, the response
-//!    accumulator, the session's batch buffers — is owned by the server
-//!    and reused; buffers only ever grow to their high-water mark. The
-//!    steady-state contract is pinned by `tests/workspace_alloc.rs`
-//!    (`steady_wire_loop`): requests 2..N through the socket perform
-//!    zero allocations, zero thread spawns and zero weight repacks.
-//! 2. **One thread.** The [`crate::runtime::Engine`] is single-owner
-//!    (`RefCell` stats, thread-pinned workers), so the server accepts
-//!    and serves sequentially. Pipelined requests on one connection are
-//!    gathered into waves and executed as padded micro-batches — wire
-//!    concurrency comes from batching, not threads.
+//! 1. **Zero heap traffic after warmup.** Per-connection read buffers
+//!    live in a fixed connection-slot table sized `max_conns` at serve
+//!    start; the decode scratch and the response accumulator are shared
+//!    (the single serve thread decodes one frame and emits one
+//!    connection's responses at a time), so connection churn and slot
+//!    reuse never allocate. Buffers only ever grow to their high-water
+//!    mark. The steady-state contract is pinned by
+//!    `tests/workspace_alloc.rs` (`steady_wire_loop` and
+//!    `steady_multi_conn_loop`): requests 2..N through the socket — on
+//!    one connection or four concurrent ones — perform zero
+//!    allocations, zero thread spawns and zero weight repacks.
+//! 2. **One thread, many sockets.** The [`crate::runtime::Engine`] is
+//!    single-owner (`RefCell` stats, thread-pinned workers), so wire
+//!    concurrency comes from readiness-polled nonblocking sockets
+//!    multiplexed into the single serve thread — never from
+//!    per-connection threads. Pipelined requests from *all* live
+//!    connections gather into shared waves (a wave may mix rows from
+//!    several connections; the session counts those in
+//!    `cross_conn_waves`), and replies route back to the owning
+//!    connection in per-connection pipeline order via the
+//!    [`DirectReply`] `conn` tag.
 //! 3. **Every rejection is typed and accounted.** Framing, parse,
 //!    admission, throttle and shed rejections land in separate
 //!    [`ServerStats`] counters and produce [`WireError`]-coded JSON
-//!    bodies; only errors that desynchronize the byte stream close the
-//!    connection.
-//! 4. **Overload degrades, never falls over.** The gather loop flushes a
-//!    wave when the oldest queued row's window expires (deadline
-//!    batching), a full queue answers typed 503s while the buffered
-//!    backlog keeps draining, a tenant over its rate gets a 429 with a
-//!    `Retry-After`, a mid-frame stall trips the progress deadline (the
-//!    slowloris guard, distinct from the between-frames idle 408), and
-//!    `POST /shutdown` drains gracefully: in-flight waves complete,
-//!    pipelined trailing requests get typed 503s, then the listener
-//!    closes.
+//!    bodies; only errors that desynchronize that connection's byte
+//!    stream close it — other connections never notice. A full
+//!    connection-slot table sheds new connections at accept with a
+//!    typed `too-many-connections` 503 (`conns_rejected`), the
+//!    backpressure ladder's accept tier.
+//! 4. **Overload degrades, never falls over.** The flush engine serves
+//!    queued rows when the oldest row's window expires (deadline
+//!    batching), a full queue answers typed 503s while buffered
+//!    backlogs keep draining, a tenant over its rate gets a 429 with a
+//!    `Retry-After`, idle and progress (slowloris) deadlines run per
+//!    connection so one stalled peer cannot wedge the rest, and
+//!    `POST /shutdown` from *any* connection drains every open
+//!    connection gracefully: queued rows from other connections are
+//!    served as 200s first, then each connection's pipelined tail gets
+//!    typed `shutting-down` 503s, then the listener closes.
 //!
 //! [`spawn_synthetic_server`] is the shared harness entry (tests, bench,
 //! load script): it binds an ephemeral port in the caller, then builds
@@ -47,18 +60,32 @@ use crate::model::ParamStore;
 use super::bankstore::BankReader;
 use super::engine::Engine;
 use super::faultpoint;
-use super::serve::{synthetic_adapters, ServePolicy, ServeSession, SubmitError};
+use super::serve::{synthetic_adapters, DirectReply, ServePolicy, ServeSession, SubmitError};
 use super::wire::{
     decode_request, parse_head, Head, Method, RejectKind, RequestScratch, ResponseBuf, Route,
     WireError, WireLimits,
 };
 
+/// How long a draining connection may sit quiet (no new bytes, nothing
+/// left to answer) before the server closes it.
+const DRAIN_QUIET_MS: u64 = 50;
+/// Hard ceiling on the whole post-shutdown drain: a client that keeps
+/// streaming cannot hold the listener hostage past this.
+const DRAIN_HARD_MS: u64 = 1500;
+/// Read chunks consumed from one connection per scan before yielding to
+/// the rest of the table (fairness bound for firehose peers).
+const READS_PER_SCAN: usize = 16;
+
 /// Wire-level counters, separate from (and reported alongside) the
 /// session's serve counters and the engine's arena/pool/pack counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct ServerStats {
-    /// Connections accepted.
+    /// Connections accepted into the slot table.
     pub connections: u64,
+    /// Connections shed at accept — slot table full (or an injected
+    /// `wire.accept-fail`), answered with a typed `too-many-connections`
+    /// 503 and an immediate close.
+    pub conns_rejected: u64,
     /// Complete request frames parsed (served or rejected).
     pub requests: u64,
     /// 200 inference replies written.
@@ -74,11 +101,12 @@ pub struct ServerStats {
     pub rejects_submit: u64,
     /// Tenant rate-limit rejections (typed 429s with `Retry-After`).
     pub rejects_throttle: u64,
-    /// Load-shedding rejections (queue full or shutting down — typed
-    /// 503s, never silent drops).
+    /// Load-shedding rejections (queue full, shutting down or the
+    /// accept-limit tier — typed 503s, never silent drops).
     pub rejects_shed: u64,
-    /// Waves flushed because the oldest queued row's window expired
-    /// (vs. flushed by a full batch, a control frame or a close).
+    /// Flush cycles triggered because the oldest queued row's window
+    /// expired (vs. triggered by a full queue, a control frame or a
+    /// close).
     pub window_flushes: u64,
     /// Bytes read off accepted connections.
     pub bytes_in: u64,
@@ -91,10 +119,12 @@ pub struct ServerStats {
     pub compact_failures: u64,
 }
 
-/// Per-request outcome slot, recorded in arrival order so responses can
-/// be written back in lockstep after the wave runs.
+/// Per-request outcome slot, recorded in that connection's arrival order
+/// so responses write back in per-connection pipeline order after the
+/// wave runs.
 enum Slot {
-    /// Admitted into the open direct wave; consumes one wave reply.
+    /// Admitted into the open direct wave; consumes one of this
+    /// connection's routed wave replies.
     Reply,
     /// Rejected with a typed error.
     Error(WireError),
@@ -102,44 +132,83 @@ enum Slot {
     Control(Route),
 }
 
-/// How gathering a wave ended.
-enum Gather {
-    /// Serve what was gathered.
-    Flush,
-    /// The byte stream is broken; serve the gathered wave, then report
-    /// `e` and close.
-    Fatal(WireError),
-    /// Peer closed cleanly between requests.
-    Eof,
+/// One entry of the fixed connection-slot table: a live socket plus all
+/// per-connection gather state. Freed slots keep their buffer capacity,
+/// so occupying a slot never allocates.
+struct ConnSlot {
+    /// The socket (`None` = slot free).
+    stream: Option<TcpStream>,
+    /// Connection read buffer (consumed front-to-front per frame).
+    buf: Vec<u8>,
+    /// Outcomes of this connection's gathered frames, in arrival order.
+    slots: Vec<Slot>,
+    /// When the frame at the buffer front started arriving (`None` =
+    /// buffer empty / between frames) — the progress-deadline anchor.
+    frame_start: Option<Instant>,
+    /// Last byte read from or written to this connection — the
+    /// idle-deadline anchor.
+    last_activity: Instant,
+    /// Last byte consumed under the injected `conn.slow-reader` fault.
+    last_slow_read: Instant,
+    /// Close after the next flush (half-close, fatal error, deadline,
+    /// `Connection: close`).
+    close: bool,
+    /// A control frame is gathered and unanswered; stop parsing further
+    /// frames from this connection until after the flush.
+    has_control: bool,
+    /// Post-shutdown: answer the pipelined tail with typed 503s, then
+    /// close.
+    draining: bool,
+    /// Injected `conn.slow-reader`: consume at most one byte per
+    /// millisecond so a frame crawls into the progress deadline.
+    slow: bool,
+    /// The peer half-closed (or the read side hard-errored); no more
+    /// bytes will arrive.
+    eof: bool,
 }
 
-/// What ended a deadline-aware wait for bytes ([`WireServer::wait_bytes`]).
-enum Wait {
-    /// The read returned this many bytes (0 = EOF / peer half-close).
-    Bytes(usize),
-    /// The queue's flush window expired: serve the queued rows now.
-    Window,
-    /// The progress deadline expired mid-frame (slowloris guard).
-    Progress,
-    /// The idle deadline expired.
-    Idle,
+impl ConnSlot {
+    /// A free slot with its read buffer pre-sized past any legal frame
+    /// (`max_head + max_body`) plus read-chunk slack, so adversarial TCP
+    /// chunking can never force a steady-state regrow (the alloc test
+    /// counts those).
+    fn new(limits: &WireLimits) -> ConnSlot {
+        let now = Instant::now();
+        ConnSlot {
+            stream: None,
+            buf: Vec::with_capacity(limits.max_head + limits.max_body + 2 * 8192),
+            slots: Vec::with_capacity(256),
+            frame_start: None,
+            last_activity: now,
+            last_slow_read: now,
+            close: false,
+            has_control: false,
+            draining: false,
+            slow: false,
+            eof: false,
+        }
+    }
 }
 
 /// The serve front door: one [`ServeSession`] behind one listening
-/// socket, single-threaded, zero-alloc steady state.
+/// socket, single-threaded, multiplexing up to `max_conns` nonblocking
+/// connections with a zero-alloc steady state.
 pub struct WireServer<'e> {
     session: ServeSession<'e>,
     listener: TcpListener,
     limits: WireLimits,
     stats: ServerStats,
-    /// Connection read buffer (consumed front-to-front per frame).
-    buf: Vec<u8>,
-    /// Reused request-decode target.
+    /// Fixed connection-slot table (materialized at [`Self::run`]).
+    conns: Vec<ConnSlot>,
+    /// Accept-limit tier: table size / concurrent-connection cap.
+    max_conns: usize,
+    /// Reused request-decode target (shared: one frame decodes at a
+    /// time on the single serve thread).
     scratch: RequestScratch,
-    /// Reused response accumulator (one `write_all` per wave).
+    /// Reused response accumulator (shared: one connection's responses
+    /// build and write at a time; one `write_all` per connection per
+    /// flush).
     resp: ResponseBuf,
-    /// Outcomes of the wave being gathered, in arrival order.
-    slots: Vec<Slot>,
     /// Shadowed-fraction threshold for between-wave self-compaction of
     /// the attached bank (`None` = never self-compact).
     compact_at: Option<f64>,
@@ -147,7 +216,9 @@ pub struct WireServer<'e> {
 }
 
 impl<'e> WireServer<'e> {
-    /// Wrap a session and a bound listener into a server.
+    /// Wrap a session and a bound listener into a server. The
+    /// connection-slot table defaults to 64 slots; size it with
+    /// [`Self::set_max_conns`] before [`Self::run`].
     pub fn new(
         session: ServeSession<'e>,
         listener: TcpListener,
@@ -158,16 +229,21 @@ impl<'e> WireServer<'e> {
             listener,
             limits,
             stats: ServerStats::default(),
-            // sized past any legal frame (max_head + max_body) plus one
-            // read chunk of slack, so adversarial TCP chunking can never
-            // force a steady-state regrow (the alloc test counts those)
-            buf: Vec::with_capacity(limits.max_head + limits.max_body + 2 * 8192),
+            conns: Vec::new(),
+            max_conns: 64,
             scratch: RequestScratch::default(),
             resp: ResponseBuf::default(),
-            slots: Vec::with_capacity(64),
             compact_at: None,
             shutdown: false,
         }
+    }
+
+    /// Resize the connection-slot table (the accept-limit tier). Call
+    /// before [`Self::run`] — the table materializes at serve start.
+    /// Clamped to at least one slot.
+    pub fn set_max_conns(&mut self, n: usize) {
+        self.max_conns = n.max(1);
+        self.conns.clear();
     }
 
     /// Arm between-wave self-compaction: once the shadowed fraction of
@@ -182,201 +258,478 @@ impl<'e> WireServer<'e> {
         self.stats
     }
 
-    /// Accept and serve connections sequentially until `POST /shutdown`.
-    /// Per-connection I/O errors drop that connection and keep serving;
-    /// only accept failures are fatal. Read deadlines (window, progress,
-    /// idle) are armed per wait inside [`Self::wait_bytes`].
+    /// Accept and serve connections until `POST /shutdown`: one scan
+    /// loop over the slot table — accept new peers, pump readable
+    /// connections, check per-connection deadlines, flush when a wave
+    /// is due — napping (clamped to the earliest deadline) only when a
+    /// scan makes no progress. Per-connection I/O errors drop that
+    /// connection and keep serving; transient accept errors are
+    /// tolerated, never fatal.
     pub fn run(mut self) -> Result<ServerStats> {
-        while !self.shutdown {
-            let stream = match self.listener.accept() {
-                Ok((stream, _peer)) => stream,
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(e) => return Err(e.into()),
-            };
-            let _ = stream.set_nodelay(true);
-            self.stats.connections += 1;
-            let _ = self.handle_conn(stream);
+        self.listener.set_nonblocking(true)?;
+        while self.conns.len() < self.max_conns {
+            self.conns.push(ConnSlot::new(&self.limits));
         }
-        Ok(self.stats)
-    }
-
-    /// Block for more bytes with the connection's deadlines armed: the
-    /// queue's flush window (only while rows are queued and the policy
-    /// has one), the progress deadline (only mid-frame — the slowloris
-    /// guard: trickled bytes reset the idle clock but never this one)
-    /// and the per-wait idle deadline. A timeout reports *which*
-    /// deadline expired instead of surfacing an error; ties resolve
-    /// toward flushing over closing.
-    fn wait_bytes(
-        &mut self,
-        stream: &mut TcpStream,
-        frame_start: &mut Option<Instant>,
-    ) -> io::Result<Wait> {
-        let now = Instant::now();
-        let window = self.session.flush_deadline();
-        let progress = frame_start.and_then(|t| {
-            (self.limits.progress_timeout_ms > 0)
-                .then(|| t + Duration::from_millis(self.limits.progress_timeout_ms))
-        });
-        let idle = (self.limits.idle_timeout_ms > 0)
-            .then(|| now + Duration::from_millis(self.limits.idle_timeout_ms));
-        let mut earliest: Option<Instant> = None;
-        for d in [window, progress, idle].into_iter().flatten() {
-            earliest = Some(earliest.map_or(d, |e| e.min(d)));
-        }
-        // ≥ 1 ms: a zero Duration would disable the timeout entirely
-        let timeout = earliest
-            .map(|d| d.saturating_duration_since(now).max(Duration::from_millis(1)));
-        let _ = stream.set_read_timeout(timeout);
-        match self.read_more(stream) {
-            Ok(n) => {
-                if n > 0 && frame_start.is_none() {
-                    *frame_start = Some(Instant::now());
-                }
-                Ok(Wait::Bytes(n))
-            }
-            Err(e) if is_timeout(&e) && earliest.is_some() => {
-                let at = earliest.unwrap();
-                if window == Some(at) {
-                    Ok(Wait::Window)
-                } else if progress == Some(at) {
-                    Ok(Wait::Progress)
-                } else {
-                    Ok(Wait::Idle)
-                }
-            }
-            Err(e) => Err(e),
-        }
-    }
-
-    /// Serve one connection: gather a pipelined wave of frames (bounded
-    /// by the flush window), run the admitted rows as weighted
-    /// round-robin micro-batches, write all responses with a single
-    /// `write_all`, repeat until close/EOF/shutdown.
-    fn handle_conn(&mut self, mut stream: TcpStream) -> io::Result<()> {
-        self.buf.clear();
-        // when the frame at the buffer front started arriving (None =
-        // the buffer is empty / between frames)
-        let mut frame_start: Option<Instant> = None;
+        self.conns.truncate(self.max_conns);
+        let mut drain_deadline: Option<Instant> = None;
         loop {
-            self.slots.clear();
-            let mut close = false;
-            let outcome = loop {
-                match parse_head(&self.buf, &self.limits) {
-                    Err(e) => break Gather::Fatal(e),
-                    Ok(Some(head)) => {
-                        let total = head.head_len + head.content_length;
-                        if self.buf.len() < total {
-                            match self.wait_bytes(&mut stream, &mut frame_start)? {
-                                Wait::Bytes(0) => break Gather::Fatal(WireError::TruncatedBody),
-                                Wait::Bytes(_) => {}
-                                // flush the queued rows around the stalled
-                                // frame; it stays buffered and its progress
-                                // clock keeps running
-                                Wait::Window => {
-                                    self.stats.window_flushes += 1;
-                                    break Gather::Flush;
-                                }
-                                Wait::Progress => {
-                                    break Gather::Fatal(WireError::ProgressTimeout)
-                                }
-                                Wait::Idle => break Gather::Fatal(WireError::IdleTimeout),
-                            }
-                            continue;
-                        }
-                        self.stats.requests += 1;
-                        let slot = self.route_request(&head, total);
-                        // consume the frame's bytes from the buffer front
-                        self.buf.copy_within(total.., 0);
-                        self.buf.truncate(self.buf.len() - total);
-                        frame_start = if self.buf.is_empty() {
-                            None
-                        } else {
-                            Some(Instant::now())
-                        };
-                        let is_control = matches!(slot, Slot::Control(_));
-                        close |= !head.keep_alive;
-                        self.slots.push(slot);
-                        // a control frame or a closing request ends the
-                        // wave; a full queue does NOT — further buffered
-                        // frames keep draining into typed 503s
-                        if is_control || close {
-                            break Gather::Flush;
-                        }
-                    }
-                    Ok(None) => {
-                        // no complete frame buffered: flush if the window
-                        // is spent (or the policy has none), else wait
-                        if !self.slots.is_empty() {
-                            let window_us = self.session.policy().window_us;
-                            if self.session.pending() == 0
-                                || window_us == 0
-                                || self.session.queue_full()
-                            {
-                                break Gather::Flush;
-                            }
-                            if self
-                                .session
-                                .flush_deadline()
-                                .is_some_and(|d| d <= Instant::now())
-                            {
-                                self.stats.window_flushes += 1;
-                                break Gather::Flush;
-                            }
-                        }
-                        match self.wait_bytes(&mut stream, &mut frame_start)? {
-                            Wait::Bytes(0) if self.buf.is_empty() => break Gather::Eof,
-                            Wait::Bytes(0) => break Gather::Fatal(WireError::TruncatedHead),
-                            Wait::Bytes(_) => {}
-                            Wait::Window => {
-                                self.stats.window_flushes += 1;
-                                break Gather::Flush;
-                            }
-                            Wait::Progress => break Gather::Fatal(WireError::ProgressTimeout),
-                            Wait::Idle => break Gather::Fatal(WireError::IdleTimeout),
-                        }
-                    }
+            let mut progress = false;
+            if !self.shutdown {
+                progress |= self.accept_new();
+            }
+            for ci in 0..self.conns.len() {
+                if self.conns[ci].stream.is_none() || self.conns[ci].draining {
+                    continue;
                 }
-            };
-            let mut fatal = None;
-            match outcome {
-                Gather::Flush => {}
-                Gather::Fatal(e) => {
-                    fatal = Some(e);
-                    close = true;
+                progress |= self.pump_conn(ci);
+                self.check_deadlines(ci);
+            }
+            if let Some(window) = self.want_flush() {
+                if window {
+                    self.stats.window_flushes += 1;
                 }
-                Gather::Eof => {
-                    if self.slots.is_empty() {
-                        return Ok(());
-                    }
-                    close = true;
+                self.flush_cycle();
+                progress = true;
+            }
+            if self.shutdown {
+                let hard = *drain_deadline
+                    .get_or_insert_with(|| Instant::now() + Duration::from_millis(DRAIN_HARD_MS));
+                progress |= self.drain_conns(hard);
+                if self.conns.iter().all(|c| c.stream.is_none()) {
+                    return Ok(self.stats);
                 }
             }
-            if self.session.pending() > 0 {
-                let batches_before = self.session.stats().batches;
-                if run_waves(&mut self.session).is_ok() {
-                    self.stats.batches += self.session.stats().batches - batches_before;
-                } else {
-                    // post-admission failure (or an injected mid-wave
-                    // panic): the wave is lost; every admitted row
-                    // answers 500 and the connection closes
-                    self.session.abort_direct();
-                    for slot in self.slots.iter_mut() {
+            if !progress {
+                self.nap();
+            }
+        }
+    }
+
+    /// Accept every pending peer: occupy a free slot, or — when the
+    /// table is full or `wire.accept-fail` fires — shed with a typed
+    /// `too-many-connections` 503 and an immediate close (the rejected
+    /// socket is still blocking, so the small reject body writes
+    /// synchronously).
+    fn accept_new(&mut self) -> bool {
+        let mut progress = false;
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _peer)) => {
+                    progress = true;
+                    let _ = stream.set_nodelay(true);
+                    let shed = faultpoint::fire("wire.accept-fail");
+                    let free = if shed { None } else { self.free_slot() };
+                    let Some(ci) = free else {
+                        self.stats.conns_rejected += 1;
+                        bump_reject(&mut self.stats, WireError::TooManyConns);
+                        self.resp.clear();
+                        self.resp.push_error(WireError::TooManyConns);
+                        if stream.write_all(self.resp.bytes()).is_ok() {
+                            self.stats.bytes_out += self.resp.bytes().len() as u64;
+                        }
+                        continue;
+                    };
+                    let _ = stream.set_nonblocking(true);
+                    self.stats.connections += 1;
+                    let slow = faultpoint::fire("conn.slow-reader");
+                    let now = Instant::now();
+                    let c = &mut self.conns[ci];
+                    c.stream = Some(stream);
+                    c.buf.clear();
+                    c.slots.clear();
+                    c.frame_start = None;
+                    c.last_activity = now;
+                    c.last_slow_read = now;
+                    c.close = false;
+                    c.has_control = false;
+                    c.draining = false;
+                    c.eof = false;
+                    c.slow = slow;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return progress,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                // transient accept-side failures (e.g. ECONNABORTED)
+                // must not take the whole front door down
+                Err(_) => return progress,
+            }
+        }
+    }
+
+    /// The lowest free slot in the connection table.
+    fn free_slot(&self) -> Option<usize> {
+        self.conns.iter().position(|c| c.stream.is_none())
+    }
+
+    /// Release a slot: drop the socket, clear the gather state, keep
+    /// every buffer's capacity (slot reuse never allocates). Callers
+    /// guarantee the connection has no admitted rows still queued — a
+    /// slot holding [`Slot::Reply`] outcomes is only freed by the flush
+    /// that consumed them.
+    fn free_conn(&mut self, ci: usize) {
+        let c = &mut self.conns[ci];
+        c.stream = None;
+        c.buf.clear();
+        c.slots.clear();
+        c.frame_start = None;
+        c.close = false;
+        c.has_control = false;
+        c.draining = false;
+        c.slow = false;
+        c.eof = false;
+    }
+
+    /// Read another chunk (at most `cap` bytes) into connection `ci`'s
+    /// buffer (Interrupted retried). Returns the byte count (0 = EOF /
+    /// peer half-close); `WouldBlock` surfaces as an error for the
+    /// caller's readiness logic.
+    fn read_some(&mut self, ci: usize, cap: usize) -> io::Result<usize> {
+        let n = {
+            let c = &mut self.conns[ci];
+            let stream = c.stream.as_mut().expect("reading an open conn");
+            let old = c.buf.len();
+            c.buf.resize(old + cap, 0);
+            let r = loop {
+                match stream.read(&mut c.buf[old..old + cap]) {
+                    Ok(n) => break Ok(n),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => break Err(e),
+                }
+            };
+            match r {
+                Ok(n) => {
+                    c.buf.truncate(old + n);
+                    n
+                }
+                Err(e) => {
+                    c.buf.truncate(old);
+                    return Err(e);
+                }
+            }
+        };
+        self.stats.bytes_in += n as u64;
+        Ok(n)
+    }
+
+    /// Pump one connection: alternate parse-and-read until the socket
+    /// would block (or the fairness bound trips), then classify a
+    /// half-close. Returns whether any bytes arrived.
+    fn pump_conn(&mut self, ci: usize) -> bool {
+        let mut progress = false;
+        let mut reads = 0;
+        loop {
+            self.parse_conn(ci);
+            {
+                let c = &self.conns[ci];
+                if c.close || c.has_control || c.eof {
+                    break;
+                }
+            }
+            if reads >= READS_PER_SCAN {
+                break;
+            }
+            reads += 1;
+            if self.conns[ci].slow {
+                // injected `conn.slow-reader`: at most one byte per
+                // millisecond, so a full frame already on the wire
+                // crawls into the progress deadline while the rest of
+                // the table keeps serving
+                let now = Instant::now();
+                if now.duration_since(self.conns[ci].last_slow_read) < Duration::from_millis(1) {
+                    break;
+                }
+                match self.read_some(ci, 1) {
+                    Ok(0) => {
+                        self.conns[ci].eof = true;
+                        continue;
+                    }
+                    Ok(_) => {
+                        let c = &mut self.conns[ci];
+                        c.last_slow_read = now;
+                        c.last_activity = now;
+                        if c.frame_start.is_none() {
+                            c.frame_start = Some(now);
+                        }
+                        self.parse_conn(ci);
+                        break;
+                    }
+                    Err(e) if is_not_ready(&e) => break,
+                    Err(_) => {
+                        self.conns[ci].eof = true;
+                        continue;
+                    }
+                }
+            }
+            match self.read_some(ci, 8192) {
+                Ok(0) => {
+                    self.conns[ci].eof = true;
+                    continue;
+                }
+                Ok(_) => {
+                    progress = true;
+                    let now = Instant::now();
+                    let c = &mut self.conns[ci];
+                    c.last_activity = now;
+                    if c.frame_start.is_none() {
+                        c.frame_start = Some(now);
+                    }
+                }
+                Err(e) if is_not_ready(&e) => break,
+                Err(_) => {
+                    self.conns[ci].eof = true;
+                    continue;
+                }
+            }
+        }
+        let clean_close = {
+            let c = &self.conns[ci];
+            c.eof && !c.close && c.buf.is_empty() && c.slots.is_empty()
+        };
+        if clean_close {
+            // peer closed between frames with nothing owed: the slot
+            // frees immediately (no queued rows — those would hold a
+            // Reply outcome)
+            self.free_conn(ci);
+            return progress;
+        }
+        let c = &mut self.conns[ci];
+        if c.eof && !c.close {
+            if c.buf.is_empty() {
+                // complete frames were gathered before the FIN: serve
+                // them, then close
+                c.close = true;
+            } else {
+                // half-closed mid-frame: classify which half was cut
+                let e = match parse_head(&c.buf, &self.limits) {
+                    Ok(Some(_)) => WireError::TruncatedBody,
+                    _ => WireError::TruncatedHead,
+                };
+                c.slots.push(Slot::Error(e));
+                c.close = true;
+                c.buf.clear();
+                c.frame_start = None;
+            }
+        }
+        progress
+    }
+
+    /// Parse every complete buffered frame on connection `ci` into
+    /// outcome slots, consuming the bytes. Stops at a control frame
+    /// (answered after the flush), a closing request, or a framing
+    /// error (which desynchronizes the stream: the remainder is dropped
+    /// and the connection closes after the flush).
+    fn parse_conn(&mut self, ci: usize) {
+        loop {
+            {
+                let c = &self.conns[ci];
+                if c.close || c.has_control || c.draining {
+                    return;
+                }
+            }
+            match parse_head(&self.conns[ci].buf, &self.limits) {
+                Err(e) => {
+                    let c = &mut self.conns[ci];
+                    c.slots.push(Slot::Error(e));
+                    c.close = true;
+                    c.buf.clear();
+                    c.frame_start = None;
+                    return;
+                }
+                Ok(None) => return,
+                Ok(Some(head)) => {
+                    let total = head.head_len + head.content_length;
+                    if self.conns[ci].buf.len() < total {
+                        return;
+                    }
+                    self.stats.requests += 1;
+                    let slot = self.route_request(ci, &head, total);
+                    let c = &mut self.conns[ci];
+                    // consume the frame's bytes from the buffer front
+                    c.buf.copy_within(total.., 0);
+                    let keep = c.buf.len() - total;
+                    c.buf.truncate(keep);
+                    c.frame_start = if c.buf.is_empty() {
+                        None
+                    } else {
+                        Some(Instant::now())
+                    };
+                    let is_control = matches!(slot, Slot::Control(_));
+                    c.close |= !head.keep_alive;
+                    c.slots.push(slot);
+                    if is_control {
+                        c.has_control = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route one complete frame (`conns[ci].buf[..total]`, head already
+    /// parsed). Admitted rows are tagged with the connection slot via
+    /// [`ServeSession::submit_from`], so the flush can route their wave
+    /// replies home.
+    fn route_request(&mut self, ci: usize, head: &Head, total: usize) -> Slot {
+        match (head.route, head.method) {
+            (Route::Infer, Method::Post) => {
+                if self.shutdown {
+                    return Slot::Error(WireError::ShuttingDown);
+                }
+                let body = &self.conns[ci].buf[head.head_len..total];
+                if let Err(e) = decode_request(body, &self.limits, &mut self.scratch) {
+                    return Slot::Error(e);
+                }
+                let text_b = self.scratch.text_b();
+                match self.session.submit_from(
+                    ci as u32,
+                    &self.scratch.task,
+                    &self.scratch.seq_a,
+                    text_b,
+                ) {
+                    Ok(_) => Slot::Reply,
+                    Err(SubmitError::UnknownTask) => Slot::Error(WireError::UnknownTask),
+                    Err(SubmitError::TokenOutOfVocab) => {
+                        Slot::Error(WireError::TokenOutOfVocab)
+                    }
+                    Err(SubmitError::QueueFull) => Slot::Error(WireError::QueueFull),
+                    Err(SubmitError::Throttled(ms)) => {
+                        Slot::Error(WireError::TenantThrottled(ms))
+                    }
+                }
+            }
+            (Route::Infer, _) => Slot::Error(WireError::MethodNotAllowed),
+            (Route::Stats | Route::Health, Method::Get) => Slot::Control(head.route),
+            (Route::Shutdown, Method::Post) => Slot::Control(head.route),
+            (Route::Unknown, _) => Slot::Error(WireError::UnknownRoute),
+            _ => Slot::Error(WireError::MethodNotAllowed),
+        }
+    }
+
+    /// Per-connection deadline check: the progress deadline first
+    /// (mid-frame only — the slowloris guard: trickled bytes reset the
+    /// idle clock but never this one), then the idle deadline. An
+    /// expiry appends a typed error outcome and marks the connection
+    /// closing; the flush this scan writes it. Skipped while a control
+    /// frame or a close is already pending (that flush lands anyway).
+    fn check_deadlines(&mut self, ci: usize) {
+        let now = Instant::now();
+        let c = &mut self.conns[ci];
+        if c.stream.is_none() || c.draining || c.close || c.eof || c.has_control {
+            return;
+        }
+        if let Some(fs) = c.frame_start {
+            if self.limits.progress_timeout_ms > 0
+                && now >= fs + Duration::from_millis(self.limits.progress_timeout_ms)
+            {
+                c.slots.push(Slot::Error(WireError::ProgressTimeout));
+                c.close = true;
+                c.buf.clear();
+                c.frame_start = None;
+                return;
+            }
+        }
+        if self.limits.idle_timeout_ms > 0
+            && now >= c.last_activity + Duration::from_millis(self.limits.idle_timeout_ms)
+        {
+            c.slots.push(Slot::Error(WireError::IdleTimeout));
+            c.close = true;
+            c.buf.clear();
+            c.frame_start = None;
+        }
+    }
+
+    /// Whether a flush cycle is due, and whether it counts as a window
+    /// flush. `None` = keep gathering. Urgency (a control frame, a
+    /// closing/half-closed connection), a full queue, an error-only
+    /// gather (`pending() == 0`) and a windowless policy all flush
+    /// immediately; otherwise the oldest queued row's window decides.
+    fn want_flush(&self) -> Option<bool> {
+        let mut have = self.session.pending() > 0;
+        let mut urgent = false;
+        for c in self.conns.iter() {
+            if c.stream.is_none() || c.draining || c.slots.is_empty() {
+                continue;
+            }
+            have = true;
+            if c.close || c.has_control || c.eof {
+                urgent = true;
+            }
+        }
+        if !have {
+            return None;
+        }
+        if urgent
+            || self.session.queue_full()
+            || self.session.pending() == 0
+            || self.session.policy().window_us == 0
+        {
+            return Some(false);
+        }
+        if self
+            .session
+            .flush_deadline()
+            .is_some_and(|d| d <= Instant::now())
+        {
+            return Some(true);
+        }
+        None
+    }
+
+    /// One flush cycle: run the queued rows as weighted-round-robin
+    /// micro-batches (a wave may mix connections), then for each
+    /// connection with gathered outcomes emit its responses in
+    /// pipeline order — routing wave replies home by their `conn` tag —
+    /// and write them with one `write_all`. Write failures close only
+    /// the failing connection. A `POST /shutdown` answered here flips
+    /// every open connection into graceful drain.
+    fn flush_cycle(&mut self) {
+        if self.session.pending() > 0 {
+            let batches_before = self.session.stats().batches;
+            if run_waves(&mut self.session).is_ok() {
+                self.stats.batches += self.session.stats().batches - batches_before;
+            } else {
+                // post-admission failure (or an injected mid-wave
+                // panic): the wave is lost; every admitted row — on
+                // every connection — answers 500 and those connections
+                // close
+                self.session.abort_direct();
+                for c in self.conns.iter_mut() {
+                    if c.stream.is_none() {
+                        continue;
+                    }
+                    let mut lost = false;
+                    for slot in c.slots.iter_mut() {
                         if matches!(slot, Slot::Reply) {
                             *slot = Slot::Error(WireError::Internal);
+                            lost = true;
                         }
                     }
-                    close = true;
+                    if lost {
+                        c.close = true;
+                    }
                 }
+            }
+        }
+        let mut shutdown_now = false;
+        for ci in 0..self.conns.len() {
+            if self.conns[ci].stream.is_none()
+                || self.conns[ci].draining
+                || self.conns[ci].slots.is_empty()
+            {
+                continue;
             }
             self.resp.clear();
             let mut control: Option<Route> = None;
+            let mut close = self.conns[ci].close;
             {
-                let mut replies = self.session.direct_replies();
-                for slot in self.slots.iter() {
+                let tag = ci as u32;
+                let mut replies = self
+                    .session
+                    .direct_replies()
+                    .filter(move |r: &DirectReply<'_>| r.conn == tag);
+                for slot in self.conns[ci].slots.iter() {
                     match slot {
                         Slot::Reply => {
-                            let r = replies.next().expect("one reply per admitted row");
+                            let r =
+                                replies.next().expect("one routed reply per admitted row");
                             self.resp.push_reply(&r);
                             self.stats.replies += 1;
                         }
@@ -385,9 +738,9 @@ impl<'e> WireServer<'e> {
                             bump_reject(&mut self.stats, *e);
                             close |= e.fatal();
                         }
-                        // control frames always end the wave, so at most
-                        // one exists and it is last — answered below, in
-                        // order
+                        // a control frame stops the gather, so at most
+                        // one exists and it is last — answered below,
+                        // in order
                         Slot::Control(route) => control = Some(*route),
                     }
                 }
@@ -399,8 +752,10 @@ impl<'e> WireServer<'e> {
                         b.extend_from_slice(b"{\"ok\":true}");
                     }),
                     Route::Shutdown => {
-                        self.shutdown = true;
-                        close = true;
+                        // the acking connection is NOT closed here: its
+                        // own pipelined tail (still buffered) gets typed
+                        // 503s from the drain phase like everyone else's
+                        shutdown_now = true;
                         self.resp.push_json(200, "OK", true, |b| {
                             b.extend_from_slice(b"{\"shutting_down\":true}");
                         });
@@ -408,56 +763,100 @@ impl<'e> WireServer<'e> {
                     Route::Infer | Route::Unknown => {}
                 }
             }
-            if let Some(e) = fatal {
-                bump_reject(&mut self.stats, e);
-                self.resp.push_error(e);
-            }
             if !self.resp.bytes().is_empty() {
                 if faultpoint::fire("wire.torn-reply") {
-                    // injected fault: write half the reply, then drop the
-                    // connection — the client must see a truncated body
-                    // and a FIN, and the server must keep serving
+                    // injected fault: write half the reply, then drop
+                    // the connection — the client must see a truncated
+                    // body and a FIN, and the server must keep serving
                     let half = self.resp.bytes().len() / 2;
-                    let _ = stream.write_all(&self.resp.bytes()[..half]);
+                    let stream = self.conns[ci].stream.as_mut().expect("open conn");
+                    let _ = write_all_nb(stream, &self.resp.bytes()[..half]);
                     self.stats.bytes_out += half as u64;
-                    return Ok(());
+                    self.free_conn(ci);
+                    continue;
                 }
-                stream.write_all(self.resp.bytes())?;
+                let ok = {
+                    let stream = self.conns[ci].stream.as_mut().expect("open conn");
+                    write_all_nb(stream, self.resp.bytes()).is_ok()
+                };
+                if !ok {
+                    self.free_conn(ci);
+                    continue;
+                }
                 self.stats.bytes_out += self.resp.bytes().len() as u64;
+                self.conns[ci].last_activity = Instant::now();
             }
-            self.maybe_compact();
-            if self.shutdown {
-                // graceful drain: pipelined frames behind the shutdown
-                // (buffered or already on the wire) get typed 503s, not
-                // a connection reset
-                return self.drain_tail(&mut stream);
-            }
+            self.conns[ci].slots.clear();
+            self.conns[ci].has_control = false;
             if close {
-                return Ok(());
+                self.free_conn(ci);
+            } else {
+                self.conns[ci].close = false;
             }
         }
+        if shutdown_now {
+            // graceful drain across the whole table: every connection's
+            // queued rows were just served above; from here each open
+            // connection's pipelined tail gets typed 503s, then closes
+            self.shutdown = true;
+            for c in self.conns.iter_mut() {
+                if c.stream.is_some() {
+                    c.draining = true;
+                    c.has_control = false;
+                    c.slots.clear();
+                    c.close = false;
+                }
+            }
+        }
+        self.maybe_compact();
     }
 
-    /// After `POST /shutdown` is answered: keep parsing frames the
-    /// client already pipelined (buffered plus a few bounded grace
-    /// reads), answering each with a typed `shutting-down` 503, then
-    /// close. Bounded on both rounds and time, so a client that keeps
-    /// streaming cannot hold the listener hostage.
-    fn drain_tail(&mut self, stream: &mut TcpStream) -> io::Result<()> {
-        for _ in 0..64 {
+    /// One drain scan over the post-shutdown table: keep reading each
+    /// connection's already-pipelined frames (buffered or in flight),
+    /// answer every complete one with a typed `shutting-down` 503, and
+    /// close on EOF, on [`DRAIN_QUIET_MS`] of silence, or at the hard
+    /// deadline.
+    fn drain_conns(&mut self, hard_deadline: Instant) -> bool {
+        let mut progress = false;
+        for ci in 0..self.conns.len() {
+            if self.conns[ci].stream.is_none() || !self.conns[ci].draining {
+                continue;
+            }
+            if Instant::now() >= hard_deadline {
+                self.free_conn(ci);
+                continue;
+            }
+            for _ in 0..READS_PER_SCAN {
+                if self.conns[ci].eof {
+                    break;
+                }
+                match self.read_some(ci, 8192) {
+                    Ok(0) => self.conns[ci].eof = true,
+                    Ok(_) => {
+                        progress = true;
+                        self.conns[ci].last_activity = Instant::now();
+                    }
+                    Err(e) if is_not_ready(&e) => break,
+                    Err(_) => self.conns[ci].eof = true,
+                }
+            }
             self.resp.clear();
             loop {
-                let head = match parse_head(&self.buf, &self.limits) {
-                    Ok(Some(h)) if self.buf.len() >= h.head_len + h.content_length => h,
+                let head = match parse_head(&self.conns[ci].buf, &self.limits) {
+                    Ok(Some(h)) if self.conns[ci].buf.len() >= h.head_len + h.content_length => h,
                     _ => break,
                 };
                 let total = head.head_len + head.content_length;
                 self.stats.requests += 1;
                 // route_request sees `shutdown` and answers every infer
                 // with ShuttingDown; control frames during drain do too
-                let slot = self.route_request(&head, total);
-                self.buf.copy_within(total.., 0);
-                self.buf.truncate(self.buf.len() - total);
+                let slot = self.route_request(ci, &head, total);
+                {
+                    let c = &mut self.conns[ci];
+                    c.buf.copy_within(total.., 0);
+                    let keep = c.buf.len() - total;
+                    c.buf.truncate(keep);
+                }
                 let e = match slot {
                     Slot::Error(e) => e,
                     Slot::Reply | Slot::Control(_) => WireError::ShuttingDown,
@@ -466,16 +865,67 @@ impl<'e> WireServer<'e> {
                 self.resp.push_error(e);
             }
             if !self.resp.bytes().is_empty() {
-                stream.write_all(self.resp.bytes())?;
+                progress = true;
+                let ok = {
+                    let stream = self.conns[ci].stream.as_mut().expect("open conn");
+                    write_all_nb(stream, self.resp.bytes()).is_ok()
+                };
+                if !ok {
+                    self.free_conn(ci);
+                    continue;
+                }
                 self.stats.bytes_out += self.resp.bytes().len() as u64;
+                self.conns[ci].last_activity = Instant::now();
             }
-            let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
-            match self.read_more(stream) {
-                Ok(n) if n > 0 => continue,
-                _ => return Ok(()),
+            let done = {
+                let c = &self.conns[ci];
+                c.eof
+                    || Instant::now().duration_since(c.last_activity)
+                        >= Duration::from_millis(DRAIN_QUIET_MS)
+            };
+            if done {
+                self.free_conn(ci);
             }
         }
-        Ok(())
+        progress
+    }
+
+    /// Sleep until the earliest pending deadline (flush window, any
+    /// connection's progress/idle clock, a draining connection's quiet
+    /// timer), capped at one millisecond — the scan granularity when
+    /// nothing is readable.
+    fn nap(&self) {
+        let now = Instant::now();
+        let mut earliest = self.session.flush_deadline();
+        for c in self.conns.iter().filter(|c| c.stream.is_some()) {
+            let mut cand: Option<Instant> = None;
+            if c.draining {
+                cand = Some(c.last_activity + Duration::from_millis(DRAIN_QUIET_MS));
+            } else {
+                if self.limits.progress_timeout_ms > 0 {
+                    if let Some(fs) = c.frame_start {
+                        cand =
+                            Some(fs + Duration::from_millis(self.limits.progress_timeout_ms));
+                    }
+                }
+                if self.limits.idle_timeout_ms > 0 {
+                    let d =
+                        c.last_activity + Duration::from_millis(self.limits.idle_timeout_ms);
+                    cand = Some(cand.map_or(d, |e| e.min(d)));
+                }
+            }
+            if let Some(d) = cand {
+                earliest = Some(earliest.map_or(d, |e| e.min(d)));
+            }
+        }
+        let cap = Duration::from_millis(1);
+        let dur = match earliest {
+            Some(d) => d.saturating_duration_since(now).min(cap),
+            None => cap,
+        };
+        if !dur.is_zero() {
+            thread::sleep(dur);
+        }
     }
 
     /// Between-wave self-compaction (`--compact-at`): once the shadowed
@@ -502,52 +952,22 @@ impl<'e> WireServer<'e> {
         }
     }
 
-    /// Route one complete frame (`buf[..total]`, head already parsed).
-    fn route_request(&mut self, head: &Head, total: usize) -> Slot {
-        match (head.route, head.method) {
-            (Route::Infer, Method::Post) => {
-                if self.shutdown {
-                    return Slot::Error(WireError::ShuttingDown);
-                }
-                let body = &self.buf[head.head_len..total];
-                if let Err(e) = decode_request(body, &self.limits, &mut self.scratch) {
-                    return Slot::Error(e);
-                }
-                let text_b = self.scratch.text_b();
-                match self.session.submit_borrowed(
-                    &self.scratch.task,
-                    &self.scratch.seq_a,
-                    text_b,
-                ) {
-                    Ok(_) => Slot::Reply,
-                    Err(SubmitError::UnknownTask) => Slot::Error(WireError::UnknownTask),
-                    Err(SubmitError::TokenOutOfVocab) => {
-                        Slot::Error(WireError::TokenOutOfVocab)
-                    }
-                    Err(SubmitError::QueueFull) => Slot::Error(WireError::QueueFull),
-                    Err(SubmitError::Throttled(ms)) => {
-                        Slot::Error(WireError::TenantThrottled(ms))
-                    }
-                }
-            }
-            (Route::Infer, _) => Slot::Error(WireError::MethodNotAllowed),
-            (Route::Stats | Route::Health, Method::Get) => Slot::Control(head.route),
-            (Route::Shutdown, Method::Post) => Slot::Control(head.route),
-            (Route::Unknown, _) => Slot::Error(WireError::UnknownRoute),
-            _ => Slot::Error(WireError::MethodNotAllowed),
-        }
-    }
-
     /// Append the `/stats` snapshot: wire counters (including the
-    /// admit/shed/throttle ledger) + session serve counters +
-    /// tiered-bank counters + the engine's arena/pool/pack counters +
-    /// the active overload policy, flat JSON. The `bank_*` keys are
-    /// always present and inert when no on-disk bank is attached
-    /// (counters and `bank_generation`/`bank_quarantined` zero,
-    /// `bank_log_live_frac` 1.0); the overload counters stay zero on an
-    /// unloaded steady path.
+    /// admit/shed/throttle ledger and the connection-table gauges) +
+    /// session serve counters + tiered-bank counters + the engine's
+    /// arena/pool/pack counters + the active overload policy, flat
+    /// JSON. The `bank_*` keys are always present and inert when no
+    /// on-disk bank is attached (counters and
+    /// `bank_generation`/`bank_quarantined` zero, `bank_log_live_frac`
+    /// 1.0); the overload counters stay zero on an unloaded steady
+    /// path. `conns_open` is the live slot count at snapshot time
+    /// (including the connection asking), `conns_accepted` mirrors
+    /// `connections`, and `cross_conn_waves` counts waves that mixed
+    /// rows from more than one connection.
     fn push_stats(&mut self) {
         let s = self.stats;
+        let conns_open = self.conns.iter().filter(|c| c.stream.is_some()).count();
+        let max_conns = self.conns.len();
         let serve = self.session.stats();
         let policy = self.session.policy();
         let queue_cap = self.session.queue_cap();
@@ -568,7 +988,9 @@ impl<'e> WireServer<'e> {
                 "{{\"connections\":{},\"requests\":{},\"replies\":{},\"batches\":{},\
                  \"rejects_http\":{},\"rejects_parse\":{},\"rejects_submit\":{},\
                  \"rejects_throttle\":{},\"rejects_shed\":{},\"window_flushes\":{},\
-                 \"bytes_in\":{},\"bytes_out\":{},",
+                 \"bytes_in\":{},\"bytes_out\":{},\
+                 \"conns_open\":{conns_open},\"conns_accepted\":{},\
+                 \"conns_rejected\":{},\"max_conns\":{max_conns},",
                 s.connections,
                 s.requests,
                 s.replies,
@@ -580,12 +1002,14 @@ impl<'e> WireServer<'e> {
                 s.rejects_shed,
                 s.window_flushes,
                 s.bytes_in,
-                s.bytes_out
+                s.bytes_out,
+                s.connections,
+                s.conns_rejected
             );
             let _ = write!(
                 b,
                 "\"serve_admitted\":{},\"serve_requests\":{},\"serve_batches\":{},\
-                 \"padded_rows\":{},\
+                 \"padded_rows\":{},\"cross_conn_waves\":{},\
                  \"queue_cap\":{queue_cap},\"window_us\":{},\"tenant_rps\":{},\
                  \"bank_hot_hits\":{},\"bank_cold_faults\":{},\"bank_promotions\":{},\
                  \"bank_resident_bytes\":{bank_resident},\
@@ -600,6 +1024,7 @@ impl<'e> WireServer<'e> {
                 serve.requests,
                 serve.batches,
                 serve.padded_rows,
+                serve.cross_conn_waves,
                 policy.window_us,
                 policy.tenant_rps,
                 bank.hot_hits,
@@ -613,33 +1038,36 @@ impl<'e> WireServer<'e> {
             );
         });
     }
-
-    /// Read another chunk into the connection buffer (Interrupted
-    /// retried). Returns the byte count (0 = EOF / peer half-close).
-    fn read_more(&mut self, stream: &mut TcpStream) -> io::Result<usize> {
-        let old = self.buf.len();
-        self.buf.resize(old + 8192, 0);
-        loop {
-            match stream.read(&mut self.buf[old..]) {
-                Ok(n) => {
-                    self.buf.truncate(old + n);
-                    self.stats.bytes_in += n as u64;
-                    return Ok(n);
-                }
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(e) => {
-                    self.buf.truncate(old);
-                    return Err(e);
-                }
-            }
-        }
-    }
 }
 
-/// Whether a read error is the platform's read-timeout expiry (unix
-/// reports `WouldBlock`, windows `TimedOut`).
-fn is_timeout(e: &io::Error) -> bool {
+/// Whether an I/O error is the platform's not-ready signal on a
+/// nonblocking socket (unix reports `WouldBlock`; windows surfaces
+/// `TimedOut` on some paths).
+fn is_not_ready(e: &io::Error) -> bool {
     matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Write the whole buffer to a nonblocking socket, napping briefly on
+/// `WouldBlock` (responses are small; the send buffer almost always
+/// takes them whole). Bounded: a peer that stops reading for seconds
+/// surfaces a timeout error and the caller drops only that connection.
+fn write_all_nb(stream: &mut TcpStream, mut bytes: &[u8]) -> io::Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !bytes.is_empty() {
+        match stream.write(bytes) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => bytes = &bytes[n..],
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_not_ready(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(io::ErrorKind::TimedOut.into());
+                }
+                thread::sleep(Duration::from_micros(200));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 fn bump_reject(stats: &mut ServerStats, e: WireError) {
@@ -653,8 +1081,8 @@ fn bump_reject(stats: &mut ServerStats, e: WireError) {
 }
 
 /// Run the queued rows, catching a mid-wave panic when fault injection
-/// is compiled in: an injected panic must degrade to typed 500s and a
-/// closed connection, never take the single serve thread down. Without
+/// is compiled in: an injected panic must degrade to typed 500s and
+/// closed connections, never take the single serve thread down. Without
 /// the feature this is a plain call — no unwind machinery on the
 /// production path.
 fn run_waves(session: &mut ServeSession<'_>) -> Result<usize> {
@@ -702,12 +1130,17 @@ pub struct SpawnOpts {
     /// Shadowed-fraction threshold for between-wave self-compaction
     /// (`None` = never self-compact).
     pub compact_at: Option<f64>,
+    /// Connection-slot table size (the accept-limit tier): concurrent
+    /// connections past this shed with a typed `too-many-connections`
+    /// 503.
+    pub max_conns: usize,
 }
 
 impl SpawnOpts {
     /// The test harness default: tiny model, two explicit workers (so
     /// `HADAPT_THREADS=1` CI runs keep the same pool geometry), wave
-    /// size 4, two tenants, legacy-exact overload policy.
+    /// size 4, two tenants, legacy-exact overload policy, an
+    /// eight-connection slot table.
     pub fn tiny(seed: u64) -> SpawnOpts {
         SpawnOpts {
             artifacts_dir: "/definitely/not/a/dir".to_string(),
@@ -721,6 +1154,7 @@ impl SpawnOpts {
             bank_path: None,
             bank_hot: 8,
             compact_at: None,
+            max_conns: 8,
         }
     }
 }
@@ -751,6 +1185,7 @@ pub fn spawn_synthetic_server(
             }
             let mut server = WireServer::new(session, listener, opts.limits);
             server.set_compact_at(opts.compact_at);
+            server.set_max_conns(opts.max_conns);
             server.run()
         })?;
     Ok((addr, handle))
@@ -829,6 +1264,8 @@ mod tests {
         assert!(body.contains("\"replies\":1"), "{body}");
         assert!(body.contains("\"rejects_submit\":1"), "{body}");
         assert!(body.contains("\"batches\":1"), "{body}");
+        assert!(body.contains("\"conns_open\":1"), "{body}");
+        assert!(body.contains("\"conns_rejected\":0"), "{body}");
         // shutdown drains the accept loop and the thread exits
         let (status, _) = roundtrip(&mut c, b"POST /shutdown HTTP/1.1\r\n\r\n");
         assert_eq!(status, 200);
@@ -837,6 +1274,7 @@ mod tests {
         assert_eq!(stats.requests, 5);
         assert_eq!(stats.replies, 1);
         assert_eq!(stats.rejects_submit, 1);
+        assert_eq!(stats.conns_rejected, 0);
     }
 
     #[test]

@@ -146,6 +146,10 @@ pub enum WireError {
     /// The server is draining after `POST /shutdown`; new submits are
     /// refused while in-flight waves complete.
     ShuttingDown,
+    /// The connection-slot table is full: the accept-limit tier shed
+    /// this connection before it could submit anything. Always fatal —
+    /// the server answers once and closes.
+    TooManyConns,
     /// A frame's first byte arrived but the frame did not complete
     /// within [`WireLimits::progress_timeout_ms`] (slowloris guard).
     ProgressTimeout,
@@ -191,6 +195,7 @@ impl WireError {
             WireError::TenantThrottled(_) => "tenant-throttled",
             WireError::QueueFull => "queue-full",
             WireError::ShuttingDown => "shutting-down",
+            WireError::TooManyConns => "too-many-connections",
             WireError::ProgressTimeout => "progress-timeout",
             WireError::Internal => "internal",
         }
@@ -205,7 +210,9 @@ impl WireError {
             WireError::MethodNotAllowed => (405, "Method Not Allowed"),
             WireError::IdleTimeout | WireError::ProgressTimeout => (408, "Request Timeout"),
             WireError::TenantThrottled(_) => (429, "Too Many Requests"),
-            WireError::QueueFull | WireError::ShuttingDown => (503, "Service Unavailable"),
+            WireError::QueueFull | WireError::ShuttingDown | WireError::TooManyConns => {
+                (503, "Service Unavailable")
+            }
             WireError::UnsupportedTransferEncoding => (501, "Not Implemented"),
             WireError::BadVersion => (505, "HTTP Version Not Supported"),
             WireError::Internal => (500, "Internal Server Error"),
@@ -245,6 +252,7 @@ impl WireError {
             WireError::TenantThrottled(_) => "tenant over its admission rate; honor retry-after",
             WireError::QueueFull => "request queue at capacity; retry with backoff",
             WireError::ShuttingDown => "server is draining for shutdown",
+            WireError::TooManyConns => "connection limit reached; retry with backoff",
             WireError::ProgressTimeout => "request frame did not complete within the deadline",
             WireError::Internal => "serve path failed after admission",
         }
@@ -269,6 +277,7 @@ impl WireError {
                 | WireError::ProgressTimeout
                 | WireError::BodyTooLarge
                 | WireError::ShuttingDown
+                | WireError::TooManyConns
                 | WireError::Internal
         )
     }
@@ -278,7 +287,9 @@ impl WireError {
         match self {
             WireError::UnknownTask | WireError::TokenOutOfVocab => RejectKind::Submit,
             WireError::TenantThrottled(_) => RejectKind::Throttle,
-            WireError::QueueFull | WireError::ShuttingDown => RejectKind::Shed,
+            WireError::QueueFull | WireError::ShuttingDown | WireError::TooManyConns => {
+                RejectKind::Shed
+            }
             WireError::Json(_)
             | WireError::NotAnObject
             | WireError::DuplicateField

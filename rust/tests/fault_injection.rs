@@ -1,8 +1,10 @@
 //! Fault-injection drills: arm each named fault point on the serve path
 //! and prove the failure degrades to a **typed** outcome with the server
-//! still serving afterwards — the four serve faults the robustness
+//! still serving afterwards — the serve faults the robustness
 //! contract names (forced queue-full, forced slow tenant, a torn reply
-//! write, a panic mid-wave) plus the four bank storage faults
+//! write, a panic mid-wave, a forced accept-shed, a crawling reader
+//! against the per-connection progress deadline) plus the four bank
+//! storage faults
 //! (`bank.short-write`, `bank.fsync-fail`, `bank.rename-fail`,
 //! `bank.compact-crash`), each of which must leave the previous
 //! on-disk generation loadable and whoever held the bank still serving.
@@ -178,6 +180,89 @@ fn mid_wave_panic_degrades_to_typed_500_and_the_thread_survives() {
     let stats = handle.join().unwrap().unwrap();
     assert_eq!(stats.connections, 2);
     assert_eq!(stats.replies, 1);
+}
+
+#[test]
+fn forced_accept_failure_sheds_typed_503_and_the_next_connection_serves() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let (addr, handle) = spawn_synthetic_server(SpawnOpts::tiny(127)).unwrap();
+
+    // the armed accept fault sheds this connection exactly as a full
+    // slot table would: typed too-many-connections 503, then EOF
+    faultpoint::arm("wire.accept-fail", 1);
+    let mut shed = connect(addr);
+    let (status, body) = {
+        let mut buf = Vec::new();
+        shed.read_to_end(&mut buf).unwrap();
+        let raw = String::from_utf8_lossy(&buf).to_string();
+        let head_end = raw.find("\r\n\r\n").expect("full reject frame") + 4;
+        let status: u16 =
+            raw.split_whitespace().nth(1).unwrap().parse().unwrap();
+        (status, raw[head_end..].to_string())
+    };
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("\"error\":\"too-many-connections\""), "{body}");
+
+    // the shed consumed the armed hit: the very next connection occupies
+    // a slot and serves, and the ledger shows exactly one accept reject
+    let mut c = connect(addr);
+    let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = roundtrip(&mut c, b"GET /stats HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"conns_rejected\":1"), "{body}");
+    assert!(body.contains("\"conns_open\":1"), "{body}");
+
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.conns_rejected, 1);
+    assert_eq!(stats.connections, 1, "a shed connection never occupies a slot");
+    assert_eq!(stats.rejects_shed, 1);
+    assert_eq!(stats.replies, 1);
+}
+
+#[test]
+fn injected_slow_reader_hits_the_progress_deadline_while_others_serve() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    let mut opts = SpawnOpts::tiny(131);
+    opts.limits.progress_timeout_ms = 50;
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+
+    // the first accepted connection is the crawler: the server consumes
+    // its bytes at one per millisecond, so this ~300-byte frame cannot
+    // complete inside the 50ms progress deadline even though the client
+    // sent it whole
+    faultpoint::arm("conn.slow-reader", 1);
+    let mut slow = connect(addr);
+    let big: Vec<String> = (0..60).map(|i| (3 + i % 200).to_string()).collect();
+    let slow_req = post_infer(&format!("{{\"task\":\"sst2\",\"text_a\":[{}]}}", big.join(",")));
+    assert!(slow_req.len() > 200, "the crawling frame must outlast the deadline");
+    slow.write_all(&slow_req).unwrap();
+
+    // while the crawler trickles, a healthy connection round-trips
+    // normally — one stalled peer does not wedge the table
+    let mut c = connect(addr);
+    for _ in 0..3 {
+        let (status, body) = roundtrip(&mut c, &post_infer(SST2));
+        assert_eq!(status, 200, "{body}");
+    }
+
+    // the crawler gets the typed mid-frame deadline and a close
+    let (status, body) = roundtrip(&mut slow, &[]);
+    assert_eq!(status, 408, "{body}");
+    assert!(body.contains("\"error\":\"progress-timeout\""), "{body}");
+    let mut rest = Vec::new();
+    assert_eq!(slow.read_to_end(&mut rest).unwrap(), 0, "{rest:?}");
+
+    let (status, _) = roundtrip(&mut c, SHUTDOWN);
+    assert_eq!(status, 200);
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.rejects_http, 1, "the deadline lands in the http bucket");
+    assert_eq!(stats.replies, 3);
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,416 @@
+//! The multi-connection ingress battery: concurrent wire serving into
+//! the single-owner session, proven four ways.
+//!
+//! 1. **Storm survival, typed throughout.** Eight client threads each
+//!    replay the full adversarial fixture corpus on fresh connections
+//!    while four well-formed clients stream pipelined requests on
+//!    distinct tenants. Every fixture still classifies to its expected
+//!    typed code, every streamed reply carries its own connection's
+//!    task (no cross-connection reply bleed), and the server survives
+//!    with its reject ledger accounting for every fixture × 8.
+//! 2. **Bitwise equality across connection counts.** The same
+//!    mixed-tenant request set served over 1 connection, over 8
+//!    concurrent connections (waves mixing rows from several
+//!    connections), and through the in-process [`ServeSession`] yields
+//!    bitwise-identical logits per request — concurrency adds zero
+//!    numeric drift.
+//! 3. **Mid-burst disconnect degrades clean.** A client that drops
+//!    mid-pipeline neither wedges the in-flight wave (the surviving
+//!    connection's rows still serve) nor leaks its connection slot
+//!    (`conns_open` returns to truth, the slot is reusable).
+//! 4. **The accept-limit tier.** Connections past `max_conns` shed at
+//!    accept with a typed `too-many-connections` 503 and an immediate
+//!    close; freeing a slot makes the table accept again.
+
+#[path = "common/wire_client.rs"]
+mod wire_client;
+
+use std::fs;
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use hadapt::model::ParamStore;
+use hadapt::runtime::{
+    spawn_synthetic_server, synthetic_adapters, Engine, ServePolicy, ServeRequest,
+    ServeSession, SpawnOpts,
+};
+use hadapt::util::json;
+
+fn fixtures() -> Vec<(String, Vec<u8>)> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/wire");
+    let mut v: Vec<_> = fs::read_dir(dir)
+        .expect("fixture corpus missing — run tools/gen_wire_fixtures.py")
+        .map(|e| {
+            let p = e.unwrap().path();
+            let name = p.file_stem().unwrap().to_str().unwrap().to_string();
+            (name, fs::read(&p).unwrap())
+        })
+        .collect();
+    v.sort();
+    assert!(v.len() >= 30, "corpus shrank: only {} fixtures", v.len());
+    v
+}
+
+fn expected_code(name: &str) -> &str {
+    name.split("__").next().unwrap()
+}
+
+/// Extract the logits array from a 200 reply body as raw f32 bits.
+fn logit_bits(body: &str) -> Vec<u32> {
+    let v = json::parse(body).unwrap_or_else(|e| panic!("{e}\n{body}"));
+    v.get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+/// The shared mixed-tenant request set for the equality test: varying
+/// lengths, both tenants, some with `text_b`.
+fn equality_requests() -> Vec<(String, Vec<i32>, Option<Vec<i32>>)> {
+    (0..16)
+        .map(|i| {
+            let task = if i % 2 == 0 { "sst2" } else { "rte" };
+            let a: Vec<i32> = (0..3 + i % 6).map(|j| 5 + (i * 13 + j * 7) as i32 % 400).collect();
+            let b: Option<Vec<i32>> = if i % 3 == 0 {
+                Some((0..2 + i % 3).map(|j| 9 + (i * 11 + j * 3) as i32 % 400).collect())
+            } else {
+                None
+            };
+            (task.to_string(), a, b)
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_corpus_storm_classifies_typed_with_no_reply_bleed() {
+    let mut opts = SpawnOpts::tiny(7);
+    // four streaming tenants, each pinned to its own connection so a
+    // reply carrying the wrong task would prove cross-connection bleed
+    opts.tasks = vec![
+        "sst2".to_string(),
+        "rte".to_string(),
+        "mrpc".to_string(),
+        "cola".to_string(),
+    ];
+    // generous slot table: 12 concurrent clients plus churn headroom —
+    // an accept-shed here would misclassify a fixture, so the final
+    // stats assert none happened
+    opts.max_conns = 32;
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+
+    let corpus = fixtures();
+    let ok_per_pass = corpus.iter().filter(|(n, _)| expected_code(n) == "ok").count() as u64;
+    let err_per_pass = corpus.len() as u64 - ok_per_pass;
+
+    thread::scope(|s| {
+        // 8 adversarial replayers, each the whole corpus on fresh conns
+        for t in 0..8 {
+            let corpus = &corpus;
+            s.spawn(move || {
+                for (name, bytes) in corpus.iter() {
+                    let code = expected_code(name);
+                    let half_close = code.starts_with("truncated");
+                    let resp = wire_client::send_and_read(addr, bytes, 1, half_close)
+                        .pop()
+                        .unwrap();
+                    if code == "ok" {
+                        assert_eq!(resp.status, 200, "thread {t} fixture {name}: {}", resp.body);
+                        assert!(
+                            resp.body.contains("\"logits\":["),
+                            "thread {t} fixture {name}: {}",
+                            resp.body
+                        );
+                    } else {
+                        assert_ne!(resp.status, 200, "thread {t} fixture {name}: {}", resp.body);
+                        assert!(
+                            resp.body.contains(&format!("\"error\":\"{code}\"")),
+                            "thread {t} fixture {name}: status {} body {}",
+                            resp.status,
+                            resp.body
+                        );
+                    }
+                }
+            });
+        }
+        // 4 well-formed streamers, one tenant each, pipelined in bursts
+        for (k, task) in ["sst2", "rte", "mrpc", "cola"].into_iter().enumerate() {
+            s.spawn(move || {
+                let mut c = TcpStream::connect(addr).unwrap();
+                for round in 0..10 {
+                    let mut burst = Vec::new();
+                    for j in 0..3 {
+                        let seq: Vec<i32> =
+                            (0..4).map(|i| 3 + (k * 97 + round * 17 + j * 5 + i) as i32 % 300).collect();
+                        burst.extend_from_slice(&wire_client::infer_req(task, &seq, None));
+                    }
+                    c.write_all(&burst).unwrap();
+                    for (j, resp) in wire_client::read_responses(&mut c, 3).into_iter().enumerate()
+                    {
+                        assert_eq!(resp.status, 200, "streamer {task} r{round}.{j}: {}", resp.body);
+                        // the bleed check: a reply routed off another
+                        // connection would name that connection's tenant
+                        assert!(
+                            resp.body.contains(&format!("\"task\":\"{task}\"")),
+                            "streamer {task} r{round}.{j} got a foreign reply: {}",
+                            resp.body
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // the server survived the storm: counters account for everything
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.write_all(&wire_client::get("/stats")).unwrap();
+    let s = wire_client::read_responses(&mut c, 1).pop().unwrap();
+    let stats = json::parse(&s.body).unwrap();
+    let n = |k: &str| stats.get(k).unwrap().as_usize().unwrap() as u64;
+    assert_eq!(n("replies"), 8 * ok_per_pass + 4 * 10 * 3, "stats: {}", s.body);
+    assert_eq!(
+        n("rejects_http") + n("rejects_parse") + n("rejects_submit"),
+        8 * err_per_pass,
+        "every non-ok fixture × 8 lands in exactly one reject counter: {}",
+        s.body
+    );
+    assert_eq!(n("conns_rejected"), 0, "no accept-shed during the storm: {}", s.body);
+
+    c.write_all(&wire_client::post("/shutdown")).unwrap();
+    let r = wire_client::read_responses(&mut c, 1).pop().unwrap();
+    assert_eq!(r.status, 200);
+    let final_stats = handle.join().unwrap().unwrap();
+    assert_eq!(final_stats.replies, 8 * ok_per_pass + 4 * 10 * 3);
+    assert_eq!(final_stats.conns_rejected, 0);
+}
+
+#[test]
+fn logits_are_bitwise_identical_across_1_conn_8_conns_and_in_process() {
+    let seed = 33;
+    let tasks = vec!["sst2".to_string(), "rte".to_string()];
+    let cases = equality_requests();
+
+    // in-process reference: the same deterministic backbone + synthetic
+    // tenants SpawnOpts::tiny(seed) builds inside the server thread,
+    // each request served as its own wave
+    let engine = Engine::new_with_threads("/definitely/not/a/dir", 2).unwrap();
+    let info = engine.manifest().model("tiny").unwrap().clone();
+    let store = ParamStore::init(&info, seed);
+    let mut session = ServeSession::new(&engine, "tiny", &store, 4).unwrap();
+    for a in synthetic_adapters(&info, &store, &tasks, seed).unwrap() {
+        session.register_task(a).unwrap();
+    }
+    let mut expected: Vec<Vec<u32>> = Vec::new();
+    for (task, a, b) in &cases {
+        session
+            .submit(ServeRequest { task: task.clone(), seq_a: a.clone(), seq_b: b.clone() })
+            .unwrap();
+        let reply = session.run_pending().unwrap().pop().unwrap();
+        expected.push(reply.logits.iter().map(|v| v.to_bits()).collect());
+    }
+
+    // one server for both wire runs: a 20ms flush window + a deep queue
+    // so the 8-connection burst gathers into waves that mix connections
+    let mut opts = SpawnOpts::tiny(seed);
+    opts.policy = ServePolicy { queue_cap: 32, window_us: 20_000, ..ServePolicy::default() };
+    opts.max_conns = 10;
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+
+    // run A: all 16 requests pipelined down one connection
+    let mut one = TcpStream::connect(addr).unwrap();
+    let mut burst = Vec::new();
+    for (task, a, b) in &cases {
+        burst.extend_from_slice(&wire_client::infer_req(task, a, b.as_deref()));
+    }
+    one.write_all(&burst).unwrap();
+    for (i, resp) in wire_client::read_responses(&mut one, cases.len()).iter().enumerate() {
+        assert_eq!(resp.status, 200, "1-conn case {i}: {}", resp.body);
+        assert_eq!(
+            logit_bits(&resp.body),
+            expected[i],
+            "1-conn case {i}: wire logits drifted from in-process"
+        );
+    }
+    drop(one);
+
+    // run B: the same 16 requests dealt round-robin over 8 concurrent
+    // connections (request i on connection i % 8, two per connection,
+    // pipelined) — replies must come back on the right connection, in
+    // that connection's order, still bit-identical
+    let mut conns: Vec<TcpStream> =
+        (0..8).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    for (i, (task, a, b)) in cases.iter().enumerate() {
+        conns[i % 8].write_all(&wire_client::infer_req(task, a, b.as_deref())).unwrap();
+    }
+    for (ci, c) in conns.iter_mut().enumerate() {
+        let resps = wire_client::read_responses(c, 2);
+        for (j, resp) in resps.iter().enumerate() {
+            let i = ci + 8 * j;
+            assert_eq!(resp.status, 200, "8-conn case {i}: {}", resp.body);
+            assert_eq!(
+                logit_bits(&resp.body),
+                expected[i],
+                "8-conn case {i} (conn {ci} reply {j}): logits drifted"
+            );
+        }
+    }
+
+    // the 8-connection run really did mix connections inside waves
+    let mut c = conns.pop().unwrap();
+    c.write_all(&wire_client::get("/stats")).unwrap();
+    let s = wire_client::read_responses(&mut c, 1).pop().unwrap();
+    let stats = json::parse(&s.body).unwrap();
+    let mixed = stats.get("cross_conn_waves").unwrap().as_usize().unwrap();
+    assert!(mixed >= 1, "expected at least one wave mixing connections: {}", s.body);
+
+    c.write_all(&wire_client::post("/shutdown")).unwrap();
+    let r = wire_client::read_responses(&mut c, 1).pop().unwrap();
+    assert_eq!(r.status, 200);
+    let final_stats = handle.join().unwrap().unwrap();
+    assert_eq!(final_stats.replies, 2 * cases.len() as u64);
+    assert_eq!(final_stats.conns_rejected, 0);
+}
+
+#[test]
+fn mid_burst_disconnect_degrades_typed_without_wedging_or_leaking_a_slot() {
+    let mut opts = SpawnOpts::tiny(21);
+    // a long window so both connections' rows are queued together when
+    // the disconnect lands mid-burst
+    opts.policy = ServePolicy { queue_cap: 16, window_us: 50_000, ..ServePolicy::default() };
+    opts.max_conns = 4;
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+
+    // connection B submits first and stays
+    let mut b = TcpStream::connect(addr).unwrap();
+    let mut b_burst = Vec::new();
+    for j in 0..2 {
+        b_burst.extend_from_slice(&wire_client::infer_req("rte", &[40 + j, 41 + j], None));
+    }
+    b.write_all(&b_burst).unwrap();
+
+    // connection A pipelines three rows into the same window, then dies
+    let mut a = TcpStream::connect(addr).unwrap();
+    let mut a_burst = Vec::new();
+    for j in 0..3 {
+        a_burst.extend_from_slice(&wire_client::infer_req("sst2", &[7 + j, 8 + j, 9 + j], None));
+    }
+    a.write_all(&a_burst).unwrap();
+    // give the server a beat to gather A's rows into the open window,
+    // then disconnect mid-burst
+    thread::sleep(Duration::from_millis(10));
+    drop(a);
+
+    // the wave is not wedged: B's rows still serve, correct task, 200s
+    for (j, resp) in wire_client::read_responses(&mut b, 2).iter().enumerate() {
+        assert_eq!(resp.status, 200, "survivor reply {j}: {}", resp.body);
+        assert!(resp.body.contains("\"task\":\"rte\""), "survivor reply {j}: {}", resp.body);
+    }
+
+    // the dead connection's slot is released (no leak): conns_open
+    // settles to B + this stats connection
+    let mut c = TcpStream::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        c.write_all(&wire_client::get("/stats")).unwrap();
+        let s = wire_client::read_responses(&mut c, 1).pop().unwrap();
+        let stats = json::parse(&s.body).unwrap();
+        let open = stats.get("conns_open").unwrap().as_usize().unwrap();
+        if open == 2 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "conns_open stuck at {open} — the dead connection's slot leaked: {}",
+            s.body
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    // and the slot is reusable: a fresh connection serves normally
+    let mut d = TcpStream::connect(addr).unwrap();
+    d.write_all(&wire_client::infer_req("sst2", &[3, 4, 5], None)).unwrap();
+    let resp = wire_client::read_responses(&mut d, 1).pop().unwrap();
+    assert_eq!(resp.status, 200, "slot reuse after disconnect: {}", resp.body);
+
+    c.write_all(&wire_client::post("/shutdown")).unwrap();
+    let r = wire_client::read_responses(&mut c, 1).pop().unwrap();
+    assert_eq!(r.status, 200);
+    let final_stats = handle.join().unwrap().unwrap();
+    // A, B, the stats connection and the reuse connection all accepted;
+    // nothing shed — the disconnect consumed no extra slots
+    assert_eq!(final_stats.connections, 4);
+    assert_eq!(final_stats.conns_rejected, 0);
+    // B's two rows and the reuse row always serve; A's three may or may
+    // not land in the send buffer before the peer vanishes
+    assert!(final_stats.replies >= 3, "survivor replies lost: {final_stats:?}");
+}
+
+#[test]
+fn accept_limit_sheds_typed_503_and_a_freed_slot_accepts_again() {
+    let mut opts = SpawnOpts::tiny(27);
+    opts.max_conns = 2;
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+
+    // fill the two-slot table with live connections
+    let mut a = TcpStream::connect(addr).unwrap();
+    a.write_all(&wire_client::infer_req("sst2", &[5, 6], None)).unwrap();
+    assert_eq!(wire_client::read_responses(&mut a, 1).pop().unwrap().status, 200);
+    let mut b = TcpStream::connect(addr).unwrap();
+    b.write_all(&wire_client::infer_req("rte", &[7, 8], None)).unwrap();
+    assert_eq!(wire_client::read_responses(&mut b, 1).pop().unwrap().status, 200);
+
+    // the third connection sheds at accept: typed 503, then EOF
+    let mut c = TcpStream::connect(addr).unwrap();
+    let resp = wire_client::read_responses(&mut c, 1).pop().unwrap();
+    assert_eq!(resp.status, 503, "accept-limit reply: {}", resp.body);
+    assert!(
+        resp.body.contains("\"error\":\"too-many-connections\""),
+        "accept-limit reply: {}",
+        resp.body
+    );
+    let mut rest = Vec::new();
+    assert_eq!(c.read_to_end(&mut rest).unwrap(), 0, "shed connection must close");
+
+    // free a slot and the table accepts again (retry until the server's
+    // scan notices the close)
+    drop(a);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut d = loop {
+        let mut d = TcpStream::connect(addr).unwrap();
+        d.write_all(&wire_client::infer_req("sst2", &[9, 10], None)).unwrap();
+        let resp = wire_client::read_responses(&mut d, 1).pop().unwrap();
+        if resp.status == 200 {
+            break d;
+        }
+        assert!(
+            resp.body.contains("\"error\":\"too-many-connections\""),
+            "unexpected rejection while waiting for the freed slot: {}",
+            resp.body
+        );
+        assert!(Instant::now() < deadline, "freed slot never became acceptable");
+        thread::sleep(Duration::from_millis(5));
+    };
+
+    // the ledger saw at least the one deliberate shed
+    d.write_all(&wire_client::get("/stats")).unwrap();
+    let s = wire_client::read_responses(&mut d, 1).pop().unwrap();
+    let stats = json::parse(&s.body).unwrap();
+    assert!(
+        stats.get("conns_rejected").unwrap().as_usize().unwrap() >= 1,
+        "stats: {}",
+        s.body
+    );
+    assert_eq!(stats.get("max_conns").unwrap().as_usize().unwrap(), 2, "stats: {}", s.body);
+
+    d.write_all(&wire_client::post("/shutdown")).unwrap();
+    let r = wire_client::read_responses(&mut d, 1).pop().unwrap();
+    assert_eq!(r.status, 200);
+    drop(b);
+    let final_stats = handle.join().unwrap().unwrap();
+    assert!(final_stats.conns_rejected >= 1);
+    assert_eq!(final_stats.replies, 3);
+}

@@ -15,6 +15,10 @@
 //! 5. **Slowloris guard**: a client trickling bytes resets the idle
 //!    clock forever but still hits the per-frame progress deadline and
 //!    gets a typed `progress-timeout` 408.
+//! 6. **Cross-connection drain**: `POST /shutdown` arriving on one
+//!    connection serves every other connection's already-queued rows as
+//!    200s, answers every connection's pipelined tail with typed
+//!    `shutting-down` 503s, and slams nobody.
 //!
 //! Every test ends with the server provably still serving (or cleanly
 //! down), because "degrades, never falls over" is the contract.
@@ -292,4 +296,62 @@ fn slowloris_trickle_hits_progress_deadline_not_idle() {
     assert_eq!(stats.connections, 2);
     assert_eq!(stats.rejects_http, 1, "the progress timeout lands in the http bucket");
     assert_eq!(stats.replies, 1);
+}
+
+#[test]
+fn shutdown_from_one_connection_drains_the_others_without_slamming_them() {
+    // a long flush window so the bystander's rows are still queued when
+    // the other connection's shutdown is processed: the drain must serve
+    // them as 200s first, not shed them
+    let mut opts = SpawnOpts::tiny(47);
+    opts.policy = ServePolicy { queue_cap: 16, window_us: 50_000, ..ServePolicy::default() };
+    let (addr, handle) = spawn_synthetic_server(opts).unwrap();
+
+    // connection B queues two rows into the open window…
+    let mut b = Client::connect(addr);
+    let mut b_bytes = Vec::new();
+    b_bytes.extend_from_slice(&post_infer(RTE));
+    b_bytes.extend_from_slice(&post_infer(RTE));
+    b.send(&b_bytes);
+
+    // …then connection A pipelines one row plus the shutdown; the
+    // control frame forces the flush, so the wave mixes A's and B's rows
+    let mut a = Client::connect(addr);
+    let mut a_bytes = Vec::new();
+    a_bytes.extend_from_slice(&post_infer(SST2));
+    a_bytes.extend_from_slice(SHUTDOWN);
+    a.send(&a_bytes);
+
+    // A: its row, then the ack
+    let (status, _, body) = a.response();
+    assert_eq!(status, 200, "{body}");
+    let (status, _, body) = a.response();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"shutting_down\":true"), "{body}");
+
+    // B was not slammed: its queued rows come back as 200s on B
+    for i in 0..2 {
+        let (status, _, body) = b.response();
+        assert_eq!(status, 200, "bystander reply {i}: {body}");
+        assert!(body.contains("\"task\":\"rte\""), "bystander reply {i}: {body}");
+    }
+
+    // B's post-shutdown tail degrades typed on B's own connection…
+    let mut tail = Vec::new();
+    tail.extend_from_slice(&post_infer(RTE));
+    tail.extend_from_slice(&post_infer(RTE));
+    b.send(&tail);
+    for i in 0..2 {
+        let (status, _, body) = b.response();
+        assert_eq!(status, 503, "bystander tail {i}: {body}");
+        assert!(body.contains("\"error\":\"shutting-down\""), "bystander tail {i}: {body}");
+    }
+    drop(b);
+    drop(a);
+
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.replies, 3, "A's row plus B's two queued rows all served");
+    assert_eq!(stats.rejects_shed, 2, "B's tail is typed, not dropped");
+    assert_eq!(stats.requests, 6);
 }

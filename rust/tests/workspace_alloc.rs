@@ -40,6 +40,15 @@
 //! steady waves are hot hits only (a map probe plus a stamp write) and
 //! must add **zero** allocations to the serve path's zero.
 //!
+//! And since the multi-connection ingress PR, a fifth: four persistent
+//! concurrent connections, one tenant each, submit into shared waves
+//! (every wave mixes all four connections) for three tracked rounds —
+//! the connection-slot table, the shared decode scratch and the shared
+//! response accumulator must keep the whole multiplexed path at zero
+//! allocations, with arena/spawn/repack/bank-fault counters frozen and
+//! the reply/batch/cross-connection-wave counters advancing by exactly
+//! their predicted deltas.
+//!
 //! This file intentionally holds a single test: the counting allocator is
 //! process-global, and a sibling test running on another thread would
 //! pollute the count.
@@ -53,7 +62,7 @@ use hadapt::model::ParamStore;
 use hadapt::runtime::kernels as k;
 use hadapt::runtime::{
     spawn_synthetic_server, synthetic_adapters, synthetic_tenant, BankBuilder, BankGeometry,
-    BankReader, Engine, Pool, ServeSession, SpawnOpts, TaskAdapter, Workspace,
+    BankReader, Engine, Pool, ServePolicy, ServeSession, SpawnOpts, TaskAdapter, Workspace,
 };
 use hadapt::util::Rng;
 
@@ -398,9 +407,12 @@ struct WireCounters {
     replies: u64,
     batches: u64,
     rejects: u64,
+    cross_conn_waves: u64,
+    conns_open: u64,
     arena_misses: u64,
     pool_threads_spawned: u64,
     repacks: u64,
+    bank_cold_faults: u64,
 }
 
 /// Parse the server + engine counters out of a kept `/stats` response.
@@ -414,9 +426,12 @@ fn parse_wire_stats(resp: &[u8]) -> WireCounters {
         replies: n("replies"),
         batches: n("batches"),
         rejects: n("rejects_http") + n("rejects_parse") + n("rejects_submit"),
+        cross_conn_waves: n("cross_conn_waves"),
+        conns_open: n("conns_open"),
         arena_misses: n("arena_misses"),
         pool_threads_spawned: n("pool_threads_spawned"),
         repacks: n("repacks"),
+        bank_cold_faults: n("bank_cold_faults"),
     }
 }
 
@@ -501,6 +516,152 @@ fn steady_wire_loop() {
     assert_eq!(st.replies, 4 * (4 + ok_n));
     assert_eq!(st.batches, 4 * (1 + ok_n));
     assert_eq!(st.rejects_http + st.rejects_parse + st.rejects_submit, 4 * err_n);
+}
+
+/// Alloc-free test-side client for the multi-connection act: four
+/// persistent connections plus one reusable read buffer, every byte
+/// string pre-serialized during setup.
+struct MultiConnProbe {
+    conns: Vec<TcpStream>,
+    buf: Vec<u8>,
+    stats_resp: Vec<u8>,
+}
+
+impl MultiConnProbe {
+    fn new(addr: SocketAddr, n: usize) -> Self {
+        Self {
+            conns: (0..n).map(|_| TcpStream::connect(addr).expect("connect")).collect(),
+            buf: Vec::with_capacity(64 * 1024),
+            stats_resp: Vec::with_capacity(4096),
+        }
+    }
+
+    /// One concurrent wave: write request `i` down connection `i` (all
+    /// four before reading anything, so the rows land in one shared
+    /// queue window), then read exactly one reply per connection and
+    /// assert it names that connection's own tenant — a reply routed
+    /// off another connection would carry a foreign task name.
+    fn wave(&mut self, reqs: &[Vec<u8>], needles: &[Vec<u8>]) {
+        let MultiConnProbe { conns, buf, .. } = self;
+        for (c, req) in conns.iter_mut().zip(reqs) {
+            c.write_all(req).unwrap();
+        }
+        for (c, needle) in conns.iter_mut().zip(needles) {
+            wire_read_frames(c, buf, 1);
+            assert!(buf.starts_with(b"HTTP/1.1 200"), "multi-conn wave reply: {buf:?}");
+            assert!(
+                wire_find(buf, needle).is_some(),
+                "reply bled across connections: wanted {:?} in {:?}",
+                std::str::from_utf8(needle),
+                std::str::from_utf8(buf)
+            );
+        }
+    }
+
+    /// A `/stats` round down connection 0, keeping the raw bytes for
+    /// untracked parsing later.
+    fn stats_round(&mut self, req: &[u8]) {
+        let MultiConnProbe { conns, buf, stats_resp } = self;
+        conns[0].write_all(req).unwrap();
+        wire_read_frames(&mut conns[0], buf, 1);
+        stats_resp.clear();
+        stats_resp.extend_from_slice(buf);
+    }
+}
+
+/// Four concurrent connections serve shared waves for 4 rounds. Round 0
+/// warms everything — the connection-slot table entries, the shared
+/// decode scratch and response accumulator, the session's resident
+/// batch buffers. Rounds 1..3 run under the counting allocator: two
+/// waves per round, each wave one request from each of the four
+/// connections gathered into a single four-row micro-batch
+/// (`queue_cap = 4` forces the flush the moment all four rows are in,
+/// and WRR admission places one row per tenant), must allocate nothing
+/// process-wide. The `/stats` deltas then pin the shape exactly: +24
+/// replies, +6 batches, +6 cross-connection waves, with arena misses,
+/// thread spawns, repacks and bank faults all frozen.
+fn steady_multi_conn_loop() {
+    let mut opts = SpawnOpts::tiny(43);
+    opts.tasks = vec![
+        "sst2".to_string(),
+        "rte".to_string(),
+        "mrpc".to_string(),
+        "cola".to_string(),
+    ];
+    // a 4-row cap flushes the instant the fourth connection's row lands;
+    // the long window is only the fallback if a scan ever sees fewer
+    opts.policy = ServePolicy { queue_cap: 4, window_us: 50_000, ..ServePolicy::default() };
+    let (addr, handle) = spawn_synthetic_server(opts).expect("spawn wire server");
+
+    // ---- setup (untracked): pre-serialize per-connection bytes ----
+    let tasks = ["sst2", "rte", "mrpc", "cola"];
+    let reqs: Vec<Vec<u8>> = tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            wire_post_infer(&format!(
+                "{{\"task\":\"{t}\",\"text_a\":[{},{},{}]}}",
+                3 + i,
+                4 + i,
+                5 + i
+            ))
+        })
+        .collect();
+    let needles: Vec<Vec<u8>> =
+        tasks.iter().map(|t| format!("\"task\":\"{t}\"").into_bytes()).collect();
+    let stats_req = b"GET /stats HTTP/1.1\r\n\r\n".to_vec();
+    let shutdown_req = b"POST /shutdown HTTP/1.1\r\nContent-Length: 0\r\n\r\n".to_vec();
+
+    // ---- round 0 (untracked warm-up, same traffic shape as tracked) ----
+    let mut probe = MultiConnProbe::new(addr, 4);
+    for _ in 0..2 {
+        probe.wave(&reqs, &needles);
+    }
+    probe.stats_round(&stats_req);
+    let s0 = parse_wire_stats(&probe.stats_resp);
+    assert_eq!(s0.conns_open, 4, "all four connections resident after warm-up");
+    assert_eq!(s0.replies, 8);
+    assert_eq!(s0.batches, 2, "each warm wave is one four-row micro-batch");
+    assert_eq!(s0.cross_conn_waves, 2, "each warm wave mixes all four connections");
+    assert_eq!(s0.pool_threads_spawned, 1);
+
+    // ---- rounds 1..3 under the counting allocator ----
+    ALLOCS.store(0, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        for _ in 0..2 {
+            probe.wave(&reqs, &needles);
+        }
+    }
+    probe.stats_round(&stats_req);
+    TRACKING.store(false, Ordering::SeqCst);
+
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "steady four-connection rounds must allocate nothing on either side of the socket"
+    );
+    let s1 = parse_wire_stats(&probe.stats_resp);
+    assert_eq!(s1.replies - s0.replies, 24, "3 rounds x 2 waves x 4 connections");
+    assert_eq!(s1.batches - s0.batches, 6, "every tracked wave is one micro-batch");
+    assert_eq!(
+        s1.cross_conn_waves - s0.cross_conn_waves,
+        6,
+        "every tracked wave mixes connections"
+    );
+    assert_eq!(s1.conns_open, 4, "no slot churn during the steady rounds");
+    assert_eq!(s1.arena_misses, s0.arena_misses, "steady multi-conn waves never miss the arena");
+    assert_eq!(s1.pool_threads_spawned, s0.pool_threads_spawned, "and never spawn a thread");
+    assert_eq!(s1.repacks, s0.repacks, "and never repack frozen weights");
+    assert_eq!(s1.bank_cold_faults, s0.bank_cold_faults, "and never fault the bank tier");
+    assert_eq!(s1.rejects, 0);
+
+    // shutdown from connection 0 drains the other three gracefully
+    probe.stats_round(&shutdown_req);
+    let st = handle.join().unwrap().expect("server exits cleanly on /shutdown");
+    assert_eq!(st.replies, 32);
+    assert_eq!(st.connections, 4);
+    assert_eq!(st.conns_rejected, 0);
 }
 
 /// One serve round over the resident working set: two-row waves through
@@ -647,6 +808,11 @@ fn kernel_steady_state_allocates_nothing_and_spawns_nothing() {
     // zero-alloc / zero-spawn / zero-repack steady state. Runs after the
     // kernel-level loops so they see an unpolluted allocator.
     steady_wire_loop();
+
+    // Concurrency adds nothing to the zero: four persistent connections
+    // multiplexed into shared waves hold the same steady state, with the
+    // wave/reply counters advancing by exactly their predicted deltas.
+    steady_multi_conn_loop();
 
     // And the tiered bank: once the working set is hot-resident, paging
     // machinery (LRU stamps, the cold-tier index) must be invisible to

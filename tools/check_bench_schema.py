@@ -40,6 +40,15 @@ percentiles over admitted replies only, goodput vs offered load, typed
 the policy knobs (queue_cap/window_us/tenant_rps) the run used. Written
 by the bench, overwritten by `tools/wire_load.py --overload --bench-out`.
 
+Since PR 10 it also carries a top-level "ingress_mc" section: the
+multi-connection front door — N concurrent persistent connections
+multiplexed into the single serve thread, per-request (timestamped,
+admitted-only) latency percentiles, accept-tier counters, the number of
+waves that mixed rows from different connections, and the steady
+allocation counter across four-connection concurrent traffic. Written
+by the bench, overwritten by `tools/wire_load.py --connections N
+--bench-out`.
+
 Zero-contracts enforced (all counters, not measurements): steady-state
 arena misses, steady-state pool spawns, the serve and ingress paths'
 steady-state arena misses / pool spawns / repacks, and the bank's
@@ -49,7 +58,12 @@ overload section's unclassified_errors must be 0 (every overloaded
 request gets a typed outcome) and fair_dev at most 0.2. The
 bank_lifecycle section's compact_steady_allocs must be 0 (serving across
 an online generation swap allocates nothing) and its generation at
-least 1 (the compact actually committed a new image).
+least 1 (the compact actually committed a new image). The ingress_mc
+section's mc_steady_allocs must be 0 (the multi-connection steady path
+never touches the heap — pinned in-tree by
+tests/workspace_alloc.rs::steady_multi_conn_loop), its connections at
+least 2 (otherwise it measured nothing multi), and its
+cross_conn_waves at least 1 (waves actually mixed connections).
 
 Every section and key is documented in docs/BENCH_SCHEMA.md.
 
@@ -158,6 +172,17 @@ OVERLOAD_KEYS = {
     "window_us",
     "queue_cap",
     "tenant_rps",
+}
+INGRESS_MC_KEYS = {
+    "connections",
+    "req_per_s",
+    "p50_ms",
+    "p99_ms",
+    "p999_ms",
+    "conns_accepted",
+    "conns_rejected",
+    "cross_conn_waves",
+    "mc_steady_allocs",
 }
 POOL_KEYS = {
     "threads",
@@ -341,6 +366,35 @@ def check_overload(overload):
         fail("overload.goodput_rps cannot exceed offered_rps")
 
 
+def check_ingress_mc(mc):
+    if not isinstance(mc, dict):
+        fail("'ingress_mc' must be an object")
+    if not isinstance(mc.get("provenance"), str) or not mc["provenance"]:
+        fail("ingress_mc.provenance must be a non-empty string label")
+    missing = INGRESS_MC_KEYS - set(mc)
+    if missing:
+        fail(f"ingress_mc missing keys: {sorted(missing)}")
+    for key in INGRESS_MC_KEYS:
+        if not isinstance(mc[key], (int, float)):
+            fail(f"ingress_mc.{key} must be a number")
+        if mc[key] < 0:
+            fail(f"ingress_mc.{key} must be non-negative")
+    # contracts, not measurements: the multi-connection steady path is
+    # allocation-free, and the run must actually have been multi
+    if mc["mc_steady_allocs"] != 0:
+        fail(
+            "ingress_mc.mc_steady_allocs must be 0 (multi-connection "
+            "zero-alloc contract, pinned by steady_multi_conn_loop)"
+        )
+    if mc["connections"] < 2:
+        fail("ingress_mc.connections must be >= 2 (single-conn runs prove nothing)")
+    if mc["cross_conn_waves"] < 1:
+        fail(
+            "ingress_mc.cross_conn_waves must be >= 1 "
+            "(waves never mixed rows from different connections)"
+        )
+
+
 def main(path):
     with open(path) as f:
         data = json.load(f)
@@ -358,6 +412,7 @@ def main(path):
         "bank",
         "bank_lifecycle",
         "overload",
+        "ingress_mc",
     ):
         if key not in data:
             fail(f"missing top-level key '{key}'")
@@ -370,6 +425,7 @@ def main(path):
     check_bank(data["bank"])
     check_bank_lifecycle(data["bank_lifecycle"])
     check_overload(data["overload"])
+    check_ingress_mc(data["ingress_mc"])
     # steady-state misses/spawns are the zero-overhead contracts
     for name, row in data["train_step"].items():
         if row["arena_steady_misses"] != 0:
@@ -380,7 +436,7 @@ def main(path):
         sum(len(data[s]) for s in ("forward", "train_step", "matmul"))
         + len(data["serve"]["rows"])
         + len(data["ingress"]["rows"])
-        + 4  # pool, bank, bank_lifecycle and overload are one row each
+        + 5  # pool, bank, bank_lifecycle, overload and ingress_mc: one row each
     )
     print(
         f"BENCH_kernels.json schema OK ({n_rows} rows, "
